@@ -1,0 +1,120 @@
+//! End-to-end system driver (the repo's headline validation run —
+//! recorded in EXPERIMENTS.md §E2E).
+//!
+//! All three layers compose on a real workload:
+//!   L1/L2 — the AOT-compiled JAX+Pallas kernels (`make artifacts`)
+//!   L3    — the Rust coordinator: per-kernel batching queues, context-
+//!           affine dispatch, replicated fabric workers over PJRT.
+//!
+//! The workload is a Poisson-arrival stream of requests over a Zipf-ish
+//! kernel mix (a few hot kernels, a long tail — the multi-kernel
+//! application scenario the paper's introduction motivates). Every
+//! response is verified against the functional oracle; the report
+//! includes wall-clock latency percentiles, throughput, context-switch
+//! counts and the simulated 300 MHz fabric timeline.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_serving [requests] [pipelines]
+//! ```
+
+use std::time::{Duration, Instant};
+use tmfu_overlay::bench_suite;
+use tmfu_overlay::coordinator::Coordinator;
+use tmfu_overlay::dfg::eval;
+use tmfu_overlay::util::prng::Rng;
+use tmfu_overlay::util::stats::Samples;
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2000);
+    let pipelines: usize = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2);
+    let mean_rate_per_s = 20_000.0; // Poisson arrival rate
+    let max_batch = 32;
+
+    println!("loading artifacts + compiling {pipelines} fabric worker(s)...");
+    let coord = Coordinator::start("artifacts", pipelines, max_batch)?;
+
+    // Zipf-ish kernel popularity: gradient & chebyshev hot, tail cold.
+    let names = bench_suite::all_names();
+    let weights: Vec<f64> = (0..names.len()).map(|i| 1.0 / (i + 1) as f64).collect();
+    let wsum: f64 = weights.iter().sum();
+
+    let mut rng = Rng::new(2016);
+    let started = Instant::now();
+    let mut next_arrival = 0.0f64;
+
+    // Collector thread: receives completions as they happen so the
+    // client-side latency is not skewed by collection order.
+    type Job = (
+        std::sync::mpsc::Receiver<tmfu_overlay::coordinator::Reply>,
+        Vec<i32>,
+        Instant,
+    );
+    let (jobs_tx, jobs_rx) = std::sync::mpsc::channel::<Job>();
+    let collector = std::thread::spawn(move || -> anyhow::Result<(Samples, usize)> {
+        let mut lat = Samples::new();
+        let mut wrong = 0usize;
+        for (rx, want, t0) in jobs_rx {
+            let got = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+            lat.push(t0.elapsed().as_secs_f64() * 1e6);
+            if got != want {
+                wrong += 1;
+            }
+        }
+        Ok((lat, wrong))
+    });
+
+    println!("submitting {requests} Poisson requests at ~{mean_rate_per_s:.0}/s...");
+    for _ in 0..requests {
+        // Poisson arrivals: sleep to the next arrival time.
+        next_arrival += rng.exp(mean_rate_per_s);
+        let target = started + Duration::from_secs_f64(next_arrival);
+        if let Some(wait) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        // Pick a kernel by popularity.
+        let mut pick = rng.f64() * wsum;
+        let mut idx = 0;
+        for (i, w) in weights.iter().enumerate() {
+            if pick < *w {
+                idx = i;
+                break;
+            }
+            pick -= w;
+        }
+        let kernel = names[idx];
+        let g = bench_suite::load(kernel)?;
+        let inputs: Vec<i32> = (0..g.inputs().len())
+            .map(|_| rng.range_i64(-30_000, 30_000) as i32)
+            .collect();
+        let want = eval(&g, &inputs);
+        let t0 = Instant::now();
+        let rx = coord.submit(kernel, inputs)?;
+        jobs_tx
+            .send((rx, want, t0))
+            .map_err(|_| anyhow::anyhow!("collector exited early"))?;
+    }
+    drop(jobs_tx);
+    let (mut lat, wrong) = collector.join().expect("collector panicked")?;
+    let wall = started.elapsed();
+
+    println!("\n=== e2e serving report ===");
+    println!(
+        "requests: {requests} in {:.3}s -> {:.0} req/s sustained",
+        wall.as_secs_f64(),
+        requests as f64 / wall.as_secs_f64()
+    );
+    println!("end-to-end latency: {}", lat.summary("us"));
+    println!("{}", coord.metrics_report());
+    coord.shutdown()?;
+    anyhow::ensure!(wrong == 0, "{wrong} responses failed verification");
+    println!("verification: all {requests} responses match the functional oracle");
+    Ok(())
+}

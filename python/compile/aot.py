@@ -1,0 +1,96 @@
+"""AOT lowering: JAX (+Pallas) -> HLO **text** -> artifacts/.
+
+For every kernel in ``benchmarks/dfg/`` this emits
+``artifacts/<name>.hlo.txt`` plus a ``manifest.json`` describing the
+entry points (shapes, II, FU counts) for the Rust runtime.
+
+HLO *text* is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md and gen_hlo.py there).
+
+Python runs ONCE, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import dfg
+from compile.model import build_model
+
+# Batch buckets the artifacts are compiled for; the Rust runtime picks
+# the smallest bucket that fits a request batch (bucketed batching, like
+# serving systems use) and zero-pads to it.
+BATCHES = (8, 64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_kernel(k: dfg.Kernel, batch: int) -> str:
+    model = build_model(k, use_pallas=True)
+    spec = jax.ShapeDtypeStruct((batch, k.n_inputs), jax.numpy.int32)
+    return to_hlo_text(jax.jit(model).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dfg-dir", default=dfg.default_dfg_dir())
+    ap.add_argument(
+        "--batches",
+        default=",".join(str(b) for b in BATCHES),
+        help="comma-separated batch buckets",
+    )
+    ap.add_argument("--only", help="comma-separated kernel subset")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    kernels = dfg.load_all(args.dfg_dir)
+    if args.only:
+        keep = set(args.only.split(","))
+        kernels = {n: k for n, k in kernels.items() if n in keep}
+
+    batches = sorted(int(b) for b in str(args.batches).split(","))
+    manifest = {"batch": batches[-1], "batches": batches, "kernels": {}}
+    for name, k in sorted(kernels.items()):
+        artifacts = {}
+        for b in batches:
+            hlo = lower_kernel(k, b)
+            fname = f"{name}.b{b}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(hlo)
+            digest = hashlib.sha256(hlo.encode()).hexdigest()[:16]
+            artifacts[str(b)] = {"file": fname, "sha256_16": digest}
+            print(f"lowered {name} (batch {b}): {len(hlo)} chars of HLO")
+        manifest["kernels"][name] = {
+            "artifacts": artifacts,
+            "n_inputs": k.n_inputs,
+            "n_outputs": k.n_outputs,
+            "n_ops": k.n_ops,
+            "n_fus": k.n_fus,
+            "ii": k.ii,
+            "latency": k.latency,
+            "context_bytes": 5 * sum(s.n_execs for s in k.stages),
+        }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} "
+          f"({len(manifest['kernels'])} kernels, batches {batches})")
+
+
+if __name__ == "__main__":
+    main()

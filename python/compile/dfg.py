@@ -1,0 +1,166 @@
+"""DFG + schedule interchange loader (the contract with the Rust side).
+
+Reads ``benchmarks/dfg/<kernel>.json`` as emitted by ``tmfu export-dfg``
+(see ``rust/src/sched/mod.rs::program_to_json``) and re-derives the
+per-stage execution structure independently, so the Python compile path
+cross-checks the Rust scheduler rather than trusting it blindly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+OPS = ("add", "sub", "mul", "and", "or", "xor")
+
+
+@dataclass(frozen=True)
+class Node:
+    kind: str  # input | const | op | output
+    name: str | None = None
+    value: int | None = None
+    op: str | None = None
+    args: tuple[int, ...] = ()
+
+
+@dataclass
+class Stage:
+    stage: int
+    ops: list[int]
+    arrivals: list[int]
+    bypasses: list[int]
+    consts: list[tuple[int, int]]  # (node id, value)
+    n_loads: int
+    n_execs: int
+
+    @property
+    def emissions(self) -> list[int]:
+        """Values this stage's FU sends downstream, in issue order."""
+        return list(self.ops) + list(self.bypasses)
+
+
+@dataclass
+class Kernel:
+    name: str
+    nodes: list[Node]
+    stages: list[Stage]
+    ii: int
+    latency: int
+    output_order: list[tuple[str, int]]
+    inputs: list[int] = field(default_factory=list)
+    outputs: list[int] = field(default_factory=list)
+
+    @property
+    def n_inputs(self) -> int:
+        return len(self.inputs)
+
+    @property
+    def n_outputs(self) -> int:
+        return len(self.outputs)
+
+    @property
+    def n_fus(self) -> int:
+        return len(self.stages)
+
+    @property
+    def n_ops(self) -> int:
+        return sum(1 for n in self.nodes if n.kind == "op")
+
+
+def _parse_node(j: dict) -> Node:
+    kind = j["kind"]
+    if kind == "input":
+        return Node(kind, name=j["name"])
+    if kind == "const":
+        v = int(j["value"])
+        assert -(2**31) <= v < 2**31, f"const {v} out of i32 range"
+        return Node(kind, value=v)
+    if kind == "op":
+        op = j["op"]
+        assert op in OPS, f"unknown op {op}"
+        args = tuple(int(a) for a in j["args"])
+        assert len(args) == 2
+        return Node(kind, op=op, args=args)
+    if kind == "output":
+        return Node(kind, name=j["name"], args=tuple(int(a) for a in j["args"]))
+    raise ValueError(f"unknown node kind {kind!r}")
+
+
+def load(path: str) -> Kernel:
+    """Load and validate one kernel JSON."""
+    with open(path) as f:
+        doc = json.load(f)
+    dfg = doc["dfg"]
+    sched = doc["schedule"]
+    nodes = [_parse_node(n) for n in dfg["nodes"]]
+    # Topological validation.
+    for i, n in enumerate(nodes):
+        for a in n.args:
+            assert a < i, f"node {i}: forward reference {a}"
+    stages = [
+        Stage(
+            stage=int(s["stage"]),
+            ops=[int(v) for v in s["ops"]],
+            arrivals=[int(v) for v in s["arrivals"]],
+            bypasses=[int(v) for v in s["bypasses"]],
+            consts=[(int(c["node"]), int(c["value"])) for c in s["consts"]],
+            n_loads=int(s["n_loads"]),
+            n_execs=int(s["n_execs"]),
+        )
+        for s in sched["stages"]
+    ]
+    k = Kernel(
+        name=dfg["name"],
+        nodes=nodes,
+        stages=stages,
+        ii=int(sched["ii"]),
+        latency=int(sched["latency"]),
+        output_order=[(o["name"], int(o["pos"])) for o in sched["output_order"]],
+        inputs=[i for i, n in enumerate(nodes) if n.kind == "input"],
+        outputs=[i for i, n in enumerate(nodes) if n.kind == "output"],
+    )
+    _cross_check(k)
+    return k
+
+
+def _cross_check(k: Kernel) -> None:
+    """Independently re-derive the stage structure and compare with the
+    Rust scheduler's output (defence against interchange drift)."""
+    # ASAP levels.
+    level = [0] * len(k.nodes)
+    for i, n in enumerate(k.nodes):
+        if n.kind == "op":
+            level[i] = 1 + max(level[a] for a in n.args)
+        elif n.kind == "output":
+            level[i] = level[n.args[0]]
+    depth = max((level[i] for i, n in enumerate(k.nodes) if n.kind == "op"), default=0)
+    assert depth == k.n_fus, f"{k.name}: depth {depth} != stages {k.n_fus}"
+    for s in k.stages:
+        for op in s.ops:
+            assert level[op] == s.stage, f"{k.name}: op {op} mis-staged"
+        # Consistency of load/exec counts.
+        assert s.n_loads == len(s.arrivals)
+        assert s.n_execs == len(s.ops) + len(s.bypasses)
+    # Emissions of stage s == arrivals of stage s+1.
+    for a, b in zip(k.stages, k.stages[1:]):
+        assert a.emissions == b.arrivals, f"{k.name}: dataflow mismatch {a.stage}->{b.stage}"
+    # II from the paper's model: max stage cost + 2 flush cycles.
+    ii = max(s.n_loads + s.n_execs for s in k.stages) + 2
+    assert ii == k.ii, f"{k.name}: II {ii} != {k.ii}"
+
+
+def load_all(dfg_dir: str) -> dict[str, Kernel]:
+    out = {}
+    for fn in sorted(os.listdir(dfg_dir)):
+        if fn.endswith(".json"):
+            k = load(os.path.join(dfg_dir, fn))
+            out[k.name] = k
+    return out
+
+
+def default_dfg_dir() -> str:
+    """benchmarks/dfg relative to the repo root (python/ is cwd for the
+    compile path; tests may run from elsewhere)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(here, "..", "..", "benchmarks", "dfg"))

@@ -1,0 +1,136 @@
+"""L1 — the time-multiplexed FU stage as a Pallas kernel.
+
+One pipeline stage of the overlay executes a short, *statically known*
+instruction list against its register file for every data packet. That
+is exactly the shape Pallas wants: the instruction list is unrolled at
+trace time (the overlay analogue of "the context is already loaded"),
+the RF block lives in VMEM, and the batch dimension plays the role of
+pipeline replication (DESIGN.md §Hardware-Adaptation).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both the Python
+tests and the Rust runtime execute (see /opt/xla-example/README.md).
+
+VMEM accounting (per grid step, int32):
+    RF tile      : TILE_B x n_arrivals x 4  bytes
+    emit tile    : TILE_B x n_execs    x 4  bytes
+With TILE_B = 256 and the paper's RF bound (32), a stage tile is at
+most 256*32*4 = 32 KiB in + 32 KiB out — comfortably inside a TPU
+core's ~16 MiB VMEM, leaving headroom to fuse all stages of an 8-FU
+pipeline in one kernel if desired (see DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.dfg import Kernel, Stage
+
+# Batch tile: one grid step processes this many packets.
+TILE_B = 256
+
+_OPS = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "xor": lambda a, b: a ^ b,
+}
+
+
+def _stage_instrs(k: Kernel, s: Stage):
+    """Materialize the stage's instruction list as static Python data:
+    (kind, op, src1, src2) where src is ('rf', col) or ('const', val).
+
+    Mirrors rust/src/sched/program.rs: RF slots are arrival order;
+    constants live at slots 31 downward but here resolve to literals.
+    """
+    slot_of = {v: i for i, v in enumerate(s.arrivals)}
+    const_of = dict(s.consts)
+
+    def src(node_id: int):
+        if node_id in slot_of:
+            return ("rf", slot_of[node_id])
+        if node_id in const_of:
+            return ("const", const_of[node_id])
+        raise KeyError(f"{k.name} stage {s.stage}: operand {node_id} not in RF")
+
+    instrs = []
+    for op_id in s.ops:
+        n = k.nodes[op_id]
+        instrs.append(("arith", n.op, src(n.args[0]), src(n.args[1])))
+    for v in s.bypasses:
+        instrs.append(("bypass", None, src(v), None))
+    return instrs
+
+
+def stage_kernel(k: Kernel, s: Stage):
+    """Build the Pallas kernel for one FU stage.
+
+    Returns a function int32[B, n_arrivals] -> int32[B, n_execs]
+    (B must be a multiple of TILE_B or smaller than it).
+    """
+    instrs = _stage_instrs(k, s)
+    n_arr = len(s.arrivals)
+    n_out = len(instrs)
+
+    def body(rf_ref, out_ref):
+        rf = rf_ref[...]  # (tile, n_arr) in VMEM
+
+        def read(src):
+            kind, v = src
+            if kind == "rf":
+                return rf[:, v]
+            return jnp.full(rf.shape[0], jnp.int32(v))
+
+        # The context's instruction list, fully unrolled: one DSP issue
+        # per instruction, exactly as the hardware time-multiplexes.
+        for j, (kind, op, s1, s2) in enumerate(instrs):
+            if kind == "arith":
+                res = _OPS[op](read(s1), read(s2)).astype(jnp.int32)
+            else:  # bypass: route the RF word through unchanged
+                res = read(s1)
+            out_ref[:, j] = res
+
+    def call(x):
+        b = x.shape[0]
+        assert x.shape == (b, n_arr), (x.shape, n_arr)
+        tile = min(TILE_B, b)
+        assert b % tile == 0, f"batch {b} not a multiple of tile {tile}"
+        return pl.pallas_call(
+            body,
+            grid=(b // tile,),
+            in_specs=[pl.BlockSpec((tile, n_arr), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((tile, n_out), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.int32),
+            interpret=True,
+        )(x)
+
+    return call
+
+
+def stage_reference(k: Kernel, s: Stage):
+    """Plain-jnp reference for one stage (used by the kernel-vs-ref
+    tests; the full-model oracle is kernels.ref.eval_dfg)."""
+    instrs = _stage_instrs(k, s)
+
+    def call(x):
+        cols = []
+        for kind, op, s1, s2 in instrs:
+            def read(src):
+                knd, v = src
+                if knd == "rf":
+                    return x[:, v]
+                return jnp.full(x.shape[0], jnp.int32(v))
+
+            if kind == "arith":
+                cols.append(_OPS[op](read(s1), read(s2)).astype(jnp.int32))
+            else:
+                cols.append(read(s1))
+        return jnp.stack(cols, axis=1)
+
+    return call
+

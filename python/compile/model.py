@@ -1,0 +1,42 @@
+"""L2 — the scheduled overlay program as a JAX computation.
+
+The model composes the per-stage Pallas FU kernels linearly, exactly
+mirroring the hardware dataflow the Rust scheduler produced: the
+emissions of stage *s* are the arrivals of stage *s+1* (the Rust side
+asserts this with ``Program::check_dataflow``; the Python loader
+re-checks it on load). The final stage's emissions are projected onto
+the named outputs via the schedule's ``output_order``.
+
+This function is what ``aot.py`` lowers to HLO text; the Rust runtime
+executes it on the request path through PJRT.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.dfg import Kernel
+from compile.kernels import fu
+
+
+def build_model(k: Kernel, use_pallas: bool = True):
+    """Return f(int32[B, n_inputs]) -> int32[B, n_outputs]."""
+    builders = fu.stage_kernel if use_pallas else fu.stage_reference
+    stage_fns = [builders(k, s) for s in k.stages]
+    out_pos = [pos for (_, pos) in k.output_order]
+
+    def model(x: jnp.ndarray) -> jnp.ndarray:
+        assert x.ndim == 2 and x.shape[1] == k.n_inputs, (x.shape, k.n_inputs)
+        data = x.astype(jnp.int32)
+        # The linear FU cascade. Stage 1's arrivals are the primary
+        # inputs in declaration order (= FIFO order).
+        for fn in stage_fns:
+            data = fn(data)
+        # Output FIFO projection.
+        return data[:, jnp.array(out_pos, dtype=jnp.int32)]
+
+    return model
+
+
+def batched_shape(k: Kernel, batch: int):
+    return (batch, k.n_inputs)

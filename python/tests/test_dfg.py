@@ -1,0 +1,89 @@
+"""Loader + interchange validation for benchmarks/dfg/*.json."""
+
+import numpy as np
+import pytest
+
+from compile import dfg
+
+KERNELS = dfg.load_all(dfg.default_dfg_dir())
+
+PAPER_II = {
+    "chebyshev": 6,
+    "sgfilter": 10,
+    "mibench": 11,
+    "qspline": 18,
+    "poly5": 14,
+    "poly6": 17,
+    "poly7": 17,
+    "poly8": 15,
+    "gradient": 11,
+}
+
+PAPER_OPS = {
+    "chebyshev": 7,
+    "sgfilter": 18,
+    "mibench": 13,
+    "qspline": 26,
+    "poly5": 27,
+    "poly6": 44,
+    "poly7": 39,
+    "poly8": 32,
+    "gradient": 11,
+}
+
+
+def test_all_nine_kernels_present():
+    assert set(KERNELS) == set(PAPER_II)
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_II))
+def test_ii_matches_paper(name):
+    assert KERNELS[name].ii == PAPER_II[name]
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_OPS))
+def test_op_counts_match_paper(name):
+    assert KERNELS[name].n_ops == PAPER_OPS[name]
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_II))
+def test_stage_dataflow_chains(name):
+    k = KERNELS[name]
+    for a, b in zip(k.stages, k.stages[1:]):
+        assert a.emissions == b.arrivals
+
+
+def test_gradient_structure():
+    g = KERNELS["gradient"]
+    assert g.n_inputs == 5
+    assert g.n_outputs == 1
+    assert g.n_fus == 4
+    assert [len(s.ops) for s in g.stages] == [4, 4, 2, 1]
+    assert [s.n_loads for s in g.stages] == [5, 4, 4, 2]
+
+
+def test_rf_capacity_respected():
+    for k in KERNELS.values():
+        for s in k.stages:
+            assert s.n_loads + len(s.consts) <= 32, (k.name, s.stage)
+            assert s.n_execs <= 32, (k.name, s.stage)
+
+
+def test_loader_rejects_corrupt_json(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(
+        '{"dfg": {"name": "x", "nodes": [{"kind": "input", "name": "a"},'
+        '{"kind": "op", "op": "add", "args": [0, 5]},'
+        '{"kind": "output", "name": "o", "args": [1]}]},'
+        '"schedule": {"n_stages": 1, "ii": 3, "latency": 4, "stages": [],'
+        '"output_order": []}}'
+    )
+    with pytest.raises(AssertionError):
+        dfg.load(str(bad))
+
+
+def test_numpy_int32_wrapping_assumption():
+    # The whole stack relies on int32 wrap-around; verify the platform.
+    a = np.int32(2**31 - 1)
+    with np.errstate(over="ignore"):
+        assert np.int32(a + np.int32(1)) == np.int32(-(2**31))

@@ -1,0 +1,25 @@
+//! Regenerates the paper's §V context-switch comparison: 40-bit context
+//! streams vs SCFU-SCN external configuration vs partial
+//! reconfiguration, plus the config-port load microbenchmark.
+
+use tmfu_overlay::arch::config_port;
+use tmfu_overlay::bench_suite;
+use tmfu_overlay::report::ctx_switch;
+use tmfu_overlay::sched::Program;
+use tmfu_overlay::util::bench::{section, Bench};
+
+fn main() -> anyhow::Result<()> {
+    section("context switching");
+    print!("{}", ctx_switch::render()?);
+
+    section("config-port microbenchmark (simulated daisy-chain load)");
+    let g = bench_suite::load("poly6")?;
+    let img = Program::schedule(&g)?.context_image()?;
+    let words = img.words().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let b = Bench::from_env();
+    let m = b.run_with_items("load_context(poly6)", words.len() as f64, || {
+        config_port::load_context(&words, img.n_fus()).unwrap()
+    });
+    println!("{}", m.report_line());
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates the paper's Fig. 5: number of FUs required per
+//! benchmark (proposed linear overlay vs SCFU-SCN [13]).
+
+use tmfu_overlay::report::fig5;
+use tmfu_overlay::util::bench::section;
+
+fn main() -> anyhow::Result<()> {
+    section("Fig. 5: FUs required");
+    print!("{}", fig5::render()?);
+    Ok(())
+}

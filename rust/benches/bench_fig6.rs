@@ -1,0 +1,11 @@
+//! Regenerates the paper's Fig. 6: area comparison across the three
+//! implementations.
+
+use tmfu_overlay::report::fig6;
+use tmfu_overlay::util::bench::section;
+
+fn main() -> anyhow::Result<()> {
+    section("Fig. 6: area comparison");
+    print!("{}", fig6::render()?);
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Regenerates the paper's §III.A synthesis results from the
+//! structural resource/fmax models (FU, 8-FU pipeline, Virtex-7).
+
+use tmfu_overlay::report::resources_report;
+use tmfu_overlay::util::bench::section;
+
+fn main() {
+    section("§III.A resources & frequency");
+    print!("{}", resources_report::render());
+}

@@ -1,0 +1,94 @@
+//! Performance microbenchmarks for the hot paths (EXPERIMENTS.md §Perf):
+//!
+//!   L3.a  cycle-accurate simulator inner loop (cycles/s)
+//!   L3.b  scheduler + context generation (compilations/s)
+//!   L3.c  coordinator dispatch (requests/s, with and without PJRT)
+//!   L2/L1 PJRT batch execution (packets/s per kernel artifact)
+//!
+//! Run `TMFU_BENCH_FAST=1 cargo bench` for a quick pass.
+
+use tmfu_overlay::arch::Pipeline;
+use tmfu_overlay::bench_suite;
+use tmfu_overlay::coordinator::Coordinator;
+use tmfu_overlay::runtime::Engine;
+use tmfu_overlay::sched::Program;
+use tmfu_overlay::util::bench::{black_box, section, Bench};
+use tmfu_overlay::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::from_env();
+
+    section("L3.a cycle-accurate simulator");
+    for name in ["gradient", "chebyshev", "poly6"] {
+        let g = bench_suite::load(name)?;
+        let p = Program::schedule(&g)?;
+        let n_in = g.inputs().len();
+        let packets: Vec<Vec<i32>> = (0..64).map(|k| vec![k as i32; n_in]).collect();
+        // cycles per packet ~= II in steady state; count items = cycles.
+        let mut probe = Pipeline::new(&p, 4096)?;
+        let before = probe.cycle;
+        probe.run(&packets, 1_000_000)?;
+        let cycles_per_run = (probe.cycle - before) as f64;
+        let m = b.run_with_items(&format!("sim::run({name}, 64 packets)"), cycles_per_run, || {
+            let mut pl = Pipeline::new(&p, 4096).unwrap();
+            pl.run(black_box(&packets), 1_000_000).unwrap()
+        });
+        println!("{}   (items = simulated cycles)", m.report_line());
+    }
+
+    section("L3.b compiler path");
+    let (_, src) = bench_suite::KERNEL_SOURCES
+        .iter()
+        .find(|(n, _)| *n == "poly7")
+        .unwrap();
+    let m = b.run("frontend+schedule+context(poly7)", || {
+        let g = tmfu_overlay::frontend::compile(src).unwrap();
+        let p = Program::schedule(&g).unwrap();
+        p.context_image().unwrap()
+    });
+    println!("{}", m.report_line());
+
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("\nartifacts not built; skipping PJRT + coordinator benches");
+        return Ok(());
+    }
+
+    section("L2/L1 PJRT batch execution (per artifact)");
+    let engine = Engine::load(&artifacts)?;
+    let mut rng = Rng::new(3);
+    for name in ["gradient", "chebyshev", "poly6", "qspline"] {
+        let entry = engine.entry(name)?;
+        let batch: Vec<Vec<i32>> = (0..engine.batch)
+            .map(|_| (0..entry.n_inputs).map(|_| rng.next_i32()).collect())
+            .collect();
+        let m = b.run_with_items(
+            &format!("pjrt::execute({name}, batch {})", engine.batch),
+            engine.batch as f64,
+            || engine.execute(name, black_box(&batch)).unwrap(),
+        );
+        println!("{}   (items = packets)", m.report_line());
+    }
+    // Single-packet latency: exercises the smallest batch bucket.
+    let one = vec![vec![1i32; engine.entry("gradient")?.n_inputs]];
+    let m = b.run_with_items("pjrt::execute(gradient, single packet)", 1.0, || {
+        engine.execute("gradient", black_box(&one)).unwrap()
+    });
+    println!("{}   (items = packets)", m.report_line());
+
+    section("L3.c coordinator end-to-end (2 workers, mixed kernels)");
+    let coord = Coordinator::start(artifacts.to_str().unwrap(), 2, 32)?;
+    let names = bench_suite::all_names();
+    let m = b.run_with_items("coordinator::call x32 (round-robin kernels)", 32.0, || {
+        for i in 0..32usize {
+            let kernel = names[i % names.len()];
+            let g = bench_suite::load(kernel).unwrap();
+            let inputs = vec![1i32; g.inputs().len()];
+            coord.call(kernel, inputs).unwrap();
+        }
+    });
+    println!("{}   (items = requests, serial round-trip)", m.report_line());
+    println!("\n{}", coord.metrics_report());
+    coord.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Regenerates the paper's §II related-work comparison: FU cost,
+//! instruction storage and context-switch mechanism for CARBON, SCGRA,
+//! reMORPH, TILT and this paper's FU.
+
+use tmfu_overlay::baseline::related::{self, RELATED};
+use tmfu_overlay::resources::ZYNQ_Z7020;
+use tmfu_overlay::util::bench::section;
+use tmfu_overlay::util::table::Table;
+
+fn main() {
+    section("§II related-work FU comparison");
+    let mut t = Table::new("Per-FU cost (as reported by the respective papers)").header(&[
+        "overlay", "platform", "LUT/ALM", "FF", "DSP", "BRAM kb", "fmax MHz", "IM depth",
+        "instr bits", "IM bits", "switch path",
+    ]);
+    for r in &RELATED {
+        t.row(&[
+            r.name.to_string(),
+            r.platform.to_string(),
+            r.luts_or_alms.to_string(),
+            r.ffs.to_string(),
+            r.dsps.to_string(),
+            format!("{:.1}", r.bram_kbits),
+            format!("{:.0}", r.fmax_mhz),
+            r.im_depth.to_string(),
+            r.instr_bits.to_string(),
+            r.instr_storage_bits().to_string(),
+            format!("{:?}", r.switch),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\ninstruction-storage blow-up vs this paper's 32x32b IM:");
+    for r in &RELATED[..4] {
+        println!(
+            "  {:<14} {:>6.0}x",
+            r.name,
+            related::instruction_storage_ratio(r)
+        );
+    }
+    println!(
+        "\nTILT system datapoint: 8-core TILT {} eALMs / {} Minputs/s vs OpenCL HLS {} eALMs / {} Minputs/s",
+        related::TILT_8CORE_EALMS,
+        related::TILT_8CORE_MINPUTS,
+        related::TILT_HLS_EALMS,
+        related::TILT_HLS_MINPUTS
+    );
+    println!(
+        "this paper's FU on the common scale: {} e-Slices @ 325 MHz",
+        RELATED[4].eslices(&ZYNQ_Z7020)
+    );
+}

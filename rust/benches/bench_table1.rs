@@ -1,0 +1,39 @@
+//! Regenerates the paper's Table I: the first 32 cycles of the
+//! 'gradient' schedule (II = 11), plus the static-vs-dynamic
+//! cross-check and the schedule-generation microbenchmark.
+
+use tmfu_overlay::bench_suite;
+use tmfu_overlay::sched::{Program, ScheduleTable, Timing};
+use tmfu_overlay::sim;
+use tmfu_overlay::util::bench::{section, Bench};
+
+fn main() -> anyhow::Result<()> {
+    section("Table I: first 32 cycles of the 'gradient' schedule");
+    let g = bench_suite::load("gradient")?;
+    let p = Program::schedule(&g)?;
+    let t = ScheduleTable::generate(&p, 32);
+    print!("{}", t.render());
+    let timing = Timing::of(&p);
+    println!(
+        "II = {} (paper: 11); arrivals at cycles {:?} (paper: 1/8/14/20); backpressure {:?} (paper: 6-11)",
+        timing.ii,
+        timing.t_arrive,
+        t.backpressure_window(&p)
+    );
+
+    section("dynamic cross-check (cycle-accurate simulator)");
+    for name in bench_suite::all_names() {
+        sim::validate_against_schedule(&Program::schedule(&bench_suite::load(name)?)?, 6)?;
+        println!("{name:<10} dynamic II/latency match the static schedule");
+    }
+
+    section("microbenchmarks");
+    let b = Bench::from_env();
+    let m = b.run("schedule(gradient)", || Program::schedule(&g).unwrap());
+    println!("{}", m.report_line());
+    let m = b.run("table1_generate(32 cycles)", || {
+        ScheduleTable::generate(&p, 32)
+    });
+    println!("{}", m.report_line());
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Daisy-chained configuration port (paper §III.A).
+//!
+//! Context words are clocked one per cycle from the external context
+//! memory into the head FU's instruction port; each FU latches words
+//! whose 8-bit tag matches its index and forwards the rest. The model
+//! verifies the timing claim (one word per cycle ⇒ `words × 1/f`
+//! switch time) and reconstructs the per-FU contents for the pipeline.
+
+use crate::isa::{ContextImage, ContextWord, FuContext, FuInstr};
+use anyhow::{bail, Result};
+
+/// Result of clocking a context stream into a pipeline of `n_fus` FUs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadedContext {
+    pub fus: Vec<FuContext>,
+    /// Cycles taken (== number of context words).
+    pub cycles: u64,
+}
+
+/// Simulate the word-per-cycle daisy-chain load.
+pub fn load_context(words: &[ContextWord], n_fus: usize) -> Result<LoadedContext> {
+    let mut fus = vec![FuContext::default(); n_fus];
+    let mut cycles = 0u64;
+    for w in words {
+        cycles += 1; // one word enters the chain per cycle
+        let fu = w.fu_index() as usize;
+        if fu >= n_fus {
+            bail!("context word tagged for FU {fu} but pipeline has {n_fus}");
+        }
+        match w.kind() {
+            0 => {
+                let ins = FuInstr::decode(w.payload)?;
+                if fus[fu].instrs.len() >= 32 {
+                    bail!("FU {fu}: IM overflow during context load");
+                }
+                fus[fu].instrs.push(ins);
+            }
+            1 => {
+                if fus[fu].consts.len() >= 32 {
+                    bail!("FU {fu}: RF const overflow during context load");
+                }
+                fus[fu].consts.push(w.payload as i32);
+            }
+            k => bail!("context word with unknown kind {k}"),
+        }
+    }
+    Ok(LoadedContext { fus, cycles })
+}
+
+/// Clock a full image through the chain and check it reproduces the
+/// source image (the round-trip the hardware performs).
+pub fn load_image(img: &ContextImage) -> Result<LoadedContext> {
+    let words = img.words().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let loaded = load_context(&words, img.n_fus())?;
+    for (i, (got, want)) in loaded.fus.iter().zip(&img.fus).enumerate() {
+        if got != want {
+            bail!("FU {i}: loaded context differs from image");
+        }
+    }
+    Ok(loaded)
+}
+
+/// Context-switch time in microseconds at `freq_mhz`.
+pub fn switch_time_us(loaded: &LoadedContext, freq_mhz: f64) -> f64 {
+    loaded.cycles as f64 / freq_mhz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::sched::Program;
+
+    #[test]
+    fn round_trips_every_benchmark_context() {
+        for name in bench_suite::all_names() {
+            let g = bench_suite::load(name).unwrap();
+            let p = Program::schedule(&g).unwrap();
+            let img = p.context_image().unwrap();
+            let loaded = load_image(&img).unwrap();
+            assert_eq!(loaded.cycles as usize, img.load_cycles().unwrap(), "{name}");
+        }
+    }
+
+    #[test]
+    fn chebyshev_switch_time() {
+        // 13 instruction words + 3 const words = 16 cycles at 300 MHz.
+        let g = bench_suite::load("chebyshev").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let img = p.context_image().unwrap();
+        let loaded = load_image(&img).unwrap();
+        let t = switch_time_us(&loaded, 300.0);
+        assert!(t < 0.1, "t = {t}");
+    }
+
+    #[test]
+    fn rejects_misrouted_words() {
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let img = p.context_image().unwrap();
+        let words = img.words().unwrap();
+        // Pipeline claims fewer FUs than the stream addresses.
+        assert!(load_context(&words, 2).is_err());
+    }
+}

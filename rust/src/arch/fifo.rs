@@ -1,0 +1,132 @@
+//! Distributed-RAM FIFO model (the streaming data interface of Fig. 2).
+//!
+//! The hardware uses LUTRAM-based FIFOs at the pipeline input and
+//! output. The model tracks occupancy against a configurable capacity
+//! (the paper's DRAM FIFOs are shallow) and high-water statistics used
+//! by the resource estimator and the coordinator's backpressure tests.
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    q: VecDeque<i32>,
+    capacity: usize,
+    /// Statistics.
+    pub pushed: u64,
+    pub popped: u64,
+    pub high_water: usize,
+    pub overflow_attempts: u64,
+}
+
+impl Fifo {
+    pub fn new(capacity: usize) -> Fifo {
+        assert!(capacity > 0);
+        Fifo {
+            q: VecDeque::with_capacity(capacity),
+            capacity,
+            pushed: 0,
+            popped: 0,
+            high_water: 0,
+            overflow_attempts: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Push one word; returns false (and counts the attempt) when full.
+    pub fn push(&mut self, v: i32) -> bool {
+        if self.is_full() {
+            self.overflow_attempts += 1;
+            return false;
+        }
+        self.q.push_back(v);
+        self.pushed += 1;
+        self.high_water = self.high_water.max(self.q.len());
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<i32> {
+        let v = self.q.pop_front();
+        if v.is_some() {
+            self.popped += 1;
+        }
+        v
+    }
+
+    pub fn peek(&self) -> Option<i32> {
+        self.q.front().copied()
+    }
+
+    /// Drain everything (used by tests and the output collector).
+    pub fn drain_all(&mut self) -> Vec<i32> {
+        let out: Vec<i32> = self.q.drain(..).collect();
+        self.popped += out.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut f = Fifo::new(4);
+        for v in [1, 2, 3] {
+            assert!(f.push(v));
+        }
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.peek(), Some(3));
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1));
+        assert!(f.push(2));
+        assert!(!f.push(3));
+        assert_eq!(f.overflow_attempts, 1);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn high_water_tracks_max() {
+        let mut f = Fifo::new(8);
+        for v in 0..5 {
+            f.push(v);
+        }
+        f.pop();
+        f.pop();
+        f.push(9);
+        assert_eq!(f.high_water, 5);
+    }
+
+    #[test]
+    fn stats_count() {
+        let mut f = Fifo::new(8);
+        f.push(1);
+        f.push(2);
+        f.pop();
+        assert_eq!(f.pushed, 2);
+        assert_eq!(f.popped, 1);
+        assert_eq!(f.drain_all(), vec![2]);
+        assert_eq!(f.popped, 2);
+    }
+}

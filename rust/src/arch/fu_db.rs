@@ -1,0 +1,227 @@
+//! Extension (paper §VI future work): a **double-buffered register
+//! file** FU that overlaps data entry with execution to reduce the II.
+//!
+//! The paper closes with "we are currently examining architectural
+//! modifications to reduce the II". The single-bank FU serializes
+//! `loads + execs + flush` per iteration because new stream data would
+//! overwrite registers still being read. With a ping-pong RF (two
+//! 32-entry banks, i.e. 16 RAM32M primitives instead of 8) the FU
+//! loads packet *k+1* into the idle bank while executing packet *k*
+//! from the active bank, and the DSP drain overlaps the next load
+//! burst. The steady-state initiation interval becomes
+//!
+//! ```text
+//!     II_db = max_s( max(loads_s, execs_s) )      (no +2 flush)
+//! ```
+//!
+//! Costs: +32 LUTs of LUTRAM per FU, one bank-select FF and a second
+//! write port mux (see `resources::estimate::fu_double_buffered`).
+//! `bench_ablation` quantifies the II / throughput / area trade-off.
+
+use super::dsp48e1::{Dsp48e1, DspIssue};
+use crate::isa::FuInstr;
+use anyhow::{bail, Result};
+
+/// Double-buffered FU (cycle-accurate).
+#[derive(Debug, Clone)]
+pub struct FuDb {
+    im: Vec<FuInstr>,
+    /// Two RF banks; `write_bank` receives stream data, the other is
+    /// read by execution.
+    banks: [[i32; 32]; 2],
+    write_bank: usize,
+    n_loads: usize,
+    /// Words loaded into the write bank so far.
+    dc: usize,
+    /// Exec in progress: Some(pc) when issuing from the read bank.
+    pc: Option<usize>,
+    /// A full bank is waiting to be executed (loaded while exec busy).
+    pending_swap: bool,
+    dsp: Dsp48e1,
+    pub iterations: u64,
+    pub cycles: u64,
+}
+
+impl FuDb {
+    pub fn new(im: Vec<FuInstr>, consts: &[i32], n_loads: usize) -> Result<FuDb> {
+        if im.is_empty() || im.len() > 32 {
+            bail!("IM size {} invalid", im.len());
+        }
+        if consts.len() + n_loads > 32 {
+            bail!("RF overflow");
+        }
+        let mut bank = [0i32; 32];
+        for (i, &c) in consts.iter().enumerate() {
+            bank[31 - i] = c;
+        }
+        Ok(FuDb {
+            im,
+            banks: [bank, bank], // consts preloaded into both banks
+            write_bank: 0,
+            n_loads,
+            dc: 0,
+            pc: None,
+            pending_swap: false,
+            dsp: Dsp48e1::new(),
+            iterations: 0,
+            cycles: 0,
+        })
+    }
+
+    /// Can the FU absorb a stream word this cycle? (`pending_swap`
+    /// implies the write bank is full; it drains on the next swap.)
+    pub fn can_accept(&self) -> bool {
+        self.dc < self.n_loads
+    }
+
+    pub fn step(&mut self, input: Option<i32>) -> Result<Option<i32>> {
+        self.cycles += 1;
+        // Start executing a banked packet if idle.
+        if self.pc.is_none() && self.pending_swap {
+            // Swap banks: the filled write bank becomes the read bank.
+            self.write_bank ^= 1;
+            self.pending_swap = false;
+            self.dc = 0;
+            self.pc = Some(0);
+        }
+        // Data entry into the write bank.
+        if let Some(v) = input {
+            if self.dc >= self.n_loads {
+                bail!("protocol violation: write bank full (pending swap)");
+            }
+            self.banks[self.write_bank][self.dc] = v;
+            self.dc += 1;
+            if self.dc == self.n_loads {
+                self.pending_swap = true;
+            }
+        }
+        // Immediately claim the bank if we became ready this cycle and
+        // the executor is idle (trigger is combinational on dc).
+        if self.pc.is_none() && self.pending_swap {
+            self.write_bank ^= 1;
+            self.pending_swap = false;
+            self.dc = 0;
+            self.pc = Some(0);
+        }
+        // Issue from the read bank.
+        let issue = if let Some(pc) = self.pc {
+            let read_bank = self.write_bank ^ 1;
+            let ins = &self.im[pc];
+            let (rs1, rs2) = ins.reads();
+            let c = self.banks[read_bank][rs1 as usize];
+            let ab = self.banks[read_bank][rs2.unwrap_or(rs1) as usize];
+            let next = pc + 1;
+            if next == self.im.len() {
+                self.pc = None;
+                self.iterations += 1;
+            } else {
+                self.pc = Some(next);
+            }
+            Some(DspIssue {
+                config: ins.dsp_config(),
+                c,
+                ab,
+            })
+        } else {
+            None
+        };
+        self.dsp.step(issue).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+/// Analytical II for the double-buffered pipeline.
+pub fn ii_double_buffered(p: &crate::sched::Program) -> u32 {
+    p.stages
+        .iter()
+        .map(|s| s.n_loads().max(s.n_execs()) as u32)
+        .max()
+        .unwrap_or(1)
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::dfg::OpKind;
+    use crate::sched::Program;
+
+    fn simple_fu() -> FuDb {
+        FuDb::new(
+            vec![
+                FuInstr::Arith {
+                    op: OpKind::Add,
+                    rs1: 0,
+                    rs2: 1,
+                },
+                FuInstr::Bypass { rs: 0 },
+            ],
+            &[],
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn overlaps_loading_with_execution() {
+        let mut fu = simple_fu();
+        let mut out = Vec::new();
+        // Stream two packets back-to-back (period 2 = max(loads, execs)).
+        let feed = [Some(1), Some(2), Some(10), Some(20), None, None, None, None];
+        for w in feed {
+            out.push(fu.step(w).unwrap());
+        }
+        let vals: Vec<i32> = out.into_iter().flatten().collect();
+        // Packet 1: ADD=3, BYP=1; packet 2: ADD=30, BYP=10.
+        assert_eq!(vals, vec![3, 1, 30, 10]);
+        assert_eq!(fu.iterations, 2);
+    }
+
+    #[test]
+    fn rejects_overrun_of_full_bank() {
+        let mut fu = FuDb::new(vec![FuInstr::Bypass { rs: 0 }; 4], &[], 1).unwrap();
+        // Packet A loads (starts exec), packet B loads into idle bank
+        // and must wait (4 execs > 1 load) — a third word overruns.
+        fu.step(Some(1)).unwrap();
+        fu.step(Some(2)).unwrap(); // fills bank B, pending swap
+        assert!(fu.step(Some(3)).is_err());
+    }
+
+    #[test]
+    fn analytical_ii_drops_vs_single_bank() {
+        for (name, paper_ii) in [("gradient", 11u32), ("chebyshev", 6), ("qspline", 18)] {
+            let g = bench_suite::load(name).unwrap();
+            let p = Program::schedule(&g).unwrap();
+            let ii_db = ii_double_buffered(&p);
+            assert!(
+                ii_db < paper_ii,
+                "{name}: db II {ii_db} !< single-bank {paper_ii}"
+            );
+        }
+        // gradient: max over stages of max(loads, execs) = max(5,4)=5.
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        assert_eq!(ii_double_buffered(&p), 5);
+    }
+
+    #[test]
+    fn consts_present_in_both_banks() {
+        let mut fu = FuDb::new(
+            vec![FuInstr::Arith {
+                op: OpKind::Mul,
+                rs1: 0,
+                rs2: 31,
+            }],
+            &[7],
+            1,
+        )
+        .unwrap();
+        let mut vals = Vec::new();
+        for w in [Some(3), Some(5), None, None, None] {
+            if let Some(v) = fu.step(w).unwrap() {
+                vals.push(v);
+            }
+        }
+        assert_eq!(vals, vec![21, 35]); // both packets used the const
+    }
+}

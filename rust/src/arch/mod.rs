@@ -1,0 +1,21 @@
+//! Cycle-accurate overlay microarchitecture: the DSP48E1 ALU, the
+//! time-multiplexed FU (Fig. 3), DRAM FIFOs, the linear processing
+//! pipeline (Fig. 2), the daisy-chained configuration port and the
+//! replicated multi-pipeline overlay (Fig. 4).
+
+pub mod config_port;
+pub mod dsp48e1;
+pub mod fifo;
+pub mod fu;
+pub mod fu_db;
+pub mod overlay;
+pub mod pipeline;
+pub mod pipeline_db;
+
+pub use dsp48e1::{Dsp48e1, DspIssue};
+pub use fifo::Fifo;
+pub use fu::{Fu, FuState};
+pub use fu_db::FuDb;
+pub use overlay::{DmaModel, Overlay};
+pub use pipeline::Pipeline;
+pub use pipeline_db::PipelineDb;

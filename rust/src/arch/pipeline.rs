@@ -1,0 +1,316 @@
+//! The programmable processing pipeline (paper Fig. 2): input FIFO →
+//! cascade of time-multiplexed FUs → output FIFO, cycle-accurate.
+//!
+//! Data words issued by FU *s* at cycle *t* are written into FU *s+1*'s
+//! RF at *t + 2* (the DSP's internal pipeline); the model achieves this
+//! by stepping FUs in order and handing each FU's delayed DSP output to
+//! its successor within the same simulated cycle.
+
+use super::fifo::Fifo;
+use super::fu::Fu;
+use crate::sched::{Program, Timing};
+use anyhow::Result;
+
+/// A configured pipeline executing one kernel context.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub kernel: String,
+    fus: Vec<Fu>,
+    pub input_fifo: Fifo,
+    pub output_fifo: Fifo,
+    /// Words consumed per input packet (primary inputs).
+    n_inputs: usize,
+    /// Words produced per packet by the final FU.
+    n_out_words: usize,
+    /// Output name -> position within the final FU's emissions.
+    output_order: Vec<(String, usize)>,
+    /// Initiation interval: packet admission is paced at this period.
+    /// When stage 1 is the bottleneck (gradient) the FU's own
+    /// back-pressure produces the same pacing; for kernels whose
+    /// bottleneck sits mid-pipeline the admission gate keeps upstream
+    /// stages from overrunning the bottleneck FU (the paper's control
+    /// generator achieves this with the valid handshake).
+    ii: u64,
+    /// First cycle at which the next packet may begin streaming.
+    next_packet_cycle: u64,
+    /// Words of the current packet already streamed in (wraps at
+    /// `n_inputs`; avoids a modulo in the per-cycle hot path).
+    packet_word: usize,
+    pub cycle: u64,
+    /// Cycles in which the input FIFO wanted to send but was blocked.
+    pub backpressure_cycles: u64,
+}
+
+impl Pipeline {
+    /// Instantiate from a scheduled program (context load is modelled
+    /// separately by [`super::config_port`]).
+    pub fn new(p: &Program, fifo_capacity: usize) -> Result<Pipeline> {
+        let mut fus = Vec::with_capacity(p.stages.len());
+        for st in p.stages.iter() {
+            let consts: Vec<i32> = st.consts.iter().map(|&(_, v)| v).collect();
+            fus.push(Fu::new(st.instrs.clone(), &consts, st.n_loads())?);
+        }
+        let n_inputs = p.stages[0].n_loads();
+        let last = p.stages.last().unwrap();
+        Ok(Pipeline {
+            kernel: p.kernel.clone(),
+            fus,
+            input_fifo: Fifo::new(fifo_capacity),
+            output_fifo: Fifo::new(fifo_capacity),
+            n_inputs,
+            n_out_words: last.n_execs(),
+            output_order: p.output_order.clone(),
+            ii: Timing::of(p).ii as u64,
+            next_packet_cycle: 1,
+            packet_word: 0,
+            cycle: 0,
+            backpressure_cycles: 0,
+        })
+    }
+
+    pub fn n_fus(&self) -> usize {
+        self.fus.len()
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Queue one input packet (values in input declaration order).
+    /// Returns false if the FIFO lacks space for the whole packet.
+    pub fn enqueue_packet(&mut self, packet: &[i32]) -> bool {
+        assert_eq!(packet.len(), self.n_inputs, "packet arity");
+        if self.input_fifo.capacity() - self.input_fifo.len() < packet.len() {
+            return false;
+        }
+        for &v in packet {
+            let ok = self.input_fifo.push(v);
+            debug_assert!(ok);
+        }
+        true
+    }
+
+    /// Advance one clock cycle.
+    pub fn step(&mut self) -> Result<()> {
+        self.cycle += 1;
+        // Input FIFO -> FU0 (respecting back-pressure + II pacing).
+        let at_boundary = self.packet_word == 0;
+        let gate_open = !at_boundary || self.cycle >= self.next_packet_cycle;
+        let mut carry: Option<i32> = if !self.fus[0].backpressure() && gate_open {
+            let w = self.input_fifo.pop();
+            if w.is_some() {
+                if at_boundary {
+                    self.next_packet_cycle = self.cycle + self.ii;
+                }
+                self.packet_word += 1;
+                if self.packet_word == self.n_inputs {
+                    self.packet_word = 0;
+                }
+            }
+            w
+        } else {
+            if !self.input_fifo.is_empty() {
+                self.backpressure_cycles += 1;
+            }
+            None
+        };
+        // FU cascade: each FU's (delayed) output feeds the next.
+        for fu in &mut self.fus {
+            carry = fu.step(carry)?;
+        }
+        // Final FU -> output FIFO.
+        if let Some(v) = carry {
+            if !self.output_fifo.push(v) {
+                anyhow::bail!("output FIFO overflow at cycle {}", self.cycle);
+            }
+        }
+        Ok(())
+    }
+
+    /// Complete output packets currently in the output FIFO.
+    pub fn packets_ready(&self) -> usize {
+        self.output_fifo.len() / self.n_out_words
+    }
+
+    /// Pop one complete output packet and project the named outputs in
+    /// declaration order.
+    pub fn dequeue_packet(&mut self) -> Option<Vec<i32>> {
+        if self.packets_ready() == 0 {
+            return None;
+        }
+        let words: Vec<i32> = (0..self.n_out_words)
+            .map(|_| self.output_fifo.pop().unwrap())
+            .collect();
+        Some(
+            self.output_order
+                .iter()
+                .map(|&(_, pos)| words[pos])
+                .collect(),
+        )
+    }
+
+    /// Run until `n_packets` results are collected (or a cycle budget
+    /// expires). Inputs are taken from `packets` as FIFO space allows.
+    pub fn run(&mut self, packets: &[Vec<i32>], max_cycles: u64) -> Result<Vec<Vec<i32>>> {
+        let mut next = 0usize;
+        let mut out = Vec::with_capacity(packets.len());
+        let start = self.cycle;
+        while out.len() < packets.len() {
+            if self.cycle - start > max_cycles {
+                anyhow::bail!(
+                    "cycle budget exceeded: {} packets out of {} after {max_cycles} cycles",
+                    out.len(),
+                    packets.len()
+                );
+            }
+            if next < packets.len() && self.enqueue_packet(&packets[next]) {
+                next += 1;
+            }
+            self.step()?;
+            while let Some(p) = self.dequeue_packet() {
+                out.push(p);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Measured steady-state initiation interval: feed `n` packets and
+    /// report the cycle distance between consecutive first-output words.
+    pub fn measure_ii(&mut self, sample_packets: &[Vec<i32>]) -> Result<f64> {
+        assert!(sample_packets.len() >= 4, "need >= 4 packets for a stable II");
+        let mut next = 0usize;
+        let mut completion_cycles = Vec::new();
+        let mut seen = 0usize;
+        let budget = 1000 + sample_packets.len() as u64 * 200;
+        let start = self.cycle;
+        while completion_cycles.len() < sample_packets.len() {
+            if self.cycle - start > budget {
+                anyhow::bail!("II measurement did not converge");
+            }
+            if next < sample_packets.len() && self.enqueue_packet(&sample_packets[next]) {
+                next += 1;
+            }
+            self.step()?;
+            while self.packets_ready() > seen {
+                seen += 1;
+                completion_cycles.push(self.cycle);
+            }
+        }
+        // Skip the first sample (pipeline fill), average the gaps.
+        let gaps: Vec<f64> = completion_cycles
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as f64)
+            .collect();
+        Ok(gaps.iter().sum::<f64>() / gaps.len() as f64)
+    }
+
+    /// Per-FU DSP utilization snapshot.
+    pub fn dsp_utilizations(&self) -> Vec<f64> {
+        self.fus.iter().map(|f| f.dsp_utilization()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::dfg::eval;
+    use crate::sched::{Program, Timing};
+    use crate::util::prng::Rng;
+
+    fn pipeline_for(name: &str) -> (crate::dfg::Dfg, Program, Pipeline) {
+        let g = bench_suite::load(name).unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let pl = Pipeline::new(&p, 256).unwrap();
+        (g, p, pl)
+    }
+
+    #[test]
+    fn gradient_single_packet_matches_eval() {
+        let (g, _, mut pl) = pipeline_for("gradient");
+        let packet = vec![3, 5, 2, 7, 1];
+        let out = pl.run(&[packet.clone()], 200).unwrap();
+        assert_eq!(out, vec![eval(&g, &packet)]);
+    }
+
+    #[test]
+    fn gradient_first_output_cycle_matches_timing_model() {
+        let (_, p, mut pl) = pipeline_for("gradient");
+        let t = Timing::of(&p);
+        pl.enqueue_packet(&[1, 2, 3, 4, 5]);
+        let mut first = None;
+        for _ in 0..100 {
+            pl.step().unwrap();
+            if first.is_none() && !pl.output_fifo.is_empty() {
+                first = Some(pl.cycle);
+                break;
+            }
+        }
+        assert_eq!(first, Some(t.first_output));
+    }
+
+    /// The cycle-accurate simulator must agree with the functional
+    /// oracle on every benchmark for randomized inputs.
+    #[test]
+    fn all_benchmarks_match_functional_oracle() {
+        let mut rng = Rng::new(2016);
+        for name in bench_suite::all_names() {
+            let (g, _, mut pl) = pipeline_for(name);
+            let n_in = g.inputs().len();
+            let packets: Vec<Vec<i32>> = (0..8)
+                .map(|_| (0..n_in).map(|_| rng.range_i64(-1000, 1000) as i32).collect())
+                .collect();
+            let out = pl.run(&packets, 5000).unwrap();
+            for (pkt, got) in packets.iter().zip(&out) {
+                assert_eq!(got, &eval(&g, pkt), "{name} diverged on {pkt:?}");
+            }
+        }
+    }
+
+    /// Measured steady-state II must equal the analytical model (and
+    /// hence the paper's Table II) for every benchmark.
+    #[test]
+    fn measured_ii_matches_model() {
+        for name in bench_suite::all_names() {
+            let (g, p, mut pl) = pipeline_for(name);
+            let t = Timing::of(&p);
+            let n_in = g.inputs().len();
+            let packets: Vec<Vec<i32>> = (0..10).map(|k| vec![k as i32; n_in]).collect();
+            let ii = pl.measure_ii(&packets).unwrap();
+            assert!(
+                (ii - t.ii as f64).abs() < 1e-9,
+                "{name}: measured II {ii} vs model {}",
+                t.ii
+            );
+        }
+    }
+
+    #[test]
+    fn backpressure_engages_when_fifo_prefilled() {
+        let (_, _, mut pl) = pipeline_for("gradient");
+        for k in 0..4 {
+            assert!(pl.enqueue_packet(&[k, k, k, k, k]));
+        }
+        for _ in 0..60 {
+            pl.step().unwrap();
+        }
+        assert!(pl.backpressure_cycles > 0);
+    }
+
+    #[test]
+    fn extreme_values_survive_the_pipeline() {
+        let (g, _, mut pl) = pipeline_for("poly6");
+        let pkt = vec![i32::MAX, i32::MIN, -1];
+        let out = pl.run(&[pkt.clone()], 500).unwrap();
+        assert_eq!(out[0], eval(&g, &pkt));
+    }
+
+    #[test]
+    fn packet_arity_is_checked() {
+        let (_, _, mut pl) = pipeline_for("gradient");
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pl.enqueue_packet(&[1, 2]);
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Baseline implementations the paper compares against: the SCFU-SCN
+//! spatial overlay [13], Vivado-HLS-style custom datapaths, and the
+//! related-work FU cost models of §II.
+
+pub mod hls;
+pub mod related;
+pub mod scfu;
+
+pub use hls::HlsImpl;
+pub use scfu::ScfuMapping;

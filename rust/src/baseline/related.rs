@@ -1,0 +1,181 @@
+//! Related-work FU cost models (paper §II): CARBON, SCGRA, reMORPH and
+//! TILT, used by `bench_related_work` to regenerate the paper's
+//! qualitative comparison (instruction storage blow-up, context switch
+//! path, FU frequency).
+
+use crate::resources::Device;
+
+/// How a design switches kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchMechanism {
+    /// Local context memory clocked in at fabric speed (this paper).
+    LocalContext,
+    /// Instruction memories rewritten from external memory.
+    ExternalMemory,
+    /// Full- or partial-bitstream reconfiguration.
+    Reconfiguration,
+}
+
+/// One related-work overlay FU datapoint (from §II, normalized to
+/// per-FU numbers as reported by the respective papers).
+#[derive(Debug, Clone, Copy)]
+pub struct RelatedFu {
+    pub name: &'static str,
+    pub platform: &'static str,
+    /// LUTs (Xilinx) or ALMs (Altera) — the bench labels the unit.
+    pub luts_or_alms: u32,
+    pub ffs: u32,
+    pub dsps: u32,
+    pub bram_kbits: f64,
+    pub fmax_mhz: f64,
+    /// Instruction storage depth per FU.
+    pub im_depth: u32,
+    /// Instruction width in bits.
+    pub instr_bits: u32,
+    pub switch: SwitchMechanism,
+}
+
+/// §II datapoints, plus this paper's FU for comparison.
+pub const RELATED: [RelatedFu; 5] = [
+    RelatedFu {
+        name: "CARBON [5]",
+        platform: "Stratix III",
+        luts_or_alms: 3000,
+        ffs: 304,
+        dsps: 4,
+        bram_kbits: 15.6,
+        fmax_mhz: 90.0,
+        im_depth: 256,
+        instr_bits: 64,
+        switch: SwitchMechanism::ExternalMemory,
+    },
+    RelatedFu {
+        name: "SCGRA [18,19]",
+        platform: "Zynq",
+        luts_or_alms: 0, // dominated by BRAM; LUT count not reported
+        ffs: 0,
+        dsps: 1,
+        bram_kbits: 72.0 * 1.0 + 256.0 * 32.0 / 1024.0, // instr ROM + data mem
+        fmax_mhz: 250.0,
+        im_depth: 1024,
+        instr_bits: 72,
+        switch: SwitchMechanism::Reconfiguration,
+    },
+    RelatedFu {
+        name: "reMORPH [20]",
+        platform: "7-series",
+        luts_or_alms: 196,
+        ffs: 41,
+        dsps: 1,
+        bram_kbits: 3.0 * 36.0,
+        fmax_mhz: 200.0,
+        im_depth: 512,
+        instr_bits: 72,
+        switch: SwitchMechanism::Reconfiguration,
+    },
+    RelatedFu {
+        name: "TILT [21]",
+        platform: "Stratix IV",
+        luts_or_alms: 1500, // 12K eALMs / 8 cores
+        ffs: 0,
+        dsps: 2,
+        bram_kbits: 40.0,
+        fmax_mhz: 200.0,
+        im_depth: 256,
+        instr_bits: 64,
+        switch: SwitchMechanism::ExternalMemory,
+    },
+    RelatedFu {
+        name: "this paper",
+        platform: "Zynq Z7020",
+        luts_or_alms: 160,
+        ffs: 293,
+        dsps: 1,
+        bram_kbits: 0.0, // IM is 4 RAM32M LUTRAM primitives
+        fmax_mhz: 325.0,
+        im_depth: 32,
+        instr_bits: 32,
+        switch: SwitchMechanism::LocalContext,
+    },
+];
+
+impl RelatedFu {
+    /// Instruction storage per FU in bits.
+    pub fn instr_storage_bits(&self) -> u64 {
+        self.im_depth as u64 * self.instr_bits as u64
+    }
+
+    /// Rough e-Slices (LUT-based synthesis on the Zynq exchange rate;
+    /// Altera datapoints are approximate by design — labelled in the
+    /// bench output).
+    pub fn eslices(&self, dev: &Device) -> u32 {
+        let slices = (self.luts_or_alms as f64 / 4.0 / 0.494).round() as u32;
+        slices + self.dsps * dev.slices_per_dsp()
+    }
+}
+
+/// The headline §II comparison: this paper's FU stores 32×32 b = 1 Kb
+/// of instructions vs 16–72 Kb for the others.
+pub fn instruction_storage_ratio(other: &RelatedFu) -> f64 {
+    let ours = RELATED[4].instr_storage_bits() as f64;
+    other.instr_storage_bits() as f64 / ours
+}
+
+/// TILT system-level datapoint (§II): 8-core TILT = 12K eALMs and
+/// 30 M inputs/s vs Altera OpenCL HLS at 51K eALMs and 240 M inputs/s.
+pub const TILT_8CORE_EALMS: u32 = 12_000;
+pub const TILT_8CORE_MINPUTS: f64 = 30.0;
+pub const TILT_HLS_EALMS: u32 = 51_000;
+pub const TILT_HLS_MINPUTS: f64 = 240.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::ZYNQ_Z7020;
+
+    #[test]
+    fn our_fu_has_smallest_instruction_storage() {
+        let ours = RELATED[4].instr_storage_bits();
+        assert_eq!(ours, 1024);
+        for r in &RELATED[..4] {
+            assert!(
+                r.instr_storage_bits() >= 16 * ours,
+                "{} storage too small",
+                r.name
+            );
+        }
+    }
+
+    #[test]
+    fn our_fu_is_fastest() {
+        let ours = RELATED[4].fmax_mhz;
+        for r in &RELATED[..4] {
+            assert!(ours > r.fmax_mhz, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn carbon_is_the_largest_fu() {
+        let carbon = RELATED[0].eslices(&ZYNQ_Z7020);
+        let ours = RELATED[4].eslices(&ZYNQ_Z7020);
+        assert!(carbon > 5 * ours);
+    }
+
+    #[test]
+    fn only_this_paper_switches_via_local_context() {
+        let locals = RELATED
+            .iter()
+            .filter(|r| r.switch == SwitchMechanism::LocalContext)
+            .count();
+        assert_eq!(locals, 1);
+    }
+
+    #[test]
+    fn tilt_hls_gap_matches_paper() {
+        // 8x throughput at 4.25x area (paper: "8x higher throughput ...
+        // 4x higher area").
+        assert!((TILT_HLS_MINPUTS / TILT_8CORE_MINPUTS - 8.0).abs() < 1e-9);
+        let area_ratio = TILT_HLS_EALMS as f64 / TILT_8CORE_EALMS as f64;
+        assert!((3.5..=4.5).contains(&area_ratio));
+    }
+}

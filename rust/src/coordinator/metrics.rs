@@ -1,0 +1,123 @@
+//! Serving metrics: wall-clock latency/throughput plus the *simulated
+//! fabric timeline* (what the overlay hardware would have spent, using
+//! the paper's II/latency/context-switch models at 300 MHz).
+
+use crate::util::stats::Samples;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub completed: u64,
+    pub batches: u64,
+    pub batch_size_sum: u64,
+    pub context_switches: u64,
+    pub latency_us: Samples,
+    pub queue_wait_us: Samples,
+    pub per_kernel: BTreeMap<String, u64>,
+    /// Simulated overlay fabric time (µs at 300 MHz), incl. switches.
+    pub fabric_busy_us: f64,
+    /// Simulated time spent on context switching only.
+    pub fabric_switch_us: f64,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn record_batch(
+        &mut self,
+        kernel: &str,
+        n: usize,
+        switched: bool,
+        switch_us: f64,
+        exec_us_sim: f64,
+    ) {
+        self.batches += 1;
+        self.batch_size_sum += n as u64;
+        self.completed += n as u64;
+        *self.per_kernel.entry(kernel.to_string()).or_default() += n as u64;
+        if switched {
+            self.context_switches += 1;
+            self.fabric_switch_us += switch_us;
+            self.fabric_busy_us += switch_us;
+        }
+        self.fabric_busy_us += exec_us_sim;
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+
+    pub fn render(&mut self) -> String {
+        let wall_s = self.wall.as_secs_f64().max(1e-9);
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests completed:   {} in {:.3}s ({:.0} req/s wall)\n",
+            self.completed,
+            wall_s,
+            self.completed as f64 / wall_s
+        ));
+        s.push_str(&format!(
+            "batches:              {} (mean size {:.1})\n",
+            self.batches,
+            self.mean_batch_size()
+        ));
+        s.push_str(&format!(
+            "context switches:     {} ({:.2} us simulated switch time total)\n",
+            self.context_switches, self.fabric_switch_us
+        ));
+        s.push_str(&format!(
+            "simulated fabric busy: {:.1} us ({:.2}% of wall)\n",
+            self.fabric_busy_us,
+            self.fabric_busy_us / (wall_s * 1e6) * 100.0
+        ));
+        if !self.latency_us.is_empty() {
+            s.push_str(&format!("request latency:      {}\n", self.latency_us.summary("us")));
+        }
+        if !self.queue_wait_us.is_empty() {
+            s.push_str(&format!("queue wait:           {}\n", self.queue_wait_us.summary("us")));
+        }
+        s.push_str("per-kernel requests:  ");
+        s.push_str(
+            &self
+                .per_kernel
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+        );
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_batches() {
+        let mut m = Metrics::default();
+        m.record_batch("a", 4, true, 0.27, 1.0);
+        m.record_batch("a", 2, false, 0.0, 0.5);
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.context_switches, 1);
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-12);
+        assert!((m.fabric_busy_us - 1.77).abs() < 1e-9);
+    }
+
+    #[test]
+    fn renders() {
+        let mut m = Metrics::default();
+        m.wall = Duration::from_millis(100);
+        m.record_batch("k", 8, true, 0.2, 3.0);
+        m.latency_us.push(120.0);
+        let s = m.render();
+        assert!(s.contains("requests completed:   8"));
+        assert!(s.contains("k=8"));
+    }
+}

@@ -1,0 +1,376 @@
+//! L3 serving coordinator (the software analogue of the paper's Fig. 4
+//! system: ARM-side runtime managing hardware tasks on replicated
+//! overlay pipelines).
+//!
+//! Architecture (std threads + channels; tokio is unavailable offline):
+//!
+//! * callers `submit()` requests (kernel name + input packet) and get a
+//!   completion channel;
+//! * a shared [`queue::QueueSet`] holds per-kernel FIFOs;
+//! * each **fabric worker** thread owns a PJRT [`Engine`] (PJRT clients
+//!   are not `Send`, so each worker constructs its own — one worker ≙
+//!   one overlay pipeline replica);
+//! * workers pull context-affine batches, charge the modeled context
+//!   switch cost when they change kernels, execute through PJRT, and
+//!   reply;
+//! * metrics capture wall-clock latency plus the simulated 300 MHz
+//!   fabric timeline (II model + context-switch model).
+
+pub mod metrics;
+pub mod queue;
+
+use crate::bench_suite;
+use crate::resources::SYSTEM_CLOCK_MHZ;
+use crate::runtime::Engine;
+use crate::sched::{Program, Timing};
+use crate::util::prng::Rng;
+use anyhow::{Context, Result};
+use metrics::Metrics;
+use queue::{Pending, QueueSet};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// Completion message for one request.
+pub type Reply = Result<Vec<i32>, String>;
+
+type Token = mpsc::Sender<Reply>;
+
+struct Shared {
+    queues: Mutex<QueueState>,
+    cv: Condvar,
+    metrics: Mutex<Metrics>,
+}
+
+struct QueueState {
+    qs: QueueSet<Token>,
+    shutdown: bool,
+}
+
+/// Per-kernel fabric timing constants (derived once from the schedule).
+#[derive(Debug, Clone, Copy)]
+struct KernelTiming {
+    ii: u32,
+    latency: u64,
+    ctx_words: usize,
+}
+
+/// The coordinator handle.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<Result<()>>>,
+    timings: BTreeMap<String, KernelTiming>,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Start `n_workers` fabric workers over the artifacts directory.
+    pub fn start(artifacts_dir: &str, n_workers: usize, max_batch: usize) -> Result<Coordinator> {
+        anyhow::ensure!(n_workers >= 1, "need at least one worker");
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(QueueState {
+                qs: QueueSet::default(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            metrics: Mutex::new(Metrics::default()),
+        });
+        // Precompute fabric timing per kernel from the schedules.
+        let mut timings = BTreeMap::new();
+        for name in bench_suite::all_names() {
+            let g = bench_suite::load(name)?;
+            let p = Program::schedule(&g)?;
+            let t = Timing::of(&p);
+            let img = p.context_image()?;
+            timings.insert(
+                name.to_string(),
+                KernelTiming {
+                    ii: t.ii,
+                    latency: t.latency(),
+                    ctx_words: img.load_cycles().map_err(|e| anyhow::anyhow!("{e}"))?,
+                },
+            );
+        }
+        let dir = PathBuf::from(artifacts_dir);
+        // Fail fast if artifacts are missing (workers would all error).
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "artifacts not found in '{artifacts_dir}' — run `make artifacts`"
+        );
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let mut workers = Vec::new();
+        for wid in 0..n_workers {
+            let shared = Arc::clone(&shared);
+            let dir = dir.clone();
+            let timings = timings.clone();
+            let ready = ready_tx.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("fabric-{wid}"))
+                    .spawn(move || worker_loop(wid, &dir, shared, timings, max_batch, ready))?,
+            );
+        }
+        drop(ready_tx);
+        // Wait until every worker has compiled its engine so request
+        // latency measures serving, not startup.
+        for _ in 0..n_workers {
+            ready_rx
+                .recv()
+                .context("worker died during startup")?
+                .map_err(|e| anyhow::anyhow!(e))?;
+        }
+        Ok(Coordinator {
+            shared,
+            workers,
+            timings,
+            started: Instant::now(),
+        })
+    }
+
+    /// Submit one request; the reply arrives on the returned channel.
+    pub fn submit(&self, kernel: &str, inputs: Vec<i32>) -> Result<mpsc::Receiver<Reply>> {
+        anyhow::ensure!(
+            self.timings.contains_key(kernel),
+            "unknown kernel '{kernel}'"
+        );
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.shared.queues.lock().unwrap();
+            anyhow::ensure!(!st.shutdown, "coordinator shut down");
+            st.qs.push(
+                kernel,
+                Pending {
+                    inputs,
+                    enqueued: Instant::now(),
+                    token: tx,
+                },
+            );
+        }
+        self.shared.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Convenience: submit and block for the reply.
+    pub fn call(&self, kernel: &str, inputs: Vec<i32>) -> Result<Vec<i32>> {
+        let rx = self.submit(kernel, inputs)?;
+        rx.recv()
+            .context("worker dropped")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Snapshot + render current metrics.
+    pub fn metrics_report(&self) -> String {
+        let mut m = self.shared.metrics.lock().unwrap();
+        m.wall = self.started.elapsed();
+        m.render()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.shared.metrics.lock().unwrap().completed
+    }
+
+    /// Drain queues and stop workers.
+    pub fn shutdown(self) -> Result<()> {
+        {
+            let mut st = self.shared.queues.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers {
+            w.join()
+                .map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+fn worker_loop(
+    _wid: usize,
+    dir: &std::path::Path,
+    shared: Arc<Shared>,
+    timings: BTreeMap<String, KernelTiming>,
+    max_batch: usize,
+    ready: mpsc::Sender<Result<(), String>>,
+) -> Result<()> {
+    // Each worker owns its own PJRT engine (compiled per worker; PJRT
+    // clients are not Send). This mirrors per-pipeline configuration
+    // BRAMs in Fig. 4.
+    let engine = match Engine::load(dir) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e}")));
+            return Err(e);
+        }
+    };
+    let max_batch = max_batch.min(engine.batch);
+    let mut context: Option<String> = None;
+    loop {
+        let batch = {
+            let mut st = shared.queues.lock().unwrap();
+            loop {
+                if let Some(b) = st.qs.take_batch(context.as_deref(), max_batch, Instant::now()) {
+                    break Some(b);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        let Some(batch) = batch else { return Ok(()) };
+        let switched = context.as_deref() != Some(batch.kernel.as_str());
+        let t = timings[&batch.kernel];
+        let switch_us = t.ctx_words as f64 / SYSTEM_CLOCK_MHZ;
+        // Simulated fabric execution time for the batch at 300 MHz:
+        // pipeline fill (latency) + (n-1) more initiations at II.
+        let n = batch.items.len();
+        let exec_cycles = t.latency + (n as u64 - 1) * t.ii as u64;
+        let exec_us_sim = exec_cycles as f64 / SYSTEM_CLOCK_MHZ;
+        // Real execution through PJRT.
+        let inputs: Vec<Vec<i32>> = batch.items.iter().map(|p| p.inputs.clone()).collect();
+        let result = engine.execute(&batch.kernel, &inputs);
+        let now = Instant::now();
+        match result {
+            Ok(outputs) => {
+                {
+                    let mut m = shared.metrics.lock().unwrap();
+                    m.record_batch(&batch.kernel, n, switched, switch_us, exec_us_sim);
+                    for p in &batch.items {
+                        let wait = now.duration_since(p.enqueued).as_secs_f64() * 1e6;
+                        m.latency_us.push(wait);
+                        m.queue_wait_us.push(wait - exec_us_sim.min(wait));
+                    }
+                }
+                for (p, out) in batch.items.into_iter().zip(outputs) {
+                    let _ = p.token.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e}");
+                let mut m = shared.metrics.lock().unwrap();
+                m.record_batch(&batch.kernel, 0, switched, switch_us, 0.0);
+                drop(m);
+                for p in batch.items {
+                    let _ = p.token.send(Err(msg.clone()));
+                }
+            }
+        }
+        context = Some(batch.kernel);
+    }
+}
+
+/// `tmfu serve`: drive the coordinator with a mixed-kernel workload and
+/// print the metrics (the paper's Fig. 4 usage model).
+pub fn serve_demo(
+    artifacts: &str,
+    pipelines: usize,
+    requests: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<()> {
+    let names = bench_suite::all_names();
+    let coord = Coordinator::start(artifacts, pipelines, batch)?;
+    let mut rng = Rng::new(seed);
+    println!(
+        "serving {requests} requests across {} kernels on {pipelines} pipeline(s), max batch {batch}",
+        names.len()
+    );
+    let mut rxs = Vec::with_capacity(requests);
+    let mut expected = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let kernel = *rng.choose(&names);
+        let g = bench_suite::load(kernel)?;
+        let inputs: Vec<i32> = (0..g.inputs().len())
+            .map(|_| rng.range_i64(-1000, 1000) as i32)
+            .collect();
+        expected.push(crate::dfg::eval(&g, &inputs));
+        rxs.push(coord.submit(kernel, inputs)?);
+    }
+    let mut errors = 0usize;
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        match rx.recv() {
+            Ok(Ok(got)) if got == want => {}
+            _ => errors += 1,
+        }
+    }
+    println!("{}", coord.metrics_report());
+    coord.shutdown()?;
+    if errors > 0 {
+        anyhow::bail!("{errors} requests returned wrong results");
+    }
+    println!("all responses verified against the functional oracle");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| dir.to_string_lossy().into_owned())
+    }
+
+    #[test]
+    fn serves_mixed_workload_correctly() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let coord = Coordinator::start(&dir, 1, 8).unwrap();
+        // Submit a mix across kernels; verify all results.
+        let mut rng = Rng::new(5);
+        let names = bench_suite::all_names();
+        let mut jobs = Vec::new();
+        for _ in 0..40 {
+            let kernel = *rng.choose(&names);
+            let g = bench_suite::load(kernel).unwrap();
+            let inputs: Vec<i32> = (0..g.inputs().len())
+                .map(|_| rng.range_i64(-500, 500) as i32)
+                .collect();
+            let want = crate::dfg::eval(&g, &inputs);
+            let rx = coord.submit(kernel, inputs).unwrap();
+            jobs.push((rx, want));
+        }
+        for (rx, want) in jobs {
+            assert_eq!(rx.recv().unwrap().unwrap(), want);
+        }
+        assert_eq!(coord.completed(), 40);
+        let report = coord.metrics_report();
+        assert!(report.contains("context switches"));
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn call_blocks_for_result() {
+        let Some(dir) = artifacts_dir() else { return };
+        let coord = Coordinator::start(&dir, 1, 4).unwrap();
+        let out = coord.call("gradient", vec![3, 5, 2, 7, 1]).unwrap();
+        assert_eq!(out, vec![1 + 9 + 25 + 1]);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_kernel_and_bad_arity() {
+        let Some(dir) = artifacts_dir() else { return };
+        let coord = Coordinator::start(&dir, 1, 4).unwrap();
+        assert!(coord.submit("nonesuch", vec![1]).is_err());
+        // Wrong arity surfaces as an Err reply, not a hang.
+        let r = coord.call("gradient", vec![1, 2]);
+        assert!(r.is_err());
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn missing_artifacts_fails_fast() {
+        assert!(Coordinator::start("/definitely/not/here", 1, 4).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Request queues + batching policy (pure logic, tested without PJRT).
+//!
+//! The dispatcher maintains one FIFO queue per kernel context. Workers
+//! (overlay pipelines) pick batches with **context affinity**: a worker
+//! holding kernel K's context prefers K's queue — switching contexts is
+//! cheap on this overlay (sub-µs, the paper's headline) but never free,
+//! and affinity also models the BRAM-resident data staging of Fig. 4.
+//! When the worker's context has no work it steals the longest queue
+//! (weighted by age to prevent starvation).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+/// One queued request.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub inputs: Vec<i32>,
+    pub enqueued: Instant,
+    /// Opaque completion payload (reply channel in production, test id
+    /// in tests).
+    pub token: T,
+}
+
+/// Per-kernel FIFO queues.
+#[derive(Debug)]
+pub struct QueueSet<T> {
+    queues: BTreeMap<String, VecDeque<Pending<T>>>,
+    pub total_queued: usize,
+}
+
+/// A batch the dispatcher hands to a worker.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub kernel: String,
+    pub items: Vec<Pending<T>>,
+}
+
+impl<T> Default for QueueSet<T> {
+    fn default() -> Self {
+        Self {
+            queues: BTreeMap::new(),
+            total_queued: 0,
+        }
+    }
+}
+
+impl<T> QueueSet<T> {
+    pub fn push(&mut self, kernel: &str, p: Pending<T>) {
+        self.queues.entry(kernel.to_string()).or_default().push_back(p);
+        self.total_queued += 1;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_queued == 0
+    }
+
+    pub fn queued_for(&self, kernel: &str) -> usize {
+        self.queues.get(kernel).map_or(0, VecDeque::len)
+    }
+
+    /// Batching policy: prefer the worker's current context if it has
+    /// work; otherwise the queue with the highest (length + age bonus)
+    /// score. Takes up to `max_batch` requests FIFO.
+    pub fn take_batch(
+        &mut self,
+        current_context: Option<&str>,
+        max_batch: usize,
+        now: Instant,
+    ) -> Option<Batch<T>> {
+        if self.is_empty() {
+            return None;
+        }
+        let kernel = match current_context {
+            Some(k) if self.queued_for(k) > 0 => k.to_string(),
+            _ => self
+                .queues
+                .iter()
+                .filter(|(_, q)| !q.is_empty())
+                .max_by(|(_, a), (_, b)| {
+                    let score = |q: &VecDeque<Pending<T>>| {
+                        let age_ms = now
+                            .duration_since(q.front().unwrap().enqueued)
+                            .as_secs_f64()
+                            * 1e3;
+                        q.len() as f64 + age_ms * 0.1
+                    };
+                    score(a).partial_cmp(&score(b)).unwrap()
+                })
+                .map(|(k, _)| k.clone())?,
+        };
+        let q = self.queues.get_mut(&kernel).unwrap();
+        let n = q.len().min(max_batch);
+        let items: Vec<Pending<T>> = q.drain(..n).collect();
+        self.total_queued -= items.len();
+        Some(Batch { kernel, items })
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch<T>> {
+        let mut out = Vec::new();
+        for (k, q) in self.queues.iter_mut() {
+            if !q.is_empty() {
+                let items: Vec<Pending<T>> = q.drain(..).collect();
+                self.total_queued -= items.len();
+                out.push(Batch {
+                    kernel: k.clone(),
+                    items,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pend(token: u32) -> Pending<u32> {
+        Pending {
+            inputs: vec![1, 2, 3],
+            enqueued: Instant::now(),
+            token,
+        }
+    }
+
+    #[test]
+    fn affinity_preferred_when_context_has_work() {
+        let mut qs = QueueSet::default();
+        qs.push("a", pend(1));
+        qs.push("b", pend(2));
+        qs.push("b", pend(3));
+        // Worker holds 'a': takes 'a' despite 'b' being longer.
+        let b = qs.take_batch(Some("a"), 16, Instant::now()).unwrap();
+        assert_eq!(b.kernel, "a");
+        assert_eq!(b.items.len(), 1);
+    }
+
+    #[test]
+    fn steals_longest_queue_without_affinity() {
+        let mut qs = QueueSet::default();
+        qs.push("a", pend(1));
+        qs.push("b", pend(2));
+        qs.push("b", pend(3));
+        let b = qs.take_batch(Some("c"), 16, Instant::now()).unwrap();
+        assert_eq!(b.kernel, "b");
+        assert_eq!(b.items.len(), 2);
+        assert_eq!(qs.total_queued, 1);
+    }
+
+    #[test]
+    fn respects_max_batch_fifo() {
+        let mut qs = QueueSet::default();
+        for i in 0..10 {
+            qs.push("k", pend(i));
+        }
+        let b = qs.take_batch(None, 4, Instant::now()).unwrap();
+        assert_eq!(b.items.len(), 4);
+        assert_eq!(b.items[0].token, 0);
+        assert_eq!(b.items[3].token, 3);
+        assert_eq!(qs.queued_for("k"), 6);
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let mut qs: QueueSet<u32> = QueueSet::default();
+        assert!(qs.take_batch(None, 8, Instant::now()).is_none());
+    }
+
+    #[test]
+    fn age_bonus_prevents_starvation() {
+        let mut qs = QueueSet::default();
+        let old = Instant::now() - std::time::Duration::from_millis(500);
+        qs.push(
+            "starved",
+            Pending {
+                inputs: vec![],
+                enqueued: old,
+                token: 0u32,
+            },
+        );
+        for i in 0..3 {
+            qs.push("busy", pend(i));
+        }
+        // 0.1/ms * 500ms = 50 > 3: the old queue wins.
+        let b = qs.take_batch(None, 8, Instant::now()).unwrap();
+        assert_eq!(b.kernel, "starved");
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut qs = QueueSet::default();
+        qs.push("a", pend(1));
+        qs.push("b", pend(2));
+        let batches = qs.drain_all();
+        assert_eq!(batches.len(), 2);
+        assert!(qs.is_empty());
+    }
+}

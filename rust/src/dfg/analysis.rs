@@ -1,0 +1,237 @@
+//! DFG analyses: ASAP levels and the Table-II characteristics.
+//!
+//! Conventions (validated against the paper's own numbers — see
+//! DESIGN.md §6):
+//!
+//! * **level**: inputs and constants sit at level 0; an op's level is
+//!   `1 + max(level(arg))`; an output's level equals its operand's level.
+//! * **graph depth** = the maximum op level = number of pipeline stages
+//!   (= FUs) the linear overlay needs.
+//! * **edges** = operand slots referencing non-constant nodes on op
+//!   nodes, plus one edge per output node. Constants are preloaded into
+//!   the register file and contribute no streaming edge (this exactly
+//!   reproduces chebyshev's 12 edges).
+//! * **average parallelism** = op nodes / depth.
+
+use super::{Dfg, NodeId, NodeKind};
+
+/// ASAP levels for every node.
+#[derive(Debug, Clone)]
+pub struct Levels {
+    pub level: Vec<u32>,
+    /// Max op level (pipeline depth in stages).
+    pub depth: u32,
+}
+
+impl Levels {
+    /// ALAP levels: every op is placed as late as its earliest consumer
+    /// allows (outputs exit at the virtual stage `depth+1`). Same depth
+    /// as ASAP; ops with slack move toward their consumers, which can
+    /// shorten bypass chains (see `bench_ablation` §E).
+    pub fn alap(g: &Dfg) -> Levels {
+        let asap = Levels::of(g);
+        let depth = asap.depth;
+        let mut level = vec![0u32; g.len()];
+        // Latest allowed stage per node, computed in reverse topological
+        // order. Outputs pin their operand to any stage <= depth.
+        let mut latest = vec![u32::MAX; g.len()];
+        for id in (0..g.len() as NodeId).rev() {
+            let n = g.node(id);
+            match &n.kind {
+                NodeKind::Output { .. } => {
+                    let a = n.args[0] as usize;
+                    latest[a] = latest[a].min(depth);
+                }
+                NodeKind::Op { .. } => {
+                    let own = if latest[id as usize] == u32::MAX {
+                        depth
+                    } else {
+                        latest[id as usize]
+                    };
+                    level[id as usize] = own;
+                    for &a in &n.args {
+                        let a = a as usize;
+                        latest[a] = latest[a].min(own - 1);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Inputs and consts stay at 0; outputs mirror their operand.
+        for id in g.ids() {
+            let n = g.node(id);
+            if n.is_output() {
+                level[id as usize] = level[n.args[0] as usize];
+            } else if !n.is_op() {
+                level[id as usize] = 0;
+            }
+        }
+        Levels { level, depth }
+    }
+
+    pub fn of(g: &Dfg) -> Levels {
+        let mut level = vec![0u32; g.len()];
+        let mut depth = 0;
+        for id in g.ids() {
+            let n = g.node(id);
+            let lvl = match &n.kind {
+                NodeKind::Input { .. } | NodeKind::Const { .. } => 0,
+                NodeKind::Op { .. } => {
+                    1 + n
+                        .args
+                        .iter()
+                        .map(|&a| level[a as usize])
+                        .max()
+                        .unwrap_or(0)
+                }
+                NodeKind::Output { .. } => level[n.args[0] as usize],
+            };
+            level[id as usize] = lvl;
+            if n.is_op() {
+                depth = depth.max(lvl);
+            }
+        }
+        Levels { level, depth }
+    }
+
+    /// Op node ids at each level `1..=depth` (stage s -> ops).
+    pub fn stages(&self, g: &Dfg) -> Vec<Vec<NodeId>> {
+        let mut stages = vec![Vec::new(); self.depth as usize];
+        for id in g.ids() {
+            if g.node(id).is_op() {
+                let s = self.level[id as usize] as usize;
+                stages[s - 1].push(id);
+            }
+        }
+        stages
+    }
+}
+
+/// The columns of the paper's Table II.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Characteristics {
+    pub name: String,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+    pub n_edges: usize,
+    pub n_ops: usize,
+    pub depth: u32,
+    pub avg_parallelism: f64,
+    /// Widest stage (max ops mapped to one FU).
+    pub max_stage_ops: usize,
+}
+
+impl Characteristics {
+    pub fn of(g: &Dfg) -> Characteristics {
+        let levels = Levels::of(g);
+        let n_ops = g.n_ops();
+        let mut n_edges = 0usize;
+        for id in g.ids() {
+            let n = g.node(id);
+            match &n.kind {
+                NodeKind::Op { .. } => {
+                    n_edges += n.args.iter().filter(|&&a| !g.node(a).is_const()).count();
+                }
+                NodeKind::Output { .. } => n_edges += 1,
+                _ => {}
+            }
+        }
+        let depth = levels.depth;
+        let max_stage_ops = levels
+            .stages(g)
+            .iter()
+            .map(|s| s.len())
+            .max()
+            .unwrap_or(0);
+        Characteristics {
+            name: g.name.clone(),
+            n_inputs: g.inputs().len(),
+            n_outputs: g.outputs().len(),
+            n_edges,
+            n_ops,
+            depth,
+            avg_parallelism: if depth == 0 {
+                0.0
+            } else {
+                n_ops as f64 / depth as f64
+            },
+            max_stage_ops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{tiny_graph, OpKind};
+
+    #[test]
+    fn levels_of_chain() {
+        // out = ((a+b)*c_const)*... : chain levels grow by one per op.
+        let mut g = Dfg::new("chain");
+        let a = g.add_input("a");
+        let b = g.add_input("b");
+        let t1 = g.add_op(OpKind::Add, a, b);
+        let c = g.add_const(3);
+        let t2 = g.add_op(OpKind::Mul, t1, c);
+        let t3 = g.add_op(OpKind::Sub, t2, a);
+        g.add_output("out", t3);
+        let l = Levels::of(&g);
+        assert_eq!(l.depth, 3);
+        assert_eq!(l.level[t1 as usize], 1);
+        assert_eq!(l.level[t2 as usize], 2);
+        assert_eq!(l.level[t3 as usize], 3);
+    }
+
+    #[test]
+    fn stages_partition_ops() {
+        let g = tiny_graph();
+        let l = Levels::of(&g);
+        let stages = l.stages(&g);
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].len(), 1);
+        assert_eq!(stages[1].len(), 1);
+    }
+
+    #[test]
+    fn characteristics_of_tiny() {
+        let c = Characteristics::of(&tiny_graph());
+        assert_eq!(c.n_inputs, 2);
+        assert_eq!(c.n_outputs, 1);
+        assert_eq!(c.n_ops, 2);
+        assert_eq!(c.depth, 2);
+        // edges: sub(a,b)=2, mul(d,d)=2, output=1
+        assert_eq!(c.n_edges, 5);
+        assert!((c.avg_parallelism - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn const_operands_add_no_edges() {
+        let mut g = Dfg::new("c");
+        let x = g.add_input("x");
+        let k = g.add_const(16);
+        let m = g.add_op(OpKind::Mul, x, k);
+        g.add_output("y", m);
+        let c = Characteristics::of(&g);
+        assert_eq!(c.n_edges, 2); // x->m, m->out
+    }
+
+    #[test]
+    fn wide_graph_parallelism() {
+        // Four independent adds feeding a reduction tree.
+        let mut g = Dfg::new("wide");
+        let ins: Vec<_> = (0..8).map(|i| g.add_input(&format!("i{i}"))).collect();
+        let l1: Vec<_> = (0..4)
+            .map(|i| g.add_op(OpKind::Add, ins[2 * i], ins[2 * i + 1]))
+            .collect();
+        let l2a = g.add_op(OpKind::Add, l1[0], l1[1]);
+        let l2b = g.add_op(OpKind::Add, l1[2], l1[3]);
+        let l3 = g.add_op(OpKind::Add, l2a, l2b);
+        g.add_output("s", l3);
+        let c = Characteristics::of(&g);
+        assert_eq!(c.n_ops, 7);
+        assert_eq!(c.depth, 3);
+        assert_eq!(c.max_stage_ops, 4);
+        assert!((c.avg_parallelism - 7.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,110 @@
+//! Functional DFG evaluation — the Rust-side oracle.
+//!
+//! Semantics are wrapping two's-complement int32, matching the DSP48E1
+//! model, the jnp reference (`python/compile/kernels/ref.py`) and the
+//! Pallas kernel. The cycle-accurate simulator and the PJRT runtime are
+//! both checked against this evaluator.
+
+use super::{Dfg, NodeKind};
+
+/// Evaluate the graph for one input vector (values in input declaration
+/// order). Returns outputs in output declaration order.
+pub fn eval(g: &Dfg, inputs: &[i32]) -> Vec<i32> {
+    let input_ids = g.inputs();
+    assert_eq!(
+        inputs.len(),
+        input_ids.len(),
+        "kernel '{}' expects {} inputs, got {}",
+        g.name,
+        input_ids.len(),
+        inputs.len()
+    );
+    let mut value = vec![0i32; g.len()];
+    let mut next_input = 0usize;
+    let mut outputs = Vec::new();
+    for id in g.ids() {
+        let n = g.node(id);
+        let v = match &n.kind {
+            NodeKind::Input { .. } => {
+                let v = inputs[next_input];
+                next_input += 1;
+                v
+            }
+            NodeKind::Const { value } => *value,
+            NodeKind::Op { op } => op.apply(value[n.args[0] as usize], value[n.args[1] as usize]),
+            NodeKind::Output { .. } => {
+                let v = value[n.args[0] as usize];
+                outputs.push(v);
+                v
+            }
+        };
+        value[id as usize] = v;
+    }
+    outputs
+}
+
+/// Evaluate over a batch of input vectors (row-major `[batch][n_inputs]`).
+pub fn eval_batch(g: &Dfg, batch: &[Vec<i32>]) -> Vec<Vec<i32>> {
+    batch.iter().map(|row| eval(g, row)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{tiny_graph, Dfg, OpKind};
+
+    #[test]
+    fn evaluates_tiny() {
+        let g = tiny_graph();
+        assert_eq!(eval(&g, &[7, 3]), vec![16]); // (7-3)^2
+        assert_eq!(eval(&g, &[3, 7]), vec![16]); // (-4)^2
+        assert_eq!(eval(&g, &[0, 0]), vec![0]);
+    }
+
+    #[test]
+    fn evaluates_constants() {
+        let mut g = Dfg::new("k");
+        let x = g.add_input("x");
+        let k = g.add_const(-5);
+        let s = g.add_op(OpKind::Mul, x, k);
+        g.add_output("y", s);
+        assert_eq!(eval(&g, &[10]), vec![-50]);
+    }
+
+    #[test]
+    fn wrapping_multiply() {
+        let mut g = Dfg::new("w");
+        let x = g.add_input("x");
+        let m = g.add_op(OpKind::Mul, x, x);
+        g.add_output("y", m);
+        assert_eq!(eval(&g, &[1 << 17]), vec![(1i32 << 17).wrapping_mul(1 << 17)]);
+    }
+
+    #[test]
+    fn multiple_outputs_in_order() {
+        let mut g = Dfg::new("two");
+        let a = g.add_input("a");
+        let b = g.add_input("b");
+        let s = g.add_op(OpKind::Add, a, b);
+        let d = g.add_op(OpKind::Sub, a, b);
+        g.add_output("sum", s);
+        g.add_output("diff", d);
+        assert_eq!(eval(&g, &[10, 4]), vec![14, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects 2 inputs")]
+    fn wrong_arity_panics() {
+        eval(&tiny_graph(), &[1]);
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let g = tiny_graph();
+        let batch = vec![vec![1, 2], vec![5, -5], vec![i32::MAX, i32::MIN]];
+        let out = eval_batch(&g, &batch);
+        for (row, o) in batch.iter().zip(&out) {
+            assert_eq!(o, &eval(&g, row));
+        }
+    }
+}

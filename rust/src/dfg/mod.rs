@@ -1,0 +1,448 @@
+//! Data-flow graph IR.
+//!
+//! The paper's compiler (§IV) maps "feed-forward data flow graphs" onto
+//! the linear overlay: nodes are arithmetic operations executed on the
+//! DSP48E1-based FU, edges are value flow. This module provides the IR,
+//! structural validation, evaluation (the functional oracle), the Table-II
+//! characteristics analysis, classic cleanup transforms, and JSON / DOT
+//! interchange.
+
+mod analysis;
+mod eval;
+mod serde;
+mod transform;
+
+pub use analysis::{Characteristics, Levels};
+pub use eval::{eval, eval_batch};
+pub use serde::{dfg_from_json, dfg_from_str, dfg_to_json};
+pub use transform::{constant_fold, cse, dce, normalize};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Node index into [`Dfg::nodes`]. Construction keeps nodes topologically
+/// ordered: every operand id is smaller than its user's id.
+pub type NodeId = u32;
+
+/// Arithmetic operations supported by the DSP48E1-based FU.
+///
+/// `SQR` in the paper's Table I is `Mul` with both operands equal; the
+/// instruction encoding distinguishes them only via operand addresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    Add,
+    Sub,
+    Mul,
+    And,
+    Or,
+    Xor,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 6] = [
+        OpKind::Add,
+        OpKind::Sub,
+        OpKind::Mul,
+        OpKind::And,
+        OpKind::Or,
+        OpKind::Xor,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::And => "and",
+            OpKind::Or => "or",
+            OpKind::Xor => "xor",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<OpKind> {
+        OpKind::ALL.iter().copied().find(|o| o.name() == s)
+    }
+
+    /// Wrapping two's-complement int32 semantics — identical in the Rust
+    /// simulator, the jnp oracle and the Pallas kernel.
+    pub fn apply(self, a: i32, b: i32) -> i32 {
+        match self {
+            OpKind::Add => a.wrapping_add(b),
+            OpKind::Sub => a.wrapping_sub(b),
+            OpKind::Mul => a.wrapping_mul(b),
+            OpKind::And => a & b,
+            OpKind::Or => a | b,
+            OpKind::Xor => a ^ b,
+        }
+    }
+
+    /// Is `op(a,b) == op(b,a)` for all inputs?
+    pub fn commutative(self) -> bool {
+        !matches!(self, OpKind::Sub)
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Node payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// Primary input (streamed from the input FIFO).
+    Input { name: String },
+    /// Compile-time constant (preloaded into the FU register file at
+    /// context-load time; see DESIGN.md on the paper's underspecification).
+    Const { value: i32 },
+    /// Binary arithmetic operation; `args.len() == 2`.
+    Op { op: OpKind },
+    /// Primary output (streamed to the output FIFO); `args.len() == 1`.
+    Output { name: String },
+}
+
+/// One DFG node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub args: Vec<NodeId>,
+}
+
+impl Node {
+    pub fn is_op(&self) -> bool {
+        matches!(self.kind, NodeKind::Op { .. })
+    }
+    pub fn is_input(&self) -> bool {
+        matches!(self.kind, NodeKind::Input { .. })
+    }
+    pub fn is_const(&self) -> bool {
+        matches!(self.kind, NodeKind::Const { .. })
+    }
+    pub fn is_output(&self) -> bool {
+        matches!(self.kind, NodeKind::Output { .. })
+    }
+}
+
+/// A feed-forward data-flow graph in topological order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Dfg {
+    pub name: String,
+    nodes: Vec<Node>,
+}
+
+/// Structural error from [`Dfg::validate`].
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum DfgError {
+    #[error("node {0}: operand {1} is not defined before use (graph must be topological)")]
+    ForwardReference(NodeId, NodeId),
+    #[error("node {0}: {1}")]
+    Arity(NodeId, String),
+    #[error("duplicate input name '{0}'")]
+    DuplicateInput(String),
+    #[error("duplicate output name '{0}'")]
+    DuplicateOutput(String),
+    #[error("graph has no outputs")]
+    NoOutputs,
+    #[error("node {0}: operand {1} is an output node")]
+    OutputUsedAsOperand(NodeId, NodeId),
+}
+
+impl Dfg {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            nodes: Vec::new(),
+        }
+    }
+
+    // -- construction --------------------------------------------------
+
+    pub fn add_input(&mut self, name: &str) -> NodeId {
+        self.push(Node {
+            kind: NodeKind::Input {
+                name: name.to_string(),
+            },
+            args: vec![],
+        })
+    }
+
+    pub fn add_const(&mut self, value: i32) -> NodeId {
+        self.push(Node {
+            kind: NodeKind::Const { value },
+            args: vec![],
+        })
+    }
+
+    pub fn add_op(&mut self, op: OpKind, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Node {
+            kind: NodeKind::Op { op },
+            args: vec![a, b],
+        })
+    }
+
+    pub fn add_output(&mut self, name: &str, value: NodeId) -> NodeId {
+        self.push(Node {
+            kind: NodeKind::Output {
+                name: name.to_string(),
+            },
+            args: vec![value],
+        })
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        let id = self.nodes.len() as NodeId;
+        self.nodes.push(node);
+        id
+    }
+
+    // -- access ---------------------------------------------------------
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = NodeId> {
+        0..self.nodes.len() as NodeId
+    }
+
+    /// Input node ids in declaration order.
+    pub fn inputs(&self) -> Vec<NodeId> {
+        self.ids().filter(|&id| self.node(id).is_input()).collect()
+    }
+
+    /// Output node ids in declaration order.
+    pub fn outputs(&self) -> Vec<NodeId> {
+        self.ids().filter(|&id| self.node(id).is_output()).collect()
+    }
+
+    pub fn input_names(&self) -> Vec<&str> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.kind {
+                NodeKind::Input { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn output_names(&self) -> Vec<&str> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.kind {
+                NodeKind::Output { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_op()).count()
+    }
+
+    /// Users of each node (adjacency reversed), computed on demand.
+    pub fn users(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (id, n) in self.nodes.iter().enumerate() {
+            for &a in &n.args {
+                out[a as usize].push(id as NodeId);
+            }
+        }
+        out
+    }
+
+    // -- validation ------------------------------------------------------
+
+    /// Check topological order, arity, name uniqueness, output discipline.
+    pub fn validate(&self) -> Result<(), DfgError> {
+        let mut input_names = BTreeMap::new();
+        let mut output_names = BTreeMap::new();
+        let mut has_output = false;
+        for (idx, n) in self.nodes.iter().enumerate() {
+            let id = idx as NodeId;
+            for &a in &n.args {
+                if a >= id {
+                    return Err(DfgError::ForwardReference(id, a));
+                }
+                if self.node(a).is_output() {
+                    return Err(DfgError::OutputUsedAsOperand(id, a));
+                }
+            }
+            match &n.kind {
+                NodeKind::Input { name } => {
+                    if !n.args.is_empty() {
+                        return Err(DfgError::Arity(id, "input takes no operands".into()));
+                    }
+                    if input_names.insert(name.clone(), id).is_some() {
+                        return Err(DfgError::DuplicateInput(name.clone()));
+                    }
+                }
+                NodeKind::Const { .. } => {
+                    if !n.args.is_empty() {
+                        return Err(DfgError::Arity(id, "const takes no operands".into()));
+                    }
+                }
+                NodeKind::Op { .. } => {
+                    if n.args.len() != 2 {
+                        return Err(DfgError::Arity(
+                            id,
+                            format!("op needs 2 operands, has {}", n.args.len()),
+                        ));
+                    }
+                }
+                NodeKind::Output { name } => {
+                    has_output = true;
+                    if n.args.len() != 1 {
+                        return Err(DfgError::Arity(
+                            id,
+                            format!("output needs 1 operand, has {}", n.args.len()),
+                        ));
+                    }
+                    if output_names.insert(name.clone(), id).is_some() {
+                        return Err(DfgError::DuplicateOutput(name.clone()));
+                    }
+                }
+            }
+        }
+        if !has_output {
+            return Err(DfgError::NoOutputs);
+        }
+        Ok(())
+    }
+
+    // -- DOT export -------------------------------------------------------
+
+    /// Graphviz rendering for documentation / debugging.
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n  rankdir=TB;\n", self.name);
+        for (idx, n) in self.nodes.iter().enumerate() {
+            let (label, shape) = match &n.kind {
+                NodeKind::Input { name } => (name.clone(), "invtriangle"),
+                NodeKind::Const { value } => (value.to_string(), "diamond"),
+                NodeKind::Op { op } => (op.name().to_uppercase(), "circle"),
+                NodeKind::Output { name } => (name.clone(), "triangle"),
+            };
+            s.push_str(&format!("  n{idx} [label=\"{label}\", shape={shape}];\n"));
+        }
+        for (idx, n) in self.nodes.iter().enumerate() {
+            for &a in &n.args {
+                s.push_str(&format!("  n{a} -> n{idx};\n"));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn tiny_graph() -> Dfg {
+    // out = (a - b) * (a - b)  — a SUB feeding a SQR.
+    let mut g = Dfg::new("tiny");
+    let a = g.add_input("a");
+    let b = g.add_input("b");
+    let d = g.add_op(OpKind::Sub, a, b);
+    let sq = g.add_op(OpKind::Mul, d, d);
+    g.add_output("out", sq);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = tiny_graph();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.n_ops(), 2);
+        assert_eq!(g.input_names(), vec!["a", "b"]);
+        assert_eq!(g.output_names(), vec!["out"]);
+    }
+
+    #[test]
+    fn op_semantics_wrap() {
+        assert_eq!(OpKind::Add.apply(i32::MAX, 1), i32::MIN);
+        assert_eq!(OpKind::Sub.apply(i32::MIN, 1), i32::MAX);
+        assert_eq!(OpKind::Mul.apply(1 << 20, 1 << 20), 0);
+        assert_eq!(OpKind::Mul.apply(65536, 65537), 65536);
+        assert_eq!(OpKind::And.apply(0b1100, 0b1010), 0b1000);
+        assert_eq!(OpKind::Or.apply(0b1100, 0b1010), 0b1110);
+        assert_eq!(OpKind::Xor.apply(0b1100, 0b1010), 0b0110);
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let mut g = Dfg::new("bad");
+        let a = g.add_input("a");
+        // Hand-craft a node that references a later id.
+        g.nodes.push(Node {
+            kind: NodeKind::Op { op: OpKind::Add },
+            args: vec![a, 99],
+        });
+        g.add_output("o", 1);
+        assert!(matches!(g.validate(), Err(DfgError::ForwardReference(1, 99))));
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let mut g = Dfg::new("dup");
+        g.add_input("x");
+        g.add_input("x");
+        let c = g.add_const(1);
+        g.add_output("o", c);
+        assert_eq!(g.validate(), Err(DfgError::DuplicateInput("x".into())));
+    }
+
+    #[test]
+    fn rejects_output_as_operand() {
+        let mut g = Dfg::new("bad");
+        let a = g.add_input("a");
+        let o = g.add_output("o", a);
+        g.add_output("o2", o);
+        assert!(matches!(g.validate(), Err(DfgError::OutputUsedAsOperand(_, _))));
+    }
+
+    #[test]
+    fn requires_an_output() {
+        let mut g = Dfg::new("none");
+        g.add_input("a");
+        assert_eq!(g.validate(), Err(DfgError::NoOutputs));
+    }
+
+    #[test]
+    fn users_adjacency() {
+        let g = tiny_graph();
+        let users = g.users();
+        assert_eq!(users[0], vec![2]); // a used by sub
+        assert_eq!(users[2], vec![3, 3]); // sub used twice by mul
+        assert_eq!(users[3], vec![4]); // mul used by output
+    }
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let dot = tiny_graph().to_dot();
+        assert!(dot.contains("SUB"));
+        assert!(dot.contains("MUL"));
+        assert!(dot.contains("n2 -> n3;"));
+    }
+
+    #[test]
+    fn opkind_round_trips_names() {
+        for op in OpKind::ALL {
+            assert_eq!(OpKind::from_name(op.name()), Some(op));
+        }
+        assert_eq!(OpKind::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,192 @@
+//! DFG ⇄ JSON interchange.
+//!
+//! This is the contract with the Python compile path
+//! (`python/compile/dfg.py` parses the same format). Schema:
+//!
+//! ```json
+//! {
+//!   "name": "gradient",
+//!   "nodes": [
+//!     {"kind": "input",  "name": "ul"},
+//!     {"kind": "const",  "value": 16},
+//!     {"kind": "op",     "op": "sub", "args": [0, 1]},
+//!     {"kind": "output", "name": "out", "args": [2]}
+//!   ]
+//! }
+//! ```
+
+use super::{Dfg, NodeKind, OpKind};
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+
+/// Serialize a DFG to a JSON value.
+pub fn dfg_to_json(g: &Dfg) -> Json {
+    let nodes: Vec<Json> = g
+        .nodes()
+        .iter()
+        .map(|n| match &n.kind {
+            NodeKind::Input { name } => {
+                json::obj(vec![("kind", json::s("input")), ("name", json::s(name))])
+            }
+            NodeKind::Const { value } => json::obj(vec![
+                ("kind", json::s("const")),
+                ("value", json::i(*value as i64)),
+            ]),
+            NodeKind::Op { op } => json::obj(vec![
+                ("kind", json::s("op")),
+                ("op", json::s(op.name())),
+                ("args", json::ints(n.args.iter().map(|&a| a as i64))),
+            ]),
+            NodeKind::Output { name } => json::obj(vec![
+                ("kind", json::s("output")),
+                ("name", json::s(name)),
+                ("args", json::ints(n.args.iter().map(|&a| a as i64))),
+            ]),
+        })
+        .collect();
+    json::obj(vec![
+        ("name", json::s(&g.name)),
+        ("nodes", Json::Arr(nodes)),
+    ])
+}
+
+/// Deserialize a DFG from a JSON value, validating structure.
+pub fn dfg_from_json(v: &Json) -> Result<Dfg> {
+    let name = v
+        .get("name")
+        .as_str()
+        .context("dfg json: missing 'name'")?;
+    let nodes = v
+        .get("nodes")
+        .as_arr()
+        .context("dfg json: missing 'nodes' array")?;
+    let mut g = Dfg::new(name);
+    for (idx, n) in nodes.iter().enumerate() {
+        let kind = n
+            .get("kind")
+            .as_str()
+            .with_context(|| format!("node {idx}: missing 'kind'"))?;
+        match kind {
+            "input" => {
+                let nm = n
+                    .get("name")
+                    .as_str()
+                    .with_context(|| format!("node {idx}: input missing 'name'"))?;
+                g.add_input(nm);
+            }
+            "const" => {
+                let val = n
+                    .get("value")
+                    .as_i64()
+                    .with_context(|| format!("node {idx}: const missing 'value'"))?;
+                if val < i32::MIN as i64 || val > i32::MAX as i64 {
+                    bail!("node {idx}: const {val} out of i32 range");
+                }
+                g.add_const(val as i32);
+            }
+            "op" => {
+                let opname = n
+                    .get("op")
+                    .as_str()
+                    .with_context(|| format!("node {idx}: op missing 'op'"))?;
+                let op = OpKind::from_name(opname)
+                    .with_context(|| format!("node {idx}: unknown op '{opname}'"))?;
+                let args = parse_args(n, idx, 2)?;
+                g.add_op(op, args[0], args[1]);
+            }
+            "output" => {
+                let nm = n
+                    .get("name")
+                    .as_str()
+                    .with_context(|| format!("node {idx}: output missing 'name'"))?;
+                let args = parse_args(n, idx, 1)?;
+                g.add_output(nm, args[0]);
+            }
+            other => bail!("node {idx}: unknown kind '{other}'"),
+        }
+    }
+    g.validate()
+        .with_context(|| format!("dfg '{name}' failed validation"))?;
+    Ok(g)
+}
+
+fn parse_args(n: &Json, idx: usize, want: usize) -> Result<Vec<u32>> {
+    let args = n
+        .get("args")
+        .as_arr()
+        .with_context(|| format!("node {idx}: missing 'args'"))?;
+    if args.len() != want {
+        bail!("node {idx}: expected {want} args, got {}", args.len());
+    }
+    args.iter()
+        .map(|a| {
+            a.as_i64()
+                .and_then(|v| u32::try_from(v).ok())
+                .with_context(|| format!("node {idx}: bad arg"))
+        })
+        .collect()
+}
+
+/// Parse a DFG from JSON text.
+pub fn dfg_from_str(text: &str) -> Result<Dfg> {
+    let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    dfg_from_json(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{eval, tiny_graph};
+
+    #[test]
+    fn round_trips() {
+        let g = tiny_graph();
+        let j = dfg_to_json(&g);
+        let g2 = dfg_from_json(&j).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(eval(&g2, &[9, 4]), vec![25]);
+    }
+
+    #[test]
+    fn round_trips_via_text() {
+        let g = tiny_graph();
+        let text = dfg_to_json(&g).to_string_pretty();
+        let g2 = dfg_from_str(&text).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = r#"{"name":"x","nodes":[{"kind":"frobnicate"}]}"#;
+        assert!(dfg_from_str(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_arity() {
+        let bad = r#"{"name":"x","nodes":[
+            {"kind":"input","name":"a"},
+            {"kind":"op","op":"add","args":[0]}
+        ]}"#;
+        assert!(dfg_from_str(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_graph() {
+        // Forward reference caught by validate().
+        let bad = r#"{"name":"x","nodes":[
+            {"kind":"input","name":"a"},
+            {"kind":"op","op":"add","args":[0,2]},
+            {"kind":"output","name":"o","args":[1]}
+        ]}"#;
+        assert!(dfg_from_str(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_const() {
+        let bad = r#"{"name":"x","nodes":[
+            {"kind":"const","value":4294967296},
+            {"kind":"output","name":"o","args":[0]}
+        ]}"#;
+        assert!(dfg_from_str(bad).is_err());
+    }
+}

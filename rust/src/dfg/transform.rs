@@ -1,0 +1,245 @@
+//! Classic cleanup transforms applied by the HLL→DFG frontend:
+//! constant folding, common-subexpression elimination, dead-code
+//! elimination, and the `normalize` pipeline combining them to fixpoint.
+//!
+//! All transforms preserve evaluation semantics (checked by tests and by
+//! the property suite in `rust/tests/`).
+
+use super::{Dfg, NodeId, NodeKind, OpKind};
+use std::collections::BTreeMap;
+
+/// Fold ops whose operands are both constants.
+pub fn constant_fold(g: &Dfg) -> Dfg {
+    rebuild(g, |out, node, map| match &node.kind {
+        NodeKind::Op { op } => {
+            let a = map[node.args[0] as usize];
+            let b = map[node.args[1] as usize];
+            let (ca, cb) = (const_value(out, a), const_value(out, b));
+            if let (Some(x), Some(y)) = (ca, cb) {
+                out.add_const(op.apply(x, y))
+            } else {
+                out.add_op(*op, a, b)
+            }
+        }
+        _ => clone_node(out, node, map),
+    })
+}
+
+/// Common-subexpression elimination: identical (op, args) pairs collapse
+/// to one node; commutative ops are canonicalized first. Identical
+/// constants are merged too.
+pub fn cse(g: &Dfg) -> Dfg {
+    let mut seen_ops: BTreeMap<(OpKind, NodeId, NodeId), NodeId> = BTreeMap::new();
+    let mut seen_consts: BTreeMap<i32, NodeId> = BTreeMap::new();
+    rebuild(g, move |out, node, map| match &node.kind {
+        NodeKind::Const { value } => {
+            if let Some(&id) = seen_consts.get(value) {
+                id
+            } else {
+                let id = out.add_const(*value);
+                seen_consts.insert(*value, id);
+                id
+            }
+        }
+        NodeKind::Op { op } => {
+            let (mut a, mut b) = (map[node.args[0] as usize], map[node.args[1] as usize]);
+            if op.commutative() && a > b {
+                std::mem::swap(&mut a, &mut b);
+            }
+            let key = (*op, a, b);
+            if let Some(&id) = seen_ops.get(&key) {
+                id
+            } else {
+                let id = out.add_op(*op, a, b);
+                seen_ops.insert(key, id);
+                id
+            }
+        }
+        _ => clone_node(out, node, map),
+    })
+}
+
+/// Remove nodes not reachable from any output.
+pub fn dce(g: &Dfg) -> Dfg {
+    let mut live = vec![false; g.len()];
+    for id in g.outputs() {
+        mark_live(g, id, &mut live);
+    }
+    // Inputs always survive (they define the kernel signature / FIFO
+    // layout even if unused).
+    for id in g.inputs() {
+        live[id as usize] = true;
+    }
+    let mut out = Dfg::new(&g.name);
+    let mut map = vec![NodeId::MAX; g.len()];
+    for id in g.ids() {
+        if live[id as usize] {
+            let node = g.node(id);
+            map[id as usize] = clone_node(&mut out, node, &map);
+        }
+    }
+    out
+}
+
+/// The frontend pipeline: fold → cse → dce, iterated to fixpoint.
+pub fn normalize(g: &Dfg) -> Dfg {
+    let mut cur = g.clone();
+    for _ in 0..16 {
+        let next = dce(&cse(&constant_fold(&cur)));
+        if next == cur {
+            return next;
+        }
+        cur = next;
+    }
+    cur
+}
+
+fn mark_live(g: &Dfg, id: NodeId, live: &mut [bool]) {
+    if live[id as usize] {
+        return;
+    }
+    live[id as usize] = true;
+    for &a in &g.node(id).args {
+        mark_live(g, a, live);
+    }
+}
+
+fn const_value(g: &Dfg, id: NodeId) -> Option<i32> {
+    match g.node(id).kind {
+        NodeKind::Const { value } => Some(value),
+        _ => None,
+    }
+}
+
+fn clone_node(out: &mut Dfg, node: &super::Node, map: &[NodeId]) -> NodeId {
+    match &node.kind {
+        NodeKind::Input { name } => out.add_input(name),
+        NodeKind::Const { value } => out.add_const(*value),
+        NodeKind::Op { op } => out.add_op(*op, map[node.args[0] as usize], map[node.args[1] as usize]),
+        NodeKind::Output { name } => out.add_output(name, map[node.args[0] as usize]),
+    }
+}
+
+/// Generic rebuild walking nodes in topological order; `f` maps each old
+/// node to a new node id given the old→new id map so far.
+fn rebuild<F>(g: &Dfg, mut f: F) -> Dfg
+where
+    F: FnMut(&mut Dfg, &super::Node, &[NodeId]) -> NodeId,
+{
+    let mut out = Dfg::new(&g.name);
+    let mut map = vec![NodeId::MAX; g.len()];
+    for id in g.ids() {
+        map[id as usize] = f(&mut out, g.node(id), &map);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::eval;
+
+    #[test]
+    fn folds_constant_subtrees() {
+        let mut g = Dfg::new("f");
+        let x = g.add_input("x");
+        let a = g.add_const(3);
+        let b = g.add_const(4);
+        let s = g.add_op(OpKind::Add, a, b); // 7
+        let m = g.add_op(OpKind::Mul, x, s);
+        g.add_output("y", m);
+        let folded = normalize(&g);
+        assert_eq!(folded.n_ops(), 1);
+        assert_eq!(eval(&folded, &[6]), vec![42]);
+    }
+
+    #[test]
+    fn cse_merges_duplicates_including_commuted() {
+        let mut g = Dfg::new("c");
+        let a = g.add_input("a");
+        let b = g.add_input("b");
+        let s1 = g.add_op(OpKind::Add, a, b);
+        let s2 = g.add_op(OpKind::Add, b, a); // same (commutative)
+        let d1 = g.add_op(OpKind::Sub, a, b);
+        let d2 = g.add_op(OpKind::Sub, b, a); // different (non-commutative)
+        let m1 = g.add_op(OpKind::Mul, s1, d1);
+        let m2 = g.add_op(OpKind::Mul, s2, d2);
+        let r = g.add_op(OpKind::Add, m1, m2);
+        g.add_output("y", r);
+        let opt = normalize(&g);
+        // add merges, subs stay distinct: ops = add, sub, sub, mul, mul, add
+        assert_eq!(opt.n_ops(), 6);
+        for ins in [[3, 5], [10, -2], [0, 0]] {
+            assert_eq!(eval(&opt, &ins), eval(&g, &ins));
+        }
+    }
+
+    #[test]
+    fn dce_drops_unused_but_keeps_inputs() {
+        let mut g = Dfg::new("d");
+        let a = g.add_input("a");
+        let b = g.add_input("b");
+        let dead = g.add_op(OpKind::Mul, b, b);
+        let _dead2 = g.add_op(OpKind::Add, dead, a);
+        let live = g.add_op(OpKind::Add, a, a);
+        g.add_output("y", live);
+        let opt = dce(&g);
+        assert_eq!(opt.n_ops(), 1);
+        assert_eq!(opt.inputs().len(), 2); // b survives as signature
+        assert_eq!(eval(&opt, &[5, 100]), vec![10]);
+    }
+
+    #[test]
+    fn normalize_reaches_fixpoint() {
+        let mut g = Dfg::new("fx");
+        let x = g.add_input("x");
+        let c1 = g.add_const(2);
+        let c2 = g.add_const(2);
+        let t = g.add_op(OpKind::Mul, c1, c2); // 4
+        let u = g.add_op(OpKind::Mul, x, t);
+        let v = g.add_op(OpKind::Mul, x, t); // duplicate
+        let w = g.add_op(OpKind::Sub, u, v); // == 0 but not constant-foldable
+        g.add_output("y", w);
+        let n1 = normalize(&g);
+        let n2 = normalize(&n1);
+        assert_eq!(n1, n2);
+        // u==v after CSE, so w = sub(t,t) stays an op (we do not do
+        // algebraic identities), but the duplicated mul is gone.
+        assert_eq!(n1.n_ops(), 2);
+    }
+
+    #[test]
+    fn transforms_preserve_semantics_on_random_graphs() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(99);
+        for case in 0..30 {
+            let g = random_graph(&mut rng, case);
+            let opt = normalize(&g);
+            for trial in 0..10 {
+                let ins: Vec<i32> = (0..g.inputs().len())
+                    .map(|i| (trial * 37 + i as i32 * 11) - 50)
+                    .collect();
+                assert_eq!(eval(&g, &ins), eval(&opt, &ins), "case {case}");
+            }
+        }
+    }
+
+    fn random_graph(rng: &mut crate::util::prng::Rng, case: i32) -> Dfg {
+        let mut g = Dfg::new(&format!("rand{case}"));
+        let n_in = 1 + rng.index(4);
+        let mut vals: Vec<NodeId> = (0..n_in).map(|i| g.add_input(&format!("i{i}"))).collect();
+        for _ in 0..rng.index(3) {
+            vals.push(g.add_const(rng.range_i64(-8, 8) as i32));
+        }
+        let ops = [OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::Xor];
+        for _ in 0..(3 + rng.index(12)) {
+            let a = *rng.choose(&vals);
+            let b = *rng.choose(&vals);
+            let op = *rng.choose(&ops);
+            vals.push(g.add_op(op, a, b));
+        }
+        let last = *vals.last().unwrap();
+        g.add_output("y", last);
+        g
+    }
+}

@@ -1,0 +1,46 @@
+//! AST for the kernel language.
+
+use crate::dfg::OpKind;
+
+/// Expression tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Variable reference (parameter or earlier assignment).
+    Var(String),
+    /// Integer literal.
+    Lit(i64),
+    /// Binary operation.
+    Bin(OpKind, Box<Expr>, Box<Expr>),
+    /// Unary negation (lowered as `0 - e`).
+    Neg(Box<Expr>),
+}
+
+/// One `name = expr;` statement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assign {
+    pub name: String,
+    pub expr: Expr,
+    pub line: u32,
+}
+
+/// A complete kernel definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDef {
+    pub name: String,
+    pub params: Vec<String>,
+    pub body: Vec<Assign>,
+    /// Returned expressions, in order; single return is named `out`,
+    /// multiple are `out0`, `out1`, ...
+    pub returns: Vec<Expr>,
+}
+
+impl Expr {
+    /// Count of binary-op applications (pre-lowering size metric).
+    pub fn op_count(&self) -> usize {
+        match self {
+            Expr::Var(_) | Expr::Lit(_) => 0,
+            Expr::Bin(_, a, b) => 1 + a.op_count() + b.op_count(),
+            Expr::Neg(e) => 1 + e.op_count(),
+        }
+    }
+}

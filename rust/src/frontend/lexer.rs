@@ -1,0 +1,235 @@
+//! Lexer for the kernel description language (`benchmarks/src/*.k`).
+//!
+//! The paper's flow starts from a C description of the compute kernel
+//! (§IV "HLL to DFG Conversion"); our frontend accepts the expression
+//! subset those kernels actually use: straight-line assignments over
+//! `+ - * & | ^`, parentheses, integer literals, and a `return`.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    // keywords
+    Kernel,
+    Return,
+    // punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Comma,
+    Semi,
+    Assign,
+    // operators
+    Plus,
+    Minus,
+    Star,
+    Amp,
+    Pipe,
+    Caret,
+    // atoms
+    Ident(String),
+    Int(i64),
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Kernel => write!(f, "'kernel'"),
+            Tok::Return => write!(f, "'return'"),
+            Tok::LParen => write!(f, "'('"),
+            Tok::RParen => write!(f, "')'"),
+            Tok::LBrace => write!(f, "'{{'"),
+            Tok::RBrace => write!(f, "'}}'"),
+            Tok::Comma => write!(f, "','"),
+            Tok::Semi => write!(f, "';'"),
+            Tok::Assign => write!(f, "'='"),
+            Tok::Plus => write!(f, "'+'"),
+            Tok::Minus => write!(f, "'-'"),
+            Tok::Star => write!(f, "'*'"),
+            Tok::Amp => write!(f, "'&'"),
+            Tok::Pipe => write!(f, "'|'"),
+            Tok::Caret => write!(f, "'^'"),
+            Tok::Ident(s) => write!(f, "identifier '{s}'"),
+            Tok::Int(v) => write!(f, "integer {v}"),
+            Tok::Eof => write!(f, "end of input"),
+        }
+    }
+}
+
+/// A token with its source line (1-based) for error messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("lex error at line {line}: {msg}")]
+pub struct LexError {
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Tokenize a kernel source file. `#` and `//` start line comments.
+pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {
+    let mut out = Vec::new();
+    let bytes = src.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'(' => push1(&mut out, Tok::LParen, line, &mut i),
+            b')' => push1(&mut out, Tok::RParen, line, &mut i),
+            b'{' => push1(&mut out, Tok::LBrace, line, &mut i),
+            b'}' => push1(&mut out, Tok::RBrace, line, &mut i),
+            b',' => push1(&mut out, Tok::Comma, line, &mut i),
+            b';' => push1(&mut out, Tok::Semi, line, &mut i),
+            b'=' => push1(&mut out, Tok::Assign, line, &mut i),
+            b'+' => push1(&mut out, Tok::Plus, line, &mut i),
+            b'-' => push1(&mut out, Tok::Minus, line, &mut i),
+            b'*' => push1(&mut out, Tok::Star, line, &mut i),
+            b'&' => push1(&mut out, Tok::Amp, line, &mut i),
+            b'|' => push1(&mut out, Tok::Pipe, line, &mut i),
+            b'^' => push1(&mut out, Tok::Caret, line, &mut i),
+            b'0'..=b'9' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == b'x' || bytes[i].is_ascii_hexdigit())
+                {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                let v = if let Some(hex) = text.strip_prefix("0x").or_else(|| text.strip_prefix("0X")) {
+                    i64::from_str_radix(hex, 16)
+                } else {
+                    text.parse::<i64>()
+                }
+                .map_err(|_| LexError {
+                    line,
+                    msg: format!("invalid integer literal '{text}'"),
+                })?;
+                out.push(Spanned { tok: Tok::Int(v), line });
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+                    i += 1;
+                }
+                let word = &src[start..i];
+                let tok = match word {
+                    "kernel" => Tok::Kernel,
+                    "return" => Tok::Return,
+                    _ => Tok::Ident(word.to_string()),
+                };
+                out.push(Spanned { tok, line });
+            }
+            other => {
+                return Err(LexError {
+                    line,
+                    msg: format!("unexpected character '{}'", other as char),
+                })
+            }
+        }
+    }
+    out.push(Spanned { tok: Tok::Eof, line });
+    Ok(out)
+}
+
+fn push1(out: &mut Vec<Spanned>, tok: Tok, line: u32, i: &mut usize) {
+    out.push(Spanned { tok, line });
+    *i += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn lexes_kernel_header() {
+        assert_eq!(
+            toks("kernel f(a, b) {"),
+            vec![
+                Tok::Kernel,
+                Tok::Ident("f".into()),
+                Tok::LParen,
+                Tok::Ident("a".into()),
+                Tok::Comma,
+                Tok::Ident("b".into()),
+                Tok::RParen,
+                Tok::LBrace,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_numbers() {
+        assert_eq!(toks("42 0x10"), vec![Tok::Int(42), Tok::Int(16), Tok::Eof]);
+    }
+
+    #[test]
+    fn skips_comments() {
+        let src = "a # comment here\nb // another\nc";
+        assert_eq!(
+            toks(src),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Ident("b".into()),
+                Tok::Ident("c".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn tracks_lines() {
+        let spanned = lex("a\nb\n\nc").unwrap();
+        let lines: Vec<u32> = spanned.iter().map(|s| s.line).collect();
+        assert_eq!(lines, vec![1, 2, 4, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_char() {
+        let err = lex("a $ b").unwrap_err();
+        assert!(err.msg.contains('$'));
+    }
+
+    #[test]
+    fn operators_all_lex() {
+        assert_eq!(
+            toks("+-*&|^=;"),
+            vec![
+                Tok::Plus,
+                Tok::Minus,
+                Tok::Star,
+                Tok::Amp,
+                Tok::Pipe,
+                Tok::Caret,
+                Tok::Assign,
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! AST → DFG lowering.
+//!
+//! Variables resolve lexically (parameters, then prior assignments);
+//! literals become `Const` nodes; `-e` lowers to `0 - e`; the returned
+//! expressions become `Output` nodes (`out` for a single return, `outN`
+//! otherwise). The result is then run through the `normalize` pipeline
+//! (const-fold → CSE → DCE) exactly like the paper's HLL→DFG tool, which
+//! emits a cleaned DFG.
+
+use super::ast::{Expr, KernelDef};
+use super::parser::{parse_kernel, ParseError};
+use crate::dfg::{normalize, Dfg, NodeId, OpKind};
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum LowerError {
+    #[error("{0}")]
+    Parse(#[from] ParseError),
+    #[error("line {line}: unknown variable '{name}'")]
+    UnknownVar { name: String, line: u32 },
+    #[error("line {line}: variable '{name}' reassigned (kernels are single-assignment)")]
+    Reassigned { name: String, line: u32 },
+    #[error("literal {0} out of i32 range")]
+    LitRange(i64),
+}
+
+/// Compile kernel source text to a normalized DFG.
+pub fn compile(src: &str) -> Result<Dfg, LowerError> {
+    let def = parse_kernel(src)?;
+    lower(&def)
+}
+
+/// Compile without the normalize pass (for tests that inspect raw shape).
+pub fn compile_raw(src: &str) -> Result<Dfg, LowerError> {
+    let def = parse_kernel(src)?;
+    lower_raw(&def)
+}
+
+/// Lower a parsed kernel and normalize.
+pub fn lower(def: &KernelDef) -> Result<Dfg, LowerError> {
+    Ok(normalize(&lower_raw(def)?))
+}
+
+fn lower_raw(def: &KernelDef) -> Result<Dfg, LowerError> {
+    let mut g = Dfg::new(&def.name);
+    let mut env: BTreeMap<String, NodeId> = BTreeMap::new();
+    for p in &def.params {
+        let id = g.add_input(p);
+        env.insert(p.clone(), id);
+    }
+    for stmt in &def.body {
+        if env.contains_key(&stmt.name) {
+            return Err(LowerError::Reassigned {
+                name: stmt.name.clone(),
+                line: stmt.line,
+            });
+        }
+        let id = lower_expr(&mut g, &env, &stmt.expr, stmt.line)?;
+        env.insert(stmt.name.clone(), id);
+    }
+    let multi = def.returns.len() > 1;
+    for (i, r) in def.returns.iter().enumerate() {
+        let id = lower_expr(&mut g, &env, r, 0)?;
+        let name = if multi { format!("out{i}") } else { "out".to_string() };
+        g.add_output(&name, id);
+    }
+    debug_assert!(g.validate().is_ok());
+    Ok(g)
+}
+
+fn lower_expr(
+    g: &mut Dfg,
+    env: &BTreeMap<String, NodeId>,
+    e: &Expr,
+    line: u32,
+) -> Result<NodeId, LowerError> {
+    match e {
+        Expr::Var(name) => env.get(name).copied().ok_or_else(|| LowerError::UnknownVar {
+            name: name.clone(),
+            line,
+        }),
+        Expr::Lit(v) => {
+            if *v < i32::MIN as i64 || *v > i32::MAX as i64 {
+                return Err(LowerError::LitRange(*v));
+            }
+            Ok(g.add_const(*v as i32))
+        }
+        Expr::Bin(op, a, b) => {
+            let a = lower_expr(g, env, a, line)?;
+            let b = lower_expr(g, env, b, line)?;
+            Ok(g.add_op(*op, a, b))
+        }
+        Expr::Neg(inner) => {
+            let zero = g.add_const(0);
+            let v = lower_expr(g, env, inner, line)?;
+            Ok(g.add_op(OpKind::Sub, zero, v))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{eval, Characteristics};
+
+    #[test]
+    fn lowers_and_evaluates() {
+        let g = compile("kernel f(a, b) {\n  s = a + b;\n  return s * s;\n}").unwrap();
+        assert_eq!(eval(&g, &[2, 3]), vec![25]);
+    }
+
+    #[test]
+    fn sqr_is_single_node_after_cse() {
+        // x*x must lower to one MUL with both args equal (the paper's SQR).
+        let g = compile("kernel s(x) { return x * x; }").unwrap();
+        assert_eq!(g.n_ops(), 1);
+    }
+
+    #[test]
+    fn cse_collapses_repeated_subexpr() {
+        let g = compile("kernel f(a,b) { return (a+b)*(a+b); }").unwrap();
+        assert_eq!(g.n_ops(), 2); // one add, one mul
+    }
+
+    #[test]
+    fn const_exprs_fold() {
+        let g = compile("kernel f(x) { return x * (2 + 3); }").unwrap();
+        assert_eq!(g.n_ops(), 1);
+        assert_eq!(eval(&g, &[4]), vec![20]);
+    }
+
+    #[test]
+    fn neg_lowers_to_sub_from_zero() {
+        let g = compile("kernel f(x) { return -x; }").unwrap();
+        assert_eq!(eval(&g, &[42]), vec![-42]);
+        assert_eq!(eval(&g, &[i32::MIN]), vec![i32::MIN]); // wrapping
+    }
+
+    #[test]
+    fn unknown_var_reports_line() {
+        let err = compile("kernel f(a) {\n  t = a + 1;\n  u = bogus * 2;\n  return u;\n}")
+            .unwrap_err();
+        assert_eq!(
+            err,
+            LowerError::UnknownVar {
+                name: "bogus".into(),
+                line: 3
+            }
+        );
+    }
+
+    #[test]
+    fn reassignment_rejected() {
+        let err = compile("kernel f(a) {\n  t = a;\n  t = a + 1;\n  return t;\n}").unwrap_err();
+        assert!(matches!(err, LowerError::Reassigned { .. }));
+    }
+
+    #[test]
+    fn chebyshev_shape_matches_paper() {
+        // The reconstructed chebyshev kernel: 16x^5 - 20x^3 + 5x as a
+        // 7-op chain (Table II row 1: 1/1 io, 12 edges, 7 ops, depth 7).
+        let src = "kernel chebyshev(x) {
+            h1 = x * 16;
+            h2 = h1 * x;
+            h3 = h2 - 20;
+            h4 = h3 * x;
+            h5 = h4 * x;
+            h6 = h5 + 5;
+            return h6 * x;
+        }";
+        let g = compile(src).unwrap();
+        let c = Characteristics::of(&g);
+        assert_eq!(c.n_inputs, 1);
+        assert_eq!(c.n_outputs, 1);
+        assert_eq!(c.n_ops, 7);
+        assert_eq!(c.depth, 7);
+        assert_eq!(c.n_edges, 12);
+        assert!((c.avg_parallelism - 1.0).abs() < 1e-9);
+        // Semantic check: 16x^5 - 20x^3 + 5x at small x.
+        for x in [-3i32, -1, 0, 1, 2, 5] {
+            let expect = 16 * x.pow(5) - 20 * x.pow(3) + 5 * x;
+            assert_eq!(eval(&g, &[x]), vec![expect]);
+        }
+    }
+
+    #[test]
+    fn multi_return_names() {
+        let g = compile("kernel f(a,b) { return a+b, a-b; }").unwrap();
+        assert_eq!(g.output_names(), vec!["out0", "out1"]);
+    }
+}

@@ -1,0 +1,13 @@
+//! HLL → DFG frontend (the first step of the paper's §IV mapping flow).
+//!
+//! Accepts the C-expression subset the benchmark kernels use (see
+//! `benchmarks/src/*.k`), parses to an AST, lowers to the [`crate::dfg`]
+//! IR and normalizes (constant folding, CSE, DCE).
+
+pub mod ast;
+pub mod lexer;
+pub mod lower;
+pub mod parser;
+
+pub use lower::{compile, compile_raw, LowerError};
+pub use parser::{parse_kernel, ParseError};

@@ -1,0 +1,280 @@
+//! Recursive-descent parser for the kernel language.
+//!
+//! Grammar:
+//! ```text
+//! file    := kernel
+//! kernel  := 'kernel' IDENT '(' params? ')' '{' stmt* return '}'
+//! params  := IDENT (',' IDENT)*
+//! stmt    := IDENT '=' expr ';'
+//! return  := 'return' expr (',' expr)* ';'
+//! expr    := or
+//! or      := xor ('|' xor)*
+//! xor     := and ('^' and)*
+//! and     := addsub ('&' addsub)*
+//! addsub  := mul (('+'|'-') mul)*
+//! mul     := unary ('*' unary)*
+//! unary   := '-' unary | atom
+//! atom    := IDENT | INT | '(' expr ')'
+//! ```
+
+use super::ast::{Assign, Expr, KernelDef};
+use super::lexer::{lex, Spanned, Tok};
+use crate::dfg::OpKind;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Parse one kernel definition from source text.
+pub fn parse_kernel(src: &str) -> Result<KernelDef, ParseError> {
+    let toks = lex(src).map_err(|e| ParseError {
+        line: e.line,
+        msg: e.msg,
+    })?;
+    let mut p = Parser { toks, pos: 0 };
+    let k = p.kernel()?;
+    p.expect(Tok::Eof)?;
+    Ok(k)
+}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn line(&self) -> u32 {
+        self.toks[self.pos].line
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: String) -> ParseError {
+        ParseError {
+            line: self.line(),
+            msg,
+        }
+    }
+
+    fn expect(&mut self, want: Tok) -> Result<(), ParseError> {
+        if *self.peek() == want {
+            self.bump();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {want}, found {}", self.peek())))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, ParseError> {
+        let line = self.line();
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(ParseError {
+                line,
+                msg: format!("expected identifier, found {other}"),
+            }),
+        }
+    }
+
+    fn kernel(&mut self) -> Result<KernelDef, ParseError> {
+        self.expect(Tok::Kernel)?;
+        let name = self.ident()?;
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                params.push(self.ident()?);
+                if *self.peek() == Tok::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::LBrace)?;
+        let mut body = Vec::new();
+        let returns = loop {
+            match self.peek() {
+                Tok::Return => {
+                    self.bump();
+                    let mut rets = vec![self.expr()?];
+                    while *self.peek() == Tok::Comma {
+                        self.bump();
+                        rets.push(self.expr()?);
+                    }
+                    self.expect(Tok::Semi)?;
+                    break rets;
+                }
+                Tok::Ident(_) => {
+                    let line = self.line();
+                    let name = self.ident()?;
+                    self.expect(Tok::Assign)?;
+                    let expr = self.expr()?;
+                    self.expect(Tok::Semi)?;
+                    body.push(Assign { name, expr, line });
+                }
+                other => return Err(self.err(format!("expected statement or return, found {other}"))),
+            }
+        };
+        self.expect(Tok::RBrace)?;
+        Ok(KernelDef {
+            name,
+            params,
+            body,
+            returns,
+        })
+    }
+
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        self.binary(0)
+    }
+
+    /// Precedence-climbing over the binary levels.
+    fn binary(&mut self, level: usize) -> Result<Expr, ParseError> {
+        const LEVELS: &[&[(Tok, OpKind)]] = &[
+            &[(Tok::Pipe, OpKind::Or)],
+            &[(Tok::Caret, OpKind::Xor)],
+            &[(Tok::Amp, OpKind::And)],
+            &[(Tok::Plus, OpKind::Add), (Tok::Minus, OpKind::Sub)],
+            &[(Tok::Star, OpKind::Mul)],
+        ];
+        if level == LEVELS.len() {
+            return self.unary();
+        }
+        let mut lhs = self.binary(level + 1)?;
+        loop {
+            let op = LEVELS[level]
+                .iter()
+                .find(|(t, _)| t == self.peek())
+                .map(|(_, op)| *op);
+            match op {
+                Some(op) => {
+                    self.bump();
+                    let rhs = self.binary(level + 1)?;
+                    lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+                }
+                None => return Ok(lhs),
+            }
+        }
+    }
+
+    fn unary(&mut self) -> Result<Expr, ParseError> {
+        if *self.peek() == Tok::Minus {
+            self.bump();
+            return Ok(Expr::Neg(Box::new(self.unary()?)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr, ParseError> {
+        let line = self.line();
+        match self.bump() {
+            Tok::Ident(s) => Ok(Expr::Var(s)),
+            Tok::Int(v) => Ok(Expr::Lit(v)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            other => Err(ParseError {
+                line,
+                msg: format!("expected expression, found {other}"),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_kernel() {
+        let k = parse_kernel("kernel f(a, b) { return a + b; }").unwrap();
+        assert_eq!(k.name, "f");
+        assert_eq!(k.params, vec!["a", "b"]);
+        assert!(k.body.is_empty());
+        assert_eq!(k.returns.len(), 1);
+    }
+
+    #[test]
+    fn precedence_mul_over_add() {
+        let k = parse_kernel("kernel f(a,b,c) { return a + b * c; }").unwrap();
+        match &k.returns[0] {
+            Expr::Bin(OpKind::Add, _, rhs) => {
+                assert!(matches!(**rhs, Expr::Bin(OpKind::Mul, _, _)));
+            }
+            other => panic!("wrong shape: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn precedence_bitops_lowest() {
+        let k = parse_kernel("kernel f(a,b,c) { return a | b + c; }").unwrap();
+        match &k.returns[0] {
+            Expr::Bin(OpKind::Or, _, rhs) => {
+                assert!(matches!(**rhs, Expr::Bin(OpKind::Add, _, _)));
+            }
+            other => panic!("wrong shape: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parens_override() {
+        let k = parse_kernel("kernel f(a,b,c) { return (a + b) * c; }").unwrap();
+        match &k.returns[0] {
+            Expr::Bin(OpKind::Mul, lhs, _) => {
+                assert!(matches!(**lhs, Expr::Bin(OpKind::Add, _, _)));
+            }
+            other => panic!("wrong shape: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn statements_and_multi_return() {
+        let src = "kernel g(x) {\n  t = x * x;\n  u = t + 1;\n  return t, u;\n}";
+        let k = parse_kernel(src).unwrap();
+        assert_eq!(k.body.len(), 2);
+        assert_eq!(k.body[0].name, "t");
+        assert_eq!(k.body[1].line, 3);
+        assert_eq!(k.returns.len(), 2);
+    }
+
+    #[test]
+    fn unary_minus() {
+        let k = parse_kernel("kernel f(x) { return -x * 3; }").unwrap();
+        // -x binds tighter than *: (-x) * 3
+        assert!(matches!(&k.returns[0], Expr::Bin(OpKind::Mul, lhs, _)
+            if matches!(**lhs, Expr::Neg(_))));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = parse_kernel("kernel f(a) {\n  t = ;\n  return t;\n}").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_trailing_tokens() {
+        assert!(parse_kernel("kernel f(a) { return a; } extra").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_return() {
+        assert!(parse_kernel("kernel f(a) { t = a + 1; }").is_err());
+    }
+}

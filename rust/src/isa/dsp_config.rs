@@ -1,0 +1,191 @@
+//! DSP48E1 configuration word (the 21-bit field of the FU instruction).
+//!
+//! The paper's FU stores the DSP block's control inputs directly in the
+//! instruction ("as instruction decoders are not used the instruction
+//! format must explicitly specify ... the modes of operation of the DSP
+//! block directly"). We model the real DSP48E1 control groups:
+//!
+//! | bits    | field      | meaning                                   |
+//! |---------|------------|-------------------------------------------|
+//! | [6:0]   | OPMODE     | X/Y/Z multiplexer select                  |
+//! | [10:7]  | ALUMODE    | ALU function (add/sub/logic)              |
+//! | [15:11] | INMODE     | A/B input register path select            |
+//! | [18:16] | CARRYINSEL | carry source                              |
+//! | [19]    | USE_MULT   | multiplier path active                    |
+//! | [20]    | reserved   |                                           |
+//!
+//! The concrete encodings below follow the DSP48E1 user guide's
+//! conventions (X=M/Y=M for multiply, Z=C with ALUMODE add/sub for the
+//! adder path, logic-unit ALUMODE patterns for AND/OR/XOR); they are the
+//! single source of truth shared by the encoder, the decoder and the
+//! cycle-accurate DSP model.
+
+use crate::dfg::OpKind;
+use crate::util::bits::{get_field, set_field};
+
+/// Decoded DSP48E1 control word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DspConfig {
+    pub opmode: u8,      // 7 bits
+    pub alumode: u8,     // 4 bits
+    pub inmode: u8,      // 5 bits
+    pub carryinsel: u8,  // 3 bits
+    pub use_mult: bool,
+}
+
+/// OPMODE with X=A:B, Y=0, Z=C — the adder/logic path.
+pub const OPMODE_ADDPATH: u8 = 0b011_00_11;
+/// OPMODE with X=M, Y=M, Z=0 — the multiplier path.
+pub const OPMODE_MULPATH: u8 = 0b000_01_01;
+/// OPMODE with X=0, Y=0, Z=C — route C straight through (bypass).
+pub const OPMODE_PASS_C: u8 = 0b011_00_00;
+/// OPMODE variant with Y = all-ones (used by the OR encoding).
+pub const OPMODE_ADDPATH_YONES: u8 = 0b011_10_11;
+
+/// ALUMODE: Z + X + Y + CIN.
+pub const ALUMODE_ADD: u8 = 0b0000;
+/// ALUMODE: Z - (X + Y + CIN).
+pub const ALUMODE_SUB: u8 = 0b0011;
+/// ALUMODE logic: X XOR Z.
+pub const ALUMODE_XOR: u8 = 0b0100;
+/// ALUMODE logic: X AND Z.
+pub const ALUMODE_AND: u8 = 0b1100;
+/// ALUMODE logic: X OR Z (AND pattern with Y=all-ones per UG479 table).
+pub const ALUMODE_OR: u8 = 0b1100;
+
+impl DspConfig {
+    /// The configuration driving the DSP for an arithmetic op.
+    ///
+    /// Operand routing convention (fixed by the FU datapath, Fig. 3):
+    /// `rs1` drives the C port, `rs2` drives A:B (and the multiplier's
+    /// A×B path uses both register file read ports).
+    pub fn for_op(op: OpKind) -> DspConfig {
+        let (opmode, alumode, use_mult) = match op {
+            OpKind::Add => (OPMODE_ADDPATH, ALUMODE_ADD, false),
+            OpKind::Sub => (OPMODE_ADDPATH, ALUMODE_SUB, false),
+            OpKind::Mul => (OPMODE_MULPATH, ALUMODE_ADD, true),
+            OpKind::And => (OPMODE_ADDPATH, ALUMODE_AND, false),
+            OpKind::Or => (OPMODE_ADDPATH_YONES, ALUMODE_OR, false),
+            OpKind::Xor => (OPMODE_ADDPATH, ALUMODE_XOR, false),
+        };
+        DspConfig {
+            opmode,
+            alumode,
+            inmode: 0,
+            carryinsel: 0,
+            use_mult,
+        }
+    }
+
+    /// Bypass configuration: route the C register straight to P.
+    pub fn bypass() -> DspConfig {
+        DspConfig {
+            opmode: OPMODE_PASS_C,
+            alumode: ALUMODE_ADD,
+            inmode: 0,
+            carryinsel: 0,
+            use_mult: false,
+        }
+    }
+
+    /// Recover the op this configuration computes (`None` == bypass,
+    /// `Err`-like `None` for malformed words is handled by the caller).
+    pub fn classify(&self) -> Option<Option<OpKind>> {
+        if self.use_mult {
+            return if self.opmode == OPMODE_MULPATH && self.alumode == ALUMODE_ADD {
+                Some(Some(OpKind::Mul))
+            } else {
+                None
+            };
+        }
+        match (self.opmode, self.alumode) {
+            (OPMODE_PASS_C, ALUMODE_ADD) => Some(None),
+            (OPMODE_ADDPATH, ALUMODE_ADD) => Some(Some(OpKind::Add)),
+            (OPMODE_ADDPATH, ALUMODE_SUB) => Some(Some(OpKind::Sub)),
+            (OPMODE_ADDPATH, ALUMODE_AND) => Some(Some(OpKind::And)),
+            (OPMODE_ADDPATH_YONES, ALUMODE_OR) => Some(Some(OpKind::Or)),
+            (OPMODE_ADDPATH, ALUMODE_XOR) => Some(Some(OpKind::Xor)),
+            _ => None,
+        }
+    }
+
+    /// Pack into the instruction's 21-bit field.
+    pub fn encode(&self) -> u32 {
+        let mut w = 0u64;
+        w = set_field(w, 0, 7, self.opmode as u64);
+        w = set_field(w, 7, 4, self.alumode as u64);
+        w = set_field(w, 11, 5, self.inmode as u64);
+        w = set_field(w, 16, 3, self.carryinsel as u64);
+        w = set_field(w, 19, 1, self.use_mult as u64);
+        w as u32
+    }
+
+    /// Unpack from the 21-bit field.
+    pub fn decode(bits: u32) -> DspConfig {
+        let w = bits as u64;
+        DspConfig {
+            opmode: get_field(w, 0, 7) as u8,
+            alumode: get_field(w, 7, 4) as u8,
+            inmode: get_field(w, 11, 5) as u8,
+            carryinsel: get_field(w, 16, 3) as u8,
+            use_mult: get_field(w, 19, 1) != 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_round_trip_all_ops() {
+        for op in OpKind::ALL {
+            let cfg = DspConfig::for_op(op);
+            let bits = cfg.encode();
+            assert!(bits < (1 << 21), "{op}: config exceeds 21 bits");
+            assert_eq!(DspConfig::decode(bits), cfg, "{op}");
+            assert_eq!(cfg.classify(), Some(Some(op)), "{op}");
+        }
+    }
+
+    #[test]
+    fn bypass_round_trips() {
+        let cfg = DspConfig::bypass();
+        assert_eq!(DspConfig::decode(cfg.encode()), cfg);
+        assert_eq!(cfg.classify(), Some(None));
+    }
+
+    #[test]
+    fn distinct_ops_have_distinct_encodings() {
+        let mut seen = std::collections::BTreeSet::new();
+        for op in OpKind::ALL {
+            assert!(seen.insert(DspConfig::for_op(op).encode()), "{op} collides");
+        }
+        assert!(seen.insert(DspConfig::bypass().encode()), "bypass collides");
+    }
+
+    #[test]
+    fn malformed_config_classifies_none() {
+        let bogus = DspConfig {
+            opmode: 0b1111111,
+            alumode: 0b1010,
+            inmode: 0,
+            carryinsel: 0,
+            use_mult: false,
+        };
+        assert_eq!(bogus.classify(), None);
+    }
+
+    #[test]
+    fn mult_path_flag_checked() {
+        // use_mult with an adder opmode is malformed.
+        let bogus = DspConfig {
+            opmode: OPMODE_ADDPATH,
+            alumode: ALUMODE_ADD,
+            inmode: 0,
+            carryinsel: 0,
+            use_mult: true,
+        };
+        assert_eq!(bogus.classify(), None);
+    }
+}

@@ -1,0 +1,182 @@
+//! The 32-bit FU instruction.
+//!
+//! Layout (paper §III.A: "A 32-bit instruction has two parts, the 21-bit
+//! DSP block configuration and two 5-bit source operand addresses"):
+//!
+//! | bits    | field                                   |
+//! |---------|-----------------------------------------|
+//! | [20:0]  | DSP48E1 configuration ([`DspConfig`])   |
+//! | [25:21] | `rs1` — register file read address 1    |
+//! | [30:26] | `rs2` — register file read address 2    |
+//! | [31]    | spare (must be 0)                       |
+//!
+//! Two instruction kinds exist (paper: "arithmetic or data bypass");
+//! the kind is implied by the DSP configuration, not a separate field —
+//! a bypass is the `Z=C` pass-through configuration.
+
+use super::dsp_config::DspConfig;
+use crate::dfg::OpKind;
+use crate::util::bits::{get_field, set_field};
+
+/// Decoded FU instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuInstr {
+    /// Compute `op(RF[rs1], RF[rs2])` and emit the result downstream.
+    Arith { op: OpKind, rs1: u8, rs2: u8 },
+    /// Forward `RF[rs]` downstream unchanged.
+    Bypass { rs: u8 },
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum InstrError {
+    #[error("register address {0} out of range (RF has 32 entries)")]
+    RegRange(u8),
+    #[error("word {0:#010x}: unrecognized DSP configuration")]
+    BadConfig(u32),
+    #[error("word {0:#010x}: spare bit set")]
+    SpareBit(u32),
+}
+
+impl FuInstr {
+    /// The DSP configuration this instruction drives.
+    pub fn dsp_config(&self) -> DspConfig {
+        match self {
+            FuInstr::Arith { op, .. } => DspConfig::for_op(*op),
+            FuInstr::Bypass { .. } => DspConfig::bypass(),
+        }
+    }
+
+    /// Register file addresses read by this instruction.
+    pub fn reads(&self) -> (u8, Option<u8>) {
+        match self {
+            FuInstr::Arith { rs1, rs2, .. } => (*rs1, Some(*rs2)),
+            FuInstr::Bypass { rs } => (*rs, None),
+        }
+    }
+
+    pub fn is_bypass(&self) -> bool {
+        matches!(self, FuInstr::Bypass { .. })
+    }
+
+    /// Encode to the 32-bit word.
+    pub fn encode(&self) -> Result<u32, InstrError> {
+        let (cfg, rs1, rs2) = match self {
+            FuInstr::Arith { op, rs1, rs2 } => (DspConfig::for_op(*op), *rs1, *rs2),
+            FuInstr::Bypass { rs } => (DspConfig::bypass(), *rs, 0),
+        };
+        for r in [rs1, rs2] {
+            if r >= 32 {
+                return Err(InstrError::RegRange(r));
+            }
+        }
+        let mut w = 0u64;
+        w = set_field(w, 0, 21, cfg.encode() as u64);
+        w = set_field(w, 21, 5, rs1 as u64);
+        w = set_field(w, 26, 5, rs2 as u64);
+        Ok(w as u32)
+    }
+
+    /// Decode from the 32-bit word.
+    pub fn decode(word: u32) -> Result<FuInstr, InstrError> {
+        let w = word as u64;
+        if get_field(w, 31, 1) != 0 {
+            return Err(InstrError::SpareBit(word));
+        }
+        let cfg = DspConfig::decode(get_field(w, 0, 21) as u32);
+        let rs1 = get_field(w, 21, 5) as u8;
+        let rs2 = get_field(w, 26, 5) as u8;
+        match cfg.classify() {
+            Some(Some(op)) => Ok(FuInstr::Arith { op, rs1, rs2 }),
+            Some(None) => Ok(FuInstr::Bypass { rs: rs1 }),
+            None => Err(InstrError::BadConfig(word)),
+        }
+    }
+
+    /// Human-readable form matching the paper's Table I notation.
+    pub fn mnemonic(&self) -> String {
+        match self {
+            FuInstr::Arith { op, rs1, rs2 } => {
+                if op == &OpKind::Mul && rs1 == rs2 {
+                    format!("SQR (R{rs1} R{rs2})")
+                } else {
+                    format!("{} (R{rs1} R{rs2})", op.name().to_uppercase())
+                }
+            }
+            FuInstr::Bypass { rs } => format!("BYP (R{rs})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arith_round_trips_all_ops_and_regs() {
+        for op in OpKind::ALL {
+            for (rs1, rs2) in [(0u8, 0u8), (31, 31), (5, 17), (31, 0)] {
+                let i = FuInstr::Arith { op, rs1, rs2 };
+                let w = i.encode().unwrap();
+                assert_eq!(FuInstr::decode(w).unwrap(), i);
+            }
+        }
+    }
+
+    #[test]
+    fn bypass_round_trips() {
+        for rs in [0u8, 1, 31] {
+            let i = FuInstr::Bypass { rs };
+            assert_eq!(FuInstr::decode(i.encode().unwrap()).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_registers() {
+        let i = FuInstr::Arith {
+            op: OpKind::Add,
+            rs1: 32,
+            rs2: 0,
+        };
+        assert_eq!(i.encode(), Err(InstrError::RegRange(32)));
+    }
+
+    #[test]
+    fn rejects_spare_bit() {
+        assert_eq!(FuInstr::decode(0x8000_0000), Err(InstrError::SpareBit(0x8000_0000)));
+    }
+
+    #[test]
+    fn rejects_garbage_config() {
+        // ALUMODE 0b1010 with adder opmode is not a valid encoding.
+        let garbage = 0b0101_0_0110011u32 << 0 | (0b1010 << 7);
+        assert!(matches!(FuInstr::decode(garbage), Err(InstrError::BadConfig(_))));
+    }
+
+    #[test]
+    fn mnemonics_match_paper_style() {
+        let sub = FuInstr::Arith {
+            op: OpKind::Sub,
+            rs1: 0,
+            rs2: 2,
+        };
+        assert_eq!(sub.mnemonic(), "SUB (R0 R2)");
+        let sqr = FuInstr::Arith {
+            op: OpKind::Mul,
+            rs1: 1,
+            rs2: 1,
+        };
+        assert_eq!(sqr.mnemonic(), "SQR (R1 R1)");
+        assert_eq!(FuInstr::Bypass { rs: 3 }.mnemonic(), "BYP (R3)");
+    }
+
+    #[test]
+    fn exhaustive_decode_never_panics() {
+        // Sweep a structured sample of the 32-bit space.
+        for hi in 0..64u32 {
+            for lo in 0..64u32 {
+                let w = (hi << 26) | (lo << 15) | (hi * 31 + lo);
+                let _ = FuInstr::decode(w); // Ok or Err, never panic
+            }
+        }
+    }
+}

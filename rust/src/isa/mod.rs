@@ -1,0 +1,10 @@
+//! The overlay ISA: DSP48E1 configuration words, 32-bit FU instructions
+//! and the 40-bit context stream (paper §III.A).
+
+pub mod context;
+pub mod dsp_config;
+pub mod instr;
+
+pub use context::{ContextError, ContextImage, ContextWord, FuContext};
+pub use dsp_config::DspConfig;
+pub use instr::{FuInstr, InstrError};

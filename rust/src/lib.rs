@@ -1,0 +1,40 @@
+//! # tmfu-overlay
+//!
+//! Full-system reproduction of *"An Area-Efficient FPGA Overlay using DSP
+//! Block based Time-multiplexed Functional Units"* (2016): a linear
+//! pipeline of time-multiplexed, DSP48E1-based functional units plus the
+//! scheduling methodology that maps feed-forward data-flow graphs onto it.
+//!
+//! The crate contains (see `DESIGN.md` for the full inventory):
+//!
+//! * the **compiler** — kernel language frontend, DFG IR, ASAP stage
+//!   scheduler, 32-bit FU instruction / 40-bit context encoding
+//!   ([`frontend`], [`dfg`], [`sched`], [`isa`]);
+//! * the **cycle-accurate overlay simulator** — DSP48E1 model, FU
+//!   microarchitecture, linear pipeline, FIFOs, multi-pipeline overlay
+//!   ([`arch`], [`sim`]);
+//! * **resource/frequency models** calibrated to the paper's synthesis
+//!   results, plus the SCFU-SCN / Vivado-HLS / related-work baselines
+//!   ([`resources`], [`baseline`]);
+//! * the **runtime** — PJRT loader executing the AOT-compiled (JAX +
+//!   Pallas) kernels on the data path, and the serving coordinator
+//!   ([`runtime`], [`coordinator`]);
+//! * **reporting** — regeneration of every table/figure in the paper
+//!   ([`report`], `rust/benches/`).
+
+pub mod arch;
+pub mod baseline;
+pub mod bench_suite;
+pub mod coordinator;
+pub mod dfg;
+pub mod frontend;
+pub mod isa;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,200 @@
+//! `tmfu` — CLI for the TMFU overlay reproduction.
+//!
+//! Subcommands cover the paper's complete flow: kernel compilation
+//! (`compile`, `export-dfg`), scheduling and inspection (`schedule`,
+//! `table1`, `dot`), cycle-accurate simulation (`simulate`), reports
+//! (`table2`, `table3`, `fig5`, `fig6`, `ctx-switch`, `resources`),
+//! and the serving runtime (`serve`, requires `make artifacts`).
+
+use std::process::ExitCode;
+use tmfu_overlay::util::cli::Command;
+use tmfu_overlay::{bench_suite, dfg, frontend, report, sched};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command::new("list", "list the benchmark kernels"),
+        Command::new("compile", "compile a kernel source file to a DFG")
+            .positional("file", "path to a .k kernel source")
+            .flag("dot", "emit graphviz instead of JSON"),
+        Command::new("export-dfg", "write DFG+schedule JSON for all benchmarks")
+            .opt("out-dir", "output directory", Some("benchmarks/dfg")),
+        Command::new("schedule", "print the stage schedule for a benchmark")
+            .positional("kernel", "benchmark name (see 'list')"),
+        Command::new("table1", "print the cycle-by-cycle schedule table")
+            .positional("kernel", "benchmark name")
+            .opt("cycles", "cycles to print", Some("32")),
+        Command::new("dot", "emit the DFG in graphviz format")
+            .positional("kernel", "benchmark name"),
+        Command::new("simulate", "run the cycle-accurate simulator")
+            .positional("kernel", "benchmark name")
+            .opt("packets", "number of data packets", Some("16"))
+            .opt("seed", "input PRNG seed", Some("7")),
+        Command::new("table2", "reproduce Table II (DFG characteristics)"),
+        Command::new("table3", "reproduce Table III (area & throughput)"),
+        Command::new("fig5", "reproduce Fig. 5 (FU counts)"),
+        Command::new("fig6", "reproduce Fig. 6 (area comparison)"),
+        Command::new("ctx-switch", "reproduce the context-switch comparison"),
+        Command::new("resources", "reproduce the §III.A resource results"),
+        Command::new("serve", "run the serving coordinator on AOT artifacts")
+            .opt("artifacts", "artifacts directory", Some("artifacts"))
+            .opt("pipelines", "overlay pipelines (workers)", Some("2"))
+            .opt("requests", "requests to serve", Some("200"))
+            .opt("batch", "max batch size", Some("16"))
+            .opt("seed", "workload seed", Some("42")),
+    ]
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let cmds = commands();
+    let name = args.first().map(String::as_str).unwrap_or("");
+    if name.is_empty() || name == "--help" || name == "-h" || name == "help" {
+        let mut s = String::from(
+            "tmfu — DSP-block time-multiplexed FPGA overlay (reproduction)\n\nCOMMANDS:\n",
+        );
+        for c in &cmds {
+            s.push_str(&format!("  {:<12} {}\n", c.name(), c.about()));
+        }
+        s.push_str("\nRun 'tmfu <command> --help' for details.");
+        println!("{s}");
+        return Ok(());
+    }
+    let cmd = cmds
+        .iter()
+        .find(|c| c.name() == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown command '{name}' (try 'tmfu help')"))?;
+    let m = cmd.parse(&args[1..]).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    match name {
+        "list" => {
+            for n in bench_suite::all_names() {
+                let g = bench_suite::load(n)?;
+                let c = dfg::Characteristics::of(&g);
+                println!(
+                    "{n:<12} {} in / {} out, {} ops, depth {}",
+                    c.n_inputs, c.n_outputs, c.n_ops, c.depth
+                );
+            }
+        }
+        "compile" => {
+            let path = m.get_pos("file").unwrap();
+            let src = std::fs::read_to_string(path)?;
+            let g = frontend::compile(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if m.flag("dot") {
+                println!("{}", g.to_dot());
+            } else {
+                let p = sched::Program::schedule(&g)?;
+                println!("{}", sched::program_to_json(&g, &p).to_string_pretty());
+            }
+        }
+        "export-dfg" => {
+            let dir = m.get("out-dir").unwrap();
+            std::fs::create_dir_all(dir)?;
+            for n in bench_suite::all_names() {
+                let g = bench_suite::load(n)?;
+                let p = sched::Program::schedule(&g)?;
+                let path = format!("{dir}/{n}.json");
+                std::fs::write(&path, sched::program_to_json(&g, &p).to_string_pretty())?;
+                println!("wrote {path}");
+            }
+        }
+        "schedule" => {
+            let kernel = m.get_pos("kernel").unwrap();
+            let g = bench_suite::load(kernel)?;
+            let p = sched::Program::schedule(&g)?;
+            let t = sched::Timing::of(&p);
+            println!(
+                "kernel {} — {} stages, II = {}, latency = {} cycles",
+                kernel,
+                p.n_stages(),
+                t.ii,
+                t.latency()
+            );
+            for st in &p.stages {
+                println!(
+                    "  stage {}: {} loads, {} ops, {} bypasses, {} consts",
+                    st.stage,
+                    st.n_loads(),
+                    st.ops.len(),
+                    st.bypasses.len(),
+                    st.consts.len()
+                );
+                for ins in &st.instrs {
+                    println!("      {}", ins.mnemonic());
+                }
+            }
+            let img = p.context_image()?;
+            println!(
+                "context: {} instruction words = {} B (paper accounting), {} B with RF consts",
+                img.n_instrs(),
+                img.size_bytes_instr_only(),
+                img.size_bytes_total().map_err(|e| anyhow::anyhow!("{e}"))?
+            );
+        }
+        "table1" => {
+            let kernel = m.get_pos("kernel").unwrap();
+            let cycles = m
+                .get_usize("cycles")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .unwrap();
+            let g = bench_suite::load(kernel)?;
+            let p = sched::Program::schedule(&g)?;
+            let t = sched::ScheduleTable::generate(&p, cycles);
+            print!("{}", t.render());
+        }
+        "dot" => {
+            let kernel = m.get_pos("kernel").unwrap();
+            println!("{}", bench_suite::load(kernel)?.to_dot());
+        }
+        "simulate" => {
+            let kernel = m.get_pos("kernel").unwrap();
+            let n = m
+                .get_usize("packets")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .unwrap();
+            let seed = m
+                .get_usize("seed")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .unwrap() as u64;
+            report::simulate::run_and_print(kernel, n, seed)?;
+        }
+        "table2" => print!("{}", report::table2::render()?),
+        "table3" => print!("{}", report::table3::render()?),
+        "fig5" => print!("{}", report::fig5::render()?),
+        "fig6" => print!("{}", report::fig6::render()?),
+        "ctx-switch" => print!("{}", report::ctx_switch::render()?),
+        "resources" => print!("{}", report::resources_report::render()),
+        "serve" => {
+            let dir = m.get("artifacts").unwrap().to_string();
+            let pipelines = m
+                .get_usize("pipelines")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .unwrap();
+            let requests = m
+                .get_usize("requests")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .unwrap();
+            let batch = m
+                .get_usize("batch")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .unwrap();
+            let seed = m
+                .get_usize("seed")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .unwrap() as u64;
+            tmfu_overlay::coordinator::serve_demo(&dir, pipelines, requests, batch, seed)?;
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Context-switch comparison (§V, final paragraph): proposed overlay
+//! (local 40-bit context stream) vs SCFU-SCN (external-memory
+//! configuration) vs HLS partial reconfiguration.
+
+use crate::arch::config_port;
+use crate::baseline::{hls, scfu};
+use crate::bench_suite::{self, constants::CONTEXT_WORD_BITS};
+use crate::resources::SYSTEM_CLOCK_MHZ;
+use crate::sched::Program;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    pub context_bytes_instr: usize,
+    pub context_bytes_total: usize,
+    pub switch_us: f64,
+}
+
+pub fn measure() -> crate::Result<Vec<Row>> {
+    let mut out = Vec::new();
+    for name in bench_suite::table2_names() {
+        let g = bench_suite::load(name)?;
+        let p = Program::schedule(&g)?;
+        let img = p.context_image()?;
+        let loaded = config_port::load_image(&img)?;
+        out.push(Row {
+            name: name.to_string(),
+            context_bytes_instr: img.size_bytes_instr_only(),
+            context_bytes_total: img.size_bytes_total().map_err(|e| anyhow::anyhow!("{e}"))?,
+            switch_us: config_port::switch_time_us(&loaded, SYSTEM_CLOCK_MHZ),
+        });
+    }
+    Ok(out)
+}
+
+pub fn render() -> crate::Result<String> {
+    let rows = measure()?;
+    let mut t = Table::new(&format!(
+        "Context switching at {SYSTEM_CLOCK_MHZ} MHz ({CONTEXT_WORD_BITS}-bit context words)"
+    ))
+    .header(&["kernel", "ctx B (instr)", "ctx B (total)", "switch us"]);
+    for r in &rows {
+        t.row(&[
+            r.name.clone(),
+            r.context_bytes_instr.to_string(),
+            r.context_bytes_total.to_string(),
+            format!("{:.3}", r.switch_us),
+        ]);
+    }
+    let mut s = t.render();
+    let worst = rows.iter().map(|r| r.switch_us).fold(0.0f64, f64::max);
+    let min_b = rows.iter().map(|r| r.context_bytes_instr).min().unwrap();
+    let max_b = rows.iter().map(|r| r.context_bytes_instr).max().unwrap();
+    s.push_str(&format!(
+        "\nproposed: contexts {min_b}-{max_b} B (paper: 65-410 B), worst switch {:.2} us (paper: 0.27 us)\n\
+         SCFU-SCN [13]: worst case {} B from external memory = {:.1} us (paper: 13 us)\n\
+         Vivado HLS: {} kB PR bitstream via PCAP = {:.0} us (paper: 200 us)\n\
+         speedup vs SCFU-SCN: {:.0}x, vs PR: {:.0}x\n",
+        worst,
+        scfu::WORST_CASE_CONFIG_BYTES,
+        scfu::context_switch_us(scfu::WORST_CASE_CONFIG_BYTES),
+        hls::PR_BITSTREAM_BYTES / 1024,
+        hls::context_switch_us(hls::PR_BITSTREAM_BYTES),
+        scfu::context_switch_us(scfu::WORST_CASE_CONFIG_BYTES) / worst,
+        hls::context_switch_us(hls::PR_BITSTREAM_BYTES) / worst,
+    ));
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chebyshev_is_65_bytes() {
+        let rows = measure().unwrap();
+        let cheb = rows.iter().find(|r| r.name == "chebyshev").unwrap();
+        assert_eq!(cheb.context_bytes_instr, 65);
+    }
+
+    #[test]
+    fn all_switches_are_sub_microsecond() {
+        for r in measure().unwrap() {
+            assert!(r.switch_us < 1.0, "{}: {} us", r.name, r.switch_us);
+        }
+    }
+
+    #[test]
+    fn orders_of_magnitude_match_paper() {
+        let s = render().unwrap();
+        // proposed ~0.1-0.3us << scfu 13us << PR 200us
+        assert!(s.contains("13"));
+        assert!(s.contains("200"));
+    }
+}

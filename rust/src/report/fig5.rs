@@ -1,0 +1,84 @@
+//! Fig. 5 reproduction: number of FUs required per benchmark, proposed
+//! overlay vs the SCFU-SCN overlay [13].
+
+use crate::baseline::scfu;
+use crate::bench_suite::{self, PAPER_ROWS};
+use crate::sched::Program;
+use crate::util::table::{BarChart, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    pub fus_proposed: u32,
+    pub fus_scfu_model: u32,
+}
+
+pub fn measure() -> crate::Result<Vec<Row>> {
+    let mut out = Vec::new();
+    for name in bench_suite::table2_names() {
+        let g = bench_suite::load(name)?;
+        let p = Program::schedule(&g)?;
+        out.push(Row {
+            name: name.to_string(),
+            fus_proposed: p.n_fus(),
+            fus_scfu_model: scfu::map(&g).total_fus(),
+        });
+    }
+    Ok(out)
+}
+
+pub fn render() -> crate::Result<String> {
+    let rows = measure()?;
+    let mut t = Table::new("Fig. 5: FUs required (measured | paper)").header(&[
+        "benchmark",
+        "proposed",
+        "SCFU-SCN",
+        "reduction",
+    ]);
+    let mut chart = BarChart::new("\nFUs required (measured)");
+    for (row, paper) in rows.iter().zip(PAPER_ROWS.iter()) {
+        let reduction = 1.0 - row.fus_proposed as f64 / paper.fus_scfu as f64;
+        t.row(&[
+            row.name.clone(),
+            format!("{} | {}", row.fus_proposed, paper.fus_proposed),
+            format!("{} | {}", row.fus_scfu_model, paper.fus_scfu),
+            format!("{:.0}%", reduction * 100.0),
+        ]);
+        chart.group(
+            &row.name,
+            &[
+                ("prop", row.fus_proposed as f64),
+                ("scfu", row.fus_scfu_model as f64),
+            ],
+        );
+    }
+    let mut s = t.render();
+    s.push_str(&chart.render());
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposed_fu_counts_match_paper() {
+        for (row, paper) in measure().unwrap().iter().zip(PAPER_ROWS.iter()) {
+            assert_eq!(row.fus_proposed, paper.fus_proposed, "{}", row.name);
+        }
+    }
+
+    #[test]
+    fn scfu_always_needs_more_fus() {
+        for row in measure().unwrap() {
+            assert!(row.fus_scfu_model > row.fus_proposed, "{}", row.name);
+        }
+    }
+
+    #[test]
+    fn renders() {
+        let s = render().unwrap();
+        assert!(s.contains("chebyshev"));
+        assert!(s.contains('#'));
+    }
+}

@@ -1,0 +1,11 @@
+//! Report generation: every table and figure from the paper's
+//! evaluation, printed as measured-vs-paper (also exposed through the
+//! `tmfu` CLI and the `rust/benches/*` targets).
+
+pub mod ctx_switch;
+pub mod fig5;
+pub mod fig6;
+pub mod resources_report;
+pub mod simulate;
+pub mod table2;
+pub mod table3;

@@ -1,0 +1,84 @@
+//! §III.A resource/frequency reproduction: the FU and pipeline
+//! synthesis results from the structural model.
+
+use crate::resources::{self, pipeline_fmax, Resources, VIRTEX7_485T, ZYNQ_Z7020};
+use crate::util::table::Table;
+
+pub fn render() -> String {
+    let mut t = Table::new("FU / pipeline resources (model | paper, Zynq XC7Z020)")
+        .header(&["component", "LUTs", "FFs", "DSPs", "slices", "e-Slices", "fmax MHz"]);
+    let fu = resources::fu();
+    t.row(&[
+        "FU (standalone)".to_string(),
+        format!("{} | 160", fu.luts),
+        format!("{} | 293", fu.ffs),
+        format!("{} | 1", fu.dsps),
+        fu.slices().to_string(),
+        format!("{} | 141", fu.eslices(&ZYNQ_Z7020)),
+        format!("{:.0} | 325", resources::FU_FMAX_MHZ),
+    ]);
+    let p8 = resources::pipeline(8);
+    t.row(&[
+        "8-FU pipeline + FIFOs".to_string(),
+        format!("{} | 808", p8.luts),
+        format!("{} | 1077", p8.ffs),
+        format!("{} | 8", p8.dsps),
+        p8.slices().to_string(),
+        p8.eslices(&ZYNQ_Z7020).to_string(),
+        format!("{:.0} | 303", pipeline_fmax(8, &ZYNQ_Z7020)),
+    ]);
+    let mut s = t.render();
+    s.push_str(&format!(
+        "\nZynq utilization of the 8-FU pipeline: {:.1}% (paper: <4%)\n\
+         Virtex-7 XC7VX485T fmax: {:.0} MHz (paper: >600 MHz)\n\
+         max config time, 8 FUs x 32 instrs @300 MHz: {:.2} us (paper: 0.85 us)\n",
+        ZYNQ_Z7020.utilization(&p8) * 100.0,
+        pipeline_fmax(8, &VIRTEX7_485T),
+        (8.0 * 32.0) / 300.0,
+    ));
+    // Component breakdown of the FU.
+    let mut b = Table::new("\nFU component breakdown (calibrated model)")
+        .header(&["component", "LUTs", "FFs"]);
+    b.row(&["instruction memory (4x RAM32M)", &resources::estimate::IM_LUTS.to_string(), "0"]);
+    b.row(&["register file (8x RAM32M)", &resources::estimate::RF_LUTS.to_string(), "0"]);
+    b.row(&[
+        "control (PC/IC/DC + FSM + tag)",
+        &resources::estimate::CTRL_LUTS.to_string(),
+        &resources::estimate::CTRL_FFS.to_string(),
+    ]);
+    b.row(&[
+        "operand routing / muxes",
+        &resources::estimate::MUX_LUTS.to_string(),
+        "0",
+    ]);
+    b.row(&["datapath regs (C, P, config)", "0", &resources::estimate::DATAPATH_FFS.to_string()]);
+    b.row(&["context shift reg (40b)", "0", &resources::estimate::CONTEXT_FFS.to_string()]);
+    b.row(&["input/valid regs", "0", &resources::estimate::INPUT_FFS.to_string()]);
+    s.push_str(&b.render());
+    s
+}
+
+/// Resources of a full Fig.-4 overlay configuration.
+pub fn overlay_summary(n_pipelines: u32, n_fus: u32) -> (Resources, f64) {
+    let r = resources::overlay(n_pipelines, n_fus);
+    let util = ZYNQ_Z7020.utilization(&r);
+    (r, util)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_calibrated_numbers() {
+        let s = super::render();
+        assert!(s.contains("160 | 160"));
+        assert!(s.contains("808 | 808"));
+        assert!(s.contains("141"));
+    }
+
+    #[test]
+    fn overlay_of_4_pipelines_fits_zynq() {
+        let (r, util) = super::overlay_summary(4, 8);
+        assert!(util < 0.25, "util {util}");
+        assert_eq!(r.dsps, 32);
+    }
+}

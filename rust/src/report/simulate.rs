@@ -1,0 +1,69 @@
+//! `tmfu simulate` — cycle-accurate run of one benchmark with printed
+//! metrics (measured II, latency, DSP utilization, oracle check).
+
+use crate::arch::Pipeline;
+use crate::bench_suite;
+use crate::dfg::eval;
+use crate::sched::{Program, Timing};
+use crate::util::prng::Rng;
+
+pub fn run_and_print(kernel: &str, n_packets: usize, seed: u64) -> crate::Result<()> {
+    let g = bench_suite::load(kernel)?;
+    let p = Program::schedule(&g)?;
+    let t = Timing::of(&p);
+    let mut pl = Pipeline::new(&p, 1024)?;
+    let mut rng = Rng::new(seed);
+    let n_in = g.inputs().len();
+    let packets: Vec<Vec<i32>> = (0..n_packets)
+        .map(|_| (0..n_in).map(|_| rng.range_i64(-10_000, 10_000) as i32).collect())
+        .collect();
+    let out = pl.run(&packets, 1_000_000)?;
+    let mut mismatches = 0usize;
+    for (pkt, got) in packets.iter().zip(&out) {
+        if got != &eval(&g, pkt) {
+            mismatches += 1;
+        }
+    }
+    let cycles = pl.cycle;
+    println!("kernel {kernel}: {n_packets} packets in {cycles} cycles");
+    println!("  stages (FUs):        {}", p.n_stages());
+    println!("  model II:            {} cycles", t.ii);
+    println!(
+        "  amortized II:        {:.2} cycles/packet",
+        cycles as f64 / n_packets as f64
+    );
+    println!("  packet latency:      {} cycles", t.latency());
+    println!("  backpressure cycles: {}", pl.backpressure_cycles);
+    let utils = pl.dsp_utilizations();
+    println!(
+        "  DSP utilization:     {}",
+        utils
+            .iter()
+            .enumerate()
+            .map(|(i, u)| format!("FU{i}={:.0}%", u * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!(
+        "  oracle check:        {}",
+        if mismatches == 0 {
+            "OK (all outputs match functional evaluation)".to_string()
+        } else {
+            format!("FAILED ({mismatches} mismatches)")
+        }
+    );
+    if mismatches > 0 {
+        anyhow::bail!("simulation diverged from the functional oracle");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn runs_quietly_for_all_kernels() {
+        for name in crate::bench_suite::all_names() {
+            super::run_and_print(name, 5, 1).unwrap();
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Table II reproduction: DFG characteristics of the benchmark set,
+//! measured by our frontend + scheduler, printed against the paper.
+
+use crate::bench_suite::{self, PAPER_ROWS};
+use crate::dfg::Characteristics;
+use crate::sched::{Program, Timing};
+use crate::util::table::Table;
+
+/// One measured row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    pub c: Characteristics,
+    pub ii: u32,
+    pub eopc: f64,
+}
+
+/// Measure every Table II benchmark.
+pub fn measure() -> crate::Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for name in bench_suite::table2_names() {
+        let g = bench_suite::load(name)?;
+        let c = Characteristics::of(&g);
+        let p = Program::schedule(&g)?;
+        let t = Timing::of(&p);
+        rows.push(Row {
+            name: name.to_string(),
+            eopc: t.eopc(c.n_ops),
+            ii: t.ii,
+            c,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render measured-vs-paper.
+pub fn render() -> crate::Result<String> {
+    let rows = measure()?;
+    let mut t = Table::new("Table II: DFG characteristics (measured | paper)").header(&[
+        "benchmark", "i/o", "edges", "ops", "depth", "par", "II", "eOPC",
+    ]);
+    for (row, paper) in rows.iter().zip(PAPER_ROWS.iter()) {
+        t.row(&[
+            row.name.clone(),
+            format!("{}/{}", row.c.n_inputs, row.c.n_outputs),
+            format!("{} | {}", row.c.n_edges, paper.edges),
+            format!("{} | {}", row.c.n_ops, paper.ops),
+            format!("{} | {}", row.c.depth, paper.depth),
+            format!("{:.2} | {:.2}", row.c.avg_parallelism, paper.parallelism),
+            format!("{} | {}", row.ii, paper.ii),
+            format!("{:.1} | {:.1}", row.eopc, paper.eopc),
+        ]);
+    }
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_rows() {
+        let s = render().unwrap();
+        for row in &PAPER_ROWS {
+            assert!(s.contains(row.name), "{} missing", row.name);
+        }
+        assert!(s.contains("11 | 11")); // mibench II
+    }
+
+    #[test]
+    fn measured_iis_all_match() {
+        for (row, paper) in measure().unwrap().iter().zip(PAPER_ROWS.iter()) {
+            assert_eq!(row.ii, paper.ii, "{}", row.name);
+        }
+    }
+}

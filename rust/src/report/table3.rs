@@ -1,0 +1,136 @@
+//! Table III reproduction: area (e-Slices) and throughput (GOPS) for
+//! the proposed overlay, the SCFU-SCN overlay [13] and Vivado HLS.
+
+use crate::baseline::{hls, scfu};
+use crate::bench_suite::{self, constants, PAPER_ROWS};
+use crate::resources::{self, ZYNQ_Z7020};
+use crate::sched::{Program, Timing};
+use crate::util::table::Table;
+
+/// Measured row (proposed / scfu / hls, each tput GOPS + area e-Slices).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    pub tput_proposed: f64,
+    pub area_proposed: u32,
+    /// Synthesized-pipeline estimate (tighter than the paper accounting).
+    pub area_proposed_synth: u32,
+    pub tput_scfu: f64,
+    pub area_scfu_model: u32,
+    pub tput_hls: f64,
+    pub area_hls_model: u32,
+    pub n_fus: u32,
+}
+
+pub fn measure() -> crate::Result<Vec<Row>> {
+    let dev = &ZYNQ_Z7020;
+    let mut out = Vec::new();
+    for name in bench_suite::table2_names() {
+        let g = bench_suite::load(name)?;
+        let p = Program::schedule(&g)?;
+        let t = Timing::of(&p);
+        let n_fus = p.n_fus();
+        let scfu_m = scfu::map(&g);
+        let hls_m = hls::estimate(&g);
+        out.push(Row {
+            name: name.to_string(),
+            tput_proposed: t.gops(g.n_ops(), constants::PROPOSED_FREQ_MHZ),
+            area_proposed: resources::area_paper_accounting(n_fus, dev),
+            area_proposed_synth: resources::pipeline(n_fus).eslices(dev),
+            tput_scfu: scfu::gops(g.n_ops()),
+            area_scfu_model: scfu_m.area_eslices(),
+            tput_hls: hls_m.gops(g.n_ops()),
+            area_hls_model: hls_m.eslices(dev),
+            n_fus,
+        });
+    }
+    Ok(out)
+}
+
+pub fn render() -> crate::Result<String> {
+    let rows = measure()?;
+    let mut t = Table::new(
+        "Table III: throughput (GOPS) & area (e-Slices), measured | paper",
+    )
+    .header(&[
+        "benchmark",
+        "prop Tput",
+        "prop Area",
+        "scfu Tput",
+        "scfu Area",
+        "hls Tput",
+        "hls Area",
+    ]);
+    for (row, paper) in rows.iter().zip(PAPER_ROWS.iter()) {
+        t.row(&[
+            row.name.clone(),
+            format!("{:.2} | {:.2}", row.tput_proposed, paper.tput_proposed),
+            format!("{} | {}", row.area_proposed, paper.area_proposed),
+            format!("{:.2} | {:.2}", row.tput_scfu, paper.tput_scfu),
+            format!("{} | {}", row.area_scfu_model, paper.area_scfu),
+            format!("{:.2} | {:.2}", row.tput_hls, paper.tput_hls),
+            format!("{} | {}", row.area_hls_model, paper.area_hls),
+        ]);
+    }
+    let mut s = t.render();
+    // The paper's headline claims, recomputed from the measured rows.
+    let max_area_saving = rows
+        .iter()
+        .zip(PAPER_ROWS.iter())
+        .map(|(r, p)| 1.0 - r.area_proposed as f64 / p.area_scfu as f64)
+        .fold(0.0f64, f64::max);
+    let tput_ratios: Vec<f64> = rows
+        .iter()
+        .zip(PAPER_ROWS.iter())
+        .map(|(r, p)| p.tput_scfu / r.tput_proposed)
+        .collect();
+    let min_ratio = tput_ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_ratio = tput_ratios.iter().cloned().fold(0.0f64, f64::max);
+    s.push_str(&format!(
+        "\nheadlines: up to {:.0}% e-Slice reduction vs SCFU-SCN (paper: 85%);\n\
+         throughput {:.0}x-{:.0}x lower than SCFU-SCN (paper: 6x-18x)\n",
+        max_area_saving * 100.0,
+        min_ratio.floor(),
+        max_ratio.ceil()
+    ));
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposed_columns_match_paper_exactly() {
+        for (row, paper) in measure().unwrap().iter().zip(PAPER_ROWS.iter()) {
+            assert!(
+                (row.tput_proposed - paper.tput_proposed).abs() < 0.005,
+                "{} tput",
+                row.name
+            );
+            assert_eq!(row.area_proposed, paper.area_proposed, "{} area", row.name);
+        }
+    }
+
+    #[test]
+    fn headline_claims_hold() {
+        let s = render().unwrap();
+        assert!(s.contains("up to 8"), "area headline: {s}");
+    }
+
+    #[test]
+    fn fus_match_depth_based_counts() {
+        for (row, paper) in measure().unwrap().iter().zip(PAPER_ROWS.iter()) {
+            assert_eq!(row.n_fus, paper.fus_proposed, "{}", row.name);
+        }
+    }
+
+    #[test]
+    fn throughput_ordering_preserved() {
+        // SCFU > HLS > proposed for every benchmark (the paper's shape).
+        for row in measure().unwrap() {
+            assert!(row.tput_scfu > row.tput_hls, "{}", row.name);
+            assert!(row.tput_hls > row.tput_proposed, "{}", row.name);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Operating-frequency model, calibrated to the paper's synthesis
+//! results: standalone FU 325 MHz on the Zynq Z7020; 8-FU pipeline
+//! 303 MHz (interconnect/fan-out penalty grows with cascade length);
+//! the same pipeline exceeds 600 MHz on a Virtex-7 (§III.A). System
+//! clock for the throughput/context numbers is 300 MHz (§V).
+
+use super::device::Device;
+
+/// Standalone FU fmax on the Zynq -1 speed grade, MHz.
+pub const FU_FMAX_MHZ: f64 = 325.0;
+
+/// Per-FU cascade penalty (clock skew / valid fan-out), calibrated so
+/// an 8-FU pipeline lands on the paper's 303 MHz.
+const CASCADE_PENALTY_PER_FU: f64 = 0.00908;
+
+/// fmax of an n-FU pipeline on a device, MHz.
+pub fn pipeline_fmax(n_fus: u32, dev: &Device) -> f64 {
+    (FU_FMAX_MHZ / (1.0 + CASCADE_PENALTY_PER_FU * n_fus as f64)) * dev.speed_factor
+}
+
+/// The system clock used for throughput/context-switch figures (§V).
+pub const SYSTEM_CLOCK_MHZ: f64 = 300.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::device::{VIRTEX7_485T, ZYNQ_Z7020};
+
+    #[test]
+    fn pipeline8_matches_paper_303mhz() {
+        let f = pipeline_fmax(8, &ZYNQ_Z7020);
+        assert!((f - 303.0).abs() < 1.0, "f = {f}");
+    }
+
+    #[test]
+    fn single_fu_is_325mhz() {
+        let f = pipeline_fmax(0, &ZYNQ_Z7020);
+        assert!((f - 325.0).abs() < 1e-9);
+        let f1 = pipeline_fmax(1, &ZYNQ_Z7020);
+        assert!(f1 < 325.0 && f1 > 320.0);
+    }
+
+    #[test]
+    fn virtex7_exceeds_600mhz() {
+        // Paper: "in excess of 600 MHz" for the same 8-FU pipeline.
+        let f = pipeline_fmax(8, &VIRTEX7_485T);
+        assert!(f > 600.0, "f = {f}");
+    }
+
+    #[test]
+    fn fmax_decreases_with_depth() {
+        let d = &ZYNQ_Z7020;
+        assert!(pipeline_fmax(16, d) < pipeline_fmax(8, d));
+        // Even a 16-FU cascade stays above the 300 MHz system clock
+        // target minus margin.
+        assert!(pipeline_fmax(16, d) > 280.0);
+    }
+}

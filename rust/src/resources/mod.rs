@@ -1,0 +1,12 @@
+//! FPGA resource & frequency models (Xilinx 7-series), calibrated to
+//! the paper's ISE synthesis results. See DESIGN.md §2: area results in
+//! the paper are primitive counts + slice packing, which a structural
+//! model reproduces without silicon.
+
+pub mod device;
+pub mod estimate;
+pub mod fmax;
+
+pub use device::{Device, VIRTEX7_485T, ZYNQ_Z7020};
+pub use estimate::{area_paper_accounting, fu, overlay, pipeline, Resources};
+pub use fmax::{pipeline_fmax, FU_FMAX_MHZ, SYSTEM_CLOCK_MHZ};

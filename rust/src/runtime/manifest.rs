@@ -1,0 +1,191 @@
+//! `artifacts/manifest.json` parsing — the contract emitted by
+//! `python/compile/aot.py` describing each AOT-compiled kernel.
+//!
+//! Each kernel is lowered at several **batch buckets** (8/64/256 by
+//! default); the runtime picks the smallest bucket that fits a request
+//! batch and zero-pads to it (bucketed batching).
+
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One kernel's entry in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEntry {
+    pub name: String,
+    /// (batch size, artifact path), ascending by batch.
+    pub artifacts: Vec<(usize, PathBuf)>,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+    pub n_ops: usize,
+    pub n_fus: usize,
+    pub ii: u32,
+    pub latency: u64,
+    pub context_bytes: usize,
+}
+
+impl KernelEntry {
+    /// Smallest bucket holding `n` packets.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.artifacts
+            .iter()
+            .map(|&(b, _)| b)
+            .find(|&b| b >= n)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.artifacts.last().map(|&(b, _)| b).unwrap_or(0)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Largest batch bucket (back-compat alias).
+    pub batch: usize,
+    pub batches: Vec<usize>,
+    pub kernels: BTreeMap<String, KernelEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let batch = v
+            .get("batch")
+            .as_usize()
+            .context("manifest: missing 'batch'")?;
+        let batches: Vec<usize> = match v.get("batches").as_arr() {
+            Some(arr) => arr.iter().filter_map(Json::as_usize).collect(),
+            None => vec![batch],
+        };
+        let mut kernels = BTreeMap::new();
+        let kmap = v
+            .get("kernels")
+            .as_obj()
+            .context("manifest: missing 'kernels'")?;
+        for (name, e) in kmap {
+            let mut artifacts = Vec::new();
+            if let Some(amap) = e.get("artifacts").as_obj() {
+                for (b, a) in amap {
+                    let bsz: usize = b.parse().with_context(|| format!("{name}: bad batch key"))?;
+                    let file = a
+                        .get("file")
+                        .as_str()
+                        .with_context(|| format!("{name}: artifact missing 'file'"))?;
+                    artifacts.push((bsz, dir.join(file)));
+                }
+            } else if let Some(file) = e.get("artifact").as_str() {
+                // Legacy single-batch manifest.
+                artifacts.push((batch, dir.join(file)));
+            }
+            anyhow::ensure!(!artifacts.is_empty(), "{name}: no artifacts listed");
+            artifacts.sort_by_key(|&(b, _)| b);
+            let entry = KernelEntry {
+                name: name.clone(),
+                artifacts,
+                n_inputs: field(e, name, "n_inputs")?,
+                n_outputs: field(e, name, "n_outputs")?,
+                n_ops: field(e, name, "n_ops")?,
+                n_fus: field(e, name, "n_fus")?,
+                ii: field(e, name, "ii")? as u32,
+                latency: field(e, name, "latency")? as u64,
+                context_bytes: field(e, name, "context_bytes")?,
+            };
+            kernels.insert(name.clone(), entry);
+        }
+        Ok(Manifest {
+            batch,
+            batches,
+            kernels,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&KernelEntry> {
+        self.kernels
+            .get(name)
+            .with_context(|| format!("kernel '{name}' not in manifest"))
+    }
+}
+
+fn field(e: &Json, name: &str, key: &str) -> Result<usize> {
+    e.get(key)
+        .as_usize()
+        .with_context(|| format!("{name}: missing '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch": 256,
+      "batches": [8, 256],
+      "kernels": {
+        "gradient": {
+          "artifacts": {
+            "8":   {"file": "gradient.b8.hlo.txt",   "sha256_16": "x"},
+            "256": {"file": "gradient.b256.hlo.txt", "sha256_16": "y"}
+          },
+          "n_inputs": 5, "n_outputs": 1, "n_ops": 11, "n_fus": 4,
+          "ii": 11, "latency": 24, "context_bytes": 55
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_bucketed_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.batches, vec![8, 256]);
+        let k = m.kernel("gradient").unwrap();
+        assert_eq!(k.artifacts.len(), 2);
+        assert_eq!(k.bucket_for(1), Some(8));
+        assert_eq!(k.bucket_for(8), Some(8));
+        assert_eq!(k.bucket_for(9), Some(256));
+        assert_eq!(k.bucket_for(257), None);
+        assert_eq!(k.max_batch(), 256);
+        assert!(m.kernel("nope").is_err());
+    }
+
+    #[test]
+    fn parses_legacy_single_batch() {
+        let legacy = r#"{
+          "batch": 64,
+          "kernels": {
+            "g": {"artifact": "g.hlo.txt", "n_inputs": 1, "n_outputs": 1,
+                   "n_ops": 1, "n_fus": 1, "ii": 3, "latency": 4,
+                   "context_bytes": 5}
+          }
+        }"#;
+        let m = Manifest::parse(legacy, Path::new(".")).unwrap();
+        assert_eq!(m.kernel("g").unwrap().artifacts.len(), 1);
+        assert_eq!(m.kernel("g").unwrap().bucket_for(3), Some(64));
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"kernels": {}}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"batch": 1, "kernels": {"x": {}}}"#, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.kernels.len(), 9);
+            assert_eq!(m.kernel("gradient").unwrap().ii, 11);
+            assert!(m.kernel("gradient").unwrap().artifacts.len() >= 2);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Runtime: PJRT loading/execution of the AOT artifacts plus the
+//! manifest contract with `python/compile/aot.py`.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{KernelEntry, Manifest};
+pub use pjrt::Engine;

@@ -1,0 +1,215 @@
+//! PJRT execution engine: loads the AOT-compiled HLO text artifacts and
+//! executes them on the request path (the "FPGA fabric" of our
+//! simulated deployment — see DESIGN.md §3).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → compile once →
+//! `execute` per batch. Python never runs here.
+
+use super::manifest::{KernelEntry, Manifest};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled kernel: one executable per batch bucket, plus signature.
+pub struct LoadedKernel {
+    pub entry: KernelEntry,
+    /// (batch bucket, compiled executable), ascending by bucket.
+    exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    /// Executions performed (metrics).
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+/// The engine: one PJRT client + all compiled kernels.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub batch: usize,
+    kernels: BTreeMap<String, LoadedKernel>,
+    /// PJRT CPU execution is not re-entrant per executable here; the
+    /// coordinator serializes through this (one "fabric").
+    exec_lock: Mutex<()>,
+}
+
+impl Engine {
+    /// Load every kernel in the manifest and compile it on the CPU
+    /// PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut kernels = BTreeMap::new();
+        for (name, entry) in &manifest.kernels {
+            let mut exes = Vec::new();
+            for (bucket, path) in &entry.artifacts {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .with_context(|| format!("parsing HLO for '{name}' (batch {bucket})"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling '{name}' (batch {bucket})"))?;
+                exes.push((*bucket, exe));
+            }
+            kernels.insert(
+                name.clone(),
+                LoadedKernel {
+                    entry: entry.clone(),
+                    exes,
+                    executions: Default::default(),
+                },
+            );
+        }
+        Ok(Engine {
+            client,
+            batch: manifest.batch,
+            kernels,
+            exec_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.kernels.keys().map(String::as_str).collect()
+    }
+
+    pub fn entry(&self, kernel: &str) -> Result<&KernelEntry> {
+        Ok(&self
+            .kernels
+            .get(kernel)
+            .with_context(|| format!("kernel '{kernel}' not loaded"))?
+            .entry)
+    }
+
+    /// Execute one batch. `packets` is up to `self.batch` rows of
+    /// `n_inputs` words; partial batches are zero-padded (the artifact
+    /// has a fixed batch dimension). Returns one output row per input
+    /// packet.
+    pub fn execute(&self, kernel: &str, packets: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        let lk = self
+            .kernels
+            .get(kernel)
+            .with_context(|| format!("kernel '{kernel}' not loaded"))?;
+        let (n_in, n_out) = (lk.entry.n_inputs, lk.entry.n_outputs);
+        anyhow::ensure!(
+            packets.len() <= self.batch,
+            "batch overflow: {} > {}",
+            packets.len(),
+            self.batch
+        );
+        anyhow::ensure!(!packets.is_empty(), "empty batch");
+        // Bucketed batching: smallest compiled bucket that fits, with
+        // zero padding ([batch, n_inputs] row-major).
+        let bucket = lk
+            .entry
+            .bucket_for(packets.len())
+            .with_context(|| format!("no bucket for batch of {}", packets.len()))?;
+        let exe = &lk
+            .exes
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .expect("bucket list consistent")
+            .1;
+        let mut flat = vec![0i32; bucket * n_in];
+        for (i, p) in packets.iter().enumerate() {
+            anyhow::ensure!(
+                p.len() == n_in,
+                "kernel '{kernel}' expects {n_in} inputs, got {}",
+                p.len()
+            );
+            flat[i * n_in..(i + 1) * n_in].copy_from_slice(p);
+        }
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[bucket as i64, n_in as i64])
+            .context("reshaping input literal")?;
+        let result = {
+            let _guard = self.exec_lock.lock().unwrap();
+            exe.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()
+                .context("fetching result")?
+        };
+        lk.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<i32>().context("reading result values")?;
+        anyhow::ensure!(
+            values.len() == bucket * n_out,
+            "result shape mismatch: {} != {}",
+            values.len(),
+            bucket * n_out
+        );
+        Ok(packets
+            .iter()
+            .enumerate()
+            .map(|(i, _)| values[i * n_out..(i + 1) * n_out].to_vec())
+            .collect())
+    }
+
+    /// Total executions across kernels.
+    pub fn total_executions(&self) -> u64 {
+        self.kernels
+            .values()
+            .map(|k| k.executions.load(std::sync::atomic::Ordering::Relaxed))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::dfg::eval;
+    use crate::util::prng::Rng;
+
+    /// PJRT is not Send/Sync (Rc internals), so all engine tests share
+    /// one sequential test body with a locally-owned Engine. Skipped
+    /// when `make artifacts` has not been run.
+    #[test]
+    fn engine_end_to_end() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let e = Engine::load(&dir).expect("engine load");
+
+        // Loads all nine kernels.
+        assert_eq!(e.kernel_names().len(), 9);
+        assert_eq!(e.batch, 256);
+
+        // L1/L2/L3 numeric agreement: the PJRT-executed artifact must
+        // match the Rust functional oracle bit-for-bit.
+        let mut rng = Rng::new(99);
+        for name in bench_suite::all_names() {
+            let g = bench_suite::load(name).unwrap();
+            let n_in = g.inputs().len();
+            let packets: Vec<Vec<i32>> = (0..17)
+                .map(|_| (0..n_in).map(|_| rng.next_i32()).collect())
+                .collect();
+            let out = e.execute(name, &packets).unwrap();
+            for (pkt, got) in packets.iter().zip(&out) {
+                assert_eq!(got, &eval(&g, pkt), "{name} diverged on {pkt:?}");
+            }
+        }
+
+        // Full batch and single packet.
+        let g = bench_suite::load("gradient").unwrap();
+        let one = vec![vec![3, 5, 2, 7, 1]];
+        assert_eq!(e.execute("gradient", &one).unwrap()[0], eval(&g, &one[0]));
+        let full: Vec<Vec<i32>> = (0..256).map(|k| vec![k, k, k, k, k]).collect();
+        let out = e.execute("gradient", &full).unwrap();
+        assert_eq!(out.len(), 256);
+        assert!(out.iter().all(|o| o[0] == 0)); // all-equal inputs -> 0
+
+        // Bad batches are rejected.
+        assert!(e.execute("gradient", &[]).is_err());
+        assert!(e.execute("gradient", &[vec![1, 2]]).is_err());
+        assert!(e.execute("nonesuch", &[vec![1]]).is_err());
+        let over: Vec<Vec<i32>> = (0..257).map(|_| vec![0; 5]).collect();
+        assert!(e.execute("gradient", &over).is_err());
+
+        // Metrics counted.
+        assert!(e.total_executions() >= 10);
+    }
+}

@@ -1,0 +1,170 @@
+//! Initiation-interval and pipeline timing model.
+//!
+//! Per paper §III (validated against Table I and all of Table II):
+//!
+//! * each FU's iteration occupies `loads + execs` cycles (data entry,
+//!   then one instruction per cycle);
+//! * the DSP48E1's internal pipeline adds `FLUSH = 2` drain cycles to
+//!   the bottleneck FU before the next iteration may stream in (the
+//!   back-pressure window in Table I, cycles 10–11);
+//! * `II = max_s(loads_s + execs_s) + FLUSH`;
+//! * results issued at cycle `t` are written into the next FU's RF at
+//!   `t + PIPE`, with `PIPE = 2` visible cycles (issue at 6 → load at 8
+//!   in Table I).
+
+use super::program::Program;
+use crate::bench_suite::constants::FLUSH_CYCLES;
+
+/// Visible issue→arrival offset between adjacent FUs (the DSP's
+/// 3-stage internal pipeline as observed in Table I).
+pub const PIPE_LATENCY: u64 = 2;
+
+/// Timing summary for a scheduled kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timing {
+    /// Initiation interval in cycles (between successive data packets).
+    pub ii: u32,
+    /// The stage that limits the II (1-based).
+    pub bottleneck_stage: u32,
+    /// First-arrival cycle for each stage (1-based cycle numbers;
+    /// index 0 = stage 1). Matches Table I's "Load R0" rows.
+    pub t_arrive: Vec<u64>,
+    /// Cycle at which the first output word reaches the output FIFO.
+    pub first_output: u64,
+    /// Cycle at which the last output word of iteration 0 arrives.
+    pub last_output: u64,
+}
+
+impl Timing {
+    pub fn of(p: &Program) -> Timing {
+        assert!(!p.stages.is_empty());
+        let (mut ii_core, mut bottleneck) = (0usize, 1u32);
+        for st in &p.stages {
+            if st.cost() > ii_core {
+                ii_core = st.cost();
+                bottleneck = st.stage;
+            }
+        }
+        let ii = ii_core as u32 + FLUSH_CYCLES;
+        let mut t_arrive = Vec::with_capacity(p.stages.len());
+        let mut t = 1u64;
+        for st in &p.stages {
+            t_arrive.push(t);
+            t = t + st.n_loads() as u64 + PIPE_LATENCY;
+        }
+        let last = p.stages.last().unwrap();
+        let first_output = t; // t_arrive[last] + loads + PIPE
+        let last_output = first_output + last.n_execs() as u64 - 1;
+        Timing {
+            ii,
+            bottleneck_stage: bottleneck,
+            t_arrive,
+            first_output,
+            last_output,
+        }
+    }
+
+    /// End-to-end latency of one data packet in cycles (first input
+    /// word clocked in at cycle 1 → last output word).
+    pub fn latency(&self) -> u64 {
+        self.last_output
+    }
+
+    /// Steady-state throughput in effective operations per cycle
+    /// (the paper's eOPC = DFG op nodes / II).
+    pub fn eopc(&self, n_ops: usize) -> f64 {
+        n_ops as f64 / self.ii as f64
+    }
+
+    /// Throughput in GOPS at a clock frequency in MHz (Table III:
+    /// `ops × f / II`).
+    pub fn gops(&self, n_ops: usize, freq_mhz: f64) -> f64 {
+        n_ops as f64 * freq_mhz * 1e6 / self.ii as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::{self, constants::PROPOSED_FREQ_MHZ, PAPER_ROWS};
+    use crate::sched::Program;
+
+    #[test]
+    fn gradient_ii_and_arrivals_match_table1() {
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let t = Timing::of(&p);
+        assert_eq!(t.ii, 11);
+        assert_eq!(t.bottleneck_stage, 1);
+        // Table I: FU0 loads from cycle 1, FU1 from 8, FU2 from 14,
+        // FU3 from 20.
+        assert_eq!(t.t_arrive, vec![1, 8, 14, 20]);
+        // FU3 loads 2 values (20, 21), executes its ADD at 22, result
+        // reaches the output FIFO at 24.
+        assert_eq!(t.first_output, 24);
+        assert_eq!(t.last_output, 24);
+    }
+
+    /// The headline Table II reproduction: our scheduler's II must equal
+    /// the paper's for every benchmark.
+    #[test]
+    fn all_benchmark_iis_match_paper() {
+        for row in &PAPER_ROWS {
+            let g = bench_suite::load(row.name).unwrap();
+            let p = Program::schedule(&g).unwrap();
+            let t = Timing::of(&p);
+            assert_eq!(t.ii, row.ii, "{}: II {} vs paper {}", row.name, t.ii, row.ii);
+        }
+    }
+
+    #[test]
+    fn eopc_matches_paper_rounding() {
+        for row in &PAPER_ROWS {
+            let g = bench_suite::load(row.name).unwrap();
+            let p = Program::schedule(&g).unwrap();
+            let t = Timing::of(&p);
+            let eopc = t.eopc(g.n_ops());
+            assert!(
+                (eopc - row.eopc).abs() < 0.06,
+                "{}: eOPC {eopc:.2} vs paper {}",
+                row.name,
+                row.eopc
+            );
+        }
+    }
+
+    #[test]
+    fn gops_matches_table3_proposed_column() {
+        for row in &PAPER_ROWS {
+            let g = bench_suite::load(row.name).unwrap();
+            let p = Program::schedule(&g).unwrap();
+            let t = Timing::of(&p);
+            let gops = t.gops(g.n_ops(), PROPOSED_FREQ_MHZ);
+            assert!(
+                (gops - row.tput_proposed).abs() < 0.005,
+                "{}: {gops:.3} GOPS vs paper {}",
+                row.name,
+                row.tput_proposed
+            );
+        }
+    }
+
+    #[test]
+    fn chebyshev_ii_is_six() {
+        let g = bench_suite::load("chebyshev").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let t = Timing::of(&p);
+        assert_eq!(t.ii, 6);
+        // Interior stages cost 2 loads + 2 execs = 4; +2 flush = 6.
+    }
+
+    #[test]
+    fn latency_exceeds_ii_for_deep_pipelines() {
+        for name in bench_suite::table2_names() {
+            let g = bench_suite::load(name).unwrap();
+            let p = Program::schedule(&g).unwrap();
+            let t = Timing::of(&p);
+            assert!(t.latency() > t.ii as u64, "{name}");
+        }
+    }
+}

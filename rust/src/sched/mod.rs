@@ -1,0 +1,105 @@
+//! Operation scheduling (paper §IV): ASAP stage allocation onto the
+//! linear FU pipeline, bypass routing, per-FU instruction generation,
+//! the II/timing model and the Table-I schedule generator.
+
+pub mod ii;
+pub mod program;
+pub mod route;
+pub mod table1;
+
+pub use ii::{Timing, PIPE_LATENCY};
+pub use program::{Program, StageProgram};
+pub use route::{Routing, ValueRoute};
+pub use table1::ScheduleTable;
+
+use crate::dfg::Dfg;
+use crate::util::json::{self, Json};
+
+/// Serialize a scheduled program (with its DFG) to the JSON interchange
+/// consumed by the Python compile path (`python/compile/dfg.py`).
+pub fn program_to_json(g: &Dfg, p: &Program) -> Json {
+    let t = Timing::of(p);
+    let stages: Vec<Json> = p
+        .stages
+        .iter()
+        .map(|st| {
+            json::obj(vec![
+                ("stage", json::i(st.stage as i64)),
+                ("ops", json::ints(st.ops.iter().map(|&v| v as i64))),
+                (
+                    "arrivals",
+                    json::ints(st.arrivals.iter().map(|&v| v as i64)),
+                ),
+                (
+                    "bypasses",
+                    json::ints(st.bypasses.iter().map(|&v| v as i64)),
+                ),
+                (
+                    "consts",
+                    Json::Arr(
+                        st.consts
+                            .iter()
+                            .map(|&(id, v)| {
+                                json::obj(vec![
+                                    ("node", json::i(id as i64)),
+                                    ("value", json::i(v as i64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("n_loads", json::i(st.n_loads() as i64)),
+                ("n_execs", json::i(st.n_execs() as i64)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("dfg", crate::dfg::dfg_to_json(g)),
+        (
+            "schedule",
+            json::obj(vec![
+                ("n_stages", json::i(p.n_stages() as i64)),
+                ("ii", json::i(t.ii as i64)),
+                ("latency", json::i(t.latency() as i64)),
+                ("stages", Json::Arr(stages)),
+                (
+                    "output_order",
+                    Json::Arr(
+                        p.output_order
+                            .iter()
+                            .map(|(name, pos)| {
+                                json::obj(vec![
+                                    ("name", json::s(name)),
+                                    ("pos", json::i(*pos as i64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+
+    #[test]
+    fn program_json_has_expected_fields() {
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let j = program_to_json(&g, &p);
+        assert_eq!(j.get("schedule").get("ii").as_i64(), Some(11));
+        assert_eq!(j.get("schedule").get("n_stages").as_i64(), Some(4));
+        assert_eq!(j.get("dfg").get("name").as_str(), Some("gradient"));
+        let stages = j.get("schedule").get("stages").as_arr().unwrap();
+        assert_eq!(stages.len(), 4);
+        assert_eq!(stages[0].get("n_loads").as_i64(), Some(5));
+        // Round-trip through text stays parseable.
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("schedule").get("ii").as_i64(), Some(11));
+    }
+}

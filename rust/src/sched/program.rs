@@ -1,0 +1,361 @@
+//! Per-FU program construction: RF slot allocation, instruction
+//! generation and the kernel context image.
+//!
+//! For each pipeline stage the FU's program is: the stage's arithmetic
+//! instructions (DFG id order), then its data-bypass instructions. RF
+//! slots are assigned by arrival order from slot 0 upward (this matches
+//! the paper's sequential data counter), while constants are preloaded
+//! from slot 31 downward at context-load time.
+
+use super::route::Routing;
+use crate::dfg::{Dfg, Levels, NodeId, NodeKind};
+use crate::isa::{ContextImage, FuInstr};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// One pipeline stage's complete schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageProgram {
+    /// 1-based stage index (FU index = stage - 1).
+    pub stage: u32,
+    /// Arithmetic ops executed here, in issue order.
+    pub ops: Vec<NodeId>,
+    /// Values arriving into the RF, in arrival (slot) order.
+    pub arrivals: Vec<NodeId>,
+    /// Values forwarded by bypass instructions, in issue order.
+    pub bypasses: Vec<NodeId>,
+    /// Constants preloaded into the RF: (const node, value), slot 31-.
+    pub consts: Vec<(NodeId, i32)>,
+    /// RF slot for every readable node (arrivals + consts).
+    pub rf_slot: BTreeMap<NodeId, u8>,
+    /// The FU's instruction list.
+    pub instrs: Vec<FuInstr>,
+}
+
+impl StageProgram {
+    /// Streamed loads into this FU per iteration.
+    pub fn n_loads(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    /// Instructions issued per iteration.
+    pub fn n_execs(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// This stage's contribution to the II (see `ii.rs`).
+    pub fn cost(&self) -> usize {
+        self.n_loads() + self.n_execs()
+    }
+
+    /// Values this FU emits downstream, in issue order (op results
+    /// then bypassed values). The next stage's `arrivals` must equal
+    /// the subsequence of these that it consumes.
+    pub fn emissions(&self) -> Vec<NodeId> {
+        self.ops.iter().chain(self.bypasses.iter()).copied().collect()
+    }
+}
+
+/// A fully scheduled kernel: per-stage programs + timing (computed by
+/// [`super::ii`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub kernel: String,
+    pub stages: Vec<StageProgram>,
+    /// Output name -> position in the final stage's emission order.
+    pub output_order: Vec<(String, usize)>,
+}
+
+impl Program {
+    /// Schedule a normalized DFG onto the linear pipeline (ASAP stage
+    /// allocation, the paper's policy).
+    pub fn schedule(g: &Dfg) -> Result<Program> {
+        Self::schedule_with(g, &Levels::of(g))
+    }
+
+    /// Schedule with ALAP stage allocation (ops sink toward their
+    /// consumers; can shorten bypass chains — see `bench_ablation`).
+    pub fn schedule_alap(g: &Dfg) -> Result<Program> {
+        Self::schedule_with(g, &Levels::alap(g))
+    }
+
+    /// Schedule with an explicit level assignment.
+    pub fn schedule_with(g: &Dfg, levels: &Levels) -> Result<Program> {
+        g.validate()?;
+        let levels = levels.clone();
+        let routing = Routing::of(g, &levels);
+        let depth = levels.depth;
+        if depth == 0 {
+            bail!("kernel '{}' has no operations", g.name);
+        }
+        let stage_ops = levels.stages(g);
+        let mut stages = Vec::with_capacity(depth as usize);
+        for s in 1..=depth {
+            let ops = stage_ops[(s - 1) as usize].clone();
+            let arrivals = routing.arrivals(g, &levels, s);
+            let bypasses = routing.bypasses(s);
+            // Constants read by this stage's ops.
+            let mut consts: Vec<(NodeId, i32)> = Vec::new();
+            for &op in &ops {
+                for &a in &g.node(op).args {
+                    if let NodeKind::Const { value } = g.node(a).kind {
+                        if !consts.iter().any(|(id, _)| *id == a) {
+                            consts.push((a, value));
+                        }
+                    }
+                }
+            }
+            // RF allocation: arrivals from 0 up, consts from 31 down.
+            if arrivals.len() + consts.len() > 32 {
+                bail!(
+                    "kernel '{}' stage {s}: RF overflow ({} arrivals + {} consts > 32)",
+                    g.name,
+                    arrivals.len(),
+                    consts.len()
+                );
+            }
+            let mut rf_slot = BTreeMap::new();
+            for (i, &v) in arrivals.iter().enumerate() {
+                rf_slot.insert(v, i as u8);
+            }
+            for (i, &(c, _)) in consts.iter().enumerate() {
+                rf_slot.insert(c, (31 - i) as u8);
+            }
+            // Instructions: ops then bypasses.
+            let mut instrs = Vec::new();
+            for &op in &ops {
+                let n = g.node(op);
+                let opk = match n.kind {
+                    NodeKind::Op { op } => op,
+                    _ => unreachable!(),
+                };
+                let rs1 = *rf_slot
+                    .get(&n.args[0])
+                    .ok_or_else(|| anyhow::anyhow!("stage {s}: operand {} not in RF", n.args[0]))?;
+                let rs2 = *rf_slot
+                    .get(&n.args[1])
+                    .ok_or_else(|| anyhow::anyhow!("stage {s}: operand {} not in RF", n.args[1]))?;
+                instrs.push(FuInstr::Arith { op: opk, rs1, rs2 });
+            }
+            for &v in &bypasses {
+                let rs = *rf_slot
+                    .get(&v)
+                    .ok_or_else(|| anyhow::anyhow!("stage {s}: bypass value {v} not in RF"))?;
+                instrs.push(FuInstr::Bypass { rs });
+            }
+            if instrs.len() > 32 {
+                bail!(
+                    "kernel '{}' stage {s}: IM overflow ({} instructions > 32)",
+                    g.name,
+                    instrs.len()
+                );
+            }
+            stages.push(StageProgram {
+                stage: s,
+                ops,
+                arrivals,
+                bypasses,
+                consts,
+                rf_slot,
+                instrs,
+            });
+        }
+        // Output order: position of each output's value in the final
+        // stage's emission list.
+        let last = stages.last().unwrap();
+        let emissions = last.emissions();
+        let mut output_order = Vec::new();
+        for out_id in g.outputs() {
+            let n = g.node(out_id);
+            let name = match &n.kind {
+                NodeKind::Output { name } => name.clone(),
+                _ => unreachable!(),
+            };
+            let v = n.args[0];
+            let pos = emissions
+                .iter()
+                .position(|&e| e == v)
+                .ok_or_else(|| anyhow::anyhow!("output '{name}' not emitted by final stage"))?;
+            output_order.push((name, pos));
+        }
+        Ok(Program {
+            kernel: g.name.clone(),
+            stages,
+            output_order,
+        })
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total FUs required (== pipeline stages; the paper cascades two
+    /// 8-FU pipelines when depth > 8).
+    pub fn n_fus(&self) -> u32 {
+        self.stages.len() as u32
+    }
+
+    /// Build the 40-bit context image for this program.
+    pub fn context_image(&self) -> Result<ContextImage> {
+        let mut img = ContextImage::new(&self.kernel, self.stages.len());
+        for (i, st) in self.stages.iter().enumerate() {
+            img.fus[i].instrs = st.instrs.clone();
+            img.fus[i].consts = st.consts.iter().map(|&(_, v)| v).collect();
+        }
+        img.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(img)
+    }
+
+    /// Structural invariant: every stage's arrivals are exactly the
+    /// upstream emissions it consumes, in order.
+    pub fn check_dataflow(&self) -> Result<()> {
+        for w in self.stages.windows(2) {
+            let sent = w[0].emissions();
+            let recv = &w[1].arrivals;
+            // recv must be a subsequence of sent (an emitted value not
+            // needed downstream is impossible by construction).
+            let mut it = sent.iter();
+            for want in recv {
+                if !it.any(|got| got == want) {
+                    bail!(
+                        "stage {}: arrival {want} not emitted by stage {} in order",
+                        w[1].stage,
+                        w[0].stage
+                    );
+                }
+            }
+            if sent.len() != recv.len() {
+                bail!(
+                    "stage {} emits {} values but stage {} loads {}",
+                    w[0].stage,
+                    sent.len(),
+                    w[1].stage,
+                    recv.len()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::dfg::OpKind;
+
+    #[test]
+    fn gradient_program_matches_table1_shape() {
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        assert_eq!(p.n_stages(), 4);
+        let s1 = &p.stages[0];
+        assert_eq!(s1.n_loads(), 5);
+        assert_eq!(s1.n_execs(), 4);
+        assert_eq!(
+            s1.instrs.iter().map(|i| i.mnemonic()).collect::<Vec<_>>(),
+            vec!["SUB (R0 R2)", "SUB (R1 R2)", "SUB (R2 R3)", "SUB (R2 R4)"]
+        );
+        let s2 = &p.stages[1];
+        assert_eq!(
+            s2.instrs.iter().map(|i| i.mnemonic()).collect::<Vec<_>>(),
+            vec!["SQR (R0 R0)", "SQR (R1 R1)", "SQR (R2 R2)", "SQR (R3 R3)"]
+        );
+        let s3 = &p.stages[2];
+        assert_eq!(
+            s3.instrs.iter().map(|i| i.mnemonic()).collect::<Vec<_>>(),
+            vec!["ADD (R0 R1)", "ADD (R2 R3)"]
+        );
+        let s4 = &p.stages[3];
+        assert_eq!(
+            s4.instrs.iter().map(|i| i.mnemonic()).collect::<Vec<_>>(),
+            vec!["ADD (R0 R1)"]
+        );
+        p.check_dataflow().unwrap();
+    }
+
+    #[test]
+    fn chebyshev_uses_bypass_chain() {
+        let g = bench_suite::load("chebyshev").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        assert_eq!(p.n_stages(), 7);
+        // Interior stages: 1 op + 1 bypass; final stage: just the op.
+        for st in &p.stages[..6] {
+            assert_eq!(st.ops.len(), 1, "stage {}", st.stage);
+            assert_eq!(st.bypasses.len(), 1, "stage {}", st.stage);
+        }
+        assert_eq!(p.stages[6].bypasses.len(), 0);
+        assert!(p.stages[6].instrs.len() == 1);
+        p.check_dataflow().unwrap();
+    }
+
+    #[test]
+    fn consts_allocated_from_top() {
+        let g = bench_suite::load("chebyshev").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        // Stage 1: h1 = x * 16 — const 16 must sit at slot 31.
+        let s1 = &p.stages[0];
+        assert_eq!(s1.consts.len(), 1);
+        assert_eq!(s1.consts[0].1, 16);
+        assert_eq!(s1.rf_slot[&s1.consts[0].0], 31);
+        match s1.instrs[0] {
+            FuInstr::Arith { op, rs1, rs2 } => {
+                assert_eq!(op, OpKind::Mul);
+                assert_eq!(rs1, 0); // x arrives at slot 0
+                assert_eq!(rs2, 31); // const 16
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn context_image_matches_paper_size_for_chebyshev() {
+        // 13 instruction words * 5 B = 65 B — the paper's lower bound
+        // for the benchmark set.
+        let g = bench_suite::load("chebyshev").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let img = p.context_image().unwrap();
+        assert_eq!(img.n_instrs(), 13);
+        assert_eq!(img.size_bytes_instr_only(), 65);
+    }
+
+    #[test]
+    fn all_benchmarks_schedule_cleanly() {
+        for g in bench_suite::load_all().unwrap() {
+            let p = Program::schedule(&g).unwrap();
+            p.check_dataflow().unwrap();
+            let img = p.context_image().unwrap();
+            img.validate().unwrap();
+            // IM depth limit respected.
+            for st in &p.stages {
+                assert!(st.n_execs() <= 32, "{} stage {}", g.name, st.stage);
+            }
+        }
+    }
+
+    #[test]
+    fn output_order_resolved() {
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        assert_eq!(p.output_order, vec![("out".to_string(), 0)]);
+    }
+
+    #[test]
+    fn context_sizes_span_paper_range() {
+        // Paper §V: context data ranges 65..410 bytes across the suite.
+        let mut sizes = Vec::new();
+        for name in bench_suite::table2_names() {
+            let g = bench_suite::load(name).unwrap();
+            let p = Program::schedule(&g).unwrap();
+            sizes.push(p.context_image().unwrap().size_bytes_instr_only());
+        }
+        // Paper reports 65..410 B. The 65 B lower bound (chebyshev)
+        // reproduces exactly; our scheduler emits fewer bypass words on
+        // the biggest kernels so the upper end is smaller (favourable —
+        // see EXPERIMENTS.md §ctx).
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert_eq!(min, 65, "sizes {sizes:?}");
+        assert!((150..=410).contains(&max), "sizes {sizes:?}");
+    }
+}

@@ -1,0 +1,260 @@
+//! Value routing across the linear pipeline.
+//!
+//! With ASAP stage allocation (one stage per FU), every value has a
+//! producer stage `p` (0 for primary inputs) and a set of consumer
+//! stages. A value reaches stage `p+1` for free — an op's result is
+//! emitted downstream by the DSP, and inputs stream in from the FIFO —
+//! but reaching a later stage requires explicit *data bypass*
+//! instructions in each intervening FU (paper §III.A: "two types of
+//! instruction: arithmetic or data bypass").
+//!
+//! Output values behave as if consumed one stage past the last FU (the
+//! output FIFO), so results produced early must be bypassed to the end
+//! of the pipeline.
+
+use crate::dfg::{Dfg, Levels, NodeId};
+use std::collections::BTreeMap;
+
+/// Routing facts for one streamed (non-const) value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValueRoute {
+    pub value: NodeId,
+    /// Producer stage: 0 = primary input, s >= 1 = op at stage s.
+    pub producer: u32,
+    /// Stages with an op consuming this value (sorted, deduped).
+    pub consumer_stages: Vec<u32>,
+    /// Last stage the value must reach (includes the virtual output
+    /// stage `depth+1` when the value feeds a primary output).
+    pub last_stage: u32,
+}
+
+impl ValueRoute {
+    /// Stages whose FU must issue a bypass for this value.
+    pub fn bypass_stages(&self) -> impl Iterator<Item = u32> + '_ {
+        (self.producer + 1)..self.last_stage
+    }
+
+    /// Stages that receive this value into their RF
+    /// (`producer+1 ..= last_stage`, capped at the real pipeline depth
+    /// by the caller for the virtual output stage).
+    pub fn arrival_stages(&self) -> impl Iterator<Item = u32> + '_ {
+        (self.producer + 1)..=self.last_stage
+    }
+}
+
+/// Routing table for a scheduled DFG.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub routes: BTreeMap<NodeId, ValueRoute>,
+    pub depth: u32,
+}
+
+impl Routing {
+    pub fn of(g: &Dfg, levels: &Levels) -> Routing {
+        let depth = levels.depth;
+        let mut routes: BTreeMap<NodeId, ValueRoute> = BTreeMap::new();
+        // Seed producers: primary inputs (stage 0) and ops (their level).
+        for id in g.ids() {
+            let n = g.node(id);
+            if n.is_input() || n.is_op() {
+                routes.insert(
+                    id,
+                    ValueRoute {
+                        value: id,
+                        producer: if n.is_input() {
+                            0
+                        } else {
+                            levels.level[id as usize]
+                        },
+                        consumer_stages: Vec::new(),
+                        last_stage: 0,
+                    },
+                );
+            }
+        }
+        // Consumers: op operands (non-const) and primary outputs.
+        for id in g.ids() {
+            let n = g.node(id);
+            if n.is_op() {
+                let s = levels.level[id as usize];
+                for &a in &n.args {
+                    if let Some(r) = routes.get_mut(&a) {
+                        r.consumer_stages.push(s);
+                    }
+                }
+            } else if n.is_output() {
+                let a = n.args[0];
+                let r = routes
+                    .get_mut(&a)
+                    .expect("output of a const is folded away by normalize");
+                r.consumer_stages.push(depth + 1);
+            }
+        }
+        for r in routes.values_mut() {
+            r.consumer_stages.sort_unstable();
+            r.consumer_stages.dedup();
+            r.last_stage = r.consumer_stages.last().copied().unwrap_or(r.producer);
+        }
+        // Values with no consumers (unused inputs kept for the
+        // signature): they stream in but never leave stage 1.
+        for r in routes.values_mut() {
+            if r.consumer_stages.is_empty() && r.producer == 0 {
+                r.last_stage = 1; // loaded into FU1's RF, then dead
+            }
+        }
+        Routing { routes, depth }
+    }
+
+    /// Values arriving into stage `s`'s RF, ordered by upstream issue
+    /// order: stage-(s-1) op results first (DFG id order), then values
+    /// bypassed by stage s-1 (stable id order). For s == 1 this is the
+    /// input FIFO order (input declaration order).
+    pub fn arrivals(&self, g: &Dfg, levels: &Levels, s: u32) -> Vec<NodeId> {
+        assert!(s >= 1);
+        let mut out = Vec::new();
+        if s == 1 {
+            // All inputs stream in, in declaration order.
+            out.extend(g.inputs());
+            return out;
+        }
+        // Results computed by stage s-1 that must reach stage s.
+        for id in g.ids() {
+            if g.node(id).is_op() && levels.level[id as usize] == s - 1 {
+                let r = &self.routes[&id];
+                if r.last_stage >= s {
+                    out.push(id);
+                }
+            }
+        }
+        // Values bypassed through stage s-1.
+        for (id, r) in &self.routes {
+            if r.bypass_stages().any(|b| b == s - 1) {
+                out.push(*id);
+            }
+        }
+        out
+    }
+
+    /// Values stage `s`'s FU must forward with bypass instructions,
+    /// in stable id order.
+    pub fn bypasses(&self, s: u32) -> Vec<NodeId> {
+        self.routes
+            .values()
+            .filter(|r| r.bypass_stages().any(|b| b == s))
+            .map(|r| r.value)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::dfg::{Dfg, Levels, OpKind};
+
+    fn chain_with_skip() -> Dfg {
+        // t1 = a+b (s1); t2 = t1*c (s2); t3 = t2+a (s3): `a` skips to s3.
+        let mut g = Dfg::new("skip");
+        let a = g.add_input("a");
+        let b = g.add_input("b");
+        let c = g.add_input("c");
+        let t1 = g.add_op(OpKind::Add, a, b);
+        let t2 = g.add_op(OpKind::Mul, t1, c);
+        let t3 = g.add_op(OpKind::Add, t2, a);
+        g.add_output("out", t3);
+        g
+    }
+
+    #[test]
+    fn input_bypassed_to_late_consumer() {
+        let g = chain_with_skip();
+        let levels = Levels::of(&g);
+        let r = Routing::of(&g, &levels);
+        let a_route = &r.routes[&0];
+        assert_eq!(a_route.producer, 0);
+        assert_eq!(a_route.consumer_stages, vec![1, 3]);
+        assert_eq!(a_route.last_stage, 3);
+        assert_eq!(a_route.bypass_stages().collect::<Vec<_>>(), vec![1, 2]);
+        // c is consumed at stage 2 only: bypass through stage 1.
+        let c_route = &r.routes[&2];
+        assert_eq!(c_route.bypass_stages().collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn final_result_routed_to_output_fifo() {
+        let g = chain_with_skip();
+        let levels = Levels::of(&g);
+        let r = Routing::of(&g, &levels);
+        let t3 = &r.routes[&5];
+        assert_eq!(t3.producer, 3);
+        assert_eq!(t3.last_stage, 4); // virtual output stage depth+1
+        assert_eq!(t3.bypass_stages().count(), 0);
+    }
+
+    #[test]
+    fn early_output_needs_bypass_to_end() {
+        // out0 = a+b (stage 1), out1 = (a+b)*c then +d (stage 3):
+        // the stage-1 result must bypass through stages 2..=depth.
+        let mut g = Dfg::new("early");
+        let a = g.add_input("a");
+        let b = g.add_input("b");
+        let c = g.add_input("c");
+        let d = g.add_input("d");
+        let s = g.add_op(OpKind::Add, a, b);
+        let m = g.add_op(OpKind::Mul, s, c);
+        let f = g.add_op(OpKind::Add, m, d);
+        g.add_output("early", s);
+        g.add_output("late", f);
+        let levels = Levels::of(&g);
+        let r = Routing::of(&g, &levels);
+        let s_route = &r.routes[&4];
+        assert_eq!(s_route.producer, 1);
+        assert_eq!(s_route.last_stage, 4); // depth 3 + 1
+        assert_eq!(s_route.bypass_stages().collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn gradient_arrivals_match_table1() {
+        let g = bench_suite::load("gradient").unwrap();
+        let levels = Levels::of(&g);
+        let r = Routing::of(&g, &levels);
+        // Stage 1 receives the 5 inputs.
+        assert_eq!(r.arrivals(&g, &levels, 1).len(), 5);
+        // Stage 2 receives the 4 SUB results, stage 3 the 4 SQRs,
+        // stage 4 the 2 ADDs; no bypasses anywhere.
+        assert_eq!(r.arrivals(&g, &levels, 2).len(), 4);
+        assert_eq!(r.arrivals(&g, &levels, 3).len(), 4);
+        assert_eq!(r.arrivals(&g, &levels, 4).len(), 2);
+        for s in 1..=4 {
+            assert!(r.bypasses(s).is_empty(), "stage {s}");
+        }
+    }
+
+    #[test]
+    fn chebyshev_bypasses_x_down_the_chain() {
+        let g = bench_suite::load("chebyshev").unwrap();
+        let levels = Levels::of(&g);
+        let r = Routing::of(&g, &levels);
+        // x (node 0) is consumed at stages 1,2,4,5,7: bypass 1..=6.
+        let x = &r.routes[&0];
+        assert_eq!(x.last_stage, 7);
+        assert_eq!(x.bypass_stages().collect::<Vec<_>>(), vec![1, 2, 3, 4, 5, 6]);
+        // Each interior stage receives exactly {prev result, x}.
+        for s in 2..=7 {
+            assert_eq!(r.arrivals(&g, &levels, s).len(), 2, "stage {s}");
+        }
+    }
+
+    #[test]
+    fn unused_input_still_streams_in() {
+        let mut g = Dfg::new("u");
+        let a = g.add_input("a");
+        let _unused = g.add_input("zz");
+        let t = g.add_op(OpKind::Mul, a, a);
+        g.add_output("o", t);
+        let levels = Levels::of(&g);
+        let r = Routing::of(&g, &levels);
+        assert_eq!(r.arrivals(&g, &levels, 1).len(), 2);
+        assert!(r.bypasses(1).is_empty());
+    }
+}

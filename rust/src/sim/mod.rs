@@ -1,0 +1,6 @@
+//! Simulation harnesses over the cycle-accurate architecture:
+//! trace capture and static-vs-dynamic cross-validation.
+
+pub mod trace;
+
+pub use trace::{trace_run, validate_against_schedule, Event, EventKind, TracedRun};

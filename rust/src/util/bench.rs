@@ -1,0 +1,191 @@
+//! Self-timed micro-benchmark harness (no `criterion` in the offline
+//! image). Used by the `rust/benches/*` targets (all `harness = false`).
+//!
+//! Methodology: warm up for a fixed duration, then run timed batches
+//! until a target measurement time elapses; report mean/p50/min over
+//! per-iteration times with outlier-robust stats from `util::stats`.
+
+use crate::util::stats::Samples;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+    /// Optional throughput annotation (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    /// items/second, if items_per_iter was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / (self.mean_ns * 1e-9))
+    }
+
+    pub fn report_line(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>10.2} Mitems/s", t / 1e6),
+            Some(t) => format!("  {:>10.0} items/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12}/iter (p50 {:>12}, min {:>12}, n={}){}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.min_ns),
+            self.iters,
+            tput
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}")
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_iters: 5,
+        }
+    }
+
+    /// Honour `TMFU_BENCH_FAST=1` for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("TMFU_BENCH_FAST").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call. A returned
+    /// value is black-boxed to keep the optimizer honest.
+    pub fn run<R, F: FnMut() -> R>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Samples::new();
+        let mut iters = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed() < self.measure || iters < self.min_iters {
+            let it = Instant::now();
+            black_box(f());
+            samples.push(it.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        Measurement {
+            name: name.to_string(),
+            iters,
+            mean_ns: samples.mean(),
+            p50_ns: samples.percentile(50.0),
+            min_ns: samples.min(),
+            items_per_iter: None,
+        }
+    }
+
+    /// Like `run` but annotates throughput.
+    pub fn run_with_items<R, F: FnMut() -> R>(
+        &self,
+        name: &str,
+        items_per_iter: f64,
+        f: F,
+    ) -> Measurement {
+        let mut m = self.run(name, f);
+        m.items_per_iter = Some(items_per_iter);
+        m
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Section header printer used by all bench binaries for consistent
+/// greppable output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench::quick();
+        let m = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters >= 5);
+        assert!(m.min_ns <= m.mean_ns);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let b = Bench::quick();
+        let m = b.run_with_items("noop", 1000.0, || 1);
+        let t = m.throughput().unwrap();
+        assert!(t > 0.0);
+        assert!(m.report_line().contains("items/s"));
+    }
+
+    #[test]
+    fn report_line_formats() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 3,
+            mean_ns: 1_500_000.0,
+            p50_ns: 900.0,
+            min_ns: 400.0,
+            items_per_iter: None,
+        };
+        let line = m.report_line();
+        assert!(line.contains("1.500ms"), "{line}");
+        assert!(line.contains("/iter"), "{line}");
+        assert!(line.contains("900"), "{line}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Bit-level packing helpers for the overlay ISA.
+//!
+//! The FU instruction is a 32-bit word with explicit DSP48E1 control
+//! fields (no decoders in the hardware — the bits drive the primitive
+//! directly), and the context stream is 40-bit words. These helpers give
+//! checked field insert/extract over `u64` containers.
+
+/// Insert `value` into `word` at `[lsb, lsb+width)`. Panics if the value
+/// does not fit the field or the field exceeds the container.
+#[inline]
+pub fn set_field(word: u64, lsb: u32, width: u32, value: u64) -> u64 {
+    assert!(width >= 1 && width <= 64, "field width {width}");
+    assert!(lsb + width <= 64, "field [{lsb},{})", lsb + width);
+    let mask = mask(width);
+    assert!(value <= mask, "value {value:#x} exceeds {width}-bit field");
+    (word & !(mask << lsb)) | (value << lsb)
+}
+
+/// Extract the `[lsb, lsb+width)` field.
+#[inline]
+pub fn get_field(word: u64, lsb: u32, width: u32) -> u64 {
+    assert!(width >= 1 && width <= 64);
+    assert!(lsb + width <= 64);
+    (word >> lsb) & mask(width)
+}
+
+/// All-ones mask of `width` bits.
+#[inline]
+pub fn mask(width: u32) -> u64 {
+    if width >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// A little-endian bit stream writer used to serialize context memory
+/// images (sequences of 40-bit words) into bytes.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Number of valid bits in the last byte (0 == byte-aligned).
+    bit_pos: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `width` bits of `value`.
+    pub fn push(&mut self, value: u64, width: u32) {
+        assert!(width <= 64);
+        assert!(width == 64 || value <= mask(width), "value does not fit");
+        let mut remaining = width;
+        let mut v = value;
+        while remaining > 0 {
+            if self.bit_pos == 0 {
+                self.bytes.push(0);
+            }
+            let space = 8 - self.bit_pos;
+            let take = space.min(remaining);
+            let chunk = (v & mask(take)) as u8;
+            let last = self.bytes.last_mut().unwrap();
+            *last |= chunk << self.bit_pos;
+            self.bit_pos = (self.bit_pos + take) % 8;
+            v >>= take;
+            remaining -= take;
+        }
+    }
+
+    pub fn len_bits(&self) -> usize {
+        if self.bit_pos == 0 {
+            self.bytes.len() * 8
+        } else {
+            (self.bytes.len() - 1) * 8 + self.bit_pos as usize
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+/// Matching little-endian bit stream reader.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos_bits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos_bits: 0 }
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.bytes.len() * 8 - self.pos_bits
+    }
+
+    /// Read `width` bits; returns `None` past the end.
+    pub fn read(&mut self, width: u32) -> Option<u64> {
+        assert!(width <= 64);
+        if self.remaining_bits() < width as usize {
+            return None;
+        }
+        let mut out: u64 = 0;
+        let mut got = 0u32;
+        while got < width {
+            let byte = self.bytes[self.pos_bits / 8];
+            let bit_off = (self.pos_bits % 8) as u32;
+            let avail = 8 - bit_off;
+            let take = avail.min(width - got);
+            let chunk = ((byte >> bit_off) as u64) & mask(take);
+            out |= chunk << got;
+            got += take;
+            self.pos_bits += take as usize;
+        }
+        Some(out)
+    }
+}
+
+/// Count of ones — used by resource estimators for constant-multiplier
+/// strength-reduction cost (adders per set bit in CSD-lite form).
+pub fn popcount_u64(v: u64) -> u32 {
+    v.count_ones()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_round_trip() {
+        let mut w = 0u64;
+        w = set_field(w, 0, 5, 0b10101);
+        w = set_field(w, 5, 5, 0b01010);
+        w = set_field(w, 10, 21, 0x1F_FF00);
+        assert_eq!(get_field(w, 0, 5), 0b10101);
+        assert_eq!(get_field(w, 5, 5), 0b01010);
+        assert_eq!(get_field(w, 10, 21), 0x1F_FF00);
+    }
+
+    #[test]
+    fn field_overwrite_clears_old_bits() {
+        let w = set_field(u64::MAX, 8, 8, 0x00);
+        assert_eq!(get_field(w, 8, 8), 0);
+        assert_eq!(get_field(w, 0, 8), 0xFF);
+        assert_eq!(get_field(w, 16, 8), 0xFF);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn field_value_too_wide_panics() {
+        set_field(0, 0, 3, 8);
+    }
+
+    #[test]
+    fn bitstream_round_trip_40bit_words() {
+        let words: Vec<u64> = vec![0x55_AAAA_5555, 0xFF_0000_00FF, 0x00_1234_5678];
+        let mut w = BitWriter::new();
+        for &v in &words {
+            w.push(v, 40);
+        }
+        assert_eq!(w.len_bits(), 120);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), 15);
+        let mut r = BitReader::new(&bytes);
+        for &v in &words {
+            assert_eq!(r.read(40), Some(v));
+        }
+        assert_eq!(r.read(1), None);
+    }
+
+    #[test]
+    fn bitstream_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.push(0b1, 1);
+        w.push(0b1011, 4);
+        w.push(0xDEADBEEF, 32);
+        w.push(0x3FF, 10);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(1), Some(1));
+        assert_eq!(r.read(4), Some(0b1011));
+        assert_eq!(r.read(32), Some(0xDEADBEEF));
+        assert_eq!(r.read(10), Some(0x3FF));
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert_eq!(r.read(8), Some(0xFF));
+        assert_eq!(r.read(1), None);
+    }
+
+    #[test]
+    fn mask_widths() {
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(5), 31);
+        assert_eq!(mask(64), u64::MAX);
+    }
+}

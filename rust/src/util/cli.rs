@@ -1,0 +1,288 @@
+//! Tiny CLI argument parser (no `clap` in the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Unknown flags are an error; `--help` is generated from
+//! the declared options.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Declared option (for help text and validation).
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    takes_value: bool,
+    help: String,
+    default: Option<String>,
+}
+
+/// A declarative command spec.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positional: Vec<(String, String)>, // (name, help)
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            takes_value: false,
+            help: help.to_string(),
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            takes_value: true,
+            help: help.to_string(),
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+    pub fn about(&self) -> &str {
+        &self.about
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  tmfu {}", self.name, self.about, self.name);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        if !self.positional.is_empty() {
+            s.push_str("\n\nARGS:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p:<14}> {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\n\nOPTIONS:\n");
+            for o in &self.opts {
+                let lhs = if o.takes_value {
+                    format!("--{} <v>", o.name)
+                } else {
+                    format!("--{}", o.name)
+                };
+                let dflt = o
+                    .default
+                    .as_ref()
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {lhs:<22} {}{dflt}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse `args` (not including the command name itself).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos: Vec<String> = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("--{key} requires a value")))?,
+                    };
+                    values.insert(key, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{key} does not take a value")));
+                    }
+                    flags.push(key);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+        }
+        if pos.len() < self.positional.len() {
+            return Err(CliError(format!(
+                "missing required argument <{}>\n\n{}",
+                self.positional[pos.len()].0,
+                self.usage()
+            )));
+        }
+        if pos.len() > self.positional.len() {
+            return Err(CliError(format!(
+                "unexpected positional argument '{}'",
+                pos[self.positional.len()]
+            )));
+        }
+        // Apply defaults.
+        for o in &self.opts {
+            if o.takes_value && !values.contains_key(&o.name) {
+                if let Some(d) = &o.default {
+                    values.insert(o.name.clone(), d.clone());
+                }
+            }
+        }
+        let positional = self
+            .positional
+            .iter()
+            .map(|(n, _)| n.clone())
+            .zip(pos)
+            .collect();
+        Ok(Matches {
+            values,
+            flags,
+            positional,
+        })
+    }
+}
+
+/// Parsed results.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: BTreeMap<String, String>,
+}
+
+impl Matches {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_pos(&self, name: &str) -> Option<&str> {
+        self.positional.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: '{v}' is not a valid integer"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: '{v}' is not a valid number"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn demo() -> Command {
+        Command::new("simulate", "run the cycle simulator")
+            .positional("kernel", "benchmark name")
+            .opt("batches", "number of data batches", Some("4"))
+            .opt("seed", "prng seed", None)
+            .flag("trace", "dump cycle trace")
+    }
+
+    #[test]
+    fn parses_positional_and_defaults() {
+        let m = demo().parse(&args(&["gradient"])).unwrap();
+        assert_eq!(m.get_pos("kernel"), Some("gradient"));
+        assert_eq!(m.get_usize("batches").unwrap(), Some(4));
+        assert_eq!(m.get("seed"), None);
+        assert!(!m.flag("trace"));
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let m = demo()
+            .parse(&args(&["gradient", "--batches=9", "--seed", "17", "--trace"]))
+            .unwrap();
+        assert_eq!(m.get_usize("batches").unwrap(), Some(9));
+        assert_eq!(m.get("seed"), Some("17"));
+        assert!(m.flag("trace"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing() {
+        assert!(demo().parse(&args(&["gradient", "--nope"])).is_err());
+        assert!(demo().parse(&args(&[])).is_err());
+        assert!(demo().parse(&args(&["a", "b"])).is_err());
+        assert!(demo().parse(&args(&["gradient", "--seed"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(demo().parse(&args(&["gradient", "--trace=1"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let err = demo().parse(&args(&["--help"])).unwrap_err();
+        assert!(err.0.contains("--batches"));
+        assert!(err.0.contains("USAGE"));
+    }
+
+    #[test]
+    fn numeric_validation() {
+        let m = demo().parse(&args(&["g", "--batches", "abc"])).unwrap();
+        assert!(m.get_usize("batches").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Substrate utilities built in-repo (the offline image ships only
+//! `xla`/`anyhow`/`thiserror`; everything else a framework normally pulls
+//! from crates.io lives here, with its own tests).
+
+pub mod bench;
+pub mod bits;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,273 @@
+//! Mini property-testing harness (no `proptest` in the offline image).
+//!
+//! Provides seeded random case generation with greedy shrinking for the
+//! coordinator/scheduler invariant tests. Usage:
+//!
+//! ```ignore
+//! check(100, gen_vec(gen_i64(-100, 100), 0, 20), |xs| {
+//!     prop_assert(xs.iter().sum::<i64>() <= 2000, "sum bound")
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Result of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// A generator produces a value and can propose shrunk variants of it.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" values, most aggressive first.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases; on failure, greedily shrink and panic with
+/// the minimal counterexample. Seed is derived from the property name so
+/// failures reproduce across runs.
+pub fn check<G: Gen, F>(cases: usize, gen: G, name: &str, prop: F)
+where
+    F: Fn(&G::Value) -> PropResult,
+{
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            let (min_v, min_msg) = shrink_loop(&gen, v, msg, &prop);
+            panic!(
+                "property '{name}' failed (case {case}/{cases}): {min_msg}\n  minimal counterexample: {min_v:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen, F>(gen: &G, mut v: G::Value, mut msg: String, prop: &F) -> (G::Value, String)
+where
+    F: Fn(&G::Value) -> PropResult,
+{
+    // Bounded greedy shrink.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in gen.shrink(&v) {
+            if let Err(m) = prop(&cand) {
+                v = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (v, msg)
+}
+
+// ---------------------------------------------------------------------
+// Basic generators
+// ---------------------------------------------------------------------
+
+/// Uniform i64 in an inclusive range; shrinks toward `lo.max(0).min(hi)`.
+pub struct GenI64 {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+pub fn gen_i64(lo: i64, hi: i64) -> GenI64 {
+    assert!(lo <= hi);
+    GenI64 { lo, hi }
+}
+
+impl Gen for GenI64 {
+    type Value = i64;
+    fn generate(&self, rng: &mut Rng) -> i64 {
+        rng.range_i64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let target = 0i64.clamp(self.lo, self.hi);
+        let mut out = Vec::new();
+        if *v != target {
+            out.push(target);
+            let mid = target + (v - target) / 2;
+            if mid != *v {
+                out.push(mid);
+            }
+            if (v - target).abs() >= 1 {
+                out.push(v - (v - target).signum());
+            }
+        }
+        out
+    }
+}
+
+/// i32 over the full wrapping range (overlay data words).
+pub struct GenI32Full;
+
+impl Gen for GenI32Full {
+    type Value = i32;
+    fn generate(&self, rng: &mut Rng) -> i32 {
+        // Mix extremes in, they catch wrapping bugs.
+        match rng.index(8) {
+            0 => i32::MIN,
+            1 => i32::MAX,
+            2 => 0,
+            3 => -1,
+            _ => rng.next_i32(),
+        }
+    }
+    fn shrink(&self, v: &i32) -> Vec<i32> {
+        if *v == 0 {
+            Vec::new()
+        } else {
+            vec![0, v / 2]
+        }
+    }
+}
+
+/// Vector of values with a length range; shrinks by halving and by
+/// element-wise shrinking of the first shrinkable element.
+pub struct GenVec<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+pub fn gen_vec<G>(inner: G, min_len: usize, max_len: usize) -> GenVec<G> {
+    assert!(min_len <= max_len);
+    GenVec {
+        inner,
+        min_len,
+        max_len,
+    }
+}
+
+impl<G: Gen> Gen for GenVec<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let len = self.min_len + rng.index(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // Remove back half, then one element.
+            let keep = (v.len() / 2).max(self.min_len);
+            out.push(v[..keep].to_vec());
+            let mut minus_one = v.clone();
+            minus_one.pop();
+            out.push(minus_one);
+        }
+        // Shrink first element that offers candidates.
+        for (i, x) in v.iter().enumerate() {
+            let cands = self.inner.shrink(x);
+            if let Some(c) = cands.into_iter().next() {
+                let mut w = v.clone();
+                w[i] = c;
+                out.push(w);
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct GenPair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for GenPair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(50, gen_i64(0, 100), "in-range", |v| {
+            prop_assert((0..=100).contains(v), "range")
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let caught = std::panic::catch_unwind(|| {
+            check(200, gen_i64(0, 1000), "fails-above-50", |v| {
+                prop_assert(*v <= 50, "must be <= 50")
+            });
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land on the boundary counterexample 51.
+        assert!(msg.contains("counterexample: 51"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let caught = std::panic::catch_unwind(|| {
+            check(
+                200,
+                gen_vec(gen_i64(0, 9), 0, 30),
+                "short-vecs-only",
+                |v| prop_assert(v.len() < 3, "len < 3"),
+            );
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // Minimal failing vec has exactly 3 elements.
+        let needle = "minimal counterexample: [";
+        let tail = &msg[msg.find(needle).unwrap() + needle.len()..];
+        let commas = tail[..tail.find(']').unwrap()].matches(',').count();
+        assert_eq!(commas, 2, "{msg}");
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        // Same property name => same seed => same failure.
+        let run = || {
+            std::panic::catch_unwind(|| {
+                check(100, gen_i64(0, 1_000_000), "det", |v| {
+                    prop_assert(*v < 999_999, "bound")
+                });
+            })
+        };
+        let a = run().err().map(|e| *e.downcast::<String>().unwrap());
+        let b = run().err().map(|e| *e.downcast::<String>().unwrap());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn i32_full_hits_extremes() {
+        let mut rng = Rng::new(3);
+        let g = GenI32Full;
+        let vals: Vec<i32> = (0..200).map(|_| g.generate(&mut rng)).collect();
+        assert!(vals.contains(&i32::MIN));
+        assert!(vals.contains(&i32::MAX));
+    }
+}

@@ -1,0 +1,277 @@
+//! ASCII table rendering for benchmark/report output.
+//!
+//! Every table and figure the benches regenerate is printed through this
+//! formatter so paper-vs-measured comparisons line up in the terminal and
+//! in `bench_output.txt`. Also emits CSV for downstream plotting.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder: header + rows of strings.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: Some(title.to_string()),
+            ..Default::default()
+        }
+    }
+
+    pub fn untitled() -> Self {
+        Self::default()
+    }
+
+    /// Set the header; columns default to right-aligned except the first.
+    pub fn header<S: AsRef<str>>(mut self, cols: &[S]) -> Self {
+        self.header = cols.iter().map(|c| c.as_ref().to_string()).collect();
+        self.aligns = (0..self.header.len())
+            .map(|i| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        self
+    }
+
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, cols: &[S]) -> &mut Self {
+        assert_eq!(
+            cols.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cols.len(),
+            self.header.len()
+        );
+        self.rows.push(cols.iter().map(|c| c.as_ref().to_string()).collect());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                w[i] = w[i].max(cell.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render with unicode-free box drawing (pipes and dashes).
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&self.render_row(&self.header, &w, true));
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&self.render_row(row, &w, false));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    fn render_row(&self, cells: &[String], w: &[usize], is_header: bool) -> String {
+        let mut line = String::from("|");
+        for (i, cell) in cells.iter().enumerate() {
+            let pad = w[i] - cell.chars().count();
+            let (l, r) = if is_header || self.aligns[i] == Align::Left {
+                (0, pad)
+            } else {
+                (pad, 0)
+            };
+            line.push(' ');
+            line.push_str(&" ".repeat(l));
+            line.push_str(cell);
+            line.push_str(&" ".repeat(r));
+            line.push(' ');
+            line.push('|');
+        }
+        line.push('\n');
+        line
+    }
+
+    /// CSV emission (RFC-4180 quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let quote = |c: &str| -> String {
+            if c.contains([',', '"', '\n']) {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        out.push_str(&self.header.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart — used for the Fig. 5 / Fig. 6 renderings.
+pub struct BarChart {
+    title: String,
+    entries: Vec<(String, Vec<(String, f64)>)>, // group -> series values
+    width: usize,
+}
+
+impl BarChart {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            entries: Vec::new(),
+            width: 50,
+        }
+    }
+
+    pub fn width(mut self, w: usize) -> Self {
+        self.width = w;
+        self
+    }
+
+    /// Add a group (e.g. a benchmark) with one bar per series.
+    pub fn group(&mut self, name: &str, series: &[(&str, f64)]) -> &mut Self {
+        self.entries.push((
+            name.to_string(),
+            series.iter().map(|(s, v)| (s.to_string(), *v)).collect(),
+        ));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let max = self
+            .entries
+            .iter()
+            .flat_map(|(_, s)| s.iter().map(|(_, v)| *v))
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        let label_w = self
+            .entries
+            .iter()
+            .flat_map(|(g, s)| s.iter().map(move |(n, _)| g.chars().count() + n.chars().count() + 1))
+            .max()
+            .unwrap_or(8);
+        let mut out = format!("{}\n", self.title);
+        for (group, series) in &self.entries {
+            for (name, v) in series {
+                let label = format!("{group}/{name}");
+                let bar_len = ((v / max) * self.width as f64).round() as usize;
+                out.push_str(&format!(
+                    "  {:<label_w$} |{:<width$}| {:.2}\n",
+                    label,
+                    "#".repeat(bar_len),
+                    v,
+                    label_w = label_w,
+                    width = self.width
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Format helper: fixed decimals.
+pub fn fmt_f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Format helper: ratio as "N.NNx".
+pub fn fmt_ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+/// Format helper: percent delta between measured and reference.
+pub fn fmt_delta_pct(measured: f64, reference: f64) -> String {
+    if reference == 0.0 {
+        return "n/a".to_string();
+    }
+    format!("{:+.1}%", (measured - reference) / reference * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("Demo").header(&["name", "value"]);
+        t.row(&["alpha", "1"]);
+        t.row(&["b", "100"]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("| alpha |     1 |"));
+        assert!(s.contains("| b     |   100 |"));
+        // All lines between pluses have equal width.
+        let widths: Vec<usize> = s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::untitled().header(&["a", "b"]);
+        t.row(&["only-one"]);
+    }
+
+    #[test]
+    fn csv_quotes_properly() {
+        let mut t = Table::untitled().header(&["k", "v"]);
+        t.row(&["has,comma", "has\"quote"]);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().nth(1).unwrap(), "\"has,comma\",\"has\"\"quote\"");
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let mut c = BarChart::new("t").width(10);
+        c.group("g", &[("a", 10.0), ("b", 5.0)]);
+        let s = c.render();
+        assert!(s.contains("##########"), "{s}");
+        assert!(s.contains("#####"), "{s}");
+    }
+
+    #[test]
+    fn delta_pct() {
+        assert_eq!(fmt_delta_pct(110.0, 100.0), "+10.0%");
+        assert_eq!(fmt_delta_pct(90.0, 100.0), "-10.0%");
+        assert_eq!(fmt_delta_pct(1.0, 0.0), "n/a");
+    }
+}

@@ -1,0 +1,43 @@
+# Build / verification entry points. `make verify` is the CI gate.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test verify fmt clippy bench artifacts dfg check-dfg clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --all --check
+
+clippy:
+	$(CARGO) clippy --release --all-targets -- -D warnings
+
+# The full gate: formatting, lints, release build, test suite.
+verify: fmt clippy build test
+
+bench:
+	$(CARGO) bench
+
+# AOT-compile the kernel artifacts for the PJRT backend (needs jax).
+# The interpreter (`--backend ref`) and cycle-accurate simulator
+# (`--backend sim`) backends serve without any artifacts.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../rust/artifacts
+
+# Regenerate the committed DFG/schedule interchange JSONs from the
+# kernel sources (prefer `tmfu export-dfg` when a build exists).
+dfg:
+	$(CARGO) run --release --bin tmfu -- export-dfg --out-dir benchmarks/dfg
+
+# Toolchain-free cross-check of benchmarks/dfg against the compiler
+# mirror (also validates the paper's Table II characteristics).
+check-dfg:
+	$(PYTHON) tools/gen_dfg_json.py --check-only
+
+clean:
+	$(CARGO) clean

@@ -2,9 +2,12 @@
 //! recorded in EXPERIMENTS.md §E2E).
 //!
 //! All three layers compose on a real workload:
-//!   L1/L2 — the AOT-compiled JAX+Pallas kernels (`make artifacts`)
+//!   L1/L2 — an execution backend: the cycle-accurate overlay
+//!           simulator (default, zero setup), the DFG interpreter, or
+//!           the AOT-compiled JAX+Pallas kernels over PJRT
+//!           (`make artifacts`);
 //!   L3    — the Rust coordinator: per-kernel batching queues, context-
-//!           affine dispatch, replicated fabric workers over PJRT.
+//!           affine dispatch, replicated backend-generic fabric workers.
 //!
 //! The workload is a Poisson-arrival stream of requests over a Zipf-ish
 //! kernel mix (a few hot kernels, a long tail — the multi-kernel
@@ -14,13 +17,14 @@
 //! counts and the simulated 300 MHz fabric timeline.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_serving [requests] [pipelines]
+//! cargo run --release --example e2e_serving [requests] [pipelines] [ref|sim|pjrt]
 //! ```
 
 use std::time::{Duration, Instant};
 use tmfu_overlay::bench_suite;
-use tmfu_overlay::coordinator::Coordinator;
+use tmfu_overlay::coordinator::{Coordinator, CoordinatorConfig};
 use tmfu_overlay::dfg::eval;
+use tmfu_overlay::exec::BackendKind;
 use tmfu_overlay::util::prng::Rng;
 use tmfu_overlay::util::stats::Samples;
 
@@ -35,11 +39,20 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(2);
+    let backend: BackendKind = std::env::args()
+        .nth(3)
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(|e: String| anyhow::anyhow!(e))?
+        .unwrap_or(BackendKind::Sim);
     let mean_rate_per_s = 20_000.0; // Poisson arrival rate
     let max_batch = 32;
 
-    println!("loading artifacts + compiling {pipelines} fabric worker(s)...");
-    let coord = Coordinator::start("artifacts", pipelines, max_batch)?;
+    println!("starting {pipelines} '{backend}' fabric worker(s)...");
+    let mut cfg = CoordinatorConfig::new(backend);
+    cfg.workers = pipelines;
+    cfg.max_batch = max_batch;
+    let coord = Coordinator::start_with(cfg)?;
 
     // Zipf-ish kernel popularity: gradient & chebyshev hot, tail cold.
     let names = bench_suite::all_names();

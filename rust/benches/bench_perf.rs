@@ -9,7 +9,8 @@
 
 use tmfu_overlay::arch::Pipeline;
 use tmfu_overlay::bench_suite;
-use tmfu_overlay::coordinator::Coordinator;
+use tmfu_overlay::coordinator::{Coordinator, CoordinatorConfig};
+use tmfu_overlay::exec::BackendKind;
 use tmfu_overlay::runtime::Engine;
 use tmfu_overlay::sched::Program;
 use tmfu_overlay::util::bench::{black_box, section, Bench};
@@ -48,6 +49,24 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", m.report_line());
 
+    section("L3.c coordinator dispatch, sim backend (zero artifacts)");
+    {
+        let mut cfg = CoordinatorConfig::new(BackendKind::Sim);
+        cfg.workers = 2;
+        cfg.max_batch = 32;
+        let coord = Coordinator::start_with(cfg)?;
+        let names = bench_suite::all_names();
+        let m = b.run_with_items("coordinator::call x32 (sim, round-robin)", 32.0, || {
+            for i in 0..32usize {
+                let kernel = names[i % names.len()];
+                let n_in = coord.registry().get(kernel).unwrap().n_inputs;
+                coord.call(kernel, vec![1i32; n_in]).unwrap();
+            }
+        });
+        println!("{}   (items = requests, serial round-trip)", m.report_line());
+        coord.shutdown()?;
+    }
+
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
         println!("\nartifacts not built; skipping PJRT + coordinator benches");
@@ -76,7 +95,7 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}   (items = packets)", m.report_line());
 
-    section("L3.c coordinator end-to-end (2 workers, mixed kernels)");
+    section("L3.d coordinator end-to-end, pjrt backend (2 workers, mixed kernels)");
     let coord = Coordinator::start(artifacts.to_str().unwrap(), 2, 32)?;
     let names = bench_suite::all_names();
     let m = b.run_with_items("coordinator::call x32 (round-robin kernels)", 32.0, || {

@@ -30,9 +30,16 @@ pub struct DspIssue {
     pub ab: i32,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("DSP48E1 issued an unclassifiable configuration")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BadIssue;
+
+impl std::fmt::Display for BadIssue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("DSP48E1 issued an unclassifiable configuration")
+    }
+}
+
+impl std::error::Error for BadIssue {}
 
 /// The pipelined DSP block.
 #[derive(Debug, Clone)]

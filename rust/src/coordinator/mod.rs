@@ -7,27 +7,31 @@
 //! * callers `submit()` requests (kernel name + input packet) and get a
 //!   completion channel;
 //! * a shared [`queue::QueueSet`] holds per-kernel FIFOs;
-//! * each **fabric worker** thread owns a PJRT [`Engine`] (PJRT clients
-//!   are not `Send`, so each worker constructs its own — one worker ≙
-//!   one overlay pipeline replica);
+//! * each **fabric worker** thread owns a `Box<dyn Backend>` — the
+//!   interpreter, the cycle-accurate overlay simulator, or the PJRT
+//!   engine ([`crate::exec`]); backends are built inside the worker
+//!   thread because the PJRT client is not `Send` (one worker ≙ one
+//!   overlay pipeline replica);
+//! * kernels are compiled **once** into a shared
+//!   [`Arc<KernelRegistry>`](exec::KernelRegistry) — schedule, timing
+//!   and context image are no longer recomputed per worker;
 //! * workers pull context-affine batches, charge the modeled context
-//!   switch cost when they change kernels, execute through PJRT, and
-//!   reply;
+//!   switch cost when they change kernels, execute through their
+//!   backend, and reply;
 //! * metrics capture wall-clock latency plus the simulated 300 MHz
-//!   fabric timeline (II model + context-switch model).
+//!   fabric timeline (II model + context-switch model; the sim backend
+//!   reports *measured* fabric cycles instead of the model).
 
 pub mod metrics;
 pub mod queue;
 
 use crate::bench_suite;
+use crate::exec::{self, BackendConfig, BackendKind, KernelRegistry};
 use crate::resources::SYSTEM_CLOCK_MHZ;
-use crate::runtime::Engine;
-use crate::sched::{Program, Timing};
 use crate::util::prng::Rng;
 use anyhow::{Context, Result};
 use metrics::Metrics;
 use queue::{Pending, QueueSet};
-use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -50,26 +54,58 @@ struct QueueState {
     shutdown: bool,
 }
 
-/// Per-kernel fabric timing constants (derived once from the schedule).
-#[derive(Debug, Clone, Copy)]
-struct KernelTiming {
-    ii: u32,
-    latency: u64,
-    ctx_words: usize,
+/// Coordinator construction parameters.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Execution substrate for every worker.
+    pub backend: BackendKind,
+    /// AOT artifacts directory (PJRT backend only).
+    pub artifacts_dir: String,
+    /// Fabric workers (overlay pipeline replicas at the serving level).
+    pub workers: usize,
+    /// Maximum batch a worker takes per dispatch.
+    pub max_batch: usize,
+    /// Pipeline replicas inside each sim-backend overlay (Fig. 4).
+    pub sim_replicas: usize,
+}
+
+impl CoordinatorConfig {
+    pub fn new(backend: BackendKind) -> CoordinatorConfig {
+        CoordinatorConfig {
+            backend,
+            artifacts_dir: "artifacts".to_string(),
+            workers: 1,
+            max_batch: 16,
+            sim_replicas: 1,
+        }
+    }
 }
 
 /// The coordinator handle.
 pub struct Coordinator {
     shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<Result<()>>>,
-    timings: BTreeMap<String, KernelTiming>,
+    registry: Arc<KernelRegistry>,
+    backend: BackendKind,
     started: Instant,
 }
 
 impl Coordinator {
-    /// Start `n_workers` fabric workers over the artifacts directory.
-    pub fn start(artifacts_dir: &str, n_workers: usize, max_batch: usize) -> Result<Coordinator> {
-        anyhow::ensure!(n_workers >= 1, "need at least one worker");
+    /// Start a backend-generic coordinator.
+    pub fn start_with(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        anyhow::ensure!(cfg.max_batch >= 1, "need a positive max batch");
+        // Compile every kernel once; workers share the registry.
+        let registry = Arc::new(KernelRegistry::compile_bench_suite()?);
+        // Fail fast when an artifact-backed substrate cannot possibly
+        // start (workers would all error after an expensive spawn).
+        if cfg.backend.needs_artifacts() {
+            anyhow::ensure!(
+                PathBuf::from(&cfg.artifacts_dir).join("manifest.json").exists(),
+                "artifacts not found in '{}' — run `make artifacts`",
+                cfg.artifacts_dir
+            );
+        }
         let shared = Arc::new(Shared {
             queues: Mutex::new(QueueState {
                 qs: QueueSet::default(),
@@ -78,45 +114,29 @@ impl Coordinator {
             cv: Condvar::new(),
             metrics: Mutex::new(Metrics::default()),
         });
-        // Precompute fabric timing per kernel from the schedules.
-        let mut timings = BTreeMap::new();
-        for name in bench_suite::all_names() {
-            let g = bench_suite::load(name)?;
-            let p = Program::schedule(&g)?;
-            let t = Timing::of(&p);
-            let img = p.context_image()?;
-            timings.insert(
-                name.to_string(),
-                KernelTiming {
-                    ii: t.ii,
-                    latency: t.latency(),
-                    ctx_words: img.load_cycles().map_err(|e| anyhow::anyhow!("{e}"))?,
-                },
-            );
-        }
-        let dir = PathBuf::from(artifacts_dir);
-        // Fail fast if artifacts are missing (workers would all error).
-        anyhow::ensure!(
-            dir.join("manifest.json").exists(),
-            "artifacts not found in '{artifacts_dir}' — run `make artifacts`"
-        );
+        let mut backend_cfg = BackendConfig::new(cfg.backend);
+        backend_cfg.artifacts_dir = PathBuf::from(&cfg.artifacts_dir);
+        backend_cfg.sim_replicas = cfg.sim_replicas;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut workers = Vec::new();
-        for wid in 0..n_workers {
+        for wid in 0..cfg.workers {
             let shared = Arc::clone(&shared);
-            let dir = dir.clone();
-            let timings = timings.clone();
+            let registry = Arc::clone(&registry);
+            let backend_cfg = backend_cfg.clone();
             let ready = ready_tx.clone();
+            let max_batch = cfg.max_batch;
             workers.push(
                 thread::Builder::new()
                     .name(format!("fabric-{wid}"))
-                    .spawn(move || worker_loop(wid, &dir, shared, timings, max_batch, ready))?,
+                    .spawn(move || {
+                        worker_loop(wid, backend_cfg, shared, registry, max_batch, ready)
+                    })?,
             );
         }
         drop(ready_tx);
-        // Wait until every worker has compiled its engine so request
+        // Wait until every worker has built its backend so request
         // latency measures serving, not startup.
-        for _ in 0..n_workers {
+        for _ in 0..cfg.workers {
             ready_rx
                 .recv()
                 .context("worker died during startup")?
@@ -125,16 +145,48 @@ impl Coordinator {
         Ok(Coordinator {
             shared,
             workers,
-            timings,
+            registry,
+            backend: cfg.backend,
             started: Instant::now(),
         })
     }
 
+    /// Back-compat shorthand: `n_workers` PJRT workers over the
+    /// artifacts directory (the pre-backend-layer entry point).
+    pub fn start(artifacts_dir: &str, n_workers: usize, max_batch: usize) -> Result<Coordinator> {
+        let mut cfg = CoordinatorConfig::new(BackendKind::Pjrt);
+        cfg.artifacts_dir = artifacts_dir.to_string();
+        cfg.workers = n_workers;
+        cfg.max_batch = max_batch;
+        Coordinator::start_with(cfg)
+    }
+
+    /// The execution substrate this coordinator serves through.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// The shared compiled-kernel registry.
+    pub fn registry(&self) -> &Arc<KernelRegistry> {
+        &self.registry
+    }
+
     /// Submit one request; the reply arrives on the returned channel.
+    /// Shape errors (unknown kernel, wrong arity) are rejected here,
+    /// before the request can be co-batched with valid ones — a
+    /// malformed request must never fail its batch neighbours.
     pub fn submit(&self, kernel: &str, inputs: Vec<i32>) -> Result<mpsc::Receiver<Reply>> {
+        let Some(k) = self.registry.get(kernel) else {
+            anyhow::bail!("{}", exec::ExecError::UnknownKernel(kernel.to_string()));
+        };
         anyhow::ensure!(
-            self.timings.contains_key(kernel),
-            "unknown kernel '{kernel}'"
+            inputs.len() == k.n_inputs,
+            "{}",
+            exec::ExecError::WrongArity {
+                kernel: kernel.to_string(),
+                expected: k.n_inputs,
+                got: inputs.len(),
+            }
         );
         let (tx, rx) = mpsc::channel();
         {
@@ -189,26 +241,32 @@ impl Coordinator {
 
 fn worker_loop(
     _wid: usize,
-    dir: &std::path::Path,
+    backend_cfg: BackendConfig,
     shared: Arc<Shared>,
-    timings: BTreeMap<String, KernelTiming>,
+    registry: Arc<KernelRegistry>,
     max_batch: usize,
     ready: mpsc::Sender<Result<(), String>>,
 ) -> Result<()> {
-    // Each worker owns its own PJRT engine (compiled per worker; PJRT
-    // clients are not Send). This mirrors per-pipeline configuration
+    // Each worker owns its backend (PJRT clients are not Send; sim
+    // pipelines are stateful). This mirrors per-pipeline configuration
     // BRAMs in Fig. 4.
-    let engine = match Engine::load(dir) {
-        Ok(e) => {
+    let mut backend = match exec::make_backend(&backend_cfg) {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            e
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(format!("{e}")));
             return Err(e);
         }
     };
-    let max_batch = max_batch.min(engine.batch);
+    let caps = backend.capabilities();
+    let max_batch = match caps.max_batch {
+        Some(limit) => max_batch.min(limit),
+        None => max_batch,
+    };
+    // Batch-affinity hint only; switch *accounting* comes from the
+    // backend's report when it models context switches itself.
     let mut context: Option<String> = None;
     loop {
         let batch = {
@@ -224,20 +282,58 @@ fn worker_loop(
             }
         };
         let Some(batch) = batch else { return Ok(()) };
-        let switched = context.as_deref() != Some(batch.kernel.as_str());
-        let t = timings[&batch.kernel];
-        let switch_us = t.ctx_words as f64 / SYSTEM_CLOCK_MHZ;
+        let Some(kernel) = registry.get(&batch.kernel).cloned() else {
+            // Unreachable via submit(); kept as a structured reply so a
+            // future ingress path cannot hang callers.
+            let msg = exec::ExecError::UnknownKernel(batch.kernel.clone()).to_string();
+            for p in batch.items {
+                let _ = p.token.send(Err(msg.clone()));
+            }
+            continue;
+        };
+        let hint_switched = context.as_deref() != Some(batch.kernel.as_str());
         // Simulated fabric execution time for the batch at 300 MHz:
         // pipeline fill (latency) + (n-1) more initiations at II.
+        // Guarded: an empty batch is a structured error, not a u64
+        // underflow.
         let n = batch.items.len();
-        let exec_cycles = t.latency + (n as u64 - 1) * t.ii as u64;
-        let exec_us_sim = exec_cycles as f64 / SYSTEM_CLOCK_MHZ;
-        // Real execution through PJRT.
+        let model_cycles = match exec::fabric_exec_cycles(&kernel, n) {
+            Ok(c) => c,
+            Err(e) => {
+                let msg = e.to_string();
+                for p in batch.items {
+                    let _ = p.token.send(Err(msg.clone()));
+                }
+                continue;
+            }
+        };
         let inputs: Vec<Vec<i32>> = batch.items.iter().map(|p| p.inputs.clone()).collect();
-        let result = engine.execute(&batch.kernel, &inputs);
+        let result = backend.execute(&kernel, &inputs);
         let now = Instant::now();
         match result {
-            Ok(outputs) => {
+            Ok(report) => {
+                // Prefer measured fabric cycles (sim backend) over the
+                // analytical model.
+                let exec_us_sim =
+                    report.fabric_cycles.unwrap_or(model_cycles) as f64 / SYSTEM_CLOCK_MHZ;
+                // Switch accounting: backends that model switching are
+                // authoritative (they know whether the context really
+                // changed); otherwise fall back to the worker's hint.
+                let (switched, switch_us) = if caps.models_context_switch {
+                    (
+                        report.switch_cycles > 0,
+                        report.switch_cycles as f64 / SYSTEM_CLOCK_MHZ,
+                    )
+                } else {
+                    (
+                        hint_switched,
+                        if hint_switched {
+                            kernel.switch_time_us(SYSTEM_CLOCK_MHZ)
+                        } else {
+                            0.0
+                        },
+                    )
+                };
                 {
                     let mut m = shared.metrics.lock().unwrap();
                     m.record_batch(&batch.kernel, n, switched, switch_us, exec_us_sim);
@@ -247,14 +343,16 @@ fn worker_loop(
                         m.queue_wait_us.push(wait - exec_us_sim.min(wait));
                     }
                 }
-                for (p, out) in batch.items.into_iter().zip(outputs) {
+                for (p, out) in batch.items.into_iter().zip(report.outputs) {
                     let _ = p.token.send(Ok(out));
                 }
             }
             Err(e) => {
-                let msg = format!("{e}");
+                // Conservative: claim no switch (the backend may have
+                // failed before any context load happened).
+                let msg = e.to_string();
                 let mut m = shared.metrics.lock().unwrap();
-                m.record_batch(&batch.kernel, 0, switched, switch_us, 0.0);
+                m.record_batch(&batch.kernel, 0, false, 0.0, 0.0);
                 drop(m);
                 for p in batch.items {
                     let _ = p.token.send(Err(msg.clone()));
@@ -266,8 +364,10 @@ fn worker_loop(
 }
 
 /// `tmfu serve`: drive the coordinator with a mixed-kernel workload and
-/// print the metrics (the paper's Fig. 4 usage model).
+/// print the metrics (the paper's Fig. 4 usage model). Every response
+/// is verified against the functional oracle.
 pub fn serve_demo(
+    backend: BackendKind,
     artifacts: &str,
     pipelines: usize,
     requests: usize,
@@ -275,21 +375,26 @@ pub fn serve_demo(
     seed: u64,
 ) -> Result<()> {
     let names = bench_suite::all_names();
-    let coord = Coordinator::start(artifacts, pipelines, batch)?;
+    let mut cfg = CoordinatorConfig::new(backend);
+    cfg.artifacts_dir = artifacts.to_string();
+    cfg.workers = pipelines;
+    cfg.max_batch = batch;
+    let coord = Coordinator::start_with(cfg)?;
     let mut rng = Rng::new(seed);
     println!(
-        "serving {requests} requests across {} kernels on {pipelines} pipeline(s), max batch {batch}",
+        "serving {requests} requests across {} kernels on {pipelines} pipeline(s), \
+         max batch {batch}, backend '{backend}'",
         names.len()
     );
     let mut rxs = Vec::with_capacity(requests);
     let mut expected = Vec::with_capacity(requests);
     for _ in 0..requests {
         let kernel = *rng.choose(&names);
-        let g = bench_suite::load(kernel)?;
+        let g = &coord.registry().get(kernel).unwrap().dfg;
         let inputs: Vec<i32> = (0..g.inputs().len())
             .map(|_| rng.range_i64(-1000, 1000) as i32)
             .collect();
-        expected.push(crate::dfg::eval(&g, &inputs));
+        expected.push(crate::dfg::eval(g, &inputs));
         rxs.push(coord.submit(kernel, inputs)?);
     }
     let mut errors = 0usize;
@@ -312,37 +417,38 @@ pub fn serve_demo(
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> Option<String> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.json")
-            .exists()
-            .then(|| dir.to_string_lossy().into_owned())
+    fn sim_coordinator(workers: usize, max_batch: usize) -> Coordinator {
+        let mut cfg = CoordinatorConfig::new(BackendKind::Sim);
+        cfg.workers = workers;
+        cfg.max_batch = max_batch;
+        Coordinator::start_with(cfg).unwrap()
     }
 
-    #[test]
-    fn serves_mixed_workload_correctly() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let coord = Coordinator::start(&dir, 1, 8).unwrap();
-        // Submit a mix across kernels; verify all results.
-        let mut rng = Rng::new(5);
+    fn mixed_workload(coord: &Coordinator, requests: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
         let names = bench_suite::all_names();
         let mut jobs = Vec::new();
-        for _ in 0..40 {
+        for _ in 0..requests {
             let kernel = *rng.choose(&names);
-            let g = bench_suite::load(kernel).unwrap();
+            let g = &coord.registry().get(kernel).unwrap().dfg;
             let inputs: Vec<i32> = (0..g.inputs().len())
                 .map(|_| rng.range_i64(-500, 500) as i32)
                 .collect();
-            let want = crate::dfg::eval(&g, &inputs);
+            let want = crate::dfg::eval(g, &inputs);
             let rx = coord.submit(kernel, inputs).unwrap();
             jobs.push((rx, want));
         }
         for (rx, want) in jobs {
             assert_eq!(rx.recv().unwrap().unwrap(), want);
         }
+    }
+
+    // ---- sim backend: runs unconditionally, zero artifacts ----------
+
+    #[test]
+    fn serves_mixed_workload_correctly() {
+        let coord = sim_coordinator(1, 8);
+        mixed_workload(&coord, 40, 5);
         assert_eq!(coord.completed(), 40);
         let report = coord.metrics_report();
         assert!(report.contains("context switches"));
@@ -351,6 +457,70 @@ mod tests {
 
     #[test]
     fn call_blocks_for_result() {
+        let coord = sim_coordinator(1, 4);
+        let out = coord.call("gradient", vec![3, 5, 2, 7, 1]).unwrap();
+        assert_eq!(out, vec![1 + 9 + 25 + 1]);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_kernel_and_bad_arity() {
+        let coord = sim_coordinator(1, 4);
+        assert!(coord.submit("nonesuch", vec![1]).is_err());
+        // Wrong arity surfaces as a structured Err reply, not a hang.
+        let r = coord.call("gradient", vec![1, 2]);
+        let msg = format!("{}", r.unwrap_err());
+        assert!(msg.contains("expects 5 inputs"), "{msg}");
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn multiple_sim_workers_serve_concurrently() {
+        let coord = sim_coordinator(3, 8);
+        mixed_workload(&coord, 60, 11);
+        assert_eq!(coord.completed(), 60);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn ref_backend_serves_too() {
+        let mut cfg = CoordinatorConfig::new(BackendKind::Ref);
+        cfg.workers = 2;
+        cfg.max_batch = 16;
+        let coord = Coordinator::start_with(cfg).unwrap();
+        assert_eq!(coord.backend(), BackendKind::Ref);
+        mixed_workload(&coord, 30, 7);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn serve_demo_runs_on_sim_without_artifacts() {
+        serve_demo(BackendKind::Sim, "/definitely/not/here", 2, 50, 8, 42).unwrap();
+    }
+
+    // ---- PJRT backend: artifact-gated variants ----------------------
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| dir.to_string_lossy().into_owned())
+    }
+
+    #[test]
+    fn serves_mixed_workload_correctly_pjrt() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let coord = Coordinator::start(&dir, 1, 8).unwrap();
+        mixed_workload(&coord, 40, 5);
+        assert_eq!(coord.completed(), 40);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn call_blocks_for_result_pjrt() {
         let Some(dir) = artifacts_dir() else { return };
         let coord = Coordinator::start(&dir, 1, 4).unwrap();
         let out = coord.call("gradient", vec![3, 5, 2, 7, 1]).unwrap();
@@ -359,13 +529,11 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unknown_kernel_and_bad_arity() {
+    fn rejects_unknown_kernel_and_bad_arity_pjrt() {
         let Some(dir) = artifacts_dir() else { return };
         let coord = Coordinator::start(&dir, 1, 4).unwrap();
         assert!(coord.submit("nonesuch", vec![1]).is_err());
-        // Wrong arity surfaces as an Err reply, not a hang.
-        let r = coord.call("gradient", vec![1, 2]);
-        assert!(r.is_err());
+        assert!(coord.call("gradient", vec![1, 2]).is_err());
         coord.shutdown().unwrap();
     }
 

@@ -132,21 +132,35 @@ pub struct Dfg {
 }
 
 /// Structural error from [`Dfg::validate`].
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DfgError {
-    #[error("node {0}: operand {1} is not defined before use (graph must be topological)")]
     ForwardReference(NodeId, NodeId),
-    #[error("node {0}: {1}")]
     Arity(NodeId, String),
-    #[error("duplicate input name '{0}'")]
     DuplicateInput(String),
-    #[error("duplicate output name '{0}'")]
     DuplicateOutput(String),
-    #[error("graph has no outputs")]
     NoOutputs,
-    #[error("node {0}: operand {1} is an output node")]
     OutputUsedAsOperand(NodeId, NodeId),
 }
+
+impl fmt::Display for DfgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DfgError::ForwardReference(n, a) => write!(
+                f,
+                "node {n}: operand {a} is not defined before use (graph must be topological)"
+            ),
+            DfgError::Arity(n, msg) => write!(f, "node {n}: {msg}"),
+            DfgError::DuplicateInput(name) => write!(f, "duplicate input name '{name}'"),
+            DfgError::DuplicateOutput(name) => write!(f, "duplicate output name '{name}'"),
+            DfgError::NoOutputs => write!(f, "graph has no outputs"),
+            DfgError::OutputUsedAsOperand(n, a) => {
+                write!(f, "node {n}: operand {a} is an output node")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DfgError {}
 
 impl Dfg {
     pub fn new(name: &str) -> Self {

@@ -1,0 +1,502 @@
+//! Unified execution backend layer.
+//!
+//! The serving coordinator historically executed only through the AOT
+//! PJRT engine, leaving the cycle-accurate overlay model — the actual
+//! reproduction artifact — disconnected from the serving path. This
+//! module defines one [`Backend`] contract with three interchangeable
+//! execution substrates:
+//!
+//! * [`RefBackend`] — the functional DFG interpreter ([`crate::dfg::eval`]);
+//!   the oracle, fastest, no hardware model;
+//! * [`SimBackend`] — the cycle-accurate overlay ([`crate::arch::Overlay`] /
+//!   [`crate::arch::Pipeline`]), including the daisy-chained context load
+//!   ([`crate::arch::config_port`]) on every kernel switch;
+//! * [`PjrtBackend`] — the PJRT engine over the AOT artifacts
+//!   ([`crate::runtime::Engine`]).
+//!
+//! Kernels are compiled **once** into an [`Arc<CompiledKernel>`] registry
+//! ([`KernelRegistry`]) shared by every worker — schedule, timing and
+//! context image are no longer recomputed per worker, and the sim
+//! backend reuses its configured pipelines across context switches
+//! instead of rebuilding them. Batch validation returns structured
+//! [`ExecError`]s (never panics), and the fabric-timing model
+//! ([`fabric_exec_cycles`]) is guarded against empty batches.
+
+mod pjrt_backend;
+mod ref_backend;
+mod sim_backend;
+
+pub use pjrt_backend::PjrtBackend;
+pub use ref_backend::RefBackend;
+pub use sim_backend::SimBackend;
+
+use crate::bench_suite;
+use crate::dfg::Dfg;
+use crate::isa::ContextImage;
+use crate::sched::{Program, Timing};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::str::FromStr;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// Compiled kernels
+// ---------------------------------------------------------------------
+
+/// Everything the serving path needs about one kernel, compiled once:
+/// the normalized DFG (functional oracle), the scheduled program, the
+/// timing model and the 40-bit context image.
+#[derive(Debug, Clone)]
+pub struct CompiledKernel {
+    pub name: String,
+    pub dfg: Dfg,
+    pub program: Program,
+    /// Initiation interval in fabric cycles.
+    pub ii: u32,
+    /// End-to-end packet latency in fabric cycles.
+    pub latency: u64,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+    /// The kernel's 40-bit context stream.
+    pub context: ContextImage,
+    /// Context words == daisy-chain load cycles (one word per cycle).
+    pub context_words: usize,
+}
+
+impl CompiledKernel {
+    /// Compile one kernel from its DFG.
+    pub fn compile(g: Dfg) -> Result<CompiledKernel> {
+        let program = Program::schedule(&g)?;
+        let t = Timing::of(&program);
+        let context = program.context_image()?;
+        let context_words = context.load_cycles().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(CompiledKernel {
+            name: g.name.clone(),
+            n_inputs: g.inputs().len(),
+            n_outputs: g.outputs().len(),
+            ii: t.ii,
+            latency: t.latency(),
+            dfg: g,
+            program,
+            context,
+            context_words,
+        })
+    }
+
+    /// Modeled context-switch time in microseconds at `freq_mhz`.
+    pub fn switch_time_us(&self, freq_mhz: f64) -> f64 {
+        self.context_words as f64 / freq_mhz
+    }
+}
+
+/// Shared, immutable registry of compiled kernels (compile once, share
+/// across workers via `Arc`).
+#[derive(Debug, Default)]
+pub struct KernelRegistry {
+    kernels: BTreeMap<String, Arc<CompiledKernel>>,
+}
+
+impl KernelRegistry {
+    /// Compile the full benchmark suite.
+    pub fn compile_bench_suite() -> Result<KernelRegistry> {
+        let mut kernels = BTreeMap::new();
+        for g in bench_suite::load_all()? {
+            let k = CompiledKernel::compile(g)?;
+            kernels.insert(k.name.clone(), Arc::new(k));
+        }
+        Ok(KernelRegistry { kernels })
+    }
+
+    /// Registry over an explicit kernel set (tests, custom workloads).
+    pub fn compile(graphs: Vec<Dfg>) -> Result<KernelRegistry> {
+        let mut kernels = BTreeMap::new();
+        for g in graphs {
+            let k = CompiledKernel::compile(g)?;
+            kernels.insert(k.name.clone(), Arc::new(k));
+        }
+        Ok(KernelRegistry { kernels })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<CompiledKernel>> {
+        self.kernels.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.kernels.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.kernels.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<CompiledKernel>> {
+        self.kernels.values()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Structured serving-path error: every invalid request shape is a
+/// typed variant (not a panic, not a stringly-typed failure).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecError {
+    /// A batch with zero packets reached the execution layer; the
+    /// fabric timing model (`latency + (n-1)*II`) is undefined for it.
+    EmptyBatch { kernel: String },
+    WrongArity {
+        kernel: String,
+        expected: usize,
+        got: usize,
+    },
+    UnknownKernel(String),
+    BatchTooLarge {
+        kernel: String,
+        got: usize,
+        max: usize,
+    },
+    /// Substrate-specific failure (PJRT load/execute, cycle budget...).
+    Backend {
+        backend: &'static str,
+        message: String,
+    },
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::EmptyBatch { kernel } => {
+                write!(f, "kernel '{kernel}': empty batch (no packets to execute)")
+            }
+            ExecError::WrongArity {
+                kernel,
+                expected,
+                got,
+            } => write!(f, "kernel '{kernel}' expects {expected} inputs, got {got}"),
+            ExecError::UnknownKernel(name) => write!(f, "unknown kernel '{name}'"),
+            ExecError::BatchTooLarge { kernel, got, max } => {
+                write!(f, "kernel '{kernel}': batch of {got} exceeds backend max {max}")
+            }
+            ExecError::Backend { backend, message } => write!(f, "{backend} backend: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+// ---------------------------------------------------------------------
+// The backend contract
+// ---------------------------------------------------------------------
+
+/// What a backend can and cannot do — consulted by the coordinator for
+/// batch sizing and by `serve` for fail-fast configuration checks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Results come from the cycle-accurate overlay model (fabric
+    /// cycle counts in [`ExecReport`] are measured, not modeled).
+    pub cycle_accurate: bool,
+    /// Requires `make artifacts` output on disk.
+    pub needs_artifacts: bool,
+    /// Charges the daisy-chain context-load cost on kernel switches.
+    pub models_context_switch: bool,
+    /// Hard per-call batch limit, if any.
+    pub max_batch: Option<usize>,
+}
+
+/// Result of one batch execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecReport {
+    /// One output row per input packet, in submission order.
+    pub outputs: Vec<Vec<i32>>,
+    /// Context-switch cycles charged for this call (0 when the kernel
+    /// was already resident).
+    pub switch_cycles: u64,
+    /// Fabric cycles actually simulated (cycle-accurate backends only).
+    pub fabric_cycles: Option<u64>,
+}
+
+/// One execution substrate. Workers own a `Box<dyn Backend>` each;
+/// backends are deliberately **not** required to be `Send` (the PJRT
+/// client is thread-local), so workers construct their own via
+/// [`make_backend`] inside the worker thread.
+pub trait Backend {
+    /// Stable short name (`"ref"`, `"sim"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    fn capabilities(&self) -> Capabilities;
+
+    /// Execute one kernel-affine batch. Implementations must validate
+    /// the batch shape (see [`validate_batch`]) and never panic on bad
+    /// requests.
+    fn execute(
+        &mut self,
+        kernel: &CompiledKernel,
+        batch: &[Vec<i32>],
+    ) -> Result<ExecReport, ExecError>;
+}
+
+/// Shared request validation: non-empty batch, exact input arity.
+pub fn validate_batch(kernel: &CompiledKernel, batch: &[Vec<i32>]) -> Result<(), ExecError> {
+    if batch.is_empty() {
+        return Err(ExecError::EmptyBatch {
+            kernel: kernel.name.clone(),
+        });
+    }
+    for packet in batch {
+        if packet.len() != kernel.n_inputs {
+            return Err(ExecError::WrongArity {
+                kernel: kernel.name.clone(),
+                expected: kernel.n_inputs,
+                got: packet.len(),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Modeled fabric execution time for a batch of `n` packets:
+/// pipeline fill (`latency`) plus `n - 1` further initiations at `II`.
+/// Guarded: `n == 0` is a structured error, not a `u64` underflow.
+pub fn fabric_exec_cycles(kernel: &CompiledKernel, n: usize) -> Result<u64, ExecError> {
+    if n == 0 {
+        return Err(ExecError::EmptyBatch {
+            kernel: kernel.name.clone(),
+        });
+    }
+    Ok(kernel.latency + (n as u64 - 1) * kernel.ii as u64)
+}
+
+// ---------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------
+
+/// The three execution substrates, CLI-selectable via `--backend`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Ref,
+    Sim,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] = [BackendKind::Ref, BackendKind::Sim, BackendKind::Pjrt];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Ref => "ref",
+            BackendKind::Sim => "sim",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BackendKind> {
+        BackendKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Whether this substrate needs `make artifacts` output on disk
+    /// (known before construction; mirrors
+    /// [`Capabilities::needs_artifacts`]).
+    pub fn needs_artifacts(self) -> bool {
+        matches!(self, BackendKind::Pjrt)
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<BackendKind, String> {
+        BackendKind::from_name(s)
+            .ok_or_else(|| format!("unknown backend '{s}' (expected one of: ref, sim, pjrt)"))
+    }
+}
+
+/// Construction parameters for [`make_backend`].
+#[derive(Debug, Clone)]
+pub struct BackendConfig {
+    pub kind: BackendKind,
+    /// AOT artifacts directory (PJRT backend only).
+    pub artifacts_dir: PathBuf,
+    /// Overlay pipeline replicas per sim backend (paper Fig. 4:
+    /// replication recovers throughput lost to the II).
+    pub sim_replicas: usize,
+    /// FIFO capacity of each simulated pipeline.
+    pub sim_fifo_capacity: usize,
+}
+
+impl BackendConfig {
+    pub fn new(kind: BackendKind) -> BackendConfig {
+        BackendConfig {
+            kind,
+            artifacts_dir: PathBuf::from("artifacts"),
+            sim_replicas: 1,
+            sim_fifo_capacity: 4096,
+        }
+    }
+}
+
+/// Build a backend instance. Called from inside each worker thread —
+/// the returned box is intentionally not `Send`. Backends receive
+/// compiled kernels per call, so only construction inputs live here.
+pub fn make_backend(cfg: &BackendConfig) -> Result<Box<dyn Backend>> {
+    Ok(match cfg.kind {
+        BackendKind::Ref => Box::new(RefBackend::new()),
+        BackendKind::Sim => Box::new(SimBackend::new(cfg.sim_replicas, cfg.sim_fifo_capacity)?),
+        BackendKind::Pjrt => Box::new(PjrtBackend::load(&cfg.artifacts_dir)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::eval;
+    use crate::util::prng::Rng;
+
+    fn registry() -> KernelRegistry {
+        KernelRegistry::compile_bench_suite().unwrap()
+    }
+
+    #[test]
+    fn registry_compiles_all_kernels_once() {
+        let reg = registry();
+        assert_eq!(reg.len(), bench_suite::all_names().len());
+        let grad = reg.get("gradient").unwrap();
+        assert_eq!(grad.n_inputs, 5);
+        assert_eq!(grad.ii, 11);
+        assert_eq!(grad.latency, 24);
+        assert!(grad.context_words > 0);
+        assert!(reg.get("nonesuch").is_none());
+    }
+
+    #[test]
+    fn fabric_cycles_guarded_against_empty_batch() {
+        let reg = registry();
+        let k = reg.get("gradient").unwrap();
+        // The unguarded formula `latency + (n-1)*ii` underflows at n=0.
+        assert_eq!(
+            fabric_exec_cycles(k, 0),
+            Err(ExecError::EmptyBatch {
+                kernel: "gradient".into()
+            })
+        );
+        assert_eq!(fabric_exec_cycles(k, 1).unwrap(), k.latency);
+        assert_eq!(
+            fabric_exec_cycles(k, 5).unwrap(),
+            k.latency + 4 * k.ii as u64
+        );
+    }
+
+    #[test]
+    fn validate_batch_rejects_bad_shapes() {
+        let reg = registry();
+        let k = reg.get("gradient").unwrap();
+        assert!(matches!(
+            validate_batch(k, &[]),
+            Err(ExecError::EmptyBatch { .. })
+        ));
+        assert_eq!(
+            validate_batch(k, &[vec![1, 2]]),
+            Err(ExecError::WrongArity {
+                kernel: "gradient".into(),
+                expected: 5,
+                got: 2
+            })
+        );
+        assert!(validate_batch(k, &[vec![0; 5]]).is_ok());
+    }
+
+    #[test]
+    fn backend_kind_round_trips_names() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::from_name(k.name()), Some(k));
+            assert_eq!(k.name().parse::<BackendKind>().unwrap(), k);
+        }
+        assert!("tpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn ref_and_sim_backends_construct_via_factory() {
+        let reg = registry();
+        for kind in [BackendKind::Ref, BackendKind::Sim] {
+            let mut b = make_backend(&BackendConfig::new(kind)).unwrap();
+            assert_eq!(b.name(), kind.name());
+            let k = reg.get("gradient").unwrap();
+            let r = b.execute(k, &[vec![3, 5, 2, 7, 1]]).unwrap();
+            assert_eq!(r.outputs, vec![vec![36]]);
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_fails_cleanly_without_artifacts() {
+        let mut cfg = BackendConfig::new(BackendKind::Pjrt);
+        cfg.artifacts_dir = PathBuf::from("/definitely/not/here");
+        assert!(make_backend(&cfg).is_err());
+    }
+
+    /// Capabilities claims are consistent with [`BackendKind`] and
+    /// with observed behavior.
+    #[test]
+    fn capabilities_are_consistent() {
+        let b = make_backend(&BackendConfig::new(BackendKind::Ref)).unwrap();
+        assert!(!b.capabilities().cycle_accurate);
+        assert!(!b.capabilities().needs_artifacts);
+        assert!(!BackendKind::Ref.needs_artifacts());
+        let b = make_backend(&BackendConfig::new(BackendKind::Sim)).unwrap();
+        let caps = b.capabilities();
+        assert!(caps.cycle_accurate);
+        assert!(caps.models_context_switch);
+        assert!(!caps.needs_artifacts);
+        assert!(!BackendKind::Sim.needs_artifacts());
+        assert!(BackendKind::Pjrt.needs_artifacts());
+    }
+
+    /// Interpreter and simulator agree bit-for-bit on every benchmark
+    /// kernel (the serving-layer analogue of the arch-level oracle
+    /// tests), and the sim backend charges context-switch cycles
+    /// exactly once per kernel change.
+    #[test]
+    fn ref_and_sim_agree_and_switch_costs_are_charged() {
+        let reg = Arc::new(registry());
+        let mut rb = RefBackend::new();
+        let mut sb = SimBackend::new(1, 4096).unwrap();
+        let mut rng = Rng::new(2024);
+        for name in bench_suite::all_names() {
+            let k = reg.get(name).unwrap();
+            let batch: Vec<Vec<i32>> = (0..6)
+                .map(|_| {
+                    (0..k.n_inputs)
+                        .map(|_| rng.range_i64(-2000, 2000) as i32)
+                        .collect()
+                })
+                .collect();
+            let want: Vec<Vec<i32>> = batch.iter().map(|p| eval(&k.dfg, p)).collect();
+            let r = rb.execute(k, &batch).unwrap();
+            assert_eq!(r.outputs, want, "{name} (ref)");
+            assert_eq!(r.switch_cycles, 0);
+            let s = sb.execute(k, &batch).unwrap();
+            assert_eq!(s.outputs, want, "{name} (sim)");
+            // First visit to this kernel: the daisy-chain load runs.
+            assert_eq!(s.switch_cycles, k.context_words as u64, "{name}");
+            assert!(s.fabric_cycles.unwrap_or(0) > 0, "{name}");
+            // Re-execute without switching: no context cost.
+            let s2 = sb.execute(k, &batch[..1]).unwrap();
+            assert_eq!(s2.switch_cycles, 0, "{name}");
+        }
+    }
+}

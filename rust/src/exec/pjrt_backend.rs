@@ -1,0 +1,123 @@
+//! PJRT backend: serves batches through the AOT-compiled (JAX +
+//! Pallas) artifacts via [`crate::runtime::Engine`].
+//!
+//! Requires `make artifacts` output on disk and a linked PJRT runtime
+//! (see `runtime/xla_shim.rs` for the offline-build story). Context
+//! switches are charged with the same daisy-chain word count as the
+//! hardware model, keeping the simulated 300 MHz fabric timeline
+//! comparable across backends.
+
+use super::{validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport};
+use crate::runtime::Engine;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// The PJRT execution backend.
+pub struct PjrtBackend {
+    engine: Engine,
+    context: Option<String>,
+}
+
+impl PjrtBackend {
+    /// Load and compile every kernel artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        let engine = Engine::load(dir)
+            .with_context(|| format!("loading PJRT artifacts from '{}'", dir.display()))?;
+        Ok(PjrtBackend {
+            engine,
+            context: None,
+        })
+    }
+
+    /// Largest batch the compiled artifacts accept.
+    pub fn max_batch(&self) -> usize {
+        self.engine.batch
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            cycle_accurate: false,
+            needs_artifacts: true,
+            models_context_switch: true,
+            max_batch: Some(self.engine.batch),
+        }
+    }
+
+    fn execute(
+        &mut self,
+        kernel: &CompiledKernel,
+        batch: &[Vec<i32>],
+    ) -> Result<ExecReport, ExecError> {
+        validate_batch(kernel, batch)?;
+        if batch.len() > self.engine.batch {
+            return Err(ExecError::BatchTooLarge {
+                kernel: kernel.name.clone(),
+                got: batch.len(),
+                max: self.engine.batch,
+            });
+        }
+        let outputs = self
+            .engine
+            .execute(&kernel.name, batch)
+            .map_err(|e| ExecError::Backend {
+                backend: "pjrt",
+                message: format!("{e}"),
+            })?;
+        let switch_cycles = if self.context.as_deref() != Some(kernel.name.as_str()) {
+            self.context = Some(kernel.name.clone());
+            kernel.context_words as u64
+        } else {
+            0
+        };
+        Ok(ExecReport {
+            outputs,
+            switch_cycles,
+            fabric_cycles: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::eval;
+    use crate::exec::KernelRegistry;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        assert!(PjrtBackend::load(Path::new("/definitely/not/here")).is_err());
+    }
+
+    /// Artifact-gated: PJRT output must match the oracle through the
+    /// backend contract (skips when `make artifacts` has not run).
+    #[test]
+    fn matches_oracle_when_artifacts_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        let mut b = PjrtBackend::load(&dir).unwrap();
+        let k = reg.get("gradient").unwrap();
+        let batch = vec![vec![3, 5, 2, 7, 1]];
+        let r = b.execute(k, &batch).unwrap();
+        assert_eq!(r.outputs, vec![eval(&k.dfg, &batch[0])]);
+        assert_eq!(r.switch_cycles, k.context_words as u64);
+        let over: Vec<Vec<i32>> = (0..b.max_batch() + 1).map(|_| vec![0; 5]).collect();
+        assert!(matches!(
+            b.execute(k, &over),
+            Err(ExecError::BatchTooLarge { .. })
+        ));
+    }
+}

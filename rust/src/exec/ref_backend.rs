@@ -1,0 +1,87 @@
+//! Interpreter backend: the functional DFG oracle on the serving path.
+//!
+//! Executes every packet through [`crate::dfg::eval`] — no hardware
+//! model, no artifacts, bit-exact wrapping int32 semantics. This is
+//! the reference substrate the other backends are verified against,
+//! and the fastest way to serve when no fabric modeling is wanted.
+
+use super::{validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport};
+use crate::dfg::eval;
+
+/// The DFG-interpreter backend (stateless).
+#[derive(Debug, Default)]
+pub struct RefBackend {
+    /// Packets executed (introspection / tests).
+    pub executed: u64,
+}
+
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        RefBackend::default()
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            cycle_accurate: false,
+            needs_artifacts: false,
+            models_context_switch: false,
+            max_batch: None,
+        }
+    }
+
+    fn execute(
+        &mut self,
+        kernel: &CompiledKernel,
+        batch: &[Vec<i32>],
+    ) -> Result<ExecReport, ExecError> {
+        validate_batch(kernel, batch)?;
+        let outputs = batch.iter().map(|p| eval(&kernel.dfg, p)).collect();
+        self.executed += batch.len() as u64;
+        Ok(ExecReport {
+            outputs,
+            switch_cycles: 0,
+            fabric_cycles: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::KernelRegistry;
+
+    #[test]
+    fn executes_and_counts() {
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        let k = reg.get("gradient").unwrap();
+        let mut b = RefBackend::new();
+        let r = b
+            .execute(k, &[vec![3, 5, 2, 7, 1], vec![0, 0, 0, 0, 0]])
+            .unwrap();
+        assert_eq!(r.outputs, vec![vec![36], vec![0]]);
+        assert_eq!(b.executed, 2);
+        assert_eq!(r.fabric_cycles, None);
+    }
+
+    #[test]
+    fn structured_errors_not_panics() {
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        let k = reg.get("chebyshev").unwrap();
+        let mut b = RefBackend::new();
+        assert!(matches!(
+            b.execute(k, &[vec![1, 2]]),
+            Err(ExecError::WrongArity { .. })
+        ));
+        assert!(matches!(
+            b.execute(k, &[]),
+            Err(ExecError::EmptyBatch { .. })
+        ));
+        assert_eq!(b.executed, 0);
+    }
+}

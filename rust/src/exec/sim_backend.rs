@@ -1,0 +1,181 @@
+//! Cycle-accurate overlay backend: serves requests through the
+//! simulated DSP48E1 pipeline (paper Figs. 2–4).
+//!
+//! * Configured [`Overlay`]s are built **once per kernel** and cached;
+//!   a context switch re-points the backend at the cached overlay
+//!   instead of reconstructing pipelines from scratch.
+//! * Every switch clocks the kernel's full 40-bit context stream
+//!   through the daisy-chained config port
+//!   ([`config_port::load_image`]), so the modeled switch cost is the
+//!   *simulated* word-per-cycle load, not just an analytical count.
+//! * Batches run through the replicated pipelines round-robin; the
+//!   report carries the fabric cycles actually simulated.
+
+use super::{validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport};
+use crate::arch::{config_port, Overlay};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// The cycle-accurate overlay backend.
+#[derive(Debug)]
+pub struct SimBackend {
+    /// Pipeline replicas per overlay (paper Fig. 4 replication).
+    replicas: usize,
+    fifo_capacity: usize,
+    /// Kernel name -> configured overlay, built once and reused.
+    overlays: BTreeMap<String, Overlay>,
+    /// Currently resident kernel context.
+    context: Option<String>,
+    /// Cumulative simulated context-switch cycles.
+    pub total_switch_cycles: u64,
+    /// Cumulative simulated execution cycles.
+    pub total_fabric_cycles: u64,
+}
+
+impl SimBackend {
+    pub fn new(replicas: usize, fifo_capacity: usize) -> Result<SimBackend> {
+        anyhow::ensure!(replicas >= 1, "sim backend needs at least one replica");
+        anyhow::ensure!(fifo_capacity >= 64, "sim FIFO capacity unreasonably small");
+        Ok(SimBackend {
+            replicas,
+            fifo_capacity,
+            overlays: BTreeMap::new(),
+            context: None,
+            total_switch_cycles: 0,
+            total_fabric_cycles: 0,
+        })
+    }
+
+    /// The kernel currently configured on the fabric.
+    pub fn resident_context(&self) -> Option<&str> {
+        self.context.as_deref()
+    }
+
+    fn backend_err(message: String) -> ExecError {
+        ExecError::Backend {
+            backend: "sim",
+            message,
+        }
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            cycle_accurate: true,
+            needs_artifacts: false,
+            models_context_switch: true,
+            max_batch: None,
+        }
+    }
+
+    fn execute(
+        &mut self,
+        kernel: &CompiledKernel,
+        batch: &[Vec<i32>],
+    ) -> Result<ExecReport, ExecError> {
+        validate_batch(kernel, batch)?;
+        // Context switch: clock the 40-bit stream through the daisy
+        // chain (verifies the round-trip and yields the cycle count).
+        let mut switch_cycles = 0u64;
+        if self.context.as_deref() != Some(kernel.name.as_str()) {
+            let loaded = config_port::load_image(&kernel.context)
+                .map_err(|e| Self::backend_err(format!("context load: {e}")))?;
+            switch_cycles = loaded.cycles;
+            self.total_switch_cycles += switch_cycles;
+            self.context = Some(kernel.name.clone());
+        }
+        // Configured overlays are cached across switches (the hardware
+        // analogue: per-kernel context images stay in the config BRAM).
+        if !self.overlays.contains_key(&kernel.name) {
+            let ov = Overlay::new(&kernel.program, self.replicas, self.fifo_capacity)
+                .map_err(|e| Self::backend_err(format!("building overlay: {e}")))?;
+            self.overlays.insert(kernel.name.clone(), ov);
+        }
+        let ov = self.overlays.get_mut(&kernel.name).expect("just inserted");
+        // Generous per-batch cycle budget: fill + n initiations + slack.
+        let budget = kernel.latency + (batch.len() as u64 + 4) * kernel.ii as u64 + 1024;
+        let before = ov.batch_cycles();
+        let outputs = ov
+            .run(batch, budget)
+            .map_err(|e| Self::backend_err(format!("{e}")))?;
+        let fabric_cycles = ov.batch_cycles().saturating_sub(before);
+        self.total_fabric_cycles += fabric_cycles;
+        Ok(ExecReport {
+            outputs,
+            switch_cycles,
+            fabric_cycles: Some(fabric_cycles),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::eval;
+    use crate::exec::KernelRegistry;
+
+    #[test]
+    fn matches_oracle_and_reuses_overlays_across_switches() {
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        let grad = reg.get("gradient").unwrap();
+        let cheb = reg.get("chebyshev").unwrap();
+        let mut b = SimBackend::new(1, 4096).unwrap();
+        // gradient -> chebyshev -> gradient: two kernels, three switches.
+        let r1 = b.execute(grad, &[vec![3, 5, 2, 7, 1]]).unwrap();
+        assert_eq!(r1.outputs, vec![vec![36]]);
+        assert_eq!(r1.switch_cycles, grad.context_words as u64);
+        let r2 = b.execute(cheb, &[vec![2]]).unwrap();
+        assert_eq!(r2.outputs, vec![eval(&cheb.dfg, &[2])]);
+        assert_eq!(r2.switch_cycles, cheb.context_words as u64);
+        let r3 = b.execute(grad, &[vec![1, 1, 1, 1, 1]]).unwrap();
+        assert_eq!(r3.outputs, vec![vec![0]]);
+        // Switching back re-charges the load but reuses the overlay.
+        assert_eq!(r3.switch_cycles, grad.context_words as u64);
+        assert_eq!(b.overlays.len(), 2);
+        assert_eq!(
+            b.total_switch_cycles,
+            2 * grad.context_words as u64 + cheb.context_words as u64
+        );
+        assert_eq!(b.resident_context(), Some("gradient"));
+    }
+
+    #[test]
+    fn replication_preserves_order() {
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        let k = reg.get("mibench").unwrap();
+        let mut b = SimBackend::new(3, 4096).unwrap();
+        let batch: Vec<Vec<i32>> = (0..10).map(|i| vec![i, i + 1, i + 2]).collect();
+        let r = b.execute(k, &batch).unwrap();
+        for (pkt, got) in batch.iter().zip(&r.outputs) {
+            assert_eq!(got, &eval(&k.dfg, pkt));
+        }
+    }
+
+    #[test]
+    fn structured_errors_for_bad_batches() {
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        let k = reg.get("gradient").unwrap();
+        let mut b = SimBackend::new(1, 4096).unwrap();
+        assert!(matches!(
+            b.execute(k, &[]),
+            Err(ExecError::EmptyBatch { .. })
+        ));
+        assert!(matches!(
+            b.execute(k, &[vec![1]]),
+            Err(ExecError::WrongArity { .. })
+        ));
+        // Failed validation must not have charged a switch.
+        assert_eq!(b.total_switch_cycles, 0);
+    }
+
+    #[test]
+    fn rejects_degenerate_configuration() {
+        assert!(SimBackend::new(0, 4096).is_err());
+        assert!(SimBackend::new(1, 1).is_err());
+    }
+}

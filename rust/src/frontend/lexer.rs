@@ -65,12 +65,19 @@ pub struct Spanned {
     pub line: u32,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("lex error at line {line}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LexError {
     pub line: u32,
     pub msg: String,
 }
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
 
 /// Tokenize a kernel source file. `#` and `//` start line comments.
 pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {

@@ -12,16 +12,43 @@ use super::parser::{parse_kernel, ParseError};
 use crate::dfg::{normalize, Dfg, NodeId, OpKind};
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LowerError {
-    #[error("{0}")]
-    Parse(#[from] ParseError),
-    #[error("line {line}: unknown variable '{name}'")]
+    Parse(ParseError),
     UnknownVar { name: String, line: u32 },
-    #[error("line {line}: variable '{name}' reassigned (kernels are single-assignment)")]
     Reassigned { name: String, line: u32 },
-    #[error("literal {0} out of i32 range")]
     LitRange(i64),
+}
+
+impl std::fmt::Display for LowerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LowerError::Parse(e) => write!(f, "{e}"),
+            LowerError::UnknownVar { name, line } => {
+                write!(f, "line {line}: unknown variable '{name}'")
+            }
+            LowerError::Reassigned { name, line } => write!(
+                f,
+                "line {line}: variable '{name}' reassigned (kernels are single-assignment)"
+            ),
+            LowerError::LitRange(v) => write!(f, "literal {v} out of i32 range"),
+        }
+    }
+}
+
+impl std::error::Error for LowerError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LowerError::Parse(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ParseError> for LowerError {
+    fn from(e: ParseError) -> LowerError {
+        LowerError::Parse(e)
+    }
 }
 
 /// Compile kernel source text to a normalized DFG.

@@ -21,12 +21,19 @@ use super::ast::{Assign, Expr, KernelDef};
 use super::lexer::{lex, Spanned, Tok};
 use crate::dfg::OpKind;
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("parse error at line {line}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub line: u32,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse one kernel definition from source text.
 pub fn parse_kernel(src: &str) -> Result<KernelDef, ParseError> {

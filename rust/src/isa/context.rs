@@ -77,18 +77,44 @@ pub struct ContextImage {
     pub fus: Vec<FuContext>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum ContextError {
-    #[error(transparent)]
-    Instr(#[from] InstrError),
-    #[error("context stream truncated")]
+    Instr(InstrError),
     Truncated,
-    #[error("word {0}: unknown kind {1}")]
     BadKind(usize, u8),
-    #[error("FU {0}: more than 32 instructions do not fit the IM")]
     ImOverflow(usize),
-    #[error("FU {0}: RF constant preload exceeds register file")]
     RfOverflow(usize),
+}
+
+impl std::fmt::Display for ContextError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ContextError::Instr(e) => write!(f, "{e}"),
+            ContextError::Truncated => f.write_str("context stream truncated"),
+            ContextError::BadKind(w, k) => write!(f, "word {w}: unknown kind {k}"),
+            ContextError::ImOverflow(fu) => {
+                write!(f, "FU {fu}: more than 32 instructions do not fit the IM")
+            }
+            ContextError::RfOverflow(fu) => {
+                write!(f, "FU {fu}: RF constant preload exceeds register file")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ContextError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ContextError::Instr(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<InstrError> for ContextError {
+    fn from(e: InstrError) -> ContextError {
+        ContextError::Instr(e)
+    }
 }
 
 impl ContextImage {

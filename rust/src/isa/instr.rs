@@ -27,15 +27,26 @@ pub enum FuInstr {
     Bypass { rs: u8 },
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InstrError {
-    #[error("register address {0} out of range (RF has 32 entries)")]
     RegRange(u8),
-    #[error("word {0:#010x}: unrecognized DSP configuration")]
     BadConfig(u32),
-    #[error("word {0:#010x}: spare bit set")]
     SpareBit(u32),
 }
+
+impl std::fmt::Display for InstrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InstrError::RegRange(r) => {
+                write!(f, "register address {r} out of range (RF has 32 entries)")
+            }
+            InstrError::BadConfig(w) => write!(f, "word {w:#010x}: unrecognized DSP configuration"),
+            InstrError::SpareBit(w) => write!(f, "word {w:#010x}: spare bit set"),
+        }
+    }
+}
+
+impl std::error::Error for InstrError {}
 
 impl FuInstr {
     /// The DSP configuration this instruction drives.

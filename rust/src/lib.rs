@@ -16,9 +16,15 @@
 //! * **resource/frequency models** calibrated to the paper's synthesis
 //!   results, plus the SCFU-SCN / Vivado-HLS / related-work baselines
 //!   ([`resources`], [`baseline`]);
-//! * the **runtime** — PJRT loader executing the AOT-compiled (JAX +
-//!   Pallas) kernels on the data path, and the serving coordinator
-//!   ([`runtime`], [`coordinator`]);
+//! * the **execution backend layer** — one [`exec::Backend`] contract
+//!   with three interchangeable substrates: the DFG interpreter, the
+//!   cycle-accurate overlay simulator (with modeled context switching),
+//!   and the PJRT engine over the AOT-compiled (JAX + Pallas) kernels
+//!   ([`exec`], [`runtime`]);
+//! * the **serving coordinator** — backend-generic fabric workers over
+//!   a shared compiled-kernel registry; runs the full serving stack
+//!   with zero artifacts via `tmfu serve --backend sim`
+//!   ([`coordinator`]);
 //! * **reporting** — regeneration of every table/figure in the paper
 //!   ([`report`], `rust/benches/`).
 
@@ -27,6 +33,7 @@ pub mod baseline;
 pub mod bench_suite;
 pub mod coordinator;
 pub mod dfg;
+pub mod exec;
 pub mod frontend;
 pub mod isa;
 pub mod report;

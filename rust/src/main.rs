@@ -4,7 +4,8 @@
 //! (`compile`, `export-dfg`), scheduling and inspection (`schedule`,
 //! `table1`, `dot`), cycle-accurate simulation (`simulate`), reports
 //! (`table2`, `table3`, `fig5`, `fig6`, `ctx-switch`, `resources`),
-//! and the serving runtime (`serve`, requires `make artifacts`).
+//! and the serving runtime (`serve --backend {ref,sim,pjrt}`; only the
+//! pjrt backend requires `make artifacts`).
 
 use std::process::ExitCode;
 use tmfu_overlay::util::cli::Command;
@@ -46,8 +47,13 @@ fn commands() -> Vec<Command> {
         Command::new("fig6", "reproduce Fig. 6 (area comparison)"),
         Command::new("ctx-switch", "reproduce the context-switch comparison"),
         Command::new("resources", "reproduce the §III.A resource results"),
-        Command::new("serve", "run the serving coordinator on AOT artifacts")
-            .opt("artifacts", "artifacts directory", Some("artifacts"))
+        Command::new("serve", "run the serving coordinator (any execution backend)")
+            .opt(
+                "backend",
+                "execution backend: ref | sim | pjrt",
+                Some("sim"),
+            )
+            .opt("artifacts", "artifacts directory (pjrt backend)", Some("artifacts"))
             .opt("pipelines", "overlay pipelines (workers)", Some("2"))
             .opt("requests", "requests to serve", Some("200"))
             .opt("batch", "max batch size", Some("16"))
@@ -175,6 +181,11 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "ctx-switch" => print!("{}", report::ctx_switch::render()?),
         "resources" => print!("{}", report::resources_report::render()),
         "serve" => {
+            let backend: tmfu_overlay::exec::BackendKind = m
+                .get("backend")
+                .unwrap()
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!("{e}"))?;
             let dir = m.get("artifacts").unwrap().to_string();
             let pipelines = m
                 .get_usize("pipelines")
@@ -192,7 +203,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 .get_usize("seed")
                 .map_err(|e| anyhow::anyhow!("{e}"))?
                 .unwrap() as u64;
-            tmfu_overlay::coordinator::serve_demo(&dir, pipelines, requests, batch, seed)?;
+            tmfu_overlay::coordinator::serve_demo(backend, &dir, pipelines, requests, batch, seed)?;
         }
         _ => unreachable!(),
     }

@@ -1,8 +1,13 @@
 //! Runtime: PJRT loading/execution of the AOT artifacts plus the
 //! manifest contract with `python/compile/aot.py`.
+//!
+//! The PJRT engine is one of three execution substrates behind the
+//! [`crate::exec::Backend`] trait; the serving coordinator no longer
+//! depends on it directly.
 
 pub mod manifest;
 pub mod pjrt;
+pub mod xla_shim;
 
 pub use manifest::{KernelEntry, Manifest};
 pub use pjrt::Engine;

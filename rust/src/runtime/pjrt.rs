@@ -7,6 +7,10 @@
 //! `execute` per batch. Python never runs here.
 
 use super::manifest::{KernelEntry, Manifest};
+// Offline build: the PJRT bindings are satisfied by the in-repo shim
+// (same API, fails cleanly at client creation). Swap this line for the
+// real `xla` crate to run on actual PJRT.
+use super::xla_shim as xla;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;

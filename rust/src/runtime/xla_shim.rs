@@ -1,0 +1,126 @@
+//! Offline shim for the `xla` PJRT bindings.
+//!
+//! The build image ships no XLA/PJRT shared library, so this module
+//! provides the exact API surface [`super::pjrt`] consumes with the
+//! same shapes and `Result` signatures. Every entry point that would
+//! touch the real runtime fails cleanly at [`PjRtClient::cpu`] with an
+//! actionable message; nothing downstream of client creation can be
+//! reached. Swapping the real `xla` crate back in is a one-line change
+//! in `runtime/pjrt.rs` (`use super::xla_shim as xla;` → `use xla;`) —
+//! the serving stack itself no longer depends on PJRT because the
+//! interpreter and cycle-accurate simulator backends in [`crate::exec`]
+//! cover the full workload without artifacts.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion
+/// into `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime is not available in this build (the offline image \
+         ships no XLA library); use `--backend sim` or `--backend ref`, \
+         or link the real `xla` crate in runtime/pjrt.rs"
+            .to_string(),
+    ))
+}
+
+/// Parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `xla::PjRtLoadedExecutable::execute`: one output buffer
+    /// list per device.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer holding an execution result.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Host literal (stub: carries no data).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_values: &[i32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        assert!(err.to_string().contains("--backend sim"), "{err}");
+    }
+
+    #[test]
+    fn hlo_parse_fails_cleanly() {
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+    }
+}

@@ -1,6 +1,7 @@
-//! Substrate utilities built in-repo (the offline image ships only
-//! `xla`/`anyhow`/`thiserror`; everything else a framework normally pulls
-//! from crates.io lives here, with its own tests).
+//! Substrate utilities built in-repo (the offline image has no crates.io
+//! access — `anyhow` is vendored under `rust/vendor/` and everything else
+//! a framework normally pulls from crates.io lives here, with its own
+//! tests).
 
 pub mod bench;
 pub mod bits;

@@ -246,6 +246,44 @@ fn prop_normalize_idempotent_on_benchmarks() {
     }
 }
 
+/// Serving-layer oracle equivalence: the interpreter backend and the
+/// cycle-accurate simulator backend produce identical outputs for
+/// every benchmark kernel on random batches (full wrapping-i32 range).
+/// This is the property that makes the backends interchangeable behind
+/// the coordinator.
+#[test]
+fn prop_backend_equivalence_ref_vs_sim() {
+    use tmfu_overlay::exec::{Backend, KernelRegistry, RefBackend, SimBackend};
+    let reg = KernelRegistry::compile_bench_suite().unwrap();
+    for name in tmfu_overlay::bench_suite::all_names() {
+        let kernel = reg.get(name).unwrap().clone();
+        let n_in = kernel.n_inputs;
+        check(
+            25,
+            gen_vec(gen_i64(i32::MIN as i64, i32::MAX as i64), n_in, n_in * 4),
+            &format!("backend-equiv-{name}"),
+            |vals| {
+                // Interpret the flat value vector as whole packets.
+                let packets: Vec<Vec<i32>> = vals
+                    .chunks_exact(n_in)
+                    .map(|c| c.iter().map(|&v| v as i32).collect())
+                    .collect();
+                if packets.is_empty() {
+                    return Ok(());
+                }
+                let mut rb = RefBackend::new();
+                let mut sb = SimBackend::new(1, 4096).map_err(|e| e.to_string())?;
+                let r = rb.execute(&kernel, &packets).map_err(|e| e.to_string())?;
+                let s = sb.execute(&kernel, &packets).map_err(|e| e.to_string())?;
+                prop_assert(
+                    r.outputs == s.outputs,
+                    "cycle-accurate sim diverged from the interpreter",
+                )
+            },
+        );
+    }
+}
+
 /// Full-suite smoke of the CLI-facing report renderers (they are the
 /// bench backbone; must never error).
 #[test]
@@ -265,7 +303,10 @@ fn reports_render() {
 /// `target/release/tmfu export-dfg` when the compiler changes.
 #[test]
 fn committed_dfg_jsons_are_in_sync() {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("benchmarks/dfg");
+    // benchmarks/ lives at the repository root, one level above this
+    // package (same convention as bench_suite's include_str! sources
+    // and python/compile/dfg.py).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../benchmarks/dfg");
     for name in tmfu_overlay::bench_suite::all_names() {
         let path = dir.join(format!("{name}.json"));
         let committed = std::fs::read_to_string(&path)

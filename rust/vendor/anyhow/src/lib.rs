@@ -1,0 +1,217 @@
+//! Minimal, offline-vendored reimplementation of the `anyhow` API
+//! surface this workspace uses.
+//!
+//! The build image has no crates.io access, so the crate is vendored as
+//! a path dependency. It provides: [`Error`] (a boxed dynamic error
+//! with a context chain), [`Result`], the [`Context`] extension trait
+//! for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics match upstream `anyhow` for this subset, except
+//! that `Display` shows the full context chain (`ctx: cause`) rather
+//! than only the outermost layer — strictly more informative for the
+//! CLI and test output this repo produces.
+
+use std::fmt;
+
+/// A dynamic error: a message plus an optional source chain, cheap to
+/// construct and `Send + Sync` so it can cross worker threads.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap an underlying error with a context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The root-cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut next = self
+            .source
+            .as_deref()
+            .map(|e| e as &(dyn std::error::Error + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        for cause in self.chain() {
+            write!(f, "\n\ncaused by: {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`;
+// exactly like upstream `anyhow`, that keeps the blanket `From` below
+// coherent (no overlap with the reflexive `From<T> for T`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+/// `anyhow::Result<T>` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+        assert_eq!(e.chain().count(), 1);
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest: missing");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: std::result::Result<i32, std::io::Error> = Ok(7);
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "ctx"
+            })
+            .unwrap_or_default();
+        assert_eq!(v, 7);
+        assert!(!called, "context closure ran on the Ok path");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<i32> = None;
+        assert_eq!(none.context("empty").unwrap_err().to_string(), "empty");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 41;
+        let e = anyhow!("value {}", x + 1);
+        assert_eq!(e.to_string(), "value 42");
+        let e = anyhow!(io_err());
+        assert_eq!(e.to_string(), "missing");
+        fn f(flag: bool) -> Result<u8> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable for true? no: always bails");
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert!(f(true).is_err());
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

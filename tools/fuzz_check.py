@@ -1,0 +1,311 @@
+#!/usr/bin/env python3
+"""Offline replica of `rust/tests/integration.rs::fuzz_full_chain_against_oracle`.
+
+Reproduces the exact xoshiro256** stream (`util::prng::Rng`) and the
+random kernel generator, then drives every generated kernel through the
+compiler mirror and the cycle-accurate pipeline mirrors (single-bank
+`Fu` and double-buffered `FuDb`), asserting the same invariants the
+Rust test asserts:
+
+  * outputs match the functional oracle (both pipeline variants);
+  * measured steady-state II == the analytical model, exactly;
+  * scheduling failures only ever report RF/IM overflow;
+  * at least 40 of the 60 cases are exercised.
+
+Run before shipping compiler/scheduler changes when no Rust toolchain
+is available.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from gen_dfg_json import (  # noqa: E402
+    KERNELS,
+    Parser,
+    SRC_DIR,
+    evaluate,
+    lower,
+    normalize,
+    schedule,
+    timing,
+    tokenize,
+)
+from sim_check import Fu, Pipeline  # noqa: E402
+
+M64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    """Bit-exact mirror of util::prng::Rng (xoshiro256**)."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def below(self, bound):
+        assert bound > 0
+        while True:
+            x = self.next_u64()
+            w = x * bound
+            hi, lo = w >> 64, w & M64
+            if lo >= bound or lo >= ((-x) & M64) % bound:
+                return hi
+
+    def index(self, bound):
+        return self.below(bound)
+
+    def range_i64(self, lo, hi):
+        span = hi - lo + 1
+        v = lo + self.below(span)
+        # wrapping add in i64 space (never wraps for our ranges)
+        return v
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def chance(self, p):
+        return self.f64() < p
+
+    def choose(self, xs):
+        return xs[self.index(len(xs))]
+
+
+def random_kernel_source(rng, case_id):
+    n_in = 1 + rng.index(6)
+    n_stmts = 3 + rng.index(24)
+    params = [f"x{i}" for i in range(n_in)]
+    variables = list(params)
+    ops = ["+", "-", "*", "&", "|", "^"]
+    body = []
+    for s in range(n_stmts):
+        name = f"t{s}"
+        a = rng.choose(variables)
+        op_space = 3 if rng.chance(0.7) else 6
+        op = ops[rng.index(op_space)]
+        if rng.chance(0.3):
+            rhs = str(rng.range_i64(-64, 64))
+        else:
+            rhs = rng.choose(variables)
+        body.append(f"  {name} = {a} {op} {rhs};\n")
+        variables.append(name)
+    ret = variables[-1]
+    return "kernel rand{}({}) {{\n{}  return {};\n}}".format(
+        case_id, ", ".join(params), "".join(body), ret
+    )
+
+
+# --- double-buffered FU / pipeline mirror (arch::{fu_db, pipeline_db}) ---
+
+
+class FuDb:
+    def __init__(self, instrs, consts, n_loads):
+        from gen_dfg_json import apply_op
+
+        self.apply_op = apply_op
+        self.im = instrs
+        bank = [0] * 32
+        for i, c in enumerate(consts):
+            bank[31 - i] = c
+        self.banks = [list(bank), list(bank)]
+        self.write_bank = 0
+        self.n_loads = n_loads
+        self.dc = 0
+        self.pc = None
+        self.pending_swap = False
+        self.line = [None, None]
+
+    def can_accept(self):
+        return self.dc < self.n_loads
+
+    def _maybe_swap(self):
+        if self.pc is None and self.pending_swap:
+            self.write_bank ^= 1
+            self.pending_swap = False
+            self.dc = 0
+            self.pc = 0
+
+    def step(self, inp):
+        self._maybe_swap()
+        if inp is not None:
+            assert self.dc < self.n_loads, "write bank overrun"
+            self.banks[self.write_bank][self.dc] = inp
+            self.dc += 1
+            if self.dc == self.n_loads:
+                self.pending_swap = True
+        self._maybe_swap()
+        issue = None
+        if self.pc is not None:
+            ins = self.im[self.pc]
+            bank = self.banks[self.write_bank ^ 1]
+            if ins[0] == "op":
+                issue = self.apply_op(ins[1], bank[ins[2]], bank[ins[3]])
+            else:
+                issue = bank[ins[1]]
+            self.pc = None if self.pc + 1 == len(self.im) else self.pc + 1
+        out = self.line[0]
+        self.line = [self.line[1], issue]
+        return out
+
+
+class PipelineDb:
+    def __init__(self, nodes, stages, output_order):
+        self.fus = []
+        for st in stages:
+            slot = {v: i for i, v in enumerate(st["arrivals"])}
+            for i, (c, _) in enumerate(st["consts"]):
+                slot[c] = 31 - i
+            instrs = [
+                ("op", nodes[o]["op"], slot[nodes[o]["args"][0]], slot[nodes[o]["args"][1]])
+                for o in st["ops"]
+            ]
+            instrs += [("byp", slot[b]) for b in st["bypasses"]]
+            self.fus.append(FuDb(instrs, [c[1] for c in st["consts"]], st["n_loads"]))
+        self.n_inputs = stages[0]["n_loads"]
+        self.n_out = stages[-1]["n_execs"]
+        self.output_order = output_order
+        self.ii = max(max(st["n_loads"], st["n_execs"]) for st in stages) or 1
+        self.in_fifo = []
+        self.out_fifo = []
+        self.next_packet_cycle = 1
+        self.words_in = 0
+        self.cycle = 0
+
+    def enqueue(self, packet):
+        if 4096 - len(self.in_fifo) < len(packet):
+            return False
+        self.in_fifo.extend(packet)
+        return True
+
+    def step(self):
+        self.cycle += 1
+        at_boundary = self.words_in % self.n_inputs == 0
+        gate_open = (not at_boundary) or self.cycle >= self.next_packet_cycle
+        carry = None
+        if self.fus[0].can_accept() and gate_open and self.in_fifo:
+            carry = self.in_fifo.pop(0)
+            if at_boundary:
+                self.next_packet_cycle = self.cycle + self.ii
+            self.words_in += 1
+        for fu in self.fus:
+            carry = fu.step(carry)
+        if carry is not None:
+            self.out_fifo.append(carry)
+
+    def run(self, packets, max_cycles):
+        nxt, out = 0, []
+        start = self.cycle
+        while len(out) < len(packets):
+            assert self.cycle - start <= max_cycles, "db cycle budget exceeded"
+            if nxt < len(packets) and self.enqueue(packets[nxt]):
+                nxt += 1
+            self.step()
+            while len(self.out_fifo) >= self.n_out:
+                words = [self.out_fifo.pop(0) for _ in range(self.n_out)]
+                out.append([words[pos] for _, pos in self.output_order])
+        return out
+
+
+def measure_ii(pl, sample):
+    assert len(sample) >= 4
+    nxt, seen, completions = 0, 0, []
+    budget = 1000 + len(sample) * 200
+    start = pl.cycle
+    while len(completions) < len(sample):
+        assert pl.cycle - start <= budget, "II measurement did not converge"
+        if nxt < len(sample) and pl.enqueue(sample[nxt]):
+            nxt += 1
+        pl.step()
+        while len(pl.out_fifo) // pl.n_out > seen:
+            seen += 1
+            completions.append(pl.cycle)
+    gaps = [b - a for a, b in zip(completions, completions[1:])]
+    return sum(gaps) / len(gaps)
+
+
+def build_single(nodes, stages, output_order, ii):
+    return Pipeline(nodes, stages, output_order, ii)
+
+
+def main():
+    rng = Rng(0xF00D)
+    tested = 0
+    for case in range(60):
+        src = random_kernel_source(rng, case)
+        kname, params, body, returns = Parser(tokenize(src)).kernel()
+        nodes = normalize(lower(kname, params, body, returns))
+        n_ops = sum(1 for n in nodes if n["kind"] == "op")
+        if n_ops == 0:
+            continue
+        try:
+            stages, output_order, _ = schedule(kname, nodes)
+        except AssertionError as e:
+            assert "overflow" in str(e), f"unexpected scheduling failure: {e}\n{src}"
+            continue
+        ii, latency = timing(stages)
+        n_in = sum(1 for n in nodes if n["kind"] == "input")
+        packets = [
+            [rng.range_i64(-10_000, 10_000) for _ in range(n_in)] for _ in range(5)
+        ]
+        want = [evaluate(nodes, p) for p in packets]
+        pl = build_single(nodes, stages, output_order, ii)
+        got, _ = pl.run(packets, 100_000)
+        assert got == want, f"single-bank diverged on case {case}\n{src}"
+        pldb = PipelineDb(nodes, stages, output_order)
+        got_db = pldb.run(packets, 100_000)
+        assert got_db == want, f"double-buffered diverged on case {case}\n{src}"
+        pl2 = build_single(nodes, stages, output_order, ii)
+        sample = [[k] * n_in for k in range(8)]
+        measured = measure_ii(pl2, sample)
+        assert abs(measured - ii) < 1e-9, f"case {case}: II {measured} vs {ii}\n{src}"
+        tested += 1
+    assert tested >= 40, f"only {tested} cases exercised"
+    print(f"fuzz mirror: {tested}/60 cases pass (oracle, double-buffered, measured II)")
+
+    # Benchmark kernels through the double-buffered pipeline too
+    # (mirrors arch::pipeline_db::matches_oracle_on_all_benchmarks).
+    for name in KERNELS:
+        with open(os.path.join(SRC_DIR, f"{name}.k")) as f:
+            src = f.read()
+        kname, params, body, returns = Parser(tokenize(src)).kernel()
+        nodes = normalize(lower(kname, params, body, returns))
+        stages, output_order, _ = schedule(name, nodes)
+        n_in = stages[0]["n_loads"]
+        packets = [[(k * 31 + i) - 17 for i in range(n_in)] for k in range(4)]
+        pldb = PipelineDb(nodes, stages, output_order)
+        got = pldb.run(packets, 100_000)
+        want = [evaluate(nodes, p) for p in packets]
+        assert got == want, f"{name}: double-buffered diverged"
+    print("double-buffered pipeline matches the oracle on all benchmark kernels")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,602 @@
+#!/usr/bin/env python3
+"""Offline mirror of the Rust compiler pipeline.
+
+Re-implements, byte-for-byte, the path
+
+    frontend (lex/parse/lower) -> dfg::normalize -> sched::Program
+    -> sched::Timing -> sched::program_to_json -> Json::to_string_pretty
+
+so that the committed ``benchmarks/dfg/*.json`` interchange files can be
+(re)generated and the Table II characteristics of the ``benchmarks/src``
+kernels can be cross-checked without a Rust toolchain.  The Rust test
+``committed_dfg_jsons_are_in_sync`` compares these files against
+``tmfu export-dfg``; when a toolchain is available, prefer regenerating
+with ``target/release/tmfu export-dfg``.
+
+Usage:  python3 tools/gen_dfg_json.py [--check-only]
+"""
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC_DIR = os.path.join(ROOT, "benchmarks", "src")
+OUT_DIR = os.path.join(ROOT, "benchmarks", "dfg")
+
+KERNELS = [
+    "gradient",
+    "chebyshev",
+    "sgfilter",
+    "mibench",
+    "qspline",
+    "poly5",
+    "poly6",
+    "poly7",
+    "poly8",
+]
+
+# Paper Table II rows: (in, out, edges, ops, depth, ii).
+PAPER = {
+    "chebyshev": (1, 1, 12, 7, 7, 6),
+    "sgfilter": (2, 1, 27, 18, 9, 10),
+    "mibench": (3, 1, 22, 13, 6, 11),
+    "qspline": (7, 1, 50, 26, 8, 18),
+    "poly5": (3, 1, 43, 27, 9, 14),
+    "poly6": (3, 1, 72, 44, 11, 17),
+    "poly7": (3, 1, 62, 39, 13, 17),
+    "poly8": (3, 1, 51, 32, 11, 15),
+}
+
+FLUSH_CYCLES = 2
+PIPE_LATENCY = 2
+
+COMMUTATIVE = {"add", "mul", "and", "or", "xor"}
+
+
+def wrap32(v):
+    return ((v + (1 << 31)) & 0xFFFFFFFF) - (1 << 31)
+
+
+def apply_op(op, a, b):
+    if op == "add":
+        return wrap32(a + b)
+    if op == "sub":
+        return wrap32(a - b)
+    if op == "mul":
+        return wrap32(a * b)
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    raise ValueError(op)
+
+
+# ---------------------------------------------------------------------
+# Frontend: lexer + recursive-descent parser (mirrors frontend/{lexer,
+# parser}.rs for the subset the benchmark kernels use).
+# ---------------------------------------------------------------------
+
+def tokenize(src):
+    toks, i, n = [], 0, len(src)
+    while i < n:
+        c = src[i]
+        if c in " \t\r\n":
+            i += 1
+        elif c == "#" or src[i : i + 2] == "//":
+            while i < n and src[i] != "\n":
+                i += 1
+        elif c in "(){},;=+-*&|^":
+            toks.append(c)
+            i += 1
+        elif c.isdigit():
+            j = i
+            while j < n and (src[j].isdigit() or src[j] in "xX" or src[j] in "abcdefABCDEF"):
+                j += 1
+            text = src[i:j]
+            toks.append(("int", int(text, 16) if text[:2].lower() == "0x" else int(text)))
+            i = j
+        elif c.isalpha() or c == "_":
+            j = i
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            toks.append(("word", src[i:j]))
+            i = j
+        else:
+            raise SyntaxError(f"unexpected character {c!r}")
+    toks.append(("eof", None))
+    return toks
+
+
+class Parser:
+    LEVELS = [[("|", "or")], [("^", "xor")], [("&", "and")],
+              [("+", "add"), ("-", "sub")], [("*", "mul")]]
+
+    def __init__(self, toks):
+        self.toks = toks
+        self.pos = 0
+
+    def peek(self):
+        return self.toks[self.pos]
+
+    def bump(self):
+        t = self.toks[self.pos]
+        if self.pos < len(self.toks) - 1:
+            self.pos += 1
+        return t
+
+    def expect(self, want):
+        t = self.bump()
+        if t != want:
+            raise SyntaxError(f"expected {want!r}, found {t!r}")
+
+    def ident(self):
+        t = self.bump()
+        if not (isinstance(t, tuple) and t[0] == "word"):
+            raise SyntaxError(f"expected identifier, found {t!r}")
+        return t[1]
+
+    def kernel(self):
+        t = self.bump()
+        assert t == ("word", "kernel")
+        name = self.ident()
+        self.expect("(")
+        params = []
+        if self.peek() != ")":
+            while True:
+                params.append(self.ident())
+                if self.peek() == ",":
+                    self.bump()
+                else:
+                    break
+        self.expect(")")
+        self.expect("{")
+        body, returns = [], None
+        while True:
+            t = self.peek()
+            if t == ("word", "return"):
+                self.bump()
+                returns = [self.expr()]
+                while self.peek() == ",":
+                    self.bump()
+                    returns.append(self.expr())
+                self.expect(";")
+                break
+            name2 = self.ident()
+            self.expect("=")
+            e = self.expr()
+            self.expect(";")
+            body.append((name2, e))
+        self.expect("}")
+        self.expect(("eof", None))
+        return name, params, body, returns
+
+    def expr(self, level=0):
+        if level == len(self.LEVELS):
+            return self.unary()
+        lhs = self.expr(level + 1)
+        while True:
+            hit = None
+            for tok, op in self.LEVELS[level]:
+                if self.peek() == tok:
+                    hit = op
+                    break
+            if hit is None:
+                return lhs
+            self.bump()
+            rhs = self.expr(level + 1)
+            lhs = ("bin", hit, lhs, rhs)
+
+    def unary(self):
+        if self.peek() == "-":
+            self.bump()
+            return ("neg", self.unary())
+        return self.atom()
+
+    def atom(self):
+        t = self.bump()
+        if isinstance(t, tuple) and t[0] == "word":
+            return ("var", t[1])
+        if isinstance(t, tuple) and t[0] == "int":
+            return ("lit", t[1])
+        if t == "(":
+            e = self.expr()
+            self.expect(")")
+            return e
+        raise SyntaxError(f"expected expression, found {t!r}")
+
+
+# ---------------------------------------------------------------------
+# DFG: nodes are dicts mirroring dfg::Node.
+#   {"kind": "input", "name": n} | {"kind": "const", "value": v}
+#   {"kind": "op", "op": o, "args": [a, b]} | {"kind": "output", ...}
+# ---------------------------------------------------------------------
+
+def lower(name, params, body, returns):
+    nodes, env = [], {}
+
+    def push(node):
+        nodes.append(node)
+        return len(nodes) - 1
+
+    def lower_expr(e):
+        k = e[0]
+        if k == "var":
+            return env[e[1]]
+        if k == "lit":
+            return push({"kind": "const", "value": wrap32(e[1])})
+        if k == "bin":
+            a = lower_expr(e[2])
+            b = lower_expr(e[3])
+            return push({"kind": "op", "op": e[1], "args": [a, b]})
+        if k == "neg":
+            zero = push({"kind": "const", "value": 0})
+            v = lower_expr(e[1])
+            return push({"kind": "op", "op": "sub", "args": [zero, v]})
+        raise ValueError(k)
+
+    for p in params:
+        env[p] = push({"kind": "input", "name": p})
+    for var, e in body:
+        assert var not in env, f"{name}: {var} reassigned"
+        env[var] = lower_expr(e)
+    multi = len(returns) > 1
+    for i, r in enumerate(returns):
+        v = lower_expr(r)
+        push({"kind": "output", "name": f"out{i}" if multi else "out", "args": [v]})
+    return nodes
+
+
+def constant_fold(nodes):
+    out, mapping = [], []
+    for n in nodes:
+        if n["kind"] == "op":
+            a, b = mapping[n["args"][0]], mapping[n["args"][1]]
+            na, nb = out[a], out[b]
+            if na["kind"] == "const" and nb["kind"] == "const":
+                out.append({"kind": "const", "value": apply_op(n["op"], na["value"], nb["value"])})
+            else:
+                out.append({"kind": "op", "op": n["op"], "args": [a, b]})
+        elif n["kind"] == "output":
+            out.append({"kind": "output", "name": n["name"], "args": [mapping[n["args"][0]]]})
+        else:
+            out.append(dict(n))
+        mapping.append(len(out) - 1)
+    return out
+
+
+def cse(nodes):
+    out, mapping = [], []
+    seen_ops, seen_consts = {}, {}
+    for n in nodes:
+        if n["kind"] == "const":
+            v = n["value"]
+            if v in seen_consts:
+                mapping.append(seen_consts[v])
+                continue
+            out.append(dict(n))
+            seen_consts[v] = len(out) - 1
+        elif n["kind"] == "op":
+            a, b = mapping[n["args"][0]], mapping[n["args"][1]]
+            if n["op"] in COMMUTATIVE and a > b:
+                a, b = b, a
+            key = (n["op"], a, b)
+            if key in seen_ops:
+                mapping.append(seen_ops[key])
+                continue
+            out.append({"kind": "op", "op": n["op"], "args": [a, b]})
+            seen_ops[key] = len(out) - 1
+        elif n["kind"] == "output":
+            out.append({"kind": "output", "name": n["name"], "args": [mapping[n["args"][0]]]})
+        else:
+            out.append(dict(n))
+        mapping.append(len(out) - 1)
+    return out
+
+
+def dce(nodes):
+    live = [False] * len(nodes)
+
+    def mark(i):
+        if live[i]:
+            return
+        live[i] = True
+        for a in nodes[i].get("args", []):
+            mark(a)
+
+    for i, n in enumerate(nodes):
+        if n["kind"] == "output":
+            mark(i)
+        if n["kind"] == "input":
+            live[i] = True
+    out, mapping = [], [None] * len(nodes)
+    for i, n in enumerate(nodes):
+        if not live[i]:
+            continue
+        m = dict(n)
+        if "args" in m:
+            m["args"] = [mapping[a] for a in m["args"]]
+        out.append(m)
+        mapping[i] = len(out) - 1
+    return out
+
+
+def normalize(nodes):
+    cur = nodes
+    for _ in range(16):
+        nxt = dce(cse(constant_fold(cur)))
+        if nxt == cur:
+            return nxt
+        cur = nxt
+    return cur
+
+
+def evaluate(nodes, inputs):
+    vals, outs, next_in = [0] * len(nodes), [], 0
+    for i, n in enumerate(nodes):
+        if n["kind"] == "input":
+            vals[i] = inputs[next_in]
+            next_in += 1
+        elif n["kind"] == "const":
+            vals[i] = n["value"]
+        elif n["kind"] == "op":
+            vals[i] = apply_op(n["op"], vals[n["args"][0]], vals[n["args"][1]])
+        else:
+            vals[i] = vals[n["args"][0]]
+            outs.append(vals[i])
+    return outs
+
+
+# ---------------------------------------------------------------------
+# Scheduler mirror: Levels, Routing, Program stages, Timing.
+# ---------------------------------------------------------------------
+
+def levels_of(nodes):
+    level, depth = [0] * len(nodes), 0
+    for i, n in enumerate(nodes):
+        if n["kind"] == "op":
+            level[i] = 1 + max(level[a] for a in n["args"])
+            depth = max(depth, level[i])
+        elif n["kind"] == "output":
+            level[i] = level[n["args"][0]]
+    return level, depth
+
+
+def routing_of(nodes, level, depth):
+    routes = {}  # id -> [producer, consumer_stages, last_stage]
+    for i, n in enumerate(nodes):
+        if n["kind"] == "input":
+            routes[i] = [0, [], 0]
+        elif n["kind"] == "op":
+            routes[i] = [level[i], [], 0]
+    for i, n in enumerate(nodes):
+        if n["kind"] == "op":
+            for a in n["args"]:
+                if a in routes:
+                    routes[a][1].append(level[i])
+        elif n["kind"] == "output":
+            routes[n["args"][0]][1].append(depth + 1)
+    for r in routes.values():
+        r[1] = sorted(set(r[1]))
+        r[2] = r[1][-1] if r[1] else r[0]
+    for r in routes.values():
+        if not r[1] and r[0] == 0:
+            r[2] = 1
+    return routes
+
+
+def bypass_stages(route):
+    return range(route[0] + 1, route[2])
+
+
+def schedule(name, nodes):
+    level, depth = levels_of(nodes)
+    assert depth > 0, f"{name}: no operations"
+    routes = routing_of(nodes, level, depth)
+    input_ids = [i for i, n in enumerate(nodes) if n["kind"] == "input"]
+    stages = []
+    for s in range(1, depth + 1):
+        ops = [i for i, n in enumerate(nodes) if n["kind"] == "op" and level[i] == s]
+        if s == 1:
+            arrivals = list(input_ids)
+        else:
+            arrivals = [
+                i
+                for i, n in enumerate(nodes)
+                if n["kind"] == "op" and level[i] == s - 1 and routes[i][2] >= s
+            ]
+            arrivals += [i for i in sorted(routes) if (s - 1) in bypass_stages(routes[i])]
+        byps = [i for i in sorted(routes) if s in bypass_stages(routes[i])]
+        consts = []
+        for op in ops:
+            for a in nodes[op]["args"]:
+                if nodes[a]["kind"] == "const" and all(c[0] != a for c in consts):
+                    consts.append((a, nodes[a]["value"]))
+        assert len(arrivals) + len(consts) <= 32, f"{name} stage {s}: RF overflow"
+        n_execs = len(ops) + len(byps)
+        assert n_execs <= 32, f"{name} stage {s}: IM overflow"
+        stages.append(
+            {
+                "stage": s,
+                "ops": ops,
+                "arrivals": arrivals,
+                "bypasses": byps,
+                "consts": consts,
+                "n_loads": len(arrivals),
+                "n_execs": n_execs,
+            }
+        )
+    # check_dataflow: each stage's arrivals == previous stage's emissions.
+    for prev, cur in zip(stages, stages[1:]):
+        emitted = prev["ops"] + prev["bypasses"]
+        assert len(emitted) == len(cur["arrivals"]), f"{name}: dataflow width mismatch"
+        it = iter(emitted)
+        for want in cur["arrivals"]:
+            assert any(got == want for got in it), f"{name}: arrival {want} out of order"
+    last = stages[-1]
+    emissions = last["ops"] + last["bypasses"]
+    output_order = []
+    for i, n in enumerate(nodes):
+        if n["kind"] == "output":
+            output_order.append((n["name"], emissions.index(n["args"][0])))
+    return stages, output_order, depth
+
+
+def timing(stages):
+    ii = max(st["n_loads"] + st["n_execs"] for st in stages) + FLUSH_CYCLES
+    t = 1
+    for st in stages:
+        t += st["n_loads"] + PIPE_LATENCY
+    first_output = t
+    latency = first_output + stages[-1]["n_execs"] - 1
+    return ii, latency
+
+
+# ---------------------------------------------------------------------
+# JSON emitter mirroring util::json (sorted object keys, 2-space pretty).
+# ---------------------------------------------------------------------
+
+def emit(v, level=0):
+    pad, pad1 = "  " * level, "  " * (level + 1)
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, int):
+        return str(v)
+    if isinstance(v, str):
+        out = ['"']
+        for c in v:
+            if c == '"':
+                out.append('\\"')
+            elif c == "\\":
+                out.append("\\\\")
+            elif c == "\n":
+                out.append("\\n")
+            elif ord(c) < 0x20:
+                out.append(f"\\u{ord(c):04x}")
+            else:
+                out.append(c)
+        out.append('"')
+        return "".join(out)
+    if isinstance(v, list):
+        if not v:
+            return "[]"
+        inner = (",\n" + pad1).join(emit(x, level + 1) for x in v)
+        return "[\n" + pad1 + inner + "\n" + pad + "]"
+    if isinstance(v, dict):
+        if not v:
+            return "{}"
+        items = sorted(v.items())
+        inner = (",\n" + pad1).join(f"{emit(k)}: {emit(x, level + 1)}" for k, x in items)
+        return "{\n" + pad1 + inner + "\n" + pad + "}"
+    raise TypeError(type(v))
+
+
+def program_json(name, nodes, stages, output_order, ii, latency):
+    jnodes = []
+    for n in nodes:
+        if n["kind"] == "input":
+            jnodes.append({"kind": "input", "name": n["name"]})
+        elif n["kind"] == "const":
+            jnodes.append({"kind": "const", "value": n["value"]})
+        elif n["kind"] == "op":
+            jnodes.append({"kind": "op", "op": n["op"], "args": list(n["args"])})
+        else:
+            jnodes.append({"kind": "output", "name": n["name"], "args": list(n["args"])})
+    jstages = [
+        {
+            "stage": st["stage"],
+            "ops": list(st["ops"]),
+            "arrivals": list(st["arrivals"]),
+            "bypasses": list(st["bypasses"]),
+            "consts": [{"node": c[0], "value": c[1]} for c in st["consts"]],
+            "n_loads": st["n_loads"],
+            "n_execs": st["n_execs"],
+        }
+        for st in stages
+    ]
+    return {
+        "dfg": {"name": name, "nodes": jnodes},
+        "schedule": {
+            "n_stages": len(stages),
+            "ii": ii,
+            "latency": latency,
+            "stages": jstages,
+            "output_order": [{"name": n, "pos": p} for n, p in output_order],
+        },
+    }
+
+
+def characteristics(nodes):
+    level, depth = levels_of(nodes)
+    n_in = sum(1 for n in nodes if n["kind"] == "input")
+    n_out = sum(1 for n in nodes if n["kind"] == "output")
+    n_ops = sum(1 for n in nodes if n["kind"] == "op")
+    edges = 0
+    for n in nodes:
+        if n["kind"] == "op":
+            edges += sum(1 for a in n["args"] if nodes[a]["kind"] != "const")
+        elif n["kind"] == "output":
+            edges += 1
+    return n_in, n_out, edges, n_ops, depth
+
+
+def main():
+    check_only = "--check-only" in sys.argv
+    failures = []
+    for name in KERNELS:
+        with open(os.path.join(SRC_DIR, f"{name}.k")) as f:
+            src = f.read()
+        kname, params, body, returns = Parser(tokenize(src)).kernel()
+        assert kname == name, f"{name}: kernel named {kname}"
+        nodes = normalize(lower(kname, params, body, returns))
+        assert normalize(nodes) == nodes, f"{name}: normalize not idempotent"
+        n_in, n_out, edges, n_ops, depth = characteristics(nodes)
+        stages, output_order, _ = schedule(name, nodes)
+        ii, latency = timing(stages)
+        n_instr = sum(st["n_execs"] for st in stages)
+        print(
+            f"{name:<10} io {n_in}/{n_out}  edges {edges:>3}  ops {n_ops:>3}  "
+            f"depth {depth:>2}  II {ii:>2}  latency {latency:>3}  ctx {n_instr * 5} B"
+        )
+        if name in PAPER:
+            pin, pout, pedges, pops, pdepth, pii = PAPER[name]
+            for label, got, want, exact in [
+                ("io_in", n_in, pin, True),
+                ("io_out", n_out, pout, True),
+                ("ops", n_ops, pops, True),
+                ("depth", depth, pdepth, True),
+                ("ii", ii, pii, True),
+                ("edges", edges, pedges, False),
+            ]:
+                if exact and got != want:
+                    failures.append(f"{name}: {label} {got} != paper {want}")
+                if not exact and abs(got - want) / want > 0.10:
+                    failures.append(f"{name}: {label} {got} vs paper {want} (>10%)")
+        if name == "gradient":
+            assert evaluate(nodes, [3, 5, 2, 7, 1]) == [36]
+            assert ii == 11 and depth == 4 and n_ops == 11
+            assert stages[0]["n_loads"] == 5
+            assert latency == 24, latency
+        if name == "chebyshev":
+            assert evaluate(nodes, [2]) == [362]
+            assert n_instr == 13
+        text = emit(program_json(name, nodes, stages, output_order, ii, latency))
+        path = os.path.join(OUT_DIR, f"{name}.json")
+        if check_only:
+            with open(path) as f:
+                if f.read() != text:
+                    failures.append(f"{name}: committed JSON is stale")
+        else:
+            with open(path, "w") as f:
+                f.write(text)
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print("\nall kernels match the paper's Table II characteristics")
+
+
+if __name__ == "__main__":
+    main()

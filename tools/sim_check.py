@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Cycle-accurate cross-check for the benchmark kernels.
+
+Mirrors `arch::{Fu, Pipeline}` (fu.rs / dsp48e1.rs / pipeline.rs) and
+verifies, for every kernel in ``benchmarks/src``:
+
+  * simulated outputs == functional oracle on random packets;
+  * first packet completes exactly at `Timing::latency()`;
+  * steady-state output gaps == the analytical II
+    (the `validate_against_schedule` / `measure_ii` invariants).
+
+This is the toolchain-free stand-in for the Rust tests
+`measured_ii_matches_model` and `dynamic_matches_static_for_all_benchmarks`.
+"""
+
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from gen_dfg_json import (  # noqa: E402
+    KERNELS,
+    Parser,
+    SRC_DIR,
+    apply_op,
+    evaluate,
+    lower,
+    normalize,
+    schedule,
+    timing,
+    tokenize,
+)
+
+LATENCY = 2  # DSP delay line depth
+
+
+class Fu:
+    def __init__(self, instrs, consts, n_loads):
+        # instrs: list of ("op", opname, rs1, rs2) | ("byp", rs)
+        self.im = instrs
+        self.rf = [0] * 32
+        for i, c in enumerate(consts):
+            self.rf[31 - i] = c
+        self.n_loads = n_loads
+        self.dc = 0
+        self.pc = 0
+        self.state = "load"
+        self.flush_left = 0
+        self.line = [None] * LATENCY
+
+    def backpressure(self):
+        return self.state != "load" or self.dc >= self.n_loads
+
+    def step(self, inp):
+        if self.state == "load" and self.dc >= self.n_loads:
+            self.state = "exec"
+            self.pc = 0
+        if inp is not None:
+            assert self.state == "load" and self.dc < self.n_loads, "protocol violation"
+            self.rf[self.dc] = inp
+            self.dc += 1
+        issue = None
+        if self.state == "exec":
+            ins = self.im[self.pc]
+            if ins[0] == "op":
+                issue = apply_op(ins[1], self.rf[ins[2]], self.rf[ins[3]])
+            else:
+                issue = self.rf[ins[1]]
+            self.pc += 1
+            if self.pc == len(self.im):
+                self.state = "flush"
+                self.flush_left = LATENCY
+        out = self.line[0]
+        self.line = self.line[1:] + [issue]
+        if self.state == "flush":
+            if self.flush_left == 0:
+                self.dc = 0
+                self.state = "load"
+            else:
+                self.flush_left -= 1
+        return out
+
+
+class Pipeline:
+    def __init__(self, nodes, stages, output_order, ii):
+        self.fus = []
+        for st in stages:
+            slot = {v: i for i, v in enumerate(st["arrivals"])}
+            for i, (c, _) in enumerate(st["consts"]):
+                slot[c] = 31 - i
+            instrs = [
+                ("op", nodes[o]["op"], slot[nodes[o]["args"][0]], slot[nodes[o]["args"][1]])
+                for o in st["ops"]
+            ]
+            instrs += [("byp", slot[b]) for b in st["bypasses"]]
+            self.fus.append(Fu(instrs, [c[1] for c in st["consts"]], st["n_loads"]))
+        self.n_inputs = stages[0]["n_loads"]
+        self.n_out = stages[-1]["n_execs"]
+        self.output_order = output_order
+        self.ii = ii
+        self.in_fifo = []
+        self.out_fifo = []
+        self.next_packet_cycle = 1
+        self.packet_word = 0
+        self.cycle = 0
+
+    def enqueue(self, packet):
+        if 4096 - len(self.in_fifo) < len(packet):
+            return False
+        self.in_fifo.extend(packet)
+        return True
+
+    def step(self):
+        self.cycle += 1
+        at_boundary = self.packet_word == 0
+        gate_open = (not at_boundary) or self.cycle >= self.next_packet_cycle
+        carry = None
+        if not self.fus[0].backpressure() and gate_open and self.in_fifo:
+            carry = self.in_fifo.pop(0)
+            if at_boundary:
+                self.next_packet_cycle = self.cycle + self.ii
+            self.packet_word += 1
+            if self.packet_word == self.n_inputs:
+                self.packet_word = 0
+        for fu in self.fus:
+            carry = fu.step(carry)
+        if carry is not None:
+            self.out_fifo.append(carry)
+
+    def run(self, packets, max_cycles):
+        """Returns (outputs, completion_cycles)."""
+        nxt, out, done_at = 0, [], []
+        start = self.cycle
+        while len(out) < len(packets):
+            assert self.cycle - start <= max_cycles, "cycle budget exceeded"
+            if nxt < len(packets) and self.enqueue(packets[nxt]):
+                nxt += 1
+            self.step()
+            while len(self.out_fifo) >= self.n_out:
+                words = [self.out_fifo.pop(0) for _ in range(self.n_out)]
+                out.append([words[pos] for _, pos in self.output_order])
+                done_at.append(self.cycle)
+        return out, done_at
+
+
+def main():
+    rng = random.Random(2016)
+    for name in KERNELS:
+        with open(os.path.join(SRC_DIR, f"{name}.k")) as f:
+            src = f.read()
+        kname, params, body, returns = Parser(tokenize(src)).kernel()
+        nodes = normalize(lower(kname, params, body, returns))
+        stages, output_order, _ = schedule(name, nodes)
+        ii, latency = timing(stages)
+        n_in = stages[0]["n_loads"]
+        # Oracle agreement on random packets (incl. extremes).
+        packets = [[rng.randrange(-(2**31), 2**31) for _ in range(n_in)] for _ in range(8)]
+        packets.append([2**31 - 1] * n_in)
+        packets.append([-(2**31)] * n_in)
+        pl = Pipeline(nodes, stages, output_order, ii)
+        out, done_at = pl.run(packets, 100_000)
+        for pkt, got in zip(packets, out):
+            want = evaluate(nodes, pkt)
+            assert got == want, f"{name}: {pkt} -> {got}, oracle {want}"
+        # Static-vs-dynamic: first completion at `latency`, then II gaps.
+        pl2 = Pipeline(nodes, stages, output_order, ii)
+        sample = [[k] * n_in for k in range(10)]
+        _, cycles = pl2.run(sample, 100_000)
+        assert cycles[0] == latency, f"{name}: first out at {cycles[0]}, model {latency}"
+        gaps = [b - a for a, b in zip(cycles, cycles[1:])]
+        assert all(g == ii for g in gaps[1:]), f"{name}: gaps {gaps} vs II {ii}"
+        mean_gap = sum(gaps) / len(gaps)
+        assert abs(mean_gap - ii) < 1e-9, f"{name}: measured II {mean_gap} vs {ii}"
+        print(f"{name:<10} oracle ok, first output @{cycles[0]:>3} (= latency), II {ii} exact")
+    print("\ncycle-accurate model matches the analytical II/latency for all kernels")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify fmt clippy bench artifacts dfg check-dfg clean
+.PHONY: build test verify fmt clippy bench bench-all bench-mirror artifacts dfg check-dfg clean
 
 build:
 	$(CARGO) build --release
@@ -20,8 +20,22 @@ clippy:
 # The full gate: formatting, lints, release build, test suite.
 verify: fmt clippy build test
 
+# Perf trajectory: run the serving-path benchmarks and (re)write the
+# checked-in baseline JSON (packets/s per backend per kernel, sim
+# cycles/s, turbo-vs-ref headline ratio). Cargo runs bench binaries
+# with cwd = the package root (rust/), hence the ../ on the path.
 bench:
+	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR2.json
+
+# Every bench target (paper tables/figures + perf).
+bench-all:
 	$(CARGO) bench
+
+# Toolchain-free stand-in: cross-check the tape lowering against the
+# Python oracle and regenerate BENCH_PR2.json from the mirror
+# interpreters (clearly labeled as such in the JSON's meta.harness).
+bench-mirror:
+	$(PYTHON) tools/turbo_check.py --json BENCH_PR2.json
 
 # AOT-compile the kernel artifacts for the PJRT backend (needs jax).
 # The interpreter (`--backend ref`) and cycle-accurate simulator

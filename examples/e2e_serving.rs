@@ -17,7 +17,7 @@
 //! counts and the simulated 300 MHz fabric timeline.
 //!
 //! ```sh
-//! cargo run --release --example e2e_serving [requests] [pipelines] [ref|sim|pjrt]
+//! cargo run --release --example e2e_serving [requests] [pipelines] [ref|sim|pjrt|turbo]
 //! ```
 
 use std::time::{Duration, Instant};

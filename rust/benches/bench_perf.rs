@@ -1,25 +1,111 @@
-//! Performance microbenchmarks for the hot paths (EXPERIMENTS.md §Perf):
+//! Performance benchmarks for the serving hot paths:
 //!
-//!   L3.a  cycle-accurate simulator inner loop (cycles/s)
-//!   L3.b  scheduler + context generation (compilations/s)
-//!   L3.c  coordinator dispatch (requests/s, with and without PJRT)
-//!   L2/L1 PJRT batch execution (packets/s per kernel artifact)
+//!   B1   backend packets/s per kernel (ref vs turbo, flat batches;
+//!        sim at a smaller batch — it simulates every fabric cycle)
+//!   B2   cycle-accurate simulator inner loop (simulated cycles/s)
+//!   B3   scheduler + context + tape generation (compilations/s)
+//!   B4   coordinator dispatch (requests/s end-to-end)
+//!   L2/L1 PJRT batch execution (artifact-gated)
 //!
-//! Run `TMFU_BENCH_FAST=1 cargo bench` for a quick pass.
+//! Run `TMFU_BENCH_FAST=1 cargo bench` for a quick pass. With
+//! `-- --json <path>` the measurements (plus the headline
+//! turbo-vs-ref speedup on poly6 at batch 1024) are written as JSON —
+//! `make bench` uses this to produce the checked-in perf trajectory
+//! baseline (`BENCH_PR2.json`).
 
 use tmfu_overlay::arch::Pipeline;
 use tmfu_overlay::bench_suite;
 use tmfu_overlay::coordinator::{Coordinator, CoordinatorConfig};
-use tmfu_overlay::exec::BackendKind;
+use tmfu_overlay::exec::{
+    Backend, BackendKind, FlatBatch, KernelRegistry, RefBackend, SimBackend, TurboBackend,
+};
 use tmfu_overlay::runtime::Engine;
 use tmfu_overlay::sched::Program;
-use tmfu_overlay::util::bench::{black_box, section, Bench};
+use tmfu_overlay::util::bench::{black_box, json_path_from_args, section, Bench, BenchReport};
+use tmfu_overlay::util::json;
 use tmfu_overlay::util::prng::Rng;
+
+/// The headline batch size: large enough to amortize dispatch and let
+/// the turbo backend's lane chunking matter.
+const BATCH: usize = 1024;
+/// Headline kernel (the suite's largest: 44 ops, depth 11).
+const HEADLINE_KERNEL: &str = "poly6";
+/// Acceptance floor for this PR: turbo >= 10x ref on poly6 @ 1024.
+const HEADLINE_FLOOR: f64 = 10.0;
+
+fn random_batch(rng: &mut Rng, arity: usize, rows: usize) -> FlatBatch {
+    let mut b = FlatBatch::with_capacity(arity, rows);
+    for _ in 0..rows {
+        b.push_iter((0..arity).map(|_| rng.next_i32()));
+    }
+    b
+}
 
 fn main() -> anyhow::Result<()> {
     let b = Bench::from_env();
+    let mut report = BenchReport::new();
+    report.set_meta("harness", json::s("cargo-bench (util::bench self-timed)"));
+    report.set_meta("batch", json::i(BATCH as i64));
+    report.set_meta(
+        "fast_mode",
+        json::s(if std::env::var("TMFU_BENCH_FAST").as_deref() == Ok("1") {
+            "1"
+        } else {
+            "0"
+        }),
+    );
+    let reg = KernelRegistry::compile_bench_suite()?;
+    let mut rng = Rng::new(3);
 
-    section("L3.a cycle-accurate simulator");
+    section("B1 backend packets/s (flat batches)");
+    for name in ["gradient", "chebyshev", "poly6", "qspline"] {
+        let k = reg.get(name).unwrap().clone();
+        let batch = random_batch(&mut rng, k.n_inputs, BATCH);
+        let mut rb = RefBackend::new();
+        let m = b.run_with_items(&format!("ref::execute({name}, batch {BATCH})"), BATCH as f64, || {
+            rb.execute(&k, black_box(&batch)).unwrap()
+        });
+        println!("{}   (items = packets)", report.record(m).report_line());
+        let mut tb = TurboBackend::new();
+        let m = b.run_with_items(
+            &format!("turbo::execute({name}, batch {BATCH})"),
+            BATCH as f64,
+            || tb.execute(&k, black_box(&batch)).unwrap(),
+        );
+        println!("{}   (items = packets)", report.record(m).report_line());
+        // The cycle-accurate substrate pays for every fabric cycle;
+        // bench it at a batch it can sustain in the measure window.
+        let sim_batch_n = 64;
+        let sim_batch = random_batch(&mut rng, k.n_inputs, sim_batch_n);
+        let mut sb = SimBackend::new(1, 4096)?;
+        let m = b.run_with_items(
+            &format!("sim::execute({name}, batch {sim_batch_n})"),
+            sim_batch_n as f64,
+            || sb.execute(&k, black_box(&sim_batch)).unwrap(),
+        );
+        println!("{}   (items = packets)", report.record(m).report_line());
+    }
+
+    // Headline: the PR 2 acceptance ratio.
+    let ref_tput = report
+        .get(&format!("ref::execute({HEADLINE_KERNEL}, batch {BATCH})"))
+        .and_then(|m| m.throughput())
+        .unwrap_or(0.0);
+    let turbo_tput = report
+        .get(&format!("turbo::execute({HEADLINE_KERNEL}, batch {BATCH})"))
+        .and_then(|m| m.throughput())
+        .unwrap_or(0.0);
+    let speedup = if ref_tput > 0.0 { turbo_tput / ref_tput } else { 0.0 };
+    report.set_meta("headline_kernel", json::s(HEADLINE_KERNEL));
+    report.set_meta("turbo_speedup_vs_ref", json::f(speedup));
+    report.set_meta("turbo_speedup_floor", json::f(HEADLINE_FLOOR));
+    println!(
+        "\nheadline: turbo {turbo_tput:.0} pkt/s vs ref {ref_tput:.0} pkt/s on \
+         {HEADLINE_KERNEL} @ {BATCH} -> {speedup:.1}x (floor {HEADLINE_FLOOR:.0}x: {})",
+        if speedup >= HEADLINE_FLOOR { "PASS" } else { "MISS" }
+    );
+
+    section("B2 cycle-accurate simulator (simulated cycles/s)");
     for name in ["gradient", "chebyshev", "poly6"] {
         let g = bench_suite::load(name)?;
         let p = Program::schedule(&g)?;
@@ -30,52 +116,62 @@ fn main() -> anyhow::Result<()> {
         let before = probe.cycle;
         probe.run(&packets, 1_000_000)?;
         let cycles_per_run = (probe.cycle - before) as f64;
-        let m = b.run_with_items(&format!("sim::run({name}, 64 packets)"), cycles_per_run, || {
+        let m = b.run_with_items(&format!("sim::cycles({name}, 64 packets)"), cycles_per_run, || {
             let mut pl = Pipeline::new(&p, 4096).unwrap();
             pl.run(black_box(&packets), 1_000_000).unwrap()
         });
-        println!("{}   (items = simulated cycles)", m.report_line());
+        println!(
+            "{}   (items = simulated cycles)",
+            report.record(m).report_line()
+        );
     }
 
-    section("L3.b compiler path");
+    section("B3 compiler path");
     let (_, src) = bench_suite::KERNEL_SOURCES
         .iter()
         .find(|(n, _)| *n == "poly7")
         .unwrap();
-    let m = b.run("frontend+schedule+context(poly7)", || {
+    let m = b.run("frontend+schedule+context+tape(poly7)", || {
         let g = tmfu_overlay::frontend::compile(src).unwrap();
-        let p = Program::schedule(&g).unwrap();
-        p.context_image().unwrap()
+        let k = tmfu_overlay::exec::CompiledKernel::compile(g).unwrap();
+        black_box(k.tape.len())
     });
-    println!("{}", m.report_line());
+    println!("{}", report.record(m).report_line());
 
-    section("L3.c coordinator dispatch, sim backend (zero artifacts)");
-    {
-        let mut cfg = CoordinatorConfig::new(BackendKind::Sim);
+    section("B4 coordinator dispatch (zero artifacts)");
+    for kind in [BackendKind::Sim, BackendKind::Turbo] {
+        let mut cfg = CoordinatorConfig::new(kind);
         cfg.workers = 2;
         cfg.max_batch = 32;
         let coord = Coordinator::start_with(cfg)?;
         let names = bench_suite::all_names();
-        let m = b.run_with_items("coordinator::call x32 (sim, round-robin)", 32.0, || {
+        let m = b.run_with_items(&format!("coordinator::call x32 ({kind})"), 32.0, || {
             for i in 0..32usize {
                 let kernel = names[i % names.len()];
                 let n_in = coord.registry().get(kernel).unwrap().n_inputs;
                 coord.call(kernel, vec![1i32; n_in]).unwrap();
             }
         });
-        println!("{}   (items = requests, serial round-trip)", m.report_line());
+        println!(
+            "{}   (items = requests, serial round-trip)",
+            report.record(m).report_line()
+        );
         coord.shutdown()?;
+    }
+
+    if let Some(path) = json_path_from_args() {
+        report.write(&path)?;
+        println!("\nwrote {path}");
     }
 
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
-        println!("\nartifacts not built; skipping PJRT + coordinator benches");
+        println!("\nartifacts not built; skipping PJRT benches");
         return Ok(());
     }
 
     section("L2/L1 PJRT batch execution (per artifact)");
     let engine = Engine::load(&artifacts)?;
-    let mut rng = Rng::new(3);
     for name in ["gradient", "chebyshev", "poly6", "qspline"] {
         let entry = engine.entry(name)?;
         let batch: Vec<Vec<i32>> = (0..engine.batch)
@@ -98,12 +194,11 @@ fn main() -> anyhow::Result<()> {
     section("L3.d coordinator end-to-end, pjrt backend (2 workers, mixed kernels)");
     let coord = Coordinator::start(artifacts.to_str().unwrap(), 2, 32)?;
     let names = bench_suite::all_names();
-    let m = b.run_with_items("coordinator::call x32 (round-robin kernels)", 32.0, || {
+    let m = b.run_with_items("coordinator::call x32 (pjrt, round-robin)", 32.0, || {
         for i in 0..32usize {
             let kernel = names[i % names.len()];
-            let g = bench_suite::load(kernel).unwrap();
-            let inputs = vec![1i32; g.inputs().len()];
-            coord.call(kernel, inputs).unwrap();
+            let n_in = coord.registry().get(kernel).unwrap().n_inputs;
+            coord.call(kernel, vec![1i32; n_in]).unwrap();
         }
     });
     println!("{}   (items = requests, serial round-trip)", m.report_line());

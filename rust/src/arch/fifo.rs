@@ -31,14 +31,17 @@ impl Fifo {
         }
     }
 
+    #[inline]
     pub fn len(&self) -> usize {
         self.q.len()
     }
 
+    #[inline]
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
     }
 
+    #[inline]
     pub fn is_full(&self) -> bool {
         self.q.len() >= self.capacity
     }
@@ -48,6 +51,7 @@ impl Fifo {
     }
 
     /// Push one word; returns false (and counts the attempt) when full.
+    #[inline]
     pub fn push(&mut self, v: i32) -> bool {
         if self.is_full() {
             self.overflow_attempts += 1;
@@ -59,6 +63,7 @@ impl Fifo {
         true
     }
 
+    #[inline]
     pub fn pop(&mut self) -> Option<i32> {
         let v = self.q.pop_front();
         if v.is_some() {

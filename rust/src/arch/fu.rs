@@ -168,10 +168,18 @@ impl Fu {
         // 3. Issue (pre-decoded: the classify step ran at context load).
         let issue = if self.state == FuState::Executing {
             let ins = self.decoded[self.pc];
-            let c = self.rf[ins.rs1 as usize];
-            let ab = self.rf[ins.rs2 as usize];
+            // RF addresses are 5 bits by ISA construction (RAM32M);
+            // the mask states that to the compiler, eliding the
+            // per-read bounds checks in the inner loop. The assert
+            // keeps an encoder bug a loud failure in debug builds
+            // rather than a silent wrapped read.
+            debug_assert!(ins.rs1 < 32 && ins.rs2 < 32, "RF address out of range");
+            let c = self.rf[(ins.rs1 & 31) as usize];
+            let ab = self.rf[(ins.rs2 & 31) as usize];
             self.pc += 1;
-            if self.pc == self.im.len() {
+            // decoded.len() == im.len(); comparing against the vector
+            // we just indexed keeps the hot loop on one allocation.
+            if self.pc == self.decoded.len() {
                 self.state = FuState::Flushing;
                 self.flush_left = super::dsp48e1::LATENCY as u8;
             }

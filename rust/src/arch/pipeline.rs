@@ -91,6 +91,7 @@ impl Pipeline {
     }
 
     /// Advance one clock cycle.
+    #[inline]
     pub fn step(&mut self) -> Result<()> {
         self.cycle += 1;
         // Input FIFO -> FU0 (respecting back-pressure + II pacing).
@@ -132,10 +133,19 @@ impl Pipeline {
         self.output_fifo.len() / self.n_out_words
     }
 
+    /// At least one complete packet is ready. This is the per-cycle
+    /// poll in [`Self::run`]: a comparison instead of
+    /// `packets_ready()`'s integer division (which profiled as pure
+    /// overhead when attempted every simulated cycle).
+    #[inline]
+    pub fn has_ready_packet(&self) -> bool {
+        self.output_fifo.len() >= self.n_out_words
+    }
+
     /// Pop one complete output packet and project the named outputs in
     /// declaration order.
     pub fn dequeue_packet(&mut self) -> Option<Vec<i32>> {
-        if self.packets_ready() == 0 {
+        if !self.has_ready_packet() {
             return None;
         }
         let words: Vec<i32> = (0..self.n_out_words)
@@ -167,8 +177,10 @@ impl Pipeline {
                 next += 1;
             }
             self.step()?;
-            while let Some(p) = self.dequeue_packet() {
-                out.push(p);
+            // Cheap readiness poll before the popping path (this runs
+            // once per simulated cycle, almost always empty-handed).
+            while self.has_ready_packet() {
+                out.push(self.dequeue_packet().expect("packet ready"));
             }
         }
         Ok(out)

@@ -5,17 +5,24 @@
 //! Architecture (std threads + channels; tokio is unavailable offline):
 //!
 //! * callers `submit()` requests (kernel name + input packet) and get a
-//!   completion channel;
-//! * a shared [`queue::QueueSet`] holds per-kernel FIFOs;
+//!   completion channel; the name is interned to a dense
+//!   [`KernelId`](exec::KernelId) at ingress so nothing downstream
+//!   allocates or compares strings;
+//! * a shared [`queue::QueueSet`] holds per-kernel FIFOs indexed by
+//!   kernel id;
 //! * each **fabric worker** thread owns a `Box<dyn Backend>` — the
-//!   interpreter, the cycle-accurate overlay simulator, or the PJRT
-//!   engine ([`crate::exec`]); backends are built inside the worker
-//!   thread because the PJRT client is not `Send` (one worker ≙ one
-//!   overlay pipeline replica);
+//!   interpreter, the tape-compiled turbo executor, the cycle-accurate
+//!   overlay simulator, or the PJRT engine ([`crate::exec`]); backends
+//!   are built inside the worker thread because the PJRT client is not
+//!   `Send` (one worker ≙ one overlay pipeline replica);
 //! * kernels are compiled **once** into a shared
-//!   [`Arc<KernelRegistry>`](exec::KernelRegistry) — schedule, timing
-//!   and context image are no longer recomputed per worker;
-//! * workers pull context-affine batches, charge the modeled context
+//!   [`Arc<KernelRegistry>`](exec::KernelRegistry) — schedule, timing,
+//!   context image and op tape are no longer recomputed per worker;
+//! * workers pull context-affine batches into a **reused
+//!   [`FlatBatch`](exec::FlatBatch) buffer** — the request side of the
+//!   dispatch loop performs no per-packet allocation in steady state
+//!   (replies still cost one `Vec` each: the `Reply` channel contract
+//!   hands each caller an owned row) — charge the modeled context
 //!   switch cost when they change kernels, execute through their
 //!   backend, and reply;
 //! * metrics capture wall-clock latency plus the simulated 300 MHz
@@ -26,7 +33,7 @@ pub mod metrics;
 pub mod queue;
 
 use crate::bench_suite;
-use crate::exec::{self, BackendConfig, BackendKind, KernelRegistry};
+use crate::exec::{self, BackendConfig, BackendKind, FlatBatch, KernelId, KernelRegistry};
 use crate::resources::SYSTEM_CLOCK_MHZ;
 use crate::util::prng::Rng;
 use anyhow::{Context, Result};
@@ -108,7 +115,7 @@ impl Coordinator {
         }
         let shared = Arc::new(Shared {
             queues: Mutex::new(QueueState {
-                qs: QueueSet::default(),
+                qs: QueueSet::new(registry.len()),
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -174,11 +181,14 @@ impl Coordinator {
     /// Submit one request; the reply arrives on the returned channel.
     /// Shape errors (unknown kernel, wrong arity) are rejected here,
     /// before the request can be co-batched with valid ones — a
-    /// malformed request must never fail its batch neighbours.
+    /// malformed request must never fail its batch neighbours. The
+    /// kernel name is interned here; past this point the request is a
+    /// `KernelId` and a flat input row.
     pub fn submit(&self, kernel: &str, inputs: Vec<i32>) -> Result<mpsc::Receiver<Reply>> {
-        let Some(k) = self.registry.get(kernel) else {
+        let Some(id) = self.registry.id_of(kernel) else {
             anyhow::bail!("{}", exec::ExecError::UnknownKernel(kernel.to_string()));
         };
+        let k = self.registry.kernel(id).expect("interned id resolves");
         anyhow::ensure!(
             inputs.len() == k.n_inputs,
             "{}",
@@ -193,7 +203,7 @@ impl Coordinator {
             let mut st = self.shared.queues.lock().unwrap();
             anyhow::ensure!(!st.shutdown, "coordinator shut down");
             st.qs.push(
-                kernel,
+                id,
                 Pending {
                     inputs,
                     enqueued: Instant::now(),
@@ -267,12 +277,15 @@ fn worker_loop(
     };
     // Batch-affinity hint only; switch *accounting* comes from the
     // backend's report when it models context switches itself.
-    let mut context: Option<String> = None;
+    let mut context: Option<KernelId> = None;
+    // One flat input buffer per worker, reused for every batch — the
+    // steady-state dispatch loop allocates nothing per packet.
+    let mut inputs = FlatBatch::default();
     loop {
         let batch = {
             let mut st = shared.queues.lock().unwrap();
             loop {
-                if let Some(b) = st.qs.take_batch(context.as_deref(), max_batch, Instant::now()) {
+                if let Some(b) = st.qs.take_batch(context, max_batch, Instant::now()) {
                     break Some(b);
                 }
                 if st.shutdown {
@@ -282,16 +295,17 @@ fn worker_loop(
             }
         };
         let Some(batch) = batch else { return Ok(()) };
-        let Some(kernel) = registry.get(&batch.kernel).cloned() else {
-            // Unreachable via submit(); kept as a structured reply so a
-            // future ingress path cannot hang callers.
-            let msg = exec::ExecError::UnknownKernel(batch.kernel.clone()).to_string();
+        let Some(kernel) = registry.kernel(batch.kernel).cloned() else {
+            // Unreachable via submit() (ids are interned from this
+            // registry); kept as a structured reply so a future
+            // ingress path cannot hang callers.
+            let msg = exec::ExecError::UnknownKernel(batch.kernel.to_string()).to_string();
             for p in batch.items {
                 let _ = p.token.send(Err(msg.clone()));
             }
             continue;
         };
-        let hint_switched = context.as_deref() != Some(batch.kernel.as_str());
+        let hint_switched = context != Some(batch.kernel);
         // Simulated fabric execution time for the batch at 300 MHz:
         // pipeline fill (latency) + (n-1) more initiations at II.
         // Guarded: an empty batch is a structured error, not a u64
@@ -307,7 +321,28 @@ fn worker_loop(
                 continue;
             }
         };
-        let inputs: Vec<Vec<i32>> = batch.items.iter().map(|p| p.inputs.clone()).collect();
+        // Shape guard (the whole-batch analogue of the old per-packet
+        // validate_batch scan): a malformed Pending from a future
+        // ingress path must produce a structured reply, not panic the
+        // worker on the FlatBatch arity assert. Unreachable via
+        // submit(), which validates arity at the door.
+        if let Some(p) = batch.items.iter().find(|p| p.inputs.len() != kernel.n_inputs) {
+            let msg = exec::ExecError::WrongArity {
+                kernel: kernel.name.clone(),
+                expected: kernel.n_inputs,
+                got: p.inputs.len(),
+            }
+            .to_string();
+            for p in batch.items {
+                let _ = p.token.send(Err(msg.clone()));
+            }
+            continue;
+        }
+        inputs.reset(kernel.n_inputs);
+        inputs.reserve_rows(n);
+        for p in &batch.items {
+            inputs.push(&p.inputs);
+        }
         let result = backend.execute(&kernel, &inputs);
         let now = Instant::now();
         match result {
@@ -336,15 +371,15 @@ fn worker_loop(
                 };
                 {
                     let mut m = shared.metrics.lock().unwrap();
-                    m.record_batch(&batch.kernel, n, switched, switch_us, exec_us_sim);
+                    m.record_batch(&kernel.name, n, switched, switch_us, exec_us_sim);
                     for p in &batch.items {
                         let wait = now.duration_since(p.enqueued).as_secs_f64() * 1e6;
                         m.latency_us.push(wait);
                         m.queue_wait_us.push(wait - exec_us_sim.min(wait));
                     }
                 }
-                for (p, out) in batch.items.into_iter().zip(report.outputs) {
-                    let _ = p.token.send(Ok(out));
+                for (i, p) in batch.items.into_iter().enumerate() {
+                    let _ = p.token.send(Ok(report.outputs.row(i).to_vec()));
                 }
             }
             Err(e) => {
@@ -352,7 +387,7 @@ fn worker_loop(
                 // failed before any context load happened).
                 let msg = e.to_string();
                 let mut m = shared.metrics.lock().unwrap();
-                m.record_batch(&batch.kernel, 0, false, 0.0, 0.0);
+                m.record_batch(&kernel.name, 0, false, 0.0, 0.0);
                 drop(m);
                 for p in batch.items {
                     let _ = p.token.send(Err(msg.clone()));
@@ -417,11 +452,15 @@ pub fn serve_demo(
 mod tests {
     use super::*;
 
-    fn sim_coordinator(workers: usize, max_batch: usize) -> Coordinator {
-        let mut cfg = CoordinatorConfig::new(BackendKind::Sim);
+    fn coordinator_for(backend: BackendKind, workers: usize, max_batch: usize) -> Coordinator {
+        let mut cfg = CoordinatorConfig::new(backend);
         cfg.workers = workers;
         cfg.max_batch = max_batch;
         Coordinator::start_with(cfg).unwrap()
+    }
+
+    fn sim_coordinator(workers: usize, max_batch: usize) -> Coordinator {
+        coordinator_for(BackendKind::Sim, workers, max_batch)
     }
 
     fn mixed_workload(coord: &Coordinator, requests: usize, seed: u64) {
@@ -484,18 +523,29 @@ mod tests {
 
     #[test]
     fn ref_backend_serves_too() {
-        let mut cfg = CoordinatorConfig::new(BackendKind::Ref);
-        cfg.workers = 2;
-        cfg.max_batch = 16;
-        let coord = Coordinator::start_with(cfg).unwrap();
+        let coord = coordinator_for(BackendKind::Ref, 2, 16);
         assert_eq!(coord.backend(), BackendKind::Ref);
         mixed_workload(&coord, 30, 7);
         coord.shutdown().unwrap();
     }
 
     #[test]
+    fn turbo_backend_serves_too() {
+        let coord = coordinator_for(BackendKind::Turbo, 2, 32);
+        assert_eq!(coord.backend(), BackendKind::Turbo);
+        mixed_workload(&coord, 50, 13);
+        assert_eq!(coord.completed(), 50);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
     fn serve_demo_runs_on_sim_without_artifacts() {
         serve_demo(BackendKind::Sim, "/definitely/not/here", 2, 50, 8, 42).unwrap();
+    }
+
+    #[test]
+    fn serve_demo_runs_on_turbo_without_artifacts() {
+        serve_demo(BackendKind::Turbo, "/definitely/not/here", 2, 50, 16, 43).unwrap();
     }
 
     // ---- PJRT backend: artifact-gated variants ----------------------

@@ -1,14 +1,25 @@
 //! Request queues + batching policy (pure logic, tested without PJRT).
 //!
-//! The dispatcher maintains one FIFO queue per kernel context. Workers
-//! (overlay pipelines) pick batches with **context affinity**: a worker
-//! holding kernel K's context prefers K's queue — switching contexts is
-//! cheap on this overlay (sub-µs, the paper's headline) but never free,
-//! and affinity also models the BRAM-resident data staging of Fig. 4.
-//! When the worker's context has no work it steals the longest queue
-//! (weighted by age to prevent starvation).
+//! The dispatcher maintains one FIFO queue per kernel context, indexed
+//! by dense [`KernelId`] — names are interned once at `submit`, so a
+//! push moves a `u32` and a `Vec<i32>`, never a `String`, and batch
+//! selection is a linear scan over a fixed-size vector instead of a
+//! `BTreeMap` walk. (The previous map-keyed design also leaked: an
+//! empty per-kernel queue stayed resident forever once its name had
+//! been seen, growing without bound as contexts churned. The dense
+//! layout is bounded by the registry size by construction, and
+//! [`QueueSet::drain_all`] additionally releases the per-queue buffers
+//! so an idle coordinator holds no request memory.)
+//!
+//! Workers (overlay pipelines) pick batches with **context affinity**:
+//! a worker holding kernel K's context prefers K's queue — switching
+//! contexts is cheap on this overlay (sub-µs, the paper's headline)
+//! but never free, and affinity also models the BRAM-resident data
+//! staging of Fig. 4. When the worker's context has no work it steals
+//! the longest queue (weighted by age to prevent starvation).
 
-use std::collections::{BTreeMap, VecDeque};
+use crate::exec::KernelId;
+use std::collections::VecDeque;
 use std::time::Instant;
 
 /// One queued request.
@@ -21,32 +32,37 @@ pub struct Pending<T> {
     pub token: T,
 }
 
-/// Per-kernel FIFO queues.
+/// Per-kernel FIFO queues, dense over the kernel registry.
 #[derive(Debug)]
 pub struct QueueSet<T> {
-    queues: BTreeMap<String, VecDeque<Pending<T>>>,
+    queues: Vec<VecDeque<Pending<T>>>,
     pub total_queued: usize,
 }
 
 /// A batch the dispatcher hands to a worker.
 #[derive(Debug)]
 pub struct Batch<T> {
-    pub kernel: String,
+    pub kernel: KernelId,
     pub items: Vec<Pending<T>>,
 }
 
-impl<T> Default for QueueSet<T> {
-    fn default() -> Self {
+impl<T> QueueSet<T> {
+    /// One queue per registry kernel.
+    pub fn new(n_kernels: usize) -> Self {
         Self {
-            queues: BTreeMap::new(),
+            queues: (0..n_kernels).map(|_| VecDeque::new()).collect(),
             total_queued: 0,
         }
     }
-}
 
-impl<T> QueueSet<T> {
-    pub fn push(&mut self, kernel: &str, p: Pending<T>) {
-        self.queues.entry(kernel.to_string()).or_default().push_back(p);
+    pub fn n_kernels(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Enqueue one request. `kernel` must come from the registry this
+    /// set was sized for (ingress interns and validates names).
+    pub fn push(&mut self, kernel: KernelId, p: Pending<T>) {
+        self.queues[kernel.index()].push_back(p);
         self.total_queued += 1;
     }
 
@@ -54,8 +70,8 @@ impl<T> QueueSet<T> {
         self.total_queued == 0
     }
 
-    pub fn queued_for(&self, kernel: &str) -> usize {
-        self.queues.get(kernel).map_or(0, VecDeque::len)
+    pub fn queued_for(&self, kernel: KernelId) -> usize {
+        self.queues[kernel.index()].len()
     }
 
     /// Batching policy: prefer the worker's current context if it has
@@ -63,7 +79,7 @@ impl<T> QueueSet<T> {
     /// score. Takes up to `max_batch` requests FIFO.
     pub fn take_batch(
         &mut self,
-        current_context: Option<&str>,
+        current_context: Option<KernelId>,
         max_batch: usize,
         now: Instant,
     ) -> Option<Batch<T>> {
@@ -71,50 +87,66 @@ impl<T> QueueSet<T> {
             return None;
         }
         let kernel = match current_context {
-            Some(k) if self.queued_for(k) > 0 => k.to_string(),
-            _ => self
-                .queues
-                .iter()
-                .filter(|(_, q)| !q.is_empty())
-                .max_by(|(_, a), (_, b)| {
-                    let score = |q: &VecDeque<Pending<T>>| {
-                        let age_ms = now
-                            .duration_since(q.front().unwrap().enqueued)
-                            .as_secs_f64()
-                            * 1e3;
-                        q.len() as f64 + age_ms * 0.1
-                    };
-                    score(a).partial_cmp(&score(b)).unwrap()
-                })
-                .map(|(k, _)| k.clone())?,
+            Some(k) if self.queued_for(k) > 0 => k,
+            _ => {
+                let score = |q: &VecDeque<Pending<T>>| {
+                    let age_ms = now
+                        .duration_since(q.front().unwrap().enqueued)
+                        .as_secs_f64()
+                        * 1e3;
+                    q.len() as f64 + age_ms * 0.1
+                };
+                self.queues
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| !q.is_empty())
+                    // total_cmp: scores are finite here, but a NaN-safe
+                    // total order costs nothing and cannot panic.
+                    .max_by(|(_, a), (_, b)| score(a).total_cmp(&score(b)))
+                    .map(|(i, _)| KernelId(i as u32))?
+            }
         };
-        let q = self.queues.get_mut(&kernel).unwrap();
+        let q = &mut self.queues[kernel.index()];
         let n = q.len().min(max_batch);
         let items: Vec<Pending<T>> = q.drain(..n).collect();
         self.total_queued -= items.len();
         Some(Batch { kernel, items })
     }
 
-    /// Drain everything (shutdown path).
+    /// Drain everything (shutdown path) and release per-queue buffers —
+    /// after a burst the deque capacities would otherwise stay resident
+    /// for the life of the coordinator.
     pub fn drain_all(&mut self) -> Vec<Batch<T>> {
         let mut out = Vec::new();
-        for (k, q) in self.queues.iter_mut() {
+        for (i, q) in self.queues.iter_mut().enumerate() {
             if !q.is_empty() {
                 let items: Vec<Pending<T>> = q.drain(..).collect();
                 self.total_queued -= items.len();
                 out.push(Batch {
-                    kernel: k.clone(),
+                    kernel: KernelId(i as u32),
                     items,
                 });
             }
+            // Prune: drop the buffer, not just the contents.
+            *q = VecDeque::new();
         }
         out
+    }
+
+    /// Resident buffer capacity across all queues (memory telemetry /
+    /// the pruning regression test).
+    pub fn resident_capacity(&self) -> usize {
+        self.queues.iter().map(VecDeque::capacity).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const A: KernelId = KernelId(0);
+    const B: KernelId = KernelId(1);
+    const C: KernelId = KernelId(2);
 
     fn pend(token: u32) -> Pending<u32> {
         Pending {
@@ -126,53 +158,53 @@ mod tests {
 
     #[test]
     fn affinity_preferred_when_context_has_work() {
-        let mut qs = QueueSet::default();
-        qs.push("a", pend(1));
-        qs.push("b", pend(2));
-        qs.push("b", pend(3));
-        // Worker holds 'a': takes 'a' despite 'b' being longer.
-        let b = qs.take_batch(Some("a"), 16, Instant::now()).unwrap();
-        assert_eq!(b.kernel, "a");
+        let mut qs = QueueSet::new(3);
+        qs.push(A, pend(1));
+        qs.push(B, pend(2));
+        qs.push(B, pend(3));
+        // Worker holds A: takes A despite B being longer.
+        let b = qs.take_batch(Some(A), 16, Instant::now()).unwrap();
+        assert_eq!(b.kernel, A);
         assert_eq!(b.items.len(), 1);
     }
 
     #[test]
     fn steals_longest_queue_without_affinity() {
-        let mut qs = QueueSet::default();
-        qs.push("a", pend(1));
-        qs.push("b", pend(2));
-        qs.push("b", pend(3));
-        let b = qs.take_batch(Some("c"), 16, Instant::now()).unwrap();
-        assert_eq!(b.kernel, "b");
+        let mut qs = QueueSet::new(3);
+        qs.push(A, pend(1));
+        qs.push(B, pend(2));
+        qs.push(B, pend(3));
+        let b = qs.take_batch(Some(C), 16, Instant::now()).unwrap();
+        assert_eq!(b.kernel, B);
         assert_eq!(b.items.len(), 2);
         assert_eq!(qs.total_queued, 1);
     }
 
     #[test]
     fn respects_max_batch_fifo() {
-        let mut qs = QueueSet::default();
+        let mut qs = QueueSet::new(1);
         for i in 0..10 {
-            qs.push("k", pend(i));
+            qs.push(A, pend(i));
         }
         let b = qs.take_batch(None, 4, Instant::now()).unwrap();
         assert_eq!(b.items.len(), 4);
         assert_eq!(b.items[0].token, 0);
         assert_eq!(b.items[3].token, 3);
-        assert_eq!(qs.queued_for("k"), 6);
+        assert_eq!(qs.queued_for(A), 6);
     }
 
     #[test]
     fn empty_returns_none() {
-        let mut qs: QueueSet<u32> = QueueSet::default();
+        let mut qs: QueueSet<u32> = QueueSet::new(2);
         assert!(qs.take_batch(None, 8, Instant::now()).is_none());
     }
 
     #[test]
     fn age_bonus_prevents_starvation() {
-        let mut qs = QueueSet::default();
+        let mut qs = QueueSet::new(2);
         let old = Instant::now() - std::time::Duration::from_millis(500);
         qs.push(
-            "starved",
+            A, // starved
             Pending {
                 inputs: vec![],
                 enqueued: old,
@@ -180,20 +212,31 @@ mod tests {
             },
         );
         for i in 0..3 {
-            qs.push("busy", pend(i));
+            qs.push(B, pend(i)); // busy
         }
         // 0.1/ms * 500ms = 50 > 3: the old queue wins.
         let b = qs.take_batch(None, 8, Instant::now()).unwrap();
-        assert_eq!(b.kernel, "starved");
+        assert_eq!(b.kernel, A);
     }
 
     #[test]
-    fn drain_all_empties() {
-        let mut qs = QueueSet::default();
-        qs.push("a", pend(1));
-        qs.push("b", pend(2));
+    fn drain_all_empties_and_releases_buffers() {
+        let mut qs = QueueSet::new(2);
+        for i in 0..512 {
+            qs.push(A, pend(i));
+        }
+        qs.push(B, pend(999));
+        assert!(qs.resident_capacity() >= 512);
         let batches = qs.drain_all();
         assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].items.len(), 512);
         assert!(qs.is_empty());
+        // The pruning fix: capacity is gone, not just the contents
+        // (fresh VecDeques: zero on modern std, a word or two before
+        // the 1.66 ring-buffer rewrite).
+        assert!(qs.resident_capacity() < 16, "{}", qs.resident_capacity());
+        // The set stays usable after a drain.
+        qs.push(B, pend(1));
+        assert_eq!(qs.queued_for(B), 1);
     }
 }

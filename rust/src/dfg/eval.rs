@@ -2,14 +2,25 @@
 //!
 //! Semantics are wrapping two's-complement int32, matching the DSP48E1
 //! model, the jnp reference (`python/compile/kernels/ref.py`) and the
-//! Pallas kernel. The cycle-accurate simulator and the PJRT runtime are
-//! both checked against this evaluator.
+//! Pallas kernel. The cycle-accurate simulator, the tape-compiled
+//! turbo backend and the PJRT runtime are all checked against this
+//! evaluator.
 
 use super::{Dfg, NodeKind};
 
 /// Evaluate the graph for one input vector (values in input declaration
 /// order). Returns outputs in output declaration order.
 pub fn eval(g: &Dfg, inputs: &[i32]) -> Vec<i32> {
+    let mut value = vec![0i32; g.len()];
+    let mut outputs = Vec::new();
+    eval_into(g, inputs, &mut value, &mut outputs);
+    outputs
+}
+
+/// Allocation-free core: evaluate one packet into caller-owned
+/// scratch. `value` is resized to the node count (reused across calls);
+/// outputs are **appended** to `outputs` in declaration order.
+pub fn eval_into(g: &Dfg, inputs: &[i32], value: &mut Vec<i32>, outputs: &mut Vec<i32>) {
     let input_ids = g.inputs();
     assert_eq!(
         inputs.len(),
@@ -19,9 +30,9 @@ pub fn eval(g: &Dfg, inputs: &[i32]) -> Vec<i32> {
         input_ids.len(),
         inputs.len()
     );
-    let mut value = vec![0i32; g.len()];
+    value.clear();
+    value.resize(g.len(), 0);
     let mut next_input = 0usize;
-    let mut outputs = Vec::new();
     for id in g.ids() {
         let n = g.node(id);
         let v = match &n.kind {
@@ -40,12 +51,30 @@ pub fn eval(g: &Dfg, inputs: &[i32]) -> Vec<i32> {
         };
         value[id as usize] = v;
     }
-    outputs
 }
 
-/// Evaluate over a batch of input vectors (row-major `[batch][n_inputs]`).
-pub fn eval_batch(g: &Dfg, batch: &[Vec<i32>]) -> Vec<Vec<i32>> {
-    batch.iter().map(|row| eval(g, row)).collect()
+/// Evaluate over a flat row-major batch (`n_inputs` words per packet).
+/// Returns flat row-major outputs (`n_outputs` words per packet). The
+/// per-node value scratch is hoisted out of the packet loop — the
+/// batch shape the serving layer's `FlatBatch` I/O feeds directly.
+pub fn eval_batch(g: &Dfg, flat_inputs: &[i32]) -> Vec<i32> {
+    let n_in = g.inputs().len();
+    assert!(n_in > 0, "kernel '{}' has no inputs", g.name);
+    assert_eq!(
+        flat_inputs.len() % n_in,
+        0,
+        "kernel '{}': flat batch of {} words is not a multiple of arity {}",
+        g.name,
+        flat_inputs.len(),
+        n_in
+    );
+    let n_rows = flat_inputs.len() / n_in;
+    let mut value = Vec::with_capacity(g.len());
+    let mut outputs = Vec::with_capacity(n_rows * g.outputs().len());
+    for row in flat_inputs.chunks_exact(n_in) {
+        eval_into(g, row, &mut value, &mut outputs);
+    }
+    outputs
 }
 
 #[cfg(test)]
@@ -99,12 +128,33 @@ mod tests {
     }
 
     #[test]
-    fn batch_matches_scalar() {
+    fn flat_batch_matches_scalar() {
         let g = tiny_graph();
-        let batch = vec![vec![1, 2], vec![5, -5], vec![i32::MAX, i32::MIN]];
-        let out = eval_batch(&g, &batch);
-        for (row, o) in batch.iter().zip(&out) {
-            assert_eq!(o, &eval(&g, row));
+        let rows = [vec![1, 2], vec![5, -5], vec![i32::MAX, i32::MIN]];
+        let flat: Vec<i32> = rows.iter().flatten().copied().collect();
+        let out = eval_batch(&g, &flat);
+        assert_eq!(out.len(), rows.len());
+        for (row, o) in rows.iter().zip(&out) {
+            assert_eq!(*o, eval(&g, row)[0]);
         }
+        // Empty flat batch evaluates to no outputs.
+        assert!(eval_batch(&g, &[]).is_empty());
+    }
+
+    #[test]
+    fn eval_into_reuses_scratch_and_appends() {
+        let g = tiny_graph();
+        let mut value = Vec::new();
+        let mut out = Vec::new();
+        eval_into(&g, &[7, 3], &mut value, &mut out);
+        eval_into(&g, &[3, 7], &mut value, &mut out);
+        assert_eq!(out, vec![16, 16]);
+        assert_eq!(value.len(), g.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple of arity")]
+    fn flat_batch_ragged_panics() {
+        eval_batch(&tiny_graph(), &[1, 2, 3]);
     }
 }

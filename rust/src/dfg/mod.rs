@@ -13,7 +13,7 @@ mod serde;
 mod transform;
 
 pub use analysis::{Characteristics, Levels};
-pub use eval::{eval, eval_batch};
+pub use eval::{eval, eval_batch, eval_into};
 pub use serde::{dfg_from_json, dfg_from_str, dfg_to_json};
 pub use transform::{constant_fold, cse, dce, normalize};
 

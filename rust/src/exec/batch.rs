@@ -1,0 +1,219 @@
+//! Flat batch I/O: one contiguous `i32` buffer for a whole batch.
+//!
+//! The serving path historically moved batches as `&[Vec<i32>]` — one
+//! heap allocation per packet on every hop (ingress copy, backend
+//! dispatch, oracle check). [`FlatBatch`] replaces that shape end to
+//! end: packets are rows of a single row-major buffer (`arity` words
+//! per row), so a steady-state worker reuses one buffer per batch
+//! (`reset` + `push`) and backends index rows without pointer chasing.
+//! This is the software analogue of the overlay's streaming data BRAM:
+//! packets are contiguous words, not boxed objects.
+
+use std::fmt;
+
+/// A row-major batch of packets sharing one contiguous buffer.
+///
+/// Invariant: `data.len() == arity * rows`. `arity` is words per
+/// packet (kernel inputs on the request side, kernel outputs on the
+/// reply side). `rows` is tracked explicitly so the container stays
+/// well-defined even for zero-arity edge cases.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FlatBatch {
+    data: Vec<i32>,
+    arity: usize,
+    rows: usize,
+}
+
+impl FlatBatch {
+    /// Empty batch of `arity`-word packets.
+    pub fn new(arity: usize) -> FlatBatch {
+        FlatBatch {
+            data: Vec::new(),
+            arity,
+            rows: 0,
+        }
+    }
+
+    /// Empty batch with room for `rows` packets.
+    pub fn with_capacity(arity: usize, rows: usize) -> FlatBatch {
+        FlatBatch {
+            data: Vec::with_capacity(arity * rows),
+            arity,
+            rows: 0,
+        }
+    }
+
+    /// Build from row vectors (tests / adapters for row-shaped APIs).
+    /// `arity` is explicit so empty batches keep their shape.
+    pub fn from_rows(arity: usize, rows: &[Vec<i32>]) -> FlatBatch {
+        let mut b = FlatBatch::with_capacity(arity, rows.len());
+        for r in rows {
+            b.push(r);
+        }
+        b
+    }
+
+    /// Adopt an already row-major buffer without copying (producers
+    /// that emit flat output, e.g. `dfg::eval_batch`). Panics unless
+    /// the length is a whole number of `arity`-word rows.
+    pub fn from_flat(arity: usize, data: Vec<i32>) -> FlatBatch {
+        assert!(arity > 0, "FlatBatch::from_flat needs a positive arity");
+        assert_eq!(data.len() % arity, 0, "FlatBatch::from_flat ragged buffer");
+        let rows = data.len() / arity;
+        FlatBatch { data, arity, rows }
+    }
+
+    /// Clear and re-shape in place, keeping the allocation (the
+    /// worker-loop reuse hook: one buffer serves every kernel).
+    pub fn reset(&mut self, arity: usize) {
+        self.data.clear();
+        self.arity = arity;
+        self.rows = 0;
+    }
+
+    /// Reserve room for `rows` more packets.
+    pub fn reserve_rows(&mut self, rows: usize) {
+        self.data.reserve(self.arity * rows);
+    }
+
+    /// Append one packet. Panics on arity mismatch — shape errors are
+    /// caught at ingress ([`super::validate_batch`] / `submit`), so a
+    /// mismatch here is a caller bug, not a request error.
+    pub fn push(&mut self, row: &[i32]) {
+        assert_eq!(row.len(), self.arity, "FlatBatch row arity");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Append one packet from an iterator yielding exactly `arity`
+    /// values (lets producers write straight into the buffer).
+    pub fn push_iter<I: IntoIterator<Item = i32>>(&mut self, values: I) {
+        let before = self.data.len();
+        self.data.extend(values);
+        assert_eq!(self.data.len() - before, self.arity, "FlatBatch row arity");
+        self.rows += 1;
+    }
+
+    /// Words per packet.
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Packets in the batch.
+    pub fn n_rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// One packet as a slice.
+    pub fn row(&self, i: usize) -> &[i32] {
+        let start = i * self.arity;
+        &self.data[start..start + self.arity]
+    }
+
+    /// Iterate packets in submission order. Yields exactly
+    /// [`Self::n_rows`] slices, including the zero-arity edge (one
+    /// empty slice per row).
+    pub fn iter(&self) -> impl Iterator<Item = &[i32]> + '_ {
+        (0..self.rows).map(move |i| {
+            let start = i * self.arity;
+            &self.data[start..start + self.arity]
+        })
+    }
+
+    /// The whole row-major buffer.
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// Explode into row vectors (adapter for row-shaped APIs like the
+    /// overlay simulator and the PJRT engine).
+    pub fn to_rows(&self) -> Vec<Vec<i32>> {
+        self.iter().map(<[i32]>::to_vec).collect()
+    }
+}
+
+impl fmt::Display for FlatBatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FlatBatch[{} x {}]", self.rows, self.arity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_index() {
+        let mut b = FlatBatch::new(3);
+        b.push(&[1, 2, 3]);
+        b.push(&[4, 5, 6]);
+        assert_eq!(b.n_rows(), 2);
+        assert_eq!(b.arity(), 3);
+        assert_eq!(b.row(0), &[1, 2, 3]);
+        assert_eq!(b.row(1), &[4, 5, 6]);
+        assert_eq!(b.data(), &[1, 2, 3, 4, 5, 6]);
+        let rows: Vec<&[i32]> = b.iter().collect();
+        assert_eq!(rows, vec![&[1, 2, 3][..], &[4, 5, 6][..]]);
+    }
+
+    #[test]
+    fn from_rows_round_trips() {
+        let rows = vec![vec![7, 8], vec![9, 10], vec![-1, i32::MIN]];
+        let b = FlatBatch::from_rows(2, &rows);
+        assert_eq!(b.to_rows(), rows);
+    }
+
+    #[test]
+    fn from_flat_adopts_buffer() {
+        let b = FlatBatch::from_flat(3, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(b.n_rows(), 2);
+        assert_eq!(b.row(1), &[4, 5, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn from_flat_rejects_ragged() {
+        FlatBatch::from_flat(2, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn reset_keeps_allocation_and_reshapes() {
+        let mut b = FlatBatch::with_capacity(4, 16);
+        for _ in 0..16 {
+            b.push(&[0, 1, 2, 3]);
+        }
+        let cap = b.data.capacity();
+        b.reset(2);
+        assert_eq!(b.n_rows(), 0);
+        assert_eq!(b.arity(), 2);
+        assert!(b.data.capacity() >= cap.min(64));
+        b.push(&[5, 6]);
+        assert_eq!(b.row(0), &[5, 6]);
+    }
+
+    #[test]
+    fn push_iter_counts_values() {
+        let mut b = FlatBatch::new(2);
+        b.push_iter([1, 2]);
+        assert_eq!(b.row(0), &[1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut b = FlatBatch::new(3);
+        b.push(&[1, 2]);
+    }
+
+    #[test]
+    fn empty_batch_has_shape() {
+        let b = FlatBatch::new(5);
+        assert!(b.is_empty());
+        assert_eq!(b.arity(), 5);
+        assert_eq!(b.iter().count(), 0);
+    }
+}

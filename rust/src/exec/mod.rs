@@ -3,32 +3,46 @@
 //! The serving coordinator historically executed only through the AOT
 //! PJRT engine, leaving the cycle-accurate overlay model — the actual
 //! reproduction artifact — disconnected from the serving path. This
-//! module defines one [`Backend`] contract with three interchangeable
+//! module defines one [`Backend`] contract with four interchangeable
 //! execution substrates:
 //!
 //! * [`RefBackend`] — the functional DFG interpreter ([`crate::dfg::eval`]);
-//!   the oracle, fastest, no hardware model;
+//!   the oracle, no hardware model;
+//! * [`TurboBackend`] — the tape-compiled throughput substrate: each
+//!   kernel is lowered once into a flat [`Tape`] of pre-resolved slot
+//!   indices (the software analogue of the overlay's instruction
+//!   stream) and batches run lane-chunked through a reusable scratch
+//!   arena — the fast path for production serving;
 //! * [`SimBackend`] — the cycle-accurate overlay ([`crate::arch::Overlay`] /
 //!   [`crate::arch::Pipeline`]), including the daisy-chained context load
 //!   ([`crate::arch::config_port`]) on every kernel switch;
 //! * [`PjrtBackend`] — the PJRT engine over the AOT artifacts
 //!   ([`crate::runtime::Engine`]).
 //!
-//! Kernels are compiled **once** into an [`Arc<CompiledKernel>`] registry
-//! ([`KernelRegistry`]) shared by every worker — schedule, timing and
-//! context image are no longer recomputed per worker, and the sim
-//! backend reuses its configured pipelines across context switches
-//! instead of rebuilding them. Batch validation returns structured
-//! [`ExecError`]s (never panics), and the fabric-timing model
-//! ([`fabric_exec_cycles`]) is guarded against empty batches.
+//! Batch I/O is **flat** end to end: requests and replies travel as
+//! [`FlatBatch`] (one contiguous row-major `i32` buffer) rather than
+//! `Vec<Vec<i32>>`, so the request side of the dispatch loop performs
+//! no per-packet allocation (per-caller reply rows are the one
+//! remaining per-packet `Vec`). Kernels are compiled **once** into an
+//! [`Arc<CompiledKernel>`] registry ([`KernelRegistry`]) shared by
+//! every worker, and interned as dense [`KernelId`]s so queues and
+//! dispatch never touch kernel-name strings. Batch validation returns
+//! structured [`ExecError`]s (never panics), and the fabric-timing
+//! model ([`fabric_exec_cycles`]) is guarded against empty batches.
 
+mod batch;
 mod pjrt_backend;
 mod ref_backend;
 mod sim_backend;
+mod tape;
+mod turbo_backend;
 
+pub use batch::FlatBatch;
 pub use pjrt_backend::PjrtBackend;
 pub use ref_backend::RefBackend;
 pub use sim_backend::SimBackend;
+pub use tape::{Tape, TapeOp, LANES};
+pub use turbo_backend::TurboBackend;
 
 use crate::bench_suite;
 use crate::dfg::Dfg;
@@ -47,7 +61,7 @@ use std::sync::Arc;
 
 /// Everything the serving path needs about one kernel, compiled once:
 /// the normalized DFG (functional oracle), the scheduled program, the
-/// timing model and the 40-bit context image.
+/// timing model, the 40-bit context image and the flat op tape.
 #[derive(Debug, Clone)]
 pub struct CompiledKernel {
     pub name: String,
@@ -63,6 +77,8 @@ pub struct CompiledKernel {
     pub context: ContextImage,
     /// Context words == daisy-chain load cycles (one word per cycle).
     pub context_words: usize,
+    /// Flat executable form for the turbo backend (DESIGN.md §3).
+    pub tape: Tape,
 }
 
 impl CompiledKernel {
@@ -72,6 +88,7 @@ impl CompiledKernel {
         let t = Timing::of(&program);
         let context = program.context_image()?;
         let context_words = context.load_cycles().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let tape = Tape::compile(&g, &program)?;
         Ok(CompiledKernel {
             name: g.name.clone(),
             n_inputs: g.inputs().len(),
@@ -82,6 +99,7 @@ impl CompiledKernel {
             program,
             context,
             context_words,
+            tape,
         })
     }
 
@@ -91,44 +109,81 @@ impl CompiledKernel {
     }
 }
 
+/// Dense registry index for a compiled kernel. Interning names once at
+/// submit time means queues, batches and worker context tracking move
+/// a `u32` instead of allocating `String`s on every push.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct KernelId(pub u32);
+
+impl KernelId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for KernelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "kernel#{}", self.0)
+    }
+}
+
 /// Shared, immutable registry of compiled kernels (compile once, share
-/// across workers via `Arc`).
+/// across workers via `Arc`). Kernels are stored dense, indexed by
+/// [`KernelId`] in insertion order, with a name index for ingress.
 #[derive(Debug, Default)]
 pub struct KernelRegistry {
-    kernels: BTreeMap<String, Arc<CompiledKernel>>,
+    kernels: Vec<Arc<CompiledKernel>>,
+    by_name: BTreeMap<String, KernelId>,
 }
 
 impl KernelRegistry {
     /// Compile the full benchmark suite.
     pub fn compile_bench_suite() -> Result<KernelRegistry> {
-        let mut kernels = BTreeMap::new();
-        for g in bench_suite::load_all()? {
-            let k = CompiledKernel::compile(g)?;
-            kernels.insert(k.name.clone(), Arc::new(k));
-        }
-        Ok(KernelRegistry { kernels })
+        KernelRegistry::compile(bench_suite::load_all()?)
     }
 
     /// Registry over an explicit kernel set (tests, custom workloads).
     pub fn compile(graphs: Vec<Dfg>) -> Result<KernelRegistry> {
-        let mut kernels = BTreeMap::new();
+        let mut reg = KernelRegistry::default();
         for g in graphs {
-            let k = CompiledKernel::compile(g)?;
-            kernels.insert(k.name.clone(), Arc::new(k));
+            reg.insert(CompiledKernel::compile(g)?);
         }
-        Ok(KernelRegistry { kernels })
+        Ok(reg)
+    }
+
+    fn insert(&mut self, k: CompiledKernel) {
+        match self.by_name.get(&k.name) {
+            // Recompiling an existing name keeps its id stable.
+            Some(&id) => self.kernels[id.index()] = Arc::new(k),
+            None => {
+                let id = KernelId(self.kernels.len() as u32);
+                self.by_name.insert(k.name.clone(), id);
+                self.kernels.push(Arc::new(k));
+            }
+        }
+    }
+
+    /// Intern a kernel name (ingress: resolve once, then move ids).
+    pub fn id_of(&self, name: &str) -> Option<KernelId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Kernel by dense id (dispatch hot path).
+    pub fn kernel(&self, id: KernelId) -> Option<&Arc<CompiledKernel>> {
+        self.kernels.get(id.index())
     }
 
     pub fn get(&self, name: &str) -> Option<&Arc<CompiledKernel>> {
-        self.kernels.get(name)
+        self.id_of(name).and_then(|id| self.kernel(id))
     }
 
     pub fn contains(&self, name: &str) -> bool {
-        self.kernels.contains_key(name)
+        self.by_name.contains_key(name)
     }
 
+    /// Kernel names in id (insertion) order.
     pub fn names(&self) -> Vec<&str> {
-        self.kernels.keys().map(String::as_str).collect()
+        self.kernels.iter().map(|k| k.name.as_str()).collect()
     }
 
     pub fn len(&self) -> usize {
@@ -139,8 +194,9 @@ impl KernelRegistry {
         self.kernels.is_empty()
     }
 
+    /// Kernels in id order.
     pub fn iter(&self) -> impl Iterator<Item = &Arc<CompiledKernel>> {
-        self.kernels.values()
+        self.kernels.iter()
     }
 }
 
@@ -218,7 +274,7 @@ pub struct Capabilities {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ExecReport {
     /// One output row per input packet, in submission order.
-    pub outputs: Vec<Vec<i32>>,
+    pub outputs: FlatBatch,
     /// Context-switch cycles charged for this call (0 when the kernel
     /// was already resident).
     pub switch_cycles: u64,
@@ -231,7 +287,7 @@ pub struct ExecReport {
 /// client is thread-local), so workers construct their own via
 /// [`make_backend`] inside the worker thread.
 pub trait Backend {
-    /// Stable short name (`"ref"`, `"sim"`, `"pjrt"`).
+    /// Stable short name (`"ref"`, `"sim"`, `"pjrt"`, `"turbo"`).
     fn name(&self) -> &'static str;
 
     fn capabilities(&self) -> Capabilities;
@@ -242,25 +298,25 @@ pub trait Backend {
     fn execute(
         &mut self,
         kernel: &CompiledKernel,
-        batch: &[Vec<i32>],
+        batch: &FlatBatch,
     ) -> Result<ExecReport, ExecError>;
 }
 
-/// Shared request validation: non-empty batch, exact input arity.
-pub fn validate_batch(kernel: &CompiledKernel, batch: &[Vec<i32>]) -> Result<(), ExecError> {
+/// Shared request validation: non-empty batch, exact input arity. The
+/// flat shape makes arity a property of the whole batch, so this is
+/// one comparison rather than a per-packet scan.
+pub fn validate_batch(kernel: &CompiledKernel, batch: &FlatBatch) -> Result<(), ExecError> {
     if batch.is_empty() {
         return Err(ExecError::EmptyBatch {
             kernel: kernel.name.clone(),
         });
     }
-    for packet in batch {
-        if packet.len() != kernel.n_inputs {
-            return Err(ExecError::WrongArity {
-                kernel: kernel.name.clone(),
-                expected: kernel.n_inputs,
-                got: packet.len(),
-            });
-        }
+    if batch.arity() != kernel.n_inputs {
+        return Err(ExecError::WrongArity {
+            kernel: kernel.name.clone(),
+            expected: kernel.n_inputs,
+            got: batch.arity(),
+        });
     }
     Ok(())
 }
@@ -281,22 +337,29 @@ pub fn fabric_exec_cycles(kernel: &CompiledKernel, n: usize) -> Result<u64, Exec
 // Backend selection
 // ---------------------------------------------------------------------
 
-/// The three execution substrates, CLI-selectable via `--backend`.
+/// The four execution substrates, CLI-selectable via `--backend`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
     Ref,
     Sim,
     Pjrt,
+    Turbo,
 }
 
 impl BackendKind {
-    pub const ALL: [BackendKind; 3] = [BackendKind::Ref, BackendKind::Sim, BackendKind::Pjrt];
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::Ref,
+        BackendKind::Sim,
+        BackendKind::Pjrt,
+        BackendKind::Turbo,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::Ref => "ref",
             BackendKind::Sim => "sim",
             BackendKind::Pjrt => "pjrt",
+            BackendKind::Turbo => "turbo",
         }
     }
 
@@ -322,8 +385,9 @@ impl FromStr for BackendKind {
     type Err = String;
 
     fn from_str(s: &str) -> Result<BackendKind, String> {
-        BackendKind::from_name(s)
-            .ok_or_else(|| format!("unknown backend '{s}' (expected one of: ref, sim, pjrt)"))
+        BackendKind::from_name(s).ok_or_else(|| {
+            format!("unknown backend '{s}' (expected one of: ref, sim, pjrt, turbo)")
+        })
     }
 }
 
@@ -359,6 +423,7 @@ pub fn make_backend(cfg: &BackendConfig) -> Result<Box<dyn Backend>> {
         BackendKind::Ref => Box::new(RefBackend::new()),
         BackendKind::Sim => Box::new(SimBackend::new(cfg.sim_replicas, cfg.sim_fifo_capacity)?),
         BackendKind::Pjrt => Box::new(PjrtBackend::load(&cfg.artifacts_dir)?),
+        BackendKind::Turbo => Box::new(TurboBackend::new()),
     })
 }
 
@@ -372,6 +437,10 @@ mod tests {
         KernelRegistry::compile_bench_suite().unwrap()
     }
 
+    fn batch_of(rows: &[Vec<i32>]) -> FlatBatch {
+        FlatBatch::from_rows(rows[0].len(), rows)
+    }
+
     #[test]
     fn registry_compiles_all_kernels_once() {
         let reg = registry();
@@ -381,7 +450,23 @@ mod tests {
         assert_eq!(grad.ii, 11);
         assert_eq!(grad.latency, 24);
         assert!(grad.context_words > 0);
+        assert_eq!(grad.tape.len(), grad.dfg.n_ops());
         assert!(reg.get("nonesuch").is_none());
+    }
+
+    #[test]
+    fn kernel_ids_are_dense_and_stable() {
+        let reg = registry();
+        // Ids follow bench-suite insertion order, densely from 0.
+        for (i, name) in bench_suite::all_names().iter().enumerate() {
+            let id = reg.id_of(name).unwrap();
+            assert_eq!(id.index(), i, "{name}");
+            assert_eq!(reg.kernel(id).unwrap().name, *name);
+        }
+        assert_eq!(reg.names(), bench_suite::all_names());
+        assert!(reg.id_of("nonesuch").is_none());
+        assert!(reg.kernel(KernelId(999)).is_none());
+        assert_eq!(format!("{}", KernelId(3)), "kernel#3");
     }
 
     #[test]
@@ -407,18 +492,18 @@ mod tests {
         let reg = registry();
         let k = reg.get("gradient").unwrap();
         assert!(matches!(
-            validate_batch(k, &[]),
+            validate_batch(k, &FlatBatch::new(5)),
             Err(ExecError::EmptyBatch { .. })
         ));
         assert_eq!(
-            validate_batch(k, &[vec![1, 2]]),
+            validate_batch(k, &batch_of(&[vec![1, 2]])),
             Err(ExecError::WrongArity {
                 kernel: "gradient".into(),
                 expected: 5,
                 got: 2
             })
         );
-        assert!(validate_batch(k, &[vec![0; 5]]).is_ok());
+        assert!(validate_batch(k, &batch_of(&[vec![0; 5]])).is_ok());
     }
 
     #[test]
@@ -431,14 +516,14 @@ mod tests {
     }
 
     #[test]
-    fn ref_and_sim_backends_construct_via_factory() {
+    fn artifact_free_backends_construct_via_factory() {
         let reg = registry();
-        for kind in [BackendKind::Ref, BackendKind::Sim] {
+        for kind in [BackendKind::Ref, BackendKind::Sim, BackendKind::Turbo] {
             let mut b = make_backend(&BackendConfig::new(kind)).unwrap();
             assert_eq!(b.name(), kind.name());
             let k = reg.get("gradient").unwrap();
-            let r = b.execute(k, &[vec![3, 5, 2, 7, 1]]).unwrap();
-            assert_eq!(r.outputs, vec![vec![36]]);
+            let r = b.execute(k, &batch_of(&[vec![3, 5, 2, 7, 1]])).unwrap();
+            assert_eq!(r.outputs.to_rows(), vec![vec![36]]);
         }
     }
 
@@ -457,6 +542,10 @@ mod tests {
         assert!(!b.capabilities().cycle_accurate);
         assert!(!b.capabilities().needs_artifacts);
         assert!(!BackendKind::Ref.needs_artifacts());
+        let b = make_backend(&BackendConfig::new(BackendKind::Turbo)).unwrap();
+        assert!(!b.capabilities().cycle_accurate);
+        assert!(!b.capabilities().needs_artifacts);
+        assert!(!BackendKind::Turbo.needs_artifacts());
         let b = make_backend(&BackendConfig::new(BackendKind::Sim)).unwrap();
         let caps = b.capabilities();
         assert!(caps.cycle_accurate);
@@ -466,36 +555,37 @@ mod tests {
         assert!(BackendKind::Pjrt.needs_artifacts());
     }
 
-    /// Interpreter and simulator agree bit-for-bit on every benchmark
-    /// kernel (the serving-layer analogue of the arch-level oracle
-    /// tests), and the sim backend charges context-switch cycles
-    /// exactly once per kernel change.
+    /// The three artifact-free substrates agree bit-for-bit on every
+    /// benchmark kernel (the serving-layer analogue of the arch-level
+    /// oracle tests), and the sim backend charges context-switch
+    /// cycles exactly once per kernel change.
     #[test]
-    fn ref_and_sim_agree_and_switch_costs_are_charged() {
+    fn backends_agree_and_switch_costs_are_charged() {
         let reg = Arc::new(registry());
         let mut rb = RefBackend::new();
+        let mut tb = TurboBackend::new();
         let mut sb = SimBackend::new(1, 4096).unwrap();
         let mut rng = Rng::new(2024);
         for name in bench_suite::all_names() {
             let k = reg.get(name).unwrap();
-            let batch: Vec<Vec<i32>> = (0..6)
-                .map(|_| {
-                    (0..k.n_inputs)
-                        .map(|_| rng.range_i64(-2000, 2000) as i32)
-                        .collect()
-                })
-                .collect();
+            let mut batch = FlatBatch::with_capacity(k.n_inputs, 6);
+            for _ in 0..6 {
+                batch.push_iter((0..k.n_inputs).map(|_| rng.range_i64(-2000, 2000) as i32));
+            }
             let want: Vec<Vec<i32>> = batch.iter().map(|p| eval(&k.dfg, p)).collect();
             let r = rb.execute(k, &batch).unwrap();
-            assert_eq!(r.outputs, want, "{name} (ref)");
+            assert_eq!(r.outputs.to_rows(), want, "{name} (ref)");
             assert_eq!(r.switch_cycles, 0);
+            let t = tb.execute(k, &batch).unwrap();
+            assert_eq!(t.outputs.to_rows(), want, "{name} (turbo)");
             let s = sb.execute(k, &batch).unwrap();
-            assert_eq!(s.outputs, want, "{name} (sim)");
+            assert_eq!(s.outputs.to_rows(), want, "{name} (sim)");
             // First visit to this kernel: the daisy-chain load runs.
             assert_eq!(s.switch_cycles, k.context_words as u64, "{name}");
             assert!(s.fabric_cycles.unwrap_or(0) > 0, "{name}");
             // Re-execute without switching: no context cost.
-            let s2 = sb.execute(k, &batch[..1]).unwrap();
+            let one = FlatBatch::from_rows(k.n_inputs, &[batch.row(0).to_vec()]);
+            let s2 = sb.execute(k, &one).unwrap();
             assert_eq!(s2.switch_cycles, 0, "{name}");
         }
     }

@@ -7,7 +7,9 @@
 //! hardware model, keeping the simulated 300 MHz fabric timeline
 //! comparable across backends.
 
-use super::{validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport};
+use super::{
+    validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport, FlatBatch,
+};
 use crate::runtime::Engine;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -52,19 +54,22 @@ impl Backend for PjrtBackend {
     fn execute(
         &mut self,
         kernel: &CompiledKernel,
-        batch: &[Vec<i32>],
+        batch: &FlatBatch,
     ) -> Result<ExecReport, ExecError> {
         validate_batch(kernel, batch)?;
-        if batch.len() > self.engine.batch {
+        if batch.n_rows() > self.engine.batch {
             return Err(ExecError::BatchTooLarge {
                 kernel: kernel.name.clone(),
-                got: batch.len(),
+                got: batch.n_rows(),
                 max: self.engine.batch,
             });
         }
+        // The PJRT engine consumes row vectors; convert at the
+        // boundary (artifact-gated path, not the flat fast path).
+        let rows = batch.to_rows();
         let outputs = self
             .engine
-            .execute(&kernel.name, batch)
+            .execute(&kernel.name, &rows)
             .map_err(|e| ExecError::Backend {
                 backend: "pjrt",
                 message: format!("{e}"),
@@ -76,7 +81,7 @@ impl Backend for PjrtBackend {
             0
         };
         Ok(ExecReport {
-            outputs,
+            outputs: FlatBatch::from_rows(kernel.n_outputs, &outputs),
             switch_cycles,
             fabric_cycles: None,
         })
@@ -110,11 +115,12 @@ mod tests {
         let reg = KernelRegistry::compile_bench_suite().unwrap();
         let mut b = PjrtBackend::load(&dir).unwrap();
         let k = reg.get("gradient").unwrap();
-        let batch = vec![vec![3, 5, 2, 7, 1]];
+        let batch = FlatBatch::from_rows(5, &[vec![3, 5, 2, 7, 1]]);
         let r = b.execute(k, &batch).unwrap();
-        assert_eq!(r.outputs, vec![eval(&k.dfg, &batch[0])]);
+        assert_eq!(r.outputs.to_rows(), vec![eval(&k.dfg, batch.row(0))]);
         assert_eq!(r.switch_cycles, k.context_words as u64);
-        let over: Vec<Vec<i32>> = (0..b.max_batch() + 1).map(|_| vec![0; 5]).collect();
+        let over_rows: Vec<Vec<i32>> = (0..b.max_batch() + 1).map(|_| vec![0; 5]).collect();
+        let over = FlatBatch::from_rows(5, &over_rows);
         assert!(matches!(
             b.execute(k, &over),
             Err(ExecError::BatchTooLarge { .. })

@@ -1,12 +1,19 @@
 //! Interpreter backend: the functional DFG oracle on the serving path.
 //!
-//! Executes every packet through [`crate::dfg::eval`] — no hardware
-//! model, no artifacts, bit-exact wrapping int32 semantics. This is
-//! the reference substrate the other backends are verified against,
-//! and the fastest way to serve when no fabric modeling is wanted.
+//! Executes batches through [`crate::dfg::eval_batch`] — a node-by-node
+//! graph walk per packet (a `match` and bounds-checked indexing per
+//! node) with the per-node value scratch hoisted out of the packet
+//! loop. No hardware model, no artifacts, bit-exact wrapping int32
+//! semantics. This is the reference substrate the other backends are
+//! verified against: it deliberately stays a *graph traversal* (it
+//! shares `eval_into` with the one-packet oracle, and nothing with
+//! the turbo backend's pre-compiled tape), so ref-vs-turbo
+//! equivalence compares two genuinely different executable forms.
 
-use super::{validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport};
-use crate::dfg::eval;
+use super::{
+    validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport, FlatBatch,
+};
+use crate::dfg::{eval, eval_batch};
 
 /// The DFG-interpreter backend (stateless).
 #[derive(Debug, Default)]
@@ -38,11 +45,22 @@ impl Backend for RefBackend {
     fn execute(
         &mut self,
         kernel: &CompiledKernel,
-        batch: &[Vec<i32>],
+        batch: &FlatBatch,
     ) -> Result<ExecReport, ExecError> {
         validate_batch(kernel, batch)?;
-        let outputs = batch.iter().map(|p| eval(&kernel.dfg, p)).collect();
-        self.executed += batch.len() as u64;
+        let outputs = if kernel.n_inputs > 0 {
+            FlatBatch::from_flat(kernel.n_outputs, eval_batch(&kernel.dfg, batch.data()))
+        } else {
+            // Zero-input kernels (constant graphs built through
+            // `KernelRegistry::compile`) have no flat row shape;
+            // evaluate them packet by packet.
+            let mut out = FlatBatch::with_capacity(kernel.n_outputs, batch.n_rows());
+            for row in batch.iter() {
+                out.push_iter(eval(&kernel.dfg, row));
+            }
+            out
+        };
+        self.executed += batch.n_rows() as u64;
         Ok(ExecReport {
             outputs,
             switch_cycles: 0,
@@ -61,10 +79,9 @@ mod tests {
         let reg = KernelRegistry::compile_bench_suite().unwrap();
         let k = reg.get("gradient").unwrap();
         let mut b = RefBackend::new();
-        let r = b
-            .execute(k, &[vec![3, 5, 2, 7, 1], vec![0, 0, 0, 0, 0]])
-            .unwrap();
-        assert_eq!(r.outputs, vec![vec![36], vec![0]]);
+        let batch = FlatBatch::from_rows(5, &[vec![3, 5, 2, 7, 1], vec![0, 0, 0, 0, 0]]);
+        let r = b.execute(k, &batch).unwrap();
+        assert_eq!(r.outputs.to_rows(), vec![vec![36], vec![0]]);
         assert_eq!(b.executed, 2);
         assert_eq!(r.fabric_cycles, None);
     }
@@ -75,11 +92,11 @@ mod tests {
         let k = reg.get("chebyshev").unwrap();
         let mut b = RefBackend::new();
         assert!(matches!(
-            b.execute(k, &[vec![1, 2]]),
+            b.execute(k, &FlatBatch::from_rows(2, &[vec![1, 2]])),
             Err(ExecError::WrongArity { .. })
         ));
         assert!(matches!(
-            b.execute(k, &[]),
+            b.execute(k, &FlatBatch::new(1)),
             Err(ExecError::EmptyBatch { .. })
         ));
         assert_eq!(b.executed, 0);

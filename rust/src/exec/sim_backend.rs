@@ -10,10 +10,18 @@
 //!   *simulated* word-per-cycle load, not just an analytical count.
 //! * Batches run through the replicated pipelines round-robin; the
 //!   report carries the fabric cycles actually simulated.
+//!
+//! The overlay model streams packets as row vectors, so this backend
+//! explodes the incoming [`FlatBatch`] at its boundary — acceptable
+//! because the simulator spends thousands of modeled cycles per
+//! packet; the flat fast path belongs to `ref`/`turbo`.
 
-use super::{validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport};
+use super::{
+    validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport, FlatBatch,
+};
 use crate::arch::{config_port, Overlay};
 use anyhow::Result;
+use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 
 /// The cycle-accurate overlay backend.
@@ -76,7 +84,7 @@ impl Backend for SimBackend {
     fn execute(
         &mut self,
         kernel: &CompiledKernel,
-        batch: &[Vec<i32>],
+        batch: &FlatBatch,
     ) -> Result<ExecReport, ExecError> {
         validate_batch(kernel, batch)?;
         // Context switch: clock the 40-bit stream through the daisy
@@ -91,22 +99,26 @@ impl Backend for SimBackend {
         }
         // Configured overlays are cached across switches (the hardware
         // analogue: per-kernel context images stay in the config BRAM).
-        if !self.overlays.contains_key(&kernel.name) {
-            let ov = Overlay::new(&kernel.program, self.replicas, self.fifo_capacity)
-                .map_err(|e| Self::backend_err(format!("building overlay: {e}")))?;
-            self.overlays.insert(kernel.name.clone(), ov);
-        }
-        let ov = self.overlays.get_mut(&kernel.name).expect("just inserted");
+        // Single `entry` lookup instead of contains_key + insert + get.
+        let ov = match self.overlays.entry(kernel.name.clone()) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => {
+                let ov = Overlay::new(&kernel.program, self.replicas, self.fifo_capacity)
+                    .map_err(|e| Self::backend_err(format!("building overlay: {e}")))?;
+                v.insert(ov)
+            }
+        };
         // Generous per-batch cycle budget: fill + n initiations + slack.
-        let budget = kernel.latency + (batch.len() as u64 + 4) * kernel.ii as u64 + 1024;
+        let budget = kernel.latency + (batch.n_rows() as u64 + 4) * kernel.ii as u64 + 1024;
         let before = ov.batch_cycles();
+        let rows = batch.to_rows();
         let outputs = ov
-            .run(batch, budget)
+            .run(&rows, budget)
             .map_err(|e| Self::backend_err(format!("{e}")))?;
         let fabric_cycles = ov.batch_cycles().saturating_sub(before);
         self.total_fabric_cycles += fabric_cycles;
         Ok(ExecReport {
-            outputs,
+            outputs: FlatBatch::from_rows(kernel.n_outputs, &outputs),
             switch_cycles,
             fabric_cycles: Some(fabric_cycles),
         })
@@ -119,6 +131,10 @@ mod tests {
     use crate::dfg::eval;
     use crate::exec::KernelRegistry;
 
+    fn rows(r: &[Vec<i32>]) -> FlatBatch {
+        FlatBatch::from_rows(r[0].len(), r)
+    }
+
     #[test]
     fn matches_oracle_and_reuses_overlays_across_switches() {
         let reg = KernelRegistry::compile_bench_suite().unwrap();
@@ -126,14 +142,14 @@ mod tests {
         let cheb = reg.get("chebyshev").unwrap();
         let mut b = SimBackend::new(1, 4096).unwrap();
         // gradient -> chebyshev -> gradient: two kernels, three switches.
-        let r1 = b.execute(grad, &[vec![3, 5, 2, 7, 1]]).unwrap();
-        assert_eq!(r1.outputs, vec![vec![36]]);
+        let r1 = b.execute(grad, &rows(&[vec![3, 5, 2, 7, 1]])).unwrap();
+        assert_eq!(r1.outputs.to_rows(), vec![vec![36]]);
         assert_eq!(r1.switch_cycles, grad.context_words as u64);
-        let r2 = b.execute(cheb, &[vec![2]]).unwrap();
-        assert_eq!(r2.outputs, vec![eval(&cheb.dfg, &[2])]);
+        let r2 = b.execute(cheb, &rows(&[vec![2]])).unwrap();
+        assert_eq!(r2.outputs.to_rows(), vec![eval(&cheb.dfg, &[2])]);
         assert_eq!(r2.switch_cycles, cheb.context_words as u64);
-        let r3 = b.execute(grad, &[vec![1, 1, 1, 1, 1]]).unwrap();
-        assert_eq!(r3.outputs, vec![vec![0]]);
+        let r3 = b.execute(grad, &rows(&[vec![1, 1, 1, 1, 1]])).unwrap();
+        assert_eq!(r3.outputs.to_rows(), vec![vec![0]]);
         // Switching back re-charges the load but reuses the overlay.
         assert_eq!(r3.switch_cycles, grad.context_words as u64);
         assert_eq!(b.overlays.len(), 2);
@@ -150,9 +166,9 @@ mod tests {
         let k = reg.get("mibench").unwrap();
         let mut b = SimBackend::new(3, 4096).unwrap();
         let batch: Vec<Vec<i32>> = (0..10).map(|i| vec![i, i + 1, i + 2]).collect();
-        let r = b.execute(k, &batch).unwrap();
-        for (pkt, got) in batch.iter().zip(&r.outputs) {
-            assert_eq!(got, &eval(&k.dfg, pkt));
+        let r = b.execute(k, &rows(&batch)).unwrap();
+        for (pkt, got) in batch.iter().zip(r.outputs.iter()) {
+            assert_eq!(got, &eval(&k.dfg, pkt)[..]);
         }
     }
 
@@ -162,11 +178,11 @@ mod tests {
         let k = reg.get("gradient").unwrap();
         let mut b = SimBackend::new(1, 4096).unwrap();
         assert!(matches!(
-            b.execute(k, &[]),
+            b.execute(k, &FlatBatch::new(5)),
             Err(ExecError::EmptyBatch { .. })
         ));
         assert!(matches!(
-            b.execute(k, &[vec![1]]),
+            b.execute(k, &rows(&[vec![1]])),
             Err(ExecError::WrongArity { .. })
         ));
         // Failed validation must not have charged a switch.

@@ -1,0 +1,358 @@
+//! Tape compilation: a scheduled kernel lowered to a flat linear op
+//! tape — the software analogue of the overlay's 40-bit instruction
+//! stream (DESIGN.md §3).
+//!
+//! At registry-compile time each kernel's [`Program`] is walked stage
+//! by stage and every arithmetic instruction becomes one [`TapeOp`]
+//! with **pre-resolved scratch-slot indices**: no node lookups, no
+//! `match` on node kinds, no bounds-derived indirection left on the
+//! request path. Bypass instructions vanish entirely — in a flat
+//! scratch arena a value is addressable from every "stage", so the
+//! inter-FU data movement the hardware pays for is free here. Tape
+//! length therefore tracks the kernel's context words minus its bypass
+//! words (`poly6`: 44 tape ops vs 59 context instruction words).
+//!
+//! Execution is batch-major and lane-chunked: packets are processed
+//! [`LANES`] at a time against a slot-major scratch arena
+//! (`scratch[slot * LANES + lane]`), so each tape op becomes one tight
+//! fixed-trip loop over the lane block — the shape auto-vectorizers
+//! want. Slot indices are strictly increasing (`dst > a, b` by
+//! construction), which both proves the tape race-free and lets the
+//! interpreter split the arena into disjoint read/write regions
+//! without unsafe code.
+
+use super::FlatBatch;
+use crate::dfg::{Dfg, NodeId, NodeKind, OpKind};
+use crate::sched::Program;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Packets processed per scratch block. 16 lanes of i32 fill one or
+/// two cache lines per slot and give the compiler a full vector
+/// register's worth of independent work per tape op.
+pub const LANES: usize = 16;
+
+/// One pre-resolved tape instruction: `slot[dst] = op(slot[a], slot[b])`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TapeOp {
+    pub op: OpKind,
+    pub a: u32,
+    pub b: u32,
+    pub dst: u32,
+}
+
+/// A kernel compiled to its flat executable form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tape {
+    ops: Vec<TapeOp>,
+    /// Constants preloaded into the arena: (slot, value).
+    consts: Vec<(u32, i32)>,
+    /// Slots emitted per packet, in output declaration order.
+    outputs: Vec<u32>,
+    n_inputs: usize,
+    /// Scratch slots per lane (inputs + consts + one per op).
+    n_slots: usize,
+}
+
+impl Tape {
+    /// Lower a scheduled program to a tape. Walking the schedule (not
+    /// the raw DFG) keeps the tape's issue order identical to the
+    /// overlay's — stage by stage, each stage's ops in issue order —
+    /// so tape results are bit-for-bit the pipeline's results by
+    /// construction, not by coincidence of traversal order.
+    pub fn compile(g: &Dfg, p: &Program) -> Result<Tape> {
+        let mut slot: BTreeMap<NodeId, u32> = BTreeMap::new();
+        let mut next = 0u32;
+        // Inputs occupy the first slots, in declaration order — the
+        // gather loop streams them straight from the FlatBatch rows.
+        let inputs = g.inputs();
+        for &id in &inputs {
+            slot.insert(id, next);
+            next += 1;
+        }
+        let mut consts: Vec<(u32, i32)> = Vec::new();
+        let mut ops: Vec<TapeOp> = Vec::new();
+        for st in &p.stages {
+            for &op_id in &st.ops {
+                let n = g.node(op_id);
+                let opk = match n.kind {
+                    NodeKind::Op { op } => op,
+                    _ => bail!("tape: scheduled node {op_id} is not an op"),
+                };
+                let mut arg_slot = |arg: NodeId| -> Result<u32> {
+                    if let Some(&s) = slot.get(&arg) {
+                        return Ok(s);
+                    }
+                    // First use of a constant: give it a slot below the
+                    // destination (keeps `dst > a, b`).
+                    if let NodeKind::Const { value } = g.node(arg).kind {
+                        let s = next;
+                        next += 1;
+                        slot.insert(arg, s);
+                        consts.push((s, value));
+                        return Ok(s);
+                    }
+                    bail!("tape: operand {arg} used before production")
+                };
+                let a = arg_slot(n.args[0])?;
+                let b = arg_slot(n.args[1])?;
+                let dst = next;
+                next += 1;
+                slot.insert(op_id, dst);
+                debug_assert!(a < dst && b < dst);
+                ops.push(TapeOp { op: opk, a, b, dst });
+            }
+        }
+        if ops.is_empty() {
+            bail!("tape: kernel '{}' has no operations", g.name);
+        }
+        let mut outputs = Vec::new();
+        for out_id in g.outputs() {
+            let src = g.node(out_id).args[0];
+            match slot.get(&src) {
+                Some(&s) => outputs.push(s),
+                // A constant emitted directly as an output never passes
+                // Program::schedule today (consts are not final-stage
+                // emissions), but lowering stays total over valid DFGs:
+                // give it a slot, the preload covers it.
+                None => {
+                    if let NodeKind::Const { value } = g.node(src).kind {
+                        let s = next;
+                        next += 1;
+                        consts.push((s, value));
+                        outputs.push(s);
+                    } else {
+                        bail!("tape: output {out_id} reads unproduced value {src}");
+                    }
+                }
+            }
+        }
+        Ok(Tape {
+            ops,
+            consts,
+            outputs,
+            n_inputs: inputs.len(),
+            n_slots: next as usize,
+        })
+    }
+
+    /// Tape length in ops (compare against the kernel's context words).
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Bytes of scratch arena one executor lane block needs.
+    pub fn scratch_bytes(&self) -> usize {
+        self.n_slots * LANES * std::mem::size_of::<i32>()
+    }
+
+    /// Execute a batch through the tape, appending one output row per
+    /// input row to `out`. `scratch` is the caller's reusable arena —
+    /// resized on first use, never reallocated in steady state. `out`
+    /// must already be shaped to this kernel's output arity.
+    pub fn execute_into(&self, batch: &FlatBatch, scratch: &mut Vec<i32>, out: &mut FlatBatch) {
+        debug_assert_eq!(batch.arity(), self.n_inputs, "tape input arity");
+        debug_assert_eq!(out.arity(), self.n_outputs(), "tape output arity");
+        scratch.resize(self.n_slots * LANES, 0);
+        // Constants load once per call: their slots are written by
+        // nothing else (inputs gather below them, ops write above).
+        for &(s, v) in &self.consts {
+            let base = s as usize * LANES;
+            scratch[base..base + LANES].fill(v);
+        }
+        let n = batch.n_rows();
+        let n_in = self.n_inputs;
+        let data = batch.data();
+        out.reserve_rows(n);
+        let mut row = 0usize;
+        while row < n {
+            let chunk = LANES.min(n - row);
+            // Gather: packet words -> slot-major lanes. Lanes past the
+            // chunk keep stale values; every op wraps, so garbage lanes
+            // are computed and discarded rather than branched around.
+            for i in 0..n_in {
+                let base = i * LANES;
+                for l in 0..chunk {
+                    scratch[base + l] = data[(row + l) * n_in + i];
+                }
+            }
+            // The tape proper: one fixed-trip lane loop per op, with
+            // the op match hoisted out of the lane loop.
+            for t in &self.ops {
+                let (lo, hi) = scratch.split_at_mut(t.dst as usize * LANES);
+                let d = &mut hi[..LANES];
+                let a = &lo[t.a as usize * LANES..t.a as usize * LANES + LANES];
+                let b = &lo[t.b as usize * LANES..t.b as usize * LANES + LANES];
+                match t.op {
+                    OpKind::Add => {
+                        for l in 0..LANES {
+                            d[l] = a[l].wrapping_add(b[l]);
+                        }
+                    }
+                    OpKind::Sub => {
+                        for l in 0..LANES {
+                            d[l] = a[l].wrapping_sub(b[l]);
+                        }
+                    }
+                    OpKind::Mul => {
+                        for l in 0..LANES {
+                            d[l] = a[l].wrapping_mul(b[l]);
+                        }
+                    }
+                    OpKind::And => {
+                        for l in 0..LANES {
+                            d[l] = a[l] & b[l];
+                        }
+                    }
+                    OpKind::Or => {
+                        for l in 0..LANES {
+                            d[l] = a[l] | b[l];
+                        }
+                    }
+                    OpKind::Xor => {
+                        for l in 0..LANES {
+                            d[l] = a[l] ^ b[l];
+                        }
+                    }
+                }
+            }
+            // Scatter: lane results -> row-major output packets.
+            for l in 0..chunk {
+                out.push_iter(self.outputs.iter().map(|&s| scratch[s as usize * LANES + l]));
+            }
+            row += chunk;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::dfg::eval;
+    use crate::util::prng::Rng;
+
+    fn tape_for(name: &str) -> (Dfg, Tape) {
+        let g = bench_suite::load(name).unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let t = Tape::compile(&g, &p).unwrap();
+        (g, t)
+    }
+
+    fn run(t: &Tape, g: &Dfg, rows: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        let batch = FlatBatch::from_rows(g.inputs().len(), rows);
+        let mut scratch = Vec::new();
+        let mut out = FlatBatch::new(g.outputs().len());
+        t.execute_into(&batch, &mut scratch, &mut out);
+        out.to_rows()
+    }
+
+    #[test]
+    fn gradient_tape_shape() {
+        let (g, t) = tape_for("gradient");
+        assert_eq!(t.len(), g.n_ops());
+        assert_eq!(t.n_inputs(), 5);
+        assert_eq!(t.n_outputs(), 1);
+        // slots = inputs + consts + ops.
+        assert_eq!(t.n_slots(), 5 + t.consts.len() + t.len());
+        // Slot indices strictly increase along the tape.
+        for op in &t.ops {
+            assert!(op.a < op.dst && op.b < op.dst);
+        }
+    }
+
+    #[test]
+    fn tape_drops_bypasses_relative_to_context() {
+        // chebyshev's deep chain is bypass-heavy: 13 context instruction
+        // words but only 7 arithmetic ops reach the tape.
+        let (g, t) = tape_for("chebyshev");
+        let p = Program::schedule(&g).unwrap();
+        let ctx_words = p.context_image().unwrap().n_instrs();
+        assert_eq!(t.len(), 7);
+        assert_eq!(ctx_words, 13);
+        assert!(t.len() <= ctx_words);
+    }
+
+    #[test]
+    fn matches_oracle_on_every_benchmark() {
+        let mut rng = Rng::new(0x7A9E);
+        for name in bench_suite::all_names() {
+            let (g, t) = tape_for(name);
+            let n_in = g.inputs().len();
+            let rows: Vec<Vec<i32>> = (0..53) // deliberately not a LANES multiple
+                .map(|_| (0..n_in).map(|_| rng.next_i32()).collect())
+                .collect();
+            let got = run(&t, &g, &rows);
+            for (pkt, o) in rows.iter().zip(&got) {
+                assert_eq!(o, &eval(&g, pkt), "{name} diverged on {pkt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn wrapping_extremes_bitexact() {
+        // i32::MIN propagation and (1<<17)^2 wraparound — the edges the
+        // DSP model is also tested against.
+        let (g, t) = tape_for("poly6");
+        let rows = vec![
+            vec![i32::MIN, i32::MAX, -1],
+            vec![1 << 17, 1 << 17, 1 << 17],
+            vec![0, 0, 0],
+            vec![i32::MIN, i32::MIN, i32::MIN],
+        ];
+        let got = run(&t, &g, &rows);
+        for (pkt, o) in rows.iter().zip(&got) {
+            assert_eq!(o, &eval(&g, pkt));
+        }
+    }
+
+    #[test]
+    fn partial_chunks_do_not_leak_stale_lanes() {
+        let (g, t) = tape_for("mibench");
+        // Two passes over the same scratch with different row counts:
+        // stale lanes from the longer pass must not surface.
+        let mut scratch = Vec::new();
+        let long: Vec<Vec<i32>> = (0..LANES + 3).map(|k| vec![k as i32, 2, 3]).collect();
+        let short = vec![vec![9, 9, 9]];
+        let b_long = FlatBatch::from_rows(3, &long);
+        let b_short = FlatBatch::from_rows(3, &short);
+        let mut out = FlatBatch::new(1);
+        t.execute_into(&b_long, &mut scratch, &mut out);
+        let mut out2 = FlatBatch::new(1);
+        t.execute_into(&b_short, &mut scratch, &mut out2);
+        assert_eq!(out2.to_rows(), vec![eval(&g, &short[0])]);
+        assert_eq!(out.n_rows(), LANES + 3);
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_kernels() {
+        let mut scratch = Vec::new();
+        for name in ["poly6", "chebyshev", "gradient"] {
+            let (g, t) = tape_for(name);
+            let n_in = g.inputs().len();
+            let rows = vec![vec![3; n_in], vec![-7; n_in]];
+            let batch = FlatBatch::from_rows(n_in, &rows);
+            let mut out = FlatBatch::new(g.outputs().len());
+            t.execute_into(&batch, &mut scratch, &mut out);
+            for (pkt, o) in rows.iter().zip(out.to_rows().iter()) {
+                assert_eq!(o, &eval(&g, pkt), "{name}");
+            }
+        }
+    }
+}

@@ -17,14 +17,17 @@
 //!   results, plus the SCFU-SCN / Vivado-HLS / related-work baselines
 //!   ([`resources`], [`baseline`]);
 //! * the **execution backend layer** — one [`exec::Backend`] contract
-//!   with three interchangeable substrates: the DFG interpreter, the
-//!   cycle-accurate overlay simulator (with modeled context switching),
-//!   and the PJRT engine over the AOT-compiled (JAX + Pallas) kernels
-//!   ([`exec`], [`runtime`]);
+//!   with four interchangeable substrates: the DFG interpreter, the
+//!   tape-compiled turbo executor (flat op tapes, lane-chunked,
+//!   allocation-free steady state), the cycle-accurate overlay
+//!   simulator (with modeled context switching), and the PJRT engine
+//!   over the AOT-compiled (JAX + Pallas) kernels ([`exec`],
+//!   [`runtime`]);
 //! * the **serving coordinator** — backend-generic fabric workers over
-//!   a shared compiled-kernel registry; runs the full serving stack
-//!   with zero artifacts via `tmfu serve --backend sim`
-//!   ([`coordinator`]);
+//!   a shared compiled-kernel registry, dispatching flat
+//!   [`exec::FlatBatch`] batches from [`exec::KernelId`]-indexed
+//!   queues; runs the full serving stack with zero artifacts via
+//!   `tmfu serve --backend sim` (or `turbo`) ([`coordinator`]);
 //! * **reporting** — regeneration of every table/figure in the paper
 //!   ([`report`], `rust/benches/`).
 

@@ -4,8 +4,8 @@
 //! (`compile`, `export-dfg`), scheduling and inspection (`schedule`,
 //! `table1`, `dot`), cycle-accurate simulation (`simulate`), reports
 //! (`table2`, `table3`, `fig5`, `fig6`, `ctx-switch`, `resources`),
-//! and the serving runtime (`serve --backend {ref,sim,pjrt}`; only the
-//! pjrt backend requires `make artifacts`).
+//! and the serving runtime (`serve --backend {ref,sim,pjrt,turbo}`;
+//! only the pjrt backend requires `make artifacts`).
 
 use std::process::ExitCode;
 use tmfu_overlay::util::cli::Command;
@@ -50,7 +50,7 @@ fn commands() -> Vec<Command> {
         Command::new("serve", "run the serving coordinator (any execution backend)")
             .opt(
                 "backend",
-                "execution backend: ref | sim | pjrt",
+                "execution backend: ref | sim | pjrt | turbo",
                 Some("sim"),
             )
             .opt("artifacts", "artifacts directory (pjrt backend)", Some("artifacts"))

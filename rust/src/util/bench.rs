@@ -4,7 +4,14 @@
 //! Methodology: warm up for a fixed duration, then run timed batches
 //! until a target measurement time elapses; report mean/p50/min over
 //! per-iteration times with outlier-robust stats from `util::stats`.
+//!
+//! Besides the human-readable report lines, benches can collect
+//! measurements into a [`BenchReport`] and emit machine-readable JSON
+//! (`--json <path>`, see [`json_path_from_args`]) — the perf
+//! trajectory files (`BENCH_PR2.json`, ...) checked in at the repo
+//! root are produced this way by `make bench`.
 
+use crate::util::json::{self, Json};
 use crate::util::stats::Samples;
 use std::time::{Duration, Instant};
 
@@ -24,6 +31,24 @@ impl Measurement {
     /// items/second, if items_per_iter was set.
     pub fn throughput(&self) -> Option<f64> {
         self.items_per_iter.map(|n| n / (self.mean_ns * 1e-9))
+    }
+
+    /// Machine-readable form (one object per measurement).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", json::s(&self.name)),
+            ("iters", json::i(self.iters as i64)),
+            ("mean_ns", json::f(self.mean_ns)),
+            ("p50_ns", json::f(self.p50_ns)),
+            ("min_ns", json::f(self.min_ns)),
+        ];
+        if let Some(items) = self.items_per_iter {
+            pairs.push(("items_per_iter", json::f(items)));
+        }
+        if let Some(tput) = self.throughput() {
+            pairs.push(("items_per_s", json::f(tput)));
+        }
+        json::obj(pairs)
     }
 
     pub fn report_line(&self) -> String {
@@ -139,6 +164,67 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Collects measurements plus free-form metadata for the `--json`
+/// mode. The emitted shape is stable:
+/// `{ meta: {...}, measurements: [Measurement::to_json(), ...] }`.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    meta: Vec<(String, Json)>,
+    measurements: Vec<Measurement>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    /// Attach a metadata value (harness id, batch sizes, headline
+    /// ratios...). Later writes with the same key win.
+    pub fn set_meta(&mut self, key: &str, value: Json) {
+        self.meta.retain(|(k, _)| k != key);
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Record a measurement (also returned untouched for printing).
+    pub fn record(&mut self, m: Measurement) -> &Measurement {
+        self.measurements.push(m);
+        self.measurements.last().unwrap()
+    }
+
+    /// Find a recorded measurement by name.
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.measurements.iter().find(|m| m.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let meta = json::obj(self.meta.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+        json::obj(vec![
+            ("meta", meta),
+            (
+                "measurements",
+                json::arr(self.measurements.iter().map(Measurement::to_json)),
+            ),
+        ])
+    }
+
+    /// Write the report as pretty JSON.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+}
+
+/// Parse `--json <path>` from a bench binary's argument list
+/// (`cargo bench --bench <name> -- --json out.json`). Returns `None`
+/// when the flag is absent, so benches stay print-only by default.
+pub fn json_path_from_args() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
 /// Section header printer used by all bench binaries for consistent
 /// greppable output.
 pub fn section(title: &str) {
@@ -171,6 +257,28 @@ mod tests {
         let t = m.throughput().unwrap();
         assert!(t > 0.0);
         assert!(m.report_line().contains("items/s"));
+    }
+
+    #[test]
+    fn bench_report_emits_stable_json() {
+        let mut r = BenchReport::new();
+        r.set_meta("harness", json::s("test"));
+        r.set_meta("batch", json::i(1024));
+        r.set_meta("harness", json::s("test2")); // later write wins
+        let b = Bench::quick();
+        r.record(b.run_with_items("noop", 10.0, || 1));
+        let j = r.to_json();
+        assert_eq!(j.get("meta").get("harness").as_str(), Some("test2"));
+        assert_eq!(j.get("meta").get("batch").as_i64(), Some(1024));
+        let ms = j.get("measurements").as_arr().unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].get("name").as_str(), Some("noop"));
+        assert!(ms[0].get("items_per_s").as_f64().unwrap() > 0.0);
+        assert!(r.get("noop").is_some());
+        assert!(r.get("nonesuch").is_none());
+        // Round-trips through the parser.
+        let parsed = json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed, j);
     }
 
     #[test]

@@ -83,7 +83,16 @@ fn fuzz_full_chain_against_oracle() {
         let packets: Vec<Vec<i32>> = (0..5)
             .map(|_| (0..n_in).map(|_| rng.range_i64(-10_000, 10_000) as i32).collect())
             .collect();
-        let want = eval_batch(&g, &packets);
+        // The flat batch oracle (row-major in, row-major out).
+        let flat: Vec<i32> = packets.iter().flatten().copied().collect();
+        let n_out = g.outputs().len();
+        let want: Vec<Vec<i32>> = eval_batch(&g, &flat)
+            .chunks(n_out)
+            .map(<[i32]>::to_vec)
+            .collect();
+        for (pkt, w) in packets.iter().zip(&want) {
+            assert_eq!(w, &eval(&g, pkt), "flat eval_batch diverged from eval");
+        }
 
         let mut pl = Pipeline::new(&p, 4096).unwrap();
         let got = pl.run(&packets, 100_000).unwrap();
@@ -253,7 +262,7 @@ fn prop_normalize_idempotent_on_benchmarks() {
 /// the coordinator.
 #[test]
 fn prop_backend_equivalence_ref_vs_sim() {
-    use tmfu_overlay::exec::{Backend, KernelRegistry, RefBackend, SimBackend};
+    use tmfu_overlay::exec::{Backend, FlatBatch, KernelRegistry, RefBackend, SimBackend};
     let reg = KernelRegistry::compile_bench_suite().unwrap();
     for name in tmfu_overlay::bench_suite::all_names() {
         let kernel = reg.get(name).unwrap().clone();
@@ -264,17 +273,18 @@ fn prop_backend_equivalence_ref_vs_sim() {
             &format!("backend-equiv-{name}"),
             |vals| {
                 // Interpret the flat value vector as whole packets.
-                let packets: Vec<Vec<i32>> = vals
-                    .chunks_exact(n_in)
-                    .map(|c| c.iter().map(|&v| v as i32).collect())
-                    .collect();
-                if packets.is_empty() {
+                let whole = vals.len() / n_in * n_in;
+                if whole == 0 {
                     return Ok(());
+                }
+                let mut batch = FlatBatch::with_capacity(n_in, whole / n_in);
+                for row in vals[..whole].chunks_exact(n_in) {
+                    batch.push_iter(row.iter().map(|&v| v as i32));
                 }
                 let mut rb = RefBackend::new();
                 let mut sb = SimBackend::new(1, 4096).map_err(|e| e.to_string())?;
-                let r = rb.execute(&kernel, &packets).map_err(|e| e.to_string())?;
-                let s = sb.execute(&kernel, &packets).map_err(|e| e.to_string())?;
+                let r = rb.execute(&kernel, &batch).map_err(|e| e.to_string())?;
+                let s = sb.execute(&kernel, &batch).map_err(|e| e.to_string())?;
                 prop_assert(
                     r.outputs == s.outputs,
                     "cycle-accurate sim diverged from the interpreter",
@@ -282,6 +292,125 @@ fn prop_backend_equivalence_ref_vs_sim() {
             },
         );
     }
+}
+
+/// PR 2 oracle edge: the tape-compiled turbo backend must be
+/// bit-identical to the interpreter across the full benchmark suite on
+/// full-range wrapping batches — including the adversarial corners
+/// (`i32::MIN` propagation, `(1 << 17)²` multiply wraparound) that are
+/// seeded into every case alongside the random rows.
+#[test]
+fn prop_backend_equivalence_ref_vs_turbo() {
+    use tmfu_overlay::exec::{Backend, FlatBatch, KernelRegistry, RefBackend, TurboBackend, LANES};
+    let reg = KernelRegistry::compile_bench_suite().unwrap();
+    for name in tmfu_overlay::bench_suite::all_names() {
+        let kernel = reg.get(name).unwrap().clone();
+        let n_in = kernel.n_inputs;
+        // Batch lengths straddle the lane-chunk boundary so partial
+        // chunks are exercised on every kernel.
+        check(
+            25,
+            gen_vec(gen_i64(i32::MIN as i64, i32::MAX as i64), 0, n_in * (LANES + 3)),
+            &format!("backend-equiv-turbo-{name}"),
+            |vals| {
+                let mut batch = FlatBatch::new(n_in);
+                // Deterministic wrapping edges ride along in every case.
+                batch.push_iter((0..n_in).map(|_| i32::MIN));
+                batch.push_iter((0..n_in).map(|_| 1 << 17));
+                batch.push_iter((0..n_in).map(|i| if i % 2 == 0 { i32::MAX } else { -1 }));
+                let whole = vals.len() / n_in * n_in;
+                for row in vals[..whole].chunks_exact(n_in) {
+                    batch.push_iter(row.iter().map(|&v| v as i32));
+                }
+                let mut rb = RefBackend::new();
+                let mut tb = TurboBackend::new();
+                let r = rb.execute(&kernel, &batch).map_err(|e| e.to_string())?;
+                let t = tb.execute(&kernel, &batch).map_err(|e| e.to_string())?;
+                prop_assert(
+                    r.outputs == t.outputs,
+                    "turbo tape diverged from the interpreter",
+                )
+            },
+        );
+    }
+}
+
+/// Turbo equivalence on *arbitrary* kernels, not just the suite: fuzzed
+/// sources go through frontend -> CompiledKernel (schedule + tape) and
+/// the tape must agree with the oracle — including squares of 1 << 17
+/// and i32::MIN, the multiply/add wraparound corners.
+#[test]
+fn fuzz_turbo_tape_against_oracle() {
+    use tmfu_overlay::exec::{Backend, CompiledKernel, FlatBatch, TurboBackend};
+    let mut rng = Rng::new(0x7EA7);
+    let mut tested = 0;
+    for case in 0..50 {
+        let src = random_kernel_source(&mut rng, 3000 + case);
+        let Ok(g) = frontend::compile(&src) else { continue };
+        if g.n_ops() == 0 {
+            continue;
+        }
+        let kernel = match CompiledKernel::compile(g) {
+            Ok(k) => k,
+            Err(e) => {
+                let msg = format!("{e}");
+                assert!(msg.contains("overflow"), "unexpected compile failure: {msg}\n{src}");
+                continue;
+            }
+        };
+        let n_in = kernel.n_inputs;
+        let mut batch = FlatBatch::new(n_in);
+        batch.push_iter((0..n_in).map(|_| i32::MIN));
+        batch.push_iter((0..n_in).map(|_| 1 << 17));
+        for _ in 0..21 {
+            batch.push_iter((0..n_in).map(|_| rng.next_i32()));
+        }
+        let want: Vec<Vec<i32>> = batch.iter().map(|p| eval(&kernel.dfg, p)).collect();
+        let mut tb = TurboBackend::new();
+        let t = tb.execute(&kernel, &batch).unwrap();
+        assert_eq!(t.outputs.to_rows(), want, "case {case} diverged\n{src}");
+        tested += 1;
+    }
+    assert!(tested >= 30, "only {tested} cases exercised");
+}
+
+/// End-to-end spot check: the same workload served through a turbo
+/// coordinator and a sim coordinator returns identical, oracle-exact
+/// results (the serving-layer closure of the three-oracle chain).
+#[test]
+fn turbo_vs_sim_spot_check_through_coordinator() {
+    use tmfu_overlay::coordinator::{Coordinator, CoordinatorConfig};
+    use tmfu_overlay::exec::BackendKind;
+    let mk = |kind| {
+        let mut cfg = CoordinatorConfig::new(kind);
+        cfg.workers = 2;
+        cfg.max_batch = 16;
+        Coordinator::start_with(cfg).unwrap()
+    };
+    let turbo = mk(BackendKind::Turbo);
+    let sim = mk(BackendKind::Sim);
+    let names = tmfu_overlay::bench_suite::all_names();
+    let mut rng = Rng::new(77);
+    let mut jobs = Vec::new();
+    for i in 0..48 {
+        let kernel = names[i % names.len()];
+        let g = &turbo.registry().get(kernel).unwrap().dfg;
+        let inputs: Vec<i32> = (0..g.inputs().len())
+            .map(|_| rng.range_i64(i32::MIN as i64, i32::MAX as i64) as i32)
+            .collect();
+        let want = eval(g, &inputs);
+        let rx_t = turbo.submit(kernel, inputs.clone()).unwrap();
+        let rx_s = sim.submit(kernel, inputs).unwrap();
+        jobs.push((rx_t, rx_s, want));
+    }
+    for (rx_t, rx_s, want) in jobs {
+        let got_t = rx_t.recv().unwrap().unwrap();
+        let got_s = rx_s.recv().unwrap().unwrap();
+        assert_eq!(got_t, want, "turbo diverged from oracle");
+        assert_eq!(got_s, got_t, "sim and turbo coordinators disagree");
+    }
+    turbo.shutdown().unwrap();
+    sim.shutdown().unwrap();
 }
 
 /// Full-suite smoke of the CLI-facing report renderers (they are the

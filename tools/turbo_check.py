@@ -1,0 +1,349 @@
+#!/usr/bin/env python3
+"""Offline mirror of the turbo backend's tape compiler + interpreter.
+
+Replicates, decision for decision, ``exec::Tape::compile`` (stage-walk
+slot assignment: inputs first, constants on first use, one fresh slot
+per op) and the lane-chunked executor in ``exec::tape::execute_into``
+(LANES-wide blocks, stale garbage lanes computed-and-discarded, consts
+loaded once per call), then asserts against the functional oracle:
+
+  * bit-exact agreement on every benchmark kernel for random packets,
+    wrapping corners (``i32::MIN``, ``(1 << 17)²``) and batch sizes
+    that straddle the lane-chunk boundary;
+  * bit-exact agreement on the *same fuzzed kernel stream* the Rust
+    test ``fuzz_turbo_tape_against_oracle`` draws (xoshiro256** seed
+    0x7EA7, case ids 3000+, identical draw order), including the
+    invariant that compilation only ever fails with RF/IM overflow;
+  * slot indices strictly increase along the tape (the race-freedom
+    property the Rust interpreter's split-borrow relies on).
+
+With ``--json <path>`` it also measures the mirror interpreters and
+writes a perf-trajectory file in the same shape as
+``util::bench::BenchReport`` — the toolchain-free stand-in for
+``make bench`` (``meta.harness`` records which harness produced the
+numbers; regenerate with ``make bench`` when a cargo toolchain is
+available).
+
+Run before shipping tape/backend changes when no Rust toolchain is
+available:  python3 tools/turbo_check.py [--json BENCH_PR2.json]
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from gen_dfg_json import (  # noqa: E402
+    KERNELS,
+    Parser,
+    SRC_DIR,
+    apply_op,
+    evaluate,
+    lower,
+    normalize,
+    schedule,
+    timing,
+    tokenize,
+    wrap32,
+)
+from fuzz_check import Rng, random_kernel_source  # noqa: E402
+from sim_check import Pipeline  # noqa: E402
+
+LANES = 16  # exec::tape::LANES
+I32_MIN = -(2**31)
+I32_MAX = 2**31 - 1
+
+
+# ---------------------------------------------------------------------
+# Tape mirror
+# ---------------------------------------------------------------------
+
+def tape_compile(nodes, stages):
+    """Mirror of Tape::compile: returns (ops, consts, outputs, n_inputs,
+    n_slots) with ops as (opname, a_slot, b_slot, dst_slot)."""
+    slot = {}
+    nxt = 0
+    input_ids = [i for i, n in enumerate(nodes) if n["kind"] == "input"]
+    for i in input_ids:
+        slot[i] = nxt
+        nxt += 1
+    consts, ops = [], []
+    for st in stages:
+        for op_id in st["ops"]:
+            n = nodes[op_id]
+            assert n["kind"] == "op"
+            arg_slots = []
+            for a in n["args"]:
+                if a in slot:
+                    arg_slots.append(slot[a])
+                else:
+                    assert nodes[a]["kind"] == "const", f"operand {a} unproduced"
+                    slot[a] = nxt
+                    consts.append((nxt, nodes[a]["value"]))
+                    arg_slots.append(nxt)
+                    nxt += 1
+            dst = nxt
+            nxt += 1
+            slot[op_id] = dst
+            assert arg_slots[0] < dst and arg_slots[1] < dst
+            ops.append((n["op"], arg_slots[0], arg_slots[1], dst))
+    assert ops, "tape with no operations"
+    outputs = []
+    for i, n in enumerate(nodes):
+        if n["kind"] == "output":
+            src = n["args"][0]
+            if src not in slot:
+                # Mirror of the Rust fallback: a const emitted directly
+                # as an output gets a preloaded slot (unreachable via
+                # Program::schedule today, but lowering stays total).
+                assert nodes[src]["kind"] == "const", f"output reads unproduced {src}"
+                slot[src] = nxt
+                consts.append((nxt, nodes[src]["value"]))
+                nxt += 1
+            outputs.append(slot[src])
+    return ops, consts, outputs, len(input_ids), nxt
+
+
+def tape_execute(tape, rows):
+    """Mirror of execute_into: lane-chunked, stale lanes computed and
+    discarded, consts loaded once per call."""
+    ops, consts, outputs, n_in, n_slots = tape
+    scratch = [0] * (n_slots * LANES)
+    for s, v in consts:
+        for l in range(LANES):
+            scratch[s * LANES + l] = v
+    out = []
+    row = 0
+    n = len(rows)
+    while row < n:
+        chunk = min(LANES, n - row)
+        for i in range(n_in):
+            for l in range(chunk):
+                scratch[i * LANES + l] = rows[row + l][i]
+        for opname, a, b, dst in ops:
+            for l in range(LANES):  # full LANES: garbage lanes wrap safely
+                scratch[dst * LANES + l] = apply_op(
+                    opname, scratch[a * LANES + l], scratch[b * LANES + l]
+                )
+        for l in range(chunk):
+            out.append([scratch[s * LANES + l] for s in outputs])
+        row += chunk
+    return out
+
+
+def compile_kernel_source(src):
+    kname, params, body, returns = Parser(tokenize(src)).kernel()
+    nodes = normalize(lower(kname, params, body, returns))
+    return nodes
+
+
+# ---------------------------------------------------------------------
+# Checks
+# ---------------------------------------------------------------------
+
+def check_benchmarks():
+    import random
+
+    rng = random.Random(0x7A9E)
+    for name in KERNELS:
+        with open(os.path.join(SRC_DIR, f"{name}.k")) as f:
+            nodes = compile_kernel_source(f.read())
+        stages, _, _ = schedule(name, nodes)
+        tape = tape_compile(nodes, stages)
+        n_in = tape[3]
+        n_ops = sum(1 for n in nodes if n["kind"] == "op")
+        assert len(tape[0]) == n_ops, f"{name}: tape len {len(tape[0])} != ops {n_ops}"
+        rows = [
+            [rng.randrange(I32_MIN, I32_MAX + 1) for _ in range(n_in)] for _ in range(53)
+        ]
+        rows.append([I32_MIN] * n_in)
+        rows.append([1 << 17] * n_in)
+        rows.append([I32_MAX if i % 2 == 0 else -1 for i in range(n_in)])
+        got = tape_execute(tape, rows)
+        for pkt, o in zip(rows, got):
+            want = evaluate(nodes, pkt)
+            assert o == want, f"{name}: {pkt} -> {o}, oracle {want}"
+        print(f"{name:<10} tape ok: {len(tape[0])} ops, {tape[4]} slots, 56 packets bit-exact")
+
+
+def check_fuzz_stream():
+    """Replay rust/tests/integration.rs::fuzz_turbo_tape_against_oracle:
+    same PRNG, same draw order, same invariants."""
+    rng = Rng(0x7EA7)
+    tested = 0
+    for case in range(50):
+        src = random_kernel_source(rng, 3000 + case)
+        try:
+            nodes = compile_kernel_source(src)
+        except Exception as e:  # the Rust frontend accepts these; mirror must too
+            raise AssertionError(f"case {case}: mirror frontend failed: {e}\n{src}")
+        if sum(1 for n in nodes if n["kind"] == "op") == 0:
+            continue
+        try:
+            stages, _, _ = schedule(f"rand{3000 + case}", nodes)
+        except AssertionError as e:
+            assert "overflow" in str(e), f"case {case}: non-overflow failure: {e}\n{src}"
+            continue
+        tape = tape_compile(nodes, stages)
+        n_in = tape[3]
+        rows = [[I32_MIN] * n_in, [1 << 17] * n_in]
+        for _ in range(21):
+            rows.append([wrap32(rng.next_u64() >> 32) for _ in range(n_in)])
+        got = tape_execute(tape, rows)
+        for pkt, o in zip(rows, got):
+            want = evaluate(nodes, pkt)
+            assert o == want, f"case {case}: {pkt} -> {o}, oracle {want}\n{src}"
+        tested += 1
+    assert tested >= 30, f"only {tested} fuzz cases exercised"
+    print(f"fuzz mirror: {tested}/50 cases pass (tape vs oracle, overflow-only failures)")
+
+
+# ---------------------------------------------------------------------
+# Bench mode (--json): the toolchain-free perf trajectory stand-in
+# ---------------------------------------------------------------------
+
+def measure(name, items_per_iter, fn, min_iters=5, min_time_s=0.5):
+    times = []
+    t_end = time.perf_counter() + min_time_s
+    while len(times) < min_iters or time.perf_counter() < t_end:
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e9)
+    times.sort()
+    mean = sum(times) / len(times)
+    m = {
+        "name": name,
+        "iters": len(times),
+        "mean_ns": mean,
+        "p50_ns": times[len(times) // 2],
+        "min_ns": times[0],
+        "items_per_iter": float(items_per_iter),
+        "items_per_s": items_per_iter / (mean * 1e-9),
+    }
+    print(
+        f"{name:<44} {mean / 1e6:10.3f} ms/iter  "
+        f"{m['items_per_s'] / 1e3:10.1f} kitems/s  (n={len(times)})"
+    )
+    return m
+
+
+def bench(json_path):
+    import random
+
+    try:
+        import numpy as np
+    except ImportError:
+        # Refuse to write a baseline with no turbo measurements (the
+        # speedup would read 0.0 and the CI floor check would reject
+        # the next push) — fail loudly instead.
+        sys.exit("turbo_check --json needs numpy for the turbo mirror; none found")
+    rng = random.Random(3)
+    batch = 1024
+    measurements = []
+    headline = {}
+    for name in ["gradient", "chebyshev", "poly6", "qspline"]:
+        with open(os.path.join(SRC_DIR, f"{name}.k")) as f:
+            nodes = compile_kernel_source(f.read())
+        stages, output_order, _ = schedule(name, nodes)
+        ii, _ = timing(stages)
+        tape = tape_compile(nodes, stages)
+        n_in = tape[3]
+        rows = [
+            [rng.randrange(I32_MIN, I32_MAX + 1) for _ in range(n_in)]
+            for _ in range(batch)
+        ]
+        # ref mirror: per-packet node walk (what RefBackend does).
+        m = measure(
+            f"ref::execute({name}, batch {batch})",
+            batch,
+            lambda: [evaluate(nodes, r) for r in rows],
+            min_time_s=0.3,
+        )
+        measurements.append(m)
+        headline[f"ref:{name}"] = m["items_per_s"]
+        # turbo mirror: the same tape, lanes = whole batch via numpy
+        # (the vectorization the Rust lane loops hand to LLVM).
+        ops, consts, outputs, _, n_slots = tape
+        arr = np.array(rows, dtype=np.int32)  # [batch][n_in]
+        def turbo_run():
+            slots = np.empty((n_slots, batch), dtype=np.int32)
+            for i in range(n_in):
+                slots[i] = arr[:, i]
+            for s, v in consts:
+                slots[s] = v
+            with np.errstate(over="ignore"):
+                for opname, a, b, dst in ops:
+                    if opname == "add":
+                        slots[dst] = slots[a] + slots[b]
+                    elif opname == "sub":
+                        slots[dst] = slots[a] - slots[b]
+                    elif opname == "mul":
+                        slots[dst] = slots[a] * slots[b]
+                    elif opname == "and":
+                        slots[dst] = slots[a] & slots[b]
+                    elif opname == "or":
+                        slots[dst] = slots[a] | slots[b]
+                    else:
+                        slots[dst] = slots[a] ^ slots[b]
+            return slots[outputs]
+        # cross-check the vectorized mirror before timing it
+        out = turbo_run()
+        for i in range(0, batch, 137):
+            want = evaluate(nodes, rows[i])
+            got = [int(out[j, i]) for j in range(len(outputs))]
+            assert got == want, f"{name}: numpy mirror diverged at row {i}"
+        m = measure(
+            f"turbo::execute({name}, batch {batch})", batch, turbo_run, min_time_s=0.3
+        )
+        measurements.append(m)
+        headline[f"turbo:{name}"] = m["items_per_s"]
+        # sim mirror cycles/s (64 packets through the cycle-accurate
+        # python pipeline).
+        sim_rows = [[k] * n_in for k in range(64)]
+        probe = Pipeline(nodes, stages, output_order, ii)
+        probe.run(sim_rows, 1_000_000)
+        cycles = probe.cycle
+        def sim_run():
+            Pipeline(nodes, stages, output_order, ii).run(sim_rows, 1_000_000)
+        measurements.append(
+            measure(f"sim::cycles({name}, 64 packets)", cycles, sim_run, min_time_s=0.3)
+        )
+    speedup = 0.0
+    if "turbo:poly6" in headline and headline.get("ref:poly6"):
+        speedup = headline["turbo:poly6"] / headline["ref:poly6"]
+    report = {
+        "meta": {
+            "harness": (
+                "tools/turbo_check.py (python mirror interpreters; the offline "
+                "image ships no cargo — regenerate with `make bench` for "
+                "cargo-bench numbers; same tape/ref/sim algorithms either way)"
+            ),
+            "batch": batch,
+            "fast_mode": "0",
+            "headline_kernel": "poly6",
+            "turbo_speedup_vs_ref": speedup,
+            "turbo_speedup_floor": 10.0,
+        },
+        "measurements": measurements,
+    }
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(
+        f"\nheadline: turbo/ref on poly6 @ {batch} = {speedup:.1f}x "
+        f"(floor 10x: {'PASS' if speedup >= 10.0 else 'MISS'})"
+    )
+    print(f"wrote {json_path}")
+
+
+def main():
+    check_benchmarks()
+    check_fuzz_stream()
+    print("\ntape mirror matches the functional oracle everywhere")
+    if "--json" in sys.argv:
+        bench(sys.argv[sys.argv.index("--json") + 1])
+
+
+if __name__ == "__main__":
+    main()

@@ -3,11 +3,13 @@
 //!
 //! All three layers compose on a real workload:
 //!   L1/L2 — an execution backend: the cycle-accurate overlay
-//!           simulator (default, zero setup), the DFG interpreter, or
-//!           the AOT-compiled JAX+Pallas kernels over PJRT
-//!           (`make artifacts`);
-//!   L3    — the Rust coordinator: per-kernel batching queues, context-
-//!           affine dispatch, replicated backend-generic fabric workers.
+//!           simulator (default, zero setup), the DFG interpreter, the
+//!           tape-compiled turbo executor, or the AOT-compiled
+//!           JAX+Pallas kernels over PJRT (`make artifacts`);
+//!   L3    — the typed service API: `OverlayService` fabric workers
+//!           behind `Clone + Send` `KernelHandle` sessions with
+//!           pre-resolved kernel ids, bounded admission queues and
+//!           non-blocking `submit -> Pending` replies.
 //!
 //! The workload is a Poisson-arrival stream of requests over a Zipf-ish
 //! kernel mix (a few hot kernels, a long tail — the multi-kernel
@@ -21,10 +23,9 @@
 //! ```
 
 use std::time::{Duration, Instant};
-use tmfu_overlay::bench_suite;
-use tmfu_overlay::coordinator::{Coordinator, CoordinatorConfig};
 use tmfu_overlay::dfg::eval;
 use tmfu_overlay::exec::BackendKind;
+use tmfu_overlay::service::{OverlayService, Pending};
 use tmfu_overlay::util::prng::Rng;
 use tmfu_overlay::util::stats::Samples;
 
@@ -49,14 +50,19 @@ fn main() -> anyhow::Result<()> {
     let max_batch = 32;
 
     println!("starting {pipelines} '{backend}' fabric worker(s)...");
-    let mut cfg = CoordinatorConfig::new(backend);
-    cfg.workers = pipelines;
-    cfg.max_batch = max_batch;
-    let coord = Coordinator::start_with(cfg)?;
+    let service = OverlayService::builder()
+        .backend(backend)
+        .pipelines(pipelines)
+        .max_batch(max_batch)
+        .queue_depth(requests.max(1024)) // closed-loop check: admit all
+        .build()?;
+
+    // One pre-resolved session handle per kernel — names are interned
+    // exactly once, before the clock starts.
+    let handles = service.handles();
 
     // Zipf-ish kernel popularity: gradient & chebyshev hot, tail cold.
-    let names = bench_suite::all_names();
-    let weights: Vec<f64> = (0..names.len()).map(|i| 1.0 / (i + 1) as f64).collect();
+    let weights: Vec<f64> = (0..handles.len()).map(|i| 1.0 / (i + 1) as f64).collect();
     let wsum: f64 = weights.iter().sum();
 
     let mut rng = Rng::new(2016);
@@ -64,18 +70,15 @@ fn main() -> anyhow::Result<()> {
     let mut next_arrival = 0.0f64;
 
     // Collector thread: receives completions as they happen so the
-    // client-side latency is not skewed by collection order.
-    type Job = (
-        std::sync::mpsc::Receiver<tmfu_overlay::coordinator::Reply>,
-        Vec<i32>,
-        Instant,
-    );
+    // client-side latency is not skewed by collection order. `Pending`
+    // replies are Send — they cross threads like any other value.
+    type Job = (Pending, Vec<i32>, Instant);
     let (jobs_tx, jobs_rx) = std::sync::mpsc::channel::<Job>();
     let collector = std::thread::spawn(move || -> anyhow::Result<(Samples, usize)> {
         let mut lat = Samples::new();
         let mut wrong = 0usize;
-        for (rx, want, t0) in jobs_rx {
-            let got = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        for (pending, want, t0) in jobs_rx {
+            let got = pending.wait()?;
             lat.push(t0.elapsed().as_secs_f64() * 1e6);
             if got != want {
                 wrong += 1;
@@ -102,16 +105,15 @@ fn main() -> anyhow::Result<()> {
             }
             pick -= w;
         }
-        let kernel = names[idx];
-        let g = bench_suite::load(kernel)?;
-        let inputs: Vec<i32> = (0..g.inputs().len())
+        let handle = &handles[idx];
+        let inputs: Vec<i32> = (0..handle.arity())
             .map(|_| rng.range_i64(-30_000, 30_000) as i32)
             .collect();
-        let want = eval(&g, &inputs);
+        let want = eval(&handle.compiled().dfg, &inputs);
         let t0 = Instant::now();
-        let rx = coord.submit(kernel, inputs)?;
+        let pending = handle.submit(&inputs)?;
         jobs_tx
-            .send((rx, want, t0))
+            .send((pending, want, t0))
             .map_err(|_| anyhow::anyhow!("collector exited early"))?;
     }
     drop(jobs_tx);
@@ -125,8 +127,8 @@ fn main() -> anyhow::Result<()> {
         requests as f64 / wall.as_secs_f64()
     );
     println!("end-to-end latency: {}", lat.summary("us"));
-    println!("{}", coord.metrics_report());
-    coord.shutdown()?;
+    println!("{}", service.metrics().render());
+    service.shutdown()?;
     anyhow::ensure!(wrong == 0, "{wrong} responses failed verification");
     println!("verification: all {requests} responses match the functional oracle");
     Ok(())

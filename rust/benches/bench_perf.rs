@@ -1,10 +1,13 @@
 //! Performance benchmarks for the serving hot paths:
 //!
 //!   B1   backend packets/s per kernel (ref vs turbo, flat batches;
-//!        sim at a smaller batch — it simulates every fabric cycle)
+//!        sim at a smaller batch — it simulates every fabric cycle),
+//!        plus an allocation audit proving the turbo hot path stays
+//!        allocation-free per packet
 //!   B2   cycle-accurate simulator inner loop (simulated cycles/s)
 //!   B3   scheduler + context + tape generation (compilations/s)
-//!   B4   coordinator dispatch (requests/s end-to-end)
+//!   B4   service dispatch through `KernelHandle` (requests/s
+//!        end-to-end, ids pre-resolved once)
 //!   L2/L1 PJRT batch execution (artifact-gated)
 //!
 //! Run `TMFU_BENCH_FAST=1 cargo bench` for a quick pass. With
@@ -15,15 +18,22 @@
 
 use tmfu_overlay::arch::Pipeline;
 use tmfu_overlay::bench_suite;
-use tmfu_overlay::coordinator::{Coordinator, CoordinatorConfig};
 use tmfu_overlay::exec::{
     Backend, BackendKind, FlatBatch, KernelRegistry, RefBackend, SimBackend, TurboBackend,
 };
 use tmfu_overlay::runtime::Engine;
 use tmfu_overlay::sched::Program;
-use tmfu_overlay::util::bench::{black_box, json_path_from_args, section, Bench, BenchReport};
+use tmfu_overlay::service::{KernelHandle, OverlayService};
+use tmfu_overlay::util::bench::{
+    alloc_count, black_box, json_path_from_args, section, Bench, BenchReport, CountingAlloc,
+};
 use tmfu_overlay::util::json;
 use tmfu_overlay::util::prng::Rng;
+
+/// Count heap allocations so the hot-path audit below can assert the
+/// steady state allocates per *batch*, not per packet.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 /// The headline batch size: large enough to amortize dispatch and let
 /// the turbo backend's lane chunking matter.
@@ -105,6 +115,35 @@ fn main() -> anyhow::Result<()> {
         if speedup >= HEADLINE_FLOOR { "PASS" } else { "MISS" }
     );
 
+    // Allocation audit: in steady state the turbo execute path must
+    // allocate O(1) per *batch* (the output buffer), never per packet.
+    // Single-threaded here — no service workers are running yet.
+    {
+        let k = reg.get(HEADLINE_KERNEL).unwrap().clone();
+        let mut rng2 = Rng::new(17);
+        let batch = random_batch(&mut rng2, k.n_inputs, BATCH);
+        let mut tb = TurboBackend::new();
+        for _ in 0..3 {
+            black_box(tb.execute(&k, black_box(&batch)).unwrap());
+        }
+        let audit_iters = 16u64;
+        let before = alloc_count();
+        for _ in 0..audit_iters {
+            black_box(tb.execute(&k, black_box(&batch)).unwrap());
+        }
+        let per_batch = (alloc_count() - before) as f64 / audit_iters as f64;
+        println!(
+            "allocation audit: {per_batch:.1} heap allocations per {BATCH}-packet \
+             turbo batch (bound: < 1 per 32 packets)"
+        );
+        report.set_meta("turbo_allocs_per_batch", json::f(per_batch));
+        assert!(
+            per_batch < (BATCH / 32) as f64,
+            "turbo hot path allocated {per_batch:.1} times per {BATCH}-packet batch — \
+             the allocation-free steady state regressed"
+        );
+    }
+
     section("B2 cycle-accurate simulator (simulated cycles/s)");
     for name in ["gradient", "chebyshev", "poly6"] {
         let g = bench_suite::load(name)?;
@@ -138,25 +177,29 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", report.record(m).report_line());
 
-    section("B4 coordinator dispatch (zero artifacts)");
+    section("B4 service dispatch through KernelHandle (zero artifacts)");
     for kind in [BackendKind::Sim, BackendKind::Turbo] {
-        let mut cfg = CoordinatorConfig::new(kind);
-        cfg.workers = 2;
-        cfg.max_batch = 32;
-        let coord = Coordinator::start_with(cfg)?;
-        let names = bench_suite::all_names();
-        let m = b.run_with_items(&format!("coordinator::call x32 ({kind})"), 32.0, || {
+        let service = OverlayService::builder()
+            .backend(kind)
+            .pipelines(2)
+            .max_batch(32)
+            .build()?;
+        // Sessions resolve names and arities exactly once, outside the
+        // measured loop; inputs are pre-built so the measured path is
+        // submit + dispatch + reply.
+        let handles: Vec<KernelHandle> = service.handles();
+        let inputs: Vec<Vec<i32>> = handles.iter().map(|h| vec![1i32; h.arity()]).collect();
+        let m = b.run_with_items(&format!("service::call x32 ({kind})"), 32.0, || {
             for i in 0..32usize {
-                let kernel = names[i % names.len()];
-                let n_in = coord.registry().get(kernel).unwrap().n_inputs;
-                coord.call(kernel, vec![1i32; n_in]).unwrap();
+                let j = i % handles.len();
+                handles[j].call(black_box(&inputs[j])).unwrap();
             }
         });
         println!(
             "{}   (items = requests, serial round-trip)",
             report.record(m).report_line()
         );
-        coord.shutdown()?;
+        service.shutdown()?;
     }
 
     if let Some(path) = json_path_from_args() {
@@ -191,18 +234,23 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}   (items = packets)", m.report_line());
 
-    section("L3.d coordinator end-to-end, pjrt backend (2 workers, mixed kernels)");
-    let coord = Coordinator::start(artifacts.to_str().unwrap(), 2, 32)?;
-    let names = bench_suite::all_names();
-    let m = b.run_with_items("coordinator::call x32 (pjrt, round-robin)", 32.0, || {
+    section("L3.d service end-to-end, pjrt backend (2 workers, mixed kernels)");
+    let service = OverlayService::builder()
+        .backend(BackendKind::Pjrt)
+        .artifacts_dir(artifacts.as_path())
+        .pipelines(2)
+        .max_batch(32)
+        .build()?;
+    let handles: Vec<KernelHandle> = service.handles();
+    let inputs: Vec<Vec<i32>> = handles.iter().map(|h| vec![1i32; h.arity()]).collect();
+    let m = b.run_with_items("service::call x32 (pjrt, round-robin)", 32.0, || {
         for i in 0..32usize {
-            let kernel = names[i % names.len()];
-            let n_in = coord.registry().get(kernel).unwrap().n_inputs;
-            coord.call(kernel, vec![1i32; n_in]).unwrap();
+            let j = i % handles.len();
+            handles[j].call(black_box(&inputs[j])).unwrap();
         }
     });
     println!("{}   (items = requests, serial round-trip)", m.report_line());
-    println!("\n{}", coord.metrics_report());
-    coord.shutdown()?;
+    println!("\n{}", service.metrics().render());
+    service.shutdown()?;
     Ok(())
 }

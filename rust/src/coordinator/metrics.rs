@@ -1,6 +1,12 @@
-//! Serving metrics: wall-clock latency/throughput plus the *simulated
-//! fabric timeline* (what the overlay hardware would have spent, using
-//! the paper's II/latency/context-switch models at 300 MHz).
+//! Raw serving counters: wall-clock latency/throughput plus the
+//! *simulated fabric timeline* (what the overlay hardware would have
+//! spent, using the paper's II/latency/context-switch models at
+//! 300 MHz).
+//!
+//! This is the engine-side accumulator only. The client-facing, typed
+//! view — percentiles computed, JSON-serializable, rendered for the
+//! CLI — is [`crate::service::MetricsSnapshot`], built from this
+//! struct under the metrics lock.
 
 use crate::util::stats::Samples;
 use std::collections::BTreeMap;
@@ -9,6 +15,10 @@ use std::time::Duration;
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub completed: u64,
+    /// Requests refused by admission control (bounded queues).
+    pub rejected: u64,
+    /// Admitted requests whose execution failed (replied `Err`).
+    pub failed: u64,
     pub batches: u64,
     pub batch_size_sum: u64,
     pub context_switches: u64,
@@ -43,54 +53,25 @@ impl Metrics {
         self.fabric_busy_us += exec_us_sim;
     }
 
+    /// Count `n` admission-control rejections.
+    pub fn record_rejected(&mut self, n: u64) {
+        self.rejected += n;
+    }
+
+    /// Count `n` admitted requests that failed in execution. Kept
+    /// separate from [`Self::record_batch`] so failed requests appear
+    /// in exactly one counter (`admitted == completed + failed`) and
+    /// never as a phantom zero-size batch.
+    pub fn record_failed(&mut self, n: u64) {
+        self.failed += n;
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
         } else {
             self.batch_size_sum as f64 / self.batches as f64
         }
-    }
-
-    pub fn render(&mut self) -> String {
-        let wall_s = self.wall.as_secs_f64().max(1e-9);
-        let mut s = String::new();
-        s.push_str(&format!(
-            "requests completed:   {} in {:.3}s ({:.0} req/s wall)\n",
-            self.completed,
-            wall_s,
-            self.completed as f64 / wall_s
-        ));
-        s.push_str(&format!(
-            "batches:              {} (mean size {:.1})\n",
-            self.batches,
-            self.mean_batch_size()
-        ));
-        s.push_str(&format!(
-            "context switches:     {} ({:.2} us simulated switch time total)\n",
-            self.context_switches, self.fabric_switch_us
-        ));
-        s.push_str(&format!(
-            "simulated fabric busy: {:.1} us ({:.2}% of wall)\n",
-            self.fabric_busy_us,
-            self.fabric_busy_us / (wall_s * 1e6) * 100.0
-        ));
-        if !self.latency_us.is_empty() {
-            s.push_str(&format!("request latency:      {}\n", self.latency_us.summary("us")));
-        }
-        if !self.queue_wait_us.is_empty() {
-            s.push_str(&format!("queue wait:           {}\n", self.queue_wait_us.summary("us")));
-        }
-        s.push_str("per-kernel requests:  ");
-        s.push_str(
-            &self
-                .per_kernel
-                .iter()
-                .map(|(k, v)| format!("{k}={v}"))
-                .collect::<Vec<_>>()
-                .join(" "),
-        );
-        s.push('\n');
-        s
     }
 }
 
@@ -111,13 +92,15 @@ mod tests {
     }
 
     #[test]
-    fn renders() {
+    fn records_rejections_and_failures() {
         let mut m = Metrics::default();
-        m.wall = Duration::from_millis(100);
-        m.record_batch("k", 8, true, 0.2, 3.0);
-        m.latency_us.push(120.0);
-        let s = m.render();
-        assert!(s.contains("requests completed:   8"));
-        assert!(s.contains("k=8"));
+        m.record_rejected(1);
+        m.record_rejected(3);
+        m.record_failed(2);
+        assert_eq!(m.rejected, 4);
+        assert_eq!(m.failed, 2);
+        // Neither path touches the success-side counters.
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.batches, 0);
     }
 }

@@ -1,30 +1,43 @@
-//! L3 serving coordinator (the software analogue of the paper's Fig. 4
+//! L3 serving engine (the software analogue of the paper's Fig. 4
 //! system: ARM-side runtime managing hardware tasks on replicated
 //! overlay pipelines).
 //!
+//! This module is **crate-private**: the public client surface is
+//! [`crate::service`] (`OverlayService` / `KernelHandle`), which owns
+//! an [`Engine`] and talks to it through the typed submit ports below.
+//! Nothing outside the crate constructs an engine or pushes a request
+//! directly.
+//!
 //! Architecture (std threads + channels; tokio is unavailable offline):
 //!
-//! * callers `submit()` requests (kernel name + input packet) and get a
-//!   completion channel; the name is interned to a dense
-//!   [`KernelId`](exec::KernelId) at ingress so nothing downstream
-//!   allocates or compares strings;
-//! * a shared [`queue::QueueSet`] holds per-kernel FIFOs indexed by
-//!   kernel id;
+//! * the service layer submits requests through [`Shared::submit`] /
+//!   [`Shared::submit_batch`] as (dense [`KernelId`](exec::KernelId),
+//!   input row) pairs — names were interned once when the client's
+//!   `KernelHandle` was created, so nothing here allocates or compares
+//!   strings;
+//! * a shared [`queue::QueueSet`] holds **bounded** per-kernel FIFOs
+//!   indexed by kernel id; a full queue refuses the request at the
+//!   door ([`SubmitRejection::Full`]) — backpressure is explicit, not
+//!   implicit queue growth;
 //! * each **fabric worker** thread owns a `Box<dyn Backend>` — the
 //!   interpreter, the tape-compiled turbo executor, the cycle-accurate
 //!   overlay simulator, or the PJRT engine ([`crate::exec`]); backends
 //!   are built inside the worker thread because the PJRT client is not
 //!   `Send` (one worker ≙ one overlay pipeline replica);
 //! * kernels are compiled **once** into a shared
-//!   [`Arc<KernelRegistry>`](exec::KernelRegistry) — schedule, timing,
-//!   context image and op tape are no longer recomputed per worker;
+//!   [`Arc<KernelRegistry>`](exec::KernelRegistry) owned by the
+//!   service builder — schedule, timing, context image and op tape are
+//!   never recomputed per worker;
 //! * workers pull context-affine batches into a **reused
 //!   [`FlatBatch`](exec::FlatBatch) buffer** — the request side of the
 //!   dispatch loop performs no per-packet allocation in steady state
-//!   (replies still cost one `Vec` each: the `Reply` channel contract
-//!   hands each caller an owned row) — charge the modeled context
-//!   switch cost when they change kernels, execute through their
-//!   backend, and reply;
+//!   (replies still cost one `Vec` each: the [`Reply`] channel
+//!   contract hands each caller an owned row) — charge the modeled
+//!   context switch cost when they change kernels, execute through
+//!   their backend, and reply;
+//! * [`Engine::shutdown`] **drains**: the flag stops admission, but
+//!   workers keep taking batches until every queue is empty before
+//!   exiting, so every admitted request gets its reply;
 //! * metrics capture wall-clock latency plus the simulated 300 MHz
 //!   fabric timeline (II model + context-switch model; the sim backend
 //!   reports *measured* fabric cycles instead of the model).
@@ -32,10 +45,8 @@
 pub mod metrics;
 pub mod queue;
 
-use crate::bench_suite;
-use crate::exec::{self, BackendConfig, BackendKind, FlatBatch, KernelId, KernelRegistry};
+use crate::exec::{self, BackendKind, ExecError, FlatBatch, KernelId, KernelRegistry};
 use crate::resources::SYSTEM_CLOCK_MHZ;
-use crate::util::prng::Rng;
 use anyhow::{Context, Result};
 use metrics::Metrics;
 use queue::{Pending, QueueSet};
@@ -45,12 +56,27 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Instant;
 
-/// Completion message for one request.
-pub type Reply = Result<Vec<i32>, String>;
+/// Completion message for one request. Engine-level errors speak
+/// [`ExecError`]; the service layer converts to `ServiceError` at the
+/// client boundary.
+pub type Reply = Result<Vec<i32>, ExecError>;
 
 type Token = mpsc::Sender<Reply>;
 
-struct Shared {
+/// Why a submit was refused at the door (before any queueing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitRejection {
+    /// The engine is shut down (or draining) — no new admissions.
+    ShutDown,
+    /// The kernel's queue is at its depth limit.
+    Full { queued: usize, limit: usize },
+}
+
+/// State shared between the submit ports, the workers and the engine
+/// handle. The service layer's `KernelHandle`s hold an `Arc<Shared>`,
+/// which is what makes them `Clone + Send` sessions independent of the
+/// `OverlayService` value itself.
+pub struct Shared {
     queues: Mutex<QueueState>,
     cv: Condvar,
     metrics: Mutex<Metrics>,
@@ -61,83 +87,152 @@ struct QueueState {
     shutdown: bool,
 }
 
-/// Coordinator construction parameters.
+impl Shared {
+    /// Submit one pre-validated request (shape checks happen in the
+    /// service layer, which owns the kernel's arity). The reply arrives
+    /// on the returned channel.
+    pub fn submit(
+        &self,
+        id: KernelId,
+        inputs: Vec<i32>,
+    ) -> Result<mpsc::Receiver<Reply>, SubmitRejection> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.queues.lock().unwrap();
+            if st.shutdown {
+                return Err(SubmitRejection::ShutDown);
+            }
+            let pending = Pending {
+                inputs,
+                enqueued: Instant::now(),
+                token: tx,
+            };
+            if st.qs.try_push(id, pending).is_err() {
+                let queued = st.qs.queued_for(id);
+                let limit = st.qs.depth();
+                drop(st);
+                self.metrics.lock().unwrap().record_rejected(1);
+                return Err(SubmitRejection::Full { queued, limit });
+            }
+        }
+        self.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit a whole kernel-affine batch atomically: either every row
+    /// is admitted (one receiver per row, in row order) or none is —
+    /// a half-admitted batch would make `call_batch` semantics
+    /// unobservable under backpressure.
+    pub fn submit_batch(
+        &self,
+        id: KernelId,
+        batch: &FlatBatch,
+    ) -> Result<Vec<mpsc::Receiver<Reply>>, SubmitRejection> {
+        let n = batch.n_rows();
+        let mut rxs = Vec::with_capacity(n);
+        {
+            let mut st = self.queues.lock().unwrap();
+            if st.shutdown {
+                return Err(SubmitRejection::ShutDown);
+            }
+            let queued = st.qs.queued_for(id);
+            let limit = st.qs.depth();
+            if queued + n > limit {
+                drop(st);
+                self.metrics.lock().unwrap().record_rejected(n as u64);
+                return Err(SubmitRejection::Full { queued, limit });
+            }
+            let now = Instant::now();
+            for row in batch.iter() {
+                let (tx, rx) = mpsc::channel();
+                let pending = Pending {
+                    inputs: row.to_vec(),
+                    enqueued: now,
+                    token: tx,
+                };
+                if st.qs.try_push(id, pending).is_err() {
+                    unreachable!("batch admission capacity checked above");
+                }
+                rxs.push(rx);
+            }
+        }
+        self.cv.notify_all();
+        Ok(rxs)
+    }
+
+    /// Whether the engine has stopped admitting requests.
+    pub fn is_shut_down(&self) -> bool {
+        self.queues.lock().unwrap().shutdown
+    }
+}
+
+/// Engine construction parameters (filled in by the service builder).
 #[derive(Debug, Clone)]
-pub struct CoordinatorConfig {
+pub struct EngineConfig {
     /// Execution substrate for every worker.
     pub backend: BackendKind,
     /// AOT artifacts directory (PJRT backend only).
-    pub artifacts_dir: String,
+    pub artifacts_dir: PathBuf,
     /// Fabric workers (overlay pipeline replicas at the serving level).
     pub workers: usize,
     /// Maximum batch a worker takes per dispatch.
     pub max_batch: usize,
+    /// Per-kernel queue bound (admission control).
+    pub queue_depth: usize,
     /// Pipeline replicas inside each sim-backend overlay (Fig. 4).
     pub sim_replicas: usize,
+    /// FIFO capacity of each simulated pipeline.
+    pub sim_fifo_capacity: usize,
+    /// Pre-compiled kernels, shared by every worker.
+    pub registry: Arc<KernelRegistry>,
 }
 
-impl CoordinatorConfig {
-    pub fn new(backend: BackendKind) -> CoordinatorConfig {
-        CoordinatorConfig {
-            backend,
-            artifacts_dir: "artifacts".to_string(),
-            workers: 1,
-            max_batch: 16,
-            sim_replicas: 1,
-        }
-    }
-}
-
-/// The coordinator handle.
-pub struct Coordinator {
+/// The serving engine: worker threads + shared queues behind
+/// [`crate::service::OverlayService`].
+pub struct Engine {
     shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<Result<()>>>,
     registry: Arc<KernelRegistry>,
     backend: BackendKind,
+    n_workers: usize,
+    queue_depth: usize,
     started: Instant,
 }
 
-impl Coordinator {
-    /// Start a backend-generic coordinator.
-    pub fn start_with(cfg: CoordinatorConfig) -> Result<Coordinator> {
+impl Engine {
+    /// Start workers over an already-compiled registry.
+    pub fn start(cfg: EngineConfig) -> Result<Engine> {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
         anyhow::ensure!(cfg.max_batch >= 1, "need a positive max batch");
-        // Compile every kernel once; workers share the registry.
-        let registry = Arc::new(KernelRegistry::compile_bench_suite()?);
+        anyhow::ensure!(cfg.queue_depth >= 1, "need a positive queue depth");
         // Fail fast when an artifact-backed substrate cannot possibly
         // start (workers would all error after an expensive spawn).
         if cfg.backend.needs_artifacts() {
             anyhow::ensure!(
-                PathBuf::from(&cfg.artifacts_dir).join("manifest.json").exists(),
+                cfg.artifacts_dir.join("manifest.json").exists(),
                 "artifacts not found in '{}' — run `make artifacts`",
-                cfg.artifacts_dir
+                cfg.artifacts_dir.display()
             );
         }
+        let registry = Arc::clone(&cfg.registry);
         let shared = Arc::new(Shared {
             queues: Mutex::new(QueueState {
-                qs: QueueSet::new(registry.len()),
+                qs: QueueSet::new(registry.len(), cfg.queue_depth),
                 shutdown: false,
             }),
             cv: Condvar::new(),
             metrics: Mutex::new(Metrics::default()),
         });
-        let mut backend_cfg = BackendConfig::new(cfg.backend);
-        backend_cfg.artifacts_dir = PathBuf::from(&cfg.artifacts_dir);
-        backend_cfg.sim_replicas = cfg.sim_replicas;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut workers = Vec::new();
         for wid in 0..cfg.workers {
             let shared = Arc::clone(&shared);
-            let registry = Arc::clone(&registry);
-            let backend_cfg = backend_cfg.clone();
+            let cfg = cfg.clone();
             let ready = ready_tx.clone();
-            let max_batch = cfg.max_batch;
             workers.push(
                 thread::Builder::new()
                     .name(format!("fabric-{wid}"))
-                    .spawn(move || {
-                        worker_loop(wid, backend_cfg, shared, registry, max_batch, ready)
-                    })?,
+                    .spawn(move || worker_loop(wid, cfg, shared, ready))?,
             );
         }
         drop(ready_tx);
@@ -149,28 +244,20 @@ impl Coordinator {
                 .context("worker died during startup")?
                 .map_err(|e| anyhow::anyhow!(e))?;
         }
-        Ok(Coordinator {
+        Ok(Engine {
             shared,
             workers,
             registry,
             backend: cfg.backend,
+            n_workers: cfg.workers,
+            queue_depth: cfg.queue_depth,
             started: Instant::now(),
         })
     }
 
-    /// Back-compat shorthand: `n_workers` PJRT workers over the
-    /// artifacts directory (the pre-backend-layer entry point).
-    pub fn start(artifacts_dir: &str, n_workers: usize, max_batch: usize) -> Result<Coordinator> {
-        let mut cfg = CoordinatorConfig::new(BackendKind::Pjrt);
-        cfg.artifacts_dir = artifacts_dir.to_string();
-        cfg.workers = n_workers;
-        cfg.max_batch = max_batch;
-        Coordinator::start_with(cfg)
-    }
-
-    /// The execution substrate this coordinator serves through.
-    pub fn backend(&self) -> BackendKind {
-        self.backend
+    /// The submit-port state (what `KernelHandle`s hold).
+    pub fn shared(&self) -> &Arc<Shared> {
+        &self.shared
     }
 
     /// The shared compiled-kernel registry.
@@ -178,63 +265,36 @@ impl Coordinator {
         &self.registry
     }
 
-    /// Submit one request; the reply arrives on the returned channel.
-    /// Shape errors (unknown kernel, wrong arity) are rejected here,
-    /// before the request can be co-batched with valid ones — a
-    /// malformed request must never fail its batch neighbours. The
-    /// kernel name is interned here; past this point the request is a
-    /// `KernelId` and a flat input row.
-    pub fn submit(&self, kernel: &str, inputs: Vec<i32>) -> Result<mpsc::Receiver<Reply>> {
-        let Some(id) = self.registry.id_of(kernel) else {
-            anyhow::bail!("{}", exec::ExecError::UnknownKernel(kernel.to_string()));
-        };
-        let k = self.registry.kernel(id).expect("interned id resolves");
-        anyhow::ensure!(
-            inputs.len() == k.n_inputs,
-            "{}",
-            exec::ExecError::WrongArity {
-                kernel: kernel.to_string(),
-                expected: k.n_inputs,
-                got: inputs.len(),
-            }
-        );
-        let (tx, rx) = mpsc::channel();
-        {
-            let mut st = self.shared.queues.lock().unwrap();
-            anyhow::ensure!(!st.shutdown, "coordinator shut down");
-            st.qs.push(
-                id,
-                Pending {
-                    inputs,
-                    enqueued: Instant::now(),
-                    token: tx,
-                },
-            );
-        }
-        self.shared.cv.notify_one();
-        Ok(rx)
+    /// The execution substrate this engine serves through.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
-    /// Convenience: submit and block for the reply.
-    pub fn call(&self, kernel: &str, inputs: Vec<i32>) -> Result<Vec<i32>> {
-        let rx = self.submit(kernel, inputs)?;
-        rx.recv()
-            .context("worker dropped")?
-            .map_err(|e| anyhow::anyhow!(e))
+    /// Fabric workers serving this engine.
+    pub fn workers(&self) -> usize {
+        self.n_workers
     }
 
-    /// Snapshot + render current metrics.
-    pub fn metrics_report(&self) -> String {
+    /// Per-kernel admission bound.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Run `f` over the raw metrics under the lock, with `wall`
+    /// refreshed. The service layer uses this to build its typed
+    /// snapshot without the engine depending on the service types.
+    pub fn with_metrics<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
         let mut m = self.shared.metrics.lock().unwrap();
         m.wall = self.started.elapsed();
-        m.render()
+        f(&mut m)
     }
 
     pub fn completed(&self) -> u64 {
         self.shared.metrics.lock().unwrap().completed
     }
 
-    /// Drain queues and stop workers.
+    /// Stop admitting, drain every queue, stop workers. Admitted
+    /// requests are completed (replied to) before workers exit.
     pub fn shutdown(self) -> Result<()> {
         {
             let mut st = self.shared.queues.lock().unwrap();
@@ -251,16 +311,19 @@ impl Coordinator {
 
 fn worker_loop(
     _wid: usize,
-    backend_cfg: BackendConfig,
+    cfg: EngineConfig,
     shared: Arc<Shared>,
-    registry: Arc<KernelRegistry>,
-    max_batch: usize,
     ready: mpsc::Sender<Result<(), String>>,
 ) -> Result<()> {
     // Each worker owns its backend (PJRT clients are not Send; sim
     // pipelines are stateful). This mirrors per-pipeline configuration
     // BRAMs in Fig. 4.
-    let mut backend = match exec::make_backend(&backend_cfg) {
+    let mut backend = match exec::make_backend(
+        cfg.backend,
+        &cfg.artifacts_dir,
+        cfg.sim_replicas,
+        cfg.sim_fifo_capacity,
+    ) {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -270,10 +333,11 @@ fn worker_loop(
             return Err(e);
         }
     };
+    let registry = cfg.registry;
     let caps = backend.capabilities();
     let max_batch = match caps.max_batch {
-        Some(limit) => max_batch.min(limit),
-        None => max_batch,
+        Some(limit) => cfg.max_batch.min(limit),
+        None => cfg.max_batch,
     };
     // Batch-affinity hint only; switch *accounting* comes from the
     // backend's report when it models context switches itself.
@@ -296,12 +360,12 @@ fn worker_loop(
         };
         let Some(batch) = batch else { return Ok(()) };
         let Some(kernel) = registry.kernel(batch.kernel).cloned() else {
-            // Unreachable via submit() (ids are interned from this
-            // registry); kept as a structured reply so a future
+            // Unreachable via the service layer (ids are interned from
+            // this registry); kept as a structured reply so a future
             // ingress path cannot hang callers.
-            let msg = exec::ExecError::UnknownKernel(batch.kernel.to_string()).to_string();
+            let err = ExecError::UnknownKernel(batch.kernel.to_string());
             for p in batch.items {
-                let _ = p.token.send(Err(msg.clone()));
+                let _ = p.token.send(Err(err.clone()));
             }
             continue;
         };
@@ -314,9 +378,8 @@ fn worker_loop(
         let model_cycles = match exec::fabric_exec_cycles(&kernel, n) {
             Ok(c) => c,
             Err(e) => {
-                let msg = e.to_string();
                 for p in batch.items {
-                    let _ = p.token.send(Err(msg.clone()));
+                    let _ = p.token.send(Err(e.clone()));
                 }
                 continue;
             }
@@ -324,17 +387,16 @@ fn worker_loop(
         // Shape guard (the whole-batch analogue of the old per-packet
         // validate_batch scan): a malformed Pending from a future
         // ingress path must produce a structured reply, not panic the
-        // worker on the FlatBatch arity assert. Unreachable via
-        // submit(), which validates arity at the door.
+        // worker on the FlatBatch arity assert. Unreachable via the
+        // service layer, which validates arity at the door.
         if let Some(p) = batch.items.iter().find(|p| p.inputs.len() != kernel.n_inputs) {
-            let msg = exec::ExecError::WrongArity {
+            let err = ExecError::WrongArity {
                 kernel: kernel.name.clone(),
                 expected: kernel.n_inputs,
                 got: p.inputs.len(),
-            }
-            .to_string();
+            };
             for p in batch.items {
-                let _ = p.token.send(Err(msg.clone()));
+                let _ = p.token.send(Err(err.clone()));
             }
             continue;
         }
@@ -383,14 +445,14 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                // Conservative: claim no switch (the backend may have
-                // failed before any context load happened).
-                let msg = e.to_string();
-                let mut m = shared.metrics.lock().unwrap();
-                m.record_batch(&kernel.name, 0, false, 0.0, 0.0);
-                drop(m);
+                // Failed requests land in the `failed` counter only —
+                // not `completed`, and not a phantom zero-size batch
+                // (which would skew mean_batch_size). No switch is
+                // claimed either: the backend may have failed before
+                // any context load happened.
+                shared.metrics.lock().unwrap().record_failed(n as u64);
                 for p in batch.items {
-                    let _ = p.token.send(Err(msg.clone()));
+                    let _ = p.token.send(Err(e.clone()));
                 }
             }
         }
@@ -398,197 +460,104 @@ fn worker_loop(
     }
 }
 
-/// `tmfu serve`: drive the coordinator with a mixed-kernel workload and
-/// print the metrics (the paper's Fig. 4 usage model). Every response
-/// is verified against the functional oracle.
-pub fn serve_demo(
-    backend: BackendKind,
-    artifacts: &str,
-    pipelines: usize,
-    requests: usize,
-    batch: usize,
-    seed: u64,
-) -> Result<()> {
-    let names = bench_suite::all_names();
-    let mut cfg = CoordinatorConfig::new(backend);
-    cfg.artifacts_dir = artifacts.to_string();
-    cfg.workers = pipelines;
-    cfg.max_batch = batch;
-    let coord = Coordinator::start_with(cfg)?;
-    let mut rng = Rng::new(seed);
-    println!(
-        "serving {requests} requests across {} kernels on {pipelines} pipeline(s), \
-         max batch {batch}, backend '{backend}'",
-        names.len()
-    );
-    let mut rxs = Vec::with_capacity(requests);
-    let mut expected = Vec::with_capacity(requests);
-    for _ in 0..requests {
-        let kernel = *rng.choose(&names);
-        let g = &coord.registry().get(kernel).unwrap().dfg;
-        let inputs: Vec<i32> = (0..g.inputs().len())
-            .map(|_| rng.range_i64(-1000, 1000) as i32)
-            .collect();
-        expected.push(crate::dfg::eval(g, &inputs));
-        rxs.push(coord.submit(kernel, inputs)?);
-    }
-    let mut errors = 0usize;
-    for (rx, want) in rxs.into_iter().zip(expected) {
-        match rx.recv() {
-            Ok(Ok(got)) if got == want => {}
-            _ => errors += 1,
-        }
-    }
-    println!("{}", coord.metrics_report());
-    coord.shutdown()?;
-    if errors > 0 {
-        anyhow::bail!("{errors} requests returned wrong results");
-    }
-    println!("all responses verified against the functional oracle");
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn coordinator_for(backend: BackendKind, workers: usize, max_batch: usize) -> Coordinator {
-        let mut cfg = CoordinatorConfig::new(backend);
-        cfg.workers = workers;
-        cfg.max_batch = max_batch;
-        Coordinator::start_with(cfg).unwrap()
+    fn engine(backend: BackendKind, workers: usize, max_batch: usize) -> Engine {
+        let registry = Arc::new(KernelRegistry::compile_bench_suite().unwrap());
+        Engine::start(EngineConfig {
+            backend,
+            artifacts_dir: PathBuf::from("artifacts"),
+            workers,
+            max_batch,
+            queue_depth: 1024,
+            sim_replicas: 1,
+            sim_fifo_capacity: 4096,
+            registry,
+        })
+        .unwrap()
     }
 
-    fn sim_coordinator(workers: usize, max_batch: usize) -> Coordinator {
-        coordinator_for(BackendKind::Sim, workers, max_batch)
-    }
-
-    fn mixed_workload(coord: &Coordinator, requests: usize, seed: u64) {
-        let mut rng = Rng::new(seed);
-        let names = bench_suite::all_names();
-        let mut jobs = Vec::new();
-        for _ in 0..requests {
-            let kernel = *rng.choose(&names);
-            let g = &coord.registry().get(kernel).unwrap().dfg;
-            let inputs: Vec<i32> = (0..g.inputs().len())
-                .map(|_| rng.range_i64(-500, 500) as i32)
-                .collect();
-            let want = crate::dfg::eval(g, &inputs);
-            let rx = coord.submit(kernel, inputs).unwrap();
-            jobs.push((rx, want));
+    #[test]
+    fn engine_serves_by_id_and_drains_on_shutdown() {
+        let eng = engine(BackendKind::Sim, 2, 8);
+        let id = eng.registry().id_of("gradient").unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            rxs.push(eng.shared().submit(id, vec![3, 5, 2, 7, i]).unwrap());
         }
-        for (rx, want) in jobs {
-            assert_eq!(rx.recv().unwrap().unwrap(), want);
+        // Drain semantics: shutdown must answer everything already
+        // admitted even if nothing has been received yet.
+        eng.shutdown().unwrap();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            let i = i as i32;
+            assert_eq!(out, vec![1 + 9 + 25 + (2 - i) * (2 - i)]);
         }
     }
 
-    // ---- sim backend: runs unconditionally, zero artifacts ----------
-
     #[test]
-    fn serves_mixed_workload_correctly() {
-        let coord = sim_coordinator(1, 8);
-        mixed_workload(&coord, 40, 5);
-        assert_eq!(coord.completed(), 40);
-        let report = coord.metrics_report();
-        assert!(report.contains("context switches"));
-        coord.shutdown().unwrap();
+    fn shutdown_stops_admission() {
+        let eng = engine(BackendKind::Ref, 1, 4);
+        let id = eng.registry().id_of("gradient").unwrap();
+        let shared = Arc::clone(eng.shared());
+        assert!(!shared.is_shut_down());
+        eng.shutdown().unwrap();
+        assert!(shared.is_shut_down());
+        assert_eq!(
+            shared.submit(id, vec![0; 5]).unwrap_err(),
+            SubmitRejection::ShutDown
+        );
+        let batch = FlatBatch::from_rows(5, &[vec![0; 5]]);
+        assert_eq!(
+            shared.submit_batch(id, &batch).unwrap_err(),
+            SubmitRejection::ShutDown
+        );
     }
 
     #[test]
-    fn call_blocks_for_result() {
-        let coord = sim_coordinator(1, 4);
-        let out = coord.call("gradient", vec![3, 5, 2, 7, 1]).unwrap();
-        assert_eq!(out, vec![1 + 9 + 25 + 1]);
-        coord.shutdown().unwrap();
-    }
-
-    #[test]
-    fn rejects_unknown_kernel_and_bad_arity() {
-        let coord = sim_coordinator(1, 4);
-        assert!(coord.submit("nonesuch", vec![1]).is_err());
-        // Wrong arity surfaces as a structured Err reply, not a hang.
-        let r = coord.call("gradient", vec![1, 2]);
-        let msg = format!("{}", r.unwrap_err());
-        assert!(msg.contains("expects 5 inputs"), "{msg}");
-        coord.shutdown().unwrap();
-    }
-
-    #[test]
-    fn multiple_sim_workers_serve_concurrently() {
-        let coord = sim_coordinator(3, 8);
-        mixed_workload(&coord, 60, 11);
-        assert_eq!(coord.completed(), 60);
-        coord.shutdown().unwrap();
-    }
-
-    #[test]
-    fn ref_backend_serves_too() {
-        let coord = coordinator_for(BackendKind::Ref, 2, 16);
-        assert_eq!(coord.backend(), BackendKind::Ref);
-        mixed_workload(&coord, 30, 7);
-        coord.shutdown().unwrap();
-    }
-
-    #[test]
-    fn turbo_backend_serves_too() {
-        let coord = coordinator_for(BackendKind::Turbo, 2, 32);
-        assert_eq!(coord.backend(), BackendKind::Turbo);
-        mixed_workload(&coord, 50, 13);
-        assert_eq!(coord.completed(), 50);
-        coord.shutdown().unwrap();
-    }
-
-    #[test]
-    fn serve_demo_runs_on_sim_without_artifacts() {
-        serve_demo(BackendKind::Sim, "/definitely/not/here", 2, 50, 8, 42).unwrap();
-    }
-
-    #[test]
-    fn serve_demo_runs_on_turbo_without_artifacts() {
-        serve_demo(BackendKind::Turbo, "/definitely/not/here", 2, 50, 16, 43).unwrap();
-    }
-
-    // ---- PJRT backend: artifact-gated variants ----------------------
-
-    fn artifacts_dir() -> Option<String> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.json")
-            .exists()
-            .then(|| dir.to_string_lossy().into_owned())
-    }
-
-    #[test]
-    fn serves_mixed_workload_correctly_pjrt() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let coord = Coordinator::start(&dir, 1, 8).unwrap();
-        mixed_workload(&coord, 40, 5);
-        assert_eq!(coord.completed(), 40);
-        coord.shutdown().unwrap();
-    }
-
-    #[test]
-    fn call_blocks_for_result_pjrt() {
-        let Some(dir) = artifacts_dir() else { return };
-        let coord = Coordinator::start(&dir, 1, 4).unwrap();
-        let out = coord.call("gradient", vec![3, 5, 2, 7, 1]).unwrap();
-        assert_eq!(out, vec![1 + 9 + 25 + 1]);
-        coord.shutdown().unwrap();
-    }
-
-    #[test]
-    fn rejects_unknown_kernel_and_bad_arity_pjrt() {
-        let Some(dir) = artifacts_dir() else { return };
-        let coord = Coordinator::start(&dir, 1, 4).unwrap();
-        assert!(coord.submit("nonesuch", vec![1]).is_err());
-        assert!(coord.call("gradient", vec![1, 2]).is_err());
-        coord.shutdown().unwrap();
+    fn batch_admission_is_all_or_nothing() {
+        let registry = Arc::new(KernelRegistry::compile_bench_suite().unwrap());
+        let eng = Engine::start(EngineConfig {
+            backend: BackendKind::Ref,
+            artifacts_dir: PathBuf::from("artifacts"),
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 2,
+            sim_replicas: 1,
+            sim_fifo_capacity: 4096,
+            registry,
+        })
+        .unwrap();
+        let id = eng.registry().id_of("gradient").unwrap();
+        // A batch larger than the whole depth can never be admitted —
+        // deterministically Full regardless of worker progress.
+        let rows: Vec<Vec<i32>> = (0..3).map(|_| vec![0; 5]).collect();
+        let batch = FlatBatch::from_rows(5, &rows);
+        match eng.shared().submit_batch(id, &batch) {
+            Err(SubmitRejection::Full { limit, .. }) => assert_eq!(limit, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // The rejection was counted and nothing was admitted.
+        assert_eq!(eng.with_metrics(|m| m.rejected), 3);
+        assert_eq!(eng.completed(), 0);
+        eng.shutdown().unwrap();
     }
 
     #[test]
     fn missing_artifacts_fails_fast() {
-        assert!(Coordinator::start("/definitely/not/here", 1, 4).is_err());
+        let registry = Arc::new(KernelRegistry::compile_bench_suite().unwrap());
+        let r = Engine::start(EngineConfig {
+            backend: BackendKind::Pjrt,
+            artifacts_dir: PathBuf::from("/definitely/not/here"),
+            workers: 1,
+            max_batch: 4,
+            queue_depth: 16,
+            sim_replicas: 1,
+            sim_fifo_capacity: 4096,
+            registry,
+        });
+        assert!(r.is_err());
     }
 }

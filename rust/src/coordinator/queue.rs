@@ -1,7 +1,7 @@
 //! Request queues + batching policy (pure logic, tested without PJRT).
 //!
 //! The dispatcher maintains one FIFO queue per kernel context, indexed
-//! by dense [`KernelId`] — names are interned once at `submit`, so a
+//! by dense [`KernelId`] — names are interned once at ingress, so a
 //! push moves a `u32` and a `Vec<i32>`, never a `String`, and batch
 //! selection is a linear scan over a fixed-size vector instead of a
 //! `BTreeMap` walk. (The previous map-keyed design also leaked: an
@@ -9,7 +9,14 @@
 //! been seen, growing without bound as contexts churned. The dense
 //! layout is bounded by the registry size by construction, and
 //! [`QueueSet::drain_all`] additionally releases the per-queue buffers
-//! so an idle coordinator holds no request memory.)
+//! so an idle engine holds no request memory.)
+//!
+//! Queues are **bounded**: every queue carries the same `depth` limit
+//! and [`QueueSet::try_push`] refuses to grow past it, handing the
+//! request back to the caller. This is the mechanical half of the
+//! service layer's admission control — a client that outruns the
+//! fabric gets an explicit `Rejected` reply instead of unbounded
+//! memory growth and unbounded latency.
 //!
 //! Workers (overlay pipelines) pick batches with **context affinity**:
 //! a worker holding kernel K's context prefers K's queue — switching
@@ -32,10 +39,12 @@ pub struct Pending<T> {
     pub token: T,
 }
 
-/// Per-kernel FIFO queues, dense over the kernel registry.
+/// Per-kernel FIFO queues, dense over the kernel registry, each
+/// bounded at `depth` entries.
 #[derive(Debug)]
 pub struct QueueSet<T> {
     queues: Vec<VecDeque<Pending<T>>>,
+    depth: usize,
     pub total_queued: usize,
 }
 
@@ -47,10 +56,13 @@ pub struct Batch<T> {
 }
 
 impl<T> QueueSet<T> {
-    /// One queue per registry kernel.
-    pub fn new(n_kernels: usize) -> Self {
+    /// One queue per registry kernel, each admitting at most `depth`
+    /// waiting requests.
+    pub fn new(n_kernels: usize, depth: usize) -> Self {
+        assert!(depth >= 1, "queue depth must be positive");
         Self {
             queues: (0..n_kernels).map(|_| VecDeque::new()).collect(),
+            depth,
             total_queued: 0,
         }
     }
@@ -59,11 +71,23 @@ impl<T> QueueSet<T> {
         self.queues.len()
     }
 
-    /// Enqueue one request. `kernel` must come from the registry this
-    /// set was sized for (ingress interns and validates names).
-    pub fn push(&mut self, kernel: KernelId, p: Pending<T>) {
-        self.queues[kernel.index()].push_back(p);
+    /// Per-kernel admission bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Enqueue one request, or hand it back when the kernel's queue is
+    /// at its depth limit (the admission-control path). `kernel` must
+    /// come from the registry this set was sized for (ingress interns
+    /// and validates names).
+    pub fn try_push(&mut self, kernel: KernelId, p: Pending<T>) -> Result<(), Pending<T>> {
+        let q = &mut self.queues[kernel.index()];
+        if q.len() >= self.depth {
+            return Err(p);
+        }
+        q.push_back(p);
         self.total_queued += 1;
+        Ok(())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -158,10 +182,10 @@ mod tests {
 
     #[test]
     fn affinity_preferred_when_context_has_work() {
-        let mut qs = QueueSet::new(3);
-        qs.push(A, pend(1));
-        qs.push(B, pend(2));
-        qs.push(B, pend(3));
+        let mut qs = QueueSet::new(3, 16);
+        qs.try_push(A, pend(1)).unwrap();
+        qs.try_push(B, pend(2)).unwrap();
+        qs.try_push(B, pend(3)).unwrap();
         // Worker holds A: takes A despite B being longer.
         let b = qs.take_batch(Some(A), 16, Instant::now()).unwrap();
         assert_eq!(b.kernel, A);
@@ -170,10 +194,10 @@ mod tests {
 
     #[test]
     fn steals_longest_queue_without_affinity() {
-        let mut qs = QueueSet::new(3);
-        qs.push(A, pend(1));
-        qs.push(B, pend(2));
-        qs.push(B, pend(3));
+        let mut qs = QueueSet::new(3, 16);
+        qs.try_push(A, pend(1)).unwrap();
+        qs.try_push(B, pend(2)).unwrap();
+        qs.try_push(B, pend(3)).unwrap();
         let b = qs.take_batch(Some(C), 16, Instant::now()).unwrap();
         assert_eq!(b.kernel, B);
         assert_eq!(b.items.len(), 2);
@@ -182,9 +206,9 @@ mod tests {
 
     #[test]
     fn respects_max_batch_fifo() {
-        let mut qs = QueueSet::new(1);
+        let mut qs = QueueSet::new(1, 16);
         for i in 0..10 {
-            qs.push(A, pend(i));
+            qs.try_push(A, pend(i)).unwrap();
         }
         let b = qs.take_batch(None, 4, Instant::now()).unwrap();
         assert_eq!(b.items.len(), 4);
@@ -195,24 +219,43 @@ mod tests {
 
     #[test]
     fn empty_returns_none() {
-        let mut qs: QueueSet<u32> = QueueSet::new(2);
+        let mut qs: QueueSet<u32> = QueueSet::new(2, 16);
         assert!(qs.take_batch(None, 8, Instant::now()).is_none());
     }
 
     #[test]
+    fn depth_limit_rejects_and_hands_back() {
+        let mut qs = QueueSet::new(2, 2);
+        assert_eq!(qs.depth(), 2);
+        qs.try_push(A, pend(1)).unwrap();
+        qs.try_push(A, pend(2)).unwrap();
+        // A is full: the request comes back untouched.
+        let rejected = qs.try_push(A, pend(3)).unwrap_err();
+        assert_eq!(rejected.token, 3);
+        assert_eq!(qs.queued_for(A), 2);
+        assert_eq!(qs.total_queued, 2);
+        // Other queues still admit (the bound is per kernel).
+        qs.try_push(B, pend(4)).unwrap();
+        // Draining a batch frees capacity again.
+        qs.take_batch(Some(A), 1, Instant::now()).unwrap();
+        qs.try_push(A, pend(5)).unwrap();
+        assert_eq!(qs.queued_for(A), 2);
+    }
+
+    #[test]
     fn age_bonus_prevents_starvation() {
-        let mut qs = QueueSet::new(2);
+        let mut qs = QueueSet::new(2, 16);
         let old = Instant::now() - std::time::Duration::from_millis(500);
-        qs.push(
+        qs.try_push(
             A, // starved
             Pending {
                 inputs: vec![],
                 enqueued: old,
                 token: 0u32,
             },
-        );
+        ).unwrap();
         for i in 0..3 {
-            qs.push(B, pend(i)); // busy
+            qs.try_push(B, pend(i)).unwrap(); // busy
         }
         // 0.1/ms * 500ms = 50 > 3: the old queue wins.
         let b = qs.take_batch(None, 8, Instant::now()).unwrap();
@@ -221,11 +264,11 @@ mod tests {
 
     #[test]
     fn drain_all_empties_and_releases_buffers() {
-        let mut qs = QueueSet::new(2);
+        let mut qs = QueueSet::new(2, 1024);
         for i in 0..512 {
-            qs.push(A, pend(i));
+            qs.try_push(A, pend(i)).unwrap();
         }
-        qs.push(B, pend(999));
+        qs.try_push(B, pend(999)).unwrap();
         assert!(qs.resident_capacity() >= 512);
         let batches = qs.drain_all();
         assert_eq!(batches.len(), 2);
@@ -236,7 +279,7 @@ mod tests {
         // the 1.66 ring-buffer rewrite).
         assert!(qs.resident_capacity() < 16, "{}", qs.resident_capacity());
         // The set stays usable after a drain.
-        qs.push(B, pend(1));
+        qs.try_push(B, pend(1)).unwrap();
         assert_eq!(qs.queued_for(B), 1);
     }
 }

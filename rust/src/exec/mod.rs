@@ -51,7 +51,7 @@ use crate::sched::{Program, Timing};
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::fmt;
-use std::path::PathBuf;
+use std::path::Path;
 use std::str::FromStr;
 use std::sync::Arc;
 
@@ -363,10 +363,6 @@ impl BackendKind {
         }
     }
 
-    pub fn from_name(s: &str) -> Option<BackendKind> {
-        BackendKind::ALL.iter().copied().find(|k| k.name() == s)
-    }
-
     /// Whether this substrate needs `make artifacts` output on disk
     /// (known before construction; mirrors
     /// [`Capabilities::needs_artifacts`]).
@@ -381,48 +377,36 @@ impl fmt::Display for BackendKind {
     }
 }
 
+/// The one name→kind conversion (use `s.parse::<BackendKind>()`; the
+/// former `from_name` duplicate is gone).
 impl FromStr for BackendKind {
     type Err = String;
 
     fn from_str(s: &str) -> Result<BackendKind, String> {
-        BackendKind::from_name(s).ok_or_else(|| {
-            format!("unknown backend '{s}' (expected one of: ref, sim, pjrt, turbo)")
-        })
-    }
-}
-
-/// Construction parameters for [`make_backend`].
-#[derive(Debug, Clone)]
-pub struct BackendConfig {
-    pub kind: BackendKind,
-    /// AOT artifacts directory (PJRT backend only).
-    pub artifacts_dir: PathBuf,
-    /// Overlay pipeline replicas per sim backend (paper Fig. 4:
-    /// replication recovers throughput lost to the II).
-    pub sim_replicas: usize,
-    /// FIFO capacity of each simulated pipeline.
-    pub sim_fifo_capacity: usize,
-}
-
-impl BackendConfig {
-    pub fn new(kind: BackendKind) -> BackendConfig {
-        BackendConfig {
-            kind,
-            artifacts_dir: PathBuf::from("artifacts"),
-            sim_replicas: 1,
-            sim_fifo_capacity: 4096,
-        }
+        BackendKind::ALL
+            .iter()
+            .copied()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| format!("unknown backend '{s}' (expected one of: ref, sim, pjrt, turbo)"))
     }
 }
 
 /// Build a backend instance. Called from inside each worker thread —
 /// the returned box is intentionally not `Send`. Backends receive
-/// compiled kernels per call, so only construction inputs live here.
-pub fn make_backend(cfg: &BackendConfig) -> Result<Box<dyn Backend>> {
-    Ok(match cfg.kind {
+/// compiled kernels per call, so only construction inputs appear here:
+/// `artifacts_dir` feeds the PJRT engine, `sim_replicas` /
+/// `sim_fifo_capacity` size the simulated overlay; the service builder
+/// owns these knobs (there is no separate backend-config struct).
+pub fn make_backend(
+    kind: BackendKind,
+    artifacts_dir: &Path,
+    sim_replicas: usize,
+    sim_fifo_capacity: usize,
+) -> Result<Box<dyn Backend>> {
+    Ok(match kind {
         BackendKind::Ref => Box::new(RefBackend::new()),
-        BackendKind::Sim => Box::new(SimBackend::new(cfg.sim_replicas, cfg.sim_fifo_capacity)?),
-        BackendKind::Pjrt => Box::new(PjrtBackend::load(&cfg.artifacts_dir)?),
+        BackendKind::Sim => Box::new(SimBackend::new(sim_replicas, sim_fifo_capacity)?),
+        BackendKind::Pjrt => Box::new(PjrtBackend::load(artifacts_dir)?),
         BackendKind::Turbo => Box::new(TurboBackend::new()),
     })
 }
@@ -509,17 +493,22 @@ mod tests {
     #[test]
     fn backend_kind_round_trips_names() {
         for k in BackendKind::ALL {
-            assert_eq!(BackendKind::from_name(k.name()), Some(k));
             assert_eq!(k.name().parse::<BackendKind>().unwrap(), k);
         }
         assert!("tpu".parse::<BackendKind>().is_err());
+        let err = "tpu".parse::<BackendKind>().unwrap_err();
+        assert!(err.contains("unknown backend 'tpu'"), "{err}");
+    }
+
+    fn test_backend(kind: BackendKind) -> Result<Box<dyn Backend>> {
+        make_backend(kind, Path::new("artifacts"), 1, 4096)
     }
 
     #[test]
     fn artifact_free_backends_construct_via_factory() {
         let reg = registry();
         for kind in [BackendKind::Ref, BackendKind::Sim, BackendKind::Turbo] {
-            let mut b = make_backend(&BackendConfig::new(kind)).unwrap();
+            let mut b = test_backend(kind).unwrap();
             assert_eq!(b.name(), kind.name());
             let k = reg.get("gradient").unwrap();
             let r = b.execute(k, &batch_of(&[vec![3, 5, 2, 7, 1]])).unwrap();
@@ -529,24 +518,24 @@ mod tests {
 
     #[test]
     fn pjrt_backend_fails_cleanly_without_artifacts() {
-        let mut cfg = BackendConfig::new(BackendKind::Pjrt);
-        cfg.artifacts_dir = PathBuf::from("/definitely/not/here");
-        assert!(make_backend(&cfg).is_err());
+        assert!(
+            make_backend(BackendKind::Pjrt, Path::new("/definitely/not/here"), 1, 4096).is_err()
+        );
     }
 
     /// Capabilities claims are consistent with [`BackendKind`] and
     /// with observed behavior.
     #[test]
     fn capabilities_are_consistent() {
-        let b = make_backend(&BackendConfig::new(BackendKind::Ref)).unwrap();
+        let b = test_backend(BackendKind::Ref).unwrap();
         assert!(!b.capabilities().cycle_accurate);
         assert!(!b.capabilities().needs_artifacts);
         assert!(!BackendKind::Ref.needs_artifacts());
-        let b = make_backend(&BackendConfig::new(BackendKind::Turbo)).unwrap();
+        let b = test_backend(BackendKind::Turbo).unwrap();
         assert!(!b.capabilities().cycle_accurate);
         assert!(!b.capabilities().needs_artifacts);
         assert!(!BackendKind::Turbo.needs_artifacts());
-        let b = make_backend(&BackendConfig::new(BackendKind::Sim)).unwrap();
+        let b = test_backend(BackendKind::Sim).unwrap();
         let caps = b.capabilities();
         assert!(caps.cycle_accurate);
         assert!(caps.models_context_switch);

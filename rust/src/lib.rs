@@ -23,18 +23,25 @@
 //!   simulator (with modeled context switching), and the PJRT engine
 //!   over the AOT-compiled (JAX + Pallas) kernels ([`exec`],
 //!   [`runtime`]);
-//! * the **serving coordinator** — backend-generic fabric workers over
-//!   a shared compiled-kernel registry, dispatching flat
-//!   [`exec::FlatBatch`] batches from [`exec::KernelId`]-indexed
-//!   queues; runs the full serving stack with zero artifacts via
-//!   `tmfu serve --backend sim` (or `turbo`) ([`coordinator`]);
+//! * the **service API** — the public, typed client/service surface:
+//!   [`service::OverlayService`] (builder-configured: backend kind,
+//!   pipelines, max batch, bounded admission queues) hands out
+//!   `Clone + Send` [`service::KernelHandle`] sessions with
+//!   pre-resolved kernel ids; calls return structured
+//!   [`service::ServiceError`]s and metrics come back as a typed,
+//!   JSON-serializable [`service::MetricsSnapshot`]. The engine behind
+//!   it — backend-generic fabric workers over a shared compiled-kernel
+//!   registry, dispatching flat [`exec::FlatBatch`] batches from
+//!   [`exec::KernelId`]-indexed bounded queues — is crate-private.
+//!   Runs the full serving stack with zero artifacts via
+//!   `tmfu serve --backend sim` (or `turbo`) ([`service`]);
 //! * **reporting** — regeneration of every table/figure in the paper
 //!   ([`report`], `rust/benches/`).
 
 pub mod arch;
 pub mod baseline;
 pub mod bench_suite;
-pub mod coordinator;
+pub(crate) mod coordinator;
 pub mod dfg;
 pub mod exec;
 pub mod frontend;
@@ -43,6 +50,7 @@ pub mod report;
 pub mod resources;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod sim;
 pub mod util;
 

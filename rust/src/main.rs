@@ -5,10 +5,17 @@
 //! `table1`, `dot`), cycle-accurate simulation (`simulate`), reports
 //! (`table2`, `table3`, `fig5`, `fig6`, `ctx-switch`, `resources`),
 //! and the serving runtime (`serve --backend {ref,sim,pjrt,turbo}`;
-//! only the pjrt backend requires `make artifacts`).
+//! only the pjrt backend requires `make artifacts`). `serve` drives
+//! the typed service API ([`tmfu_overlay::service::OverlayService`] +
+//! `KernelHandle` sessions) with a mixed-kernel oracle-checked
+//! workload, and can write its typed metrics snapshot as JSON
+//! (`--metrics-json`) for CI and tooling to assert on.
 
 use std::process::ExitCode;
-use tmfu_overlay::util::cli::Command;
+use tmfu_overlay::exec::BackendKind;
+use tmfu_overlay::service::{OverlayService, ServiceError};
+use tmfu_overlay::util::cli::{Command, Matches};
+use tmfu_overlay::util::prng::Rng;
 use tmfu_overlay::{bench_suite, dfg, frontend, report, sched};
 
 fn main() -> ExitCode {
@@ -47,7 +54,7 @@ fn commands() -> Vec<Command> {
         Command::new("fig6", "reproduce Fig. 6 (area comparison)"),
         Command::new("ctx-switch", "reproduce the context-switch comparison"),
         Command::new("resources", "reproduce the §III.A resource results"),
-        Command::new("serve", "run the serving coordinator (any execution backend)")
+        Command::new("serve", "run the overlay service (any execution backend)")
             .opt(
                 "backend",
                 "execution backend: ref | sim | pjrt | turbo",
@@ -57,7 +64,9 @@ fn commands() -> Vec<Command> {
             .opt("pipelines", "overlay pipelines (workers)", Some("2"))
             .opt("requests", "requests to serve", Some("200"))
             .opt("batch", "max batch size", Some("16"))
-            .opt("seed", "workload seed", Some("42")),
+            .opt("queue-depth", "per-kernel admission limit", Some("1024"))
+            .opt("seed", "workload seed", Some("42"))
+            .opt("metrics-json", "write the metrics snapshot JSON here on exit", None),
     ]
 }
 
@@ -180,32 +189,105 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "fig6" => print!("{}", report::fig6::render()?),
         "ctx-switch" => print!("{}", report::ctx_switch::render()?),
         "resources" => print!("{}", report::resources_report::render()),
-        "serve" => {
-            let backend: tmfu_overlay::exec::BackendKind = m
-                .get("backend")
-                .unwrap()
-                .parse()
-                .map_err(|e: String| anyhow::anyhow!("{e}"))?;
-            let dir = m.get("artifacts").unwrap().to_string();
-            let pipelines = m
-                .get_usize("pipelines")
-                .map_err(|e| anyhow::anyhow!("{e}"))?
-                .unwrap();
-            let requests = m
-                .get_usize("requests")
-                .map_err(|e| anyhow::anyhow!("{e}"))?
-                .unwrap();
-            let batch = m
-                .get_usize("batch")
-                .map_err(|e| anyhow::anyhow!("{e}"))?
-                .unwrap();
-            let seed = m
-                .get_usize("seed")
-                .map_err(|e| anyhow::anyhow!("{e}"))?
-                .unwrap() as u64;
-            tmfu_overlay::coordinator::serve_demo(backend, &dir, pipelines, requests, batch, seed)?;
-        }
+        "serve" => serve(&m)?,
         _ => unreachable!(),
+    }
+    Ok(())
+}
+
+/// `tmfu serve`: drive the service with a mixed-kernel workload and
+/// print the metrics (the paper's Fig. 4 usage model). Every admitted
+/// response is verified against the functional oracle; rejected
+/// requests (admission control) are reported, not failed.
+fn serve(m: &Matches) -> anyhow::Result<()> {
+    let backend: BackendKind = m
+        .get("backend")
+        .unwrap()
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+    let dir = m.get("artifacts").unwrap().to_string();
+    let pipelines = m
+        .get_usize("pipelines")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .unwrap();
+    let requests = m
+        .get_usize("requests")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .unwrap();
+    let batch = m
+        .get_usize("batch")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .unwrap();
+    let queue_depth = m
+        .get_usize("queue-depth")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .unwrap();
+    let seed = m
+        .get_usize("seed")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .unwrap() as u64;
+
+    let service = OverlayService::builder()
+        .backend(backend)
+        .artifacts_dir(dir)
+        .pipelines(pipelines)
+        .max_batch(batch)
+        .queue_depth(queue_depth)
+        .build()?;
+    let handles = service.handles();
+    println!(
+        "serving {requests} requests across {} kernels on {pipelines} pipeline(s), \
+         max batch {batch}, queue depth {queue_depth}, backend '{backend}'",
+        handles.len()
+    );
+    let mut rng = Rng::new(seed);
+    let mut pending = Vec::with_capacity(requests);
+    let mut expected = Vec::with_capacity(requests);
+    let mut rejected = 0usize;
+    for _ in 0..requests {
+        let h = rng.choose(&handles);
+        let inputs: Vec<i32> = (0..h.arity())
+            .map(|_| rng.range_i64(-1000, 1000) as i32)
+            .collect();
+        match h.submit(&inputs) {
+            Ok(p) => {
+                expected.push(dfg::eval(&h.compiled().dfg, &inputs));
+                pending.push(p);
+            }
+            // Backpressure is a reportable outcome, not a crash: an
+            // open-loop client that outruns the queue depth sees
+            // explicit rejections.
+            Err(ServiceError::Rejected { .. }) => rejected += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let mut errors = 0usize;
+    for (p, want) in pending.into_iter().zip(expected) {
+        match p.wait() {
+            Ok(got) if got == want => {}
+            _ => errors += 1,
+        }
+    }
+    let snapshot = service.metrics();
+    println!("{}", snapshot.render());
+    if let Some(path) = m.get("metrics-json") {
+        let mut text = snapshot.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        println!("wrote {path}");
+    }
+    service.shutdown()?;
+    if errors > 0 {
+        anyhow::bail!("{errors} requests returned wrong results");
+    }
+    let admitted = requests - rejected;
+    if rejected > 0 {
+        println!(
+            "all {admitted} admitted responses verified against the functional oracle \
+             ({rejected} rejected by admission control)"
+        );
+    } else {
+        println!("all responses verified against the functional oracle");
     }
     Ok(())
 }

@@ -1,0 +1,169 @@
+//! Structured client-visible errors for the service API.
+//!
+//! Every failure a client can observe through [`super::OverlayService`]
+//! / [`super::KernelHandle`] is a typed [`ServiceError`] variant —
+//! admission rejection, shape mismatch, shutdown, deadline, backend
+//! failure — replacing the stringly `Result<_, String>` replies of the
+//! pre-service coordinator. Engine-internal failures travel as
+//! [`ExecError`] (the execution layer's vocabulary) and are converted
+//! at the service boundary via `From<ExecError>`.
+
+use crate::exec::ExecError;
+use std::fmt;
+
+/// A client-visible serving failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The kernel name is not in this service's registry.
+    UnknownKernel(String),
+    /// Input arity does not match the kernel's signature.
+    ShapeMismatch {
+        kernel: String,
+        expected: usize,
+        got: usize,
+    },
+    /// A zero-row batch was handed to `call_batch`.
+    EmptyBatch { kernel: String },
+    /// Admission control rejected the request: the kernel's queue is at
+    /// its configured depth limit. Back off and retry — the service
+    /// sheds load here instead of growing queues without bound.
+    Rejected {
+        kernel: String,
+        queued: usize,
+        limit: usize,
+    },
+    /// The service has shut down (or is draining) and accepts no new
+    /// requests.
+    ShutDown,
+    /// A [`super::Pending`] wait hit its deadline before the reply
+    /// arrived; the request itself stays in flight.
+    DeadlineExceeded { kernel: String },
+    /// The worker serving this request disappeared without replying
+    /// (worker panic — an engine bug, not a request error).
+    Disconnected { kernel: String },
+    /// The execution substrate failed (PJRT load/execute, cycle
+    /// budget...).
+    Backend { backend: String, message: String },
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::UnknownKernel(name) => write!(f, "unknown kernel '{name}'"),
+            ServiceError::ShapeMismatch {
+                kernel,
+                expected,
+                got,
+            } => write!(f, "kernel '{kernel}' expects {expected} inputs, got {got}"),
+            ServiceError::EmptyBatch { kernel } => {
+                write!(f, "kernel '{kernel}': empty batch (no packets to execute)")
+            }
+            // Note: `queued` can be well below `limit` when a whole
+            // batch is rejected (batch admission is all-or-nothing),
+            // so the message states both facts without implying
+            // queued >= limit.
+            ServiceError::Rejected {
+                kernel,
+                queued,
+                limit,
+            } => write!(
+                f,
+                "kernel '{kernel}': admission rejected ({queued} queued, depth limit {limit})"
+            ),
+            ServiceError::ShutDown => write!(f, "service shut down"),
+            ServiceError::DeadlineExceeded { kernel } => {
+                write!(f, "kernel '{kernel}': reply deadline exceeded")
+            }
+            ServiceError::Disconnected { kernel } => {
+                write!(f, "kernel '{kernel}': worker dropped without replying")
+            }
+            ServiceError::Backend { backend, message } => write!(f, "{backend} backend: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<ExecError> for ServiceError {
+    fn from(e: ExecError) -> ServiceError {
+        match e {
+            ExecError::UnknownKernel(name) => ServiceError::UnknownKernel(name),
+            ExecError::WrongArity {
+                kernel,
+                expected,
+                got,
+            } => ServiceError::ShapeMismatch {
+                kernel,
+                expected,
+                got,
+            },
+            ExecError::EmptyBatch { kernel } => ServiceError::EmptyBatch { kernel },
+            ExecError::BatchTooLarge { .. } => ServiceError::Backend {
+                backend: "exec".to_string(),
+                message: e.to_string(),
+            },
+            ExecError::Backend { backend, message } => ServiceError::Backend {
+                backend: backend.to_string(),
+                message,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_specific() {
+        let e = ServiceError::Rejected {
+            kernel: "poly6".into(),
+            queued: 8,
+            limit: 8,
+        };
+        assert!(e.to_string().contains("admission rejected"));
+        assert!(e.to_string().contains("poly6"));
+        assert!(ServiceError::ShutDown.to_string().contains("shut down"));
+        let e = ServiceError::DeadlineExceeded {
+            kernel: "fir".into(),
+        };
+        assert!(e.to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn converts_exec_errors() {
+        let e: ServiceError = ExecError::WrongArity {
+            kernel: "gradient".into(),
+            expected: 5,
+            got: 2,
+        }
+        .into();
+        assert_eq!(
+            e,
+            ServiceError::ShapeMismatch {
+                kernel: "gradient".into(),
+                expected: 5,
+                got: 2
+            }
+        );
+        let e: ServiceError = ExecError::UnknownKernel("nope".into()).into();
+        assert_eq!(e, ServiceError::UnknownKernel("nope".into()));
+        let e: ServiceError = ExecError::Backend {
+            backend: "pjrt",
+            message: "client create failed".into(),
+        }
+        .into();
+        assert!(matches!(e, ServiceError::Backend { .. }));
+        // Shape of the batch-level conversions.
+        let e: ServiceError = ExecError::EmptyBatch {
+            kernel: "fir".into(),
+        }
+        .into();
+        assert_eq!(
+            e,
+            ServiceError::EmptyBatch {
+                kernel: "fir".into()
+            }
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Typed, serializable serving metrics.
+//!
+//! [`MetricsSnapshot`] is the client-facing view of the engine's raw
+//! counters ([`crate::coordinator::metrics::Metrics`]): percentiles
+//! are computed once at snapshot time, the whole thing is plain data
+//! (`Clone + PartialEq`), serializes to JSON via [`crate::util::json`]
+//! (`tmfu serve --metrics-json`, CI assertions), and renders the
+//! human-readable report the CLI prints. It replaces the old
+//! string-report API — tooling asserts on fields, not on scraped text.
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::json::{self, Json};
+
+pub use crate::util::stats::LatencySummary;
+
+/// JSON form of one distribution summary (stable field names).
+fn summary_json(s: &LatencySummary) -> Json {
+    json::obj(vec![
+        ("n", json::i(s.n as i64)),
+        ("mean", json::f(s.mean)),
+        ("p50", json::f(s.p50)),
+        ("p95", json::f(s.p95)),
+        ("p99", json::f(s.p99)),
+        ("min", json::f(s.min)),
+        ("max", json::f(s.max)),
+    ])
+}
+
+/// A point-in-time view of everything the service has done.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Execution substrate name (`"ref"`, `"sim"`, `"pjrt"`, `"turbo"`).
+    pub backend: String,
+    /// Fabric workers (overlay pipeline replicas).
+    pub workers: usize,
+    /// Per-kernel admission bound.
+    pub queue_depth: usize,
+    /// Requests completed successfully (replied `Ok`).
+    pub completed: u64,
+    /// Requests refused by admission control.
+    pub rejected: u64,
+    /// Admitted requests whose execution failed (replied `Err` —
+    /// backend failure). `admitted == completed + failed`.
+    pub failed: u64,
+    /// Batches dispatched to workers.
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub context_switches: u64,
+    /// Simulated overlay fabric time (µs at 300 MHz), incl. switches.
+    pub fabric_busy_us: f64,
+    /// Simulated time spent on context switching only.
+    pub fabric_switch_us: f64,
+    /// Wall-clock seconds since the service started.
+    pub wall_s: f64,
+    /// Completed requests per wall-clock second.
+    pub requests_per_s: f64,
+    /// End-to-end request latency (enqueue → reply), if any completed.
+    pub latency_us: Option<LatencySummary>,
+    /// Time spent queued before execution, if any completed.
+    pub queue_wait_us: Option<LatencySummary>,
+    /// Completed requests per kernel, name-sorted.
+    pub per_kernel: Vec<(String, u64)>,
+}
+
+impl MetricsSnapshot {
+    /// Build a snapshot from the engine's raw counters (called under
+    /// the metrics lock by `OverlayService::metrics`).
+    pub(crate) fn collect(
+        m: &mut Metrics,
+        backend: &str,
+        workers: usize,
+        queue_depth: usize,
+    ) -> MetricsSnapshot {
+        let wall_s = m.wall.as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            backend: backend.to_string(),
+            workers,
+            queue_depth,
+            completed: m.completed,
+            rejected: m.rejected,
+            failed: m.failed,
+            batches: m.batches,
+            mean_batch_size: m.mean_batch_size(),
+            context_switches: m.context_switches,
+            fabric_busy_us: m.fabric_busy_us,
+            fabric_switch_us: m.fabric_switch_us,
+            wall_s,
+            requests_per_s: m.completed as f64 / wall_s,
+            latency_us: m.latency_us.summarize(),
+            queue_wait_us: m.queue_wait_us.summarize(),
+            per_kernel: m.per_kernel.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+        }
+    }
+
+    /// Machine-readable form (stable field names; `tmfu serve
+    /// --metrics-json`, CI assertions, `tools/`).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("backend", json::s(&self.backend)),
+            ("workers", json::i(self.workers as i64)),
+            ("queue_depth", json::i(self.queue_depth as i64)),
+            ("completed", json::i(self.completed as i64)),
+            ("rejected", json::i(self.rejected as i64)),
+            ("failed", json::i(self.failed as i64)),
+            ("batches", json::i(self.batches as i64)),
+            ("mean_batch_size", json::f(self.mean_batch_size)),
+            ("context_switches", json::i(self.context_switches as i64)),
+            ("fabric_busy_us", json::f(self.fabric_busy_us)),
+            ("fabric_switch_us", json::f(self.fabric_switch_us)),
+            ("wall_s", json::f(self.wall_s)),
+            ("requests_per_s", json::f(self.requests_per_s)),
+            (
+                "latency_us",
+                self.latency_us.as_ref().map_or(Json::Null, summary_json),
+            ),
+            (
+                "queue_wait_us",
+                self.queue_wait_us.as_ref().map_or(Json::Null, summary_json),
+            ),
+            (
+                "per_kernel",
+                json::obj(
+                    self.per_kernel
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), json::i(*v as i64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// The human-readable report `tmfu serve` prints.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "backend:              {} ({} worker(s), queue depth {})\n",
+            self.backend, self.workers, self.queue_depth
+        ));
+        s.push_str(&format!(
+            "requests completed:   {} in {:.3}s ({:.0} req/s wall)\n",
+            self.completed, self.wall_s, self.requests_per_s
+        ));
+        if self.rejected > 0 {
+            s.push_str(&format!(
+                "admission rejected:   {} (per-kernel queue depth {})\n",
+                self.rejected, self.queue_depth
+            ));
+        }
+        if self.failed > 0 {
+            s.push_str(&format!(
+                "execution failures:   {} (admitted, replied Err)\n",
+                self.failed
+            ));
+        }
+        s.push_str(&format!(
+            "batches:              {} (mean size {:.1})\n",
+            self.batches, self.mean_batch_size
+        ));
+        s.push_str(&format!(
+            "context switches:     {} ({:.2} us simulated switch time total)\n",
+            self.context_switches, self.fabric_switch_us
+        ));
+        s.push_str(&format!(
+            "simulated fabric busy: {:.1} us ({:.2}% of wall)\n",
+            self.fabric_busy_us,
+            self.fabric_busy_us / (self.wall_s * 1e6) * 100.0
+        ));
+        if let Some(l) = &self.latency_us {
+            s.push_str(&format!("request latency:      {}\n", l.render("us")));
+        }
+        if let Some(q) = &self.queue_wait_us {
+            s.push_str(&format!("queue wait:           {}\n", q.render("us")));
+        }
+        s.push_str("per-kernel requests:  ");
+        s.push_str(
+            &self
+                .per_kernel
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+        );
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample_metrics() -> Metrics {
+        let mut m = Metrics::default();
+        m.wall = Duration::from_millis(100);
+        m.record_batch("gradient", 8, true, 0.2, 3.0);
+        m.record_batch("poly6", 4, true, 0.3, 5.0);
+        m.record_rejected(2);
+        m.record_failed(1);
+        m.latency_us.push(120.0);
+        m.latency_us.push(80.0);
+        m.queue_wait_us.push(40.0);
+        m
+    }
+
+    #[test]
+    fn collects_typed_fields() {
+        let mut m = sample_metrics();
+        let snap = MetricsSnapshot::collect(&mut m, "sim", 2, 64);
+        assert_eq!(snap.backend, "sim");
+        assert_eq!(snap.workers, 2);
+        assert_eq!(snap.queue_depth, 64);
+        assert_eq!(snap.completed, 12);
+        assert_eq!(snap.rejected, 2);
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.context_switches, 2);
+        assert!((snap.mean_batch_size - 6.0).abs() < 1e-12);
+        assert!((snap.wall_s - 0.1).abs() < 1e-9);
+        assert!((snap.requests_per_s - 120.0).abs() < 1e-6);
+        let lat = snap.latency_us.unwrap();
+        assert_eq!(lat.n, 2);
+        assert!((lat.mean - 100.0).abs() < 1e-9);
+        assert!((lat.max - 120.0).abs() < 1e-9);
+        assert_eq!(
+            snap.per_kernel,
+            vec![("gradient".to_string(), 8), ("poly6".to_string(), 4)]
+        );
+    }
+
+    #[test]
+    fn empty_service_snapshot_is_well_formed() {
+        let mut m = Metrics::default();
+        let snap = MetricsSnapshot::collect(&mut m, "turbo", 1, 16);
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.latency_us, None);
+        assert_eq!(snap.queue_wait_us, None);
+        assert_eq!(snap.failed, 0);
+        let s = snap.render();
+        assert!(s.contains("requests completed:   0"));
+        // Rejection/failure lines only appear when they happened.
+        assert!(!s.contains("admission rejected"));
+        assert!(!s.contains("execution failures"));
+    }
+
+    #[test]
+    fn renders_report_lines() {
+        let mut m = sample_metrics();
+        let snap = MetricsSnapshot::collect(&mut m, "sim", 2, 64);
+        let s = snap.render();
+        assert!(s.contains("requests completed:   12"));
+        assert!(s.contains("admission rejected:   2"));
+        assert!(s.contains("execution failures:   1"));
+        assert!(s.contains("context switches:     2"));
+        assert!(s.contains("gradient=8"));
+        assert!(s.contains("request latency:"));
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let mut m = sample_metrics();
+        let snap = MetricsSnapshot::collect(&mut m, "sim", 2, 64);
+        let j = snap.to_json();
+        let parsed = json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.get("completed").as_i64(), Some(12));
+        assert_eq!(parsed.get("rejected").as_i64(), Some(2));
+        assert_eq!(parsed.get("failed").as_i64(), Some(1));
+        assert_eq!(parsed.get("backend").as_str(), Some("sim"));
+        assert_eq!(parsed.get("per_kernel").get("gradient").as_i64(), Some(8));
+        assert_eq!(parsed.get("latency_us").get("n").as_i64(), Some(2));
+        // Empty distributions serialize as null, not a bogus summary.
+        let mut empty = Metrics::default();
+        let j = MetricsSnapshot::collect(&mut empty, "ref", 1, 8).to_json();
+        assert_eq!(*j.get("latency_us"), Json::Null);
+    }
+}

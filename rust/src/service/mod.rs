@@ -1,0 +1,712 @@
+//! The public serving API: a layered, typed client/service surface
+//! over the execution backends (DESIGN.md §8).
+//!
+//! ```text
+//! ServiceBuilder ──build()──▶ OverlayService ──kernel()──▶ KernelHandle
+//!                                   │                          │
+//!                                   ▼                          ▼
+//!                               Engine (crate-private workers, bounded
+//!                               queues, metrics)  ──▶  exec::Backend
+//! ```
+//!
+//! * [`OverlayService::builder`] configures the substrate (backend
+//!   kind, pipelines, max batch, queue depth, registry source) and
+//!   compiles every kernel once at `build()`;
+//! * [`OverlayService::kernel`] resolves a kernel name to a
+//!   [`KernelHandle`] **once** — the handle pre-binds the dense
+//!   [`KernelId`] and arity, is `Clone + Send`, and outlives the
+//!   service value itself (it holds the engine state by `Arc`), so a
+//!   client session never re-resolves strings per call;
+//! * [`KernelHandle::call`] / [`KernelHandle::call_batch`] are the
+//!   blocking entry points; [`KernelHandle::submit`] is non-blocking
+//!   and returns a [`Pending`] reply with poll/wait/deadline support;
+//! * every failure is a typed [`ServiceError`]; backpressure is
+//!   explicit — bounded per-kernel queues make an overloaded service
+//!   answer [`ServiceError::Rejected`] instead of growing without
+//!   bound;
+//! * [`OverlayService::metrics`] returns a typed, JSON-serializable
+//!   [`MetricsSnapshot`]; [`OverlayService::shutdown`] drains admitted
+//!   work before stopping the workers.
+
+pub mod error;
+mod metrics;
+
+pub use error::ServiceError;
+pub use metrics::{LatencySummary, MetricsSnapshot};
+
+use crate::coordinator::{Engine, EngineConfig, Reply, Shared, SubmitRejection};
+use crate::dfg::Dfg;
+use crate::exec::{BackendKind, CompiledKernel, FlatBatch, KernelId, KernelRegistry};
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------
+
+/// Configuration for an [`OverlayService`]. Obtained from
+/// [`OverlayService::builder`]; every knob has a serving-ready default.
+#[derive(Debug, Clone)]
+pub struct ServiceBuilder {
+    backend: BackendKind,
+    artifacts_dir: PathBuf,
+    pipelines: usize,
+    max_batch: usize,
+    queue_depth: usize,
+    sim_replicas: usize,
+    sim_fifo_capacity: usize,
+    kernels: Option<Vec<Dfg>>,
+}
+
+impl Default for ServiceBuilder {
+    fn default() -> ServiceBuilder {
+        ServiceBuilder {
+            backend: BackendKind::Sim,
+            artifacts_dir: PathBuf::from("artifacts"),
+            pipelines: 1,
+            max_batch: 16,
+            queue_depth: 1024,
+            sim_replicas: 1,
+            sim_fifo_capacity: 4096,
+            kernels: None,
+        }
+    }
+}
+
+impl ServiceBuilder {
+    /// Execution substrate for every worker (default: `sim`).
+    pub fn backend(mut self, kind: BackendKind) -> ServiceBuilder {
+        self.backend = kind;
+        self
+    }
+
+    /// AOT artifacts directory (PJRT backend only).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> ServiceBuilder {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Fabric workers — overlay pipeline replicas at the serving level
+    /// (default: 1).
+    pub fn pipelines(mut self, n: usize) -> ServiceBuilder {
+        self.pipelines = n;
+        self
+    }
+
+    /// Maximum batch a worker takes per dispatch (default: 16).
+    pub fn max_batch(mut self, n: usize) -> ServiceBuilder {
+        self.max_batch = n;
+        self
+    }
+
+    /// Per-kernel admission bound (default: 1024). A kernel whose
+    /// queue is at this depth answers [`ServiceError::Rejected`] —
+    /// note `call_batch` needs the whole batch admitted at once, so
+    /// batches larger than this can never be admitted.
+    pub fn queue_depth(mut self, n: usize) -> ServiceBuilder {
+        self.queue_depth = n;
+        self
+    }
+
+    /// Pipeline replicas inside each sim-backend overlay (Fig. 4).
+    pub fn sim_replicas(mut self, n: usize) -> ServiceBuilder {
+        self.sim_replicas = n;
+        self
+    }
+
+    /// FIFO capacity of each simulated pipeline.
+    pub fn sim_fifo_capacity(mut self, n: usize) -> ServiceBuilder {
+        self.sim_fifo_capacity = n;
+        self
+    }
+
+    /// Serve an explicit kernel set instead of the benchmark suite
+    /// (custom workloads, tests).
+    pub fn kernels(mut self, graphs: Vec<Dfg>) -> ServiceBuilder {
+        self.kernels = Some(graphs);
+        self
+    }
+
+    /// Compile the registry, spawn the workers, and wait until every
+    /// backend is ready to serve.
+    pub fn build(self) -> Result<OverlayService, ServiceError> {
+        let backend = self.backend;
+        let registry = match self.kernels {
+            Some(graphs) => KernelRegistry::compile(graphs),
+            None => KernelRegistry::compile_bench_suite(),
+        }
+        .map_err(|e| ServiceError::Backend {
+            backend: "compile".to_string(),
+            message: format!("{e}"),
+        })?;
+        let engine = Engine::start(EngineConfig {
+            backend,
+            artifacts_dir: self.artifacts_dir,
+            workers: self.pipelines,
+            max_batch: self.max_batch,
+            queue_depth: self.queue_depth,
+            sim_replicas: self.sim_replicas,
+            sim_fifo_capacity: self.sim_fifo_capacity,
+            registry: Arc::new(registry),
+        })
+        .map_err(|e| ServiceError::Backend {
+            backend: backend.name().to_string(),
+            message: format!("{e}"),
+        })?;
+        Ok(OverlayService { engine })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Service
+// ---------------------------------------------------------------------
+
+/// A running overlay serving instance: compiled kernels, fabric
+/// workers, bounded queues. Clients interact through [`KernelHandle`]
+/// sessions created with [`OverlayService::kernel`].
+pub struct OverlayService {
+    engine: Engine,
+}
+
+impl OverlayService {
+    /// Start configuring a service.
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder::default()
+    }
+
+    /// Resolve a kernel name to a client session handle. The
+    /// [`KernelId`] and arity are bound here, once — calls through the
+    /// handle never touch strings again.
+    pub fn kernel(&self, name: &str) -> Result<KernelHandle, ServiceError> {
+        let registry = self.engine.registry();
+        let id = registry
+            .id_of(name)
+            .ok_or_else(|| ServiceError::UnknownKernel(name.to_string()))?;
+        let kernel = Arc::clone(registry.kernel(id).expect("interned id resolves"));
+        Ok(KernelHandle {
+            shared: Arc::clone(self.engine.shared()),
+            kernel,
+            id,
+        })
+    }
+
+    /// One handle per registry kernel, in [`KernelId`] order. Each is
+    /// resolved through [`Self::kernel`], so ids always come from the
+    /// registry's name index rather than a parallel counter.
+    pub fn handles(&self) -> Vec<KernelHandle> {
+        self.engine
+            .registry()
+            .names()
+            .iter()
+            .map(|name| self.kernel(name).expect("registry name resolves"))
+            .collect()
+    }
+
+    /// Kernel names in [`KernelId`] order.
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.engine.registry().names()
+    }
+
+    /// The execution substrate this service serves through.
+    pub fn backend(&self) -> BackendKind {
+        self.engine.backend()
+    }
+
+    /// The shared compiled-kernel registry (oracle checks, tooling).
+    pub fn registry(&self) -> &Arc<KernelRegistry> {
+        self.engine.registry()
+    }
+
+    /// Requests completed so far.
+    pub fn completed(&self) -> u64 {
+        self.engine.completed()
+    }
+
+    /// A typed point-in-time metrics snapshot (render it with
+    /// [`MetricsSnapshot::render`], serialize with
+    /// [`MetricsSnapshot::to_json`]).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let backend = self.engine.backend().name();
+        let workers = self.engine.workers();
+        let depth = self.engine.queue_depth();
+        self.engine
+            .with_metrics(|m| MetricsSnapshot::collect(m, backend, workers, depth))
+    }
+
+    /// Graceful shutdown: stop admitting, **drain** every queue (all
+    /// admitted requests are replied to), then join the workers.
+    /// Outstanding [`KernelHandle`]s stay valid but answer
+    /// [`ServiceError::ShutDown`] from then on.
+    pub fn shutdown(self) -> Result<(), ServiceError> {
+        self.engine.shutdown().map_err(|e| ServiceError::Backend {
+            backend: "engine".to_string(),
+            message: format!("{e}"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel sessions
+// ---------------------------------------------------------------------
+
+/// A client session for one kernel: pre-resolved id + arity, cheap to
+/// clone, safe to send to other threads, independent of the
+/// [`OverlayService`] value's lifetime (it holds the engine state by
+/// `Arc`).
+#[derive(Clone)]
+pub struct KernelHandle {
+    shared: Arc<Shared>,
+    kernel: Arc<CompiledKernel>,
+    id: KernelId,
+}
+
+impl fmt::Debug for KernelHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "KernelHandle({} -> {})", self.kernel.name, self.id)
+    }
+}
+
+impl KernelHandle {
+    pub fn name(&self) -> &str {
+        &self.kernel.name
+    }
+
+    pub fn id(&self) -> KernelId {
+        self.id
+    }
+
+    /// Input arity (words per request row).
+    pub fn arity(&self) -> usize {
+        self.kernel.n_inputs
+    }
+
+    /// Output arity (words per reply row).
+    pub fn n_outputs(&self) -> usize {
+        self.kernel.n_outputs
+    }
+
+    /// The compiled form behind this handle (DFG oracle, schedule,
+    /// timing, context image, tape).
+    pub fn compiled(&self) -> &Arc<CompiledKernel> {
+        &self.kernel
+    }
+
+    fn rejection(&self, r: SubmitRejection) -> ServiceError {
+        match r {
+            SubmitRejection::ShutDown => ServiceError::ShutDown,
+            SubmitRejection::Full { queued, limit } => ServiceError::Rejected {
+                kernel: self.kernel.name.clone(),
+                queued,
+                limit,
+            },
+        }
+    }
+
+    fn check_arity(&self, got: usize) -> Result<(), ServiceError> {
+        if got != self.kernel.n_inputs {
+            return Err(ServiceError::ShapeMismatch {
+                kernel: self.kernel.name.clone(),
+                expected: self.kernel.n_inputs,
+                got,
+            });
+        }
+        Ok(())
+    }
+
+    /// Non-blocking submit: validates shape, passes admission control,
+    /// and returns a [`Pending`] reply.
+    pub fn submit(&self, inputs: &[i32]) -> Result<Pending, ServiceError> {
+        self.check_arity(inputs.len())?;
+        let rx = self
+            .shared
+            .submit(self.id, inputs.to_vec())
+            .map_err(|r| self.rejection(r))?;
+        Ok(Pending {
+            rx,
+            kernel: Arc::clone(&self.kernel),
+        })
+    }
+
+    /// Blocking call: submit one request and wait for its reply.
+    pub fn call(&self, inputs: &[i32]) -> Result<Vec<i32>, ServiceError> {
+        self.submit(inputs)?.wait()
+    }
+
+    /// Blocking batch call: the whole batch is admitted atomically
+    /// (all rows or [`ServiceError::Rejected`]), executed
+    /// kernel-affine, and the replies are reassembled in row order.
+    pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
+        if batch.is_empty() {
+            return Err(ServiceError::EmptyBatch {
+                kernel: self.kernel.name.clone(),
+            });
+        }
+        self.check_arity(batch.arity())?;
+        let rxs = self
+            .shared
+            .submit_batch(self.id, batch)
+            .map_err(|r| self.rejection(r))?;
+        let mut out = FlatBatch::with_capacity(self.kernel.n_outputs, batch.n_rows());
+        for rx in rxs {
+            let row = rx
+                .recv()
+                .map_err(|_| ServiceError::Disconnected {
+                    kernel: self.kernel.name.clone(),
+                })?
+                .map_err(ServiceError::from)?;
+            out.push(&row);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pending replies
+// ---------------------------------------------------------------------
+
+/// A future-like reply to a [`KernelHandle::submit`]: poll it, block
+/// on it, or bound the wait with a deadline. One-shot — after a result
+/// has been produced, further waits report
+/// [`ServiceError::Disconnected`].
+pub struct Pending {
+    rx: mpsc::Receiver<Reply>,
+    kernel: Arc<CompiledKernel>,
+}
+
+impl fmt::Debug for Pending {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Pending({})", self.kernel.name)
+    }
+}
+
+impl Pending {
+    /// The kernel this reply belongs to.
+    pub fn kernel_name(&self) -> &str {
+        &self.kernel.name
+    }
+
+    /// Non-blocking check: `Some(result)` once the reply has arrived.
+    pub fn poll(&mut self) -> Option<Result<Vec<i32>, ServiceError>> {
+        match self.rx.try_recv() {
+            Ok(reply) => Some(reply.map_err(ServiceError::from)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServiceError::Disconnected {
+                kernel: self.kernel.name.clone(),
+            })),
+        }
+    }
+
+    /// Block until the reply arrives.
+    pub fn wait(self) -> Result<Vec<i32>, ServiceError> {
+        match self.rx.recv() {
+            Ok(reply) => reply.map_err(ServiceError::from),
+            Err(_) => Err(ServiceError::Disconnected {
+                kernel: self.kernel.name.clone(),
+            }),
+        }
+    }
+
+    /// Block at most `timeout`; [`ServiceError::DeadlineExceeded`] if
+    /// the reply has not arrived by then. The request itself stays in
+    /// flight — poll or wait again to pick the reply up later.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Vec<i32>, ServiceError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => reply.map_err(ServiceError::from),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServiceError::DeadlineExceeded {
+                kernel: self.kernel.name.clone(),
+            }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServiceError::Disconnected {
+                kernel: self.kernel.name.clone(),
+            }),
+        }
+    }
+
+    /// Block until `deadline` at the latest.
+    pub fn wait_deadline(&mut self, deadline: Instant) -> Result<Vec<i32>, ServiceError> {
+        self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::eval;
+    use crate::frontend;
+    use crate::util::prng::Rng;
+
+    fn service(backend: BackendKind, pipelines: usize, max_batch: usize) -> OverlayService {
+        OverlayService::builder()
+            .backend(backend)
+            .pipelines(pipelines)
+            .max_batch(max_batch)
+            .build()
+            .unwrap()
+    }
+
+    fn mixed_workload(svc: &OverlayService, requests: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let handles = svc.handles();
+        let mut jobs = Vec::new();
+        for _ in 0..requests {
+            let h = rng.choose(&handles);
+            let inputs: Vec<i32> = (0..h.arity())
+                .map(|_| rng.range_i64(-500, 500) as i32)
+                .collect();
+            let want = eval(&h.compiled().dfg, &inputs);
+            jobs.push((h.submit(&inputs).unwrap(), want));
+        }
+        for (p, want) in jobs {
+            assert_eq!(p.wait().unwrap(), want);
+        }
+    }
+
+    // ---- sim backend: runs unconditionally, zero artifacts ----------
+
+    #[test]
+    fn serves_mixed_workload_correctly() {
+        let svc = service(BackendKind::Sim, 1, 8);
+        mixed_workload(&svc, 40, 5);
+        assert_eq!(svc.completed(), 40);
+        let snap = svc.metrics();
+        assert_eq!(snap.completed, 40);
+        assert_eq!(snap.rejected, 0);
+        assert!(snap.context_switches > 0);
+        assert!(snap.render().contains("context switches"));
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn call_blocks_for_result() {
+        let svc = service(BackendKind::Sim, 1, 4);
+        let h = svc.kernel("gradient").unwrap();
+        assert_eq!(h.arity(), 5);
+        assert_eq!(h.n_outputs(), 1);
+        assert_eq!(h.call(&[3, 5, 2, 7, 1]).unwrap(), vec![1 + 9 + 25 + 1]);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn unknown_kernel_and_shape_mismatch_are_typed() {
+        let svc = service(BackendKind::Sim, 1, 4);
+        assert_eq!(
+            svc.kernel("nonesuch").unwrap_err(),
+            ServiceError::UnknownKernel("nonesuch".to_string())
+        );
+        let h = svc.kernel("gradient").unwrap();
+        // Wrong arity is refused at the handle, before any queueing.
+        assert_eq!(
+            h.call(&[1, 2]).unwrap_err(),
+            ServiceError::ShapeMismatch {
+                kernel: "gradient".to_string(),
+                expected: 5,
+                got: 2
+            }
+        );
+        // Batch shape errors are typed too.
+        assert_eq!(
+            h.call_batch(&FlatBatch::new(5)).unwrap_err(),
+            ServiceError::EmptyBatch {
+                kernel: "gradient".to_string()
+            }
+        );
+        assert!(matches!(
+            h.call_batch(&FlatBatch::from_rows(2, &[vec![1, 2]])),
+            Err(ServiceError::ShapeMismatch { got: 2, .. })
+        ));
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn multiple_sim_workers_serve_concurrently() {
+        let svc = service(BackendKind::Sim, 3, 8);
+        mixed_workload(&svc, 60, 11);
+        assert_eq!(svc.completed(), 60);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn ref_backend_serves_too() {
+        let svc = service(BackendKind::Ref, 2, 16);
+        assert_eq!(svc.backend(), BackendKind::Ref);
+        mixed_workload(&svc, 30, 7);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn turbo_backend_serves_too() {
+        let svc = service(BackendKind::Turbo, 2, 32);
+        assert_eq!(svc.backend(), BackendKind::Turbo);
+        mixed_workload(&svc, 50, 13);
+        assert_eq!(svc.completed(), 50);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn call_batch_matches_oracle_rowwise() {
+        let svc = service(BackendKind::Turbo, 2, 8);
+        let h = svc.kernel("poly6").unwrap();
+        let mut rng = Rng::new(99);
+        let mut batch = FlatBatch::new(h.arity());
+        for _ in 0..23 {
+            batch.push_iter((0..h.arity()).map(|_| rng.range_i64(-2000, 2000) as i32));
+        }
+        let out = h.call_batch(&batch).unwrap();
+        assert_eq!(out.n_rows(), 23);
+        assert_eq!(out.arity(), h.n_outputs());
+        for (i, row) in batch.iter().enumerate() {
+            assert_eq!(out.row(i), &eval(&h.compiled().dfg, row)[..]);
+        }
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn handles_are_clone_send_sessions() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<KernelHandle>();
+        assert_send_sync::<OverlayService>();
+
+        let svc = service(BackendKind::Turbo, 2, 16);
+        let h = svc.kernel("chebyshev").unwrap();
+        let mut threads = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                for i in 0..10 {
+                    let x = t * 10 + i;
+                    assert_eq!(h.call(&[x]).unwrap(), vec![eval(&h.compiled().dfg, &[x])[0]]);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(svc.completed(), 40);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_then_rejects_new_work() {
+        let svc = service(BackendKind::Sim, 1, 8);
+        let h = svc.kernel("gradient").unwrap();
+        // Admit work, then shut down before collecting: every admitted
+        // request must still be answered (drain semantics).
+        let mut pendings = Vec::new();
+        for i in 0..12 {
+            pendings.push(h.submit(&[3, 5, 2, 7, i]).unwrap());
+        }
+        svc.shutdown().unwrap();
+        for (i, p) in pendings.into_iter().enumerate() {
+            let i = i as i32;
+            assert_eq!(p.wait().unwrap(), vec![1 + 9 + 25 + (2 - i) * (2 - i)]);
+        }
+        // The handle outlives the service value, but new work is
+        // refused with the typed shutdown error.
+        assert_eq!(h.call(&[0; 5]).unwrap_err(), ServiceError::ShutDown);
+        assert_eq!(h.submit(&[0; 5]).unwrap_err(), ServiceError::ShutDown);
+        let one = FlatBatch::from_rows(5, &[vec![0; 5]]);
+        assert_eq!(h.call_batch(&one).unwrap_err(), ServiceError::ShutDown);
+    }
+
+    #[test]
+    fn admission_rejection_is_typed_and_counted() {
+        let svc = OverlayService::builder()
+            .backend(BackendKind::Ref)
+            .pipelines(1)
+            .max_batch(4)
+            .queue_depth(2)
+            .build()
+            .unwrap();
+        let h = svc.kernel("gradient").unwrap();
+        // A batch wider than the whole queue depth is deterministically
+        // rejected, whatever the workers are doing.
+        let rows: Vec<Vec<i32>> = (0..3).map(|i| vec![i; 5]).collect();
+        let batch = FlatBatch::from_rows(5, &rows);
+        match h.call_batch(&batch).unwrap_err() {
+            ServiceError::Rejected { kernel, limit, .. } => {
+                assert_eq!(kernel, "gradient");
+                assert_eq!(limit, 2);
+            }
+            other => panic!("expected Rejected, got {other}"),
+        }
+        assert_eq!(svc.metrics().rejected, 3);
+        assert_eq!(svc.completed(), 0);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pending_polls_to_completion() {
+        let svc = service(BackendKind::Turbo, 1, 4);
+        let h = svc.kernel("gradient").unwrap();
+        let mut p = h.submit(&[3, 5, 2, 7, 1]).unwrap();
+        let got = loop {
+            if let Some(r) = p.poll() {
+                break r.unwrap();
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(got, vec![36]);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn custom_kernel_registry() {
+        let g = frontend::compile("kernel twice_plus(a, b) { return a + a + b; }").unwrap();
+        let svc = OverlayService::builder()
+            .backend(BackendKind::Sim)
+            .kernels(vec![g])
+            .build()
+            .unwrap();
+        assert_eq!(svc.kernel_names(), vec!["twice_plus"]);
+        let h = svc.kernel("twice_plus").unwrap();
+        assert_eq!(h.call(&[10, 3]).unwrap(), vec![23]);
+        // The bench suite is not present in a custom registry.
+        assert!(svc.kernel("gradient").is_err());
+        svc.shutdown().unwrap();
+    }
+
+    // ---- PJRT backend: artifact-gated variants ----------------------
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| dir.to_string_lossy().into_owned())
+    }
+
+    #[test]
+    fn pjrt_serves_when_artifacts_exist() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let svc = OverlayService::builder()
+            .backend(BackendKind::Pjrt)
+            .artifacts_dir(dir)
+            .pipelines(1)
+            .max_batch(8)
+            .build()
+            .unwrap();
+        mixed_workload(&svc, 40, 5);
+        assert_eq!(svc.completed(), 40);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn missing_artifacts_fail_the_build() {
+        let err = OverlayService::builder()
+            .backend(BackendKind::Pjrt)
+            .artifacts_dir("/definitely/not/here")
+            .build()
+            .unwrap_err();
+        match err {
+            ServiceError::Backend { backend, message } => {
+                assert_eq!(backend, "pjrt");
+                assert!(message.contains("artifacts"), "{message}");
+            }
+            other => panic!("expected Backend error, got {other}"),
+        }
+    }
+}

@@ -164,6 +164,55 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Heap-allocation counter for allocation-free hot-path audits.
+///
+/// Install it as the global allocator in a bench binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: tmfu_overlay::util::bench::CountingAlloc =
+///     tmfu_overlay::util::bench::CountingAlloc;
+/// ```
+///
+/// then diff [`alloc_count`] around a measured region. Counts
+/// `alloc`/`alloc_zeroed`/`realloc` events process-wide (all threads),
+/// so audit single-threaded regions and assert with a margin. When the
+/// allocator is *not* installed the counter simply stays at zero.
+pub struct CountingAlloc;
+
+static ALLOCATIONS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Allocation events observed so far by [`CountingAlloc`].
+pub fn alloc_count() -> u64 {
+    ALLOCATIONS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: std::alloc::Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+}
+
 /// Collects measurements plus free-form metadata for the `--json`
 /// mode. The emitted shape is stable:
 /// `{ meta: {...}, measurements: [Measurement::to_json(), ...] }`.

@@ -285,4 +285,94 @@ mod tests {
         let m = demo().parse(&args(&["g", "--batches", "abc"])).unwrap();
         assert!(m.get_usize("batches").is_err());
     }
+
+    #[test]
+    fn get_usize_error_paths() {
+        // Missing optional value: Ok(None), not an error.
+        let m = demo().parse(&args(&["g"])).unwrap();
+        assert_eq!(m.get_usize("seed").unwrap(), None);
+        assert_eq!(m.get_f64("seed").unwrap(), None);
+        // Negative and overflowing values are parse errors with the
+        // offending flag named.
+        let m = demo().parse(&args(&["g", "--batches", "-3"])).unwrap();
+        let err = m.get_usize("batches").unwrap_err();
+        assert!(err.to_string().contains("--batches"), "{err}");
+        assert!(err.to_string().contains("-3"), "{err}");
+        let m = demo()
+            .parse(&args(&["g", "--batches", "99999999999999999999999999"]))
+            .unwrap();
+        assert!(m.get_usize("batches").is_err());
+        // get_f64 accepts what get_usize rejects (and vice versa).
+        let m = demo().parse(&args(&["g", "--batches", "2.5"])).unwrap();
+        assert!(m.get_usize("batches").is_err());
+        assert_eq!(m.get_f64("batches").unwrap(), Some(2.5));
+        let m = demo().parse(&args(&["g", "--batches", "x"])).unwrap();
+        assert!(m.get_f64("batches").is_err());
+    }
+
+    #[test]
+    fn defaults_do_not_override_explicit_values() {
+        // Default applies only when the flag is absent.
+        let m = demo().parse(&args(&["g"])).unwrap();
+        assert_eq!(m.get("batches"), Some("4"));
+        let m = demo().parse(&args(&["g", "--batches", "7"])).unwrap();
+        assert_eq!(m.get("batches"), Some("7"));
+        // =-style wins the same way; an empty value is kept as-is.
+        let m = demo().parse(&args(&["g", "--batches="])).unwrap();
+        assert_eq!(m.get("batches"), Some(""));
+        assert!(m.get_usize("batches").is_err());
+        // Last occurrence wins when a flag repeats.
+        let m = demo()
+            .parse(&args(&["g", "--batches", "1", "--batches", "9"]))
+            .unwrap();
+        assert_eq!(m.get_usize("batches").unwrap(), Some(9));
+    }
+
+    #[test]
+    fn positionals_interleave_with_options() {
+        // Options may appear before, between, or after positionals.
+        let two = Command::new("cp", "copy")
+            .positional("src", "source")
+            .positional("dst", "destination")
+            .opt("mode", "copy mode", Some("fast"))
+            .flag("verbose", "chatty");
+        let m = two
+            .parse(&args(&["--mode", "slow", "a.txt", "--verbose", "b.txt"]))
+            .unwrap();
+        assert_eq!(m.get_pos("src"), Some("a.txt"));
+        assert_eq!(m.get_pos("dst"), Some("b.txt"));
+        assert_eq!(m.get("mode"), Some("slow"));
+        assert!(m.flag("verbose"));
+        // Unknown positional name lookups are None, not panics.
+        assert_eq!(m.get_pos("nonesuch"), None);
+        // Missing second positional names the gap.
+        let err = two.parse(&args(&["only"])).unwrap_err();
+        assert!(err.to_string().contains("<dst>"), "{err}");
+        // Extra positionals are rejected with the offender.
+        let err = two.parse(&args(&["a", "b", "c"])).unwrap_err();
+        assert!(err.to_string().contains("'c'"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flag_suggests_usage() {
+        let err = demo().parse(&args(&["g", "--nope"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown option --nope"), "{msg}");
+        // The usage block rides along so the user sees what's legal.
+        assert!(msg.contains("USAGE"), "{msg}");
+        assert!(msg.contains("--batches"), "{msg}");
+        // Value-style unknown flags are rejected too.
+        assert!(demo().parse(&args(&["g", "--nope=3"])).is_err());
+    }
+
+    #[test]
+    fn usage_lists_positionals_defaults_and_flags() {
+        let u = demo().usage();
+        assert!(u.contains("<kernel"), "{u}");
+        assert!(u.contains("[default: 4]"), "{u}");
+        assert!(u.contains("--trace"), "{u}");
+        // No default annotation for defaultless opts.
+        let seed_line = u.lines().find(|l| l.contains("--seed")).unwrap();
+        assert!(!seed_line.contains("default"), "{seed_line}");
+    }
 }

@@ -115,21 +115,60 @@ impl Samples {
         *self.xs.last().unwrap()
     }
 
+    /// Typed distribution summary, `None` when no samples were taken.
+    /// The single source for every "n/mean/percentiles/min/max" view —
+    /// the rendered one-liner ([`Self::summary`]) and the service
+    /// layer's `MetricsSnapshot` both derive from it.
+    pub fn summarize(&mut self) -> Option<LatencySummary> {
+        if self.xs.is_empty() {
+            return None;
+        }
+        Some(LatencySummary {
+            n: self.len(),
+            mean: self.mean(),
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            min: self.min(),
+            max: self.max(),
+        })
+    }
+
     /// "p50/p95/p99 mean min max" one-line summary (values in the caller's
     /// unit).
     pub fn summary(&mut self, unit: &str) -> String {
-        if self.xs.is_empty() {
-            return "no samples".into();
+        match self.summarize() {
+            Some(s) => s.render(unit),
+            None => "no samples".into(),
         }
+    }
+}
+
+/// Summary of one latency-like distribution (unit decided by the
+/// producer; serving metrics use microseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// The one-line human-readable form.
+    pub fn render(&self, unit: &str) -> String {
         format!(
             "n={} mean={:.3}{u} p50={:.3}{u} p95={:.3}{u} p99={:.3}{u} min={:.3}{u} max={:.3}{u}",
-            self.len(),
-            self.mean(),
-            self.percentile(50.0),
-            self.percentile(95.0),
-            self.percentile(99.0),
-            self.min(),
-            self.max(),
+            self.n,
+            self.mean,
+            self.p50,
+            self.p95,
+            self.p99,
+            self.min,
+            self.max,
             u = unit
         )
     }

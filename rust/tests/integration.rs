@@ -259,7 +259,7 @@ fn prop_normalize_idempotent_on_benchmarks() {
 /// cycle-accurate simulator backend produce identical outputs for
 /// every benchmark kernel on random batches (full wrapping-i32 range).
 /// This is the property that makes the backends interchangeable behind
-/// the coordinator.
+/// the service engine.
 #[test]
 fn prop_backend_equivalence_ref_vs_sim() {
     use tmfu_overlay::exec::{Backend, FlatBatch, KernelRegistry, RefBackend, SimBackend};
@@ -375,42 +375,125 @@ fn fuzz_turbo_tape_against_oracle() {
 }
 
 /// End-to-end spot check: the same workload served through a turbo
-/// coordinator and a sim coordinator returns identical, oracle-exact
-/// results (the serving-layer closure of the three-oracle chain).
+/// service and a sim service returns identical, oracle-exact results
+/// (the serving-layer closure of the three-oracle chain). Sessions are
+/// pre-resolved `KernelHandle`s — no name lookups inside the loop.
 #[test]
-fn turbo_vs_sim_spot_check_through_coordinator() {
-    use tmfu_overlay::coordinator::{Coordinator, CoordinatorConfig};
+fn turbo_vs_sim_spot_check_through_service() {
     use tmfu_overlay::exec::BackendKind;
+    use tmfu_overlay::service::OverlayService;
     let mk = |kind| {
-        let mut cfg = CoordinatorConfig::new(kind);
-        cfg.workers = 2;
-        cfg.max_batch = 16;
-        Coordinator::start_with(cfg).unwrap()
+        OverlayService::builder()
+            .backend(kind)
+            .pipelines(2)
+            .max_batch(16)
+            .build()
+            .unwrap()
     };
     let turbo = mk(BackendKind::Turbo);
     let sim = mk(BackendKind::Sim);
-    let names = tmfu_overlay::bench_suite::all_names();
+    let turbo_handles = turbo.handles();
+    let sim_handles = sim.handles();
     let mut rng = Rng::new(77);
     let mut jobs = Vec::new();
     for i in 0..48 {
-        let kernel = names[i % names.len()];
-        let g = &turbo.registry().get(kernel).unwrap().dfg;
-        let inputs: Vec<i32> = (0..g.inputs().len())
+        let ht = &turbo_handles[i % turbo_handles.len()];
+        let hs = &sim_handles[i % sim_handles.len()];
+        assert_eq!(ht.name(), hs.name(), "registries must agree on id order");
+        let inputs: Vec<i32> = (0..ht.arity())
             .map(|_| rng.range_i64(i32::MIN as i64, i32::MAX as i64) as i32)
             .collect();
-        let want = eval(g, &inputs);
-        let rx_t = turbo.submit(kernel, inputs.clone()).unwrap();
-        let rx_s = sim.submit(kernel, inputs).unwrap();
-        jobs.push((rx_t, rx_s, want));
+        let want = eval(&ht.compiled().dfg, &inputs);
+        jobs.push((ht.submit(&inputs).unwrap(), hs.submit(&inputs).unwrap(), want));
     }
-    for (rx_t, rx_s, want) in jobs {
-        let got_t = rx_t.recv().unwrap().unwrap();
-        let got_s = rx_s.recv().unwrap().unwrap();
+    for (pt, ps, want) in jobs {
+        let got_t = pt.wait().unwrap();
+        let got_s = ps.wait().unwrap();
         assert_eq!(got_t, want, "turbo diverged from oracle");
-        assert_eq!(got_s, got_t, "sim and turbo coordinators disagree");
+        assert_eq!(got_s, got_t, "sim and turbo services disagree");
     }
     turbo.shutdown().unwrap();
     sim.shutdown().unwrap();
+}
+
+/// Service-layer transparency property: for every benchmark kernel,
+/// `KernelHandle::call` / `call_batch` through a live `OverlayService`
+/// return exactly what a directly-constructed backend returns for the
+/// same batch — the service adds queueing, batching and sessions, but
+/// never changes results. Checked on the ref and turbo substrates,
+/// plus the lifecycle edges: submit-after-shutdown and a deterministic
+/// admission rejection.
+#[test]
+fn prop_service_equivalence() {
+    use tmfu_overlay::exec::{make_backend, Backend, BackendKind, FlatBatch};
+    use tmfu_overlay::service::{OverlayService, ServiceError};
+
+    for kind in [BackendKind::Ref, BackendKind::Turbo] {
+        let service = OverlayService::builder()
+            .backend(kind)
+            .pipelines(2)
+            .max_batch(8)
+            .build()
+            .unwrap();
+        let mut direct = make_backend(kind, std::path::Path::new("artifacts"), 1, 4096).unwrap();
+        let mut rng = Rng::new(0x5E4 + kind.name().len() as u64);
+        for h in service.handles() {
+            let kernel = h.compiled().clone();
+            let mut batch = FlatBatch::new(h.arity());
+            // Wrapping corners ride along with the random rows.
+            batch.push_iter((0..h.arity()).map(|_| i32::MIN));
+            batch.push_iter((0..h.arity()).map(|_| 1 << 17));
+            for _ in 0..19 {
+                batch.push_iter((0..h.arity()).map(|_| rng.next_i32()));
+            }
+            let want = direct.execute(&kernel, &batch).unwrap().outputs;
+            // Whole-batch call: row order and values are preserved.
+            let got = h.call_batch(&batch).unwrap();
+            assert_eq!(got, want, "{} ({kind}) call_batch diverged", h.name());
+            // Per-row calls agree with the batch rows.
+            for (i, row) in batch.iter().enumerate().step_by(7) {
+                assert_eq!(
+                    h.call(row).unwrap(),
+                    want.row(i).to_vec(),
+                    "{} ({kind}) call diverged on row {i}",
+                    h.name()
+                );
+            }
+        }
+        service.shutdown().unwrap();
+    }
+
+    // Lifecycle edge 1: handles outlive the service value, and work
+    // submitted after shutdown gets the typed shutdown error.
+    let service = OverlayService::builder()
+        .backend(BackendKind::Turbo)
+        .build()
+        .unwrap();
+    let h = service.kernel("gradient").unwrap();
+    service.shutdown().unwrap();
+    assert_eq!(h.call(&[1, 2, 3, 4, 5]).unwrap_err(), ServiceError::ShutDown);
+    assert_eq!(h.submit(&[1, 2, 3, 4, 5]).unwrap_err(), ServiceError::ShutDown);
+
+    // Lifecycle edge 2: a batch wider than the configured queue depth
+    // is deterministically refused by admission control and counted in
+    // the metrics snapshot.
+    let service = OverlayService::builder()
+        .backend(BackendKind::Ref)
+        .queue_depth(4)
+        .build()
+        .unwrap();
+    let h = service.kernel("gradient").unwrap();
+    let rows: Vec<Vec<i32>> = (0..5).map(|i| vec![i; 5]).collect();
+    let batch = FlatBatch::from_rows(5, &rows);
+    match h.call_batch(&batch).unwrap_err() {
+        ServiceError::Rejected { queued, limit, .. } => {
+            assert_eq!(limit, 4);
+            assert!(queued <= 4);
+        }
+        other => panic!("expected Rejected, got {other}"),
+    }
+    assert_eq!(service.metrics().rejected, 5);
+    service.shutdown().unwrap();
 }
 
 /// Full-suite smoke of the CLI-facing report renderers (they are the

@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify fmt clippy bench bench-all bench-mirror artifacts dfg check-dfg clean
+.PHONY: build test verify fmt clippy doc wire-smoke bench bench-all bench-mirror artifacts dfg check-dfg clean
 
 build:
 	$(CARGO) build --release
@@ -17,8 +17,19 @@ fmt:
 clippy:
 	$(CARGO) clippy --release --all-targets -- -D warnings
 
-# The full gate: formatting, lints, release build, test suite.
-verify: fmt clippy build test
+# Rustdoc is part of the contract: broken intra-doc links or malformed
+# examples in service/, wire/ and client/ fail the build.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+# Loopback smoke: `tmfu listen` on a unix socket + `tmfu call`
+# asserting the kernel result and a wire metrics fetch.
+wire-smoke: build
+	./tools/wire_smoke.sh
+
+# The full gate: formatting, lints, release build, test suite, doc
+# build, wire loopback smoke.
+verify: fmt clippy build test doc wire-smoke
 
 # Perf trajectory: run the serving-path benchmarks and (re)write the
 # checked-in baseline JSON (packets/s per backend per kernel, sim

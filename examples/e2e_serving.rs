@@ -1,7 +1,7 @@
 //! End-to-end system driver (the repo's headline validation run —
 //! recorded in EXPERIMENTS.md §E2E).
 //!
-//! All three layers compose on a real workload:
+//! All layers compose on a real workload:
 //!   L1/L2 — an execution backend: the cycle-accurate overlay
 //!           simulator (default, zero setup), the DFG interpreter, the
 //!           tape-compiled turbo executor, or the AOT-compiled
@@ -9,7 +9,11 @@
 //!   L3    — the typed service API: `OverlayService` fabric workers
 //!           behind `Clone + Send` `KernelHandle` sessions with
 //!           pre-resolved kernel ids, bounded admission queues and
-//!           non-blocking `submit -> Pending` replies.
+//!           non-blocking `submit -> Pending` replies;
+//!   L4    — (wire mode) the length-prefixed wire protocol: the same
+//!           workload crosses a loopback Unix socket through a
+//!           `WireServer` + `OverlayClient`, exercising framing,
+//!           request-id correlation and the `RemoteKernel` mirror.
 //!
 //! The workload is a Poisson-arrival stream of requests over a Zipf-ish
 //! kernel mix (a few hot kernels, a long tail — the multi-kernel
@@ -19,15 +23,50 @@
 //! counts and the simulated 300 MHz fabric timeline.
 //!
 //! ```sh
-//! cargo run --release --example e2e_serving [requests] [pipelines] [ref|sim|pjrt|turbo]
+//! cargo run --release --example e2e_serving [requests] [pipelines] \
+//!     [ref|sim|pjrt|turbo] [inproc|wire]
 //! ```
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+use tmfu_overlay::client::{OverlayClient, RemoteKernel, RemotePending};
 use tmfu_overlay::dfg::eval;
 use tmfu_overlay::exec::BackendKind;
-use tmfu_overlay::service::{OverlayService, Pending};
+use tmfu_overlay::service::{KernelHandle, OverlayService, Pending};
 use tmfu_overlay::util::prng::Rng;
 use tmfu_overlay::util::stats::Samples;
+use tmfu_overlay::wire::server::WireServer;
+use tmfu_overlay::wire::ListenAddr;
+
+/// One kernel session, in-process or across the loopback socket — the
+/// workload below is identical either way.
+enum Session {
+    Local(KernelHandle),
+    Remote(RemoteKernel),
+}
+
+enum Reply {
+    Local(Pending),
+    Remote(RemotePending),
+}
+
+impl Session {
+    fn submit(&self, inputs: &[i32]) -> anyhow::Result<Reply> {
+        Ok(match self {
+            Session::Local(h) => Reply::Local(h.submit(inputs)?),
+            Session::Remote(r) => Reply::Remote(r.submit(inputs)?),
+        })
+    }
+}
+
+impl Reply {
+    fn wait(self) -> anyhow::Result<Vec<i32>> {
+        Ok(match self {
+            Reply::Local(p) => p.wait()?,
+            Reply::Remote(p) => p.wait()?,
+        })
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let requests: usize = std::env::args()
@@ -46,23 +85,50 @@ fn main() -> anyhow::Result<()> {
         .transpose()
         .map_err(|e: String| anyhow::anyhow!(e))?
         .unwrap_or(BackendKind::Sim);
+    let mode = std::env::args().nth(4).unwrap_or_else(|| "inproc".to_string());
+    anyhow::ensure!(
+        mode == "inproc" || mode == "wire",
+        "mode must be 'inproc' or 'wire', got '{mode}'"
+    );
     let mean_rate_per_s = 20_000.0; // Poisson arrival rate
     let max_batch = 32;
 
-    println!("starting {pipelines} '{backend}' fabric worker(s)...");
-    let service = OverlayService::builder()
-        .backend(backend)
-        .pipelines(pipelines)
-        .max_batch(max_batch)
-        .queue_depth(requests.max(1024)) // closed-loop check: admit all
-        .build()?;
+    println!("starting {pipelines} '{backend}' fabric worker(s) ({mode} mode)...");
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(backend)
+            .pipelines(pipelines)
+            .max_batch(max_batch)
+            .queue_depth(requests.max(1024)) // closed-loop check: admit all
+            .build()?,
+    );
 
     // One pre-resolved session handle per kernel — names are interned
-    // exactly once, before the clock starts.
+    // exactly once, before the clock starts. The handles also carry
+    // the compiled DFG used as the functional oracle in both modes.
     let handles = service.handles();
 
+    // Wire mode: the same service, reached through a loopback Unix
+    // socket — framing + correlation overhead included in the numbers.
+    let (server, client) = if mode == "wire" {
+        let path = std::env::temp_dir().join(format!("tmfu-e2e-{}.sock", std::process::id()));
+        let server = WireServer::bind(Arc::clone(&service), &ListenAddr::Unix(path.clone()))?;
+        let client = OverlayClient::connect(&format!("unix:{}", path.display()))?;
+        println!("wire transport up on unix:{}", path.display());
+        (Some(server), Some(client))
+    } else {
+        (None, None)
+    };
+    let sessions: Vec<Session> = match &client {
+        None => handles.iter().cloned().map(Session::Local).collect(),
+        Some(c) => handles
+            .iter()
+            .map(|h| Ok(Session::Remote(c.kernel(h.name())?)))
+            .collect::<anyhow::Result<_>>()?,
+    };
+
     // Zipf-ish kernel popularity: gradient & chebyshev hot, tail cold.
-    let weights: Vec<f64> = (0..handles.len()).map(|i| 1.0 / (i + 1) as f64).collect();
+    let weights: Vec<f64> = (0..sessions.len()).map(|i| 1.0 / (i + 1) as f64).collect();
     let wsum: f64 = weights.iter().sum();
 
     let mut rng = Rng::new(2016);
@@ -70,9 +136,9 @@ fn main() -> anyhow::Result<()> {
     let mut next_arrival = 0.0f64;
 
     // Collector thread: receives completions as they happen so the
-    // client-side latency is not skewed by collection order. `Pending`
-    // replies are Send — they cross threads like any other value.
-    type Job = (Pending, Vec<i32>, Instant);
+    // client-side latency is not skewed by collection order. Replies
+    // are Send in both modes — they cross threads like any value.
+    type Job = (Reply, Vec<i32>, Instant);
     let (jobs_tx, jobs_rx) = std::sync::mpsc::channel::<Job>();
     let collector = std::thread::spawn(move || -> anyhow::Result<(Samples, usize)> {
         let mut lat = Samples::new();
@@ -111,7 +177,7 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let want = eval(&handle.compiled().dfg, &inputs);
         let t0 = Instant::now();
-        let pending = handle.submit(&inputs)?;
+        let pending = sessions[idx].submit(&inputs)?;
         jobs_tx
             .send((pending, want, t0))
             .map_err(|_| anyhow::anyhow!("collector exited early"))?;
@@ -120,16 +186,26 @@ fn main() -> anyhow::Result<()> {
     let (mut lat, wrong) = collector.join().expect("collector panicked")?;
     let wall = started.elapsed();
 
-    println!("\n=== e2e serving report ===");
+    println!("\n=== e2e serving report ({mode}) ===");
     println!(
         "requests: {requests} in {:.3}s -> {:.0} req/s sustained",
         wall.as_secs_f64(),
         requests as f64 / wall.as_secs_f64()
     );
     println!("end-to-end latency: {}", lat.summary("us"));
+    if let Some(c) = &client {
+        // The snapshot crosses the socket too in wire mode.
+        println!("metrics fetched over the wire:");
+        println!("{}", c.metrics()?.to_string_pretty());
+    }
     println!("{}", service.metrics().render());
+    drop(sessions);
+    drop(client);
+    if let Some(s) = server {
+        s.shutdown();
+    }
     service.shutdown()?;
     anyhow::ensure!(wrong == 0, "{wrong} responses failed verification");
-    println!("verification: all {requests} responses match the functional oracle");
+    println!("verification: all {requests} responses match the functional oracle ({mode})");
     Ok(())
 }

@@ -8,6 +8,9 @@
 //!   B3   scheduler + context + tape generation (compilations/s)
 //!   B4   service dispatch through `KernelHandle` (requests/s
 //!        end-to-end, ids pre-resolved once)
+//!   B5   wire loopback: the same calls through `tmfu listen` framing
+//!        over a unix socket vs the in-process handle — the JSON
+//!        reports the per-call and per-packet framing overhead
 //!   L2/L1 PJRT batch execution (artifact-gated)
 //!
 //! Run `TMFU_BENCH_FAST=1 cargo bench` for a quick pass. With
@@ -18,12 +21,15 @@
 
 use tmfu_overlay::arch::Pipeline;
 use tmfu_overlay::bench_suite;
+use tmfu_overlay::client::OverlayClient;
 use tmfu_overlay::exec::{
     Backend, BackendKind, FlatBatch, KernelRegistry, RefBackend, SimBackend, TurboBackend,
 };
 use tmfu_overlay::runtime::Engine;
 use tmfu_overlay::sched::Program;
 use tmfu_overlay::service::{KernelHandle, OverlayService};
+use tmfu_overlay::wire::server::WireServer;
+use tmfu_overlay::wire::ListenAddr;
 use tmfu_overlay::util::bench::{
     alloc_count, black_box, json_path_from_args, section, Bench, BenchReport, CountingAlloc,
 };
@@ -199,6 +205,69 @@ fn main() -> anyhow::Result<()> {
             "{}   (items = requests, serial round-trip)",
             report.record(m).report_line()
         );
+        service.shutdown()?;
+    }
+
+    section("B5 wire loopback (unix socket) vs in-process KernelHandle");
+    {
+        let service = std::sync::Arc::new(
+            OverlayService::builder()
+                .backend(BackendKind::Turbo)
+                .pipelines(2)
+                .max_batch(32)
+                .build()?,
+        );
+        let sock =
+            std::env::temp_dir().join(format!("tmfu-bench-wire-{}.sock", std::process::id()));
+        let addr = ListenAddr::Unix(sock.clone());
+        let server = WireServer::bind(std::sync::Arc::clone(&service), &addr)?;
+        let client = OverlayClient::connect(&format!("unix:{}", sock.display()))?;
+        let local = service.kernel("gradient")?;
+        let remote = client.kernel("gradient")?;
+        let inputs = [3, 5, 2, 7, 1];
+
+        // Same request, same service, same workers — the only delta is
+        // framing + socket + request-id correlation.
+        let m_local = b.run_with_items("service::call(gradient) in-process", 1.0, || {
+            local.call(black_box(&inputs)).unwrap()
+        });
+        println!("{}   (items = requests)", report.record(m_local.clone()).report_line());
+        let m_wire = b.run_with_items("wire::call(gradient) unix loopback", 1.0, || {
+            remote.call(black_box(&inputs)).unwrap()
+        });
+        println!("{}   (items = requests)", report.record(m_wire.clone()).report_line());
+        let call_overhead_us = (m_wire.mean_ns - m_local.mean_ns) / 1e3;
+        report.set_meta("wire_call_overhead_us", json::f(call_overhead_us));
+
+        // Batch path: 256 rows amortize the framing to a per-packet
+        // overhead (rows cross as one contiguous buffer each way).
+        let wire_batch_n = 256usize;
+        let mut rngw = Rng::new(23);
+        let batch = random_batch(&mut rngw, local.arity(), wire_batch_n);
+        let m_local_b = b.run_with_items(
+            &format!("service::call_batch(gradient, {wire_batch_n}) in-process"),
+            wire_batch_n as f64,
+            || local.call_batch(black_box(&batch)).unwrap(),
+        );
+        println!("{}   (items = packets)", report.record(m_local_b.clone()).report_line());
+        let m_wire_b = b.run_with_items(
+            &format!("wire::call_batch(gradient, {wire_batch_n}) unix loopback"),
+            wire_batch_n as f64,
+            || remote.call_batch(black_box(&batch)).unwrap(),
+        );
+        println!("{}   (items = packets)", report.record(m_wire_b.clone()).report_line());
+        let batch_overhead_us =
+            (m_wire_b.mean_ns - m_local_b.mean_ns) / 1e3 / wire_batch_n as f64;
+        report.set_meta("wire_batch_overhead_us_per_packet", json::f(batch_overhead_us));
+        println!(
+            "\nwire overhead: {call_overhead_us:.1} us/call single, \
+             {batch_overhead_us:.3} us/packet at batch {wire_batch_n} \
+             (framing + unix socket + correlation)"
+        );
+
+        drop(remote);
+        drop(client);
+        server.shutdown();
         service.shutdown()?;
     }
 

@@ -1,0 +1,561 @@
+//! Thin wire client: call a `tmfu listen` server from another process.
+//!
+//! [`OverlayClient::connect`] dials a server (TCP `host:port` or
+//! `unix:<path>`), performs the Hello version handshake, and starts
+//! one reader thread that demultiplexes reply frames by request id —
+//! so a single connection carries any number of in-flight calls from
+//! any number of threads. [`OverlayClient::kernel`] resolves a kernel
+//! name once into a [`RemoteKernel`] session that mirrors
+//! [`KernelHandle`](crate::service::KernelHandle) method for method:
+//! [`RemoteKernel::call`], [`RemoteKernel::call_batch`], and
+//! non-blocking [`RemoteKernel::submit`] returning a [`RemotePending`]
+//! with the same `poll` / `wait` / `wait_timeout` / `wait_deadline`
+//! surface as the in-process `Pending`.
+//!
+//! Every failure is the same typed [`ServiceError`] a linked-in caller
+//! would see: service-side errors round-trip the wire bit-exactly
+//! (DESIGN.md §9), transport failures surface as
+//! `Backend { backend: "wire", .. }`, and a dead connection answers
+//! [`ServiceError::Disconnected`]. The client deliberately does **not**
+//! pre-validate shapes — the server is authoritative, which is what
+//! lets a test observe `ShapeMismatch` or `EmptyBatch` arrive over the
+//! socket rather than be short-circuited locally.
+//!
+//! ```no_run
+//! use tmfu_overlay::client::OverlayClient;
+//!
+//! fn main() -> Result<(), Box<dyn std::error::Error>> {
+//!     let client = OverlayClient::connect("127.0.0.1:7700")?;
+//!     let gradient = client.kernel("gradient")?;
+//!     assert_eq!(gradient.call(&[3, 5, 2, 7, 1])?, vec![36]);
+//!     println!("{}", client.metrics()?.to_string_pretty());
+//!     Ok(())
+//! }
+//! ```
+//!
+//! Lifetime: sessions hold the connection by `Arc`, but dropping the
+//! [`OverlayClient`] closes the socket — outstanding [`RemoteKernel`]s
+//! and [`RemotePending`]s then answer `Disconnected` (a network
+//! session ends with its connection, unlike in-process handles, which
+//! outlive the service value).
+
+use crate::exec::FlatBatch;
+use crate::service::ServiceError;
+use crate::util::json::{self, Json};
+use crate::wire::{
+    read_frame, write_frame, Frame, ListenAddr, WireStream, WIRE_VERSION_MAX, WIRE_VERSION_MIN,
+};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// One decoded server reply, routed to the waiting request.
+enum ServerReply {
+    Info {
+        kernel: u32,
+        n_inputs: u16,
+        n_outputs: u16,
+    },
+    Rows(FlatBatch),
+    Metrics(String),
+}
+
+type ReplyResult = Result<ServerReply, ServiceError>;
+
+struct Waiter {
+    kernel: String,
+    tx: mpsc::Sender<ReplyResult>,
+}
+
+/// Connection state shared by the client value, every session and the
+/// reader thread.
+struct ClientShared {
+    writer: Mutex<BufWriter<WireStream>>,
+    control: WireStream,
+    pending: Mutex<HashMap<u64, Waiter>>,
+    next_id: AtomicU64,
+    closed: AtomicBool,
+    /// A connection-fatal error frame (e.g. `Malformed` with no
+    /// correlatable id) reported just before the server hung up;
+    /// used to explain the drain to every waiter.
+    fatal: Mutex<Option<ServiceError>>,
+}
+
+impl ClientShared {
+    fn disconnected(&self, kernel: &str) -> ServiceError {
+        ServiceError::Disconnected {
+            kernel: kernel.to_string(),
+        }
+    }
+
+    /// Register a waiter, then write the frame built from the fresh
+    /// request id. The lock order (pending before writer) is shared
+    /// with the reader's completion path, which takes only `pending`.
+    fn send(
+        &self,
+        kernel: &str,
+        build: impl FnOnce(u64) -> Frame,
+    ) -> Result<mpsc::Receiver<ReplyResult>, ServiceError> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        {
+            // The closed check and the insert share the `pending`
+            // critical section with `drain`'s closed-store-and-sweep,
+            // so a waiter can never be registered after the drain
+            // swept (it would block forever — nothing would ever
+            // complete it).
+            let mut p = self.pending.lock().unwrap();
+            if self.closed.load(Ordering::SeqCst) {
+                return Err(self.drain_error(kernel));
+            }
+            p.insert(
+                id,
+                Waiter {
+                    kernel: kernel.to_string(),
+                    tx,
+                },
+            );
+        }
+        let frame = build(id);
+        let wrote = {
+            let mut w = self.writer.lock().unwrap();
+            write_frame(&mut *w, &frame).and_then(|()| w.flush())
+        };
+        if let Err(e) = wrote {
+            self.pending.lock().unwrap().remove(&id);
+            // `InvalidInput` is the pre-write encode/size failure
+            // (oversized arity or batch): nothing reached the socket,
+            // the stream is still frame-aligned, and only this one
+            // request fails. Anything else is a real I/O failure —
+            // the connection is unusable from here on.
+            if e.kind() != std::io::ErrorKind::InvalidInput {
+                self.closed.store(true, Ordering::SeqCst);
+            }
+            return Err(ServiceError::Backend {
+                backend: "wire".to_string(),
+                message: format!("send failed: {e}"),
+            });
+        }
+        Ok(rx)
+    }
+
+    /// The error to hand out once the connection is gone.
+    fn drain_error(&self, kernel: &str) -> ServiceError {
+        self.fatal
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| self.disconnected(kernel))
+    }
+
+    /// Reader-side: complete one request by id.
+    fn complete(&self, id: u64, result: ReplyResult) -> bool {
+        match self.pending.lock().unwrap().remove(&id) {
+            Some(w) => {
+                let _ = w.tx.send(result);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Reader-side: the connection is over; fail everything in flight.
+    /// The closed-store happens inside the `pending` lock (see `send`)
+    /// so no waiter can slip in behind the sweep.
+    fn drain(&self) {
+        let waiters: Vec<Waiter> = {
+            let mut p = self.pending.lock().unwrap();
+            self.closed.store(true, Ordering::SeqCst);
+            p.drain().map(|(_, w)| w).collect()
+        };
+        for w in waiters {
+            let err = self.drain_error(&w.kernel);
+            let _ = w.tx.send(Err(err));
+        }
+    }
+}
+
+/// Takes the handshake-time `BufReader` whole — its buffer may already
+/// hold bytes past HelloOk, which a raw-stream restart would lose.
+fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
+    loop {
+        let frame = match read_frame(&mut r) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(e) => {
+                *shared.fatal.lock().unwrap() = Some(ServiceError::Backend {
+                    backend: "wire".to_string(),
+                    message: format!("receive failed: {e}"),
+                });
+                break;
+            }
+        };
+        let id = frame.request_id();
+        match frame {
+            Frame::KernelInfo {
+                kernel,
+                n_inputs,
+                n_outputs,
+                ..
+            } => {
+                shared.complete(
+                    id,
+                    Ok(ServerReply::Info {
+                        kernel,
+                        n_inputs,
+                        n_outputs,
+                    }),
+                );
+            }
+            Frame::Reply { batch, .. } => {
+                shared.complete(id, Ok(ServerReply::Rows(batch)));
+            }
+            Frame::Metrics { json, .. } => {
+                shared.complete(id, Ok(ServerReply::Metrics(json)));
+            }
+            Frame::Error { err, .. } => {
+                let e = err.into_service_error();
+                if !shared.complete(id, Err(e.clone())) {
+                    // No waiting request (id 0 / already gone): this is
+                    // the server explaining an imminent hang-up.
+                    *shared.fatal.lock().unwrap() = Some(e);
+                }
+            }
+            // A server never sends client-side opcodes mid-stream; an
+            // unexpected one means the peer is not speaking the
+            // protocol. Stop reading rather than guess.
+            _ => {
+                *shared.fatal.lock().unwrap() = Some(ServiceError::Backend {
+                    backend: "wire".to_string(),
+                    message: "server sent a client-side frame".to_string(),
+                });
+                break;
+            }
+        }
+    }
+    shared.drain();
+}
+
+/// Extract the one reply a request expects, mapping kind mismatches to
+/// a transport error.
+fn expect_reply(
+    rx_result: Result<ReplyResult, mpsc::RecvError>,
+    shared: &ClientShared,
+    kernel: &str,
+) -> Result<ServerReply, ServiceError> {
+    match rx_result {
+        Ok(Ok(reply)) => Ok(reply),
+        Ok(Err(e)) => Err(e),
+        Err(_) => Err(shared.drain_error(kernel)),
+    }
+}
+
+fn bad_reply(kernel: &str) -> ServiceError {
+    ServiceError::Backend {
+        backend: "wire".to_string(),
+        message: format!("unexpected reply kind for kernel '{kernel}'"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------
+
+/// A connection to a `tmfu listen` server. One value per connection;
+/// cheap sessions come from [`OverlayClient::kernel`]. Dropping the
+/// client closes the socket and fails outstanding work with
+/// [`ServiceError::Disconnected`].
+pub struct OverlayClient {
+    shared: Arc<ClientShared>,
+    reader: Option<thread::JoinHandle<()>>,
+    version: u16,
+    backend: String,
+}
+
+impl OverlayClient {
+    /// Dial `addr` (`host:port` or `unix:<path>`), shake hands, and
+    /// start the reply-demultiplexing reader.
+    pub fn connect(addr: &str) -> Result<OverlayClient, ServiceError> {
+        let addr = ListenAddr::parse(addr);
+        let stream = WireStream::connect(&addr).map_err(|e| ServiceError::Backend {
+            backend: "wire".to_string(),
+            message: format!("connect {addr}: {e}"),
+        })?;
+        let wire_err = |what: &str, e: std::io::Error| ServiceError::Backend {
+            backend: "wire".to_string(),
+            message: format!("{what}: {e}"),
+        };
+        let read_half = stream.try_clone().map_err(|e| wire_err("clone stream", e))?;
+        let control = stream.try_clone().map_err(|e| wire_err("clone stream", e))?;
+        // Synchronous handshake before any concurrency exists.
+        let mut writer = BufWriter::new(stream);
+        write_frame(
+            &mut writer,
+            &Frame::Hello {
+                id: 0,
+                min: WIRE_VERSION_MIN,
+                max: WIRE_VERSION_MAX,
+            },
+        )
+        .and_then(|()| writer.flush())
+        .map_err(|e| wire_err("send hello", e))?;
+        let mut reader = BufReader::new(read_half);
+        let (version, backend) = match read_frame(&mut reader) {
+            Ok(Some(Frame::HelloOk {
+                version, backend, ..
+            })) => (version, backend),
+            Ok(Some(Frame::Error { err, .. })) => return Err(err.into_service_error()),
+            Ok(Some(_)) => {
+                return Err(wire_err(
+                    "handshake",
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, "unexpected frame"),
+                ))
+            }
+            Ok(None) => {
+                return Err(wire_err(
+                    "handshake",
+                    std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "server hung up"),
+                ))
+            }
+            Err(e) => return Err(wire_err("handshake", e)),
+        };
+        let shared = Arc::new(ClientShared {
+            writer: Mutex::new(writer),
+            control,
+            pending: Mutex::new(HashMap::new()),
+            // Handshake frames used id 0; requests start at 1.
+            next_id: AtomicU64::new(1),
+            closed: AtomicBool::new(false),
+            fatal: Mutex::new(None),
+        });
+        let reader_shared = Arc::clone(&shared);
+        let reader = thread::Builder::new()
+            .name("wire-client-read".to_string())
+            .spawn(move || reader_loop(reader_shared, reader))
+            .map_err(|e| wire_err("spawn reader", e))?;
+        Ok(OverlayClient {
+            shared,
+            reader: Some(reader),
+            version,
+            backend,
+        })
+    }
+
+    /// Negotiated protocol version.
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// The server's execution-backend name (from the Hello banner).
+    pub fn backend(&self) -> &str {
+        &self.backend
+    }
+
+    /// Resolve a kernel name to a remote session (the wire mirror of
+    /// `OverlayService::kernel`): id and arities are fetched once,
+    /// then calls move only the dense id.
+    pub fn kernel(&self, name: &str) -> Result<RemoteKernel, ServiceError> {
+        let rx = self.shared.send(name, |id| Frame::Resolve {
+            id,
+            name: name.to_string(),
+        })?;
+        match expect_reply(rx.recv(), &self.shared, name)? {
+            ServerReply::Info {
+                kernel,
+                n_inputs,
+                n_outputs,
+            } => Ok(RemoteKernel {
+                shared: Arc::clone(&self.shared),
+                name: name.to_string(),
+                kernel,
+                n_inputs: n_inputs as usize,
+                n_outputs: n_outputs as usize,
+            }),
+            _ => Err(bad_reply(name)),
+        }
+    }
+
+    /// Fetch the server's `MetricsSnapshot` as parsed JSON (same
+    /// field names as `tmfu serve --metrics-json`).
+    pub fn metrics(&self) -> Result<Json, ServiceError> {
+        let rx = self.shared.send("", |id| Frame::GetMetrics { id })?;
+        match expect_reply(rx.recv(), &self.shared, "")? {
+            ServerReply::Metrics(text) => json::parse(&text).map_err(|e| ServiceError::Backend {
+                backend: "wire".to_string(),
+                message: format!("metrics json: {e}"),
+            }),
+            _ => Err(bad_reply("metrics")),
+        }
+    }
+
+    /// Close the connection explicitly (also happens on drop).
+    pub fn close(self) {
+        let _ = self;
+    }
+}
+
+impl Drop for OverlayClient {
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        self.shared.control.shutdown_both();
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Remote sessions
+// ---------------------------------------------------------------------
+
+/// A remote kernel session: pre-resolved id + arities, `Clone + Send`,
+/// mirroring [`KernelHandle`](crate::service::KernelHandle). Shapes
+/// are **not** validated locally — the server answers the same typed
+/// errors the in-process handle would raise.
+#[derive(Clone)]
+pub struct RemoteKernel {
+    shared: Arc<ClientShared>,
+    name: String,
+    kernel: u32,
+    n_inputs: usize,
+    n_outputs: usize,
+}
+
+impl std::fmt::Debug for RemoteKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RemoteKernel({} -> kernel#{})", self.name, self.kernel)
+    }
+}
+
+impl RemoteKernel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The server-side dense kernel id.
+    pub fn id(&self) -> u32 {
+        self.kernel
+    }
+
+    /// Input arity (words per request row).
+    pub fn arity(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Output arity (words per reply row).
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    /// Non-blocking submit: the request is on the wire when this
+    /// returns; the reply arrives on the [`RemotePending`].
+    pub fn submit(&self, inputs: &[i32]) -> Result<RemotePending, ServiceError> {
+        let rx = self.shared.send(&self.name, |id| Frame::Call {
+            id,
+            kernel: self.kernel,
+            inputs: inputs.to_vec(),
+        })?;
+        Ok(RemotePending {
+            rx,
+            shared: Arc::clone(&self.shared),
+            kernel: self.name.clone(),
+        })
+    }
+
+    /// Blocking call: submit one row and wait for its reply.
+    pub fn call(&self, inputs: &[i32]) -> Result<Vec<i32>, ServiceError> {
+        self.submit(inputs)?.wait()
+    }
+
+    /// Blocking batch call: rows travel as one contiguous buffer, are
+    /// admitted atomically server-side, and come back in row order.
+    pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
+        let rx = self.shared.send(&self.name, |id| Frame::CallBatch {
+            id,
+            kernel: self.kernel,
+            batch: batch.clone(),
+        })?;
+        match expect_reply(rx.recv(), &self.shared, &self.name)? {
+            ServerReply::Rows(out) => Ok(out),
+            _ => Err(bad_reply(&self.name)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pending replies
+// ---------------------------------------------------------------------
+
+/// A future-like remote reply, mirroring
+/// [`Pending`](crate::service::Pending): poll it, block on it, or
+/// bound the wait. `Send`, so replies can be collected on another
+/// thread.
+pub struct RemotePending {
+    rx: mpsc::Receiver<ReplyResult>,
+    shared: Arc<ClientShared>,
+    kernel: String,
+}
+
+impl std::fmt::Debug for RemotePending {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RemotePending({})", self.kernel)
+    }
+}
+
+impl RemotePending {
+    /// The kernel this reply belongs to.
+    pub fn kernel_name(&self) -> &str {
+        &self.kernel
+    }
+
+    fn one_row(&self, reply: ReplyResult) -> Result<Vec<i32>, ServiceError> {
+        match reply? {
+            ServerReply::Rows(batch) if batch.n_rows() == 1 => Ok(batch.row(0).to_vec()),
+            _ => Err(bad_reply(&self.kernel)),
+        }
+    }
+
+    /// Non-blocking check: `Some(result)` once the reply has arrived.
+    pub fn poll(&mut self) -> Option<Result<Vec<i32>, ServiceError>> {
+        match self.rx.try_recv() {
+            Ok(reply) => Some(self.one_row(reply)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(self.shared.drain_error(&self.kernel)))
+            }
+        }
+    }
+
+    /// Block until the reply arrives.
+    pub fn wait(self) -> Result<Vec<i32>, ServiceError> {
+        match self.rx.recv() {
+            Ok(reply) => self.one_row(reply),
+            Err(_) => Err(self.shared.drain_error(&self.kernel)),
+        }
+    }
+
+    /// Block at most `timeout`; [`ServiceError::DeadlineExceeded`] if
+    /// the reply has not arrived by then. The request stays in flight —
+    /// poll or wait again later (same contract as the in-process
+    /// `Pending`).
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Vec<i32>, ServiceError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => self.one_row(reply),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServiceError::DeadlineExceeded {
+                kernel: self.kernel.clone(),
+            }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(self.shared.drain_error(&self.kernel))
+            }
+        }
+    }
+
+    /// Block until `deadline` at the latest (expressed through
+    /// [`Self::wait_timeout`], the one timing implementation).
+    pub fn wait_deadline(&mut self, deadline: Instant) -> Result<Vec<i32>, ServiceError> {
+        self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
+    }
+}

@@ -191,7 +191,11 @@ pub struct EngineConfig {
 /// [`crate::service::OverlayService`].
 pub struct Engine {
     shared: Arc<Shared>,
-    workers: Vec<thread::JoinHandle<Result<()>>>,
+    /// Join handles live behind a mutex so [`Engine::shutdown`] can
+    /// take `&self` — which is what lets the service layer shut down
+    /// through a shared reference (e.g. an `Arc<OverlayService>` held
+    /// by a running wire server).
+    workers: Mutex<Vec<thread::JoinHandle<Result<()>>>>,
     registry: Arc<KernelRegistry>,
     backend: BackendKind,
     n_workers: usize,
@@ -246,7 +250,7 @@ impl Engine {
         }
         Ok(Engine {
             shared,
-            workers,
+            workers: Mutex::new(workers),
             registry,
             backend: cfg.backend,
             n_workers: cfg.workers,
@@ -295,13 +299,16 @@ impl Engine {
 
     /// Stop admitting, drain every queue, stop workers. Admitted
     /// requests are completed (replied to) before workers exit.
-    pub fn shutdown(self) -> Result<()> {
+    /// Takes `&self` and is idempotent: the first caller joins the
+    /// workers; later calls find nothing left to join and return.
+    pub fn shutdown(&self) -> Result<()> {
         {
             let mut st = self.shared.queues.lock().unwrap();
             st.shutdown = true;
         }
         self.shared.cv.notify_all();
-        for w in self.workers {
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in workers {
             w.join()
                 .map_err(|_| anyhow::anyhow!("worker panicked"))??;
         }

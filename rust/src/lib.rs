@@ -35,12 +35,20 @@
 //!   [`exec::KernelId`]-indexed bounded queues — is crate-private.
 //!   Runs the full serving stack with zero artifacts via
 //!   `tmfu serve --backend sim` (or `turbo`) ([`service`]);
+//! * the **wire protocol** — a versioned, length-prefixed binary
+//!   protocol over TCP/Unix sockets ([`wire`], DESIGN.md §9,
+//!   `docs/PROTOCOL.md`): `tmfu listen` serves an `OverlayService`
+//!   to other processes, and the thin [`client::OverlayClient`] /
+//!   [`client::RemoteKernel`] mirror the in-process sessions method
+//!   for method, with every [`service::ServiceError`] variant
+//!   round-tripped bit-exactly as typed error frames;
 //! * **reporting** — regeneration of every table/figure in the paper
 //!   ([`report`], `rust/benches/`).
 
 pub mod arch;
 pub mod baseline;
 pub mod bench_suite;
+pub mod client;
 pub(crate) mod coordinator;
 pub mod dfg;
 pub mod exec;
@@ -53,6 +61,7 @@ pub mod sched;
 pub mod service;
 pub mod sim;
 pub mod util;
+pub mod wire;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

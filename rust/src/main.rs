@@ -10,12 +10,21 @@
 //! `KernelHandle` sessions) with a mixed-kernel oracle-checked
 //! workload, and can write its typed metrics snapshot as JSON
 //! (`--metrics-json`) for CI and tooling to assert on.
+//!
+//! Network serving: `listen` exposes the same service over the
+//! length-prefixed wire protocol (DESIGN.md §9) on TCP and/or a Unix
+//! socket, and `call` is the matching one-shot client — together they
+//! are the two-terminal walkthrough in the README.
 
 use std::process::ExitCode;
+use std::sync::Arc;
+use tmfu_overlay::client::OverlayClient;
 use tmfu_overlay::exec::BackendKind;
 use tmfu_overlay::service::{OverlayService, ServiceError};
 use tmfu_overlay::util::cli::{Command, Matches};
 use tmfu_overlay::util::prng::Rng;
+use tmfu_overlay::wire::server::WireServer;
+use tmfu_overlay::wire::ListenAddr;
 use tmfu_overlay::{bench_suite, dfg, frontend, report, sched};
 
 fn main() -> ExitCode {
@@ -67,6 +76,28 @@ fn commands() -> Vec<Command> {
             .opt("queue-depth", "per-kernel admission limit", Some("1024"))
             .opt("seed", "workload seed", Some("42"))
             .opt("metrics-json", "write the metrics snapshot JSON here on exit", None),
+        Command::new("listen", "serve the overlay over the wire protocol (DESIGN.md §9)")
+            .opt(
+                "backend",
+                "execution backend: ref | sim | pjrt | turbo",
+                Some("turbo"),
+            )
+            .opt("artifacts", "artifacts directory (pjrt backend)", Some("artifacts"))
+            .opt("pipelines", "overlay pipelines (workers)", Some("2"))
+            .opt("batch", "max batch size", Some("16"))
+            .opt("queue-depth", "per-kernel admission limit", Some("1024"))
+            .opt("tcp", "TCP listen address (empty disables)", Some("127.0.0.1:7700"))
+            .opt("socket", "unix socket path (empty disables)", Some(""))
+            .opt(
+                "max-conns",
+                "exit after this many connections; single transport only (0 = run forever)",
+                Some("0"),
+            ),
+        Command::new("call", "call a kernel on a 'tmfu listen' server")
+            .positional("kernel", "kernel name (see 'list')")
+            .opt("addr", "server address: host:port or unix:<path>", Some("127.0.0.1:7700"))
+            .opt("inputs", "comma-separated i32 inputs", Some(""))
+            .flag("metrics", "also fetch and print the server metrics JSON"),
     ]
 }
 
@@ -190,7 +221,103 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "ctx-switch" => print!("{}", report::ctx_switch::render()?),
         "resources" => print!("{}", report::resources_report::render()),
         "serve" => serve(&m)?,
+        "listen" => listen(&m)?,
+        "call" => call(&m)?,
         _ => unreachable!(),
+    }
+    Ok(())
+}
+
+/// `tmfu listen`: bind the wire protocol on TCP and/or a Unix socket
+/// and serve an `OverlayService` until killed (or until `--max-conns`
+/// connections have come and gone — the CI smoke mode).
+fn listen(m: &Matches) -> anyhow::Result<()> {
+    let backend: BackendKind = m
+        .get("backend")
+        .unwrap()
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+    let pipelines = m.get_usize("pipelines").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let batch = m.get_usize("batch").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let queue_depth = m
+        .get_usize("queue-depth")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .unwrap();
+    let max_conns = m.get_usize("max-conns").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let mut addrs = Vec::new();
+    if let Some(path) = m.get("socket").filter(|s| !s.is_empty()) {
+        addrs.push(ListenAddr::Unix(path.into()));
+    }
+    if let Some(tcp) = m.get("tcp").filter(|s| !s.is_empty()) {
+        addrs.push(ListenAddr::Tcp(tcp.to_string()));
+    }
+    anyhow::ensure!(
+        !addrs.is_empty(),
+        "nothing to bind: --tcp and --socket are both disabled"
+    );
+    // The limit counts connections on one listener; with two listeners
+    // "exit after N connections" would be ambiguous (and the process
+    // would linger until every listener hit its own limit).
+    anyhow::ensure!(
+        max_conns == 0 || addrs.len() == 1,
+        "--max-conns needs exactly one transport (disable the other with --tcp= or --socket=)"
+    );
+
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(backend)
+            .artifacts_dir(m.get("artifacts").unwrap().to_string())
+            .pipelines(pipelines)
+            .max_batch(batch)
+            .queue_depth(queue_depth)
+            .build()?,
+    );
+    let limit = (max_conns > 0).then_some(max_conns);
+    let mut servers = Vec::new();
+    for addr in &addrs {
+        let server = WireServer::bind_with_limit(Arc::clone(&service), addr, limit)?;
+        println!(
+            "listening on {} ({} kernels, backend '{backend}', {pipelines} pipeline(s), \
+             queue depth {queue_depth})",
+            server.addr(),
+            service.kernel_names().len()
+        );
+        servers.push(server);
+    }
+    println!("call with: tmfu call <kernel> --addr {} --inputs ...", servers[0].addr());
+    for server in servers {
+        server.wait();
+    }
+    // Only reachable in --max-conns mode; report what was served.
+    println!("{}", service.metrics().render());
+    service.shutdown()?;
+    Ok(())
+}
+
+/// `tmfu call`: one-shot wire client — resolve, call, print the output
+/// row (and optionally the server's metrics snapshot).
+fn call(m: &Matches) -> anyhow::Result<()> {
+    let addr = m.get("addr").unwrap();
+    let kernel = m.get_pos("kernel").unwrap();
+    let raw = m.get("inputs").unwrap();
+    let inputs: Vec<i32> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<i32>()
+                .map_err(|_| anyhow::anyhow!("--inputs: '{s}' is not an i32"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let client = OverlayClient::connect(addr)?;
+    let remote = client.kernel(kernel)?;
+    let out = remote.call(&inputs)?;
+    println!(
+        "{}",
+        out.iter().map(ToString::to_string).collect::<Vec<_>>().join(" ")
+    );
+    if m.flag("metrics") {
+        println!("{}", client.metrics()?.to_string_pretty());
     }
     Ok(())
 }

@@ -27,6 +27,29 @@
 //! * [`OverlayService::metrics`] returns a typed, JSON-serializable
 //!   [`MetricsSnapshot`]; [`OverlayService::shutdown`] drains admitted
 //!   work before stopping the workers.
+//!
+//! ```no_run
+//! use tmfu_overlay::exec::BackendKind;
+//! use tmfu_overlay::service::OverlayService;
+//!
+//! fn main() -> Result<(), Box<dyn std::error::Error>> {
+//!     let service = OverlayService::builder()
+//!         .backend(BackendKind::Turbo)
+//!         .pipelines(2)
+//!         .build()?;
+//!     let poly6 = service.kernel("poly6")?; // id + arity resolved once
+//!     assert_eq!(poly6.arity(), 3);
+//!     let y = poly6.call(&[1, 2, 3])?; // or submit() -> Pending
+//!     println!("poly6(1, 2, 3) = {y:?}");
+//!     println!("{}", service.metrics().render());
+//!     service.shutdown()?; // drains admitted work
+//!     Ok(())
+//! }
+//! ```
+//!
+//! The same surface is reachable from other processes over the wire
+//! protocol ([`crate::wire`], `tmfu listen`) through the mirroring
+//! [`crate::client::OverlayClient`].
 
 pub mod error;
 mod metrics;
@@ -240,7 +263,12 @@ impl OverlayService {
     /// admitted requests are replied to), then join the workers.
     /// Outstanding [`KernelHandle`]s stay valid but answer
     /// [`ServiceError::ShutDown`] from then on.
-    pub fn shutdown(self) -> Result<(), ServiceError> {
+    ///
+    /// Takes `&self` and is idempotent, so a service shared behind an
+    /// `Arc` (e.g. one a [`crate::wire::server::WireServer`] is
+    /// serving) can be shut down while other holders keep their
+    /// reference — their subsequent calls see the typed `ShutDown`.
+    pub fn shutdown(&self) -> Result<(), ServiceError> {
         self.engine.shutdown().map_err(|e| ServiceError::Backend {
             backend: "engine".to_string(),
             message: format!("{e}"),
@@ -388,14 +416,20 @@ impl Pending {
         &self.kernel.name
     }
 
+    /// The one place the "worker vanished" channel state is mapped to
+    /// its typed error — every receive path below shares it.
+    fn disconnected(&self) -> ServiceError {
+        ServiceError::Disconnected {
+            kernel: self.kernel.name.clone(),
+        }
+    }
+
     /// Non-blocking check: `Some(result)` once the reply has arrived.
     pub fn poll(&mut self) -> Option<Result<Vec<i32>, ServiceError>> {
         match self.rx.try_recv() {
             Ok(reply) => Some(reply.map_err(ServiceError::from)),
             Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServiceError::Disconnected {
-                kernel: self.kernel.name.clone(),
-            })),
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(self.disconnected())),
         }
     }
 
@@ -403,9 +437,7 @@ impl Pending {
     pub fn wait(self) -> Result<Vec<i32>, ServiceError> {
         match self.rx.recv() {
             Ok(reply) => reply.map_err(ServiceError::from),
-            Err(_) => Err(ServiceError::Disconnected {
-                kernel: self.kernel.name.clone(),
-            }),
+            Err(_) => Err(self.disconnected()),
         }
     }
 
@@ -418,13 +450,12 @@ impl Pending {
             Err(mpsc::RecvTimeoutError::Timeout) => Err(ServiceError::DeadlineExceeded {
                 kernel: self.kernel.name.clone(),
             }),
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServiceError::Disconnected {
-                kernel: self.kernel.name.clone(),
-            }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(self.disconnected()),
         }
     }
 
-    /// Block until `deadline` at the latest.
+    /// Block until `deadline` at the latest (expressed through
+    /// [`Self::wait_timeout`] — one timing implementation, not two).
     pub fn wait_deadline(&mut self, deadline: Instant) -> Result<Vec<i32>, ServiceError> {
         self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
     }

@@ -1,0 +1,1273 @@
+//! Length-prefixed binary wire protocol for the overlay service
+//! (DESIGN.md §9, `docs/PROTOCOL.md`).
+//!
+//! The typed service surface (PR 3) was shaped to serialize: kernel
+//! sessions are (dense id, arity) pairs, every failure is a structured
+//! [`ServiceError`], and metrics are JSON. This module is the missing
+//! transport — a versioned, length-prefixed frame codec over TCP or
+//! Unix stream sockets, in the style of tonic's length-delimited
+//! framing, so tenants that do not link the crate can call the overlay.
+//!
+//! Layering:
+//!
+//! * this module — the **codec**: [`Frame`] (one enum variant per
+//!   opcode), byte-exact [`Frame::encode`] / [`Frame::decode`], and
+//!   the stream helpers [`read_frame`] / [`write_frame`]. Pure
+//!   functions over byte slices; property-tested without sockets.
+//! * [`server`] — `tmfu listen`: accepts connections and drives an
+//!   [`OverlayService`](crate::service::OverlayService) from decoded
+//!   frames (request-id correlation, many in-flight calls per socket).
+//! * [`crate::client`] — `OverlayClient` / `RemoteKernel`, the thin
+//!   client mirroring `KernelHandle`.
+//!
+//! Wire format (all integers little-endian; see `docs/PROTOCOL.md`
+//! for the normative table):
+//!
+//! ```text
+//! frame   := len:u32 payload            len = payload bytes, <= MAX_PAYLOAD
+//! payload := opcode:u8 request_id:u64 body
+//! string  := n:u32 utf8[n]
+//! words   := i32 x count                contiguous, no per-row framing
+//! ```
+//!
+//! Batches cross the wire exactly as [`FlatBatch`] stores them — one
+//! contiguous row-major `i32` buffer — so encoding a `CallBatch` is a
+//! single `extend_from_slice`-shaped copy, never a per-row allocation.
+//!
+//! Version negotiation: the client's `Hello` carries the inclusive
+//! range of protocol versions it speaks; the server answers `HelloOk`
+//! with the highest version both sides support, or a
+//! [`WireError::VersionMismatch`] error frame (code 100) naming its
+//! own range, then closes. Version 1 is the only version today.
+
+pub mod server;
+
+use crate::exec::FlatBatch;
+use crate::service::ServiceError;
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// First four payload bytes of every `Hello`: `b"TMFU"`.
+pub const WIRE_MAGIC: [u8; 4] = *b"TMFU";
+/// Lowest protocol version this build speaks.
+pub const WIRE_VERSION_MIN: u16 = 1;
+/// Highest protocol version this build speaks.
+pub const WIRE_VERSION_MAX: u16 = 1;
+/// Hard cap on a frame payload (16 MiB). [`read_frame`] refuses larger
+/// length prefixes before allocating, so a malformed or hostile peer
+/// cannot request an unbounded buffer.
+pub const MAX_PAYLOAD: usize = 1 << 24;
+
+// Opcode bytes (one per `Frame` variant; stable wire contract).
+const OP_HELLO: u8 = 0x01;
+const OP_HELLO_OK: u8 = 0x02;
+const OP_RESOLVE: u8 = 0x03;
+const OP_KERNEL_INFO: u8 = 0x04;
+const OP_CALL: u8 = 0x05;
+const OP_CALL_BATCH: u8 = 0x06;
+const OP_REPLY: u8 = 0x07;
+const OP_ERROR: u8 = 0x08;
+const OP_GET_METRICS: u8 = 0x09;
+const OP_METRICS: u8 = 0x0A;
+
+// Error codes (`Error` frame body). 1..=8 round-trip `ServiceError`;
+// 100+ are transport-level conditions with no in-process analogue.
+const EC_UNKNOWN_KERNEL: u16 = 1;
+const EC_SHAPE_MISMATCH: u16 = 2;
+const EC_EMPTY_BATCH: u16 = 3;
+const EC_REJECTED: u16 = 4;
+const EC_SHUT_DOWN: u16 = 5;
+const EC_DEADLINE_EXCEEDED: u16 = 6;
+const EC_DISCONNECTED: u16 = 7;
+const EC_BACKEND: u16 = 8;
+const EC_VERSION_MISMATCH: u16 = 100;
+const EC_MALFORMED: u16 = 101;
+
+/// Codec failure: a frame that cannot be encoded (out-of-range field)
+/// or decoded (truncated, trailing bytes, unknown opcode/code).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameError {
+    pub msg: String,
+}
+
+impl FrameError {
+    fn new(msg: impl Into<String>) -> FrameError {
+        FrameError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wire frame error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// An error carried by an `Error` frame: either a round-tripped
+/// [`ServiceError`] (codes 1..=8) or a transport-level condition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// A service-layer failure, bit-exactly round-tripped.
+    Service(ServiceError),
+    /// Hello version ranges do not intersect; the peer names its own
+    /// supported range and closes the connection.
+    VersionMismatch { min: u16, max: u16 },
+    /// The peer sent bytes that do not parse as a legal frame (or an
+    /// opcode illegal in the current connection state).
+    Malformed { message: String },
+}
+
+impl WireError {
+    /// Collapse to a client-visible [`ServiceError`]. Service variants
+    /// pass through untouched; transport conditions surface as
+    /// `Backend { backend: "wire", .. }`.
+    pub fn into_service_error(self) -> ServiceError {
+        match self {
+            WireError::Service(e) => e,
+            WireError::VersionMismatch { min, max } => ServiceError::Backend {
+                backend: "wire".to_string(),
+                message: format!("protocol version mismatch (server speaks v{min}..=v{max})"),
+            },
+            WireError::Malformed { message } => ServiceError::Backend {
+                backend: "wire".to_string(),
+                message: format!("malformed frame: {message}"),
+            },
+        }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Service(e) => write!(f, "{e}"),
+            WireError::VersionMismatch { min, max } => {
+                write!(f, "protocol version mismatch (peer speaks v{min}..=v{max})")
+            }
+            WireError::Malformed { message } => write!(f, "malformed frame: {message}"),
+        }
+    }
+}
+
+/// One protocol frame (the payload of one length-prefixed record).
+/// Every frame carries the `request_id` used for reply correlation;
+/// handshake frames use id 0 by convention.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    /// Client → server greeting: magic + supported version range.
+    Hello { id: u64, min: u16, max: u16 },
+    /// Server → client: negotiated version + backend name banner.
+    HelloOk {
+        id: u64,
+        version: u16,
+        backend: String,
+    },
+    /// Client → server: resolve a kernel name to an id + arities.
+    Resolve { id: u64, name: String },
+    /// Server → client: successful resolve.
+    KernelInfo {
+        id: u64,
+        kernel: u32,
+        n_inputs: u16,
+        n_outputs: u16,
+    },
+    /// Client → server: one blocking-call request (one input row).
+    Call {
+        id: u64,
+        kernel: u32,
+        inputs: Vec<i32>,
+    },
+    /// Client → server: an atomically-admitted batch (row-major).
+    CallBatch {
+        id: u64,
+        kernel: u32,
+        batch: FlatBatch,
+    },
+    /// Server → client: output rows for a `Call` (1 row) or
+    /// `CallBatch` (input row count, in order).
+    Reply { id: u64, batch: FlatBatch },
+    /// Server → client: typed failure for the correlated request.
+    Error { id: u64, err: WireError },
+    /// Client → server: request a metrics snapshot.
+    GetMetrics { id: u64 },
+    /// Server → client: `MetricsSnapshot` JSON text.
+    Metrics { id: u64, json: String },
+}
+
+impl Frame {
+    /// The correlation id this frame carries.
+    pub fn request_id(&self) -> u64 {
+        match self {
+            Frame::Hello { id, .. }
+            | Frame::HelloOk { id, .. }
+            | Frame::Resolve { id, .. }
+            | Frame::KernelInfo { id, .. }
+            | Frame::Call { id, .. }
+            | Frame::CallBatch { id, .. }
+            | Frame::Reply { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::GetMetrics { id }
+            | Frame::Metrics { id, .. } => *id,
+        }
+    }
+
+    /// Encode to payload bytes (no length prefix). Fails only when a
+    /// field exceeds its wire width (arity > u16, rows > u32, string
+    /// length > u32).
+    pub fn encode(&self) -> Result<Vec<u8>, FrameError> {
+        let mut out = Vec::with_capacity(self.encoded_hint());
+        match self {
+            Frame::Hello { id, min, max } => {
+                head(&mut out, OP_HELLO, *id);
+                out.extend_from_slice(&WIRE_MAGIC);
+                put_u16(&mut out, *min);
+                put_u16(&mut out, *max);
+            }
+            Frame::HelloOk {
+                id,
+                version,
+                backend,
+            } => {
+                head(&mut out, OP_HELLO_OK, *id);
+                put_u16(&mut out, *version);
+                put_string(&mut out, backend)?;
+            }
+            Frame::Resolve { id, name } => {
+                head(&mut out, OP_RESOLVE, *id);
+                put_string(&mut out, name)?;
+            }
+            Frame::KernelInfo {
+                id,
+                kernel,
+                n_inputs,
+                n_outputs,
+            } => {
+                head(&mut out, OP_KERNEL_INFO, *id);
+                put_u32(&mut out, *kernel);
+                put_u16(&mut out, *n_inputs);
+                put_u16(&mut out, *n_outputs);
+            }
+            Frame::Call { id, kernel, inputs } => {
+                head(&mut out, OP_CALL, *id);
+                put_u32(&mut out, *kernel);
+                put_u16(&mut out, width_u16(inputs.len(), "call arity")?);
+                put_words(&mut out, inputs);
+            }
+            Frame::CallBatch { id, kernel, batch } => {
+                head(&mut out, OP_CALL_BATCH, *id);
+                put_u32(&mut out, *kernel);
+                put_batch(&mut out, batch)?;
+            }
+            Frame::Reply { id, batch } => {
+                head(&mut out, OP_REPLY, *id);
+                put_batch(&mut out, batch)?;
+            }
+            Frame::Error { id, err } => {
+                head(&mut out, OP_ERROR, *id);
+                put_error(&mut out, err)?;
+            }
+            Frame::GetMetrics { id } => {
+                head(&mut out, OP_GET_METRICS, *id);
+            }
+            Frame::Metrics { id, json } => {
+                head(&mut out, OP_METRICS, *id);
+                put_string(&mut out, json)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode one payload (the bytes after the length prefix). Every
+    /// malformed input — truncation, trailing bytes, unknown opcode or
+    /// error code, bad magic, ragged batch — is a [`FrameError`],
+    /// never a panic.
+    pub fn decode(payload: &[u8]) -> Result<Frame, FrameError> {
+        let mut d = Dec::new(payload);
+        let opcode = d.u8("opcode")?;
+        let id = d.u64("request id")?;
+        let frame = match opcode {
+            OP_HELLO => {
+                let magic = d.bytes(4, "hello magic")?;
+                if magic != &WIRE_MAGIC[..] {
+                    return Err(FrameError::new(format!(
+                        "bad hello magic {magic:02x?} (expected {WIRE_MAGIC:02x?})"
+                    )));
+                }
+                let min = d.u16("hello min version")?;
+                let max = d.u16("hello max version")?;
+                Frame::Hello { id, min, max }
+            }
+            OP_HELLO_OK => Frame::HelloOk {
+                id,
+                version: d.u16("version")?,
+                backend: d.string("backend")?,
+            },
+            OP_RESOLVE => Frame::Resolve {
+                id,
+                name: d.string("kernel name")?,
+            },
+            OP_KERNEL_INFO => Frame::KernelInfo {
+                id,
+                kernel: d.u32("kernel id")?,
+                n_inputs: d.u16("n_inputs")?,
+                n_outputs: d.u16("n_outputs")?,
+            },
+            OP_CALL => {
+                let kernel = d.u32("kernel id")?;
+                let arity = d.u16("call arity")? as usize;
+                let inputs = d.words(arity, "call inputs")?;
+                Frame::Call { id, kernel, inputs }
+            }
+            OP_CALL_BATCH => {
+                let kernel = d.u32("kernel id")?;
+                let batch = d.batch()?;
+                Frame::CallBatch { id, kernel, batch }
+            }
+            OP_REPLY => Frame::Reply {
+                id,
+                batch: d.batch()?,
+            },
+            OP_ERROR => Frame::Error {
+                id,
+                err: d.error()?,
+            },
+            OP_GET_METRICS => Frame::GetMetrics { id },
+            OP_METRICS => Frame::Metrics {
+                id,
+                json: d.string("metrics json")?,
+            },
+            other => return Err(FrameError::new(format!("unknown opcode 0x{other:02x}"))),
+        };
+        d.finish()?;
+        Ok(frame)
+    }
+
+    /// Capacity hint so batch encodes reserve once.
+    fn encoded_hint(&self) -> usize {
+        9 + match self {
+            Frame::Call { inputs, .. } => 6 + 4 * inputs.len(),
+            Frame::CallBatch { batch, .. } => 10 + 4 * batch.data().len(),
+            Frame::Reply { batch, .. } => 6 + 4 * batch.data().len(),
+            Frame::Metrics { json, .. } => 4 + json.len(),
+            _ => 32,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Error frame body
+// ---------------------------------------------------------------------
+
+fn put_error(out: &mut Vec<u8>, err: &WireError) -> Result<(), FrameError> {
+    match err {
+        WireError::Service(e) => match e {
+            ServiceError::UnknownKernel(kernel) => {
+                put_u16(out, EC_UNKNOWN_KERNEL);
+                put_string(out, kernel)?;
+            }
+            ServiceError::ShapeMismatch {
+                kernel,
+                expected,
+                got,
+            } => {
+                put_u16(out, EC_SHAPE_MISMATCH);
+                put_string(out, kernel)?;
+                put_u32(out, width_u32(*expected, "shape expected")?);
+                put_u32(out, width_u32(*got, "shape got")?);
+            }
+            ServiceError::EmptyBatch { kernel } => {
+                put_u16(out, EC_EMPTY_BATCH);
+                put_string(out, kernel)?;
+            }
+            ServiceError::Rejected {
+                kernel,
+                queued,
+                limit,
+            } => {
+                put_u16(out, EC_REJECTED);
+                put_string(out, kernel)?;
+                put_u64(out, *queued as u64);
+                put_u64(out, *limit as u64);
+            }
+            ServiceError::ShutDown => put_u16(out, EC_SHUT_DOWN),
+            ServiceError::DeadlineExceeded { kernel } => {
+                put_u16(out, EC_DEADLINE_EXCEEDED);
+                put_string(out, kernel)?;
+            }
+            ServiceError::Disconnected { kernel } => {
+                put_u16(out, EC_DISCONNECTED);
+                put_string(out, kernel)?;
+            }
+            ServiceError::Backend { backend, message } => {
+                put_u16(out, EC_BACKEND);
+                put_string(out, backend)?;
+                put_string(out, message)?;
+            }
+        },
+        WireError::VersionMismatch { min, max } => {
+            put_u16(out, EC_VERSION_MISMATCH);
+            put_u16(out, *min);
+            put_u16(out, *max);
+        }
+        WireError::Malformed { message } => {
+            put_u16(out, EC_MALFORMED);
+            put_string(out, message)?;
+        }
+    }
+    Ok(())
+}
+
+impl<'a> Dec<'a> {
+    fn error(&mut self) -> Result<WireError, FrameError> {
+        let code = self.u16("error code")?;
+        Ok(match code {
+            EC_UNKNOWN_KERNEL => {
+                WireError::Service(ServiceError::UnknownKernel(self.string("kernel")?))
+            }
+            EC_SHAPE_MISMATCH => WireError::Service(ServiceError::ShapeMismatch {
+                kernel: self.string("kernel")?,
+                expected: self.u32("expected")? as usize,
+                got: self.u32("got")? as usize,
+            }),
+            EC_EMPTY_BATCH => WireError::Service(ServiceError::EmptyBatch {
+                kernel: self.string("kernel")?,
+            }),
+            EC_REJECTED => WireError::Service(ServiceError::Rejected {
+                kernel: self.string("kernel")?,
+                queued: self.u64("queued")? as usize,
+                limit: self.u64("limit")? as usize,
+            }),
+            EC_SHUT_DOWN => WireError::Service(ServiceError::ShutDown),
+            EC_DEADLINE_EXCEEDED => WireError::Service(ServiceError::DeadlineExceeded {
+                kernel: self.string("kernel")?,
+            }),
+            EC_DISCONNECTED => WireError::Service(ServiceError::Disconnected {
+                kernel: self.string("kernel")?,
+            }),
+            EC_BACKEND => WireError::Service(ServiceError::Backend {
+                backend: self.string("backend")?,
+                message: self.string("message")?,
+            }),
+            EC_VERSION_MISMATCH => WireError::VersionMismatch {
+                min: self.u16("min version")?,
+                max: self.u16("max version")?,
+            },
+            EC_MALFORMED => WireError::Malformed {
+                message: self.string("message")?,
+            },
+            other => return Err(FrameError::new(format!("unknown error code {other}"))),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Primitive encoders
+// ---------------------------------------------------------------------
+
+fn head(out: &mut Vec<u8>, opcode: u8, id: u64) {
+    out.push(opcode);
+    put_u64(out, id);
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) -> Result<(), FrameError> {
+    put_u32(out, width_u32(s.len(), "string length")?);
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn put_words(out: &mut Vec<u8>, words: &[i32]) {
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Batch body: `arity:u16 rows:u32 words[arity*rows]` — the words are
+/// the batch's own contiguous buffer, copied in one pass.
+fn put_batch(out: &mut Vec<u8>, batch: &FlatBatch) -> Result<(), FrameError> {
+    put_u16(out, width_u16(batch.arity(), "batch arity")?);
+    put_u32(out, width_u32(batch.n_rows(), "batch rows")?);
+    put_words(out, batch.data());
+    Ok(())
+}
+
+fn width_u16(v: usize, what: &str) -> Result<u16, FrameError> {
+    u16::try_from(v).map_err(|_| FrameError::new(format!("{what} {v} exceeds u16")))
+}
+
+fn width_u32(v: usize, what: &str) -> Result<u32, FrameError> {
+    u32::try_from(v).map_err(|_| FrameError::new(format!("{what} {v} exceeds u32")))
+}
+
+// ---------------------------------------------------------------------
+// Primitive decoder
+// ---------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over one payload.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], FrameError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => Err(FrameError::new(format!(
+                "truncated frame: {what} needs {n} bytes, {} left",
+                self.buf.len() - self.pos
+            ))),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, FrameError> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.bytes(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.bytes(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self, what: &str) -> Result<String, FrameError> {
+        let n = self.u32(what)? as usize;
+        let raw = self.bytes(n, what)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| FrameError::new(format!("{what}: invalid UTF-8")))
+    }
+
+    fn words(&mut self, n: usize, what: &str) -> Result<Vec<i32>, FrameError> {
+        let byte_len = n
+            .checked_mul(4)
+            .ok_or_else(|| FrameError::new(format!("{what}: word count {n} overflows")))?;
+        let raw = self.bytes(byte_len, what)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Batch body; a zero-arity batch is legal only with zero rows
+    /// (`FlatBatch` cannot represent rows of width 0).
+    fn batch(&mut self) -> Result<FlatBatch, FrameError> {
+        let arity = self.u16("batch arity")? as usize;
+        let rows = self.u32("batch rows")? as usize;
+        if rows == 0 {
+            return Ok(FlatBatch::new(arity));
+        }
+        if arity == 0 {
+            return Err(FrameError::new(format!(
+                "batch with zero arity but {rows} rows"
+            )));
+        }
+        let words = rows
+            .checked_mul(arity)
+            .ok_or_else(|| FrameError::new("batch size overflows".to_string()))?;
+        let data = self.words(words, "batch words")?;
+        Ok(FlatBatch::from_flat(arity, data))
+    }
+
+    fn finish(&self) -> Result<(), FrameError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(FrameError::new(format!(
+                "{} trailing bytes after frame body",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stream I/O
+// ---------------------------------------------------------------------
+
+/// Write one frame (length prefix + payload). Does not flush — callers
+/// batch flushes per logical message.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    let payload = frame
+        .encode()
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, e.to_string()))?;
+    if payload.len() > MAX_PAYLOAD {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame payload {}B exceeds max {MAX_PAYLOAD}B", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary;
+/// `InvalidData` errors for oversized prefixes and undecodable
+/// payloads; `UnexpectedEof` for mid-frame disconnects.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Frame>> {
+    let mut len = [0u8; 4];
+    // Distinguish "no next frame" (clean close) from truncation.
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed inside a frame length prefix",
+                ))
+            }
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len}B exceeds max {MAX_PAYLOAD}B"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Frame::decode(&payload)
+        .map(Some)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+}
+
+// ---------------------------------------------------------------------
+// Addresses & streams (shared by server and client)
+// ---------------------------------------------------------------------
+
+/// A serve/connect address: TCP (`host:port`) or a Unix socket path
+/// (`unix:<path>`). One string syntax everywhere — `tmfu listen
+/// --tcp/--socket`, `tmfu call --addr`, `OverlayClient::connect`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ListenAddr {
+    Tcp(String),
+    Unix(std::path::PathBuf),
+}
+
+impl ListenAddr {
+    /// Parse the shared syntax: `unix:` prefix selects a Unix socket,
+    /// anything else is a TCP `host:port`.
+    pub fn parse(s: &str) -> ListenAddr {
+        match s.strip_prefix("unix:") {
+            Some(path) => ListenAddr::Unix(std::path::PathBuf::from(path)),
+            None => ListenAddr::Tcp(s.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ListenAddr::Tcp(a) => f.write_str(a),
+            ListenAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// One connected stream socket, TCP or Unix, with uniform clone and
+/// shutdown so reader/writer threads can share it.
+#[derive(Debug)]
+pub(crate) enum WireStream {
+    Tcp(std::net::TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl WireStream {
+    pub(crate) fn connect(addr: &ListenAddr) -> io::Result<WireStream> {
+        match addr {
+            ListenAddr::Tcp(a) => {
+                let s = std::net::TcpStream::connect(a)?;
+                // The protocol is request/response; Nagle would add
+                // ~40ms to every small frame.
+                s.set_nodelay(true)?;
+                Ok(WireStream::Tcp(s))
+            }
+            #[cfg(unix)]
+            ListenAddr::Unix(p) => Ok(WireStream::Unix(std::os::unix::net::UnixStream::connect(
+                p,
+            )?)),
+            #[cfg(not(unix))]
+            ListenAddr::Unix(_) => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "unix sockets are not available on this platform",
+            )),
+        }
+    }
+
+    pub(crate) fn try_clone(&self) -> io::Result<WireStream> {
+        Ok(match self {
+            WireStream::Tcp(s) => WireStream::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            WireStream::Unix(s) => WireStream::Unix(s.try_clone()?),
+        })
+    }
+
+    /// Shut down both directions; any thread blocked in `read` on a
+    /// clone of this socket wakes with EOF.
+    pub(crate) fn shutdown_both(&self) {
+        match self {
+            WireStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            WireStream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            WireStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            WireStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            WireStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::quickcheck::{check, prop_assert, Gen};
+
+    fn batch(arity: usize, rows: &[Vec<i32>]) -> FlatBatch {
+        FlatBatch::from_rows(arity, rows)
+    }
+
+    /// Every variant, exercised for encode→decode identity.
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { id: 0, min: 1, max: 1 },
+            Frame::HelloOk {
+                id: 0,
+                version: 1,
+                backend: "turbo".into(),
+            },
+            Frame::Resolve {
+                id: 1,
+                name: "gradient".into(),
+            },
+            Frame::KernelInfo {
+                id: 1,
+                kernel: 3,
+                n_inputs: 5,
+                n_outputs: 1,
+            },
+            Frame::Call {
+                id: 2,
+                kernel: 3,
+                inputs: vec![3, 5, 2, 7, -1],
+            },
+            Frame::CallBatch {
+                id: 3,
+                kernel: 0,
+                batch: batch(2, &[vec![1, -2], vec![3, -4], vec![5, -6]]),
+            },
+            Frame::Reply {
+                id: 3,
+                batch: batch(1, &[vec![36], vec![-7], vec![12]]),
+            },
+            // Zero-row batches keep their arity through the wire.
+            Frame::CallBatch {
+                id: 7,
+                kernel: 2,
+                batch: FlatBatch::new(5),
+            },
+            Frame::Error {
+                id: 4,
+                err: WireError::Service(ServiceError::Rejected {
+                    kernel: "poly6".into(),
+                    queued: 7,
+                    limit: 8,
+                }),
+            },
+            Frame::Error {
+                id: 0,
+                err: WireError::VersionMismatch { min: 1, max: 1 },
+            },
+            Frame::Error {
+                id: 5,
+                err: WireError::Service(ServiceError::ShapeMismatch {
+                    kernel: "fir".into(),
+                    expected: 4,
+                    got: 2,
+                }),
+            },
+            Frame::Error {
+                id: 6,
+                err: WireError::Service(ServiceError::Backend {
+                    backend: "pjrt".into(),
+                    message: "client create failed".into(),
+                }),
+            },
+            Frame::Error {
+                id: 8,
+                err: WireError::Service(ServiceError::UnknownKernel("nonesuch".into())),
+            },
+            Frame::Error {
+                id: 9,
+                err: WireError::Service(ServiceError::EmptyBatch { kernel: "fir".into() }),
+            },
+            Frame::Error {
+                id: 10,
+                err: WireError::Service(ServiceError::ShutDown),
+            },
+            Frame::Error {
+                id: 11,
+                err: WireError::Service(ServiceError::DeadlineExceeded { kernel: "mm".into() }),
+            },
+            Frame::Error {
+                id: 12,
+                err: WireError::Service(ServiceError::Disconnected { kernel: "mm".into() }),
+            },
+            Frame::Error {
+                id: 13,
+                err: WireError::Malformed {
+                    message: "unknown opcode 0x7f".into(),
+                },
+            },
+            Frame::GetMetrics { id: 9 },
+            Frame::Metrics {
+                id: 9,
+                json: "{\"completed\":1}".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        for f in sample_frames() {
+            let bytes = f.encode().unwrap();
+            let back = Frame::decode(&bytes).unwrap();
+            assert_eq!(back, f, "{f:?}");
+            assert_eq!(back.request_id(), f.request_id());
+        }
+    }
+
+    /// Golden byte vectors, cross-checked against the independent
+    /// Python mirror (`tools/wire_check.py`) — the layout in
+    /// `docs/PROTOCOL.md` is normative and both implementations must
+    /// produce these exact bytes.
+    #[test]
+    fn golden_bytes_match_the_spec() {
+        let golden: &[(Frame, &str)] = &[
+            (
+                Frame::Hello { id: 0, min: 1, max: 1 },
+                "010000000000000000544d465501000100",
+            ),
+            (
+                Frame::HelloOk {
+                    id: 0,
+                    version: 1,
+                    backend: "turbo".into(),
+                },
+                "020000000000000000010005000000747572626f",
+            ),
+            (
+                Frame::Resolve {
+                    id: 1,
+                    name: "gradient".into(),
+                },
+                "030100000000000000080000006772616469656e74",
+            ),
+            (
+                Frame::KernelInfo {
+                    id: 1,
+                    kernel: 3,
+                    n_inputs: 5,
+                    n_outputs: 1,
+                },
+                "0401000000000000000300000005000100",
+            ),
+            (
+                Frame::Call {
+                    id: 2,
+                    kernel: 3,
+                    inputs: vec![3, 5, 2, 7, -1],
+                },
+                "0502000000000000000300000005000300000005000000020000000700\
+                 0000ffffffff",
+            ),
+            (
+                Frame::CallBatch {
+                    id: 3,
+                    kernel: 0,
+                    batch: batch(2, &[vec![1, -2], vec![3, -4], vec![5, -6]]),
+                },
+                "060300000000000000000000000200030000000100\
+                 0000feffffff03000000fcffffff05000000faffffff",
+            ),
+            (
+                Frame::Reply {
+                    id: 3,
+                    batch: batch(1, &[vec![36], vec![-7], vec![12]]),
+                },
+                "07030000000000000001000300000024000000f9ffffff0c000000",
+            ),
+            (
+                Frame::CallBatch {
+                    id: 7,
+                    kernel: 2,
+                    batch: FlatBatch::new(5),
+                },
+                "060700000000000000020000000500000000 00",
+            ),
+            (
+                Frame::Error {
+                    id: 4,
+                    err: WireError::Service(ServiceError::Rejected {
+                        kernel: "poly6".into(),
+                        queued: 7,
+                        limit: 8,
+                    }),
+                },
+                "080400000000000000040005000000706f6c79360700000000000000\
+                 0800000000000000",
+            ),
+            (
+                Frame::Error {
+                    id: 0,
+                    err: WireError::VersionMismatch { min: 1, max: 1 },
+                },
+                "080000000000000000640001000100",
+            ),
+            (Frame::GetMetrics { id: 9 }, "090900000000000000"),
+            (
+                Frame::Metrics {
+                    id: 9,
+                    json: "{\"completed\":1}".into(),
+                },
+                "0a09000000000000000f0000007b22636f6d706c65746564223a317d",
+            ),
+        ];
+        for (frame, hex) in golden {
+            let hex: String = hex.chars().filter(|c| !c.is_whitespace()).collect();
+            let want: Vec<u8> = (0..hex.len())
+                .step_by(2)
+                .map(|i| u8::from_str_radix(&hex[i..i + 2], 16).unwrap())
+                .collect();
+            assert_eq!(frame.encode().unwrap(), want, "{frame:?}");
+            assert_eq!(&Frame::decode(&want).unwrap(), frame);
+        }
+    }
+
+    /// Random-frame generator for the codec property test.
+    struct GenFrame;
+
+    fn rand_string(rng: &mut Rng, max: usize) -> String {
+        let n = rng.index(max + 1);
+        (0..n)
+            .map(|_| char::from(b'a' + rng.index(26) as u8))
+            .collect()
+    }
+
+    fn rand_batch(rng: &mut Rng) -> FlatBatch {
+        // Includes zero-row batches; arity >= 1 (the representable set).
+        let arity = 1 + rng.index(6);
+        let rows = rng.index(9);
+        let mut b = FlatBatch::with_capacity(arity, rows);
+        for _ in 0..rows {
+            b.push_iter((0..arity).map(|_| rng.next_i32()));
+        }
+        b
+    }
+
+    impl Gen for GenFrame {
+        type Value = Frame;
+        fn generate(&self, rng: &mut Rng) -> Frame {
+            let id = rng.next_u64();
+            match rng.index(12) {
+                0 => Frame::Hello {
+                    id,
+                    min: rng.index(4) as u16,
+                    max: rng.index(4) as u16,
+                },
+                1 => Frame::HelloOk {
+                    id,
+                    version: rng.index(4) as u16,
+                    backend: rand_string(rng, 12),
+                },
+                2 => Frame::Resolve {
+                    id,
+                    name: rand_string(rng, 24),
+                },
+                3 => Frame::KernelInfo {
+                    id,
+                    kernel: rng.next_u64() as u32,
+                    n_inputs: rng.index(40) as u16,
+                    n_outputs: rng.index(40) as u16,
+                },
+                4 => Frame::Call {
+                    id,
+                    kernel: rng.next_u64() as u32,
+                    inputs: (0..rng.index(12)).map(|_| rng.next_i32()).collect(),
+                },
+                5 => Frame::CallBatch {
+                    id,
+                    kernel: rng.next_u64() as u32,
+                    batch: rand_batch(rng),
+                },
+                6 => Frame::Reply {
+                    id,
+                    batch: rand_batch(rng),
+                },
+                7 => Frame::GetMetrics { id },
+                8 => Frame::Metrics {
+                    id,
+                    json: rand_string(rng, 64),
+                },
+                _ => {
+                    let err = match rng.index(10) {
+                        0 => WireError::Service(ServiceError::UnknownKernel(rand_string(rng, 16))),
+                        1 => WireError::Service(ServiceError::ShapeMismatch {
+                            kernel: rand_string(rng, 16),
+                            expected: rng.index(1000),
+                            got: rng.index(1000),
+                        }),
+                        2 => WireError::Service(ServiceError::EmptyBatch {
+                            kernel: rand_string(rng, 16),
+                        }),
+                        3 => WireError::Service(ServiceError::Rejected {
+                            kernel: rand_string(rng, 16),
+                            queued: rng.index(1 << 20),
+                            limit: rng.index(1 << 20),
+                        }),
+                        4 => WireError::Service(ServiceError::ShutDown),
+                        5 => WireError::Service(ServiceError::DeadlineExceeded {
+                            kernel: rand_string(rng, 16),
+                        }),
+                        6 => WireError::Service(ServiceError::Disconnected {
+                            kernel: rand_string(rng, 16),
+                        }),
+                        7 => WireError::Service(ServiceError::Backend {
+                            backend: rand_string(rng, 8),
+                            message: rand_string(rng, 48),
+                        }),
+                        8 => WireError::VersionMismatch {
+                            min: rng.index(4) as u16,
+                            max: rng.index(4) as u16,
+                        },
+                        _ => WireError::Malformed {
+                            message: rand_string(rng, 32),
+                        },
+                    };
+                    Frame::Error { id, err }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_random_frames_round_trip() {
+        check(400, GenFrame, "wire-frame-roundtrip", |f| {
+            let bytes = f.encode().map_err(|e| e.to_string())?;
+            let back = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+            prop_assert(&back == f, "decode(encode(f)) != f")
+        });
+    }
+
+    /// Decoding any strict prefix of a valid frame is an error — and
+    /// never a panic (the malformed-input half of the codec property).
+    #[test]
+    fn prop_truncated_frames_error_cleanly() {
+        check(150, GenFrame, "wire-frame-truncation", |f| {
+            let bytes = f.encode().map_err(|e| e.to_string())?;
+            for cut in 0..bytes.len() {
+                if Frame::decode(&bytes[..cut]).is_ok() {
+                    return Err(format!("prefix of {cut}/{} bytes decoded", bytes.len()));
+                }
+            }
+            // Trailing garbage must be rejected too.
+            let mut padded = bytes.clone();
+            padded.push(0);
+            prop_assert(Frame::decode(&padded).is_err(), "trailing byte accepted")
+        });
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Frame::decode(&[]).is_err());
+        assert!(Frame::decode(&[0x7f]).is_err());
+        // Unknown opcode with a full header.
+        let mut buf = vec![0x7fu8];
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        let err = Frame::decode(&buf).unwrap_err();
+        assert!(err.msg.contains("unknown opcode"), "{err}");
+        // Bad hello magic.
+        let mut hello = Frame::Hello { id: 0, min: 1, max: 1 }.encode().unwrap();
+        hello[9] = b'X';
+        assert!(Frame::decode(&hello).unwrap_err().msg.contains("magic"));
+        // String length pointing past the payload.
+        let mut resolve = vec![OP_RESOLVE];
+        resolve.extend_from_slice(&1u64.to_le_bytes());
+        resolve.extend_from_slice(&1000u32.to_le_bytes());
+        resolve.extend_from_slice(b"abc");
+        assert!(Frame::decode(&resolve).unwrap_err().msg.contains("truncated"));
+        // Zero-arity batch with rows.
+        let mut cb = vec![OP_CALL_BATCH];
+        cb.extend_from_slice(&1u64.to_le_bytes());
+        cb.extend_from_slice(&0u32.to_le_bytes()); // kernel
+        cb.extend_from_slice(&0u16.to_le_bytes()); // arity 0
+        cb.extend_from_slice(&3u32.to_le_bytes()); // rows 3
+        assert!(Frame::decode(&cb).unwrap_err().msg.contains("zero arity"));
+        // Unknown error code.
+        let mut e = vec![OP_ERROR];
+        e.extend_from_slice(&1u64.to_le_bytes());
+        e.extend_from_slice(&999u16.to_le_bytes());
+        assert!(Frame::decode(&e).unwrap_err().msg.contains("error code"));
+    }
+
+    #[test]
+    fn stream_io_round_trips_and_guards_lengths() {
+        let mut buf = Vec::new();
+        for f in sample_frames() {
+            write_frame(&mut buf, &f).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(buf);
+        for f in sample_frames() {
+            assert_eq!(read_frame(&mut cur).unwrap().unwrap(), f);
+        }
+        // Clean EOF at a boundary is None, not an error.
+        assert!(read_frame(&mut cur).unwrap().is_none());
+        // A hostile length prefix is refused before allocation.
+        let huge = (MAX_PAYLOAD as u32 + 1).to_le_bytes().to_vec();
+        let mut cur = std::io::Cursor::new(huge);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // A truncated length prefix is an UnexpectedEof.
+        let mut cur = std::io::Cursor::new(vec![1u8, 0]);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // A truncated payload too.
+        let mut partial = Vec::new();
+        write_frame(&mut partial, &Frame::GetMetrics { id: 1 }).unwrap();
+        partial.pop();
+        let mut cur = std::io::Cursor::new(partial);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    /// The widest legal frame: a batch whose payload lands within one
+    /// word of `MAX_PAYLOAD`. One word more must be refused by
+    /// `write_frame`.
+    #[test]
+    fn max_length_batch_round_trips() {
+        // payload = 9 (head) + 4 (kernel) + 2 (arity) + 4 (rows) + 4*words
+        let words = (MAX_PAYLOAD - 19) / 4;
+        let batch = FlatBatch::from_flat(1, vec![0x5A5A5A5Au32 as i32; words]);
+        let f = Frame::CallBatch {
+            id: 1,
+            kernel: 0,
+            batch,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        assert_eq!(buf.len(), 4 + MAX_PAYLOAD - 1); // 19 + 4*words = MAX-1
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), f);
+        // Push the payload past the cap: write_frame refuses.
+        let words = (MAX_PAYLOAD - 19) / 4 + 1;
+        let batch = FlatBatch::from_flat(1, vec![0; words]);
+        let f = Frame::CallBatch {
+            id: 1,
+            kernel: 0,
+            batch,
+        };
+        let err = write_frame(&mut Vec::new(), &f).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+    }
+
+    #[test]
+    fn oversized_fields_fail_encode_not_panic() {
+        let f = Frame::Call {
+            id: 1,
+            kernel: 0,
+            inputs: vec![0; u16::MAX as usize + 1],
+        };
+        assert!(f.encode().unwrap_err().msg.contains("arity"));
+    }
+
+    #[test]
+    fn wire_errors_collapse_to_service_errors() {
+        let e = WireError::Service(ServiceError::ShutDown).into_service_error();
+        assert_eq!(e, ServiceError::ShutDown);
+        let e = WireError::VersionMismatch { min: 1, max: 1 }.into_service_error();
+        match e {
+            ServiceError::Backend { backend, message } => {
+                assert_eq!(backend, "wire");
+                assert!(message.contains("version"), "{message}");
+            }
+            other => panic!("expected Backend, got {other}"),
+        }
+        let e = WireError::Malformed {
+            message: "nope".into(),
+        }
+        .into_service_error();
+        assert!(matches!(e, ServiceError::Backend { .. }));
+    }
+
+    #[test]
+    fn listen_addr_parses_both_schemes() {
+        assert_eq!(
+            ListenAddr::parse("127.0.0.1:7700"),
+            ListenAddr::Tcp("127.0.0.1:7700".into())
+        );
+        assert_eq!(
+            ListenAddr::parse("unix:/tmp/tmfu.sock"),
+            ListenAddr::Unix("/tmp/tmfu.sock".into())
+        );
+        // Display round-trips the shared syntax.
+        for s in ["127.0.0.1:7700", "unix:/tmp/tmfu.sock"] {
+            assert_eq!(ListenAddr::parse(s).to_string(), s);
+        }
+    }
+}

@@ -1,0 +1,524 @@
+//! Wire-protocol server: `tmfu listen` and the test harnesses drive an
+//! [`OverlayService`] from decoded frames.
+//!
+//! Thread shape (std threads; the async reactor is a ROADMAP item):
+//!
+//! * one **acceptor** thread per bound address; every accepted socket
+//!   gets its own connection thread;
+//! * each **connection** thread performs the Hello handshake, builds
+//!   one pre-resolved [`KernelHandle`] per registry kernel (so `Call`
+//!   frames index a vector — no name lookups on the request path),
+//!   then decodes frames in a loop;
+//! * `Call` / `CallBatch` submit through the service's non-blocking
+//!   ports and hand the [`Pending`](crate::service::Pending) reply to
+//!   a short-lived **waiter** thread, so one socket carries many
+//!   in-flight requests; replies are correlated by request id and may
+//!   arrive out of submission order;
+//! * a per-connection **writer** thread owns the socket's write half
+//!   and serializes every outbound frame (`KernelInfo`, `Reply`,
+//!   `Error`, `Metrics`) through one channel.
+//!
+//! Failure containment: a malformed frame gets a typed
+//! [`WireError::Malformed`] reply and the connection is closed; a
+//! client that disconnects mid-call only makes the pending reply's
+//! channel send fail — the service, the other connections and the
+//! acceptor never notice.
+
+use super::{read_frame, write_frame, Frame, ListenAddr, WireError, WireStream};
+use crate::exec::FlatBatch;
+use crate::service::{KernelHandle, OverlayService, ServiceError};
+use crate::wire::{WIRE_VERSION_MAX, WIRE_VERSION_MIN};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// A bound, accepting wire server. Dropping the value does **not**
+/// stop it — call [`WireServer::shutdown`] (tests, embedders) or
+/// [`WireServer::wait`] (`tmfu listen`).
+pub struct WireServer {
+    addr: ListenAddr,
+    unix_path: Option<std::path::PathBuf>,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    /// Control clones of live connection sockets, keyed by connection
+    /// id; entries are removed by the connection thread on exit so a
+    /// long-lived server does not leak file descriptors.
+    streams: Arc<Mutex<HashMap<u64, WireStream>>>,
+}
+
+enum Listener {
+    Tcp(std::net::TcpListener),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener),
+}
+
+impl Listener {
+    /// The listener itself runs nonblocking (the acceptor polls a
+    /// stop flag between attempts, so shutdown never depends on a
+    /// wake-up connection reaching a blocked `accept`); accepted
+    /// streams are switched back to blocking for the reader/writer
+    /// threads.
+    fn set_nonblocking(&self) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(true),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(true),
+        }
+    }
+
+    fn accept(&self) -> io::Result<WireStream> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                Ok(WireStream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(WireStream::Unix(s))
+            }
+        }
+    }
+}
+
+impl WireServer {
+    /// Bind and start accepting. TCP addresses may use port 0 to get
+    /// an ephemeral port (see [`WireServer::addr`] for the resolved
+    /// one); a Unix path is created fresh (any stale socket file from
+    /// a previous run is removed first) and unlinked again on
+    /// shutdown.
+    pub fn bind(service: Arc<OverlayService>, addr: &ListenAddr) -> Result<WireServer> {
+        WireServer::bind_with_limit(service, addr, None)
+    }
+
+    /// [`WireServer::bind`], but the acceptor exits by itself after
+    /// `limit` connections (smoke tests, `tmfu listen --max-conns`).
+    pub fn bind_with_limit(
+        service: Arc<OverlayService>,
+        addr: &ListenAddr,
+        limit: Option<usize>,
+    ) -> Result<WireServer> {
+        let (listener, resolved, unix_path) = match addr {
+            ListenAddr::Tcp(a) => {
+                let l = std::net::TcpListener::bind(a)
+                    .with_context(|| format!("bind tcp {a}"))?;
+                let actual = l.local_addr().context("tcp local addr")?;
+                (Listener::Tcp(l), ListenAddr::Tcp(actual.to_string()), None)
+            }
+            #[cfg(unix)]
+            ListenAddr::Unix(p) => {
+                // A crashed previous server leaves the file behind;
+                // rebinding is the expected recovery.
+                let _ = std::fs::remove_file(p);
+                let l = std::os::unix::net::UnixListener::bind(p)
+                    .with_context(|| format!("bind unix socket {}", p.display()))?;
+                (Listener::Unix(l), addr.clone(), Some(p.clone()))
+            }
+            #[cfg(not(unix))]
+            ListenAddr::Unix(_) => {
+                anyhow::bail!("unix sockets are not available on this platform")
+            }
+        };
+        listener.set_nonblocking().context("listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let streams: Arc<Mutex<HashMap<u64, WireStream>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let acceptor = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let streams = Arc::clone(&streams);
+            thread::Builder::new()
+                .name("wire-accept".to_string())
+                .spawn(move || {
+                    let mut accepted = 0u64;
+                    loop {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if let Some(limit) = limit {
+                            if accepted >= limit as u64 {
+                                break;
+                            }
+                        }
+                        let stream = match listener.accept() {
+                            Ok(s) => s,
+                            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                                // Nonblocking poll: nothing waiting.
+                                thread::sleep(std::time::Duration::from_millis(5));
+                                continue;
+                            }
+                            // Transient accept failures (EMFILE,
+                            // aborted handshakes) must not spin.
+                            Err(_) => {
+                                thread::sleep(std::time::Duration::from_millis(10));
+                                continue;
+                            }
+                        };
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        accepted += 1;
+                        let conn_id = accepted;
+                        let control = match stream.try_clone() {
+                            Ok(c) => c,
+                            Err(_) => continue,
+                        };
+                        streams.lock().unwrap().insert(conn_id, control);
+                        let service = Arc::clone(&service);
+                        let conn_streams = Arc::clone(&streams);
+                        let spawned = thread::Builder::new()
+                            .name(format!("wire-conn-{conn_id}"))
+                            .spawn(move || {
+                                connection(service, stream);
+                                conn_streams.lock().unwrap().remove(&conn_id);
+                            });
+                        match spawned {
+                            Ok(handle) => {
+                                // Reap finished connections so a
+                                // long-lived server does not
+                                // accumulate join handles.
+                                let mut cs = conns.lock().unwrap();
+                                cs.retain(|h| !h.is_finished());
+                                cs.push(handle);
+                            }
+                            // Thread exhaustion: shed this connection
+                            // (close it) instead of killing the
+                            // acceptor — same policy as the accept
+                            // error arm above.
+                            Err(_) => {
+                                if let Some(s) = streams.lock().unwrap().remove(&conn_id) {
+                                    s.shutdown_both();
+                                }
+                                accepted -= 1;
+                                thread::sleep(std::time::Duration::from_millis(10));
+                            }
+                        }
+                    }
+                })
+                .context("spawn acceptor")?
+        };
+        Ok(WireServer {
+            addr: resolved,
+            unix_path,
+            stop,
+            acceptor: Some(acceptor),
+            conns,
+            streams,
+        })
+    }
+
+    /// The resolved listen address (ephemeral TCP ports filled in) —
+    /// pass its string form straight to `OverlayClient::connect`.
+    pub fn addr(&self) -> &ListenAddr {
+        &self.addr
+    }
+
+    /// Block until the acceptor exits on its own (connection limit
+    /// reached), then drain connection threads and clean up. Without a
+    /// limit this blocks until the process dies — the `tmfu listen`
+    /// foreground mode.
+    pub fn wait(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        self.finish(false);
+    }
+
+    /// Stop accepting, close every connection socket, join all
+    /// threads, remove the Unix socket file. Bounded: the acceptor
+    /// polls the stop flag (nonblocking accept), so this never waits
+    /// on a wake-up connection.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        self.finish(true);
+    }
+
+    fn finish(&mut self, force_close: bool) {
+        if force_close {
+            for s in self.streams.lock().unwrap().values() {
+                s.shutdown_both();
+            }
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in conns {
+            let _ = c.join();
+        }
+        self.streams.lock().unwrap().clear();
+        if let Some(p) = self.unix_path.take() {
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+}
+
+/// Outbound half of one connection: every producer (reader loop,
+/// waiter threads) sends frames here; one writer thread owns the
+/// socket's write half.
+type Outbox = mpsc::Sender<Frame>;
+
+fn connection(service: Arc<OverlayService>, stream: WireStream) {
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let control = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<Frame>();
+    let spawned = thread::Builder::new()
+        .name("wire-write".to_string())
+        .spawn(move || {
+            let mut w = BufWriter::new(write_half);
+            for frame in rx {
+                if write_frame(&mut w, &frame).and_then(|()| w.flush()).is_err() {
+                    // The peer is gone; unblock our reader too.
+                    if let Ok(inner) = w.get_ref().try_clone() {
+                        inner.shutdown_both();
+                    }
+                    break;
+                }
+            }
+        });
+    let Ok(writer) = spawned else {
+        // Thread exhaustion: shed the connection rather than panic.
+        control.shutdown_both();
+        return;
+    };
+
+    let mut reader = BufReader::new(stream);
+    let mut waiters: Vec<thread::JoinHandle<()>> = Vec::new();
+    serve_connection(&service, &mut reader, &tx, &mut waiters);
+
+    // Reply channels close once the waiters finish; the writer then
+    // drains and exits. Join order matters: waiters hold tx clones.
+    for wtr in waiters {
+        let _ = wtr.join();
+    }
+    drop(tx);
+    let _ = writer.join();
+    control.shutdown_both();
+}
+
+/// Decode-and-dispatch loop for one connection. Returns when the peer
+/// disconnects or breaks protocol.
+fn serve_connection(
+    service: &OverlayService,
+    reader: &mut BufReader<WireStream>,
+    tx: &Outbox,
+    waiters: &mut Vec<thread::JoinHandle<()>>,
+) {
+    // --- handshake -------------------------------------------------
+    let hello = match read_frame(reader) {
+        Ok(Some(f)) => f,
+        Ok(None) => return,
+        Err(e) => {
+            let _ = tx.send(malformed(0, &e));
+            return;
+        }
+    };
+    match hello {
+        Frame::Hello { id, min, max } => {
+            let lo = min.max(WIRE_VERSION_MIN);
+            let hi = max.min(WIRE_VERSION_MAX);
+            if lo > hi {
+                let _ = tx.send(Frame::Error {
+                    id,
+                    err: WireError::VersionMismatch {
+                        min: WIRE_VERSION_MIN,
+                        max: WIRE_VERSION_MAX,
+                    },
+                });
+                return;
+            }
+            let _ = tx.send(Frame::HelloOk {
+                id,
+                version: hi,
+                backend: service.backend().name().to_string(),
+            });
+        }
+        other => {
+            let _ = tx.send(malformed(
+                other.request_id(),
+                &format!("expected Hello, got {}", frame_name(&other)),
+            ));
+            return;
+        }
+    }
+
+    // One session handle per registry kernel, resolved once — `Call`
+    // frames carry the dense id and index this vector directly.
+    let handles: Vec<KernelHandle> = service.handles();
+
+    // --- request loop ----------------------------------------------
+    loop {
+        // Reap completed waiters so a long-lived connection does not
+        // accumulate join handles.
+        waiters.retain(|h| !h.is_finished());
+        let frame = match read_frame(reader) {
+            Ok(Some(f)) => f,
+            // Clean disconnect, or mid-frame cut: either way the
+            // conversation is over. In-flight waiters finish on their
+            // own; their sends fail harmlessly once the writer is gone.
+            Ok(None) => return,
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // Undecodable bytes: tell the peer, then hang up (the
+                // stream is no longer frame-aligned).
+                let _ = tx.send(malformed(0, &e));
+                return;
+            }
+            Err(_) => return,
+        };
+        match frame {
+            Frame::Resolve { id, name } => {
+                let reply = match service.kernel(&name) {
+                    Ok(h) => Frame::KernelInfo {
+                        id,
+                        kernel: h.id().0,
+                        n_inputs: h.arity() as u16,
+                        n_outputs: h.n_outputs() as u16,
+                    },
+                    Err(e) => Frame::Error {
+                        id,
+                        err: WireError::Service(e),
+                    },
+                };
+                let _ = tx.send(reply);
+            }
+            Frame::Call { id, kernel, inputs } => {
+                let Some(h) = handles.get(kernel as usize) else {
+                    let _ = tx.send(unknown_kernel(id, kernel));
+                    continue;
+                };
+                // Admission (and its typed errors) happens here on the
+                // reader thread; only the reply wait is offloaded.
+                match h.submit(&inputs) {
+                    Ok(pending) => {
+                        let wtx = tx.clone();
+                        let n_outputs = h.n_outputs();
+                        match spawn_waiter(move || {
+                            let frame = match pending.wait() {
+                                Ok(row) => Frame::Reply {
+                                    id,
+                                    batch: FlatBatch::from_flat(n_outputs, row),
+                                },
+                                Err(e) => Frame::Error {
+                                    id,
+                                    err: WireError::Service(e),
+                                },
+                            };
+                            let _ = wtx.send(frame);
+                        }) {
+                            Ok(w) => waiters.push(w),
+                            Err(_) => {
+                                let _ = tx.send(overloaded(id));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Frame::Error {
+                            id,
+                            err: WireError::Service(e),
+                        });
+                    }
+                }
+            }
+            Frame::CallBatch { id, kernel, batch } => {
+                let Some(h) = handles.get(kernel as usize) else {
+                    let _ = tx.send(unknown_kernel(id, kernel));
+                    continue;
+                };
+                // `call_batch` blocks until every row replies, so the
+                // whole call moves to a waiter; admission is still
+                // atomic inside it.
+                let wtx = tx.clone();
+                let h = h.clone();
+                match spawn_waiter(move || {
+                    let frame = match h.call_batch(&batch) {
+                        Ok(out) => Frame::Reply { id, batch: out },
+                        Err(e) => Frame::Error {
+                            id,
+                            err: WireError::Service(e),
+                        },
+                    };
+                    let _ = wtx.send(frame);
+                }) {
+                    Ok(w) => waiters.push(w),
+                    Err(_) => {
+                        let _ = tx.send(overloaded(id));
+                    }
+                }
+            }
+            Frame::GetMetrics { id } => {
+                let json = service.metrics().to_json().to_string_compact();
+                let _ = tx.send(Frame::Metrics { id, json });
+            }
+            other => {
+                // Server-to-client opcodes (or a second Hello) are a
+                // protocol breach: reply typed, then hang up.
+                let _ = tx.send(malformed(
+                    other.request_id(),
+                    &format!("unexpected {} frame from a client", frame_name(&other)),
+                ));
+                return;
+            }
+        }
+    }
+}
+
+/// Spawn failure (thread exhaustion) is a per-request error, reported
+/// to the caller — never a server panic.
+fn spawn_waiter(f: impl FnOnce() + Send + 'static) -> io::Result<thread::JoinHandle<()>> {
+    thread::Builder::new().name("wire-wait".to_string()).spawn(f)
+}
+
+fn overloaded(id: u64) -> Frame {
+    Frame::Error {
+        id,
+        err: WireError::Service(ServiceError::Backend {
+            backend: "wire".to_string(),
+            message: "server cannot spawn a reply waiter (thread exhaustion)".to_string(),
+        }),
+    }
+}
+
+fn malformed(id: u64, msg: &impl ToString) -> Frame {
+    Frame::Error {
+        id,
+        err: WireError::Malformed {
+            message: msg.to_string(),
+        },
+    }
+}
+
+fn unknown_kernel(id: u64, kernel: u32) -> Frame {
+    Frame::Error {
+        id,
+        err: WireError::Service(ServiceError::UnknownKernel(format!("kernel#{kernel}"))),
+    }
+}
+
+fn frame_name(f: &Frame) -> &'static str {
+    match f {
+        Frame::Hello { .. } => "Hello",
+        Frame::HelloOk { .. } => "HelloOk",
+        Frame::Resolve { .. } => "Resolve",
+        Frame::KernelInfo { .. } => "KernelInfo",
+        Frame::Call { .. } => "Call",
+        Frame::CallBatch { .. } => "CallBatch",
+        Frame::Reply { .. } => "Reply",
+        Frame::Error { .. } => "Error",
+        Frame::GetMetrics { .. } => "GetMetrics",
+        Frame::Metrics { .. } => "Metrics",
+    }
+}

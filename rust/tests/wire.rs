@@ -1,0 +1,387 @@
+//! Wire-protocol integration tests: a real client and a real server
+//! in one process, talking through OS sockets (TCP with ephemeral
+//! ports; one test covers the Unix transport). Covers the acceptance
+//! surface of the wire PR: resolve/call/call_batch/submit round trips,
+//! every server-originating `ServiceError` variant arriving typed over
+//! the socket, version negotiation, malformed frames, and mid-call
+//! disconnects leaving the server healthy.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tmfu_overlay::client::OverlayClient;
+use tmfu_overlay::dfg::eval;
+use tmfu_overlay::exec::{BackendKind, FlatBatch};
+use tmfu_overlay::service::{OverlayService, ServiceError};
+use tmfu_overlay::util::prng::Rng;
+use tmfu_overlay::wire::server::WireServer;
+use tmfu_overlay::wire::{read_frame, write_frame, Frame, ListenAddr, WireError};
+
+fn start(backend: BackendKind, queue_depth: usize) -> (Arc<OverlayService>, WireServer) {
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(backend)
+            .pipelines(2)
+            .max_batch(8)
+            .queue_depth(queue_depth)
+            .build()
+            .unwrap(),
+    );
+    let server = WireServer::bind(Arc::clone(&service), &ListenAddr::parse("127.0.0.1:0"))
+        .unwrap();
+    (service, server)
+}
+
+fn connect(server: &WireServer) -> OverlayClient {
+    OverlayClient::connect(&server.addr().to_string()).unwrap()
+}
+
+#[test]
+fn resolve_call_batch_submit_and_metrics_round_trip() {
+    let (service, server) = start(BackendKind::Turbo, 1024);
+    let client = connect(&server);
+    assert_eq!(client.version(), 1);
+    assert_eq!(client.backend(), "turbo");
+
+    // Resolve mirrors OverlayService::kernel: id + arities, once.
+    let gradient = client.kernel("gradient").unwrap();
+    assert_eq!(gradient.name(), "gradient");
+    assert_eq!(gradient.arity(), 5);
+    assert_eq!(gradient.n_outputs(), 1);
+    assert_eq!(
+        gradient.id(),
+        service.kernel("gradient").unwrap().id().0,
+        "remote id must be the service's dense id"
+    );
+
+    // Blocking call.
+    assert_eq!(gradient.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    // Batch: rows travel flat and come back in row order, oracle-exact.
+    let compiled = service.registry().get("poly6").unwrap().clone();
+    let poly6 = client.kernel("poly6").unwrap();
+    let mut rng = Rng::new(41);
+    let mut batch = FlatBatch::new(poly6.arity());
+    for _ in 0..23 {
+        batch.push_iter((0..poly6.arity()).map(|_| rng.range_i64(-2000, 2000) as i32));
+    }
+    let out = poly6.call_batch(&batch).unwrap();
+    assert_eq!(out.n_rows(), 23);
+    assert_eq!(out.arity(), poly6.n_outputs());
+    for (i, row) in batch.iter().enumerate() {
+        assert_eq!(out.row(i), &eval(&compiled.dfg, row)[..], "row {i}");
+    }
+
+    // Many in-flight submits on one socket; replies correlate by id
+    // even when collected out of submission order.
+    let grad_dfg = &service.registry().get("gradient").unwrap().dfg;
+    let mut jobs = Vec::new();
+    for i in 0..16 {
+        let inputs = vec![i, 5 - i, 2, 7, -i];
+        let want = eval(grad_dfg, &inputs);
+        jobs.push((gradient.submit(&inputs).unwrap(), want));
+    }
+    for (p, want) in jobs.into_iter().rev() {
+        assert_eq!(p.wait().unwrap(), want);
+    }
+
+    // Poll + deadline variants of the pending mirror.
+    let mut p = gradient.submit(&[3, 5, 2, 7, 1]).unwrap();
+    let got = loop {
+        if let Some(r) = p.poll() {
+            break r.unwrap();
+        }
+        std::thread::yield_now();
+    };
+    assert_eq!(got, vec![36]);
+    let mut p = gradient.submit(&[3, 5, 2, 7, 1]).unwrap();
+    assert_eq!(
+        p.wait_deadline(Instant::now() + Duration::from_secs(10)).unwrap(),
+        vec![36]
+    );
+
+    // Metrics over the wire: same JSON field names as --metrics-json.
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("backend").as_str(), Some("turbo"));
+    let completed = m.get("completed").as_i64().unwrap();
+    assert_eq!(completed as u64, service.completed());
+    assert!(completed >= 1 + 23 + 16 + 2, "{completed}");
+    assert_eq!(m.get("rejected").as_i64(), Some(0));
+    assert!(m.get("per_kernel").get("gradient").as_i64().unwrap() >= 18);
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn service_errors_round_trip_typed_over_the_socket() {
+    let (service, server) = start(BackendKind::Ref, 2);
+    let client = connect(&server);
+
+    // UnknownKernel from resolve.
+    assert_eq!(
+        client.kernel("nonesuch").unwrap_err(),
+        ServiceError::UnknownKernel("nonesuch".to_string())
+    );
+
+    let gradient = client.kernel("gradient").unwrap();
+
+    // ShapeMismatch: the client does not pre-validate, so the server's
+    // typed reply is what we observe.
+    assert_eq!(
+        gradient.call(&[1, 2]).unwrap_err(),
+        ServiceError::ShapeMismatch {
+            kernel: "gradient".to_string(),
+            expected: 5,
+            got: 2
+        }
+    );
+
+    // EmptyBatch: a zero-row batch crosses the wire and is refused by
+    // the service, not the codec.
+    assert_eq!(
+        gradient.call_batch(&FlatBatch::new(5)).unwrap_err(),
+        ServiceError::EmptyBatch {
+            kernel: "gradient".to_string()
+        }
+    );
+
+    // Rejected: a batch wider than the queue depth is deterministically
+    // refused by admission control, with the kernel named.
+    let rows: Vec<Vec<i32>> = (0..3).map(|i| vec![i; 5]).collect();
+    match gradient.call_batch(&FlatBatch::from_rows(5, &rows)).unwrap_err() {
+        ServiceError::Rejected { kernel, limit, .. } => {
+            assert_eq!(kernel, "gradient");
+            assert_eq!(limit, 2);
+        }
+        other => panic!("expected Rejected, got {other}"),
+    }
+    assert_eq!(service.metrics().rejected, 3);
+
+    // ShutDown: the service drains behind the still-running server;
+    // the session then answers the typed shutdown error — over TCP.
+    service.shutdown().unwrap();
+    assert_eq!(gradient.call(&[0; 5]).unwrap_err(), ServiceError::ShutDown);
+    assert_eq!(
+        gradient.submit(&[0; 5]).unwrap().wait().unwrap_err(),
+        ServiceError::ShutDown
+    );
+    // Metrics still served after shutdown.
+    assert!(client.metrics().unwrap().get("completed").as_i64().is_some());
+
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn version_mismatch_is_refused_with_the_server_range() {
+    let (service, server) = start(BackendKind::Turbo, 64);
+    let ListenAddr::Tcp(addr) = server.addr().clone() else {
+        panic!("expected tcp")
+    };
+    // Handcrafted handshake from a client that only speaks v9.
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    write_frame(&mut s, &Frame::Hello { id: 7, min: 9, max: 9 }).unwrap();
+    match read_frame(&mut s).unwrap().unwrap() {
+        Frame::Error { id, err } => {
+            assert_eq!(id, 7);
+            assert_eq!(err, WireError::VersionMismatch { min: 1, max: 1 });
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    // The server hangs up after refusing.
+    assert!(read_frame(&mut s).unwrap().is_none());
+
+    // A well-versioned client still connects fine afterwards.
+    let client = connect(&server);
+    assert_eq!(client.kernel("gradient").unwrap().call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_a_hangup() {
+    let (service, server) = start(BackendKind::Turbo, 64);
+    let ListenAddr::Tcp(addr) = server.addr().clone() else {
+        panic!("expected tcp")
+    };
+
+    // A hostile length prefix: refused before allocation, connection
+    // closed, acceptor unharmed. (Exactly 4 bytes, so the server has
+    // no unread input left when it hangs up — a clean FIN, not RST.)
+    {
+        use std::io::Write as _;
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(&[0xff, 0xff, 0xff, 0xff]).unwrap();
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::Error {
+                err: WireError::Malformed { message },
+                ..
+            } => assert!(message.contains("exceeds max"), "{message}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        assert!(matches!(read_frame(&mut s), Ok(None) | Err(_)));
+    }
+
+    // A non-Hello first frame breaks the handshake contract.
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &Frame::GetMetrics { id: 3 }).unwrap();
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::Error {
+                id,
+                err: WireError::Malformed { message },
+            } => {
+                assert_eq!(id, 3);
+                assert!(message.contains("Hello"), "{message}");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    // A server-side opcode after a valid handshake is a breach too.
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 1 }).unwrap();
+        assert!(matches!(
+            read_frame(&mut s).unwrap().unwrap(),
+            Frame::HelloOk { .. }
+        ));
+        write_frame(
+            &mut s,
+            &Frame::Reply {
+                id: 5,
+                batch: FlatBatch::new(1),
+            },
+        )
+        .unwrap();
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::Error {
+                err: WireError::Malformed { message },
+                ..
+            } => assert!(message.contains("Reply"), "{message}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        assert!(read_frame(&mut s).unwrap().is_none());
+    }
+
+    // After all that abuse, a real client still gets served.
+    let client = connect(&server);
+    assert_eq!(client.kernel("gradient").unwrap().call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn mid_call_disconnect_leaves_the_server_healthy() {
+    let (service, server) = start(BackendKind::Sim, 1024);
+
+    // Raw socket: submit a call, then vanish without reading the
+    // reply. The server's reply write fails silently; nothing else
+    // notices.
+    let ListenAddr::Tcp(addr) = server.addr().clone() else {
+        panic!("expected tcp")
+    };
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 1 }).unwrap();
+        assert!(matches!(
+            read_frame(&mut s).unwrap().unwrap(),
+            Frame::HelloOk { .. }
+        ));
+        let gradient_id = service.kernel("gradient").unwrap().id().0;
+        write_frame(
+            &mut s,
+            &Frame::Call {
+                id: 1,
+                kernel: gradient_id,
+                inputs: vec![3, 5, 2, 7, 1],
+            },
+        )
+        .unwrap();
+        // Drop the stream with the reply still in flight.
+    }
+
+    // Library client: outstanding pendings resolve (with the reply if
+    // it won the race, else Disconnected) when the client is dropped.
+    let client = connect(&server);
+    let gradient = client.kernel("gradient").unwrap();
+    let pending = gradient.submit(&[3, 5, 2, 7, 1]).unwrap();
+    drop(client);
+    match pending.wait() {
+        Ok(row) => assert_eq!(row, vec![36]),
+        Err(ServiceError::Disconnected { .. }) => {}
+        Err(other) => panic!("unexpected error after disconnect: {other}"),
+    }
+    // The session itself now reports the dead connection.
+    assert!(matches!(
+        gradient.call(&[3, 5, 2, 7, 1]),
+        Err(ServiceError::Disconnected { .. }) | Err(ServiceError::Backend { .. })
+    ));
+
+    // A fresh connection is served as if nothing happened.
+    let client = connect(&server);
+    assert_eq!(client.kernel("gradient").unwrap().call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn unix_socket_transport_serves_and_cleans_up() {
+    let path = std::env::temp_dir().join(format!("tmfu-wire-test-{}.sock", std::process::id()));
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(BackendKind::Turbo)
+            .pipelines(1)
+            .build()
+            .unwrap(),
+    );
+    let addr = ListenAddr::Unix(path.clone());
+    let server = WireServer::bind(Arc::clone(&service), &addr).unwrap();
+    assert!(path.exists(), "socket file must exist while bound");
+
+    let client = OverlayClient::connect(&format!("unix:{}", path.display())).unwrap();
+    let chebyshev = client.kernel("chebyshev").unwrap();
+    let compiled = service.registry().get("chebyshev").unwrap().clone();
+    for x in [-3, 0, 5, 111] {
+        assert_eq!(chebyshev.call(&[x]).unwrap(), eval(&compiled.dfg, &[x]));
+    }
+
+    drop(client);
+    server.shutdown();
+    assert!(!path.exists(), "socket file must be removed on shutdown");
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn concurrent_sessions_share_one_connection() {
+    let (service, server) = start(BackendKind::Turbo, 1024);
+    let client = connect(&server);
+    let gradient = client.kernel("gradient").unwrap();
+    let dfg = service.registry().get("gradient").unwrap().dfg.clone();
+    let mut threads = Vec::new();
+    for t in 0..4i32 {
+        let session = gradient.clone();
+        let dfg = dfg.clone();
+        threads.push(std::thread::spawn(move || {
+            for i in 0..10 {
+                let inputs = vec![t, i, t + i, 7, -i];
+                assert_eq!(session.call(&inputs).unwrap(), eval(&dfg, &inputs));
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(service.completed(), 40);
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}

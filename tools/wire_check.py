@@ -1,0 +1,215 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of the tmfu wire protocol codec (DESIGN.md §9).
+
+Independently implements the byte layout normatively specified in
+docs/PROTOCOL.md and checks it against the same golden vectors that the
+Rust unit test `wire::tests::golden_bytes_match_the_spec` asserts. If
+either implementation drifts from the spec, its golden check fails —
+the two implementations never share code, only the table below.
+
+Usage:
+  python3 tools/wire_check.py            # verify goldens + round-trip
+  python3 tools/wire_check.py --emit     # print the golden table (hex)
+"""
+
+import struct
+import sys
+
+MAGIC = b"TMFU"
+
+OP_HELLO = 0x01
+OP_HELLO_OK = 0x02
+OP_RESOLVE = 0x03
+OP_KERNEL_INFO = 0x04
+OP_CALL = 0x05
+OP_CALL_BATCH = 0x06
+OP_REPLY = 0x07
+OP_ERROR = 0x08
+OP_GET_METRICS = 0x09
+OP_METRICS = 0x0A
+
+EC = {
+    "unknown_kernel": 1,
+    "shape_mismatch": 2,
+    "empty_batch": 3,
+    "rejected": 4,
+    "shut_down": 5,
+    "deadline_exceeded": 6,
+    "disconnected": 7,
+    "backend": 8,
+    "version_mismatch": 100,
+    "malformed": 101,
+}
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def string(s):
+    raw = s.encode("utf-8")
+    return u32(len(raw)) + raw
+
+
+def words(ws):
+    return b"".join(struct.pack("<i", w) for w in ws)
+
+
+def head(opcode, rid):
+    return bytes([opcode]) + u64(rid)
+
+
+def batch(arity, rows):
+    """rows: list of lists, each of length arity."""
+    flat = [w for r in rows for w in r]
+    assert len(flat) == arity * len(rows)
+    return u16(arity) + u32(len(rows)) + words(flat)
+
+
+def enc_hello(rid, lo, hi):
+    return head(OP_HELLO, rid) + MAGIC + u16(lo) + u16(hi)
+
+
+def enc_hello_ok(rid, version, backend):
+    return head(OP_HELLO_OK, rid) + u16(version) + string(backend)
+
+
+def enc_resolve(rid, name):
+    return head(OP_RESOLVE, rid) + string(name)
+
+
+def enc_kernel_info(rid, kernel, n_in, n_out):
+    return head(OP_KERNEL_INFO, rid) + u32(kernel) + u16(n_in) + u16(n_out)
+
+
+def enc_call(rid, kernel, inputs):
+    return head(OP_CALL, rid) + u32(kernel) + u16(len(inputs)) + words(inputs)
+
+
+def enc_call_batch(rid, kernel, arity, rows):
+    return head(OP_CALL_BATCH, rid) + u32(kernel) + batch(arity, rows)
+
+
+def enc_reply(rid, arity, rows):
+    return head(OP_REPLY, rid) + batch(arity, rows)
+
+
+def enc_error(rid, code, *fields):
+    body = head(OP_ERROR, rid) + u16(EC[code])
+    if code in ("unknown_kernel", "empty_batch", "deadline_exceeded", "disconnected"):
+        (kernel,) = fields
+        body += string(kernel)
+    elif code == "shape_mismatch":
+        kernel, expected, got = fields
+        body += string(kernel) + u32(expected) + u32(got)
+    elif code == "rejected":
+        kernel, queued, limit = fields
+        body += string(kernel) + u64(queued) + u64(limit)
+    elif code == "shut_down":
+        assert not fields
+    elif code == "backend":
+        backend, message = fields
+        body += string(backend) + string(message)
+    elif code == "version_mismatch":
+        lo, hi = fields
+        body += u16(lo) + u16(hi)
+    elif code == "malformed":
+        (message,) = fields
+        body += string(message)
+    return body
+
+
+def enc_get_metrics(rid):
+    return head(OP_GET_METRICS, rid)
+
+
+def enc_metrics(rid, json_text):
+    return head(OP_METRICS, rid) + string(json_text)
+
+
+# The golden table: (label, payload bytes). Must stay in sync with
+# wire::tests::golden_bytes_match_the_spec — same frames, same order.
+GOLDEN = [
+    ("hello", enc_hello(0, 1, 1)),
+    ("hello_ok", enc_hello_ok(0, 1, "turbo")),
+    ("resolve", enc_resolve(1, "gradient")),
+    ("kernel_info", enc_kernel_info(1, 3, 5, 1)),
+    ("call", enc_call(2, 3, [3, 5, 2, 7, -1])),
+    ("call_batch", enc_call_batch(3, 0, 2, [[1, -2], [3, -4], [5, -6]])),
+    ("reply", enc_reply(3, 1, [[36], [-7], [12]])),
+    ("call_batch_zero_rows", enc_call_batch(7, 2, 5, [])),
+    ("error_rejected", enc_error(4, "rejected", "poly6", 7, 8)),
+    ("error_version_mismatch", enc_error(0, "version_mismatch", 1, 1)),
+    ("get_metrics", enc_get_metrics(9)),
+    ("metrics", enc_metrics(9, '{"completed":1}')),
+]
+
+# Hex copies of the vectors embedded in the Rust test. Regenerate with
+# --emit after an intentional (versioned!) format change.
+EXPECTED_HEX = {
+    "hello": "010000000000000000544d465501000100",
+    "hello_ok": "020000000000000000010005000000747572626f",
+    "resolve": "030100000000000000080000006772616469656e74",
+    "kernel_info": "0401000000000000000300000005000100",
+    "call": "05020000000000000003000000050003000000050000000200000007000000ffffffff",
+    "call_batch": "0603000000000000000000000002000300000001000000feffffff03000000fcffffff05000000faffffff",
+    "reply": "07030000000000000001000300000024000000f9ffffff0c000000",
+    "call_batch_zero_rows": "06070000000000000002000000050000000000",
+    "error_rejected": "080400000000000000040005000000706f6c793607000000000000000800000000000000",
+    "error_version_mismatch": "080000000000000000640001000100",
+    "get_metrics": "090900000000000000",
+    "metrics": "0a09000000000000000f0000007b22636f6d706c65746564223a317d",
+}
+
+
+def frame(payload):
+    """A full on-stream frame: u32 LE length prefix + payload."""
+    return u32(len(payload)) + payload
+
+
+def decode_smoke(payload):
+    """Shallow structural decode: opcode + id + body length sanity."""
+    assert len(payload) >= 9, "frame shorter than its header"
+    opcode = payload[0]
+    assert opcode in (
+        OP_HELLO, OP_HELLO_OK, OP_RESOLVE, OP_KERNEL_INFO, OP_CALL,
+        OP_CALL_BATCH, OP_REPLY, OP_ERROR, OP_GET_METRICS, OP_METRICS,
+    ), f"unknown opcode {opcode:#x}"
+    (rid,) = struct.unpack_from("<Q", payload, 1)
+    return opcode, rid
+
+
+def main():
+    if "--emit" in sys.argv[1:]:
+        for label, payload in GOLDEN:
+            print(f"{label}: {payload.hex()}")
+        return 0
+    failures = 0
+    for label, payload in GOLDEN:
+        got = payload.hex()
+        want = EXPECTED_HEX[label]
+        if got != want:
+            print(f"MISMATCH {label}:\n  mirror : {got}\n  golden : {want}")
+            failures += 1
+            continue
+        decode_smoke(payload)
+        f = frame(payload)
+        (n,) = struct.unpack_from("<I", f, 0)
+        assert n == len(payload)
+    if failures:
+        print(f"wire mirror: {failures} golden vector(s) diverged")
+        return 1
+    print(f"wire mirror: all {len(GOLDEN)} golden vectors match the spec")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Loopback smoke for the wire protocol: `tmfu listen` on a Unix socket
+# in one process, `tmfu call` in another, asserting the kernel result
+# and a metrics fetch. Run by `make wire-smoke` (part of `make verify`).
+set -euo pipefail
+
+BIN=${BIN:-target/release/tmfu}
+SOCK=$(mktemp -u "${TMPDIR:-/tmp}/tmfu-wire-smoke-XXXXXX.sock")
+
+cleanup() {
+    [ -n "${LPID:-}" ] && kill "$LPID" 2>/dev/null || true
+    rm -f "$SOCK"
+}
+trap cleanup EXIT
+
+# Terminal 1 of the README walkthrough: unix-only listener that exits
+# after one connection (so the smoke terminates by itself).
+"$BIN" listen --socket "$SOCK" --tcp= --backend turbo --max-conns 1 &
+LPID=$!
+
+# The socket file appearing is the readiness signal.
+for _ in $(seq 1 200); do
+    [ -S "$SOCK" ] && break
+    kill -0 "$LPID" 2>/dev/null || { echo "wire smoke: listener died early"; exit 1; }
+    sleep 0.05
+done
+[ -S "$SOCK" ] || { echo "wire smoke: socket never appeared"; exit 1; }
+
+# Terminal 2: one call (gradient(3,5,2,7,1) = 36) plus a metrics fetch.
+OUT=$("$BIN" call gradient --addr "unix:$SOCK" --inputs 3,5,2,7,1 --metrics)
+echo "$OUT"
+
+echo "$OUT" | head -n 1 | grep -qx "36" \
+    || { echo "wire smoke: expected result 36"; exit 1; }
+echo "$OUT" | grep -q '"completed": 1' \
+    || { echo "wire smoke: metrics JSON missing completed=1"; exit 1; }
+echo "$OUT" | grep -q '"backend": "turbo"' \
+    || { echo "wire smoke: metrics JSON missing backend"; exit 1; }
+
+# The listener exits cleanly after its one connection.
+wait "$LPID"
+LPID=""
+echo "wire smoke: OK (call + metrics over unix:$SOCK)"

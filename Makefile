@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify fmt clippy doc wire-smoke bench bench-all bench-mirror artifacts dfg check-dfg clean
+.PHONY: build test verify fmt clippy doc wire-smoke bench bench-smoke bench-all bench-mirror artifacts dfg check-dfg clean
 
 build:
 	$(CARGO) build --release
@@ -28,15 +28,28 @@ wire-smoke: build
 	./tools/wire_smoke.sh
 
 # The full gate: formatting, lints, release build, test suite, doc
-# build, wire loopback smoke.
-verify: fmt clippy build test doc wire-smoke
+# build, wire loopback smoke, serving-perf smoke (allocation-free
+# submit path + reactor thread ceiling + wire overhead regression).
+verify: fmt clippy build test doc wire-smoke bench-smoke
 
 # Perf trajectory: run the serving-path benchmarks and (re)write the
 # checked-in baseline JSON (packets/s per backend per kernel, sim
-# cycles/s, turbo-vs-ref headline ratio). Cargo runs bench binaries
-# with cwd = the package root (rust/), hence the ../ on the path.
+# cycles/s, turbo-vs-ref headline ratio, in-flight scaling + the
+# zero-allocation submit audit). Cargo runs bench binaries with
+# cwd = the package root (rust/), hence the ../ on the path.
 bench:
-	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR2.json
+	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR5.json
+
+# Fast serving-perf gate for `make verify`/CI: run bench_perf in fast
+# mode and assert the hard invariants — submit_allocs_per_call == 0,
+# the reactor thread ceiling, the turbo floor, and (when the committed
+# baseline carries a measured number) that the wire per-call overhead
+# did not regress. bench_perf itself hard-asserts the first two; the
+# checker re-asserts from the JSON so a silent bench edit cannot
+# un-gate them.
+bench-smoke: build
+	TMFU_BENCH_FAST=1 $(CARGO) bench --bench bench_perf -- --json ../BENCH_SMOKE.json
+	$(PYTHON) tools/bench_smoke_check.py BENCH_SMOKE.json BENCH_PR5.json
 
 # Every bench target (paper tables/figures + perf).
 bench-all:

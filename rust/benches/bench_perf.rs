@@ -31,7 +31,8 @@ use tmfu_overlay::service::{KernelHandle, OverlayService};
 use tmfu_overlay::wire::server::WireServer;
 use tmfu_overlay::wire::ListenAddr;
 use tmfu_overlay::util::bench::{
-    alloc_count, black_box, json_path_from_args, section, Bench, BenchReport, CountingAlloc,
+    alloc_count, black_box, json_path_from_args, os_thread_count, section, thread_alloc_count,
+    Bench, BenchReport, CountingAlloc,
 };
 use tmfu_overlay::util::json;
 use tmfu_overlay::util::prng::Rng;
@@ -265,6 +266,122 @@ fn main() -> anyhow::Result<()> {
              (framing + unix socket + correlation)"
         );
 
+        drop(remote);
+        drop(client);
+        server.shutdown();
+        service.shutdown()?;
+    }
+
+    section("B6 in-flight scaling (completion-slab reactor)");
+    {
+        const INFLIGHT: usize = 10_000;
+        let service = std::sync::Arc::new(
+            OverlayService::builder()
+                .backend(BackendKind::Turbo)
+                .pipelines(2)
+                .max_batch(256)
+                .queue_depth(2 * INFLIGHT)
+                .build()?,
+        );
+        let h = service.kernel("gradient")?;
+
+        // 10k concurrent submits in-process: every reply is a slab
+        // ticket, so the burst costs slots, not channels or threads.
+        let mut pendings = Vec::with_capacity(INFLIGHT);
+        let mut out = Vec::new();
+        let m = b.run_with_items(
+            &format!("service::submit {INFLIGHT} in-flight (turbo)"),
+            INFLIGHT as f64,
+            || {
+                for i in 0..INFLIGHT {
+                    pendings.push(h.submit(black_box(&[3, 5, 2, 7, i as i32])).unwrap());
+                }
+                for mut p in pendings.drain(..) {
+                    p.wait_into(&mut out).unwrap();
+                }
+                black_box(out.len())
+            },
+        );
+        println!("{}   (items = requests)", report.record(m.clone()).report_line());
+        report.set_meta("inflight_10k_items_per_s", json::f(m.throughput().unwrap_or(0.0)));
+
+        // Allocation audit: after warm-up, a submit -> wait_into round
+        // trip must perform exactly zero heap allocations on the
+        // calling thread (the slab slot, its buffers, the queue entry
+        // and the reply buffer all recycle). Thread-local counting
+        // keeps concurrent worker-side bookkeeping out of the audit.
+        {
+            for i in 0..2048i32 {
+                let mut p = h.submit(&[3, 5, 2, 7, i]).unwrap();
+                p.wait_into(&mut out).unwrap();
+            }
+            let audit_calls = 4096u64;
+            let before = thread_alloc_count();
+            for i in 0..audit_calls {
+                let mut p = h.submit(black_box(&[3, 5, 2, 7, i as i32])).unwrap();
+                p.wait_into(&mut out).unwrap();
+            }
+            let allocs = thread_alloc_count() - before;
+            let per_call = allocs as f64 / audit_calls as f64;
+            println!(
+                "allocation audit: {allocs} heap allocations on the submit thread across \
+                 {audit_calls} submit->wait round trips ({per_call:.4}/call; bound: 0)"
+            );
+            report.set_meta("submit_allocs_per_call", json::f(per_call));
+            assert_eq!(
+                allocs, 0,
+                "steady-state submit->wait allocated {allocs} times in {audit_calls} calls — \
+                 the allocation-free completion slab regressed"
+            );
+        }
+
+        // The same burst through one wire connection: the reactor
+        // drains completions from the slab, so 10k in-flight calls
+        // hold 10k slots — and O(workers + connections) threads, not
+        // a waiter thread per call.
+        let sock = std::env::temp_dir()
+            .join(format!("tmfu-bench-slab-{}.sock", std::process::id()));
+        let addr = ListenAddr::Unix(sock.clone());
+        let server = WireServer::bind(std::sync::Arc::clone(&service), &addr)?;
+        let client = OverlayClient::connect(&format!("unix:{}", sock.display()))?;
+        let remote = client.kernel("gradient")?;
+        let mut peak_threads = 0usize;
+        let m = b.run_with_items(
+            &format!("wire::submit {INFLIGHT} in-flight (unix loopback)"),
+            INFLIGHT as f64,
+            || {
+                let mut replies = Vec::with_capacity(INFLIGHT);
+                for i in 0..INFLIGHT {
+                    replies.push(remote.submit(black_box(&[3, 5, 2, 7, i as i32])).unwrap());
+                }
+                if let Some(t) = os_thread_count() {
+                    peak_threads = peak_threads.max(t);
+                }
+                for p in replies {
+                    p.wait().unwrap();
+                }
+            },
+        );
+        println!("{}   (items = requests)", report.record(m.clone()).report_line());
+        report.set_meta(
+            "wire_inflight_10k_items_per_s",
+            json::f(m.throughput().unwrap_or(0.0)),
+        );
+        if peak_threads > 0 {
+            // main + 2 workers + acceptor + per-conn reader/reactor +
+            // client reader ≈ 7; anything near the in-flight count
+            // means the reactor regressed to thread-per-call.
+            println!(
+                "peak threads with {INFLIGHT} calls in flight: {peak_threads} \
+                 (bound: O(workers + connections) < 32)"
+            );
+            report.set_meta("peak_threads_10k_inflight", json::i(peak_threads as i64));
+            assert!(
+                peak_threads < 32,
+                "{peak_threads} threads with {INFLIGHT} in-flight wire calls — \
+                 per-call threads are back"
+            );
+        }
         drop(remote);
         drop(client);
         server.shutdown();

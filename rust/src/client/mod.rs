@@ -12,6 +12,16 @@
 //! with the same `poll` / `wait` / `wait_timeout` / `wait_deadline`
 //! surface as the in-process `Pending`.
 //!
+//! Demultiplexing mirrors the server's completion slab
+//! (DESIGN.md §10): each in-flight request is a recycled **reply
+//! slot** with its own generation counter, and the request id on the
+//! wire *encodes* the slot index and generation
+//! (`id = generation << 32 | slot`). The reader resolves a reply to
+//! its slot with one index — no hash map, no per-request channel
+//! allocation — and a stale id (a slot already recycled) can never
+//! complete the wrong request. Each slot carries its own condvar, so
+//! completing one request wakes exactly its waiter, not the herd.
+//!
 //! Every failure is the same typed [`ServiceError`] a linked-in caller
 //! would see: service-side errors round-trip the wire bit-exactly
 //! (DESIGN.md §9), transport failures surface as
@@ -45,10 +55,8 @@ use crate::util::json::{self, Json};
 use crate::wire::{
     read_frame, write_frame, Frame, ListenAddr, WireStream, WIRE_VERSION_MAX, WIRE_VERSION_MIN,
 };
-use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -65,19 +73,330 @@ enum ServerReply {
 
 type ReplyResult = Result<ServerReply, ServiceError>;
 
-struct Waiter {
-    kernel: String,
-    tx: mpsc::Sender<ReplyResult>,
+// ---------------------------------------------------------------------
+// Reply-slot demux
+// ---------------------------------------------------------------------
+
+/// Where one reply slot is in its lifecycle.
+enum Phase {
+    /// On the free list.
+    Free,
+    /// A request is in flight under this slot's current generation.
+    Waiting,
+    /// The reply arrived and awaits collection.
+    Done(ReplyResult),
+    /// The pending handle was dropped; recycle on completion.
+    Abandoned,
+    /// The connection died with this request in flight.
+    Gone,
 }
+
+struct ReplyState {
+    generation: u32,
+    phase: Phase,
+}
+
+/// One recycled reply slot: its own mutex + condvar, so a completion
+/// wakes exactly the thread waiting on *this* request.
+struct ReplySlot {
+    m: Mutex<ReplyState>,
+    cv: Condvar,
+}
+
+impl ReplySlot {
+    fn new() -> ReplySlot {
+        ReplySlot {
+            m: Mutex::new(ReplyState {
+                // Start at 1 so a live request id is never 0 — id 0 is
+                // the handshake convention and doubles as the server's
+                // "no correlatable request" sentinel.
+                generation: 1,
+                phase: Phase::Free,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+struct DemuxSlots {
+    slots: Vec<Arc<ReplySlot>>,
+    free: Vec<u32>,
+    /// Set (under this lock) when the connection dies, so no slot can
+    /// be reserved after the drain sweep — a late reservation would
+    /// wait forever.
+    closed: bool,
+}
+
+/// The client-side completion structure: slot reservation/release plus
+/// the id ↔ slot mapping (pure arithmetic — the id carries the slot).
+struct Demux {
+    m: Mutex<DemuxSlots>,
+}
+
+/// A reserved slot: what `send` hands back, and what [`RemotePending`]
+/// wraps. The generation pins one life of the slot.
+struct ReplyTicket {
+    slot: Arc<ReplySlot>,
+    idx: u32,
+    generation: u32,
+}
+
+impl ReplyTicket {
+    fn request_id(&self) -> u64 {
+        (u64::from(self.generation) << 32) | u64::from(self.idx)
+    }
+}
+
+/// Outcome of inspecting a slot under its lock.
+enum TakeState {
+    NotReady,
+    Ready(ReplyResult),
+    /// Connection died mid-flight (slot still needs releasing).
+    Gone,
+    /// Generation mismatch: the slot was already recycled. Nothing to
+    /// release.
+    Stale,
+}
+
+impl Demux {
+    fn new() -> Demux {
+        Demux {
+            m: Mutex::new(DemuxSlots {
+                slots: Vec::new(),
+                free: Vec::new(),
+                closed: false,
+            }),
+        }
+    }
+
+    /// Reserve a slot for one request. `None` once the connection is
+    /// closed. The `closed` check *and* the Waiting mark share the
+    /// demux critical section with [`Self::drain`]'s
+    /// closed-store-and-sweep, so a reservation is either refused or
+    /// visible to the sweep — it can never slip in behind it and wait
+    /// forever. (Nesting the slot lock inside the demux lock here is
+    /// the one place the two are held together; every other path
+    /// takes them strictly one at a time, so no cycle exists.)
+    fn reserve(&self) -> Option<ReplyTicket> {
+        let mut d = self.m.lock().unwrap();
+        if d.closed {
+            return None;
+        }
+        let idx = match d.free.pop() {
+            Some(i) => i,
+            None => {
+                d.slots.push(Arc::new(ReplySlot::new()));
+                (d.slots.len() - 1) as u32
+            }
+        };
+        let slot = Arc::clone(&d.slots[idx as usize]);
+        let generation = {
+            let mut s = slot.m.lock().unwrap();
+            debug_assert!(matches!(s.phase, Phase::Free), "reserved a non-free slot");
+            s.phase = Phase::Waiting;
+            s.generation
+        };
+        drop(d);
+        Some(ReplyTicket {
+            slot,
+            idx,
+            generation,
+        })
+    }
+
+    /// Refuse all future reservations. Used when a partial frame may
+    /// be stuck on the wire (the stream is no longer frame-aligned);
+    /// in-flight slots drain normally once the reader observes the
+    /// connection die.
+    fn close(&self) {
+        self.m.lock().unwrap().closed = true;
+    }
+
+    /// Return a slot to the free list (generation bumped first, so
+    /// every outstanding id for the old life goes stale).
+    fn release(&self, slot: &Arc<ReplySlot>, idx: u32) {
+        {
+            let mut s = slot.m.lock().unwrap();
+            s.generation = s.generation.wrapping_add(1);
+            s.phase = Phase::Free;
+        }
+        self.m.lock().unwrap().free.push(idx);
+    }
+
+    /// Reader-side: complete the request a reply frame names. `false`
+    /// when no live request matches (stale generation, unknown slot,
+    /// or the id-0 sentinel) — the caller treats that as a
+    /// connection-level announcement.
+    fn complete(&self, id: u64, result: ReplyResult) -> bool {
+        let idx = (id & 0xffff_ffff) as usize;
+        let generation = (id >> 32) as u32;
+        let slot = {
+            let d = self.m.lock().unwrap();
+            match d.slots.get(idx) {
+                Some(s) => Arc::clone(s),
+                None => return false,
+            }
+        };
+        let mut s = slot.m.lock().unwrap();
+        if s.generation != generation {
+            return false;
+        }
+        if matches!(s.phase, Phase::Abandoned) {
+            // Nobody will collect: recycle now.
+            drop(s);
+            self.release(&slot, idx as u32);
+            return true;
+        }
+        if matches!(s.phase, Phase::Waiting) {
+            s.phase = Phase::Done(result);
+            drop(s);
+            slot.cv.notify_all();
+            return true;
+        }
+        false
+    }
+
+    /// Reader-side: the connection is over. Mark every in-flight slot
+    /// `Gone` (waiters wake and construct their own typed error) and
+    /// refuse all future reservations.
+    fn drain(&self) {
+        let slots: Vec<(Arc<ReplySlot>, u32)> = {
+            let mut d = self.m.lock().unwrap();
+            d.closed = true;
+            d.slots
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (Arc::clone(s), i as u32))
+                .collect()
+        };
+        for (slot, idx) in slots {
+            let mut s = slot.m.lock().unwrap();
+            if matches!(s.phase, Phase::Waiting) {
+                s.phase = Phase::Gone;
+                drop(s);
+                slot.cv.notify_all();
+            } else if matches!(s.phase, Phase::Abandoned) {
+                drop(s);
+                self.release(&slot, idx);
+            }
+        }
+    }
+}
+
+impl ReplyTicket {
+    /// Inspect the slot once (under its lock).
+    fn take_state(&self, s: &mut ReplyState) -> TakeState {
+        if s.generation != self.generation {
+            return TakeState::Stale;
+        }
+        if matches!(s.phase, Phase::Done(_)) {
+            let Phase::Done(r) = std::mem::replace(&mut s.phase, Phase::Waiting) else {
+                unreachable!("checked Done above");
+            };
+            return TakeState::Ready(r);
+        }
+        if matches!(s.phase, Phase::Gone) {
+            return TakeState::Gone;
+        }
+        TakeState::NotReady
+    }
+
+    /// Blocking (optionally deadline-bounded) take. `None` = deadline
+    /// passed, request still in flight. On `Some`, the slot has been
+    /// released.
+    fn wait_take(
+        &self,
+        shared: &ClientShared,
+        deadline: Option<Instant>,
+        kernel: &str,
+    ) -> Option<ReplyResult> {
+        let mut s = self.slot.m.lock().unwrap();
+        loop {
+            match self.take_state(&mut s) {
+                TakeState::Ready(r) => {
+                    drop(s);
+                    shared.demux.release(&self.slot, self.idx);
+                    return Some(r);
+                }
+                TakeState::Gone => {
+                    drop(s);
+                    shared.demux.release(&self.slot, self.idx);
+                    return Some(Err(shared.drain_error(kernel)));
+                }
+                TakeState::Stale => return Some(Err(shared.drain_error(kernel))),
+                TakeState::NotReady => {}
+            }
+            match deadline {
+                None => s = self.slot.cv.wait(s).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return None;
+                    }
+                    s = self.slot.cv.wait_timeout(s, d - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking take. Same release semantics as [`Self::wait_take`].
+    fn try_take(&self, shared: &ClientShared, kernel: &str) -> Option<ReplyResult> {
+        let mut s = self.slot.m.lock().unwrap();
+        match self.take_state(&mut s) {
+            TakeState::Ready(r) => {
+                drop(s);
+                shared.demux.release(&self.slot, self.idx);
+                Some(r)
+            }
+            TakeState::Gone => {
+                drop(s);
+                shared.demux.release(&self.slot, self.idx);
+                Some(Err(shared.drain_error(kernel)))
+            }
+            TakeState::Stale => Some(Err(shared.drain_error(kernel))),
+            TakeState::NotReady => None,
+        }
+    }
+
+    /// The pending handle is going away without collecting.
+    fn abandon(&self, shared: &ClientShared) {
+        let mut s = self.slot.m.lock().unwrap();
+        if s.generation != self.generation {
+            return;
+        }
+        if matches!(s.phase, Phase::Waiting) {
+            // The reader (or the drain) recycles it on completion.
+            s.phase = Phase::Abandoned;
+            return;
+        }
+        if matches!(s.phase, Phase::Done(_) | Phase::Gone) {
+            drop(s);
+            shared.demux.release(&self.slot, self.idx);
+        }
+    }
+
+    /// A send failed before anything reached the socket: cancel the
+    /// reservation outright.
+    fn cancel(&self, shared: &ClientShared) {
+        let mut s = self.slot.m.lock().unwrap();
+        if s.generation != self.generation || !matches!(s.phase, Phase::Waiting) {
+            return;
+        }
+        drop(s);
+        shared.demux.release(&self.slot, self.idx);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connection state
+// ---------------------------------------------------------------------
 
 /// Connection state shared by the client value, every session and the
 /// reader thread.
 struct ClientShared {
     writer: Mutex<BufWriter<WireStream>>,
     control: WireStream,
-    pending: Mutex<HashMap<u64, Waiter>>,
-    next_id: AtomicU64,
-    closed: AtomicBool,
+    demux: Demux,
     /// A connection-fatal error frame (e.g. `Malformed` with no
     /// correlatable id) reported just before the server hung up;
     /// used to explain the drain to every waiter.
@@ -91,57 +410,6 @@ impl ClientShared {
         }
     }
 
-    /// Register a waiter, then write the frame built from the fresh
-    /// request id. The lock order (pending before writer) is shared
-    /// with the reader's completion path, which takes only `pending`.
-    fn send(
-        &self,
-        kernel: &str,
-        build: impl FnOnce(u64) -> Frame,
-    ) -> Result<mpsc::Receiver<ReplyResult>, ServiceError> {
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let (tx, rx) = mpsc::channel();
-        {
-            // The closed check and the insert share the `pending`
-            // critical section with `drain`'s closed-store-and-sweep,
-            // so a waiter can never be registered after the drain
-            // swept (it would block forever — nothing would ever
-            // complete it).
-            let mut p = self.pending.lock().unwrap();
-            if self.closed.load(Ordering::SeqCst) {
-                return Err(self.drain_error(kernel));
-            }
-            p.insert(
-                id,
-                Waiter {
-                    kernel: kernel.to_string(),
-                    tx,
-                },
-            );
-        }
-        let frame = build(id);
-        let wrote = {
-            let mut w = self.writer.lock().unwrap();
-            write_frame(&mut *w, &frame).and_then(|()| w.flush())
-        };
-        if let Err(e) = wrote {
-            self.pending.lock().unwrap().remove(&id);
-            // `InvalidInput` is the pre-write encode/size failure
-            // (oversized arity or batch): nothing reached the socket,
-            // the stream is still frame-aligned, and only this one
-            // request fails. Anything else is a real I/O failure —
-            // the connection is unusable from here on.
-            if e.kind() != std::io::ErrorKind::InvalidInput {
-                self.closed.store(true, Ordering::SeqCst);
-            }
-            return Err(ServiceError::Backend {
-                backend: "wire".to_string(),
-                message: format!("send failed: {e}"),
-            });
-        }
-        Ok(rx)
-    }
-
     /// The error to hand out once the connection is gone.
     fn drain_error(&self, kernel: &str) -> ServiceError {
         self.fatal
@@ -151,30 +419,61 @@ impl ClientShared {
             .unwrap_or_else(|| self.disconnected(kernel))
     }
 
-    /// Reader-side: complete one request by id.
-    fn complete(&self, id: u64, result: ReplyResult) -> bool {
-        match self.pending.lock().unwrap().remove(&id) {
-            Some(w) => {
-                let _ = w.tx.send(result);
-                true
+    /// Reserve a reply slot, then write the frame built from its
+    /// encoded request id. The reservation is visible to the reader
+    /// before the first byte leaves, so a fast reply always finds its
+    /// slot.
+    fn send(
+        &self,
+        kernel: &str,
+        build: impl FnOnce(u64) -> Frame,
+    ) -> Result<ReplyTicket, ServiceError> {
+        let Some(ticket) = self.demux.reserve() else {
+            return Err(self.drain_error(kernel));
+        };
+        let frame = build(ticket.request_id());
+        let wrote = {
+            let mut w = self.writer.lock().unwrap();
+            write_frame(&mut *w, &frame).and_then(|()| w.flush())
+        };
+        if let Err(e) = wrote {
+            // `InvalidInput` is the pre-write encode/size failure
+            // (oversized arity or batch): nothing reached the socket,
+            // the stream is still frame-aligned, and only this one
+            // request fails. Anything else is a real I/O failure that
+            // may have left a partial frame on the wire — the stream
+            // is no longer frame-aligned, so refuse all future sends
+            // and kick the reader so in-flight work drains promptly.
+            ticket.cancel(self);
+            if e.kind() != std::io::ErrorKind::InvalidInput {
+                self.demux.close();
+                self.control.shutdown_both();
             }
-            None => false,
+            return Err(ServiceError::Backend {
+                backend: "wire".to_string(),
+                message: format!("send failed: {e}"),
+            });
         }
+        Ok(ticket)
     }
 
-    /// Reader-side: the connection is over; fail everything in flight.
-    /// The closed-store happens inside the `pending` lock (see `send`)
-    /// so no waiter can slip in behind the sweep.
-    fn drain(&self) {
-        let waiters: Vec<Waiter> = {
-            let mut p = self.pending.lock().unwrap();
-            self.closed.store(true, Ordering::SeqCst);
-            p.drain().map(|(_, w)| w).collect()
-        };
-        for w in waiters {
-            let err = self.drain_error(&w.kernel);
-            let _ = w.tx.send(Err(err));
-        }
+    /// Send + block for the one reply a request expects.
+    fn call_roundtrip(
+        &self,
+        kernel: &str,
+        build: impl FnOnce(u64) -> Frame,
+    ) -> Result<ServerReply, ServiceError> {
+        let ticket = self.send(kernel, build)?;
+        ticket
+            .wait_take(self, None, kernel)
+            .expect("unbounded wait cannot time out")
+    }
+}
+
+fn bad_reply(kernel: &str) -> ServiceError {
+    ServiceError::Backend {
+        backend: "wire".to_string(),
+        message: format!("unexpected reply kind for kernel '{kernel}'"),
     }
 }
 
@@ -201,7 +500,7 @@ fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
                 n_outputs,
                 ..
             } => {
-                shared.complete(
+                shared.demux.complete(
                     id,
                     Ok(ServerReply::Info {
                         kernel,
@@ -211,14 +510,14 @@ fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
                 );
             }
             Frame::Reply { batch, .. } => {
-                shared.complete(id, Ok(ServerReply::Rows(batch)));
+                shared.demux.complete(id, Ok(ServerReply::Rows(batch)));
             }
             Frame::Metrics { json, .. } => {
-                shared.complete(id, Ok(ServerReply::Metrics(json)));
+                shared.demux.complete(id, Ok(ServerReply::Metrics(json)));
             }
             Frame::Error { err, .. } => {
                 let e = err.into_service_error();
-                if !shared.complete(id, Err(e.clone())) {
+                if !shared.demux.complete(id, Err(e.clone())) {
                     // No waiting request (id 0 / already gone): this is
                     // the server explaining an imminent hang-up.
                     *shared.fatal.lock().unwrap() = Some(e);
@@ -236,28 +535,7 @@ fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
             }
         }
     }
-    shared.drain();
-}
-
-/// Extract the one reply a request expects, mapping kind mismatches to
-/// a transport error.
-fn expect_reply(
-    rx_result: Result<ReplyResult, mpsc::RecvError>,
-    shared: &ClientShared,
-    kernel: &str,
-) -> Result<ServerReply, ServiceError> {
-    match rx_result {
-        Ok(Ok(reply)) => Ok(reply),
-        Ok(Err(e)) => Err(e),
-        Err(_) => Err(shared.drain_error(kernel)),
-    }
-}
-
-fn bad_reply(kernel: &str) -> ServiceError {
-    ServiceError::Backend {
-        backend: "wire".to_string(),
-        message: format!("unexpected reply kind for kernel '{kernel}'"),
-    }
+    shared.demux.drain();
 }
 
 // ---------------------------------------------------------------------
@@ -325,10 +603,7 @@ impl OverlayClient {
         let shared = Arc::new(ClientShared {
             writer: Mutex::new(writer),
             control,
-            pending: Mutex::new(HashMap::new()),
-            // Handshake frames used id 0; requests start at 1.
-            next_id: AtomicU64::new(1),
-            closed: AtomicBool::new(false),
+            demux: Demux::new(),
             fatal: Mutex::new(None),
         });
         let reader_shared = Arc::clone(&shared);
@@ -358,11 +633,11 @@ impl OverlayClient {
     /// `OverlayService::kernel`): id and arities are fetched once,
     /// then calls move only the dense id.
     pub fn kernel(&self, name: &str) -> Result<RemoteKernel, ServiceError> {
-        let rx = self.shared.send(name, |id| Frame::Resolve {
+        let reply = self.shared.call_roundtrip(name, |id| Frame::Resolve {
             id,
             name: name.to_string(),
         })?;
-        match expect_reply(rx.recv(), &self.shared, name)? {
+        match reply {
             ServerReply::Info {
                 kernel,
                 n_inputs,
@@ -381,8 +656,7 @@ impl OverlayClient {
     /// Fetch the server's `MetricsSnapshot` as parsed JSON (same
     /// field names as `tmfu serve --metrics-json`).
     pub fn metrics(&self) -> Result<Json, ServiceError> {
-        let rx = self.shared.send("", |id| Frame::GetMetrics { id })?;
-        match expect_reply(rx.recv(), &self.shared, "")? {
+        match self.shared.call_roundtrip("", |id| Frame::GetMetrics { id })? {
             ServerReply::Metrics(text) => json::parse(&text).map_err(|e| ServiceError::Backend {
                 backend: "wire".to_string(),
                 message: format!("metrics json: {e}"),
@@ -399,7 +673,6 @@ impl OverlayClient {
 
 impl Drop for OverlayClient {
     fn drop(&mut self) {
-        self.shared.closed.store(true, Ordering::SeqCst);
         self.shared.control.shutdown_both();
         if let Some(r) = self.reader.take() {
             let _ = r.join();
@@ -453,15 +726,16 @@ impl RemoteKernel {
     /// Non-blocking submit: the request is on the wire when this
     /// returns; the reply arrives on the [`RemotePending`].
     pub fn submit(&self, inputs: &[i32]) -> Result<RemotePending, ServiceError> {
-        let rx = self.shared.send(&self.name, |id| Frame::Call {
+        let ticket = self.shared.send(&self.name, |id| Frame::Call {
             id,
             kernel: self.kernel,
             inputs: inputs.to_vec(),
         })?;
         Ok(RemotePending {
-            rx,
+            ticket,
             shared: Arc::clone(&self.shared),
             kernel: self.name.clone(),
+            done: false,
         })
     }
 
@@ -473,12 +747,12 @@ impl RemoteKernel {
     /// Blocking batch call: rows travel as one contiguous buffer, are
     /// admitted atomically server-side, and come back in row order.
     pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
-        let rx = self.shared.send(&self.name, |id| Frame::CallBatch {
+        let reply = self.shared.call_roundtrip(&self.name, |id| Frame::CallBatch {
             id,
             kernel: self.kernel,
             batch: batch.clone(),
         })?;
-        match expect_reply(rx.recv(), &self.shared, &self.name)? {
+        match reply {
             ServerReply::Rows(out) => Ok(out),
             _ => Err(bad_reply(&self.name)),
         }
@@ -492,11 +766,14 @@ impl RemoteKernel {
 /// A future-like remote reply, mirroring
 /// [`Pending`](crate::service::Pending): poll it, block on it, or
 /// bound the wait. `Send`, so replies can be collected on another
-/// thread.
+/// thread. Like its in-process twin, it is a thin recycled-slot
+/// ticket, not a channel — dropping it without collecting recycles
+/// the slot automatically.
 pub struct RemotePending {
-    rx: mpsc::Receiver<ReplyResult>,
+    ticket: ReplyTicket,
     shared: Arc<ClientShared>,
     kernel: String,
+    done: bool,
 }
 
 impl std::fmt::Debug for RemotePending {
@@ -520,21 +797,25 @@ impl RemotePending {
 
     /// Non-blocking check: `Some(result)` once the reply has arrived.
     pub fn poll(&mut self) -> Option<Result<Vec<i32>, ServiceError>> {
-        match self.rx.try_recv() {
-            Ok(reply) => Some(self.one_row(reply)),
-            Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Err(self.shared.drain_error(&self.kernel)))
-            }
+        if self.done {
+            return Some(Err(self.shared.drain_error(&self.kernel)));
         }
+        let reply = self.ticket.try_take(&self.shared, &self.kernel)?;
+        self.done = true;
+        Some(self.one_row(reply))
     }
 
     /// Block until the reply arrives.
-    pub fn wait(self) -> Result<Vec<i32>, ServiceError> {
-        match self.rx.recv() {
-            Ok(reply) => self.one_row(reply),
-            Err(_) => Err(self.shared.drain_error(&self.kernel)),
+    pub fn wait(mut self) -> Result<Vec<i32>, ServiceError> {
+        if self.done {
+            return Err(self.shared.drain_error(&self.kernel));
         }
+        let reply = self
+            .ticket
+            .wait_take(&self.shared, None, &self.kernel)
+            .expect("unbounded wait cannot time out");
+        self.done = true;
+        self.one_row(reply)
     }
 
     /// Block at most `timeout`; [`ServiceError::DeadlineExceeded`] if
@@ -542,14 +823,18 @@ impl RemotePending {
     /// poll or wait again later (same contract as the in-process
     /// `Pending`).
     pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Vec<i32>, ServiceError> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(reply) => self.one_row(reply),
-            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServiceError::DeadlineExceeded {
+        if self.done {
+            return Err(self.shared.drain_error(&self.kernel));
+        }
+        let deadline = Instant::now().checked_add(timeout);
+        match self.ticket.wait_take(&self.shared, deadline, &self.kernel) {
+            Some(reply) => {
+                self.done = true;
+                self.one_row(reply)
+            }
+            None => Err(ServiceError::DeadlineExceeded {
                 kernel: self.kernel.clone(),
             }),
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Err(self.shared.drain_error(&self.kernel))
-            }
         }
     }
 
@@ -557,5 +842,13 @@ impl RemotePending {
     /// [`Self::wait_timeout`], the one timing implementation).
     pub fn wait_deadline(&mut self, deadline: Instant) -> Result<Vec<i32>, ServiceError> {
         self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
+    }
+}
+
+impl Drop for RemotePending {
+    fn drop(&mut self) {
+        if !self.done {
+            self.ticket.abandon(&self.shared);
+        }
     }
 }

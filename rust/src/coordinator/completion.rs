@@ -1,0 +1,730 @@
+//! The completion slab: one shared, generational structure for every
+//! in-flight request (DESIGN.md §10).
+//!
+//! Before this module, each `submit` allocated an `mpsc::channel` plus
+//! a boxed reply `Vec`, and every in-flight wire call burned a
+//! short-lived waiter thread bridging `Pending::wait` to the socket.
+//! The slab replaces both with the serving analogue of the paper's
+//! time-multiplexed FU: instead of replicating per-request control
+//! (one channel, one thread each), all requests share one densely
+//! packed pool of completion *slots* that are multiplexed over time —
+//! the same resource-sharing argument, applied to the request
+//! lifecycle instead of the datapath.
+//!
+//! Shape:
+//!
+//! * slots live in **shards** (each a mutex + condvar + free list);
+//!   a reservation round-robins across shards so submit-side lock
+//!   traffic spreads out;
+//! * [`CompletionSlab::reserve`] is O(1) and allocation-free in steady
+//!   state: freed slots recycle through the shard's free list, and a
+//!   slot *owns* its input/output buffers, which keep their capacity
+//!   across generations (`FlatBatch::reset` / `resize_rows`);
+//! * a slot serves one request *or one whole batch*: `reserve_batch`
+//!   costs a single reservation for any row count, workers write each
+//!   output row in place (`complete_row_ok`) and the last row flips
+//!   the slot to `Ready` — a 1024-row batch is one slot, not 1024
+//!   channels;
+//! * tickets are thin `{slot, generation}` pairs ([`Ticket`]); the
+//!   generation counter defends against ABA reuse — a stale ticket
+//!   can never read another request's result;
+//! * blockers wait on the shard condvar (skipped entirely when nobody
+//!   waits — the `waiters` count gates the notify); event-driven
+//!   consumers like the wire reactor register a [`Wake`] doorbell
+//!   instead and are rung exactly once, when the slot becomes ready;
+//! * dropping a reply handle without collecting it ([`Self::abandon`])
+//!   never leaks: an already-ready slot frees immediately, an
+//!   in-flight one frees the moment its last row completes.
+//!
+//! Lock order (must never be violated): engine queue lock → shard
+//! lock → nothing. Doorbells are rung *after* the shard lock is
+//! released, so a `Wake` implementation may take its own locks freely.
+
+use crate::exec::{ExecError, FlatBatch};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// An event-driven completion listener (the wire reactor's doorbell).
+/// Rung exactly once per reservation, when the slot becomes ready;
+/// never rung under the shard lock, so implementations may lock.
+pub trait Wake: Send + Sync {
+    fn ring(&self, tag: u64);
+}
+
+/// A doorbell registration: ring `.0` with tag `.1` on completion.
+pub type WakeTarget = (Arc<dyn Wake>, u64);
+
+/// A thin handle to one reserved slot. `generation` must match the
+/// slot's current generation for any operation — stale tickets (the
+/// ABA hazard of slot recycling) are rejected, never misread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    slot: u32,
+    generation: u32,
+}
+
+/// One queued row of a reservation: the engine's queue entries carry
+/// these instead of owned input buffers + reply channels.
+#[derive(Debug, Clone, Copy)]
+pub struct RowTicket {
+    pub ticket: Ticket,
+    pub row: u32,
+}
+
+/// Where a slot is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    /// On the free list, awaiting reuse.
+    Free,
+    /// Reserved; rows are queued or executing.
+    Pending,
+    /// Every row completed; result awaits collection.
+    Ready,
+}
+
+/// One completion slot. The buffers are never dropped on free — their
+/// capacity is the allocation-free steady state.
+struct Slot {
+    generation: u32,
+    state: SlotState,
+    /// Rows still awaiting a worker write (counts down to 0 = ready).
+    remaining: u32,
+    /// The reply handle was dropped; free on completion, wake nobody.
+    abandoned: bool,
+    /// Request rows, written at reserve time, read by workers.
+    inputs: FlatBatch,
+    /// Reply rows, written in place by workers (possibly out of row
+    /// order when a batch is split across workers).
+    output: FlatBatch,
+    /// First error wins; a slot-level error fails the whole request.
+    error: Option<ExecError>,
+    waker: Option<WakeTarget>,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            // Start at 1 so a ticket id is never the all-zeros value.
+            generation: 1,
+            state: SlotState::Free,
+            remaining: 0,
+            abandoned: false,
+            inputs: FlatBatch::default(),
+            output: FlatBatch::default(),
+            error: None,
+            waker: None,
+        }
+    }
+}
+
+struct ShardSlots {
+    slots: Vec<Slot>,
+    /// Local indices of free slots (LIFO: reuse the warmest slot).
+    free: Vec<u32>,
+    /// Blocked `wait_*` callers on this shard; completions skip the
+    /// condvar notify entirely when this is zero (the wire path waits
+    /// on doorbells, not condvars).
+    waiters: usize,
+}
+
+struct Shard {
+    m: Mutex<ShardSlots>,
+    cv: Condvar,
+}
+
+/// The shared completion structure (one per engine).
+pub struct CompletionSlab {
+    shards: Vec<Shard>,
+    rr: AtomicUsize,
+}
+
+impl CompletionSlab {
+    /// `n_shards` bounds submit-side lock spreading; sized from the
+    /// worker count by the engine.
+    pub fn new(n_shards: usize) -> CompletionSlab {
+        let n = n_shards.max(1);
+        CompletionSlab {
+            shards: (0..n)
+                .map(|_| Shard {
+                    m: Mutex::new(ShardSlots {
+                        slots: Vec::new(),
+                        free: Vec::new(),
+                        waiters: 0,
+                    }),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    fn shard_of(&self, slot: u32) -> &Shard {
+        &self.shards[slot as usize % self.shards.len()]
+    }
+
+    fn local_index(&self, slot: u32) -> usize {
+        slot as usize / self.shards.len()
+    }
+
+    fn global_id(&self, shard_idx: usize, local: usize) -> u32 {
+        (local * self.shards.len() + shard_idx) as u32
+    }
+
+    /// Reserve one slot for a single-row request. O(1), allocation-free
+    /// once the slab and its buffers are warm. `n_outputs` is the
+    /// kernel's output arity (the caller owns the signature).
+    pub fn reserve(
+        &self,
+        inputs: &[i32],
+        n_outputs: usize,
+        waker: Option<WakeTarget>,
+    ) -> Ticket {
+        self.reserve_with(1, inputs.len(), n_outputs, waker, |buf| buf.push(inputs))
+    }
+
+    /// Reserve one slot for a whole batch: one reservation regardless
+    /// of row count, with the output buffer pre-shaped so workers can
+    /// write rows in place, in any order.
+    pub fn reserve_batch(
+        &self,
+        batch: &FlatBatch,
+        n_outputs: usize,
+        waker: Option<WakeTarget>,
+    ) -> Ticket {
+        self.reserve_with(
+            batch.n_rows() as u32,
+            batch.arity(),
+            n_outputs,
+            waker,
+            |buf| buf.extend_from_batch(batch),
+        )
+    }
+
+    fn reserve_with(
+        &self,
+        rows: u32,
+        arity: usize,
+        n_outputs: usize,
+        waker: Option<WakeTarget>,
+        fill: impl FnOnce(&mut FlatBatch),
+    ) -> Ticket {
+        let shard_idx = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let mut st = self.shards[shard_idx].m.lock().unwrap();
+        let local = match st.free.pop() {
+            Some(i) => i as usize,
+            None => {
+                st.slots.push(Slot::new());
+                st.slots.len() - 1
+            }
+        };
+        let slot = &mut st.slots[local];
+        debug_assert_eq!(slot.state, SlotState::Free, "reserved a non-free slot");
+        slot.state = SlotState::Pending;
+        slot.remaining = rows;
+        slot.abandoned = false;
+        slot.error = None;
+        slot.waker = waker;
+        slot.inputs.reset(arity);
+        fill(&mut slot.inputs);
+        slot.output.reset(n_outputs);
+        slot.output.resize_rows(rows as usize);
+        let ticket = Ticket {
+            slot: self.global_id(shard_idx, local),
+            generation: slot.generation,
+        };
+        // A zero-row reservation has no completion to flip it Ready —
+        // it is born Ready (empty output), so a wait can never hang on
+        // it. The service layer refuses empty batches before this
+        // point; this keeps the engine port safe for future ingress
+        // paths too.
+        let ready_waker = if rows == 0 {
+            slot.state = SlotState::Ready;
+            slot.waker.take()
+        } else {
+            None
+        };
+        drop(st);
+        if let Some((w, tag)) = ready_waker {
+            w.ring(tag);
+        }
+        ticket
+    }
+
+    /// Worker-side: run `f` over one queued row's inputs. `None` for a
+    /// stale generation (structurally unreachable from the engine —
+    /// slots stay allocated until their last row completes).
+    pub fn with_inputs<R>(&self, rt: RowTicket, f: impl FnOnce(&[i32]) -> R) -> Option<R> {
+        let shard = self.shard_of(rt.ticket.slot);
+        let st = shard.m.lock().unwrap();
+        let slot = &st.slots[self.local_index(rt.ticket.slot)];
+        if slot.generation != rt.ticket.generation {
+            debug_assert!(false, "input read through a stale ticket");
+            return None;
+        }
+        Some(f(slot.inputs.row(rt.row as usize)))
+    }
+
+    /// Worker-side: write one reply row in place and count it done.
+    pub fn complete_row_ok(&self, rt: RowTicket, out_row: &[i32]) {
+        self.complete_row(rt, Ok(out_row));
+    }
+
+    /// Worker-side: fail one row. The first error recorded fails the
+    /// whole slot (per-request for singles; whole-batch for batches,
+    /// matching the blocking `call_batch` contract).
+    pub fn complete_row_err(&self, rt: RowTicket, err: &ExecError) {
+        self.complete_row(rt, Err(err));
+    }
+
+    fn complete_row(&self, rt: RowTicket, result: Result<&[i32], &ExecError>) {
+        let shard = self.shard_of(rt.ticket.slot);
+        let mut st = shard.m.lock().unwrap();
+        let local = self.local_index(rt.ticket.slot);
+        {
+            let slot = &mut st.slots[local];
+            if slot.generation != rt.ticket.generation || slot.state != SlotState::Pending {
+                debug_assert!(false, "completion through a stale ticket");
+                return;
+            }
+            match result {
+                Ok(row) => slot.output.row_mut(rt.row as usize).copy_from_slice(row),
+                Err(e) => {
+                    if slot.error.is_none() {
+                        slot.error = Some(e.clone());
+                    }
+                }
+            }
+            slot.remaining -= 1;
+            if slot.remaining > 0 {
+                return;
+            }
+        }
+        if st.slots[local].abandoned {
+            Self::free_slot(&mut st, local);
+            return;
+        }
+        let slot = &mut st.slots[local];
+        slot.state = SlotState::Ready;
+        let waker = slot.waker.take();
+        let has_waiters = st.waiters > 0;
+        drop(st);
+        if has_waiters {
+            shard.cv.notify_all();
+        }
+        if let Some((w, tag)) = waker {
+            w.ring(tag);
+        }
+    }
+
+    fn free_slot(st: &mut ShardSlots, local: usize) {
+        let slot = &mut st.slots[local];
+        // The generation bump is the ABA defense: every ticket minted
+        // for the old life of this slot is now stale.
+        slot.generation = slot.generation.wrapping_add(1);
+        slot.state = SlotState::Free;
+        slot.remaining = 0;
+        slot.abandoned = false;
+        slot.error = None;
+        slot.waker = None;
+        st.free.push(local as u32);
+    }
+
+    /// The error a stale ticket observes. Unreachable through the
+    /// one-shot service handles (their `done` flag refuses re-takes);
+    /// kept structured so a future consumer cannot misread a recycled
+    /// slot.
+    fn stale_error() -> ExecError {
+        ExecError::Backend {
+            backend: "engine",
+            message: "stale completion ticket (slot was recycled)".to_string(),
+        }
+    }
+
+    /// Non-blocking single-row take: copies the reply row into `out`
+    /// (clearing it first) and frees the slot. `None` = not ready yet.
+    pub fn try_take_row(&self, t: Ticket, out: &mut Vec<i32>) -> Option<Result<(), ExecError>> {
+        let shard = self.shard_of(t.slot);
+        let mut st = shard.m.lock().unwrap();
+        self.take_row_locked(&mut st, t, out)
+    }
+
+    fn take_row_locked(
+        &self,
+        st: &mut ShardSlots,
+        t: Ticket,
+        out: &mut Vec<i32>,
+    ) -> Option<Result<(), ExecError>> {
+        let local = self.local_index(t.slot);
+        let slot = &mut st.slots[local];
+        if slot.generation != t.generation {
+            return Some(Err(Self::stale_error()));
+        }
+        if slot.state != SlotState::Ready {
+            return None;
+        }
+        let res = match slot.error.take() {
+            Some(e) => Err(e),
+            None => {
+                out.clear();
+                out.extend_from_slice(slot.output.row(0));
+                Ok(())
+            }
+        };
+        Self::free_slot(st, local);
+        Some(res)
+    }
+
+    /// Blocking single-row take, optionally bounded by `deadline`.
+    /// `None` = the deadline passed first (the request stays in
+    /// flight; take again later).
+    pub fn wait_row(
+        &self,
+        t: Ticket,
+        deadline: Option<Instant>,
+        out: &mut Vec<i32>,
+    ) -> Option<Result<(), ExecError>> {
+        let shard = self.shard_of(t.slot);
+        let mut st = shard.m.lock().unwrap();
+        loop {
+            if let Some(r) = self.take_row_locked(&mut st, t, out) {
+                return Some(r);
+            }
+            st = match Self::park(shard, st, deadline) {
+                Some(g) => g,
+                None => return None,
+            };
+        }
+    }
+
+    /// Non-blocking whole-batch take: copies every reply row into
+    /// `out` (reshaped) and frees the slot. `None` = not ready yet.
+    pub fn try_take_batch(
+        &self,
+        t: Ticket,
+        out: &mut FlatBatch,
+    ) -> Option<Result<(), ExecError>> {
+        let shard = self.shard_of(t.slot);
+        let mut st = shard.m.lock().unwrap();
+        self.take_batch_locked(&mut st, t, out)
+    }
+
+    fn take_batch_locked(
+        &self,
+        st: &mut ShardSlots,
+        t: Ticket,
+        out: &mut FlatBatch,
+    ) -> Option<Result<(), ExecError>> {
+        let local = self.local_index(t.slot);
+        let slot = &mut st.slots[local];
+        if slot.generation != t.generation {
+            return Some(Err(Self::stale_error()));
+        }
+        if slot.state != SlotState::Ready {
+            return None;
+        }
+        let res = match slot.error.take() {
+            Some(e) => Err(e),
+            None => {
+                out.reset(slot.output.arity());
+                out.extend_from_batch(&slot.output);
+                Ok(())
+            }
+        };
+        Self::free_slot(st, local);
+        Some(res)
+    }
+
+    /// Blocking whole-batch take, optionally bounded by `deadline`.
+    pub fn wait_batch(
+        &self,
+        t: Ticket,
+        deadline: Option<Instant>,
+        out: &mut FlatBatch,
+    ) -> Option<Result<(), ExecError>> {
+        let shard = self.shard_of(t.slot);
+        let mut st = shard.m.lock().unwrap();
+        loop {
+            if let Some(r) = self.take_batch_locked(&mut st, t, out) {
+                return Some(r);
+            }
+            st = match Self::park(shard, st, deadline) {
+                Some(g) => g,
+                None => return None,
+            };
+        }
+    }
+
+    /// One condvar park, registered in the shard's waiter count so
+    /// completions know whether a notify is needed at all. `None` =
+    /// the deadline passed.
+    fn park<'a>(
+        shard: &'a Shard,
+        mut st: std::sync::MutexGuard<'a, ShardSlots>,
+        deadline: Option<Instant>,
+    ) -> Option<std::sync::MutexGuard<'a, ShardSlots>> {
+        match deadline {
+            None => {
+                st.waiters += 1;
+                let mut g = shard.cv.wait(st).unwrap();
+                g.waiters -= 1;
+                Some(g)
+            }
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    return None;
+                }
+                st.waiters += 1;
+                let (mut g, _timed_out) = shard.cv.wait_timeout(st, d - now).unwrap();
+                g.waiters -= 1;
+                Some(g)
+            }
+        }
+    }
+
+    /// The reply handle was dropped without collecting. Ready slots
+    /// free immediately; in-flight ones free when their last row
+    /// completes (workers still own the slot's buffers until then).
+    pub fn abandon(&self, t: Ticket) {
+        let shard = self.shard_of(t.slot);
+        let mut st = shard.m.lock().unwrap();
+        let local = self.local_index(t.slot);
+        {
+            let slot = &mut st.slots[local];
+            if slot.generation != t.generation {
+                return;
+            }
+            if slot.state == SlotState::Pending {
+                slot.abandoned = true;
+                slot.waker = None;
+                return;
+            }
+        }
+        if st.slots[local].state == SlotState::Ready {
+            Self::free_slot(&mut st, local);
+        }
+    }
+
+    /// Safety net for engine teardown: any slot still pending after
+    /// the workers have been joined can never complete normally (a
+    /// worker died mid-batch). Fail them all with `err` so no waiter
+    /// blocks forever. Drain-on-shutdown makes this a no-op in every
+    /// healthy shutdown.
+    pub fn fail_all_pending(&self, err: &ExecError) {
+        for shard in &self.shards {
+            let mut wakers: Vec<WakeTarget> = Vec::new();
+            {
+                let mut st = shard.m.lock().unwrap();
+                let pending: Vec<usize> = st
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.state == SlotState::Pending)
+                    .map(|(i, _)| i)
+                    .collect();
+                for local in pending {
+                    if st.slots[local].abandoned {
+                        Self::free_slot(&mut st, local);
+                        continue;
+                    }
+                    let slot = &mut st.slots[local];
+                    slot.state = SlotState::Ready;
+                    slot.remaining = 0;
+                    if slot.error.is_none() {
+                        slot.error = Some(err.clone());
+                    }
+                    if let Some(w) = slot.waker.take() {
+                        wakers.push(w);
+                    }
+                }
+            }
+            shard.cv.notify_all();
+            for (w, tag) in wakers {
+                w.ring(tag);
+            }
+        }
+    }
+
+    /// Slots currently reserved (pending or ready) — telemetry and the
+    /// leak regression tests.
+    pub fn live_slots(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                let st = s.m.lock().unwrap();
+                st.slots.len() - st.free.len()
+            })
+            .sum()
+    }
+
+    /// Total slots ever grown (free + live) — the steady-state bound.
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.m.lock().unwrap().slots.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn row_of(t: Ticket, row: u32) -> RowTicket {
+        RowTicket { ticket: t, row }
+    }
+
+    #[test]
+    fn single_row_round_trip_and_recycling() {
+        let slab = CompletionSlab::new(2);
+        let mut out = Vec::new();
+        for i in 0..10i32 {
+            let t = slab.reserve(&[i, i + 1], 1, None);
+            assert_eq!(slab.try_take_row(t, &mut out), None, "not ready yet");
+            slab.with_inputs(row_of(t, 0), |row| assert_eq!(row, &[i, i + 1]))
+                .expect("live ticket");
+            slab.complete_row_ok(row_of(t, 0), &[i * 2]);
+            assert_eq!(slab.try_take_row(t, &mut out), Some(Ok(())));
+            assert_eq!(out, vec![i * 2]);
+        }
+        // All ten requests recycled through at most 2 slots (one per
+        // shard the round-robin touched).
+        assert!(slab.capacity() <= 2, "slots leaked: {}", slab.capacity());
+        assert_eq!(slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn batch_rows_complete_out_of_order() {
+        let slab = CompletionSlab::new(1);
+        let batch = FlatBatch::from_rows(2, &[vec![1, 2], vec![3, 4], vec![5, 6]]);
+        let t = slab.reserve_batch(&batch, 1, None);
+        slab.complete_row_ok(row_of(t, 2), &[60]);
+        slab.complete_row_ok(row_of(t, 0), &[20]);
+        let mut out = FlatBatch::default();
+        assert_eq!(slab.try_take_batch(t, &mut out), None, "one row missing");
+        slab.complete_row_ok(row_of(t, 1), &[40]);
+        assert_eq!(slab.wait_batch(t, None, &mut out), Some(Ok(())));
+        assert_eq!(out.to_rows(), vec![vec![20], vec![40], vec![60]]);
+    }
+
+    #[test]
+    fn zero_row_reservation_is_born_ready() {
+        // No row will ever complete a 0-row slot; it must be Ready at
+        // reservation so no waiter can hang on it.
+        let slab = CompletionSlab::new(1);
+        let t = slab.reserve_batch(&FlatBatch::new(3), 1, None);
+        let mut out = FlatBatch::default();
+        assert_eq!(slab.try_take_batch(t, &mut out), Some(Ok(())));
+        assert!(out.is_empty());
+        assert_eq!(slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn stale_generation_is_refused() {
+        let slab = CompletionSlab::new(1);
+        let t1 = slab.reserve(&[7], 1, None);
+        slab.complete_row_ok(row_of(t1, 0), &[1]);
+        let mut out = Vec::new();
+        assert_eq!(slab.try_take_row(t1, &mut out), Some(Ok(())));
+        // The slot recycles; the old ticket is now a different life.
+        let t2 = slab.reserve(&[8], 1, None);
+        assert_ne!(t1, t2);
+        slab.complete_row_ok(row_of(t2, 0), &[2]);
+        assert!(matches!(slab.try_take_row(t1, &mut out), Some(Err(_))));
+        assert_eq!(slab.try_take_row(t2, &mut out), Some(Ok(())));
+        assert_eq!(out, vec![2]);
+    }
+
+    #[test]
+    fn first_error_fails_the_slot() {
+        let slab = CompletionSlab::new(1);
+        let batch = FlatBatch::from_rows(1, &[vec![1], vec![2]]);
+        let t = slab.reserve_batch(&batch, 1, None);
+        let err = ExecError::Backend {
+            backend: "test",
+            message: "boom".to_string(),
+        };
+        slab.complete_row_err(row_of(t, 0), &err);
+        slab.complete_row_ok(row_of(t, 1), &[9]);
+        let mut out = FlatBatch::default();
+        match slab.wait_batch(t, None, &mut out) {
+            Some(Err(ExecError::Backend { message, .. })) => assert_eq!(message, "boom"),
+            other => panic!("expected the recorded error, got {other:?}"),
+        }
+        assert_eq!(slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn abandon_frees_in_both_orders() {
+        let slab = CompletionSlab::new(1);
+        // Abandon before completion: the worker's last row frees.
+        let t = slab.reserve(&[1], 1, None);
+        slab.abandon(t);
+        assert_eq!(slab.live_slots(), 1, "slot still owned by the worker");
+        slab.complete_row_ok(row_of(t, 0), &[5]);
+        assert_eq!(slab.live_slots(), 0);
+        // Abandon after completion: frees immediately.
+        let t = slab.reserve(&[2], 1, None);
+        slab.complete_row_ok(row_of(t, 0), &[6]);
+        assert_eq!(slab.live_slots(), 1);
+        slab.abandon(t);
+        assert_eq!(slab.live_slots(), 0);
+        // Double-abandon (stale by then) is harmless.
+        slab.abandon(t);
+        assert_eq!(slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn deadline_wait_leaves_the_request_in_flight() {
+        let slab = CompletionSlab::new(1);
+        let t = slab.reserve(&[1], 1, None);
+        let mut out = Vec::new();
+        let deadline = Instant::now() + std::time::Duration::from_millis(10);
+        assert_eq!(slab.wait_row(t, Some(deadline), &mut out), None, "timed out");
+        slab.complete_row_ok(row_of(t, 0), &[3]);
+        assert_eq!(slab.wait_row(t, None, &mut out), Some(Ok(())));
+        assert_eq!(out, vec![3]);
+    }
+
+    #[test]
+    fn doorbell_rings_once_on_ready() {
+        struct Bell(AtomicU64);
+        impl Wake for Bell {
+            fn ring(&self, tag: u64) {
+                self.0.fetch_add(tag, Ordering::SeqCst);
+            }
+        }
+        let slab = CompletionSlab::new(1);
+        let bell = Arc::new(Bell(AtomicU64::new(0)));
+        let waker: Arc<dyn Wake> = Arc::clone(&bell);
+        let batch = FlatBatch::from_rows(1, &[vec![1], vec![2]]);
+        let t = slab.reserve_batch(&batch, 1, Some((waker, 7)));
+        slab.complete_row_ok(row_of(t, 0), &[1]);
+        assert_eq!(bell.0.load(Ordering::SeqCst), 0, "not ready yet");
+        slab.complete_row_ok(row_of(t, 1), &[2]);
+        assert_eq!(bell.0.load(Ordering::SeqCst), 7, "rung once with the tag");
+        let mut out = FlatBatch::default();
+        assert_eq!(slab.try_take_batch(t, &mut out), Some(Ok(())));
+    }
+
+    #[test]
+    fn fail_all_pending_wakes_waiters_with_the_error() {
+        let slab = Arc::new(CompletionSlab::new(2));
+        let t = slab.reserve(&[1], 1, None);
+        let slab2 = Arc::clone(&slab);
+        let waiter = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            slab2.wait_row(t, None, &mut out).unwrap()
+        });
+        // Give the waiter time to park, then fail everything.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let err = ExecError::Backend {
+            backend: "engine",
+            message: "worker lost".to_string(),
+        };
+        slab.fail_all_pending(&err);
+        match waiter.join().unwrap() {
+            Err(ExecError::Backend { message, .. }) => assert!(message.contains("worker lost")),
+            other => panic!("expected the teardown error, got {other:?}"),
+        }
+    }
+}

@@ -5,67 +5,188 @@
 //!
 //! This is the engine-side accumulator only. The client-facing, typed
 //! view — percentiles computed, JSON-serializable, rendered for the
-//! CLI — is [`crate::service::MetricsSnapshot`], built from this
-//! struct under the metrics lock.
+//! CLI — is `crate::service::MetricsSnapshot`, built from a
+//! [`RawMetrics`] snapshot.
+//!
+//! Two-tier layout, shaped for the hot path:
+//!
+//! * the plain counters (`completed`, `rejected`, `failed`, ...) are
+//!   **atomics** — rejections on the submit path and `completed()`
+//!   probes never touch a lock;
+//! * the heavyweight state (latency sample buffers, per-kernel
+//!   traffic, fabric-time floats) lives behind one mutex taken **once
+//!   per executed batch**, never per request;
+//! * [`Metrics::raw_snapshot`] copies the raw sample buffers out under
+//!   that lock and returns immediately — the clone-and-**sort** that
+//!   percentile computation needs happens on the caller's thread,
+//!   outside the lock, so a `GetMetrics` poll over the wire can never
+//!   stall workers mid-batch (previously the full sort ran under the
+//!   metrics lock on every snapshot).
+//!
+//! Per-kernel traffic is a dense `Vec<u64>` indexed by
+//! [`KernelId`] — recording a batch bumps one integer instead of
+//! allocating a `String` key for a map (the last per-batch allocation
+//! on the worker's reply path).
 
+use crate::exec::KernelId;
 use crate::util::stats::Samples;
-use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
-#[derive(Debug, Default)]
-pub struct Metrics {
-    pub completed: u64,
-    /// Requests refused by admission control (bounded queues).
-    pub rejected: u64,
-    /// Admitted requests whose execution failed (replied `Err`).
-    pub failed: u64,
-    pub batches: u64,
-    pub batch_size_sum: u64,
-    pub context_switches: u64,
-    pub latency_us: Samples,
-    pub queue_wait_us: Samples,
-    pub per_kernel: BTreeMap<String, u64>,
+/// Per-batch timing facts recorded alongside the counters.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchTiming {
+    /// Whether serving this batch cost a context switch.
+    pub switched: bool,
+    /// Simulated switch time (µs at 300 MHz), 0 when not switched.
+    pub switch_us: f64,
+    /// Simulated execution time for the batch (µs at 300 MHz).
+    pub exec_us_sim: f64,
+}
+
+/// Heavyweight accumulator state, locked once per batch.
+#[derive(Debug)]
+struct Heavy {
+    latency_us: Samples,
+    queue_wait_us: Samples,
+    /// Completed requests per kernel, dense by [`KernelId`].
+    per_kernel: Vec<u64>,
     /// Simulated overlay fabric time (µs at 300 MHz), incl. switches.
-    pub fabric_busy_us: f64,
+    fabric_busy_us: f64,
     /// Simulated time spent on context switching only.
-    pub fabric_switch_us: f64,
-    pub wall: Duration,
+    fabric_switch_us: f64,
+}
+
+/// The engine's shared metrics accumulator.
+#[derive(Debug)]
+pub struct Metrics {
+    completed: AtomicU64,
+    /// Requests refused by admission control (bounded queues).
+    rejected: AtomicU64,
+    /// Admitted requests whose execution failed (replied `Err`).
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batch_size_sum: AtomicU64,
+    context_switches: AtomicU64,
+    heavy: Mutex<Heavy>,
 }
 
 impl Metrics {
-    pub fn record_batch(
-        &mut self,
-        kernel: &str,
-        n: usize,
-        switched: bool,
-        switch_us: f64,
-        exec_us_sim: f64,
-    ) {
-        self.batches += 1;
-        self.batch_size_sum += n as u64;
-        self.completed += n as u64;
-        *self.per_kernel.entry(kernel.to_string()).or_default() += n as u64;
-        if switched {
-            self.context_switches += 1;
-            self.fabric_switch_us += switch_us;
-            self.fabric_busy_us += switch_us;
+    /// Sized by the kernel registry (per-kernel traffic is dense).
+    pub fn new(n_kernels: usize) -> Metrics {
+        Metrics {
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_size_sum: AtomicU64::new(0),
+            context_switches: AtomicU64::new(0),
+            heavy: Mutex::new(Heavy {
+                latency_us: Samples::new(),
+                queue_wait_us: Samples::new(),
+                per_kernel: vec![0; n_kernels],
+                fabric_busy_us: 0.0,
+                fabric_switch_us: 0.0,
+            }),
         }
-        self.fabric_busy_us += exec_us_sim;
     }
 
-    /// Count `n` admission-control rejections.
-    pub fn record_rejected(&mut self, n: u64) {
-        self.rejected += n;
+    /// Record one executed batch of `n` requests: counters (atomic),
+    /// then one lock for the sample pushes and fabric accounting.
+    /// `waits_us` yields the per-request enqueue→reply latency.
+    pub fn record_batch(
+        &self,
+        kernel: KernelId,
+        n: usize,
+        timing: BatchTiming,
+        waits_us: impl Iterator<Item = f64>,
+    ) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum.fetch_add(n as u64, Ordering::Relaxed);
+        self.completed.fetch_add(n as u64, Ordering::Relaxed);
+        if timing.switched {
+            self.context_switches.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut h = self.heavy.lock().unwrap();
+        h.per_kernel[kernel.index()] += n as u64;
+        if timing.switched {
+            h.fabric_switch_us += timing.switch_us;
+            h.fabric_busy_us += timing.switch_us;
+        }
+        h.fabric_busy_us += timing.exec_us_sim;
+        for wait in waits_us {
+            h.latency_us.push(wait);
+            h.queue_wait_us.push(wait - timing.exec_us_sim.min(wait));
+        }
+    }
+
+    /// Count `n` admission-control rejections (lock-free — this sits
+    /// on the submit path).
+    pub fn record_rejected(&self, n: u64) {
+        self.rejected.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Count `n` admitted requests that failed in execution. Kept
     /// separate from [`Self::record_batch`] so failed requests appear
     /// in exactly one counter (`admitted == completed + failed`) and
     /// never as a phantom zero-size batch.
-    pub fn record_failed(&mut self, n: u64) {
-        self.failed += n;
+    pub fn record_failed(&self, n: u64) {
+        self.failed.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Requests completed so far (lock-free probe).
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Rejections so far (lock-free probe).
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Copy everything out. The heavy lock is held only for the
+    /// buffer copies — sorting/percentiles happen on the snapshot,
+    /// on the caller's thread. `wall` is filled in by the engine.
+    pub fn raw_snapshot(&self) -> RawMetrics {
+        let h = self.heavy.lock().unwrap();
+        RawMetrics {
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batch_size_sum: self.batch_size_sum.load(Ordering::Relaxed),
+            context_switches: self.context_switches.load(Ordering::Relaxed),
+            latency_us: h.latency_us.clone(),
+            queue_wait_us: h.queue_wait_us.clone(),
+            per_kernel: h.per_kernel.clone(),
+            fabric_busy_us: h.fabric_busy_us,
+            fabric_switch_us: h.fabric_switch_us,
+            wall: Duration::ZERO,
+        }
+    }
+}
+
+/// A plain-data copy of the accumulator, detached from every lock.
+/// The service layer turns this into its typed `MetricsSnapshot`.
+#[derive(Debug, Clone)]
+pub struct RawMetrics {
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub batch_size_sum: u64,
+    pub context_switches: u64,
+    pub latency_us: Samples,
+    pub queue_wait_us: Samples,
+    /// Completed requests per kernel, dense by [`KernelId`].
+    pub per_kernel: Vec<u64>,
+    pub fabric_busy_us: f64,
+    pub fabric_switch_us: f64,
+    pub wall: Duration,
+}
+
+impl RawMetrics {
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -79,28 +200,76 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    fn timing(switched: bool, switch_us: f64, exec_us_sim: f64) -> BatchTiming {
+        BatchTiming {
+            switched,
+            switch_us,
+            exec_us_sim,
+        }
+    }
+
     #[test]
     fn records_batches() {
-        let mut m = Metrics::default();
-        m.record_batch("a", 4, true, 0.27, 1.0);
-        m.record_batch("a", 2, false, 0.0, 0.5);
-        assert_eq!(m.completed, 6);
-        assert_eq!(m.batches, 2);
-        assert_eq!(m.context_switches, 1);
-        assert!((m.mean_batch_size() - 3.0).abs() < 1e-12);
-        assert!((m.fabric_busy_us - 1.77).abs() < 1e-9);
+        let m = Metrics::new(2);
+        m.record_batch(KernelId(0), 4, timing(true, 0.27, 1.0), std::iter::empty());
+        m.record_batch(KernelId(0), 2, timing(false, 0.0, 0.5), std::iter::empty());
+        let raw = m.raw_snapshot();
+        assert_eq!(raw.completed, 6);
+        assert_eq!(raw.batches, 2);
+        assert_eq!(raw.context_switches, 1);
+        assert_eq!(raw.per_kernel, vec![6, 0]);
+        assert!((raw.mean_batch_size() - 3.0).abs() < 1e-12);
+        assert!((raw.fabric_busy_us - 1.77).abs() < 1e-9);
     }
 
     #[test]
     fn records_rejections_and_failures() {
-        let mut m = Metrics::default();
+        let m = Metrics::new(1);
         m.record_rejected(1);
         m.record_rejected(3);
         m.record_failed(2);
-        assert_eq!(m.rejected, 4);
-        assert_eq!(m.failed, 2);
+        let raw = m.raw_snapshot();
+        assert_eq!(raw.rejected, 4);
+        assert_eq!(m.rejected(), 4);
+        assert_eq!(raw.failed, 2);
         // Neither path touches the success-side counters.
-        assert_eq!(m.completed, 0);
-        assert_eq!(m.batches, 0);
+        assert_eq!(raw.completed, 0);
+        assert_eq!(m.completed(), 0);
+        assert_eq!(raw.batches, 0);
+    }
+
+    #[test]
+    fn waits_feed_both_distributions() {
+        let m = Metrics::new(1);
+        // exec 3.0us: a 10us wait spent 7us queued; a 2us wait (reply
+        // beat the model) clamps to 0 queue time, never negative.
+        m.record_batch(
+            KernelId(0),
+            2,
+            timing(true, 0.2, 3.0),
+            [10.0, 2.0].into_iter(),
+        );
+        let mut raw = m.raw_snapshot();
+        let lat = raw.latency_us.summarize().unwrap();
+        assert_eq!(lat.n, 2);
+        assert!((lat.mean - 6.0).abs() < 1e-9);
+        let qw = raw.queue_wait_us.summarize().unwrap();
+        assert!((qw.max - 7.0).abs() < 1e-9);
+        assert!((qw.min - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_is_detached_from_the_accumulator() {
+        let m = Metrics::new(1);
+        m.record_batch(KernelId(0), 1, timing(false, 0.0, 1.0), [5.0].into_iter());
+        let mut snap = m.raw_snapshot();
+        // Sorting the snapshot (what percentile computation does)
+        // must not disturb the live accumulator.
+        let _ = snap.latency_us.summarize();
+        m.record_batch(KernelId(0), 1, timing(false, 0.0, 1.0), [1.0].into_iter());
+        let raw2 = m.raw_snapshot();
+        assert_eq!(raw2.completed, 2);
+        assert_eq!(raw2.latency_us.len(), 2);
+        assert_eq!(snap.latency_us.len(), 1);
     }
 }

@@ -8,17 +8,25 @@
 //! Nothing outside the crate constructs an engine or pushes a request
 //! directly.
 //!
-//! Architecture (std threads + channels; tokio is unavailable offline):
+//! Architecture (std threads + a shared completion slab; tokio is
+//! unavailable offline):
 //!
 //! * the service layer submits requests through [`Shared::submit`] /
 //!   [`Shared::submit_batch`] as (dense [`KernelId`](exec::KernelId),
 //!   input row) pairs — names were interned once when the client's
 //!   `KernelHandle` was created, so nothing here allocates or compares
 //!   strings;
+//! * every in-flight request lives in the
+//!   [`completion::CompletionSlab`] (DESIGN.md §10): `submit` reserves
+//!   a recycled slot (O(1), zero heap allocations in steady state),
+//!   workers write replies into the slot in place, and callers block
+//!   on a per-shard condvar — no `mpsc::channel` per call, no boxed
+//!   reply `Vec`, no waiter thread anywhere;
 //! * a shared [`queue::QueueSet`] holds **bounded** per-kernel FIFOs
-//!   indexed by kernel id; a full queue refuses the request at the
-//!   door ([`SubmitRejection::Full`]) — backpressure is explicit, not
-//!   implicit queue growth;
+//!   indexed by kernel id; entries are thin
+//!   [`RowTicket`](completion::RowTicket)s into the slab. A full queue
+//!   refuses the request at the door ([`SubmitRejection::Full`]) —
+//!   backpressure is explicit, not implicit queue growth;
 //! * each **fabric worker** thread owns a `Box<dyn Backend>` — the
 //!   interpreter, the tape-compiled turbo executor, the cycle-accurate
 //!   overlay simulator, or the PJRT engine ([`crate::exec`]); backends
@@ -28,40 +36,35 @@
 //!   [`Arc<KernelRegistry>`](exec::KernelRegistry) owned by the
 //!   service builder — schedule, timing, context image and op tape are
 //!   never recomputed per worker;
-//! * workers pull context-affine batches into a **reused
-//!   [`FlatBatch`](exec::FlatBatch) buffer** — the request side of the
-//!   dispatch loop performs no per-packet allocation in steady state
-//!   (replies still cost one `Vec` each: the [`Reply`] channel
-//!   contract hands each caller an owned row) — charge the modeled
-//!   context switch cost when they change kernels, execute through
-//!   their backend, and reply;
+//! * workers pull context-affine batches into **reused buffers**
+//!   ([`QueueSet::take_batch_into`](queue::QueueSet::take_batch_into)
+//!   for the tickets, a [`FlatBatch`](exec::FlatBatch) for the input
+//!   rows) and reply by writing rows straight into the slab slots —
+//!   the steady-state dispatch loop performs no per-packet allocation
+//!   on either side of the backend call;
 //! * [`Engine::shutdown`] **drains**: the flag stops admission, but
 //!   workers keep taking batches until every queue is empty before
 //!   exiting, so every admitted request gets its reply;
 //! * metrics capture wall-clock latency plus the simulated 300 MHz
 //!   fabric timeline (II model + context-switch model; the sim backend
-//!   reports *measured* fabric cycles instead of the model).
+//!   reports *measured* fabric cycles instead of the model). Counters
+//!   are atomics; the sample buffers take one lock per batch.
 
+pub mod completion;
 pub mod metrics;
 pub mod queue;
 
 use crate::exec::{self, BackendKind, ExecError, FlatBatch, KernelId, KernelRegistry};
 use crate::resources::SYSTEM_CLOCK_MHZ;
 use anyhow::{Context, Result};
-use metrics::Metrics;
-use queue::{Pending, QueueSet};
+use completion::{CompletionSlab, RowTicket, Ticket, WakeTarget};
+use metrics::{BatchTiming, Metrics, RawMetrics};
+use queue::{Queued, QueueSet};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Instant;
-
-/// Completion message for one request. Engine-level errors speak
-/// [`ExecError`]; the service layer converts to `ServiceError` at the
-/// client boundary.
-pub type Reply = Result<Vec<i32>, ExecError>;
-
-type Token = mpsc::Sender<Reply>;
 
 /// Why a submit was refused at the door (before any queueing).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,88 +79,101 @@ pub enum SubmitRejection {
 /// handle. The service layer's `KernelHandle`s hold an `Arc<Shared>`,
 /// which is what makes them `Clone + Send` sessions independent of the
 /// `OverlayService` value itself.
+///
+/// Lock order: `queues` → slab shard → nothing (doorbells ring after
+/// the shard lock is released).
 pub struct Shared {
     queues: Mutex<QueueState>,
     cv: Condvar,
-    metrics: Mutex<Metrics>,
+    /// The one completion structure every in-flight request shares.
+    pub(crate) slab: CompletionSlab,
+    pub(crate) metrics: Metrics,
 }
 
 struct QueueState {
-    qs: QueueSet<Token>,
+    qs: QueueSet<RowTicket>,
     shutdown: bool,
 }
 
 impl Shared {
     /// Submit one pre-validated request (shape checks happen in the
-    /// service layer, which owns the kernel's arity). The reply arrives
-    /// on the returned channel.
+    /// service layer, which owns the kernel's arity — `n_outputs` is
+    /// that kernel's output arity and shapes the reply slot). Returns
+    /// the slab ticket the reply arrives under. Allocation-free in
+    /// steady state: the slot, its buffers, and the queue entry all
+    /// recycle.
     pub fn submit(
         &self,
         id: KernelId,
-        inputs: Vec<i32>,
-    ) -> Result<mpsc::Receiver<Reply>, SubmitRejection> {
-        let (tx, rx) = mpsc::channel();
-        {
-            let mut st = self.queues.lock().unwrap();
-            if st.shutdown {
-                return Err(SubmitRejection::ShutDown);
-            }
-            let pending = Pending {
-                inputs,
-                enqueued: Instant::now(),
-                token: tx,
-            };
-            if st.qs.try_push(id, pending).is_err() {
-                let queued = st.qs.queued_for(id);
-                let limit = st.qs.depth();
-                drop(st);
-                self.metrics.lock().unwrap().record_rejected(1);
-                return Err(SubmitRejection::Full { queued, limit });
-            }
+        inputs: &[i32],
+        n_outputs: usize,
+        waker: Option<WakeTarget>,
+    ) -> Result<Ticket, SubmitRejection> {
+        let mut st = self.queues.lock().unwrap();
+        if st.shutdown {
+            return Err(SubmitRejection::ShutDown);
         }
+        if st.qs.queued_for(id) >= st.qs.depth() {
+            let queued = st.qs.queued_for(id);
+            let limit = st.qs.depth();
+            drop(st);
+            self.metrics.record_rejected(1);
+            return Err(SubmitRejection::Full { queued, limit });
+        }
+        let ticket = self.slab.reserve(inputs, n_outputs, waker);
+        let entry = Queued {
+            enqueued: Instant::now(),
+            token: RowTicket { ticket, row: 0 },
+        };
+        if st.qs.try_push(id, entry).is_err() {
+            unreachable!("admission capacity checked above");
+        }
+        drop(st);
         self.cv.notify_one();
-        Ok(rx)
+        Ok(ticket)
     }
 
     /// Submit a whole kernel-affine batch atomically: either every row
-    /// is admitted (one receiver per row, in row order) or none is —
-    /// a half-admitted batch would make `call_batch` semantics
-    /// unobservable under backpressure.
+    /// is admitted or none is — a half-admitted batch would make
+    /// `call_batch` semantics unobservable under backpressure. The
+    /// whole batch costs **one** slab reservation (one ticket, one
+    /// in-place reply buffer), not a channel per row.
     pub fn submit_batch(
         &self,
         id: KernelId,
         batch: &FlatBatch,
-    ) -> Result<Vec<mpsc::Receiver<Reply>>, SubmitRejection> {
+        n_outputs: usize,
+        waker: Option<WakeTarget>,
+    ) -> Result<Ticket, SubmitRejection> {
         let n = batch.n_rows();
-        let mut rxs = Vec::with_capacity(n);
-        {
-            let mut st = self.queues.lock().unwrap();
-            if st.shutdown {
-                return Err(SubmitRejection::ShutDown);
-            }
-            let queued = st.qs.queued_for(id);
-            let limit = st.qs.depth();
-            if queued + n > limit {
-                drop(st);
-                self.metrics.lock().unwrap().record_rejected(n as u64);
-                return Err(SubmitRejection::Full { queued, limit });
-            }
-            let now = Instant::now();
-            for row in batch.iter() {
-                let (tx, rx) = mpsc::channel();
-                let pending = Pending {
-                    inputs: row.to_vec(),
-                    enqueued: now,
-                    token: tx,
-                };
-                if st.qs.try_push(id, pending).is_err() {
-                    unreachable!("batch admission capacity checked above");
-                }
-                rxs.push(rx);
+        let mut st = self.queues.lock().unwrap();
+        if st.shutdown {
+            return Err(SubmitRejection::ShutDown);
+        }
+        let queued = st.qs.queued_for(id);
+        let limit = st.qs.depth();
+        if queued + n > limit {
+            drop(st);
+            self.metrics.record_rejected(n as u64);
+            return Err(SubmitRejection::Full { queued, limit });
+        }
+        let ticket = self.slab.reserve_batch(batch, n_outputs, waker);
+        let now = Instant::now();
+        for row in 0..n {
+            let entry = Queued {
+                enqueued: now,
+                token: RowTicket {
+                    ticket,
+                    row: row as u32,
+                },
+            };
+            if st.qs.try_push(id, entry).is_err() {
+                unreachable!("batch admission capacity checked above");
             }
         }
+        drop(st);
         self.cv.notify_all();
-        Ok(rxs)
+        Ok(ticket)
     }
 
     /// Whether the engine has stopped admitting requests.
@@ -187,8 +203,8 @@ pub struct EngineConfig {
     pub registry: Arc<KernelRegistry>,
 }
 
-/// The serving engine: worker threads + shared queues behind
-/// [`crate::service::OverlayService`].
+/// The serving engine: worker threads + shared queues + the completion
+/// slab behind [`crate::service::OverlayService`].
 pub struct Engine {
     shared: Arc<Shared>,
     /// Join handles live behind a mutex so [`Engine::shutdown`] can
@@ -225,7 +241,10 @@ impl Engine {
                 shutdown: false,
             }),
             cv: Condvar::new(),
-            metrics: Mutex::new(Metrics::default()),
+            // Sharding spreads submit-side lock traffic; a couple of
+            // shards per worker is plenty (contention is per shard).
+            slab: CompletionSlab::new((cfg.workers * 2).clamp(4, 64)),
+            metrics: Metrics::new(registry.len()),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut workers = Vec::new();
@@ -284,17 +303,19 @@ impl Engine {
         self.queue_depth
     }
 
-    /// Run `f` over the raw metrics under the lock, with `wall`
-    /// refreshed. The service layer uses this to build its typed
-    /// snapshot without the engine depending on the service types.
-    pub fn with_metrics<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
-        let mut m = self.shared.metrics.lock().unwrap();
-        m.wall = self.started.elapsed();
-        f(&mut m)
+    /// Copy the raw counters out (sample buffers cloned under a short
+    /// lock; percentile sorting happens on the returned value, outside
+    /// every engine lock). The service layer builds its typed snapshot
+    /// from this.
+    pub fn raw_metrics(&self) -> RawMetrics {
+        let mut raw = self.shared.metrics.raw_snapshot();
+        raw.wall = self.started.elapsed();
+        raw
     }
 
+    /// Requests completed so far (lock-free).
     pub fn completed(&self) -> u64 {
-        self.shared.metrics.lock().unwrap().completed
+        self.shared.metrics.completed()
     }
 
     /// Stop admitting, drain every queue, stop workers. Admitted
@@ -308,11 +329,25 @@ impl Engine {
         }
         self.shared.cv.notify_all();
         let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        let mut result = Ok(());
         for w in workers {
-            w.join()
-                .map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            let joined = w
+                .join()
+                .map_err(|_| anyhow::anyhow!("worker panicked"))
+                .and_then(|r| r);
+            if let Err(e) = joined {
+                result = Err(e);
+            }
         }
-        Ok(())
+        // The workers are gone. Drain semantics mean every admitted
+        // request was completed — but if a worker died mid-batch, its
+        // slots can never complete normally. Fail them typed so no
+        // waiter blocks forever (a no-op in every healthy shutdown).
+        self.shared.slab.fail_all_pending(&ExecError::Backend {
+            backend: "engine",
+            message: "worker lost before completing the request".to_string(),
+        });
+        result
     }
 }
 
@@ -349,15 +384,20 @@ fn worker_loop(
     // Batch-affinity hint only; switch *accounting* comes from the
     // backend's report when it models context switches itself.
     let mut context: Option<KernelId> = None;
-    // One flat input buffer per worker, reused for every batch — the
-    // steady-state dispatch loop allocates nothing per packet.
+    // Reused per-worker buffers: the ticket batch and the flat input
+    // rows. The steady-state dispatch loop allocates nothing per
+    // packet — replies are written straight into slab slots.
+    let mut items: Vec<Queued<RowTicket>> = Vec::new();
     let mut inputs = FlatBatch::default();
     loop {
-        let batch = {
+        let taken = {
             let mut st = shared.queues.lock().unwrap();
             loop {
-                if let Some(b) = st.qs.take_batch(context, max_batch, Instant::now()) {
-                    break Some(b);
+                if let Some(k) =
+                    st.qs
+                        .take_batch_into(context, max_batch, Instant::now(), &mut items)
+                {
+                    break Some(k);
                 }
                 if st.shutdown {
                     break None;
@@ -365,105 +405,176 @@ fn worker_loop(
                 st = shared.cv.wait(st).unwrap();
             }
         };
-        let Some(batch) = batch else { return Ok(()) };
-        let Some(kernel) = registry.kernel(batch.kernel).cloned() else {
+        let Some(batch_kernel) = taken else {
+            return Ok(());
+        };
+        let n = items.len();
+        let Some(kernel) = registry.kernel(batch_kernel).cloned() else {
             // Unreachable via the service layer (ids are interned from
             // this registry); kept as a structured reply so a future
             // ingress path cannot hang callers.
-            let err = ExecError::UnknownKernel(batch.kernel.to_string());
-            for p in batch.items {
-                let _ = p.token.send(Err(err.clone()));
+            let err = ExecError::UnknownKernel(batch_kernel.to_string());
+            for it in items.drain(..) {
+                shared.slab.complete_row_err(it.token, &err);
             }
             continue;
         };
-        let hint_switched = context != Some(batch.kernel);
+        let hint_switched = context != Some(batch_kernel);
         // Simulated fabric execution time for the batch at 300 MHz:
         // pipeline fill (latency) + (n-1) more initiations at II.
         // Guarded: an empty batch is a structured error, not a u64
         // underflow.
-        let n = batch.items.len();
         let model_cycles = match exec::fabric_exec_cycles(&kernel, n) {
             Ok(c) => c,
             Err(e) => {
-                for p in batch.items {
-                    let _ = p.token.send(Err(e.clone()));
+                for it in items.drain(..) {
+                    shared.slab.complete_row_err(it.token, &e);
                 }
                 continue;
             }
         };
-        // Shape guard (the whole-batch analogue of the old per-packet
-        // validate_batch scan): a malformed Pending from a future
-        // ingress path must produce a structured reply, not panic the
-        // worker on the FlatBatch arity assert. Unreachable via the
-        // service layer, which validates arity at the door.
-        if let Some(p) = batch.items.iter().find(|p| p.inputs.len() != kernel.n_inputs) {
+        // Gather the input rows out of the slab into the reused flat
+        // buffer, guarding shape (the whole-batch analogue of the old
+        // per-packet validate_batch scan): a malformed slot from a
+        // future ingress path must produce a structured reply, not
+        // panic the worker. Unreachable via the service layer, which
+        // validates arity at the door.
+        inputs.reset(kernel.n_inputs);
+        inputs.reserve_rows(n);
+        let mut bad_arity: Option<usize> = None;
+        for it in &items {
+            // A stale ticket (None) is structurally unreachable: slots
+            // stay allocated until their last row completes. The
+            // row-count guard below turns even that into a structured
+            // reply rather than a short batch.
+            let _ = shared.slab.with_inputs(it.token, |row| {
+                if row.len() == kernel.n_inputs {
+                    inputs.push(row);
+                } else if bad_arity.is_none() {
+                    bad_arity = Some(row.len());
+                }
+            });
+        }
+        if bad_arity.is_some() || inputs.n_rows() != n {
             let err = ExecError::WrongArity {
                 kernel: kernel.name.clone(),
                 expected: kernel.n_inputs,
-                got: p.inputs.len(),
+                got: bad_arity.unwrap_or(0),
             };
-            for p in batch.items {
-                let _ = p.token.send(Err(err.clone()));
+            for it in items.drain(..) {
+                shared.slab.complete_row_err(it.token, &err);
             }
             continue;
         }
-        inputs.reset(kernel.n_inputs);
-        inputs.reserve_rows(n);
-        for p in &batch.items {
-            inputs.push(&p.inputs);
-        }
-        let result = backend.execute(&kernel, &inputs);
-        let now = Instant::now();
-        match result {
-            Ok(report) => {
-                // Prefer measured fabric cycles (sim backend) over the
-                // analytical model.
-                let exec_us_sim =
-                    report.fabric_cycles.unwrap_or(model_cycles) as f64 / SYSTEM_CLOCK_MHZ;
-                // Switch accounting: backends that model switching are
-                // authoritative (they know whether the context really
-                // changed); otherwise fall back to the worker's hint.
-                let (switched, switch_us) = if caps.models_context_switch {
-                    (
-                        report.switch_cycles > 0,
-                        report.switch_cycles as f64 / SYSTEM_CLOCK_MHZ,
-                    )
-                } else {
-                    (
-                        hint_switched,
-                        if hint_switched {
-                            kernel.switch_time_us(SYSTEM_CLOCK_MHZ)
-                        } else {
-                            0.0
+        // Execute + reply under an unwind guard: a panicking backend
+        // must not strand this batch's slots in Pending — the old
+        // per-call channels failed waiters for free when a panicking
+        // worker dropped its senders, and the slab keeps that
+        // containment explicitly. `completed_rows` tracks progress so
+        // the handler fails exactly the tickets still unanswered,
+        // then the panic is re-raised (the thread still dies; the
+        // next `shutdown` reports it, as before).
+        let mut completed_rows = 0usize;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let result = backend.execute(&kernel, &inputs);
+            let now = Instant::now();
+            match result {
+                Ok(report) => {
+                    // Shape-check the backend's report before touching
+                    // metrics or slots (the reply-side twin of the
+                    // input-arity guard above): a short or mis-shaped
+                    // output is a structured backend failure — never a
+                    // mid-loop panic that would double-count the batch
+                    // or poison a shard lock from inside complete_row.
+                    if report.outputs.n_rows() != n || report.outputs.arity() != kernel.n_outputs
+                    {
+                        let e = ExecError::Backend {
+                            backend: "engine",
+                            message: format!(
+                                "backend returned {} rows x {} words for '{}', expected {} x {}",
+                                report.outputs.n_rows(),
+                                report.outputs.arity(),
+                                kernel.name,
+                                n,
+                                kernel.n_outputs
+                            ),
+                        };
+                        shared.metrics.record_failed(n as u64);
+                        for (i, it) in items.iter().enumerate() {
+                            shared.slab.complete_row_err(it.token, &e);
+                            completed_rows = i + 1;
+                        }
+                        return;
+                    }
+                    // Prefer measured fabric cycles (sim backend) over
+                    // the analytical model.
+                    let exec_us_sim =
+                        report.fabric_cycles.unwrap_or(model_cycles) as f64 / SYSTEM_CLOCK_MHZ;
+                    // Switch accounting: backends that model switching
+                    // are authoritative (they know whether the context
+                    // really changed); otherwise the worker's hint.
+                    let (switched, switch_us) = if caps.models_context_switch {
+                        (
+                            report.switch_cycles > 0,
+                            report.switch_cycles as f64 / SYSTEM_CLOCK_MHZ,
+                        )
+                    } else {
+                        (
+                            hint_switched,
+                            if hint_switched {
+                                kernel.switch_time_us(SYSTEM_CLOCK_MHZ)
+                            } else {
+                                0.0
+                            },
+                        )
+                    };
+                    // Record first (counters are visible the moment a
+                    // waiter wakes), then write replies in place.
+                    shared.metrics.record_batch(
+                        batch_kernel,
+                        n,
+                        BatchTiming {
+                            switched,
+                            switch_us,
+                            exec_us_sim,
                         },
-                    )
-                };
-                {
-                    let mut m = shared.metrics.lock().unwrap();
-                    m.record_batch(&kernel.name, n, switched, switch_us, exec_us_sim);
-                    for p in &batch.items {
-                        let wait = now.duration_since(p.enqueued).as_secs_f64() * 1e6;
-                        m.latency_us.push(wait);
-                        m.queue_wait_us.push(wait - exec_us_sim.min(wait));
+                        items
+                            .iter()
+                            .map(|it| now.duration_since(it.enqueued).as_secs_f64() * 1e6),
+                    );
+                    for (i, it) in items.iter().enumerate() {
+                        shared.slab.complete_row_ok(it.token, report.outputs.row(i));
+                        completed_rows = i + 1;
                     }
                 }
-                for (i, p) in batch.items.into_iter().enumerate() {
-                    let _ = p.token.send(Ok(report.outputs.row(i).to_vec()));
+                Err(e) => {
+                    // Failed requests land in the `failed` counter
+                    // only — not `completed`, and not a phantom
+                    // zero-size batch (which would skew
+                    // mean_batch_size). No switch is claimed either:
+                    // the backend may have failed before any context
+                    // load happened.
+                    shared.metrics.record_failed(n as u64);
+                    for (i, it) in items.iter().enumerate() {
+                        shared.slab.complete_row_err(it.token, &e);
+                        completed_rows = i + 1;
+                    }
                 }
             }
-            Err(e) => {
-                // Failed requests land in the `failed` counter only —
-                // not `completed`, and not a phantom zero-size batch
-                // (which would skew mean_batch_size). No switch is
-                // claimed either: the backend may have failed before
-                // any context load happened.
-                shared.metrics.lock().unwrap().record_failed(n as u64);
-                for p in batch.items {
-                    let _ = p.token.send(Err(e.clone()));
-                }
+        }));
+        if let Err(payload) = outcome {
+            let err = ExecError::Backend {
+                backend: "engine",
+                message: "worker panicked while executing the batch".to_string(),
+            };
+            shared.metrics.record_failed((n - completed_rows) as u64);
+            for it in &items[completed_rows..] {
+                shared.slab.complete_row_err(it.token, &err);
             }
+            std::panic::resume_unwind(payload);
         }
-        context = Some(batch.kernel);
+        items.clear();
+        context = Some(batch_kernel);
     }
 }
 
@@ -490,18 +601,24 @@ mod tests {
     fn engine_serves_by_id_and_drains_on_shutdown() {
         let eng = engine(BackendKind::Sim, 2, 8);
         let id = eng.registry().id_of("gradient").unwrap();
-        let mut rxs = Vec::new();
-        for i in 0..20 {
-            rxs.push(eng.shared().submit(id, vec![3, 5, 2, 7, i]).unwrap());
+        let mut tickets = Vec::new();
+        for i in 0..20i32 {
+            tickets.push(eng.shared().submit(id, &[3, 5, 2, 7, i], 1, None).unwrap());
         }
         // Drain semantics: shutdown must answer everything already
-        // admitted even if nothing has been received yet.
+        // admitted even if nothing has been collected yet.
         eng.shutdown().unwrap();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let out = rx.recv().unwrap().unwrap();
+        let mut out = Vec::new();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let slab = &eng.shared().slab;
+            slab.wait_row(t, None, &mut out)
+                .expect("no deadline")
+                .unwrap();
             let i = i as i32;
             assert_eq!(out, vec![1 + 9 + 25 + (2 - i) * (2 - i)]);
         }
+        // Every slot was collected: the slab is fully recycled.
+        assert_eq!(eng.shared().slab.live_slots(), 0);
     }
 
     #[test]
@@ -513,12 +630,12 @@ mod tests {
         eng.shutdown().unwrap();
         assert!(shared.is_shut_down());
         assert_eq!(
-            shared.submit(id, vec![0; 5]).unwrap_err(),
+            shared.submit(id, &[0; 5], 1, None).unwrap_err(),
             SubmitRejection::ShutDown
         );
         let batch = FlatBatch::from_rows(5, &[vec![0; 5]]);
         assert_eq!(
-            shared.submit_batch(id, &batch).unwrap_err(),
+            shared.submit_batch(id, &batch, 1, None).unwrap_err(),
             SubmitRejection::ShutDown
         );
     }
@@ -542,13 +659,15 @@ mod tests {
         // deterministically Full regardless of worker progress.
         let rows: Vec<Vec<i32>> = (0..3).map(|_| vec![0; 5]).collect();
         let batch = FlatBatch::from_rows(5, &rows);
-        match eng.shared().submit_batch(id, &batch) {
+        match eng.shared().submit_batch(id, &batch, 1, None) {
             Err(SubmitRejection::Full { limit, .. }) => assert_eq!(limit, 2),
             other => panic!("expected Full, got {other:?}"),
         }
-        // The rejection was counted and nothing was admitted.
-        assert_eq!(eng.with_metrics(|m| m.rejected), 3);
+        // The rejection was counted, nothing was admitted, and no
+        // slab slot was reserved for the refused batch.
+        assert_eq!(eng.raw_metrics().rejected, 3);
         assert_eq!(eng.completed(), 0);
+        assert_eq!(eng.shared().slab.live_slots(), 0);
         eng.shutdown().unwrap();
     }
 

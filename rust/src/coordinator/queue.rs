@@ -2,14 +2,24 @@
 //!
 //! The dispatcher maintains one FIFO queue per kernel context, indexed
 //! by dense [`KernelId`] — names are interned once at ingress, so a
-//! push moves a `u32` and a `Vec<i32>`, never a `String`, and batch
-//! selection is a linear scan over a fixed-size vector instead of a
-//! `BTreeMap` walk. (The previous map-keyed design also leaked: an
-//! empty per-kernel queue stayed resident forever once its name had
+//! push moves a `u32` and a small `Copy` token, never a `String`, and
+//! batch selection is a linear scan over a fixed-size vector instead
+//! of a `BTreeMap` walk. (The previous map-keyed design also leaked:
+//! an empty per-kernel queue stayed resident forever once its name had
 //! been seen, growing without bound as contexts churned. The dense
-//! layout is bounded by the registry size by construction, and
-//! [`QueueSet::drain_all`] additionally releases the per-queue buffers
-//! so an idle engine holds no request memory.)
+//! layout is bounded by the registry size by construction; each
+//! queue's ring buffer keeps its high-water capacity — bounded by
+//! `depth` entries of a few words each — for the engine's life, and
+//! is freed when the engine drops.)
+//!
+//! Since the completion-slab refactor (DESIGN.md §10) a queue entry is
+//! a [`Queued`] — an enqueue timestamp plus an opaque token (a slab
+//! [`RowTicket`](super::completion::RowTicket) in production). Request
+//! *inputs* live in the slab slot, not the queue, so pushing a request
+//! moves a handful of words and the steady-state submit path performs
+//! no heap allocation at all. Workers refill a reused buffer through
+//! [`QueueSet::take_batch_into`], so dispatch allocates nothing per
+//! batch either.
 //!
 //! Queues are **bounded**: every queue carries the same `depth` limit
 //! and [`QueueSet::try_push`] refuses to grow past it, handing the
@@ -29,13 +39,12 @@ use crate::exec::KernelId;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-/// One queued request.
-#[derive(Debug)]
-pub struct Pending<T> {
-    pub inputs: Vec<i32>,
+/// One queued request: when it arrived, and the token that locates its
+/// inputs and completion slot (a reply channel would be an allocation;
+/// a slab ticket is two words).
+#[derive(Debug, Clone, Copy)]
+pub struct Queued<T> {
     pub enqueued: Instant,
-    /// Opaque completion payload (reply channel in production, test id
-    /// in tests).
     pub token: T,
 }
 
@@ -43,16 +52,9 @@ pub struct Pending<T> {
 /// bounded at `depth` entries.
 #[derive(Debug)]
 pub struct QueueSet<T> {
-    queues: Vec<VecDeque<Pending<T>>>,
+    queues: Vec<VecDeque<Queued<T>>>,
     depth: usize,
     pub total_queued: usize,
-}
-
-/// A batch the dispatcher hands to a worker.
-#[derive(Debug)]
-pub struct Batch<T> {
-    pub kernel: KernelId,
-    pub items: Vec<Pending<T>>,
 }
 
 impl<T> QueueSet<T> {
@@ -80,12 +82,12 @@ impl<T> QueueSet<T> {
     /// at its depth limit (the admission-control path). `kernel` must
     /// come from the registry this set was sized for (ingress interns
     /// and validates names).
-    pub fn try_push(&mut self, kernel: KernelId, p: Pending<T>) -> Result<(), Pending<T>> {
-        let q = &mut self.queues[kernel.index()];
-        if q.len() >= self.depth {
-            return Err(p);
+    pub fn try_push(&mut self, kernel: KernelId, q: Queued<T>) -> Result<(), Queued<T>> {
+        let queue = &mut self.queues[kernel.index()];
+        if queue.len() >= self.depth {
+            return Err(q);
         }
-        q.push_back(p);
+        queue.push_back(q);
         self.total_queued += 1;
         Ok(())
     }
@@ -100,20 +102,25 @@ impl<T> QueueSet<T> {
 
     /// Batching policy: prefer the worker's current context if it has
     /// work; otherwise the queue with the highest (length + age bonus)
-    /// score. Takes up to `max_batch` requests FIFO.
-    pub fn take_batch(
+    /// score. Drains up to `max_batch` requests FIFO into `out`
+    /// (cleared first), which the worker reuses across batches —
+    /// dispatch performs no per-batch allocation in steady state.
+    /// Returns the chosen kernel, or `None` when nothing is queued.
+    pub fn take_batch_into(
         &mut self,
         current_context: Option<KernelId>,
         max_batch: usize,
         now: Instant,
-    ) -> Option<Batch<T>> {
+        out: &mut Vec<Queued<T>>,
+    ) -> Option<KernelId> {
+        out.clear();
         if self.is_empty() {
             return None;
         }
         let kernel = match current_context {
             Some(k) if self.queued_for(k) > 0 => k,
             _ => {
-                let score = |q: &VecDeque<Pending<T>>| {
+                let score = |q: &VecDeque<Queued<T>>| {
                     let age_ms = now
                         .duration_since(q.front().unwrap().enqueued)
                         .as_secs_f64()
@@ -132,36 +139,11 @@ impl<T> QueueSet<T> {
         };
         let q = &mut self.queues[kernel.index()];
         let n = q.len().min(max_batch);
-        let items: Vec<Pending<T>> = q.drain(..n).collect();
-        self.total_queued -= items.len();
-        Some(Batch { kernel, items })
+        out.extend(q.drain(..n));
+        self.total_queued -= out.len();
+        Some(kernel)
     }
 
-    /// Drain everything (shutdown path) and release per-queue buffers —
-    /// after a burst the deque capacities would otherwise stay resident
-    /// for the life of the coordinator.
-    pub fn drain_all(&mut self) -> Vec<Batch<T>> {
-        let mut out = Vec::new();
-        for (i, q) in self.queues.iter_mut().enumerate() {
-            if !q.is_empty() {
-                let items: Vec<Pending<T>> = q.drain(..).collect();
-                self.total_queued -= items.len();
-                out.push(Batch {
-                    kernel: KernelId(i as u32),
-                    items,
-                });
-            }
-            // Prune: drop the buffer, not just the contents.
-            *q = VecDeque::new();
-        }
-        out
-    }
-
-    /// Resident buffer capacity across all queues (memory telemetry /
-    /// the pruning regression test).
-    pub fn resident_capacity(&self) -> usize {
-        self.queues.iter().map(VecDeque::capacity).sum()
-    }
 }
 
 #[cfg(test)]
@@ -172,12 +154,21 @@ mod tests {
     const B: KernelId = KernelId(1);
     const C: KernelId = KernelId(2);
 
-    fn pend(token: u32) -> Pending<u32> {
-        Pending {
-            inputs: vec![1, 2, 3],
+    fn pend(token: u32) -> Queued<u32> {
+        Queued {
             enqueued: Instant::now(),
             token,
         }
+    }
+
+    fn take<T>(
+        qs: &mut QueueSet<T>,
+        ctx: Option<KernelId>,
+        max: usize,
+    ) -> Option<(KernelId, Vec<Queued<T>>)> {
+        let mut out = Vec::new();
+        let k = qs.take_batch_into(ctx, max, Instant::now(), &mut out)?;
+        Some((k, out))
     }
 
     #[test]
@@ -187,9 +178,9 @@ mod tests {
         qs.try_push(B, pend(2)).unwrap();
         qs.try_push(B, pend(3)).unwrap();
         // Worker holds A: takes A despite B being longer.
-        let b = qs.take_batch(Some(A), 16, Instant::now()).unwrap();
-        assert_eq!(b.kernel, A);
-        assert_eq!(b.items.len(), 1);
+        let (kernel, items) = take(&mut qs, Some(A), 16).unwrap();
+        assert_eq!(kernel, A);
+        assert_eq!(items.len(), 1);
     }
 
     #[test]
@@ -198,29 +189,34 @@ mod tests {
         qs.try_push(A, pend(1)).unwrap();
         qs.try_push(B, pend(2)).unwrap();
         qs.try_push(B, pend(3)).unwrap();
-        let b = qs.take_batch(Some(C), 16, Instant::now()).unwrap();
-        assert_eq!(b.kernel, B);
-        assert_eq!(b.items.len(), 2);
+        let (kernel, items) = take(&mut qs, Some(C), 16).unwrap();
+        assert_eq!(kernel, B);
+        assert_eq!(items.len(), 2);
         assert_eq!(qs.total_queued, 1);
     }
 
     #[test]
-    fn respects_max_batch_fifo() {
+    fn respects_max_batch_fifo_and_reuses_the_buffer() {
         let mut qs = QueueSet::new(1, 16);
         for i in 0..10 {
             qs.try_push(A, pend(i)).unwrap();
         }
-        let b = qs.take_batch(None, 4, Instant::now()).unwrap();
-        assert_eq!(b.items.len(), 4);
-        assert_eq!(b.items[0].token, 0);
-        assert_eq!(b.items[3].token, 3);
+        let mut out = Vec::new();
+        qs.take_batch_into(None, 4, Instant::now(), &mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].token, 0);
+        assert_eq!(out[3].token, 3);
         assert_eq!(qs.queued_for(A), 6);
+        // The same buffer serves the next batch: cleared, not leaked.
+        qs.take_batch_into(None, 4, Instant::now(), &mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].token, 4);
     }
 
     #[test]
     fn empty_returns_none() {
         let mut qs: QueueSet<u32> = QueueSet::new(2, 16);
-        assert!(qs.take_batch(None, 8, Instant::now()).is_none());
+        assert!(take(&mut qs, None, 8).is_none());
     }
 
     #[test]
@@ -237,7 +233,7 @@ mod tests {
         // Other queues still admit (the bound is per kernel).
         qs.try_push(B, pend(4)).unwrap();
         // Draining a batch frees capacity again.
-        qs.take_batch(Some(A), 1, Instant::now()).unwrap();
+        take(&mut qs, Some(A), 1).unwrap();
         qs.try_push(A, pend(5)).unwrap();
         assert_eq!(qs.queued_for(A), 2);
     }
@@ -248,37 +244,38 @@ mod tests {
         let old = Instant::now() - std::time::Duration::from_millis(500);
         qs.try_push(
             A, // starved
-            Pending {
-                inputs: vec![],
+            Queued {
                 enqueued: old,
                 token: 0u32,
             },
-        ).unwrap();
+        )
+        .unwrap();
         for i in 0..3 {
             qs.try_push(B, pend(i)).unwrap(); // busy
         }
         // 0.1/ms * 500ms = 50 > 3: the old queue wins.
-        let b = qs.take_batch(None, 8, Instant::now()).unwrap();
-        assert_eq!(b.kernel, A);
+        let (kernel, _) = take(&mut qs, None, 8).unwrap();
+        assert_eq!(kernel, A);
     }
 
     #[test]
-    fn drain_all_empties_and_releases_buffers() {
+    fn high_water_burst_drains_through_take_batch_into() {
+        // The shutdown path drains by repeated take_batch_into (the
+        // workers' loop), not a dedicated drain call — a burst must
+        // come back out completely through the same door.
         let mut qs = QueueSet::new(2, 1024);
         for i in 0..512 {
             qs.try_push(A, pend(i)).unwrap();
         }
         qs.try_push(B, pend(999)).unwrap();
-        assert!(qs.resident_capacity() >= 512);
-        let batches = qs.drain_all();
-        assert_eq!(batches.len(), 2);
-        assert_eq!(batches[0].items.len(), 512);
+        let mut out = Vec::new();
+        let mut drained = 0;
+        while let Some(_k) = qs.take_batch_into(None, 64, Instant::now(), &mut out) {
+            drained += out.len();
+        }
+        assert_eq!(drained, 513);
         assert!(qs.is_empty());
-        // The pruning fix: capacity is gone, not just the contents
-        // (fresh VecDeques: zero on modern std, a word or two before
-        // the 1.66 ring-buffer rewrite).
-        assert!(qs.resident_capacity() < 16, "{}", qs.resident_capacity());
-        // The set stays usable after a drain.
+        // The set stays usable afterwards.
         qs.try_push(B, pend(1)).unwrap();
         assert_eq!(qs.queued_for(B), 1);
     }

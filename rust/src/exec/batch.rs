@@ -76,6 +76,29 @@ impl FlatBatch {
         self.data.reserve(self.arity * rows);
     }
 
+    /// Shape the batch to exactly `rows` zero-filled packets, so rows
+    /// can be written in place (and out of order) with
+    /// [`Self::row_mut`]. Keeps the allocation when shrinking — the
+    /// completion slab's reply buffers stay warm across generations.
+    pub fn resize_rows(&mut self, rows: usize) {
+        self.data.resize(self.arity * rows, 0);
+        self.rows = rows;
+    }
+
+    /// One packet as a mutable slice (in-place reply writes).
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        let start = i * self.arity;
+        &mut self.data[start..start + self.arity]
+    }
+
+    /// Append every packet of `other` in one contiguous copy. Panics
+    /// on arity mismatch — same caller-bug contract as [`Self::push`].
+    pub fn extend_from_batch(&mut self, other: &FlatBatch) {
+        assert_eq!(other.arity, self.arity, "FlatBatch batch arity");
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
     /// Append one packet. Panics on arity mismatch — shape errors are
     /// caught at ingress ([`super::validate_batch`] / `submit`), so a
     /// mismatch here is a caller bug, not a request error.
@@ -207,6 +230,29 @@ mod tests {
     fn arity_mismatch_panics() {
         let mut b = FlatBatch::new(3);
         b.push(&[1, 2]);
+    }
+
+    #[test]
+    fn resize_rows_and_row_mut_write_in_place() {
+        let mut b = FlatBatch::new(2);
+        b.resize_rows(3);
+        assert_eq!(b.n_rows(), 3);
+        assert_eq!(b.data(), &[0; 6]);
+        b.row_mut(2).copy_from_slice(&[5, 6]);
+        b.row_mut(0).copy_from_slice(&[1, 2]);
+        assert_eq!(b.to_rows(), vec![vec![1, 2], vec![0, 0], vec![5, 6]]);
+        // Shrinking keeps the shape well-defined.
+        b.resize_rows(1);
+        assert_eq!(b.to_rows(), vec![vec![1, 2]]);
+    }
+
+    #[test]
+    fn extend_from_batch_is_one_copy() {
+        let mut a = FlatBatch::from_rows(2, &[vec![1, 2]]);
+        let b = FlatBatch::from_rows(2, &[vec![3, 4], vec![5, 6]]);
+        a.extend_from_batch(&b);
+        assert_eq!(a.n_rows(), 3);
+        assert_eq!(a.data(), &[1, 2, 3, 4, 5, 6]);
     }
 
     #[test]

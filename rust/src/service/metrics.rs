@@ -1,14 +1,19 @@
 //! Typed, serializable serving metrics.
 //!
 //! [`MetricsSnapshot`] is the client-facing view of the engine's raw
-//! counters ([`crate::coordinator::metrics::Metrics`]): percentiles
-//! are computed once at snapshot time, the whole thing is plain data
-//! (`Clone + PartialEq`), serializes to JSON via [`crate::util::json`]
-//! (`tmfu serve --metrics-json`, CI assertions), and renders the
-//! human-readable report the CLI prints. It replaces the old
-//! string-report API — tooling asserts on fields, not on scraped text.
+//! counters ([`crate::coordinator::metrics::Metrics`]): the engine
+//! hands over a detached [`RawMetrics`] copy (sample buffers cloned
+//! under a short lock), and *this* module does the expensive part —
+//! sorting the latency samples for percentiles — on the caller's
+//! thread, outside every engine lock, so a metrics poll (in-process
+//! or `GetMetrics` over the wire) can never stall workers mid-batch.
+//! The snapshot is plain data (`Clone + PartialEq`), serializes to
+//! JSON via [`crate::util::json`] (`tmfu serve --metrics-json`, CI
+//! assertions), and renders the human-readable report the CLI prints.
+//! It replaces the old string-report API — tooling asserts on fields,
+//! not on scraped text.
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::RawMetrics;
 use crate::util::json::{self, Json};
 
 pub use crate::util::stats::LatencySummary;
@@ -58,37 +63,49 @@ pub struct MetricsSnapshot {
     pub latency_us: Option<LatencySummary>,
     /// Time spent queued before execution, if any completed.
     pub queue_wait_us: Option<LatencySummary>,
-    /// Completed requests per kernel, name-sorted.
+    /// Completed requests per kernel, name-sorted (kernels with no
+    /// traffic are omitted, as before the dense-counter refactor).
     pub per_kernel: Vec<(String, u64)>,
 }
 
 impl MetricsSnapshot {
-    /// Build a snapshot from the engine's raw counters (called under
-    /// the metrics lock by `OverlayService::metrics`).
+    /// Build a snapshot from a detached raw copy. `names` maps dense
+    /// [`KernelId`](crate::exec::KernelId) indices back to kernel
+    /// names (the engine counts per id; only this boundary speaks
+    /// strings). Percentile sorting happens here — on the raw copy,
+    /// never under an engine lock.
     pub(crate) fn collect(
-        m: &mut Metrics,
+        mut raw: RawMetrics,
+        names: &[&str],
         backend: &str,
         workers: usize,
         queue_depth: usize,
     ) -> MetricsSnapshot {
-        let wall_s = m.wall.as_secs_f64().max(1e-9);
+        let wall_s = raw.wall.as_secs_f64().max(1e-9);
+        let mut per_kernel: Vec<(String, u64)> = names
+            .iter()
+            .zip(&raw.per_kernel)
+            .filter(|(_, &count)| count > 0)
+            .map(|(name, &count)| (name.to_string(), count))
+            .collect();
+        per_kernel.sort_by(|a, b| a.0.cmp(&b.0));
         MetricsSnapshot {
             backend: backend.to_string(),
             workers,
             queue_depth,
-            completed: m.completed,
-            rejected: m.rejected,
-            failed: m.failed,
-            batches: m.batches,
-            mean_batch_size: m.mean_batch_size(),
-            context_switches: m.context_switches,
-            fabric_busy_us: m.fabric_busy_us,
-            fabric_switch_us: m.fabric_switch_us,
+            completed: raw.completed,
+            rejected: raw.rejected,
+            failed: raw.failed,
+            batches: raw.batches,
+            mean_batch_size: raw.mean_batch_size(),
+            context_switches: raw.context_switches,
+            fabric_busy_us: raw.fabric_busy_us,
+            fabric_switch_us: raw.fabric_switch_us,
             wall_s,
-            requests_per_s: m.completed as f64 / wall_s,
-            latency_us: m.latency_us.summarize(),
-            queue_wait_us: m.queue_wait_us.summarize(),
-            per_kernel: m.per_kernel.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            requests_per_s: raw.completed as f64 / wall_s,
+            latency_us: raw.latency_us.summarize(),
+            queue_wait_us: raw.queue_wait_us.summarize(),
+            per_kernel,
         }
     }
 
@@ -188,25 +205,44 @@ impl MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::metrics::{BatchTiming, Metrics};
+    use crate::exec::KernelId;
     use std::time::Duration;
 
-    fn sample_metrics() -> Metrics {
-        let mut m = Metrics::default();
-        m.wall = Duration::from_millis(100);
-        m.record_batch("gradient", 8, true, 0.2, 3.0);
-        m.record_batch("poly6", 4, true, 0.3, 5.0);
+    const NAMES: [&str; 2] = ["gradient", "poly6"];
+
+    fn sample_raw() -> RawMetrics {
+        let m = Metrics::new(2);
+        m.record_batch(
+            KernelId(0),
+            8,
+            BatchTiming {
+                switched: true,
+                switch_us: 0.2,
+                exec_us_sim: 3.0,
+            },
+            std::iter::empty(),
+        );
+        m.record_batch(
+            KernelId(1),
+            4,
+            BatchTiming {
+                switched: true,
+                switch_us: 0.3,
+                exec_us_sim: 5.0,
+            },
+            [120.0, 80.0].into_iter(),
+        );
         m.record_rejected(2);
         m.record_failed(1);
-        m.latency_us.push(120.0);
-        m.latency_us.push(80.0);
-        m.queue_wait_us.push(40.0);
-        m
+        let mut raw = m.raw_snapshot();
+        raw.wall = Duration::from_millis(100);
+        raw
     }
 
     #[test]
     fn collects_typed_fields() {
-        let mut m = sample_metrics();
-        let snap = MetricsSnapshot::collect(&mut m, "sim", 2, 64);
+        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, "sim", 2, 64);
         assert_eq!(snap.backend, "sim");
         assert_eq!(snap.workers, 2);
         assert_eq!(snap.queue_depth, 64);
@@ -230,12 +266,14 @@ mod tests {
 
     #[test]
     fn empty_service_snapshot_is_well_formed() {
-        let mut m = Metrics::default();
-        let snap = MetricsSnapshot::collect(&mut m, "turbo", 1, 16);
+        let raw = Metrics::new(2).raw_snapshot();
+        let snap = MetricsSnapshot::collect(raw, &NAMES, "turbo", 1, 16);
         assert_eq!(snap.completed, 0);
         assert_eq!(snap.latency_us, None);
         assert_eq!(snap.queue_wait_us, None);
         assert_eq!(snap.failed, 0);
+        // Idle kernels are omitted, not rendered as zeros.
+        assert!(snap.per_kernel.is_empty());
         let s = snap.render();
         assert!(s.contains("requests completed:   0"));
         // Rejection/failure lines only appear when they happened.
@@ -245,8 +283,7 @@ mod tests {
 
     #[test]
     fn renders_report_lines() {
-        let mut m = sample_metrics();
-        let snap = MetricsSnapshot::collect(&mut m, "sim", 2, 64);
+        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, "sim", 2, 64);
         let s = snap.render();
         assert!(s.contains("requests completed:   12"));
         assert!(s.contains("admission rejected:   2"));
@@ -258,8 +295,7 @@ mod tests {
 
     #[test]
     fn json_round_trips_through_the_parser() {
-        let mut m = sample_metrics();
-        let snap = MetricsSnapshot::collect(&mut m, "sim", 2, 64);
+        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, "sim", 2, 64);
         let j = snap.to_json();
         let parsed = json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed, j);
@@ -270,8 +306,8 @@ mod tests {
         assert_eq!(parsed.get("per_kernel").get("gradient").as_i64(), Some(8));
         assert_eq!(parsed.get("latency_us").get("n").as_i64(), Some(2));
         // Empty distributions serialize as null, not a bogus summary.
-        let mut empty = Metrics::default();
-        let j = MetricsSnapshot::collect(&mut empty, "ref", 1, 8).to_json();
+        let empty = Metrics::new(2).raw_snapshot();
+        let j = MetricsSnapshot::collect(empty, &NAMES, "ref", 1, 8).to_json();
         assert_eq!(*j.get("latency_us"), Json::Null);
     }
 }

@@ -6,7 +6,7 @@
 //!                                   │                          │
 //!                                   ▼                          ▼
 //!                               Engine (crate-private workers, bounded
-//!                               queues, metrics)  ──▶  exec::Backend
+//!                               queues, completion slab)  ──▶  exec::Backend
 //! ```
 //!
 //! * [`OverlayService::builder`] configures the substrate (backend
@@ -18,8 +18,15 @@
 //!   service value itself (it holds the engine state by `Arc`), so a
 //!   client session never re-resolves strings per call;
 //! * [`KernelHandle::call`] / [`KernelHandle::call_batch`] are the
-//!   blocking entry points; [`KernelHandle::submit`] is non-blocking
-//!   and returns a [`Pending`] reply with poll/wait/deadline support;
+//!   blocking entry points; [`KernelHandle::submit`] /
+//!   [`KernelHandle::submit_batch`] are non-blocking and return a
+//!   [`Pending`] / [`PendingBatch`] reply with poll/wait/deadline
+//!   support;
+//! * replies are **completion-slab tickets**, not channels
+//!   (DESIGN.md §10): a steady-state `submit` → [`Pending::wait_into`]
+//!   round trip performs *zero* heap allocations (audited by bench
+//!   §B6), and a whole `call_batch` costs one slot reservation, with
+//!   reply rows written in place — never a channel per row;
 //! * every failure is a typed [`ServiceError`]; backpressure is
 //!   explicit — bounded per-kernel queues make an overloaded service
 //!   answer [`ServiceError::Rejected`] instead of growing without
@@ -57,12 +64,12 @@ mod metrics;
 pub use error::ServiceError;
 pub use metrics::{LatencySummary, MetricsSnapshot};
 
-use crate::coordinator::{Engine, EngineConfig, Reply, Shared, SubmitRejection};
+use crate::coordinator::completion::{Ticket, WakeTarget};
+use crate::coordinator::{Engine, EngineConfig, Shared, SubmitRejection};
 use crate::dfg::Dfg;
 use crate::exec::{BackendKind, CompiledKernel, FlatBatch, KernelId, KernelRegistry};
 use std::fmt;
 use std::path::PathBuf;
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -188,8 +195,9 @@ impl ServiceBuilder {
 // ---------------------------------------------------------------------
 
 /// A running overlay serving instance: compiled kernels, fabric
-/// workers, bounded queues. Clients interact through [`KernelHandle`]
-/// sessions created with [`OverlayService::kernel`].
+/// workers, bounded queues, the shared completion slab. Clients
+/// interact through [`KernelHandle`] sessions created with
+/// [`OverlayService::kernel`].
 pub struct OverlayService {
     engine: Engine,
 }
@@ -243,20 +251,28 @@ impl OverlayService {
         self.engine.registry()
     }
 
-    /// Requests completed so far.
+    /// Requests completed so far (lock-free — an atomic load, safe to
+    /// poll from a monitoring thread at any rate).
     pub fn completed(&self) -> u64 {
         self.engine.completed()
     }
 
     /// A typed point-in-time metrics snapshot (render it with
     /// [`MetricsSnapshot::render`], serialize with
-    /// [`MetricsSnapshot::to_json`]).
+    /// [`MetricsSnapshot::to_json`]). The raw sample buffers are
+    /// copied out under a short engine lock; the percentile
+    /// sorting happens here, on the caller's thread — a metrics poll
+    /// (in-process or `GetMetrics` over the wire) can never stall the
+    /// workers.
     pub fn metrics(&self) -> MetricsSnapshot {
-        let backend = self.engine.backend().name();
-        let workers = self.engine.workers();
-        let depth = self.engine.queue_depth();
-        self.engine
-            .with_metrics(|m| MetricsSnapshot::collect(m, backend, workers, depth))
+        let raw = self.engine.raw_metrics();
+        MetricsSnapshot::collect(
+            raw,
+            &self.engine.registry().names(),
+            self.engine.backend().name(),
+            self.engine.workers(),
+            self.engine.queue_depth(),
+        )
     }
 
     /// Graceful shutdown: stop admitting, **drain** every queue (all
@@ -345,16 +361,39 @@ impl KernelHandle {
     }
 
     /// Non-blocking submit: validates shape, passes admission control,
-    /// and returns a [`Pending`] reply.
+    /// reserves one completion-slab slot, and returns its [`Pending`]
+    /// ticket. Zero heap allocations in steady state.
     pub fn submit(&self, inputs: &[i32]) -> Result<Pending, ServiceError> {
+        self.submit_inner(inputs, None)
+    }
+
+    /// [`Self::submit`] with a completion doorbell: `waker` is rung
+    /// with `tag` the moment the reply is ready. The wire server's
+    /// reactor uses this to wait on thousands of in-flight calls
+    /// without a thread (or a blocked `wait`) per call.
+    pub(crate) fn submit_tagged(
+        &self,
+        inputs: &[i32],
+        waker: WakeTarget,
+    ) -> Result<Pending, ServiceError> {
+        self.submit_inner(inputs, Some(waker))
+    }
+
+    fn submit_inner(
+        &self,
+        inputs: &[i32],
+        waker: Option<WakeTarget>,
+    ) -> Result<Pending, ServiceError> {
         self.check_arity(inputs.len())?;
-        let rx = self
+        let ticket = self
             .shared
-            .submit(self.id, inputs.to_vec())
+            .submit(self.id, inputs, self.kernel.n_outputs, waker)
             .map_err(|r| self.rejection(r))?;
         Ok(Pending {
-            rx,
+            shared: Arc::clone(&self.shared),
+            ticket,
             kernel: Arc::clone(&self.kernel),
+            done: false,
         })
     }
 
@@ -363,31 +402,70 @@ impl KernelHandle {
         self.submit(inputs)?.wait()
     }
 
-    /// Blocking batch call: the whole batch is admitted atomically
-    /// (all rows or [`ServiceError::Rejected`]), executed
-    /// kernel-affine, and the replies are reassembled in row order.
-    pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
+    /// Blocking call writing the reply row into a caller-owned buffer
+    /// (cleared first). With a reused `out`, a steady-state call
+    /// performs zero heap allocations end to end.
+    pub fn call_into(&self, inputs: &[i32], out: &mut Vec<i32>) -> Result<(), ServiceError> {
+        self.submit(inputs)?.wait_into(out)
+    }
+
+    /// Non-blocking batch submit: the whole batch is admitted
+    /// atomically (all rows or [`ServiceError::Rejected`]) and costs
+    /// **one** slab reservation regardless of row count. Reply rows
+    /// are written in place by the workers, possibly out of order and
+    /// by different workers, and come back assembled in row order.
+    pub fn submit_batch(&self, batch: &FlatBatch) -> Result<PendingBatch, ServiceError> {
+        self.submit_batch_inner(batch, None)
+    }
+
+    /// [`Self::submit_batch`] with a completion doorbell (see
+    /// [`Self::submit_tagged`]).
+    pub(crate) fn submit_batch_tagged(
+        &self,
+        batch: &FlatBatch,
+        waker: WakeTarget,
+    ) -> Result<PendingBatch, ServiceError> {
+        self.submit_batch_inner(batch, Some(waker))
+    }
+
+    fn submit_batch_inner(
+        &self,
+        batch: &FlatBatch,
+        waker: Option<WakeTarget>,
+    ) -> Result<PendingBatch, ServiceError> {
         if batch.is_empty() {
             return Err(ServiceError::EmptyBatch {
                 kernel: self.kernel.name.clone(),
             });
         }
         self.check_arity(batch.arity())?;
-        let rxs = self
+        let ticket = self
             .shared
-            .submit_batch(self.id, batch)
+            .submit_batch(self.id, batch, self.kernel.n_outputs, waker)
             .map_err(|r| self.rejection(r))?;
-        let mut out = FlatBatch::with_capacity(self.kernel.n_outputs, batch.n_rows());
-        for rx in rxs {
-            let row = rx
-                .recv()
-                .map_err(|_| ServiceError::Disconnected {
-                    kernel: self.kernel.name.clone(),
-                })?
-                .map_err(ServiceError::from)?;
-            out.push(&row);
-        }
-        Ok(out)
+        Ok(PendingBatch {
+            shared: Arc::clone(&self.shared),
+            ticket,
+            kernel: Arc::clone(&self.kernel),
+            rows: batch.n_rows(),
+            done: false,
+        })
+    }
+
+    /// Blocking batch call: [`Self::submit_batch`] + wait.
+    pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
+        self.submit_batch(batch)?.wait()
+    }
+
+    /// Blocking batch call writing the reply rows into a caller-owned
+    /// batch buffer (reshaped in place) — the results land straight in
+    /// a buffer the caller can reuse across calls.
+    pub fn call_batch_into(
+        &self,
+        batch: &FlatBatch,
+        out: &mut FlatBatch,
+    ) -> Result<(), ServiceError> {
+        self.submit_batch(batch)?.wait_into(out)
     }
 }
 
@@ -396,12 +474,17 @@ impl KernelHandle {
 // ---------------------------------------------------------------------
 
 /// A future-like reply to a [`KernelHandle::submit`]: poll it, block
-/// on it, or bound the wait with a deadline. One-shot — after a result
-/// has been produced, further waits report
+/// on it, or bound the wait with a deadline. It is a thin
+/// `{slot, generation}` ticket into the engine's completion slab —
+/// not a channel — so it is `Copy`-cheap to create and free to drop
+/// (an uncollected reply's slot recycles automatically). One-shot:
+/// after a result has been produced, further waits report
 /// [`ServiceError::Disconnected`].
 pub struct Pending {
-    rx: mpsc::Receiver<Reply>,
+    shared: Arc<Shared>,
+    ticket: Ticket,
     kernel: Arc<CompiledKernel>,
+    done: bool,
 }
 
 impl fmt::Debug for Pending {
@@ -416,7 +499,7 @@ impl Pending {
         &self.kernel.name
     }
 
-    /// The one place the "worker vanished" channel state is mapped to
+    /// The one place the "result already taken" state is mapped to
     /// its typed error — every receive path below shares it.
     fn disconnected(&self) -> ServiceError {
         ServiceError::Disconnected {
@@ -426,31 +509,65 @@ impl Pending {
 
     /// Non-blocking check: `Some(result)` once the reply has arrived.
     pub fn poll(&mut self) -> Option<Result<Vec<i32>, ServiceError>> {
-        match self.rx.try_recv() {
-            Ok(reply) => Some(reply.map_err(ServiceError::from)),
-            Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => Some(Err(self.disconnected())),
+        let mut out = Vec::new();
+        self.poll_into(&mut out).map(|r| r.map(|()| out))
+    }
+
+    /// [`Self::poll`] into a caller-owned buffer (cleared on success) —
+    /// the allocation-free variant.
+    pub fn poll_into(&mut self, out: &mut Vec<i32>) -> Option<Result<(), ServiceError>> {
+        if self.done {
+            return Some(Err(self.disconnected()));
         }
+        let r = self.shared.slab.try_take_row(self.ticket, out)?;
+        self.done = true;
+        Some(r.map_err(ServiceError::from))
     }
 
     /// Block until the reply arrives.
-    pub fn wait(self) -> Result<Vec<i32>, ServiceError> {
-        match self.rx.recv() {
-            Ok(reply) => reply.map_err(ServiceError::from),
-            Err(_) => Err(self.disconnected()),
+    pub fn wait(mut self) -> Result<Vec<i32>, ServiceError> {
+        let mut out = Vec::new();
+        self.wait_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Block until the reply arrives, writing the row into a
+    /// caller-owned buffer (cleared first). With a reused `out`, a
+    /// steady-state submit → wait round trip performs **zero** heap
+    /// allocations (audited by bench §B6).
+    pub fn wait_into(&mut self, out: &mut Vec<i32>) -> Result<(), ServiceError> {
+        if self.done {
+            return Err(self.disconnected());
         }
+        let r = self
+            .shared
+            .slab
+            .wait_row(self.ticket, None, out)
+            .expect("unbounded wait cannot time out");
+        self.done = true;
+        r.map_err(ServiceError::from)
     }
 
     /// Block at most `timeout`; [`ServiceError::DeadlineExceeded`] if
     /// the reply has not arrived by then. The request itself stays in
     /// flight — poll or wait again to pick the reply up later.
     pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Vec<i32>, ServiceError> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(reply) => reply.map_err(ServiceError::from),
-            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServiceError::DeadlineExceeded {
+        if self.done {
+            return Err(self.disconnected());
+        }
+        let mut out = Vec::new();
+        // An unrepresentable deadline (absurdly long timeout) waits
+        // unbounded instead of panicking on Instant overflow.
+        let deadline = Instant::now().checked_add(timeout);
+        match self.shared.slab.wait_row(self.ticket, deadline, &mut out) {
+            Some(r) => {
+                self.done = true;
+                r.map_err(ServiceError::from)?;
+                Ok(out)
+            }
+            None => Err(ServiceError::DeadlineExceeded {
                 kernel: self.kernel.name.clone(),
             }),
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(self.disconnected()),
         }
     }
 
@@ -458,6 +575,120 @@ impl Pending {
     /// [`Self::wait_timeout`] — one timing implementation, not two).
     pub fn wait_deadline(&mut self, deadline: Instant) -> Result<Vec<i32>, ServiceError> {
         self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
+    }
+}
+
+impl Drop for Pending {
+    fn drop(&mut self) {
+        // An uncollected reply must not leak its slot: ready slots
+        // free now, in-flight ones when their worker finishes.
+        if !self.done {
+            self.shared.slab.abandon(self.ticket);
+        }
+    }
+}
+
+/// A future-like reply to a [`KernelHandle::submit_batch`]: the whole
+/// batch shares one completion-slab slot (one reservation, one
+/// in-place reply buffer), becomes ready when its last row completes,
+/// and is collected as a row-ordered [`FlatBatch`]. Same one-shot
+/// contract as [`Pending`].
+pub struct PendingBatch {
+    shared: Arc<Shared>,
+    ticket: Ticket,
+    kernel: Arc<CompiledKernel>,
+    rows: usize,
+    done: bool,
+}
+
+impl fmt::Debug for PendingBatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PendingBatch({} x {})", self.kernel.name, self.rows)
+    }
+}
+
+impl PendingBatch {
+    /// The kernel this reply belongs to.
+    pub fn kernel_name(&self) -> &str {
+        &self.kernel.name
+    }
+
+    /// Rows submitted (and rows the reply will carry).
+    pub fn n_rows(&self) -> usize {
+        self.rows
+    }
+
+    fn disconnected(&self) -> ServiceError {
+        ServiceError::Disconnected {
+            kernel: self.kernel.name.clone(),
+        }
+    }
+
+    /// Non-blocking check: `Some(rows)` once every row has completed.
+    pub fn poll(&mut self) -> Option<Result<FlatBatch, ServiceError>> {
+        let mut out = FlatBatch::default();
+        self.poll_into(&mut out).map(|r| r.map(|()| out))
+    }
+
+    /// [`Self::poll`] into a caller-owned batch buffer.
+    pub fn poll_into(&mut self, out: &mut FlatBatch) -> Option<Result<(), ServiceError>> {
+        if self.done {
+            return Some(Err(self.disconnected()));
+        }
+        let r = self.shared.slab.try_take_batch(self.ticket, out)?;
+        self.done = true;
+        Some(r.map_err(ServiceError::from))
+    }
+
+    /// Block until every row has completed.
+    pub fn wait(mut self) -> Result<FlatBatch, ServiceError> {
+        let mut out = FlatBatch::default();
+        self.wait_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Block until every row has completed, writing the rows into a
+    /// caller-owned batch buffer (reshaped in place).
+    pub fn wait_into(&mut self, out: &mut FlatBatch) -> Result<(), ServiceError> {
+        if self.done {
+            return Err(self.disconnected());
+        }
+        let r = self
+            .shared
+            .slab
+            .wait_batch(self.ticket, None, out)
+            .expect("unbounded wait cannot time out");
+        self.done = true;
+        r.map_err(ServiceError::from)
+    }
+
+    /// Block at most `timeout`; [`ServiceError::DeadlineExceeded`] if
+    /// the rows have not all completed by then. The batch stays in
+    /// flight — poll or wait again later.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<FlatBatch, ServiceError> {
+        if self.done {
+            return Err(self.disconnected());
+        }
+        let mut out = FlatBatch::default();
+        let deadline = Instant::now().checked_add(timeout);
+        match self.shared.slab.wait_batch(self.ticket, deadline, &mut out) {
+            Some(r) => {
+                self.done = true;
+                r.map_err(ServiceError::from)?;
+                Ok(out)
+            }
+            None => Err(ServiceError::DeadlineExceeded {
+                kernel: self.kernel.name.clone(),
+            }),
+        }
+    }
+}
+
+impl Drop for PendingBatch {
+    fn drop(&mut self) {
+        if !self.done {
+            self.shared.slab.abandon(self.ticket);
+        }
     }
 }
 
@@ -516,6 +747,18 @@ mod tests {
         assert_eq!(h.arity(), 5);
         assert_eq!(h.n_outputs(), 1);
         assert_eq!(h.call(&[3, 5, 2, 7, 1]).unwrap(), vec![1 + 9 + 25 + 1]);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn call_into_reuses_the_caller_buffer() {
+        let svc = service(BackendKind::Turbo, 1, 4);
+        let h = svc.kernel("gradient").unwrap();
+        let mut out = Vec::new();
+        for i in 0..8 {
+            h.call_into(&[3, 5, 2, 7, i], &mut out).unwrap();
+            assert_eq!(out, vec![1 + 9 + 25 + (2 - i) * (2 - i)]);
+        }
         svc.shutdown().unwrap();
     }
 
@@ -594,10 +837,90 @@ mod tests {
     }
 
     #[test]
+    fn submit_batch_is_nonblocking_and_oracle_exact() {
+        let svc = service(BackendKind::Turbo, 2, 8);
+        let h = svc.kernel("gradient").unwrap();
+        let mut rng = Rng::new(123);
+        let mut batch = FlatBatch::new(h.arity());
+        for _ in 0..37 {
+            batch.push_iter((0..h.arity()).map(|_| rng.range_i64(-1000, 1000) as i32));
+        }
+        let mut p = h.submit_batch(&batch).unwrap();
+        assert_eq!(p.n_rows(), 37);
+        assert_eq!(p.kernel_name(), "gradient");
+        // Poll to completion (exercises the try_take path), then
+        // verify row order against the oracle.
+        let out = loop {
+            if let Some(r) = p.poll() {
+                break r.unwrap();
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(out.n_rows(), 37);
+        for (i, row) in batch.iter().enumerate() {
+            assert_eq!(out.row(i), &eval(&h.compiled().dfg, row)[..], "row {i}");
+        }
+        // One-shot: the result was taken; the batch reports it.
+        assert!(matches!(
+            p.poll(),
+            Some(Err(ServiceError::Disconnected { .. }))
+        ));
+        // call_batch_into lands the rows in a reused caller buffer.
+        let mut out2 = FlatBatch::default();
+        h.call_batch_into(&batch, &mut out2).unwrap();
+        assert_eq!(out2, out);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pending_batch_wait_timeout_leaves_the_batch_in_flight() {
+        let svc = service(BackendKind::Sim, 1, 4);
+        let h = svc.kernel("poly6").unwrap();
+        let rows: Vec<Vec<i32>> = (0..16).map(|i| vec![i, i + 1, i + 2]).collect();
+        let batch = FlatBatch::from_rows(3, &rows);
+        let mut p = h.submit_batch(&batch).unwrap();
+        // A zero timeout may or may not beat the workers; both
+        // outcomes are legal, and a timeout must not consume the
+        // reply.
+        match p.wait_timeout(Duration::from_micros(0)) {
+            Ok(out) => assert_eq!(out.n_rows(), 16),
+            Err(ServiceError::DeadlineExceeded { .. }) => {
+                let out = p.wait_timeout(Duration::from_secs(30)).unwrap();
+                assert_eq!(out.n_rows(), 16);
+            }
+            Err(other) => panic!("unexpected error: {other}"),
+        }
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dropped_pendings_do_not_leak_or_wedge_the_service() {
+        let svc = service(BackendKind::Turbo, 2, 8);
+        let h = svc.kernel("gradient").unwrap();
+        // Drop before completion, drop after completion, drop a batch:
+        // the slots must recycle either way and the service stays
+        // healthy.
+        for i in 0..32 {
+            let p = h.submit(&[1, 2, 3, 4, i]).unwrap();
+            drop(p);
+        }
+        let p = h.submit(&[1, 2, 3, 4, 5]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        drop(p);
+        let batch = FlatBatch::from_rows(5, &[vec![0; 5], vec![1; 5]]);
+        drop(h.submit_batch(&batch).unwrap());
+        // The service still serves correctly afterwards.
+        assert_eq!(h.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
     fn handles_are_clone_send_sessions() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<KernelHandle>();
         assert_send_sync::<OverlayService>();
+        assert_send_sync::<Pending>();
+        assert_send_sync::<PendingBatch>();
 
         let svc = service(BackendKind::Turbo, 2, 16);
         let h = svc.kernel("chebyshev").unwrap();
@@ -679,6 +1002,11 @@ mod tests {
             std::thread::yield_now();
         };
         assert_eq!(got, vec![36]);
+        // One-shot contract: a second poll reports the taken state.
+        assert!(matches!(
+            p.poll(),
+            Some(Err(ServiceError::Disconnected { .. }))
+        ));
         svc.shutdown().unwrap();
     }
 

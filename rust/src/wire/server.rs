@@ -1,38 +1,50 @@
 //! Wire-protocol server: `tmfu listen` and the test harnesses drive an
 //! [`OverlayService`] from decoded frames.
 //!
-//! Thread shape (std threads; the async reactor is a ROADMAP item):
+//! Thread shape (std threads; **two per connection, regardless of
+//! in-flight calls** — the completion-slab reactor of DESIGN.md §10):
 //!
 //! * one **acceptor** thread per bound address; every accepted socket
 //!   gets its own connection thread;
-//! * each **connection** thread performs the Hello handshake, builds
-//!   one pre-resolved [`KernelHandle`] per registry kernel (so `Call`
-//!   frames index a vector — no name lookups on the request path),
-//!   then decodes frames in a loop;
-//! * `Call` / `CallBatch` submit through the service's non-blocking
-//!   ports and hand the [`Pending`](crate::service::Pending) reply to
-//!   a short-lived **waiter** thread, so one socket carries many
-//!   in-flight requests; replies are correlated by request id and may
-//!   arrive out of submission order;
-//! * a per-connection **writer** thread owns the socket's write half
-//!   and serializes every outbound frame (`KernelInfo`, `Reply`,
-//!   `Error`, `Metrics`) through one channel.
+//! * each **connection** (reader) thread performs the Hello handshake,
+//!   builds one pre-resolved [`KernelHandle`] per registry kernel (so
+//!   `Call` frames index a vector — no name lookups on the request
+//!   path), then decodes frames in a loop. `Call` / `CallBatch`
+//!   submit through the service's non-blocking ports with a
+//!   completion **doorbell** attached, so admission (and its typed
+//!   errors) happens on the reader while nobody ever blocks per call;
+//! * one **reactor** thread per connection owns the socket's write
+//!   half. It parks on the connection doorbell and wakes when the
+//!   reader queues an immediate frame (handshake, resolve, metrics,
+//!   submit errors) or when a worker completes an in-flight call —
+//!   the slab rings the doorbell with the request id, the reactor
+//!   takes the finished result straight out of the slot and writes
+//!   the Reply frame. 10k in-flight calls on one socket cost 10k slab
+//!   slots and zero extra threads. (The previous design spawned a
+//!   short-lived waiter thread per in-flight call — and only reaped
+//!   finished waiters when the *next* frame arrived, so an
+//!   idle-after-burst connection pinned every completed waiter's
+//!   stack indefinitely. Both failure modes are structurally gone.)
+//!
+//! Replies are correlated by request id and may arrive out of
+//! submission order, exactly as before.
 //!
 //! Failure containment: a malformed frame gets a typed
 //! [`WireError::Malformed`] reply and the connection is closed; a
-//! client that disconnects mid-call only makes the pending reply's
-//! channel send fail — the service, the other connections and the
-//! acceptor never notice.
+//! client that disconnects mid-call only makes the reactor's reply
+//! write fail — the in-flight slots recycle via their drop-abandon
+//! path and the service, the other connections and the acceptor never
+//! notice.
 
 use super::{read_frame, write_frame, Frame, ListenAddr, WireError, WireStream};
-use crate::exec::FlatBatch;
-use crate::service::{KernelHandle, OverlayService, ServiceError};
+use crate::coordinator::completion::Wake;
+use crate::service::{KernelHandle, OverlayService, Pending, PendingBatch, ServiceError};
 use crate::wire::{WIRE_VERSION_MAX, WIRE_VERSION_MIN};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 /// A bound, accepting wire server. Dropping the value does **not**
@@ -60,7 +72,7 @@ impl Listener {
     /// The listener itself runs nonblocking (the acceptor polls a
     /// stop flag between attempts, so shutdown never depends on a
     /// wake-up connection reaching a blocked `accept`); accepted
-    /// streams are switched back to blocking for the reader/writer
+    /// streams are switched back to blocking for the reader/reactor
     /// threads.
     fn set_nonblocking(&self) -> io::Result<()> {
         match self {
@@ -261,10 +273,94 @@ impl WireServer {
     }
 }
 
-/// Outbound half of one connection: every producer (reader loop,
-/// waiter threads) sends frames here; one writer thread owns the
-/// socket's write half.
-type Outbox = mpsc::Sender<Frame>;
+// ---------------------------------------------------------------------
+// Per-connection reactor
+// ---------------------------------------------------------------------
+
+/// One in-flight request handed from the reader to the reactor.
+enum InFlight {
+    Call(Pending),
+    Batch(PendingBatch),
+}
+
+/// State shared by a connection's reader thread, its reactor thread,
+/// and (through the [`Wake`] doorbell registered with every
+/// submission) the engine workers completing its requests.
+struct ConnShared {
+    m: Mutex<ConnState>,
+    cv: Condvar,
+}
+
+struct ConnState {
+    /// Immediate outbound frames from the reader (handshake, resolve
+    /// and metrics replies, submit-time errors). Written before any
+    /// completion replies in the same wake-up so per-connection frame
+    /// order follows the reader's decisions.
+    outbox: VecDeque<Frame>,
+    /// New in-flight registrations (request id → pending reply),
+    /// handed to the reactor, which owns the id map.
+    submitted: Vec<(u64, InFlight)>,
+    /// Request ids whose slab slot became ready (rung by workers).
+    ready: Vec<u64>,
+    /// The reader exited (peer hung up or broke protocol). The
+    /// reactor drains in-flight work, then exits.
+    reader_done: bool,
+    /// The reactor's socket write failed; everything else stops.
+    dead: bool,
+}
+
+impl ConnShared {
+    fn new() -> ConnShared {
+        ConnShared {
+            m: Mutex::new(ConnState {
+                outbox: VecDeque::new(),
+                submitted: Vec::new(),
+                ready: Vec::new(),
+                reader_done: false,
+                dead: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Reader-side: queue one immediate frame for the reactor to write.
+    fn push_frame(&self, frame: Frame) {
+        let mut st = self.m.lock().unwrap();
+        st.outbox.push_back(frame);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Reader-side: hand a pending reply to the reactor. The worker
+    /// may ring the doorbell for this id *before* the registration is
+    /// processed — the reactor's carry list absorbs that race.
+    fn register(&self, id: u64, inflight: InFlight) {
+        let mut st = self.m.lock().unwrap();
+        st.submitted.push((id, inflight));
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Reader-side: the conversation is over.
+    fn finish_reader(&self) {
+        let mut st = self.m.lock().unwrap();
+        st.reader_done = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+impl Wake for ConnShared {
+    /// Worker-side doorbell: a slab slot for this connection became
+    /// ready. Never called under a slab lock, so taking the
+    /// connection lock here is safe.
+    fn ring(&self, tag: u64) {
+        let mut st = self.m.lock().unwrap();
+        st.ready.push(tag);
+        drop(st);
+        self.cv.notify_all();
+    }
+}
 
 fn connection(service: Arc<OverlayService>, stream: WireStream) {
     let write_half = match stream.try_clone() {
@@ -275,39 +371,150 @@ fn connection(service: Arc<OverlayService>, stream: WireStream) {
         Ok(s) => s,
         Err(_) => return,
     };
-    let (tx, rx) = mpsc::channel::<Frame>();
+    let conn = Arc::new(ConnShared::new());
+    let reactor_conn = Arc::clone(&conn);
     let spawned = thread::Builder::new()
-        .name("wire-write".to_string())
-        .spawn(move || {
-            let mut w = BufWriter::new(write_half);
-            for frame in rx {
-                if write_frame(&mut w, &frame).and_then(|()| w.flush()).is_err() {
-                    // The peer is gone; unblock our reader too.
-                    if let Ok(inner) = w.get_ref().try_clone() {
-                        inner.shutdown_both();
-                    }
-                    break;
-                }
-            }
-        });
-    let Ok(writer) = spawned else {
+        .name("wire-react".to_string())
+        .spawn(move || reactor_loop(reactor_conn, write_half));
+    let Ok(reactor) = spawned else {
         // Thread exhaustion: shed the connection rather than panic.
         control.shutdown_both();
         return;
     };
 
     let mut reader = BufReader::new(stream);
-    let mut waiters: Vec<thread::JoinHandle<()>> = Vec::new();
-    serve_connection(&service, &mut reader, &tx, &mut waiters);
+    serve_connection(&service, &mut reader, &conn);
 
-    // Reply channels close once the waiters finish; the writer then
-    // drains and exits. Join order matters: waiters hold tx clones.
-    for wtr in waiters {
-        let _ = wtr.join();
-    }
-    drop(tx);
-    let _ = writer.join();
+    // In-flight replies still get written after the reader is done
+    // (the peer may have half-closed); the reactor exits once its
+    // in-flight map and the outbox are empty.
+    conn.finish_reader();
+    let _ = reactor.join();
     control.shutdown_both();
+}
+
+/// The per-connection reactor: parks on the doorbell, writes the
+/// reader's immediate frames, and drains completed in-flight replies
+/// straight out of the completion slab. One loop, zero per-call
+/// threads.
+fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream) {
+    let mut w = BufWriter::new(stream);
+    // id → pending reply. Bounded by the peer's in-flight window (and
+    // transitively by the service's queue depth).
+    let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+    // Doorbell tags that arrived before their registration (the
+    // ring-vs-register race); retried next wake-up.
+    let mut carry: Vec<u64> = Vec::new();
+    loop {
+        let (mut frames, new_inflight, rung) = {
+            let mut st = conn.m.lock().unwrap();
+            loop {
+                if st.dead {
+                    return;
+                }
+                let idle =
+                    st.outbox.is_empty() && st.submitted.is_empty() && st.ready.is_empty();
+                if !idle {
+                    break;
+                }
+                if st.reader_done && inflight.is_empty() {
+                    // Fully drained: no registration is pending (the
+                    // idle check above covers `submitted`) and no new
+                    // one can arrive, so any still-carried tag is a
+                    // duplicate-id artifact that can never resolve —
+                    // exit rather than wait for it.
+                    return;
+                }
+                st = conn.cv.wait(st).unwrap();
+            }
+            (
+                std::mem::take(&mut st.outbox),
+                std::mem::take(&mut st.submitted),
+                std::mem::take(&mut st.ready),
+            )
+        };
+        for (id, p) in new_inflight {
+            inflight.insert(id, p);
+        }
+        let mut write_err = false;
+        // Reader-ordered frames first (a reply can never overtake the
+        // handshake or its own admission error).
+        for frame in frames.drain(..) {
+            if write_frame(&mut w, &frame).is_err() {
+                write_err = true;
+                break;
+            }
+        }
+        // Completions: retry the carried tags now that registrations
+        // have landed, then the freshly rung ones.
+        let tags: Vec<u64> = carry.drain(..).chain(rung).collect();
+        for tag in tags {
+            let Some(p) = inflight.remove(&tag) else {
+                // Rung before registered: the registration's notify
+                // re-wakes us right after it lands.
+                carry.push(tag);
+                continue;
+            };
+            let frame = completed_frame(tag, p);
+            if !write_err && write_frame(&mut w, &frame).is_err() {
+                write_err = true;
+            }
+        }
+        if !write_err && w.flush().is_err() {
+            write_err = true;
+        }
+        if write_err {
+            // The peer is unreachable. Unblock our reader, mark the
+            // connection dead, and drop the in-flight map — dropping
+            // the pendings abandons their slots, which recycle the
+            // moment the workers finish.
+            if let Ok(inner) = w.get_ref().try_clone() {
+                inner.shutdown_both();
+            }
+            conn.m.lock().unwrap().dead = true;
+            return;
+        }
+    }
+}
+
+/// Turn a rung (ready) in-flight entry into its reply frame. The poll
+/// cannot block: the doorbell only rings when the slot is ready.
+fn completed_frame(id: u64, inflight: InFlight) -> Frame {
+    match inflight {
+        InFlight::Call(mut p) => match p.poll() {
+            // A reply row is exactly the kernel's output arity wide.
+            Some(Ok(row)) => Frame::Reply {
+                id,
+                batch: crate::exec::FlatBatch::from_flat(row.len(), row),
+            },
+            Some(Err(e)) => Frame::Error {
+                id,
+                err: WireError::Service(e),
+            },
+            None => rung_but_not_ready(id),
+        },
+        InFlight::Batch(mut p) => match p.poll() {
+            Some(Ok(batch)) => Frame::Reply { id, batch },
+            Some(Err(e)) => Frame::Error {
+                id,
+                err: WireError::Service(e),
+            },
+            None => rung_but_not_ready(id),
+        },
+    }
+}
+
+/// Structurally unreachable (the doorbell rings only on ready slots);
+/// kept as a typed reply so a protocol invariant bug degrades to one
+/// failed request instead of a wedged connection.
+fn rung_but_not_ready(id: u64) -> Frame {
+    Frame::Error {
+        id,
+        err: WireError::Service(ServiceError::Backend {
+            backend: "wire".to_string(),
+            message: "completion doorbell rang without a ready result".to_string(),
+        }),
+    }
 }
 
 /// Decode-and-dispatch loop for one connection. Returns when the peer
@@ -315,15 +522,14 @@ fn connection(service: Arc<OverlayService>, stream: WireStream) {
 fn serve_connection(
     service: &OverlayService,
     reader: &mut BufReader<WireStream>,
-    tx: &Outbox,
-    waiters: &mut Vec<thread::JoinHandle<()>>,
+    conn: &Arc<ConnShared>,
 ) {
     // --- handshake -------------------------------------------------
     let hello = match read_frame(reader) {
         Ok(Some(f)) => f,
         Ok(None) => return,
         Err(e) => {
-            let _ = tx.send(malformed(0, &e));
+            conn.push_frame(malformed(0, &e));
             return;
         }
     };
@@ -332,7 +538,7 @@ fn serve_connection(
             let lo = min.max(WIRE_VERSION_MIN);
             let hi = max.min(WIRE_VERSION_MAX);
             if lo > hi {
-                let _ = tx.send(Frame::Error {
+                conn.push_frame(Frame::Error {
                     id,
                     err: WireError::VersionMismatch {
                         min: WIRE_VERSION_MIN,
@@ -341,14 +547,14 @@ fn serve_connection(
                 });
                 return;
             }
-            let _ = tx.send(Frame::HelloOk {
+            conn.push_frame(Frame::HelloOk {
                 id,
                 version: hi,
                 backend: service.backend().name().to_string(),
             });
         }
         other => {
-            let _ = tx.send(malformed(
+            conn.push_frame(malformed(
                 other.request_id(),
                 &format!("expected Hello, got {}", frame_name(&other)),
             ));
@@ -362,19 +568,16 @@ fn serve_connection(
 
     // --- request loop ----------------------------------------------
     loop {
-        // Reap completed waiters so a long-lived connection does not
-        // accumulate join handles.
-        waiters.retain(|h| !h.is_finished());
         let frame = match read_frame(reader) {
             Ok(Some(f)) => f,
             // Clean disconnect, or mid-frame cut: either way the
-            // conversation is over. In-flight waiters finish on their
-            // own; their sends fail harmlessly once the writer is gone.
+            // conversation is over. In-flight replies drain through
+            // the reactor on their own.
             Ok(None) => return,
             Err(e) if e.kind() == io::ErrorKind::InvalidData => {
                 // Undecodable bytes: tell the peer, then hang up (the
                 // stream is no longer frame-aligned).
-                let _ = tx.send(malformed(0, &e));
+                conn.push_frame(malformed(0, &e));
                 return;
             }
             Err(_) => return,
@@ -393,102 +596,55 @@ fn serve_connection(
                         err: WireError::Service(e),
                     },
                 };
-                let _ = tx.send(reply);
+                conn.push_frame(reply);
             }
             Frame::Call { id, kernel, inputs } => {
                 let Some(h) = handles.get(kernel as usize) else {
-                    let _ = tx.send(unknown_kernel(id, kernel));
+                    conn.push_frame(unknown_kernel(id, kernel));
                     continue;
                 };
                 // Admission (and its typed errors) happens here on the
-                // reader thread; only the reply wait is offloaded.
-                match h.submit(&inputs) {
-                    Ok(pending) => {
-                        let wtx = tx.clone();
-                        let n_outputs = h.n_outputs();
-                        match spawn_waiter(move || {
-                            let frame = match pending.wait() {
-                                Ok(row) => Frame::Reply {
-                                    id,
-                                    batch: FlatBatch::from_flat(n_outputs, row),
-                                },
-                                Err(e) => Frame::Error {
-                                    id,
-                                    err: WireError::Service(e),
-                                },
-                            };
-                            let _ = wtx.send(frame);
-                        }) {
-                            Ok(w) => waiters.push(w),
-                            Err(_) => {
-                                let _ = tx.send(overloaded(id));
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        let _ = tx.send(Frame::Error {
-                            id,
-                            err: WireError::Service(e),
-                        });
-                    }
+                // reader thread; the reply waits in the slab until the
+                // doorbell rings the reactor — no thread per call.
+                let waker: Arc<dyn Wake> = Arc::clone(conn);
+                match h.submit_tagged(&inputs, (waker, id)) {
+                    Ok(pending) => conn.register(id, InFlight::Call(pending)),
+                    Err(e) => conn.push_frame(Frame::Error {
+                        id,
+                        err: WireError::Service(e),
+                    }),
                 }
             }
             Frame::CallBatch { id, kernel, batch } => {
                 let Some(h) = handles.get(kernel as usize) else {
-                    let _ = tx.send(unknown_kernel(id, kernel));
+                    conn.push_frame(unknown_kernel(id, kernel));
                     continue;
                 };
-                // `call_batch` blocks until every row replies, so the
-                // whole call moves to a waiter; admission is still
-                // atomic inside it.
-                let wtx = tx.clone();
-                let h = h.clone();
-                match spawn_waiter(move || {
-                    let frame = match h.call_batch(&batch) {
-                        Ok(out) => Frame::Reply { id, batch: out },
-                        Err(e) => Frame::Error {
-                            id,
-                            err: WireError::Service(e),
-                        },
-                    };
-                    let _ = wtx.send(frame);
-                }) {
-                    Ok(w) => waiters.push(w),
-                    Err(_) => {
-                        let _ = tx.send(overloaded(id));
-                    }
+                // The whole batch is one slab reservation; its
+                // doorbell rings when the last row lands.
+                let waker: Arc<dyn Wake> = Arc::clone(conn);
+                match h.submit_batch_tagged(&batch, (waker, id)) {
+                    Ok(pending) => conn.register(id, InFlight::Batch(pending)),
+                    Err(e) => conn.push_frame(Frame::Error {
+                        id,
+                        err: WireError::Service(e),
+                    }),
                 }
             }
             Frame::GetMetrics { id } => {
                 let json = service.metrics().to_json().to_string_compact();
-                let _ = tx.send(Frame::Metrics { id, json });
+                conn.push_frame(Frame::Metrics { id, json });
             }
             other => {
                 // Server-to-client opcodes (or a second Hello) are a
                 // protocol breach: reply typed, then hang up.
-                let _ = tx.send(malformed(
+                conn.push_frame(malformed(
                     other.request_id(),
                     &format!("unexpected {} frame from a client", frame_name(&other)),
                 ));
                 return;
             }
         }
-    }
-}
-
-/// Spawn failure (thread exhaustion) is a per-request error, reported
-/// to the caller — never a server panic.
-fn spawn_waiter(f: impl FnOnce() + Send + 'static) -> io::Result<thread::JoinHandle<()>> {
-    thread::Builder::new().name("wire-wait".to_string()).spawn(f)
-}
-
-fn overloaded(id: u64) -> Frame {
-    Frame::Error {
-        id,
-        err: WireError::Service(ServiceError::Backend {
-            backend: "wire".to_string(),
-            message: "server cannot spawn a reply waiter (thread exhaustion)".to_string(),
-        }),
     }
 }
 

@@ -496,6 +496,105 @@ fn prop_service_equivalence() {
     service.shutdown().unwrap();
 }
 
+/// Completion-slab stress: several threads hammer one service with
+/// every client pattern at once — blocking waits, polls, deadline
+/// waits racing the workers, and `Pending`s dropped without ever
+/// being collected — while the service is shut down out from under
+/// them. Pins down the slab invariants: no lost wakeups (every wait
+/// returns), no stale-generation reads (every collected result is
+/// oracle-exact, so a recycled slot can never leak another request's
+/// reply), and the admission ledger stays consistent
+/// (`admitted == completed + failed`) even with abandoned replies.
+#[test]
+fn slab_stress_under_concurrent_shutdown() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+    use tmfu_overlay::exec::BackendKind;
+    use tmfu_overlay::service::{OverlayService, ServiceError};
+
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(BackendKind::Turbo)
+            .pipelines(3)
+            .max_batch(16)
+            .queue_depth(100_000)
+            .build()
+            .unwrap(),
+    );
+    let handle = service.kernel("gradient").unwrap();
+    let admitted = Arc::new(AtomicU64::new(0));
+    let mut threads = Vec::new();
+    for t in 0..6i32 {
+        let h = handle.clone();
+        let dfg = handle.compiled().dfg.clone();
+        let admitted = Arc::clone(&admitted);
+        threads.push(std::thread::spawn(move || {
+            for i in 0..400i32 {
+                let inputs = [t, i, 2, 7, t - i];
+                let want = eval(&dfg, &inputs);
+                let mut p = match h.submit(&inputs) {
+                    Ok(p) => p,
+                    // The main thread shuts the service down mid-run.
+                    Err(ServiceError::ShutDown) => continue,
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                };
+                admitted.fetch_add(1, Ordering::SeqCst);
+                match i % 4 {
+                    // Blocking wait: must return the oracle row.
+                    0 => assert_eq!(p.wait().unwrap(), want),
+                    // Drop without waiting: the slot must recycle via
+                    // the abandon path, whether the worker has run yet
+                    // or not.
+                    1 => drop(p),
+                    // Poll a few times, then maybe drop mid-flight.
+                    2 => {
+                        for _ in 0..3 {
+                            if let Some(r) = p.poll() {
+                                assert_eq!(r.unwrap(), want);
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                    // A deadline wait racing completion; on timeout
+                    // the request stays in flight and a later wait
+                    // must still produce the reply (drain semantics
+                    // guarantee it even after shutdown).
+                    _ => {
+                        let soon = Instant::now() + Duration::from_micros(50);
+                        match p.wait_deadline(soon) {
+                            Ok(got) => assert_eq!(got, want),
+                            Err(ServiceError::DeadlineExceeded { .. }) => {
+                                let got = p.wait_timeout(Duration::from_secs(60)).unwrap();
+                                assert_eq!(got, want);
+                            }
+                            Err(e) => panic!("unexpected wait error: {e}"),
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    // Fire shutdown while the submitters are mid-flight. Drain
+    // semantics: everything admitted before the flag still completes.
+    std::thread::sleep(Duration::from_millis(10));
+    service.shutdown().unwrap();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let snap = service.metrics();
+    assert_eq!(snap.failed, 0, "no request may fail in this workload");
+    assert_eq!(
+        snap.completed + snap.failed,
+        admitted.load(Ordering::SeqCst),
+        "admission ledger drifted: every admitted request must be \
+         completed or failed exactly once, abandoned or not"
+    );
+    // Idempotent: a second shutdown finds nothing left to do.
+    service.shutdown().unwrap();
+}
+
 /// Full-suite smoke of the CLI-facing report renderers (they are the
 /// bench backbone; must never error).
 #[test]

@@ -12,6 +12,7 @@ use tmfu_overlay::client::OverlayClient;
 use tmfu_overlay::dfg::eval;
 use tmfu_overlay::exec::{BackendKind, FlatBatch};
 use tmfu_overlay::service::{OverlayService, ServiceError};
+use tmfu_overlay::util::bench::os_thread_count;
 use tmfu_overlay::util::prng::Rng;
 use tmfu_overlay::wire::server::WireServer;
 use tmfu_overlay::wire::{read_frame, write_frame, Frame, ListenAddr, WireError};
@@ -356,6 +357,58 @@ fn unix_socket_transport_serves_and_cleans_up() {
     drop(client);
     server.shutdown();
     assert!(!path.exists(), "socket file must be removed on shutdown");
+    service.shutdown().unwrap();
+}
+
+/// The completion-slab reactor property: a connection serves any
+/// number of in-flight calls with its two fixed threads. The previous
+/// design spawned a waiter thread per in-flight call and only reaped
+/// the finished ones when the *next* frame arrived, so an
+/// idle-after-burst connection pinned completed threads' stacks
+/// indefinitely — this test pins down both halves of the fix.
+#[test]
+fn in_flight_burst_spawns_no_per_call_threads() {
+    if os_thread_count().is_none() {
+        eprintln!("skipping: /proc/self/status not available");
+        return;
+    }
+    let (service, server) = start(BackendKind::Turbo, 4096);
+    let client = connect(&server);
+    let gradient = client.kernel("gradient").unwrap();
+    // Steady state first: connection threads exist, one call served.
+    assert_eq!(gradient.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+    let before = os_thread_count().unwrap();
+
+    // Burst: hundreds of concurrent submits on the one connection.
+    let mut replies = Vec::new();
+    for i in 0..512i32 {
+        replies.push(gradient.submit(&[i, 5, 2, 7, -i]).unwrap());
+    }
+    let during = os_thread_count().unwrap();
+    for p in replies {
+        p.wait().unwrap();
+    }
+    // Other tests in this binary run concurrently and spawn their own
+    // servers, so allow generous slack — the per-call design this
+    // guards against would add *hundreds* here, not a handful.
+    assert!(
+        during <= before + 64,
+        "thread count grew with in-flight calls: {during} during the burst vs {before} before"
+    );
+
+    // Idle after the burst: nothing stays pinned waiting for a next
+    // frame to trigger reaping.
+    std::thread::sleep(Duration::from_millis(100));
+    let after = os_thread_count().unwrap();
+    assert!(
+        after <= before + 64,
+        "idle-after-burst connection holds extra threads: {after} vs {before} before"
+    );
+    // And the connection still serves.
+    assert_eq!(gradient.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    drop(client);
+    server.shutdown();
     service.shutdown().unwrap();
 }
 

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Assert the serving-perf invariants recorded in a bench_perf JSON.
+
+Usage: bench_smoke_check.py <fresh.json> [<committed-baseline.json>]
+
+Hard gates (fail the build):
+  * ``submit_allocs_per_call`` must be exactly 0 — the completion
+    slab's steady-state submit -> wait path is allocation-free, audited
+    with a thread-local allocation counter (bench_perf section B6).
+  * ``peak_threads_10k_inflight`` (when measured — Linux) must stay
+    O(workers + connections): a value scaling with the in-flight count
+    means the wire reactor regressed to thread-per-call.
+  * ``turbo_speedup_vs_ref`` must meet its recorded floor (PR 2's
+    10x acceptance gate), when both numbers are present.
+
+Soft gate:
+  * ``wire_call_overhead_us`` is compared against the committed
+    baseline JSON when that file carries a *measured* number (cargo
+    harness). Fast-mode smoke numbers are noisy, so the bound is a
+    3x margin — catching an order-of-magnitude regression (e.g. a
+    reintroduced per-call thread spawn), not jitter. When the
+    committed baseline has no measured value (authored offline), the
+    check reports and passes.
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"bench-smoke: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        fail(f"usage: {sys.argv[0]} <fresh.json> [<committed-baseline.json>]")
+    with open(sys.argv[1]) as f:
+        fresh = json.load(f)
+    meta = fresh.get("meta", {})
+
+    allocs = meta.get("submit_allocs_per_call")
+    if allocs is None:
+        fail("submit_allocs_per_call missing from the bench JSON (B6 did not run)")
+    if allocs != 0:
+        fail(f"submit_allocs_per_call = {allocs}, must be exactly 0")
+    print("bench-smoke: submit_allocs_per_call == 0 (allocation-free submit path)")
+
+    peak = meta.get("peak_threads_10k_inflight")
+    if peak is None:
+        print("bench-smoke: peak thread count not measured on this platform (skipped)")
+    elif peak >= 32:
+        fail(f"peak_threads_10k_inflight = {peak} — reactor regressed to thread-per-call")
+    else:
+        print(f"bench-smoke: {peak} peak threads with 10k calls in flight (bound 32)")
+
+    speedup = meta.get("turbo_speedup_vs_ref")
+    floor = meta.get("turbo_speedup_floor")
+    if speedup is not None and floor is not None:
+        if speedup < floor:
+            fail(f"turbo speedup {speedup:.1f}x below the {floor}x floor")
+        print(f"bench-smoke: turbo speedup {speedup:.1f}x (floor {floor}x)")
+
+    fresh_wire = meta.get("wire_call_overhead_us")
+    baseline_wire = None
+    if len(sys.argv) > 2:
+        try:
+            with open(sys.argv[2]) as f:
+                baseline_wire = json.load(f).get("meta", {}).get("wire_call_overhead_us")
+        except FileNotFoundError:
+            baseline_wire = None
+    if fresh_wire is None:
+        fail("wire_call_overhead_us missing from the bench JSON (B5 did not run)")
+    if isinstance(baseline_wire, (int, float)) and baseline_wire > 0:
+        bound = 3.0 * baseline_wire
+        if fresh_wire > bound:
+            fail(
+                f"wire_call_overhead_us = {fresh_wire:.1f}us vs committed baseline "
+                f"{baseline_wire:.1f}us (bound {bound:.1f}us) — wire per-call path regressed"
+            )
+        print(
+            f"bench-smoke: wire_call_overhead_us {fresh_wire:.1f}us vs baseline "
+            f"{baseline_wire:.1f}us (within 3x)"
+        )
+    else:
+        print(
+            f"bench-smoke: wire_call_overhead_us {fresh_wire:.1f}us recorded "
+            "(no measured committed baseline to compare against yet)"
+        )
+    print("bench-smoke: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,27 +29,29 @@ wire-smoke: build
 
 # The full gate: formatting, lints, release build, test suite, doc
 # build, wire loopback smoke, serving-perf smoke (allocation-free
-# submit path + reactor thread ceiling + wire overhead regression).
+# submit path AND worker loop + reactor thread ceiling + wire
+# overhead regression).
 verify: fmt clippy build test doc wire-smoke bench-smoke
 
 # Perf trajectory: run the serving-path benchmarks and (re)write the
 # checked-in baseline JSON (packets/s per backend per kernel, sim
-# cycles/s, turbo-vs-ref headline ratio, in-flight scaling + the
-# zero-allocation submit audit). Cargo runs bench binaries with
-# cwd = the package root (rust/), hence the ../ on the path.
+# cycles/s, SIMD-turbo-vs-ref headline ratio, in-flight scaling + the
+# zero-allocation submit AND worker-loop audits). Cargo runs bench
+# binaries with cwd = the package root (rust/), hence the ../ on the
+# path.
 bench:
-	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR5.json
+	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR6.json
 
 # Fast serving-perf gate for `make verify`/CI: run bench_perf in fast
 # mode and assert the hard invariants — submit_allocs_per_call == 0,
-# the reactor thread ceiling, the turbo floor, and (when the committed
-# baseline carries a measured number) that the wire per-call overhead
-# did not regress. bench_perf itself hard-asserts the first two; the
-# checker re-asserts from the JSON so a silent bench edit cannot
-# un-gate them.
+# worker_allocs_per_batch == 0, the reactor thread ceiling, the raised
+# turbo floor, and (when the committed baseline carries a measured
+# number) that the wire per-call overhead did not regress. bench_perf
+# itself hard-asserts the alloc audits; the checker re-asserts from
+# the JSON so a silent bench edit cannot un-gate them.
 bench-smoke: build
 	TMFU_BENCH_FAST=1 $(CARGO) bench --bench bench_perf -- --json ../BENCH_SMOKE.json
-	$(PYTHON) tools/bench_smoke_check.py BENCH_SMOKE.json BENCH_PR5.json
+	$(PYTHON) tools/bench_smoke_check.py BENCH_SMOKE.json BENCH_PR6.json
 
 # Every bench target (paper tables/figures + perf).
 bench-all:

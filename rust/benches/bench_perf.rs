@@ -17,7 +17,7 @@
 //! `-- --json <path>` the measurements (plus the headline
 //! turbo-vs-ref speedup on poly6 at batch 1024) are written as JSON —
 //! `make bench` uses this to produce the checked-in perf trajectory
-//! baseline (`BENCH_PR2.json`).
+//! baseline (`BENCH_PR6.json`).
 
 use tmfu_overlay::arch::Pipeline;
 use tmfu_overlay::bench_suite;
@@ -47,8 +47,10 @@ static ALLOC: CountingAlloc = CountingAlloc;
 const BATCH: usize = 1024;
 /// Headline kernel (the suite's largest: 44 ops, depth 11).
 const HEADLINE_KERNEL: &str = "poly6";
-/// Acceptance floor for this PR: turbo >= 10x ref on poly6 @ 1024.
-const HEADLINE_FLOOR: f64 = 10.0;
+/// Acceptance floor for this PR: the SIMD-lowered turbo interpreter
+/// must be >= 20x ref on poly6 @ 1024 (raised from the 10x contract
+/// the scalar chunked interpreter shipped under).
+const HEADLINE_FLOOR: f64 = 20.0;
 
 fn random_batch(rng: &mut Rng, arity: usize, rows: usize) -> FlatBatch {
     let mut b = FlatBatch::with_capacity(arity, rows);
@@ -115,6 +117,10 @@ fn main() -> anyhow::Result<()> {
     let speedup = if ref_tput > 0.0 { turbo_tput / ref_tput } else { 0.0 };
     report.set_meta("headline_kernel", json::s(HEADLINE_KERNEL));
     report.set_meta("turbo_speedup_vs_ref", json::f(speedup));
+    // Same ratio under its PR 6 name: the turbo interpreter's lane
+    // loops are now lowered to explicit 8-wide chunk kernels, so the
+    // headline measures the SIMD interpreter against scalar ref.
+    report.set_meta("turbo_simd_speedup_vs_ref", json::f(speedup));
     report.set_meta("turbo_speedup_floor", json::f(HEADLINE_FLOOR));
     println!(
         "\nheadline: turbo {turbo_tput:.0} pkt/s vs ref {ref_tput:.0} pkt/s on \
@@ -332,6 +338,37 @@ fn main() -> anyhow::Result<()> {
                 allocs, 0,
                 "steady-state submit->wait allocated {allocs} times in {audit_calls} calls — \
                  the allocation-free completion slab regressed"
+            );
+        }
+
+        // Worker-side audit: the dispatch path (take -> gather ->
+        // execute_into -> reply) must also be allocation-free in
+        // steady state. Each worker publishes its own thread-local
+        // allocation delta per batch into the metrics; once warm,
+        // that counter must not move. 512-row batches against
+        // max_batch 256 also exercise the span-splitting path.
+        {
+            let mut rngb = Rng::new(41);
+            let batch = random_batch(&mut rngb, h.arity(), 512);
+            for _ in 0..8 {
+                h.call_batch(&batch).unwrap();
+            }
+            let before = service.metrics().worker_allocs;
+            let audit_batches = 64u64;
+            for _ in 0..audit_batches {
+                h.call_batch(black_box(&batch)).unwrap();
+            }
+            let allocs = service.metrics().worker_allocs - before;
+            let per_batch = allocs as f64 / audit_batches as f64;
+            println!(
+                "worker allocation audit: {allocs} heap allocations on worker dispatch \
+                 paths across {audit_batches} 512-row batches ({per_batch:.4}/batch; bound: 0)"
+            );
+            report.set_meta("worker_allocs_per_batch", json::f(per_batch));
+            assert_eq!(
+                allocs, 0,
+                "steady-state worker loop allocated {allocs} times across \
+                 {audit_batches} batches — the zero-alloc dispatch path regressed"
             );
         }
 

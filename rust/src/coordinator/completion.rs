@@ -22,7 +22,7 @@
 //!   across generations (`FlatBatch::reset` / `resize_rows`);
 //! * a slot serves one request *or one whole batch*: `reserve_batch`
 //!   costs a single reservation for any row count, workers write each
-//!   output row in place (`complete_row_ok`) and the last row flips
+//!   output row in place (`complete_spans_ok`) and the last row flips
 //!   the slot to `Ready` — a 1024-row batch is one slot, not 1024
 //!   channels;
 //! * tickets are thin `{slot, generation}` pairs ([`Ticket`]); the
@@ -34,12 +34,25 @@
 //!   instead and are rung exactly once, when the slot becomes ready;
 //! * dropping a reply handle without collecting it ([`Self::abandon`])
 //!   never leaks: an already-ready slot frees immediately, an
-//!   in-flight one frees the moment its last row completes.
+//!   in-flight one frees the moment its last row completes;
+//! * workers move whole **spans** of rows per lock trip
+//!   ([`CompletionSlab::gather_spans`] /
+//!   [`CompletionSlab::complete_spans_ok`]): a dispatch run costs one
+//!   shard-lock round-trip per run of same-shard spans instead of two
+//!   per row, and a batch split across workers recombines here by row
+//!   index (rows complete in any order);
+//! * recycled slots are trimmed toward a **high-watermark**
+//!   ([`CompletionSlab::with_trim`]): one 64k-row burst does not pin
+//!   its peak buffer capacity on a pooled slot forever, while
+//!   steady-state traffic under the watermark never re-allocates.
 //!
 //! Lock order (must never be violated): engine queue lock → shard
 //! lock → nothing. Doorbells are rung *after* the shard lock is
 //! released, so a `Wake` implementation may take its own locks freely.
+//! Bulk span operations lock **one shard at a time** (never two at
+//! once), so two workers completing interleaved spans cannot deadlock.
 
+use super::queue::SpanToken;
 use crate::exec::{ExecError, FlatBatch};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -64,12 +77,35 @@ pub struct Ticket {
     generation: u32,
 }
 
-/// One queued row of a reservation: the engine's queue entries carry
-/// these instead of owned input buffers + reply channels.
-#[derive(Debug, Clone, Copy)]
-pub struct RowTicket {
+/// A contiguous run of rows of one reservation — what the engine's
+/// queues carry since the span refactor. A whole-batch submit is one
+/// span; the queue splits it at row boundaries when a worker's budget
+/// runs out, and the pieces recombine in the slot by row index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowSpan {
     pub ticket: Ticket,
+    /// First row of the run within the reservation.
     pub row: u32,
+    /// Rows in the run (≥ 1 once queued).
+    pub len: u32,
+}
+
+impl SpanToken for RowSpan {
+    fn rows(&self) -> usize {
+        self.len as usize
+    }
+
+    fn take_front(&mut self, n: usize) -> RowSpan {
+        debug_assert!(n > 0 && n < self.len as usize, "split out of range");
+        let head = RowSpan {
+            ticket: self.ticket,
+            row: self.row,
+            len: n as u32,
+        };
+        self.row += n as u32;
+        self.len -= n as u32;
+        head
+    }
 }
 
 /// Where a slot is in its lifecycle.
@@ -126,6 +162,9 @@ struct ShardSlots {
     /// condvar notify entirely when this is zero (the wire path waits
     /// on doorbells, not condvars).
     waiters: usize,
+    /// High-watermark (in `i32` words) a recycled slot's buffers are
+    /// trimmed toward on free. Buffers at or under it are untouched.
+    trim_words: usize,
 }
 
 struct Shard {
@@ -139,10 +178,23 @@ pub struct CompletionSlab {
     rr: AtomicUsize,
 }
 
+/// Default slot-buffer watermark: 64 Ki words (256 KiB) per buffer —
+/// far above any steady serving batch, so trims only ever fire after
+/// a genuinely oversized burst.
+pub const DEFAULT_TRIM_WORDS: usize = 1 << 16;
+
 impl CompletionSlab {
     /// `n_shards` bounds submit-side lock spreading; sized from the
-    /// worker count by the engine.
+    /// worker count by the engine. Uses [`DEFAULT_TRIM_WORDS`].
     pub fn new(n_shards: usize) -> CompletionSlab {
+        CompletionSlab::with_trim(n_shards, DEFAULT_TRIM_WORDS)
+    }
+
+    /// Like [`CompletionSlab::new`] with an explicit buffer watermark:
+    /// freed slots shrink input/output buffers larger than
+    /// `trim_words` back down, so one burst cannot pin its peak
+    /// allocation on the pool forever.
+    pub fn with_trim(n_shards: usize, trim_words: usize) -> CompletionSlab {
         let n = n_shards.max(1);
         CompletionSlab {
             shards: (0..n)
@@ -151,6 +203,7 @@ impl CompletionSlab {
                         slots: Vec::new(),
                         free: Vec::new(),
                         waiters: 0,
+                        trim_words,
                     }),
                     cv: Condvar::new(),
                 })
@@ -159,8 +212,12 @@ impl CompletionSlab {
         }
     }
 
+    fn shard_index(&self, slot: u32) -> usize {
+        slot as usize % self.shards.len()
+    }
+
     fn shard_of(&self, slot: u32) -> &Shard {
-        &self.shards[slot as usize % self.shards.len()]
+        &self.shards[self.shard_index(slot)]
     }
 
     fn local_index(&self, slot: u32) -> usize {
@@ -251,73 +308,128 @@ impl CompletionSlab {
         ticket
     }
 
-    /// Worker-side: run `f` over one queued row's inputs. `None` for a
-    /// stale generation (structurally unreachable from the engine —
-    /// slots stay allocated until their last row completes).
-    pub fn with_inputs<R>(&self, rt: RowTicket, f: impl FnOnce(&[i32]) -> R) -> Option<R> {
-        let shard = self.shard_of(rt.ticket.slot);
-        let st = shard.m.lock().unwrap();
-        let slot = &st.slots[self.local_index(rt.ticket.slot)];
-        if slot.generation != rt.ticket.generation {
-            debug_assert!(false, "input read through a stale ticket");
-            return None;
-        }
-        Some(f(slot.inputs.row(rt.row as usize)))
-    }
-
-    /// Worker-side: write one reply row in place and count it done.
-    pub fn complete_row_ok(&self, rt: RowTicket, out_row: &[i32]) {
-        self.complete_row(rt, Ok(out_row));
-    }
-
-    /// Worker-side: fail one row. The first error recorded fails the
-    /// whole slot (per-request for singles; whole-batch for batches,
-    /// matching the blocking `call_batch` contract).
-    pub fn complete_row_err(&self, rt: RowTicket, err: &ExecError) {
-        self.complete_row(rt, Err(err));
-    }
-
-    fn complete_row(&self, rt: RowTicket, result: Result<&[i32], &ExecError>) {
-        let shard = self.shard_of(rt.ticket.slot);
-        let mut st = shard.m.lock().unwrap();
-        let local = self.local_index(rt.ticket.slot);
-        {
-            let slot = &mut st.slots[local];
-            if slot.generation != rt.ticket.generation || slot.state != SlotState::Pending {
-                debug_assert!(false, "completion through a stale ticket");
-                return;
+    /// Worker-side bulk gather: append every span's input rows to
+    /// `out`, in span order, taking **one shard-lock round-trip per
+    /// run of same-shard spans** instead of one per row. Spans whose
+    /// slot cannot be gathered — stale generation (structurally
+    /// unreachable from the engine) or an input arity that does not
+    /// match `out` (a malformed ingress write) — contribute no rows
+    /// and are pushed to `bad` for the caller to fail; `out`'s rows
+    /// align with the surviving spans, span by span.
+    pub fn gather_spans(&self, spans: &[RowSpan], out: &mut FlatBatch, bad: &mut Vec<RowSpan>) {
+        let mut i = 0;
+        while i < spans.len() {
+            let shard_idx = self.shard_index(spans[i].ticket.slot);
+            let st = self.shards[shard_idx].m.lock().unwrap();
+            while i < spans.len() && self.shard_index(spans[i].ticket.slot) == shard_idx {
+                let sp = spans[i];
+                i += 1;
+                let slot = &st.slots[self.local_index(sp.ticket.slot)];
+                if slot.generation != sp.ticket.generation || slot.inputs.arity() != out.arity()
+                {
+                    debug_assert_eq!(
+                        slot.generation, sp.ticket.generation,
+                        "gather through a stale span"
+                    );
+                    bad.push(sp);
+                    continue;
+                }
+                let base = sp.row as usize;
+                for r in 0..sp.len as usize {
+                    out.push(slot.inputs.row(base + r));
+                }
             }
-            match result {
-                Ok(row) => slot.output.row_mut(rt.row as usize).copy_from_slice(row),
-                Err(e) => {
-                    if slot.error.is_none() {
-                        slot.error = Some(e.clone());
+        }
+    }
+
+    /// Worker-side bulk completion: write each span's reply rows (read
+    /// from consecutive rows of `rows`, in span order — exactly the
+    /// layout [`Self::gather_spans`] produced and the backend
+    /// preserved) into its slot and count them done, one shard-lock
+    /// round-trip per run of same-shard spans.
+    pub fn complete_spans_ok(&self, spans: &[RowSpan], rows: &FlatBatch) {
+        self.complete_spans(spans, Ok(rows));
+    }
+
+    /// Worker-side bulk failure: fail every span's slot with `err`
+    /// (first error wins per slot), one lock trip per same-shard run.
+    pub fn complete_spans_err(&self, spans: &[RowSpan], err: &ExecError) {
+        self.complete_spans(spans, Err(err));
+    }
+
+    fn complete_spans(&self, spans: &[RowSpan], result: Result<&FlatBatch, &ExecError>) {
+        // Doorbells collected under the lock, rung after it drops.
+        // Stays heap-free when no span carries a waker (the blocking
+        // in-process path — the audited steady state).
+        let mut ring: Vec<WakeTarget> = Vec::new();
+        let mut i = 0;
+        let mut out_row = 0usize;
+        while i < spans.len() {
+            let shard_idx = self.shard_index(spans[i].ticket.slot);
+            let shard = &self.shards[shard_idx];
+            let mut st = shard.m.lock().unwrap();
+            let mut notify = false;
+            while i < spans.len() && self.shard_index(spans[i].ticket.slot) == shard_idx {
+                let sp = spans[i];
+                i += 1;
+                let local = self.local_index(sp.ticket.slot);
+                let done = {
+                    let slot = &mut st.slots[local];
+                    if slot.generation != sp.ticket.generation
+                        || slot.state != SlotState::Pending
+                    {
+                        debug_assert!(false, "completion through a stale span");
+                        if result.is_ok() {
+                            out_row += sp.len as usize;
+                        }
+                        continue;
+                    }
+                    match result {
+                        Ok(rows) => {
+                            let base = sp.row as usize;
+                            for r in 0..sp.len as usize {
+                                slot.output
+                                    .row_mut(base + r)
+                                    .copy_from_slice(rows.row(out_row + r));
+                            }
+                            out_row += sp.len as usize;
+                        }
+                        Err(e) => {
+                            if slot.error.is_none() {
+                                slot.error = Some(e.clone());
+                            }
+                        }
+                    }
+                    debug_assert!(slot.remaining >= sp.len, "span over-completes its slot");
+                    slot.remaining -= sp.len;
+                    slot.remaining == 0
+                };
+                if done {
+                    if st.slots[local].abandoned {
+                        Self::free_slot(&mut st, local);
+                    } else {
+                        let slot = &mut st.slots[local];
+                        slot.state = SlotState::Ready;
+                        if let Some(w) = slot.waker.take() {
+                            ring.push(w);
+                        }
+                        notify = true;
                     }
                 }
             }
-            slot.remaining -= 1;
-            if slot.remaining > 0 {
-                return;
+            let has_waiters = st.waiters > 0;
+            drop(st);
+            if notify && has_waiters {
+                shard.cv.notify_all();
             }
-        }
-        if st.slots[local].abandoned {
-            Self::free_slot(&mut st, local);
-            return;
-        }
-        let slot = &mut st.slots[local];
-        slot.state = SlotState::Ready;
-        let waker = slot.waker.take();
-        let has_waiters = st.waiters > 0;
-        drop(st);
-        if has_waiters {
-            shard.cv.notify_all();
-        }
-        if let Some((w, tag)) = waker {
-            w.ring(tag);
+            for (w, tag) in ring.drain(..) {
+                w.ring(tag);
+            }
         }
     }
 
     fn free_slot(st: &mut ShardSlots, local: usize) {
+        let trim = st.trim_words;
         let slot = &mut st.slots[local];
         // The generation bump is the ABA defense: every ticket minted
         // for the old life of this slot is now stale.
@@ -327,6 +439,11 @@ impl CompletionSlab {
         slot.abandoned = false;
         slot.error = None;
         slot.waker = None;
+        // Watermark trim: a no-op for every buffer at or under the
+        // watermark (the allocation-free steady state), a shrink for
+        // burst-sized ones so the pool's footprint decays.
+        slot.inputs.trim_to_words(trim);
+        slot.output.trim_to_words(trim);
         st.free.push(local as u32);
     }
 
@@ -562,6 +679,21 @@ impl CompletionSlab {
     pub fn capacity(&self) -> usize {
         self.shards.iter().map(|s| s.m.lock().unwrap().slots.len()).sum()
     }
+
+    /// Total `i32` words of buffer capacity owned by every slot
+    /// (inputs + outputs) — the watermark-trim regression probe.
+    pub fn buffer_capacity_words(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                let st = s.m.lock().unwrap();
+                st.slots
+                    .iter()
+                    .map(|sl| sl.inputs.capacity_words() + sl.output.capacity_words())
+                    .sum::<usize>()
+            })
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -569,8 +701,19 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
 
-    fn row_of(t: Ticket, row: u32) -> RowTicket {
-        RowTicket { ticket: t, row }
+    fn span_of(t: Ticket, row: u32, len: u32) -> RowSpan {
+        RowSpan {
+            ticket: t,
+            row,
+            len,
+        }
+    }
+
+    /// Complete one row through the span path (what the engine's
+    /// single-submit spans reduce to).
+    fn complete_one(slab: &CompletionSlab, t: Ticket, row: u32, out_row: Vec<i32>) {
+        let rows = FlatBatch::from_rows(out_row.len(), &[out_row]);
+        slab.complete_spans_ok(&[span_of(t, row, 1)], &rows);
     }
 
     #[test]
@@ -580,9 +723,12 @@ mod tests {
         for i in 0..10i32 {
             let t = slab.reserve(&[i, i + 1], 1, None);
             assert_eq!(slab.try_take_row(t, &mut out), None, "not ready yet");
-            slab.with_inputs(row_of(t, 0), |row| assert_eq!(row, &[i, i + 1]))
-                .expect("live ticket");
-            slab.complete_row_ok(row_of(t, 0), &[i * 2]);
+            let mut inputs = FlatBatch::new(2);
+            let mut bad = Vec::new();
+            slab.gather_spans(&[span_of(t, 0, 1)], &mut inputs, &mut bad);
+            assert!(bad.is_empty());
+            assert_eq!(inputs.to_rows(), vec![vec![i, i + 1]]);
+            complete_one(&slab, t, 0, vec![i * 2]);
             assert_eq!(slab.try_take_row(t, &mut out), Some(Ok(())));
             assert_eq!(out, vec![i * 2]);
         }
@@ -597,11 +743,11 @@ mod tests {
         let slab = CompletionSlab::new(1);
         let batch = FlatBatch::from_rows(2, &[vec![1, 2], vec![3, 4], vec![5, 6]]);
         let t = slab.reserve_batch(&batch, 1, None);
-        slab.complete_row_ok(row_of(t, 2), &[60]);
-        slab.complete_row_ok(row_of(t, 0), &[20]);
+        complete_one(&slab, t, 2, vec![60]);
+        complete_one(&slab, t, 0, vec![20]);
         let mut out = FlatBatch::default();
         assert_eq!(slab.try_take_batch(t, &mut out), None, "one row missing");
-        slab.complete_row_ok(row_of(t, 1), &[40]);
+        complete_one(&slab, t, 1, vec![40]);
         assert_eq!(slab.wait_batch(t, None, &mut out), Some(Ok(())));
         assert_eq!(out.to_rows(), vec![vec![20], vec![40], vec![60]]);
     }
@@ -622,13 +768,13 @@ mod tests {
     fn stale_generation_is_refused() {
         let slab = CompletionSlab::new(1);
         let t1 = slab.reserve(&[7], 1, None);
-        slab.complete_row_ok(row_of(t1, 0), &[1]);
+        complete_one(&slab, t1, 0, vec![1]);
         let mut out = Vec::new();
         assert_eq!(slab.try_take_row(t1, &mut out), Some(Ok(())));
         // The slot recycles; the old ticket is now a different life.
         let t2 = slab.reserve(&[8], 1, None);
         assert_ne!(t1, t2);
-        slab.complete_row_ok(row_of(t2, 0), &[2]);
+        complete_one(&slab, t2, 0, vec![2]);
         assert!(matches!(slab.try_take_row(t1, &mut out), Some(Err(_))));
         assert_eq!(slab.try_take_row(t2, &mut out), Some(Ok(())));
         assert_eq!(out, vec![2]);
@@ -643,8 +789,8 @@ mod tests {
             backend: "test",
             message: "boom".to_string(),
         };
-        slab.complete_row_err(row_of(t, 0), &err);
-        slab.complete_row_ok(row_of(t, 1), &[9]);
+        slab.complete_spans_err(&[span_of(t, 0, 1)], &err);
+        complete_one(&slab, t, 1, vec![9]);
         let mut out = FlatBatch::default();
         match slab.wait_batch(t, None, &mut out) {
             Some(Err(ExecError::Backend { message, .. })) => assert_eq!(message, "boom"),
@@ -660,11 +806,11 @@ mod tests {
         let t = slab.reserve(&[1], 1, None);
         slab.abandon(t);
         assert_eq!(slab.live_slots(), 1, "slot still owned by the worker");
-        slab.complete_row_ok(row_of(t, 0), &[5]);
+        complete_one(&slab, t, 0, vec![5]);
         assert_eq!(slab.live_slots(), 0);
         // Abandon after completion: frees immediately.
         let t = slab.reserve(&[2], 1, None);
-        slab.complete_row_ok(row_of(t, 0), &[6]);
+        complete_one(&slab, t, 0, vec![6]);
         assert_eq!(slab.live_slots(), 1);
         slab.abandon(t);
         assert_eq!(slab.live_slots(), 0);
@@ -680,7 +826,7 @@ mod tests {
         let mut out = Vec::new();
         let deadline = Instant::now() + std::time::Duration::from_millis(10);
         assert_eq!(slab.wait_row(t, Some(deadline), &mut out), None, "timed out");
-        slab.complete_row_ok(row_of(t, 0), &[3]);
+        complete_one(&slab, t, 0, vec![3]);
         assert_eq!(slab.wait_row(t, None, &mut out), Some(Ok(())));
         assert_eq!(out, vec![3]);
     }
@@ -698,12 +844,118 @@ mod tests {
         let waker: Arc<dyn Wake> = Arc::clone(&bell);
         let batch = FlatBatch::from_rows(1, &[vec![1], vec![2]]);
         let t = slab.reserve_batch(&batch, 1, Some((waker, 7)));
-        slab.complete_row_ok(row_of(t, 0), &[1]);
+        complete_one(&slab, t, 0, vec![1]);
         assert_eq!(bell.0.load(Ordering::SeqCst), 0, "not ready yet");
-        slab.complete_row_ok(row_of(t, 1), &[2]);
+        complete_one(&slab, t, 1, vec![2]);
         assert_eq!(bell.0.load(Ordering::SeqCst), 7, "rung once with the tag");
         let mut out = FlatBatch::default();
         assert_eq!(slab.try_take_batch(t, &mut out), Some(Ok(())));
+    }
+
+    #[test]
+    fn spans_gather_and_complete_in_bulk() {
+        let slab = CompletionSlab::new(2);
+        let b1 = FlatBatch::from_rows(2, &[vec![1, 2], vec![3, 4], vec![5, 6]]);
+        let b2 = FlatBatch::from_rows(2, &[vec![7, 8]]);
+        let t1 = slab.reserve_batch(&b1, 1, None);
+        let t2 = slab.reserve_batch(&b2, 1, None);
+        // One worker's take: the queue split t1's 3-row span 2+1
+        // around t2's single, so runs alternate shards.
+        let spans = [span_of(t1, 0, 2), span_of(t2, 0, 1), span_of(t1, 2, 1)];
+        let mut inputs = FlatBatch::new(2);
+        let mut bad = Vec::new();
+        slab.gather_spans(&spans, &mut inputs, &mut bad);
+        assert!(bad.is_empty());
+        assert_eq!(
+            inputs.to_rows(),
+            vec![vec![1, 2], vec![3, 4], vec![7, 8], vec![5, 6]]
+        );
+        // Reply rows line up with gathered rows, span by span, and
+        // recombine in each slot by row index.
+        let rows = FlatBatch::from_rows(1, &[vec![10], vec![20], vec![30], vec![40]]);
+        slab.complete_spans_ok(&spans, &rows);
+        let mut out = FlatBatch::default();
+        assert_eq!(slab.try_take_batch(t1, &mut out), Some(Ok(())));
+        assert_eq!(out.to_rows(), vec![vec![10], vec![20], vec![40]]);
+        assert_eq!(slab.try_take_batch(t2, &mut out), Some(Ok(())));
+        assert_eq!(out.to_rows(), vec![vec![30]]);
+        assert_eq!(slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn complete_spans_err_fails_whole_slots() {
+        let slab = CompletionSlab::new(1);
+        let t = slab.reserve_batch(&FlatBatch::from_rows(1, &[vec![1], vec![2]]), 1, None);
+        let err = ExecError::Backend {
+            backend: "test",
+            message: "boom".to_string(),
+        };
+        slab.complete_spans_err(&[span_of(t, 0, 2)], &err);
+        let mut out = FlatBatch::default();
+        match slab.try_take_batch(t, &mut out) {
+            Some(Err(ExecError::Backend { message, .. })) => assert_eq!(message, "boom"),
+            other => panic!("expected the recorded error, got {other:?}"),
+        }
+        assert_eq!(slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn gather_reports_arity_mismatch_spans_as_bad() {
+        let slab = CompletionSlab::new(1);
+        let good = slab.reserve_batch(&FlatBatch::from_rows(2, &[vec![1, 2]]), 1, None);
+        let weird = slab.reserve_batch(&FlatBatch::from_rows(3, &[vec![7, 8, 9]]), 1, None);
+        let spans = [span_of(good, 0, 1), span_of(weird, 0, 1)];
+        let mut inputs = FlatBatch::new(2);
+        let mut bad = Vec::new();
+        slab.gather_spans(&spans, &mut inputs, &mut bad);
+        assert_eq!(inputs.to_rows(), vec![vec![1, 2]]);
+        assert_eq!(bad, vec![span_of(weird, 0, 1)]);
+        // The caller fails the malformed span; its waiter gets a
+        // structured error, and the good span still completes.
+        let err = ExecError::Backend {
+            backend: "test",
+            message: "bad arity".to_string(),
+        };
+        slab.complete_spans_err(&bad, &err);
+        slab.complete_spans_ok(&[span_of(good, 0, 1)], &FlatBatch::from_rows(1, &[vec![9]]));
+        let mut out = FlatBatch::default();
+        assert!(matches!(slab.try_take_batch(weird, &mut out), Some(Err(_))));
+        assert_eq!(slab.try_take_batch(good, &mut out), Some(Ok(())));
+        assert_eq!(out.to_rows(), vec![vec![9]]);
+    }
+
+    #[test]
+    fn burst_buffers_decay_to_the_watermark() {
+        let slab = CompletionSlab::with_trim(1, 64);
+        // A 64k-row burst through one slot grows its buffers far past
+        // the watermark...
+        let mut big = FlatBatch::new(1);
+        for i in 0..65536 {
+            big.push(&[i]);
+        }
+        let t = slab.reserve_batch(&big, 1, None);
+        let mut rows = FlatBatch::new(1);
+        rows.resize_rows(65536);
+        slab.complete_spans_ok(&[span_of(t, 0, 65536)], &rows);
+        let mut out = FlatBatch::default();
+        assert_eq!(slab.try_take_batch(t, &mut out), Some(Ok(())));
+        assert_eq!(out.n_rows(), 65536);
+        // ...and the free trimmed them back down.
+        assert!(
+            slab.buffer_capacity_words() <= 4 * 64,
+            "burst capacity must decay, got {} words",
+            slab.buffer_capacity_words()
+        );
+        // Steady small traffic reuses the trimmed buffers and the
+        // footprint stays at the watermark.
+        let mut small_out = Vec::new();
+        for i in 0..100i32 {
+            let t = slab.reserve(&[i], 1, None);
+            slab.complete_spans_ok(&[span_of(t, 0, 1)], &FlatBatch::from_rows(1, &[vec![i * 3]]));
+            assert_eq!(slab.try_take_row(t, &mut small_out), Some(Ok(())));
+            assert_eq!(small_out, vec![i * 3]);
+            assert!(slab.buffer_capacity_words() <= 4 * 64);
+        }
     }
 
     #[test]

@@ -69,6 +69,10 @@ pub struct Metrics {
     batches: AtomicU64,
     batch_size_sum: AtomicU64,
     context_switches: AtomicU64,
+    /// Heap allocations observed inside the workers' take→execute→
+    /// reply window (excluding this accumulator's own sample pushes).
+    /// Zero in steady state — the bench hard-asserts it.
+    worker_allocs: AtomicU64,
     heavy: Mutex<Heavy>,
 }
 
@@ -82,6 +86,7 @@ impl Metrics {
             batches: AtomicU64::new(0),
             batch_size_sum: AtomicU64::new(0),
             context_switches: AtomicU64::new(0),
+            worker_allocs: AtomicU64::new(0),
             heavy: Mutex::new(Heavy {
                 latency_us: Samples::new(),
                 queue_wait_us: Samples::new(),
@@ -135,6 +140,19 @@ impl Metrics {
         self.failed.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Count `n` heap allocations observed on a worker's dispatch path
+    /// (lock-free; recorded once per batch, usually with `n == 0`).
+    pub fn record_worker_allocs(&self, n: u64) {
+        if n > 0 {
+            self.worker_allocs.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Worker dispatch-path allocations so far (lock-free probe).
+    pub fn worker_allocs(&self) -> u64 {
+        self.worker_allocs.load(Ordering::Relaxed)
+    }
+
     /// Requests completed so far (lock-free probe).
     pub fn completed(&self) -> u64 {
         self.completed.load(Ordering::Relaxed)
@@ -157,6 +175,7 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             batch_size_sum: self.batch_size_sum.load(Ordering::Relaxed),
             context_switches: self.context_switches.load(Ordering::Relaxed),
+            worker_allocs: self.worker_allocs.load(Ordering::Relaxed),
             latency_us: h.latency_us.clone(),
             queue_wait_us: h.queue_wait_us.clone(),
             per_kernel: h.per_kernel.clone(),
@@ -177,6 +196,9 @@ pub struct RawMetrics {
     pub batches: u64,
     pub batch_size_sum: u64,
     pub context_switches: u64,
+    /// Heap allocations observed on worker dispatch paths (0 in
+    /// steady state; see the bench's zero-alloc audit).
+    pub worker_allocs: u64,
     pub latency_us: Samples,
     pub queue_wait_us: Samples,
     /// Completed requests per kernel, dense by [`KernelId`].
@@ -236,6 +258,17 @@ mod tests {
         assert_eq!(raw.completed, 0);
         assert_eq!(m.completed(), 0);
         assert_eq!(raw.batches, 0);
+    }
+
+    #[test]
+    fn worker_alloc_audit_accumulates() {
+        let m = Metrics::new(1);
+        m.record_worker_allocs(0);
+        assert_eq!(m.worker_allocs(), 0);
+        m.record_worker_allocs(3);
+        m.record_worker_allocs(2);
+        assert_eq!(m.worker_allocs(), 5);
+        assert_eq!(m.raw_snapshot().worker_allocs, 5);
     }
 
     #[test]

@@ -24,9 +24,13 @@
 //!   reply `Vec`, no waiter thread anywhere;
 //! * a shared [`queue::QueueSet`] holds **bounded** per-kernel FIFOs
 //!   indexed by kernel id; entries are thin
-//!   [`RowTicket`](completion::RowTicket)s into the slab. A full queue
-//!   refuses the request at the door ([`SubmitRejection::Full`]) —
-//!   backpressure is explicit, not implicit queue growth;
+//!   [`RowSpan`](completion::RowSpan)s into the slab — a whole batch
+//!   submit is **one** queue entry regardless of row count, and the
+//!   queue splits an oversized span at the worker's row budget so one
+//!   big batch fans out across every idle worker and recombines in
+//!   its slot by row index. A full queue refuses the request at the
+//!   door ([`SubmitRejection::Full`]) — backpressure is explicit, not
+//!   implicit queue growth;
 //! * each **fabric worker** thread owns a `Box<dyn Backend>` — the
 //!   interpreter, the tape-compiled turbo executor, the cycle-accurate
 //!   overlay simulator, or the PJRT engine ([`crate::exec`]); backends
@@ -38,10 +42,15 @@
 //!   never recomputed per worker;
 //! * workers pull context-affine batches into **reused buffers**
 //!   ([`QueueSet::take_batch_into`](queue::QueueSet::take_batch_into)
-//!   for the tickets, a [`FlatBatch`](exec::FlatBatch) for the input
-//!   rows) and reply by writing rows straight into the slab slots —
-//!   the steady-state dispatch loop performs no per-packet allocation
-//!   on either side of the backend call;
+//!   for the spans, a [`FlatBatch`](exec::FlatBatch) for the input
+//!   rows, one [`ExecReport`](exec::ExecReport) for the outputs) and
+//!   move rows in bulk (`gather_spans` / `complete_spans_ok`: one
+//!   shard-lock round-trip per same-shard run instead of two per
+//!   row). The steady-state dispatch loop performs **zero heap
+//!   allocations** end to end — audited per batch by a thread-local
+//!   allocation counter published through
+//!   [`Metrics::record_worker_allocs`](metrics::Metrics::record_worker_allocs)
+//!   and hard-asserted in the bench;
 //! * [`Engine::shutdown`] **drains**: the flag stops admission, but
 //!   workers keep taking batches until every queue is empty before
 //!   exiting, so every admitted request gets its reply;
@@ -54,10 +63,11 @@ pub mod completion;
 pub mod metrics;
 pub mod queue;
 
-use crate::exec::{self, BackendKind, ExecError, FlatBatch, KernelId, KernelRegistry};
+use crate::exec::{self, BackendKind, ExecError, ExecReport, FlatBatch, KernelId, KernelRegistry};
 use crate::resources::SYSTEM_CLOCK_MHZ;
+use crate::util::bench::thread_alloc_count;
 use anyhow::{Context, Result};
-use completion::{CompletionSlab, RowTicket, Ticket, WakeTarget};
+use completion::{CompletionSlab, RowSpan, Ticket, WakeTarget};
 use metrics::{BatchTiming, Metrics, RawMetrics};
 use queue::{Queued, QueueSet};
 use std::path::PathBuf;
@@ -91,7 +101,7 @@ pub struct Shared {
 }
 
 struct QueueState {
-    qs: QueueSet<RowTicket>,
+    qs: QueueSet<RowSpan>,
     shutdown: bool,
 }
 
@@ -123,7 +133,11 @@ impl Shared {
         let ticket = self.slab.reserve(inputs, n_outputs, waker);
         let entry = Queued {
             enqueued: Instant::now(),
-            token: RowTicket { ticket, row: 0 },
+            token: RowSpan {
+                ticket,
+                row: 0,
+                len: 1,
+            },
         };
         if st.qs.try_push(id, entry).is_err() {
             unreachable!("admission capacity checked above");
@@ -137,7 +151,9 @@ impl Shared {
     /// is admitted or none is — a half-admitted batch would make
     /// `call_batch` semantics unobservable under backpressure. The
     /// whole batch costs **one** slab reservation (one ticket, one
-    /// in-place reply buffer), not a channel per row.
+    /// in-place reply buffer) and **one** queue entry — a single
+    /// [`RowSpan`] covering every row, which workers peel apart at
+    /// their row budget ([`QueueSet::take_batch_into`]).
     pub fn submit_batch(
         &self,
         id: KernelId,
@@ -158,13 +174,15 @@ impl Shared {
             return Err(SubmitRejection::Full { queued, limit });
         }
         let ticket = self.slab.reserve_batch(batch, n_outputs, waker);
-        let now = Instant::now();
-        for row in 0..n {
+        // A zero-row batch is born Ready in the slab and never queues
+        // (the service layer refuses empty batches before this point).
+        if n > 0 {
             let entry = Queued {
-                enqueued: now,
-                token: RowTicket {
+                enqueued: Instant::now(),
+                token: RowSpan {
                     ticket,
-                    row: row as u32,
+                    row: 0,
+                    len: n as u32,
                 },
             };
             if st.qs.try_push(id, entry).is_err() {
@@ -199,6 +217,10 @@ pub struct EngineConfig {
     pub sim_replicas: usize,
     /// FIFO capacity of each simulated pipeline.
     pub sim_fifo_capacity: usize,
+    /// Completion-slot buffer watermark (in `i32` words): recycled
+    /// slots shrink burst-sized buffers back toward this, so one giant
+    /// batch does not pin its peak allocation on the pool forever.
+    pub slab_trim_words: usize,
     /// Pre-compiled kernels, shared by every worker.
     pub registry: Arc<KernelRegistry>,
 }
@@ -243,7 +265,10 @@ impl Engine {
             cv: Condvar::new(),
             // Sharding spreads submit-side lock traffic; a couple of
             // shards per worker is plenty (contention is per shard).
-            slab: CompletionSlab::new((cfg.workers * 2).clamp(4, 64)),
+            slab: CompletionSlab::with_trim(
+                (cfg.workers * 2).clamp(4, 64),
+                cfg.slab_trim_words,
+            ),
             metrics: Metrics::new(registry.len()),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
@@ -384,11 +409,16 @@ fn worker_loop(
     // Batch-affinity hint only; switch *accounting* comes from the
     // backend's report when it models context switches itself.
     let mut context: Option<KernelId> = None;
-    // Reused per-worker buffers: the ticket batch and the flat input
-    // rows. The steady-state dispatch loop allocates nothing per
-    // packet — replies are written straight into slab slots.
-    let mut items: Vec<Queued<RowTicket>> = Vec::new();
+    // Reused per-worker buffers: the span batch, the flat input rows,
+    // the execution report the backend writes into, and the bulk-op
+    // scratch vectors. The steady-state dispatch loop allocates
+    // nothing per batch — audited below with a thread-local
+    // allocation counter and published through the metrics.
+    let mut items: Vec<Queued<RowSpan>> = Vec::new();
+    let mut spans: Vec<RowSpan> = Vec::new();
+    let mut bad: Vec<RowSpan> = Vec::new();
     let mut inputs = FlatBatch::default();
+    let mut report = ExecReport::default();
     loop {
         let taken = {
             let mut st = shared.queues.lock().unwrap();
@@ -408,84 +438,84 @@ fn worker_loop(
         let Some(batch_kernel) = taken else {
             return Ok(());
         };
-        let n = items.len();
-        let Some(kernel) = registry.kernel(batch_kernel).cloned() else {
+        // Zero-allocation audit, bracket 1 of 2: take → metrics
+        // record. (`record_batch` itself is excluded — its sample
+        // buffers are unbounded by design; everything else on the
+        // dispatch path must stay heap-free.)
+        let allocs_at_take = thread_alloc_count();
+        spans.clear();
+        spans.extend(items.iter().map(|it| it.token));
+        let Some(kernel) = registry.kernel(batch_kernel) else {
             // Unreachable via the service layer (ids are interned from
             // this registry); kept as a structured reply so a future
             // ingress path cannot hang callers.
             let err = ExecError::UnknownKernel(batch_kernel.to_string());
-            for it in items.drain(..) {
-                shared.slab.complete_row_err(it.token, &err);
-            }
+            shared.metrics.record_failed(spans.iter().map(|s| s.len as u64).sum());
+            shared.slab.complete_spans_err(&spans, &err);
+            items.clear();
             continue;
         };
         let hint_switched = context != Some(batch_kernel);
-        // Simulated fabric execution time for the batch at 300 MHz:
-        // pipeline fill (latency) + (n-1) more initiations at II.
-        // Guarded: an empty batch is a structured error, not a u64
-        // underflow.
-        let model_cycles = match exec::fabric_exec_cycles(&kernel, n) {
-            Ok(c) => c,
-            Err(e) => {
-                for it in items.drain(..) {
-                    shared.slab.complete_row_err(it.token, &e);
-                }
-                continue;
-            }
-        };
         // Gather the input rows out of the slab into the reused flat
-        // buffer, guarding shape (the whole-batch analogue of the old
-        // per-packet validate_batch scan): a malformed slot from a
-        // future ingress path must produce a structured reply, not
-        // panic the worker. Unreachable via the service layer, which
-        // validates arity at the door.
+        // buffer — one shard-lock round-trip per same-shard span run.
+        // A malformed slot (wrong arity, from a future ingress path —
+        // the service layer validates at the door) comes back in
+        // `bad`: those spans get a structured reply and the batch
+        // shrinks to the survivors instead of panicking the worker.
         inputs.reset(kernel.n_inputs);
-        inputs.reserve_rows(n);
-        let mut bad_arity: Option<usize> = None;
-        for it in &items {
-            // A stale ticket (None) is structurally unreachable: slots
-            // stay allocated until their last row completes. The
-            // row-count guard below turns even that into a structured
-            // reply rather than a short batch.
-            let _ = shared.slab.with_inputs(it.token, |row| {
-                if row.len() == kernel.n_inputs {
-                    inputs.push(row);
-                } else if bad_arity.is_none() {
-                    bad_arity = Some(row.len());
-                }
-            });
-        }
-        if bad_arity.is_some() || inputs.n_rows() != n {
+        bad.clear();
+        shared.slab.gather_spans(&spans, &mut inputs, &mut bad);
+        if !bad.is_empty() {
             let err = ExecError::WrongArity {
                 kernel: kernel.name.clone(),
                 expected: kernel.n_inputs,
-                got: bad_arity.unwrap_or(0),
+                got: 0,
             };
-            for it in items.drain(..) {
-                shared.slab.complete_row_err(it.token, &err);
+            shared
+                .metrics
+                .record_failed(bad.iter().map(|s| s.len as u64).sum());
+            shared.slab.complete_spans_err(&bad, &err);
+            items.retain(|it| !bad.contains(&it.token));
+            spans.retain(|s| !bad.contains(s));
+            if spans.is_empty() {
+                items.clear();
+                continue;
             }
-            continue;
         }
+        let n = inputs.n_rows();
+        // Simulated fabric execution time for the batch at 300 MHz:
+        // pipeline fill (latency) + (n-1) more initiations at II.
+        // Guarded: an empty batch is a structured error, not a u64
+        // underflow (unreachable here — every queued span has rows).
+        let model_cycles = match exec::fabric_exec_cycles(kernel, n) {
+            Ok(c) => c,
+            Err(e) => {
+                shared.metrics.record_failed(n as u64);
+                shared.slab.complete_spans_err(&spans, &e);
+                items.clear();
+                continue;
+            }
+        };
         // Execute + reply under an unwind guard: a panicking backend
         // must not strand this batch's slots in Pending — the old
         // per-call channels failed waiters for free when a panicking
         // worker dropped its senders, and the slab keeps that
-        // containment explicitly. `completed_rows` tracks progress so
-        // the handler fails exactly the tickets still unanswered,
-        // then the panic is re-raised (the thread still dies; the
-        // next `shutdown` reports it, as before).
-        let mut completed_rows = 0usize;
+        // containment explicitly. `replied` tracks whether the spans
+        // got their answer, so the handler fails exactly the ones
+        // still pending, then the panic is re-raised (the thread
+        // still dies; the next `shutdown` reports it, as before).
+        let mut replied = false;
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let result = backend.execute(&kernel, &inputs);
+            let result = backend.execute_into(kernel, &inputs, &mut report);
             let now = Instant::now();
             match result {
-                Ok(report) => {
+                Ok(()) => {
                     // Shape-check the backend's report before touching
                     // metrics or slots (the reply-side twin of the
                     // input-arity guard above): a short or mis-shaped
                     // output is a structured backend failure — never a
                     // mid-loop panic that would double-count the batch
-                    // or poison a shard lock from inside complete_row.
+                    // or poison a shard lock from inside a completion.
                     if report.outputs.n_rows() != n || report.outputs.arity() != kernel.n_outputs
                     {
                         let e = ExecError::Backend {
@@ -500,10 +530,8 @@ fn worker_loop(
                             ),
                         };
                         shared.metrics.record_failed(n as u64);
-                        for (i, it) in items.iter().enumerate() {
-                            shared.slab.complete_row_err(it.token, &e);
-                            completed_rows = i + 1;
-                        }
+                        shared.slab.complete_spans_err(&spans, &e);
+                        replied = true;
                         return;
                     }
                     // Prefer measured fabric cycles (sim backend) over
@@ -528,8 +556,11 @@ fn worker_loop(
                             },
                         )
                     };
-                    // Record first (counters are visible the moment a
-                    // waiter wakes), then write replies in place.
+                    // Bracket 1 closes here; record_batch (unbounded
+                    // sample buffers, excluded from the audit) runs
+                    // between the brackets. Record first — counters
+                    // are visible the moment a waiter wakes.
+                    let bracket1 = thread_alloc_count() - allocs_at_take;
                     shared.metrics.record_batch(
                         batch_kernel,
                         n,
@@ -538,14 +569,17 @@ fn worker_loop(
                             switch_us,
                             exec_us_sim,
                         },
-                        items
-                            .iter()
-                            .map(|it| now.duration_since(it.enqueued).as_secs_f64() * 1e6),
+                        items.iter().flat_map(|it| {
+                            let wait = now.duration_since(it.enqueued).as_secs_f64() * 1e6;
+                            (0..it.token.len).map(move |_| wait)
+                        }),
                     );
-                    for (i, it) in items.iter().enumerate() {
-                        shared.slab.complete_row_ok(it.token, report.outputs.row(i));
-                        completed_rows = i + 1;
-                    }
+                    // Bracket 2: reply writes (bulk, in place).
+                    let allocs_at_reply = thread_alloc_count();
+                    shared.slab.complete_spans_ok(&spans, &report.outputs);
+                    replied = true;
+                    let bracket2 = thread_alloc_count() - allocs_at_reply;
+                    shared.metrics.record_worker_allocs(bracket1 + bracket2);
                 }
                 Err(e) => {
                     // Failed requests land in the `failed` counter
@@ -555,21 +589,19 @@ fn worker_loop(
                     // the backend may have failed before any context
                     // load happened.
                     shared.metrics.record_failed(n as u64);
-                    for (i, it) in items.iter().enumerate() {
-                        shared.slab.complete_row_err(it.token, &e);
-                        completed_rows = i + 1;
-                    }
+                    shared.slab.complete_spans_err(&spans, &e);
+                    replied = true;
                 }
             }
         }));
         if let Err(payload) = outcome {
-            let err = ExecError::Backend {
-                backend: "engine",
-                message: "worker panicked while executing the batch".to_string(),
-            };
-            shared.metrics.record_failed((n - completed_rows) as u64);
-            for it in &items[completed_rows..] {
-                shared.slab.complete_row_err(it.token, &err);
+            if !replied {
+                let err = ExecError::Backend {
+                    backend: "engine",
+                    message: "worker panicked while executing the batch".to_string(),
+                };
+                shared.metrics.record_failed(n as u64);
+                shared.slab.complete_spans_err(&spans, &err);
             }
             std::panic::resume_unwind(payload);
         }
@@ -592,6 +624,7 @@ mod tests {
             queue_depth: 1024,
             sim_replicas: 1,
             sim_fifo_capacity: 4096,
+            slab_trim_words: completion::DEFAULT_TRIM_WORDS,
             registry,
         })
         .unwrap()
@@ -618,6 +651,35 @@ mod tests {
             assert_eq!(out, vec![1 + 9 + 25 + (2 - i) * (2 - i)]);
         }
         // Every slot was collected: the slab is fully recycled.
+        assert_eq!(eng.shared().slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn oversized_batch_splits_across_workers_and_recombines() {
+        // 131 rows (deliberately not a multiple of the 8-row budget)
+        // through 4 workers taking at most 8 rows each: the one queued
+        // span is peeled apart by whichever workers are idle and the
+        // pieces recombine in the slot by row index, in order.
+        let eng = engine(BackendKind::Turbo, 4, 8);
+        let id = eng.registry().id_of("gradient").unwrap();
+        let rows: Vec<Vec<i32>> = (0..131i32).map(|i| vec![3, 5, 2, 7, i]).collect();
+        let batch = FlatBatch::from_rows(5, &rows);
+        let t = eng.shared().submit_batch(id, &batch, 1, None).unwrap();
+        let mut out = FlatBatch::default();
+        eng.shared()
+            .slab
+            .wait_batch(t, None, &mut out)
+            .expect("no deadline")
+            .unwrap();
+        assert_eq!(out.n_rows(), 131);
+        for (i, got) in out.iter().enumerate() {
+            let i = i as i32;
+            assert_eq!(got, &[1 + 9 + 25 + (2 - i) * (2 - i)], "row {i}");
+        }
+        let raw = eng.raw_metrics();
+        assert_eq!(raw.completed, 131);
+        assert_eq!(raw.failed, 0);
+        eng.shutdown().unwrap();
         assert_eq!(eng.shared().slab.live_slots(), 0);
     }
 
@@ -651,6 +713,7 @@ mod tests {
             queue_depth: 2,
             sim_replicas: 1,
             sim_fifo_capacity: 4096,
+            slab_trim_words: completion::DEFAULT_TRIM_WORDS,
             registry,
         })
         .unwrap();
@@ -682,6 +745,7 @@ mod tests {
             queue_depth: 16,
             sim_replicas: 1,
             sim_fifo_capacity: 4096,
+            slab_trim_words: completion::DEFAULT_TRIM_WORDS,
             registry,
         });
         assert!(r.is_err());

@@ -14,18 +14,28 @@
 //!
 //! Since the completion-slab refactor (DESIGN.md §10) a queue entry is
 //! a [`Queued`] — an enqueue timestamp plus an opaque token (a slab
-//! [`RowTicket`](super::completion::RowTicket) in production). Request
+//! [`RowSpan`](super::completion::RowSpan) in production). Request
 //! *inputs* live in the slab slot, not the queue, so pushing a request
 //! moves a handful of words and the steady-state submit path performs
 //! no heap allocation at all. Workers refill a reused buffer through
 //! [`QueueSet::take_batch_into`], so dispatch allocates nothing per
 //! batch either.
 //!
+//! Tokens are **spans** ([`SpanToken`]): one entry can carry many
+//! contiguous rows of a single slab slot, so a whole-batch submit
+//! enqueues *one* entry regardless of row count. Accounting (`depth`,
+//! [`QueueSet::queued_for`], `total_queued`) is therefore in **rows**,
+//! not entries, and [`QueueSet::take_batch_into`] splits an oversized
+//! front span at the row budget: the taken head rides out with this
+//! worker while the remainder stays at the queue front for the next
+//! idle worker — this is how one 64k-row batch fans out across the
+//! whole worker pool and recombines in the slab by row index.
+//!
 //! Queues are **bounded**: every queue carries the same `depth` limit
-//! and [`QueueSet::try_push`] refuses to grow past it, handing the
-//! request back to the caller. This is the mechanical half of the
-//! service layer's admission control — a client that outruns the
-//! fabric gets an explicit `Rejected` reply instead of unbounded
+//! (in rows) and [`QueueSet::try_push`] refuses to grow past it,
+//! handing the request back to the caller. This is the mechanical half
+//! of the service layer's admission control — a client that outruns
+//! the fabric gets an explicit `Rejected` reply instead of unbounded
 //! memory growth and unbounded latency.
 //!
 //! Workers (overlay pipelines) pick batches with **context affinity**:
@@ -33,15 +43,39 @@
 //! contexts is cheap on this overlay (sub-µs, the paper's headline)
 //! but never free, and affinity also models the BRAM-resident data
 //! staging of Fig. 4. When the worker's context has no work it steals
-//! the longest queue (weighted by age to prevent starvation).
+//! the deepest queue in rows (weighted by age to prevent starvation).
 
 use crate::exec::KernelId;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-/// One queued request: when it arrived, and the token that locates its
-/// inputs and completion slot (a reply channel would be an allocation;
-/// a slab ticket is two words).
+/// A queue token that carries one or more contiguous rows and can be
+/// split at a row boundary. Splitting is what lets a worker take a
+/// partial batch while the remainder stays queued for its peers.
+pub trait SpanToken {
+    /// Rows this token carries (always ≥ 1 for queued tokens).
+    fn rows(&self) -> usize;
+
+    /// Split off the first `n` rows (0 < `n` < `self.rows()`) as a new
+    /// token, leaving `self` holding the remainder.
+    fn take_front(&mut self, n: usize) -> Self;
+}
+
+/// Single-row tokens for queue-policy tests: one row, never split.
+#[cfg(test)]
+impl SpanToken for u32 {
+    fn rows(&self) -> usize {
+        1
+    }
+
+    fn take_front(&mut self, _n: usize) -> Self {
+        unreachable!("single-row tokens are never split")
+    }
+}
+
+/// One queued request span: when it arrived, and the token that
+/// locates its inputs and completion slot (a reply channel would be an
+/// allocation; a slab span is three words).
 #[derive(Debug, Clone, Copy)]
 pub struct Queued<T> {
     pub enqueued: Instant,
@@ -49,21 +83,25 @@ pub struct Queued<T> {
 }
 
 /// Per-kernel FIFO queues, dense over the kernel registry, each
-/// bounded at `depth` entries.
+/// bounded at `depth` **rows** (entries are spans of ≥ 1 rows).
 #[derive(Debug)]
 pub struct QueueSet<T> {
     queues: Vec<VecDeque<Queued<T>>>,
+    /// Queued rows per kernel (an entry may span many rows).
+    rows: Vec<usize>,
     depth: usize,
+    /// Total rows queued across every kernel.
     pub total_queued: usize,
 }
 
-impl<T> QueueSet<T> {
+impl<T: SpanToken> QueueSet<T> {
     /// One queue per registry kernel, each admitting at most `depth`
-    /// waiting requests.
+    /// waiting rows.
     pub fn new(n_kernels: usize, depth: usize) -> Self {
         assert!(depth >= 1, "queue depth must be positive");
         Self {
             queues: (0..n_kernels).map(|_| VecDeque::new()).collect(),
+            rows: vec![0; n_kernels],
             depth,
             total_queued: 0,
         }
@@ -73,22 +111,24 @@ impl<T> QueueSet<T> {
         self.queues.len()
     }
 
-    /// Per-kernel admission bound.
+    /// Per-kernel admission bound, in rows.
     pub fn depth(&self) -> usize {
         self.depth
     }
 
-    /// Enqueue one request, or hand it back when the kernel's queue is
-    /// at its depth limit (the admission-control path). `kernel` must
-    /// come from the registry this set was sized for (ingress interns
-    /// and validates names).
+    /// Enqueue one request span, or hand it back when admitting its
+    /// rows would push the kernel's queue past the depth limit (the
+    /// admission-control path). `kernel` must come from the registry
+    /// this set was sized for (ingress interns and validates names).
     pub fn try_push(&mut self, kernel: KernelId, q: Queued<T>) -> Result<(), Queued<T>> {
-        let queue = &mut self.queues[kernel.index()];
-        if queue.len() >= self.depth {
+        let n = q.token.rows();
+        debug_assert!(n > 0, "zero-row spans are completed at reserve time");
+        if self.rows[kernel.index()] + n > self.depth {
             return Err(q);
         }
-        queue.push_back(q);
-        self.total_queued += 1;
+        self.queues[kernel.index()].push_back(q);
+        self.rows[kernel.index()] += n;
+        self.total_queued += n;
         Ok(())
     }
 
@@ -96,15 +136,23 @@ impl<T> QueueSet<T> {
         self.total_queued == 0
     }
 
+    /// Rows queued for `kernel` (what admission compares to `depth`).
     pub fn queued_for(&self, kernel: KernelId) -> usize {
-        self.queues[kernel.index()].len()
+        self.rows[kernel.index()]
     }
 
     /// Batching policy: prefer the worker's current context if it has
-    /// work; otherwise the queue with the highest (length + age bonus)
-    /// score. Drains up to `max_batch` requests FIFO into `out`
+    /// work; otherwise the queue with the highest (rows + age bonus)
+    /// score. Takes up to `max_batch` **rows** FIFO into `out`
     /// (cleared first), which the worker reuses across batches —
     /// dispatch performs no per-batch allocation in steady state.
+    ///
+    /// An entry whose span exceeds the remaining row budget is
+    /// **split**: the head rides out with this take, the remainder
+    /// stays at the queue front — so the next worker (or the next
+    /// iteration of this one) picks up where this take stopped, and
+    /// one oversized batch fans out across every idle worker.
+    ///
     /// Returns the chosen kernel, or `None` when nothing is queued.
     pub fn take_batch_into(
         &mut self,
@@ -120,30 +168,43 @@ impl<T> QueueSet<T> {
         let kernel = match current_context {
             Some(k) if self.queued_for(k) > 0 => k,
             _ => {
-                let score = |q: &VecDeque<Queued<T>>| {
+                let score = |i: usize| {
                     let age_ms = now
-                        .duration_since(q.front().unwrap().enqueued)
+                        .duration_since(self.queues[i].front().unwrap().enqueued)
                         .as_secs_f64()
                         * 1e3;
-                    q.len() as f64 + age_ms * 0.1
+                    self.rows[i] as f64 + age_ms * 0.1
                 };
-                self.queues
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, q)| !q.is_empty())
+                (0..self.queues.len())
+                    .filter(|&i| !self.queues[i].is_empty())
                     // total_cmp: scores are finite here, but a NaN-safe
                     // total order costs nothing and cannot panic.
-                    .max_by(|(_, a), (_, b)| score(a).total_cmp(&score(b)))
-                    .map(|(i, _)| KernelId(i as u32))?
+                    .max_by(|&a, &b| score(a).total_cmp(&score(b)))
+                    .map(|i| KernelId(i as u32))?
             }
         };
         let q = &mut self.queues[kernel.index()];
-        let n = q.len().min(max_batch);
-        out.extend(q.drain(..n));
-        self.total_queued -= out.len();
+        let mut taken = 0usize;
+        while taken < max_batch {
+            let Some(front) = q.front_mut() else { break };
+            let span_rows = front.token.rows();
+            debug_assert!(span_rows > 0, "zero-row span in queue");
+            if span_rows <= max_batch - taken {
+                taken += span_rows;
+                out.push(q.pop_front().unwrap());
+            } else {
+                let head = Queued {
+                    enqueued: front.enqueued,
+                    token: front.token.take_front(max_batch - taken),
+                };
+                taken = max_batch;
+                out.push(head);
+            }
+        }
+        self.rows[kernel.index()] -= taken;
+        self.total_queued -= taken;
         Some(kernel)
     }
-
 }
 
 #[cfg(test)]
@@ -161,7 +222,7 @@ mod tests {
         }
     }
 
-    fn take<T>(
+    fn take<T: SpanToken>(
         qs: &mut QueueSet<T>,
         ctx: Option<KernelId>,
         max: usize,
@@ -169,6 +230,39 @@ mod tests {
         let mut out = Vec::new();
         let k = qs.take_batch_into(ctx, max, Instant::now(), &mut out)?;
         Some((k, out))
+    }
+
+    /// A splittable test span mirroring the production `RowSpan` shape.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Span {
+        id: u32,
+        row: u32,
+        len: u32,
+    }
+
+    impl SpanToken for Span {
+        fn rows(&self) -> usize {
+            self.len as usize
+        }
+
+        fn take_front(&mut self, n: usize) -> Span {
+            assert!(n > 0 && n < self.len as usize);
+            let head = Span {
+                id: self.id,
+                row: self.row,
+                len: n as u32,
+            };
+            self.row += n as u32;
+            self.len -= n as u32;
+            head
+        }
+    }
+
+    fn span(id: u32, row: u32, len: u32) -> Queued<Span> {
+        Queued {
+            enqueued: Instant::now(),
+            token: Span { id, row, len },
+        }
     }
 
     #[test]
@@ -196,6 +290,21 @@ mod tests {
     }
 
     #[test]
+    fn steal_weighs_rows_not_entries() {
+        // One 8-row span must outweigh three single-row entries: the
+        // policy measures queued work in rows.
+        let mut qs = QueueSet::new(2, 64);
+        qs.try_push(A, span(0, 0, 8)).unwrap();
+        for i in 0..3 {
+            qs.try_push(B, span(1, i, 1)).unwrap();
+        }
+        let (kernel, items) = take(&mut qs, None, 64).unwrap();
+        assert_eq!(kernel, A);
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].token.rows(), 8);
+    }
+
+    #[test]
     fn respects_max_batch_fifo_and_reuses_the_buffer() {
         let mut qs = QueueSet::new(1, 16);
         for i in 0..10 {
@@ -211,6 +320,54 @@ mod tests {
         qs.take_batch_into(None, 4, Instant::now(), &mut out).unwrap();
         assert_eq!(out.len(), 4);
         assert_eq!(out[0].token, 4);
+    }
+
+    #[test]
+    fn oversized_span_splits_across_successive_takes() {
+        // One 10-row span, workers taking 4 rows at a time: each take
+        // carries a consecutive head while the tail stays queued —
+        // the cross-worker fan-out of a single big batch.
+        let mut qs = QueueSet::new(1, 64);
+        qs.try_push(A, span(7, 0, 10)).unwrap();
+        assert_eq!(qs.queued_for(A), 10);
+        let (_, t1) = take(&mut qs, None, 4).unwrap();
+        assert_eq!(t1.len(), 1);
+        assert_eq!(t1[0].token, Span { id: 7, row: 0, len: 4 });
+        assert_eq!(qs.queued_for(A), 6);
+        let (_, t2) = take(&mut qs, None, 4).unwrap();
+        assert_eq!(t2[0].token, Span { id: 7, row: 4, len: 4 });
+        let (_, t3) = take(&mut qs, None, 4).unwrap();
+        assert_eq!(t3[0].token, Span { id: 7, row: 8, len: 2 });
+        assert!(qs.is_empty());
+        assert!(take(&mut qs, None, 4).is_none());
+    }
+
+    #[test]
+    fn take_pops_whole_spans_then_splits_the_last() {
+        let mut qs = QueueSet::new(1, 64);
+        qs.try_push(A, span(1, 0, 3)).unwrap();
+        qs.try_push(A, span(2, 0, 5)).unwrap();
+        // Budget 6: the whole first span plus a 3-row head of the
+        // second; the second's 2-row tail stays at the front.
+        let (_, items) = take(&mut qs, None, 6).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].token, Span { id: 1, row: 0, len: 3 });
+        assert_eq!(items[1].token, Span { id: 2, row: 0, len: 3 });
+        assert_eq!(qs.queued_for(A), 2);
+        let (_, rest) = take(&mut qs, None, 6).unwrap();
+        assert_eq!(rest[0].token, Span { id: 2, row: 3, len: 2 });
+    }
+
+    #[test]
+    fn depth_counts_rows_not_entries() {
+        let mut qs = QueueSet::new(1, 8);
+        qs.try_push(A, span(1, 0, 5)).unwrap();
+        // 5 + 4 > 8: refused, handed back intact.
+        let back = qs.try_push(A, span(2, 0, 4)).unwrap_err();
+        assert_eq!(back.token, Span { id: 2, row: 0, len: 4 });
+        qs.try_push(A, span(3, 0, 3)).unwrap();
+        assert_eq!(qs.queued_for(A), 8);
+        assert_eq!(qs.total_queued, 8);
     }
 
     #[test]

@@ -152,6 +152,26 @@ impl FlatBatch {
         &self.data
     }
 
+    /// Allocated capacity in `i32` words (watermark introspection).
+    pub fn capacity_words(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// If this batch's allocation exceeds `words`, discard its
+    /// contents and shrink the buffer to at most `words` capacity —
+    /// the completion slab's high-watermark trim, so one giant burst
+    /// does not pin its peak allocation on a recycled slot forever.
+    /// Batches at or under the watermark are left untouched (contents
+    /// included), keeping steady-state traffic allocation-free.
+    pub fn trim_to_words(&mut self, words: usize) {
+        if self.data.capacity() > words {
+            // shrink_to never goes below len, so drop contents first.
+            self.data.clear();
+            self.rows = 0;
+            self.data.shrink_to(words);
+        }
+    }
+
     /// Explode into row vectors (adapter for row-shaped APIs like the
     /// overlay simulator and the PJRT engine).
     pub fn to_rows(&self) -> Vec<Vec<i32>> {
@@ -253,6 +273,23 @@ mod tests {
         a.extend_from_batch(&b);
         assert_eq!(a.n_rows(), 3);
         assert_eq!(a.data(), &[1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn trim_to_words_shrinks_only_oversized_buffers() {
+        let mut b = FlatBatch::with_capacity(2, 4096);
+        b.push(&[1, 2]);
+        assert!(b.capacity_words() >= 8192);
+        b.trim_to_words(64);
+        assert!(b.capacity_words() <= 64, "oversized buffer must shrink");
+        assert_eq!(b.n_rows(), 0, "trim discards contents when it fires");
+        assert_eq!(b.arity(), 2, "shape survives the trim");
+        // Under the watermark: contents and capacity are untouched.
+        b.push(&[5, 6]);
+        let cap = b.capacity_words();
+        b.trim_to_words(64);
+        assert_eq!(b.capacity_words(), cap);
+        assert_eq!(b.to_rows(), vec![vec![5, 6]]);
     }
 
     #[test]

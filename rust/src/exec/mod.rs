@@ -41,7 +41,7 @@ pub use batch::FlatBatch;
 pub use pjrt_backend::PjrtBackend;
 pub use ref_backend::RefBackend;
 pub use sim_backend::SimBackend;
-pub use tape::{Tape, TapeOp, LANES};
+pub use tape::{Tape, TapeArena, TapeOp, LANES};
 pub use turbo_backend::TurboBackend;
 
 use crate::bench_suite;
@@ -270,8 +270,10 @@ pub struct Capabilities {
     pub max_batch: Option<usize>,
 }
 
-/// Result of one batch execution.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// Result of one batch execution. `Default` is the empty report —
+/// the starting state for the caller-owned report that
+/// [`Backend::execute_into`] refills on every call.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct ExecReport {
     /// One output row per input packet, in submission order.
     pub outputs: FlatBatch,
@@ -300,6 +302,31 @@ pub trait Backend {
         kernel: &CompiledKernel,
         batch: &FlatBatch,
     ) -> Result<ExecReport, ExecError>;
+
+    /// Execute into a caller-owned [`ExecReport`], refilling it in
+    /// place (`report.outputs` is reset to this kernel's output arity,
+    /// then one row is appended per input packet).
+    ///
+    /// This is the worker hot path: a worker thread keeps one report
+    /// forever and round-trips it through here, so a backend with a
+    /// native implementation (ref, turbo) performs **zero allocations
+    /// per batch** in steady state — the report's buffers are warm
+    /// after the first large batch. The default implementation simply
+    /// delegates to [`Backend::execute`] and moves the result over
+    /// (correct for every backend; sim and pjrt allocate inside their
+    /// substrates anyway, so a native path would buy them nothing).
+    ///
+    /// On `Err` the report's contents are unspecified; callers must
+    /// not read it without a preceding `Ok`.
+    fn execute_into(
+        &mut self,
+        kernel: &CompiledKernel,
+        batch: &FlatBatch,
+        report: &mut ExecReport,
+    ) -> Result<(), ExecError> {
+        *report = self.execute(kernel, batch)?;
+        Ok(())
+    }
 }
 
 /// Shared request validation: non-empty batch, exact input arity. The
@@ -542,6 +569,44 @@ mod tests {
         assert!(!caps.needs_artifacts);
         assert!(!BackendKind::Sim.needs_artifacts());
         assert!(BackendKind::Pjrt.needs_artifacts());
+    }
+
+    /// `execute_into` refills one caller-owned report — natively for
+    /// ref/turbo, via the default delegation for sim — and always
+    /// agrees with `execute`, across kernels of differing arity (the
+    /// report reshape path) and on error inputs (no panic, no stale
+    /// reads required).
+    #[test]
+    fn execute_into_agrees_with_execute_and_reuses_the_report() {
+        let reg = registry();
+        let mut rng = Rng::new(0x51AB);
+        for kind in [BackendKind::Ref, BackendKind::Turbo, BackendKind::Sim] {
+            let mut b = test_backend(kind).unwrap();
+            let mut report = ExecReport::default();
+            for name in ["poly6", "gradient", "chebyshev"] {
+                let k = reg.get(name).unwrap();
+                // A LANES-straddling row count exercises partial chunks.
+                let rows: Vec<Vec<i32>> = (0..21)
+                    .map(|_| (0..k.n_inputs).map(|_| rng.next_i32()).collect())
+                    .collect();
+                let batch = FlatBatch::from_rows(k.n_inputs, &rows);
+                let want = b.execute(k, &batch).unwrap();
+                b.execute_into(k, &batch, &mut report).unwrap();
+                assert_eq!(report.outputs, want.outputs, "{name} ({kind})");
+                assert_eq!(report.outputs.n_rows(), rows.len(), "{name} ({kind})");
+                assert_eq!(report.outputs.arity(), k.n_outputs, "{name} ({kind})");
+            }
+            // Shape errors surface structurally through the _into path.
+            let k = reg.get("gradient").unwrap();
+            assert!(matches!(
+                b.execute_into(k, &FlatBatch::new(5), &mut report),
+                Err(ExecError::EmptyBatch { .. })
+            ));
+            assert!(matches!(
+                b.execute_into(k, &FlatBatch::from_rows(2, &[vec![1, 2]]), &mut report),
+                Err(ExecError::WrongArity { .. })
+            ));
+        }
     }
 
     /// The three artifact-free substrates agree bit-for-bit on every

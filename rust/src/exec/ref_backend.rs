@@ -1,23 +1,32 @@
 //! Interpreter backend: the functional DFG oracle on the serving path.
 //!
-//! Executes batches through [`crate::dfg::eval_batch`] — a node-by-node
+//! Executes batches through [`crate::dfg::eval_into`] — a node-by-node
 //! graph walk per packet (a `match` and bounds-checked indexing per
-//! node) with the per-node value scratch hoisted out of the packet
-//! loop. No hardware model, no artifacts, bit-exact wrapping int32
-//! semantics. This is the reference substrate the other backends are
-//! verified against: it deliberately stays a *graph traversal* (it
+//! node) with the per-node value scratch hoisted into the backend and
+//! reused forever. No hardware model, no artifacts, bit-exact wrapping
+//! int32 semantics. This is the reference substrate the other backends
+//! are verified against: it deliberately stays a *graph traversal* (it
 //! shares `eval_into` with the one-packet oracle, and nothing with
 //! the turbo backend's pre-compiled tape), so ref-vs-turbo
 //! equivalence compares two genuinely different executable forms.
+//!
+//! The native [`Backend::execute_into`] writes rows straight into the
+//! caller's reusable [`ExecReport`], so even the oracle path is
+//! allocation-free in steady state — which keeps the worker-loop
+//! zero-allocation audit meaningful on the `ref` substrate too.
 
 use super::{
     validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport, FlatBatch,
 };
-use crate::dfg::{eval, eval_batch};
+use crate::dfg::eval_into;
 
-/// The DFG-interpreter backend (stateless).
+/// The DFG-interpreter backend.
 #[derive(Debug, Default)]
 pub struct RefBackend {
+    /// Per-node value scratch for `eval_into`, reused across packets.
+    value: Vec<i32>,
+    /// One packet's outputs, copied into the report row by row.
+    row_out: Vec<i32>,
     /// Packets executed (introspection / tests).
     pub executed: u64,
 }
@@ -47,31 +56,40 @@ impl Backend for RefBackend {
         kernel: &CompiledKernel,
         batch: &FlatBatch,
     ) -> Result<ExecReport, ExecError> {
+        let mut report = ExecReport::default();
+        self.execute_into(kernel, batch, &mut report)?;
+        Ok(report)
+    }
+
+    /// Native zero-allocation path: one `eval_into` per packet against
+    /// backend-owned scratch, appending rows to the caller's warm
+    /// output buffer. `FlatBatch::iter` yields one (possibly empty)
+    /// slice per row, so zero-input kernels take the same loop.
+    fn execute_into(
+        &mut self,
+        kernel: &CompiledKernel,
+        batch: &FlatBatch,
+        report: &mut ExecReport,
+    ) -> Result<(), ExecError> {
         validate_batch(kernel, batch)?;
-        let outputs = if kernel.n_inputs > 0 {
-            FlatBatch::from_flat(kernel.n_outputs, eval_batch(&kernel.dfg, batch.data()))
-        } else {
-            // Zero-input kernels (constant graphs built through
-            // `KernelRegistry::compile`) have no flat row shape;
-            // evaluate them packet by packet.
-            let mut out = FlatBatch::with_capacity(kernel.n_outputs, batch.n_rows());
-            for row in batch.iter() {
-                out.push_iter(eval(&kernel.dfg, row));
-            }
-            out
-        };
+        report.outputs.reset(kernel.n_outputs);
+        report.outputs.reserve_rows(batch.n_rows());
+        for row in batch.iter() {
+            self.row_out.clear();
+            eval_into(&kernel.dfg, row, &mut self.value, &mut self.row_out);
+            report.outputs.push(&self.row_out);
+        }
+        report.switch_cycles = 0;
+        report.fabric_cycles = None;
         self.executed += batch.n_rows() as u64;
-        Ok(ExecReport {
-            outputs,
-            switch_cycles: 0,
-            fabric_cycles: None,
-        })
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dfg::eval;
     use crate::exec::KernelRegistry;
 
     #[test]
@@ -100,5 +118,23 @@ mod tests {
             Err(ExecError::EmptyBatch { .. })
         ));
         assert_eq!(b.executed, 0);
+    }
+
+    #[test]
+    fn execute_into_reuses_scratch_across_batches() {
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        let mut b = RefBackend::new();
+        let mut report = ExecReport::default();
+        for name in ["gradient", "poly6", "gradient"] {
+            let k = reg.get(name).unwrap();
+            let rows = vec![vec![1; k.n_inputs], vec![-3; k.n_inputs], vec![40; k.n_inputs]];
+            let batch = FlatBatch::from_rows(k.n_inputs, &rows);
+            b.execute_into(k, &batch, &mut report).unwrap();
+            assert_eq!(report.outputs.n_rows(), rows.len(), "{name}");
+            for (pkt, o) in rows.iter().zip(report.outputs.iter()) {
+                assert_eq!(o, &eval(&k.dfg, pkt)[..], "{name}");
+            }
+        }
+        assert_eq!(b.executed, 9);
     }
 }

@@ -2,23 +2,30 @@
 //!
 //! Executes batches through the kernel's pre-compiled [`super::Tape`]
 //! (built once at registry-compile time) with a per-backend reusable
-//! scratch arena — the steady-state request path performs no per-packet
-//! allocation and no graph traversal. This is the serving-side
-//! expression of the paper's thesis: compile the kernel onto the
-//! substrate **once**, then stream packets through a flat instruction
-//! sequence at full rate. Like `ref` it is functional-only (no fabric
-//! timing, no context-switch cost); unlike `ref` it never touches the
-//! DFG at execution time.
+//! [`super::TapeArena`] — the steady-state request path performs no
+//! per-packet allocation, no graph traversal, and (same-kernel
+//! traffic) no arena setup: the arena caches the resident tape's
+//! constants by epoch. This is the serving-side expression of the
+//! paper's thesis: compile the kernel onto the substrate **once**,
+//! then stream packets through a flat instruction sequence at full
+//! rate. Like `ref` it is functional-only (no fabric timing, no
+//! context-switch cost); unlike `ref` it never touches the DFG at
+//! execution time.
+//!
+//! The native [`Backend::execute_into`] is the zero-allocation entry:
+//! workers reuse one [`ExecReport`] forever and the tape writes output
+//! rows straight into its warm buffer.
 
 use super::{
     validate_batch, Backend, Capabilities, CompiledKernel, ExecError, ExecReport, FlatBatch,
+    TapeArena,
 };
 
 /// The tape-interpreter backend.
 #[derive(Debug, Default)]
 pub struct TurboBackend {
     /// Slot-major lane arena, reused across batches and kernels.
-    scratch: Vec<i32>,
+    arena: TapeArena,
     /// Packets executed (introspection / tests).
     pub executed: u64,
 }
@@ -30,7 +37,7 @@ impl TurboBackend {
 
     /// Current scratch arena size in bytes (tests: proves reuse).
     pub fn scratch_bytes(&self) -> usize {
-        self.scratch.len() * std::mem::size_of::<i32>()
+        self.arena.scratch_bytes()
     }
 }
 
@@ -53,15 +60,26 @@ impl Backend for TurboBackend {
         kernel: &CompiledKernel,
         batch: &FlatBatch,
     ) -> Result<ExecReport, ExecError> {
+        let mut report = ExecReport::default();
+        self.execute_into(kernel, batch, &mut report)?;
+        Ok(report)
+    }
+
+    /// Native zero-allocation path: reset the caller's output buffer
+    /// in place (keeping its allocation) and stream the tape into it.
+    fn execute_into(
+        &mut self,
+        kernel: &CompiledKernel,
+        batch: &FlatBatch,
+        report: &mut ExecReport,
+    ) -> Result<(), ExecError> {
         validate_batch(kernel, batch)?;
-        let mut outputs = FlatBatch::with_capacity(kernel.n_outputs, batch.n_rows());
-        kernel.tape.execute_into(batch, &mut self.scratch, &mut outputs);
+        report.outputs.reset(kernel.n_outputs);
+        kernel.tape.execute_into(batch, &mut self.arena, &mut report.outputs);
+        report.switch_cycles = 0;
+        report.fabric_cycles = None;
         self.executed += batch.n_rows() as u64;
-        Ok(ExecReport {
-            outputs,
-            switch_cycles: 0,
-            fabric_cycles: None,
-        })
+        Ok(())
     }
 }
 
@@ -123,5 +141,23 @@ mod tests {
             b.execute(k, &batch).unwrap();
         }
         assert_eq!(b.scratch_bytes(), bytes);
+    }
+
+    #[test]
+    fn execute_into_reuses_one_report_across_kernels() {
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        let mut b = TurboBackend::new();
+        let mut report = ExecReport::default();
+        for name in ["poly6", "gradient", "poly6"] {
+            let k = reg.get(name).unwrap();
+            let rows = vec![vec![2; k.n_inputs], vec![-9; k.n_inputs]];
+            let batch = FlatBatch::from_rows(k.n_inputs, &rows);
+            b.execute_into(k, &batch, &mut report).unwrap();
+            assert_eq!(report.outputs.arity(), k.n_outputs, "{name}");
+            for (pkt, o) in rows.iter().zip(report.outputs.iter()) {
+                assert_eq!(o, &eval(&k.dfg, pkt)[..], "{name}");
+            }
+        }
+        assert_eq!(b.executed, 6);
     }
 }

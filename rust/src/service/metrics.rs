@@ -51,6 +51,12 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub mean_batch_size: f64,
     pub context_switches: u64,
+    /// Heap allocations observed on the workers' dispatch path
+    /// (take → gather → execute → reply, excluding the metrics
+    /// sample buffers). 0 in steady state — the bench hard-asserts
+    /// it; requires the counting allocator to be installed (bench
+    /// binaries), otherwise reads 0.
+    pub worker_allocs: u64,
     /// Simulated overlay fabric time (µs at 300 MHz), incl. switches.
     pub fabric_busy_us: f64,
     /// Simulated time spent on context switching only.
@@ -99,6 +105,7 @@ impl MetricsSnapshot {
             batches: raw.batches,
             mean_batch_size: raw.mean_batch_size(),
             context_switches: raw.context_switches,
+            worker_allocs: raw.worker_allocs,
             fabric_busy_us: raw.fabric_busy_us,
             fabric_switch_us: raw.fabric_switch_us,
             wall_s,
@@ -122,6 +129,7 @@ impl MetricsSnapshot {
             ("batches", json::i(self.batches as i64)),
             ("mean_batch_size", json::f(self.mean_batch_size)),
             ("context_switches", json::i(self.context_switches as i64)),
+            ("worker_allocs", json::i(self.worker_allocs as i64)),
             ("fabric_busy_us", json::f(self.fabric_busy_us)),
             ("fabric_switch_us", json::f(self.fabric_switch_us)),
             ("wall_s", json::f(self.wall_s)),

@@ -88,6 +88,7 @@ pub struct ServiceBuilder {
     queue_depth: usize,
     sim_replicas: usize,
     sim_fifo_capacity: usize,
+    slab_trim_words: usize,
     kernels: Option<Vec<Dfg>>,
 }
 
@@ -101,6 +102,7 @@ impl Default for ServiceBuilder {
             queue_depth: 1024,
             sim_replicas: 1,
             sim_fifo_capacity: 4096,
+            slab_trim_words: crate::coordinator::completion::DEFAULT_TRIM_WORDS,
             kernels: None,
         }
     }
@@ -153,6 +155,15 @@ impl ServiceBuilder {
         self
     }
 
+    /// Completion-slot buffer watermark in `i32` words (default:
+    /// 64 Ki). Recycled slots shrink buffers grown past this back
+    /// down, so one burst batch does not pin its peak allocation on
+    /// the pool; buffers under the watermark are never touched.
+    pub fn slab_trim_words(mut self, words: usize) -> ServiceBuilder {
+        self.slab_trim_words = words;
+        self
+    }
+
     /// Serve an explicit kernel set instead of the benchmark suite
     /// (custom workloads, tests).
     pub fn kernels(mut self, graphs: Vec<Dfg>) -> ServiceBuilder {
@@ -180,6 +191,7 @@ impl ServiceBuilder {
             queue_depth: self.queue_depth,
             sim_replicas: self.sim_replicas,
             sim_fifo_capacity: self.sim_fifo_capacity,
+            slab_trim_words: self.slab_trim_words,
             registry: Arc::new(registry),
         })
         .map_err(|e| ServiceError::Backend {

@@ -339,12 +339,21 @@ fn prop_backend_equivalence_ref_vs_turbo() {
 /// sources go through frontend -> CompiledKernel (schedule + tape) and
 /// the tape must agree with the oracle — including squares of 1 << 17
 /// and i32::MIN, the multiply/add wraparound corners.
+///
+/// `TMFU_FUZZ_CASES` scales the case count: CI reruns this in release
+/// mode with a raised count so the SIMD lane kernels — which only
+/// exist under optimization — face the oracle in the codegen mode
+/// users actually run.
 #[test]
 fn fuzz_turbo_tape_against_oracle() {
     use tmfu_overlay::exec::{Backend, CompiledKernel, FlatBatch, TurboBackend};
+    let cases: usize = std::env::var("TMFU_FUZZ_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
     let mut rng = Rng::new(0x7EA7);
     let mut tested = 0;
-    for case in 0..50 {
+    for case in 0..cases {
         let src = random_kernel_source(&mut rng, 3000 + case);
         let Ok(g) = frontend::compile(&src) else { continue };
         if g.n_ops() == 0 {
@@ -371,7 +380,10 @@ fn fuzz_turbo_tape_against_oracle() {
         assert_eq!(t.outputs.to_rows(), want, "case {case} diverged\n{src}");
         tested += 1;
     }
-    assert!(tested >= 30, "only {tested} cases exercised");
+    // Oversized kernels legitimately fail to schedule; require the
+    // same ~60% hit rate the default 50-case run has always met.
+    let floor = cases * 3 / 5;
+    assert!(tested >= floor, "only {tested}/{cases} cases exercised (floor {floor})");
 }
 
 /// End-to-end spot check: the same workload served through a turbo
@@ -592,6 +604,125 @@ fn slab_stress_under_concurrent_shutdown() {
          completed or failed exactly once, abandoned or not"
     );
     // Idempotent: a second shutdown finds nothing left to do.
+    service.shutdown().unwrap();
+}
+
+/// Cross-worker batch splitting is invisible to clients: a batch whose
+/// row count is not a multiple of the SIMD lane width (16), the chunk
+/// width (8) or the split width (`max_batch`) fans out across workers
+/// as row spans and recombines in the completion slab bit-exactly —
+/// same rows, same order — as the unsplit direct-backend run, for
+/// every benchmark kernel (wrapping corners seeded into each batch).
+#[test]
+fn split_batches_recombine_bit_exactly() {
+    use tmfu_overlay::exec::{make_backend, Backend, BackendKind, FlatBatch};
+    use tmfu_overlay::service::OverlayService;
+
+    // 131 is prime: no alignment with LANES (16), the chunk width (8)
+    // or the 5-row split width, so span boundaries land mid-chunk.
+    const ROWS: usize = 131;
+    let service = OverlayService::builder()
+        .backend(BackendKind::Turbo)
+        .pipelines(4)
+        .max_batch(5)
+        .queue_depth(4 * ROWS)
+        .build()
+        .unwrap();
+    let mut direct =
+        make_backend(BackendKind::Turbo, std::path::Path::new("artifacts"), 1, 4096).unwrap();
+    let mut rng = Rng::new(0x51D);
+    for h in service.handles() {
+        let kernel = h.compiled().clone();
+        let mut batch = FlatBatch::new(h.arity());
+        batch.push_iter((0..h.arity()).map(|_| i32::MIN));
+        batch.push_iter((0..h.arity()).map(|_| 1 << 17));
+        for _ in 0..ROWS - 2 {
+            batch.push_iter((0..h.arity()).map(|_| rng.next_i32()));
+        }
+        let want = direct.execute(&kernel, &batch).unwrap().outputs;
+        let got = h.call_batch(&batch).unwrap();
+        assert_eq!(got.n_rows(), ROWS, "{}: row count changed in flight", h.name());
+        assert_eq!(got, want, "{}: split batch recombined differently", h.name());
+    }
+    service.shutdown().unwrap();
+}
+
+/// The split path keeps the admission ledger exact under shutdown:
+/// batches admitted before the flag drain (possibly as several spans
+/// on different workers), abandoned `PendingBatch`es recycle their
+/// slots, and `admitted == completed + failed` holds to the row.
+#[test]
+fn split_batch_ledger_survives_concurrent_shutdown() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+    use tmfu_overlay::exec::{BackendKind, FlatBatch};
+    use tmfu_overlay::service::{OverlayService, ServiceError};
+
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(BackendKind::Turbo)
+            .pipelines(3)
+            .max_batch(7)
+            .queue_depth(100_000)
+            .build()
+            .unwrap(),
+    );
+    let handle = service.kernel("gradient").unwrap();
+    let admitted = Arc::new(AtomicU64::new(0));
+    let mut threads = Vec::new();
+    for t in 0..4i32 {
+        let h = handle.clone();
+        let dfg = handle.compiled().dfg.clone();
+        let admitted = Arc::clone(&admitted);
+        threads.push(std::thread::spawn(move || {
+            for i in 0..120i32 {
+                // Row counts sweep 1..=40 — never aligned with the
+                // 7-row split width or the 16-lane chunks.
+                let rows = 1 + ((t * 13 + i * 7) % 40) as usize;
+                let mut batch = FlatBatch::new(5);
+                for r in 0..rows {
+                    batch.push_iter([t, i, r as i32, 7, t - i].into_iter());
+                }
+                let p = match h.submit_batch(&batch) {
+                    Ok(p) => p,
+                    // The main thread shuts the service down mid-run;
+                    // admission is all-or-nothing per batch.
+                    Err(ServiceError::ShutDown) => continue,
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                };
+                admitted.fetch_add(rows as u64, Ordering::SeqCst);
+                if i % 3 == 0 {
+                    // Abandon mid-flight: the slot must recycle and
+                    // the rows still land in the completed counter.
+                    drop(p);
+                } else {
+                    let got = p.wait().unwrap();
+                    assert_eq!(got.n_rows(), rows);
+                    for (r, row) in batch.iter().enumerate() {
+                        assert_eq!(
+                            got.row(r),
+                            eval(&dfg, row).as_slice(),
+                            "row {r} diverged from the oracle"
+                        );
+                    }
+                }
+            }
+        }));
+    }
+    // Fire shutdown while the batch submitters are mid-flight.
+    std::thread::sleep(Duration::from_millis(5));
+    service.shutdown().unwrap();
+    for th in threads {
+        th.join().unwrap();
+    }
+    let snap = service.metrics();
+    assert_eq!(snap.failed, 0, "no request may fail in this workload");
+    assert_eq!(
+        snap.completed + snap.failed,
+        admitted.load(Ordering::SeqCst),
+        "split-batch admission ledger drifted under shutdown"
+    );
     service.shutdown().unwrap();
 }
 

@@ -7,11 +7,16 @@ Hard gates (fail the build):
   * ``submit_allocs_per_call`` must be exactly 0 — the completion
     slab's steady-state submit -> wait path is allocation-free, audited
     with a thread-local allocation counter (bench_perf section B6).
+  * ``worker_allocs_per_batch`` must be exactly 0 — the worker loop's
+    take -> gather -> execute_into -> reply path is allocation-free in
+    steady state, audited via per-worker thread-local counters
+    published through the engine metrics (bench_perf section B6).
   * ``peak_threads_10k_inflight`` (when measured — Linux) must stay
     O(workers + connections): a value scaling with the in-flight count
     means the wire reactor regressed to thread-per-call.
-  * ``turbo_speedup_vs_ref`` must meet its recorded floor (PR 2's
-    10x acceptance gate), when both numbers are present.
+  * ``turbo_speedup_vs_ref`` must meet its recorded floor (raised to
+    20x for the SIMD-lowered interpreter in PR 6), when both numbers
+    are present.
 
 Soft gate:
   * ``wire_call_overhead_us`` is compared against the committed
@@ -45,6 +50,13 @@ def main() -> None:
     if allocs != 0:
         fail(f"submit_allocs_per_call = {allocs}, must be exactly 0")
     print("bench-smoke: submit_allocs_per_call == 0 (allocation-free submit path)")
+
+    worker_allocs = meta.get("worker_allocs_per_batch")
+    if worker_allocs is None:
+        fail("worker_allocs_per_batch missing from the bench JSON (B6 worker audit did not run)")
+    if worker_allocs != 0:
+        fail(f"worker_allocs_per_batch = {worker_allocs}, must be exactly 0")
+    print("bench-smoke: worker_allocs_per_batch == 0 (allocation-free worker loop)")
 
     peak = meta.get("peak_threads_10k_inflight")
     if peak is None:

@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify fmt clippy doc wire-smoke bench bench-smoke bench-all bench-mirror artifacts dfg check-dfg clean
+.PHONY: build test verify fmt clippy doc wire-smoke router-smoke bench bench-smoke bench-all bench-mirror artifacts dfg check-dfg clean
 
 build:
 	$(CARGO) build --release
@@ -27,31 +27,38 @@ doc:
 wire-smoke: build
 	./tools/wire_smoke.sh
 
+# Failover smoke: two `tmfu listen` replicas behind `tmfu router`, a
+# 400-call burst with one replica kill -9'd while it runs, then
+# SIGTERM drains of the router and the survivor (DESIGN.md §11).
+router-smoke: build
+	./tools/router_smoke.sh
+
 # The full gate: formatting, lints, release build, test suite, doc
-# build, wire loopback smoke, serving-perf smoke (allocation-free
-# submit path AND worker loop + reactor thread ceiling + wire
-# overhead regression).
-verify: fmt clippy build test doc wire-smoke bench-smoke
+# build, wire loopback smoke, router failover smoke, serving-perf
+# smoke (allocation-free submit path AND worker loop + reactor thread
+# ceiling + wire/router overhead regression).
+verify: fmt clippy build test doc wire-smoke router-smoke bench-smoke
 
 # Perf trajectory: run the serving-path benchmarks and (re)write the
 # checked-in baseline JSON (packets/s per backend per kernel, sim
-# cycles/s, SIMD-turbo-vs-ref headline ratio, in-flight scaling + the
-# zero-allocation submit AND worker-loop audits). Cargo runs bench
-# binaries with cwd = the package root (rust/), hence the ../ on the
-# path.
+# cycles/s, SIMD-turbo-vs-ref headline ratio, in-flight scaling, the
+# zero-allocation submit AND worker-loop audits + the wire and router
+# per-call overheads). Cargo runs bench binaries with cwd = the
+# package root (rust/), hence the ../ on the path.
 bench:
-	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR6.json
+	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR7.json
 
 # Fast serving-perf gate for `make verify`/CI: run bench_perf in fast
 # mode and assert the hard invariants — submit_allocs_per_call == 0,
 # worker_allocs_per_batch == 0, the reactor thread ceiling, the raised
-# turbo floor, and (when the committed baseline carries a measured
-# number) that the wire per-call overhead did not regress. bench_perf
-# itself hard-asserts the alloc audits; the checker re-asserts from
-# the JSON so a silent bench edit cannot un-gate them.
+# turbo floor, the router forwarding overhead staying within 3x of
+# the wire framing overhead, and (when the committed baseline carries
+# a measured number) that the wire per-call overhead did not regress.
+# bench_perf itself hard-asserts the alloc audits; the checker
+# re-asserts from the JSON so a silent bench edit cannot un-gate them.
 bench-smoke: build
 	TMFU_BENCH_FAST=1 $(CARGO) bench --bench bench_perf -- --json ../BENCH_SMOKE.json
-	$(PYTHON) tools/bench_smoke_check.py BENCH_SMOKE.json BENCH_PR6.json
+	$(PYTHON) tools/bench_smoke_check.py BENCH_SMOKE.json BENCH_PR7.json
 
 # Every bench target (paper tables/figures + perf).
 bench-all:

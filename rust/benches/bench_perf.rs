@@ -11,13 +11,17 @@
 //!   B5   wire loopback: the same calls through `tmfu listen` framing
 //!        over a unix socket vs the in-process handle — the JSON
 //!        reports the per-call and per-packet framing overhead
+//!   B7   router forwarding: the same call through `tmfu router`
+//!        fronting the wire backend — the JSON reports the added
+//!        per-call store-and-forward overhead of the fault-tolerant
+//!        hop
 //!   L2/L1 PJRT batch execution (artifact-gated)
 //!
 //! Run `TMFU_BENCH_FAST=1 cargo bench` for a quick pass. With
 //! `-- --json <path>` the measurements (plus the headline
 //! turbo-vs-ref speedup on poly6 at batch 1024) are written as JSON —
 //! `make bench` uses this to produce the checked-in perf trajectory
-//! baseline (`BENCH_PR6.json`).
+//! baseline (`BENCH_PR7.json`).
 
 use tmfu_overlay::arch::Pipeline;
 use tmfu_overlay::bench_suite;
@@ -25,6 +29,7 @@ use tmfu_overlay::client::OverlayClient;
 use tmfu_overlay::exec::{
     Backend, BackendKind, FlatBatch, KernelRegistry, RefBackend, SimBackend, TurboBackend,
 };
+use tmfu_overlay::router::{Router, RouterConfig};
 use tmfu_overlay::runtime::Engine;
 use tmfu_overlay::sched::Program;
 use tmfu_overlay::service::{KernelHandle, OverlayService};
@@ -421,6 +426,56 @@ fn main() -> anyhow::Result<()> {
         }
         drop(remote);
         drop(client);
+        server.shutdown();
+        service.shutdown()?;
+    }
+
+    section("B7 router forwarding (router hop vs direct wire)");
+    {
+        let service = std::sync::Arc::new(
+            OverlayService::builder()
+                .backend(BackendKind::Turbo)
+                .pipelines(2)
+                .max_batch(32)
+                .build()?,
+        );
+        let sock = std::env::temp_dir()
+            .join(format!("tmfu-bench-router-be-{}.sock", std::process::id()));
+        let addr = ListenAddr::Unix(sock.clone());
+        let server = WireServer::bind(std::sync::Arc::clone(&service), &addr)?;
+        let direct = OverlayClient::connect(&format!("unix:{}", sock.display()))?;
+        let dk = direct.kernel("gradient")?;
+        let inputs = [3, 5, 2, 7, 1];
+        let m_direct = b.run_with_items("wire::call(gradient) direct to backend", 1.0, || {
+            dk.call(black_box(&inputs)).unwrap()
+        });
+        println!("{}   (items = requests)", report.record(m_direct.clone()).report_line());
+
+        // The router adds one full store-and-forward hop: a second
+        // socket, a second framing pass, and the forwarding ledger
+        // (admission, deadline timer, retry bookkeeping).
+        let rsock = std::env::temp_dir()
+            .join(format!("tmfu-bench-router-{}.sock", std::process::id()));
+        let cfg = RouterConfig::new(vec![format!("unix:{}", sock.display())]);
+        let router = Router::start(cfg, &ListenAddr::Unix(rsock.clone()))?;
+        let client = OverlayClient::connect(&format!("unix:{}", rsock.display()))?;
+        let rk = client.kernel("gradient")?;
+        let m_routed = b.run_with_items("router::call(gradient) through the router", 1.0, || {
+            rk.call(black_box(&inputs)).unwrap()
+        });
+        println!("{}   (items = requests)", report.record(m_routed.clone()).report_line());
+        let router_overhead_us = (m_routed.mean_ns - m_direct.mean_ns) / 1e3;
+        report.set_meta("router_call_overhead_us", json::f(router_overhead_us));
+        println!(
+            "\nrouter overhead: {router_overhead_us:.1} us/call over the direct wire path \
+             (one extra socket hop + forwarding ledger)"
+        );
+
+        drop(rk);
+        drop(client);
+        router.shutdown();
+        drop(dk);
+        drop(direct);
         server.shutdown();
         service.shutdown()?;
     }

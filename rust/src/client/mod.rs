@@ -48,12 +48,23 @@
 //! and [`RemotePending`]s then answer `Disconnected` (a network
 //! session ends with its connection, unlike in-process handles, which
 //! outlive the service value).
+//!
+//! Timeouts: [`OverlayClient::builder`] exposes a connect timeout and
+//! a read timeout (both default 30 s). The read timeout is a *silence
+//! bound*, not a per-call deadline: if replies are owed and the socket
+//! stays silent past it, the connection is declared dead and every
+//! waiter gets the typed `Disconnected` instead of blocking forever.
+//! Per-call deadlines stay where they were — `wait_timeout` /
+//! `wait_deadline` on the pending handle.
 
+use crate::coordinator::completion::WakeTarget;
 use crate::exec::FlatBatch;
 use crate::service::ServiceError;
 use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
 use crate::wire::{
-    read_frame, write_frame, Frame, ListenAddr, WireStream, WIRE_VERSION_MAX, WIRE_VERSION_MIN,
+    read_frame_patient, write_frame, Frame, ListenAddr, PatientRead, WireStream, HEALTH_DRAINING,
+    WIRE_VERSION_MAX, WIRE_VERSION_MIN,
 };
 use std::io::{BufReader, BufWriter, Write};
 use std::sync::{Arc, Condvar, Mutex};
@@ -69,6 +80,7 @@ enum ServerReply {
     },
     Rows(FlatBatch),
     Metrics(String),
+    Health { status: u8, inflight: u32 },
 }
 
 type ReplyResult = Result<ServerReply, ServiceError>;
@@ -94,6 +106,11 @@ enum Phase {
 struct ReplyState {
     generation: u32,
     phase: Phase,
+    /// Doorbell rung when this slot settles (reply or connection
+    /// death), so a reactor can multiplex many remote calls on one
+    /// wake source instead of a thread per call. `None` for plain
+    /// condvar waits.
+    waker: Option<WakeTarget>,
 }
 
 /// One recycled reply slot: its own mutex + condvar, so a completion
@@ -112,6 +129,7 @@ impl ReplySlot {
                 // "no correlatable request" sentinel.
                 generation: 1,
                 phase: Phase::Free,
+                waker: None,
             }),
             cv: Condvar::new(),
         }
@@ -177,7 +195,7 @@ impl Demux {
     /// forever. (Nesting the slot lock inside the demux lock here is
     /// the one place the two are held together; every other path
     /// takes them strictly one at a time, so no cycle exists.)
-    fn reserve(&self) -> Option<ReplyTicket> {
+    fn reserve(&self, waker: Option<WakeTarget>) -> Option<ReplyTicket> {
         let mut d = self.m.lock().unwrap();
         if d.closed {
             return None;
@@ -194,6 +212,7 @@ impl Demux {
             let mut s = slot.m.lock().unwrap();
             debug_assert!(matches!(s.phase, Phase::Free), "reserved a non-free slot");
             s.phase = Phase::Waiting;
+            s.waker = waker;
             s.generation
         };
         drop(d);
@@ -219,8 +238,21 @@ impl Demux {
             let mut s = slot.m.lock().unwrap();
             s.generation = s.generation.wrapping_add(1);
             s.phase = Phase::Free;
+            s.waker = None;
         }
         self.m.lock().unwrap().free.push(idx);
+    }
+
+    /// Whether any request is currently outstanding (Waiting or
+    /// Abandoned). Drives the reader's idle handling: silence past the
+    /// read timeout only condemns the connection when a reply is
+    /// actually owed. (Demux lock then slot lock — the same order as
+    /// [`Self::reserve`], so no cycle.)
+    fn has_inflight(&self) -> bool {
+        let d = self.m.lock().unwrap();
+        d.slots.iter().any(|s| {
+            matches!(s.m.lock().unwrap().phase, Phase::Waiting | Phase::Abandoned)
+        })
     }
 
     /// Reader-side: complete the request a reply frame names. `false`
@@ -249,8 +281,12 @@ impl Demux {
         }
         if matches!(s.phase, Phase::Waiting) {
             s.phase = Phase::Done(result);
+            let waker = s.waker.take();
             drop(s);
             slot.cv.notify_all();
+            if let Some((w, tag)) = waker {
+                w.ring(tag);
+            }
             return true;
         }
         false
@@ -273,8 +309,12 @@ impl Demux {
             let mut s = slot.m.lock().unwrap();
             if matches!(s.phase, Phase::Waiting) {
                 s.phase = Phase::Gone;
+                let waker = s.waker.take();
                 drop(s);
                 slot.cv.notify_all();
+                if let Some((w, tag)) = waker {
+                    w.ring(tag);
+                }
             } else if matches!(s.phase, Phase::Abandoned) {
                 drop(s);
                 self.release(&slot, idx);
@@ -428,7 +468,19 @@ impl ClientShared {
         kernel: &str,
         build: impl FnOnce(u64) -> Frame,
     ) -> Result<ReplyTicket, ServiceError> {
-        let Some(ticket) = self.demux.reserve() else {
+        self.send_with(kernel, None, build)
+    }
+
+    /// [`Self::send`] with an optional completion doorbell, attached
+    /// in the same critical section that marks the slot Waiting — so
+    /// the waker can never miss a reply that races the send.
+    fn send_with(
+        &self,
+        kernel: &str,
+        waker: Option<WakeTarget>,
+        build: impl FnOnce(u64) -> Frame,
+    ) -> Result<ReplyTicket, ServiceError> {
+        let Some(ticket) = self.demux.reserve(waker) else {
             return Err(self.drain_error(kernel));
         };
         let frame = build(ticket.request_id());
@@ -477,13 +529,63 @@ fn bad_reply(kernel: &str) -> ServiceError {
     }
 }
 
+/// Classify receive failures that mean "the connection is over"
+/// rather than "the peer spoke garbage". These leave `fatal` unset, so
+/// every waiter gets the typed per-kernel
+/// [`ServiceError::Disconnected`] instead of an opaque transport
+/// message.
+fn is_disconnect(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
 /// Takes the handshake-time `BufReader` whole — its buffer may already
 /// hold bytes past HelloOk, which a raw-stream restart would lose.
 fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
+    // The drain must run on *every* exit from this thread — including
+    // a panic — or waiters block forever on slots nobody will settle.
+    struct DrainOnExit(Arc<ClientShared>);
+    impl Drop for DrainOnExit {
+        fn drop(&mut self) {
+            self.0.demux.drain();
+        }
+    }
+    let _drain = DrainOnExit(Arc::clone(&shared));
+    // Consecutive read-timeout ticks with replies owed. Two strikes —
+    // not one — so a request that lands just before a tick cannot
+    // condemn a healthy connection: by the second strike the socket
+    // has been silent for a full timeout window *while* that request
+    // was outstanding.
+    let mut idle_strikes = 0u32;
     loop {
-        let frame = match read_frame(&mut r) {
-            Ok(Some(f)) => f,
-            Ok(None) => break,
+        let frame = match read_frame_patient(&mut r) {
+            Ok(PatientRead::Frame(f)) => f,
+            // Clean close or reset: leave `fatal` unset — waiters
+            // construct the typed per-kernel Disconnected themselves.
+            Ok(PatientRead::Eof) => break,
+            Ok(PatientRead::Idle) => {
+                if !shared.demux.has_inflight() {
+                    // Quiet connection, nothing owed: keep waiting.
+                    idle_strikes = 0;
+                    continue;
+                }
+                idle_strikes += 1;
+                if idle_strikes >= 2 {
+                    // Replies owed and the server silent past the
+                    // bound: declare the connection dead instead of
+                    // letting callers block indefinitely.
+                    shared.control.shutdown_both();
+                    break;
+                }
+                continue;
+            }
+            Err(e) if is_disconnect(&e) => break,
             Err(e) => {
                 *shared.fatal.lock().unwrap() = Some(ServiceError::Backend {
                     backend: "wire".to_string(),
@@ -492,6 +594,7 @@ fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
                 break;
             }
         };
+        idle_strikes = 0;
         let id = frame.request_id();
         match frame {
             Frame::KernelInfo {
@@ -515,6 +618,13 @@ fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
             Frame::Metrics { json, .. } => {
                 shared.demux.complete(id, Ok(ServerReply::Metrics(json)));
             }
+            Frame::HealthOk {
+                status, inflight, ..
+            } => {
+                shared
+                    .demux
+                    .complete(id, Ok(ServerReply::Health { status, inflight }));
+            }
             Frame::Error { err, .. } => {
                 let e = err.into_service_error();
                 if !shared.demux.complete(id, Err(e.clone())) {
@@ -535,12 +645,60 @@ fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
             }
         }
     }
-    shared.demux.drain();
+    // `DrainOnExit` sweeps the demux here (and on panic).
 }
 
 // ---------------------------------------------------------------------
 // Client
 // ---------------------------------------------------------------------
+
+/// Connection configuration for [`OverlayClient`]; obtained from
+/// [`OverlayClient::builder`].
+#[derive(Debug, Clone)]
+pub struct ClientBuilder {
+    connect_timeout: Option<Duration>,
+    read_timeout: Option<Duration>,
+}
+
+impl Default for ClientBuilder {
+    fn default() -> ClientBuilder {
+        ClientBuilder::new()
+    }
+}
+
+impl ClientBuilder {
+    /// Both timeouts default to 30 s.
+    pub fn new() -> ClientBuilder {
+        ClientBuilder {
+            connect_timeout: Some(Duration::from_secs(30)),
+            read_timeout: Some(Duration::from_secs(30)),
+        }
+    }
+
+    /// TCP connect timeout; `None` falls back to the OS default.
+    /// Unix-socket connects are a local rendezvous (instant or
+    /// refused) and ignore this.
+    pub fn connect_timeout(mut self, d: Option<Duration>) -> ClientBuilder {
+        self.connect_timeout = d;
+        self
+    }
+
+    /// Silence bound on the reply stream: with replies owed and the
+    /// socket silent for two consecutive windows of this length, the
+    /// connection is declared dead and every waiter gets the typed
+    /// [`ServiceError::Disconnected`]. `None` disables the bound
+    /// (reads block indefinitely).
+    pub fn read_timeout(mut self, d: Option<Duration>) -> ClientBuilder {
+        self.read_timeout = d;
+        self
+    }
+
+    /// Dial `addr` with this configuration (see
+    /// [`OverlayClient::connect`]).
+    pub fn connect(&self, addr: &str) -> Result<OverlayClient, ServiceError> {
+        OverlayClient::connect_with(addr, self)
+    }
+}
 
 /// A connection to a `tmfu listen` server. One value per connection;
 /// cheap sessions come from [`OverlayClient::kernel`]. Dropping the
@@ -554,13 +712,26 @@ pub struct OverlayClient {
 }
 
 impl OverlayClient {
+    /// Connection configuration: connect/read timeouts (default 30 s
+    /// each).
+    pub fn builder() -> ClientBuilder {
+        ClientBuilder::new()
+    }
+
     /// Dial `addr` (`host:port` or `unix:<path>`), shake hands, and
-    /// start the reply-demultiplexing reader.
+    /// start the reply-demultiplexing reader — with default timeouts
+    /// ([`OverlayClient::builder`] to change them).
     pub fn connect(addr: &str) -> Result<OverlayClient, ServiceError> {
+        ClientBuilder::new().connect(addr)
+    }
+
+    fn connect_with(addr: &str, cfg: &ClientBuilder) -> Result<OverlayClient, ServiceError> {
         let addr = ListenAddr::parse(addr);
-        let stream = WireStream::connect(&addr).map_err(|e| ServiceError::Backend {
-            backend: "wire".to_string(),
-            message: format!("connect {addr}: {e}"),
+        let stream = WireStream::connect_with_timeout(&addr, cfg.connect_timeout).map_err(|e| {
+            ServiceError::Backend {
+                backend: "wire".to_string(),
+                message: format!("connect {addr}: {e}"),
+            }
         })?;
         let wire_err = |what: &str, e: std::io::Error| ServiceError::Backend {
             backend: "wire".to_string(),
@@ -568,6 +739,11 @@ impl OverlayClient {
         };
         let read_half = stream.try_clone().map_err(|e| wire_err("clone stream", e))?;
         let control = stream.try_clone().map_err(|e| wire_err("clone stream", e))?;
+        // The silence bound arms SO_RCVTIMEO on the shared socket; the
+        // reader's patient loop turns each expiry into an idle tick.
+        read_half
+            .set_read_timeout(cfg.read_timeout)
+            .map_err(|e| wire_err("set read timeout", e))?;
         // Synchronous handshake before any concurrency exists.
         let mut writer = BufWriter::new(stream);
         write_frame(
@@ -581,21 +757,34 @@ impl OverlayClient {
         .and_then(|()| writer.flush())
         .map_err(|e| wire_err("send hello", e))?;
         let mut reader = BufReader::new(read_half);
-        let (version, backend) = match read_frame(&mut reader) {
-            Ok(Some(Frame::HelloOk {
+        let (version, backend) = match read_frame_patient(&mut reader) {
+            Ok(PatientRead::Frame(Frame::HelloOk {
                 version, backend, ..
             })) => (version, backend),
-            Ok(Some(Frame::Error { err, .. })) => return Err(err.into_service_error()),
-            Ok(Some(_)) => {
+            Ok(PatientRead::Frame(Frame::Error { err, .. })) => {
+                return Err(err.into_service_error())
+            }
+            Ok(PatientRead::Frame(_)) => {
                 return Err(wire_err(
                     "handshake",
                     std::io::Error::new(std::io::ErrorKind::InvalidData, "unexpected frame"),
                 ))
             }
-            Ok(None) => {
+            Ok(PatientRead::Eof) => {
                 return Err(wire_err(
                     "handshake",
                     std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "server hung up"),
+                ))
+            }
+            // One full silent window with the Hello unanswered is a
+            // failed handshake, not patience material.
+            Ok(PatientRead::Idle) => {
+                return Err(wire_err(
+                    "handshake",
+                    std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "no HelloOk within the read timeout",
+                    ),
                 ))
             }
             Err(e) => return Err(wire_err("handshake", e)),
@@ -665,10 +854,62 @@ impl OverlayClient {
         }
     }
 
+    fn require_v2(&self, what: &str) -> Result<(), ServiceError> {
+        if self.version >= 2 {
+            Ok(())
+        } else {
+            Err(ServiceError::Backend {
+                backend: "wire".to_string(),
+                message: format!(
+                    "{what} requires protocol v2 (server negotiated v{})",
+                    self.version
+                ),
+            })
+        }
+    }
+
+    /// Probe the server's health (wire v2): draining flag plus the
+    /// count of requests admitted but not yet settled.
+    pub fn health(&self) -> Result<HealthReport, ServiceError> {
+        self.require_v2("health probe")?;
+        match self.shared.call_roundtrip("", |id| Frame::Health { id })? {
+            ServerReply::Health { status, inflight } => Ok(HealthReport {
+                draining: status == HEALTH_DRAINING,
+                inflight,
+            }),
+            _ => Err(bad_reply("health")),
+        }
+    }
+
+    /// Ask the server to drain (wire v2): stop accepting connections,
+    /// finish in-flight work, then exit. Returns the acknowledgement
+    /// report (always draining).
+    pub fn drain(&self) -> Result<HealthReport, ServiceError> {
+        self.require_v2("drain request")?;
+        match self.shared.call_roundtrip("", |id| Frame::Drain { id })? {
+            ServerReply::Health { status, inflight } => Ok(HealthReport {
+                draining: status == HEALTH_DRAINING,
+                inflight,
+            }),
+            _ => Err(bad_reply("drain")),
+        }
+    }
+
     /// Close the connection explicitly (also happens on drop).
     pub fn close(self) {
         let _ = self;
     }
+}
+
+/// A point-in-time backend health report (wire v2, from
+/// [`OverlayClient::health`] / [`OverlayClient::drain`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HealthReport {
+    /// The server is draining: finishing in-flight work, accepting
+    /// nothing new.
+    pub draining: bool,
+    /// Requests admitted but not yet settled server-side.
+    pub inflight: u32,
 }
 
 impl Drop for OverlayClient {
@@ -726,7 +967,27 @@ impl RemoteKernel {
     /// Non-blocking submit: the request is on the wire when this
     /// returns; the reply arrives on the [`RemotePending`].
     pub fn submit(&self, inputs: &[i32]) -> Result<RemotePending, ServiceError> {
-        let ticket = self.shared.send(&self.name, |id| Frame::Call {
+        self.submit_with(inputs, None)
+    }
+
+    /// [`Self::submit`] with a completion doorbell: `target` is rung
+    /// when the reply settles (or the connection dies), so a reactor
+    /// can multiplex many remote calls on one wake source.
+    /// Crate-internal: the router's forwarding loop is the consumer.
+    pub(crate) fn submit_tagged(
+        &self,
+        inputs: &[i32],
+        target: WakeTarget,
+    ) -> Result<RemotePending, ServiceError> {
+        self.submit_with(inputs, Some(target))
+    }
+
+    fn submit_with(
+        &self,
+        inputs: &[i32],
+        waker: Option<WakeTarget>,
+    ) -> Result<RemotePending, ServiceError> {
+        let ticket = self.shared.send_with(&self.name, waker, |id| Frame::Call {
             id,
             kernel: self.kernel,
             inputs: inputs.to_vec(),
@@ -744,18 +1005,44 @@ impl RemoteKernel {
         self.submit(inputs)?.wait()
     }
 
-    /// Blocking batch call: rows travel as one contiguous buffer, are
-    /// admitted atomically server-side, and come back in row order.
-    pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
-        let reply = self.shared.call_roundtrip(&self.name, |id| Frame::CallBatch {
+    /// Non-blocking batch submit: rows travel as one contiguous
+    /// buffer, are admitted atomically server-side, and come back in
+    /// row order on the [`RemotePendingBatch`].
+    pub fn submit_batch(&self, batch: &FlatBatch) -> Result<RemotePendingBatch, ServiceError> {
+        self.submit_batch_with(batch, None)
+    }
+
+    /// Batch twin of [`Self::submit_tagged`] (crate-internal, for the
+    /// router).
+    pub(crate) fn submit_batch_tagged(
+        &self,
+        batch: &FlatBatch,
+        target: WakeTarget,
+    ) -> Result<RemotePendingBatch, ServiceError> {
+        self.submit_batch_with(batch, Some(target))
+    }
+
+    fn submit_batch_with(
+        &self,
+        batch: &FlatBatch,
+        waker: Option<WakeTarget>,
+    ) -> Result<RemotePendingBatch, ServiceError> {
+        let ticket = self.shared.send_with(&self.name, waker, |id| Frame::CallBatch {
             id,
             kernel: self.kernel,
             batch: batch.clone(),
         })?;
-        match reply {
-            ServerReply::Rows(out) => Ok(out),
-            _ => Err(bad_reply(&self.name)),
-        }
+        Ok(RemotePendingBatch {
+            ticket,
+            shared: Arc::clone(&self.shared),
+            kernel: self.name.clone(),
+            done: false,
+        })
+    }
+
+    /// Blocking batch call: submit the batch and wait for its reply.
+    pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
+        self.submit_batch(batch)?.wait()
     }
 }
 
@@ -850,5 +1137,151 @@ impl Drop for RemotePending {
         if !self.done {
             self.ticket.abandon(&self.shared);
         }
+    }
+}
+
+/// The batch twin of [`RemotePending`]: same slot-ticket mechanics,
+/// yielding the whole reply [`FlatBatch`] in row order.
+pub struct RemotePendingBatch {
+    ticket: ReplyTicket,
+    shared: Arc<ClientShared>,
+    kernel: String,
+    done: bool,
+}
+
+impl std::fmt::Debug for RemotePendingBatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RemotePendingBatch({})", self.kernel)
+    }
+}
+
+impl RemotePendingBatch {
+    /// The kernel this reply belongs to.
+    pub fn kernel_name(&self) -> &str {
+        &self.kernel
+    }
+
+    fn rows(&self, reply: ReplyResult) -> Result<FlatBatch, ServiceError> {
+        match reply? {
+            ServerReply::Rows(batch) => Ok(batch),
+            _ => Err(bad_reply(&self.kernel)),
+        }
+    }
+
+    /// Non-blocking check: `Some(result)` once the reply has arrived.
+    pub fn poll(&mut self) -> Option<Result<FlatBatch, ServiceError>> {
+        if self.done {
+            return Some(Err(self.shared.drain_error(&self.kernel)));
+        }
+        let reply = self.ticket.try_take(&self.shared, &self.kernel)?;
+        self.done = true;
+        Some(self.rows(reply))
+    }
+
+    /// Block until the reply arrives.
+    pub fn wait(mut self) -> Result<FlatBatch, ServiceError> {
+        if self.done {
+            return Err(self.shared.drain_error(&self.kernel));
+        }
+        let reply = self
+            .ticket
+            .wait_take(&self.shared, None, &self.kernel)
+            .expect("unbounded wait cannot time out");
+        self.done = true;
+        self.rows(reply)
+    }
+
+    /// Block at most `timeout`; [`ServiceError::DeadlineExceeded`] if
+    /// the reply has not arrived by then (request stays in flight).
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<FlatBatch, ServiceError> {
+        if self.done {
+            return Err(self.shared.drain_error(&self.kernel));
+        }
+        let deadline = Instant::now().checked_add(timeout);
+        match self.ticket.wait_take(&self.shared, deadline, &self.kernel) {
+            Some(reply) => {
+                self.done = true;
+                self.rows(reply)
+            }
+            None => Err(ServiceError::DeadlineExceeded {
+                kernel: self.kernel.clone(),
+            }),
+        }
+    }
+}
+
+impl Drop for RemotePendingBatch {
+    fn drop(&mut self) {
+        if !self.done {
+            self.ticket.abandon(&self.shared);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Retry backoff
+// ---------------------------------------------------------------------
+
+/// Capped exponential backoff with deterministic jitter, shared by the
+/// router's replica-reconnect loop and `tmfu call --retries`. Delays
+/// double from `base` up to `cap`; each is then scaled by a uniform
+/// factor in [0.5, 1.0] so a fleet of retriers spreads out instead of
+/// thundering back in lockstep.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff {
+            base,
+            cap,
+            attempt: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The next delay to sleep before retrying (advances the
+    /// schedule).
+    pub fn next_delay(&mut self) -> Duration {
+        // 2^16 × base already dwarfs any sane cap; clamping the
+        // exponent keeps the shift defined for unbounded retry loops.
+        let exp = self.attempt.min(16);
+        self.attempt = self.attempt.saturating_add(1);
+        let raw = self.base.saturating_mul(1u32 << exp).min(self.cap);
+        raw.mul_f64(0.5 + 0.5 * self.rng.f64())
+    }
+
+    /// Success: the next failure restarts the schedule from `base`.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_envelope_and_reset() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_millis(200), 42);
+        let first = b.next_delay();
+        assert!(first >= Duration::from_millis(5), "jitter floor is 0.5×");
+        assert!(first <= Duration::from_millis(10));
+        let mut last = Duration::ZERO;
+        for _ in 0..10 {
+            last = b.next_delay();
+            assert!(last <= Duration::from_millis(200), "cap respected");
+        }
+        // Ten doublings from 10ms is far past the cap: the schedule
+        // sits in the capped region, jittered no lower than half.
+        assert!(last >= Duration::from_millis(100));
+        b.reset();
+        let again = b.next_delay();
+        assert!(again <= Duration::from_millis(10), "reset restarts at base");
     }
 }

@@ -42,6 +42,12 @@
 //!   [`client::RemoteKernel`] mirror the in-process sessions method
 //!   for method, with every [`service::ServiceError`] variant
 //!   round-tripped bit-exactly as typed error frames;
+//! * the **router** — a fault-tolerant front for replicated backends
+//!   ([`router`], DESIGN.md §11): `tmfu router` speaks the wire
+//!   protocol on both sides, health-checks its replicas, retries
+//!   idempotent calls with capped backoff on replica failure, and
+//!   drains gracefully, so a `kill -9`ed backend degrades to the
+//!   survivors instead of failing the burst;
 //! * **reporting** — regeneration of every table/figure in the paper
 //!   ([`report`], `rust/benches/`).
 
@@ -56,6 +62,7 @@ pub mod frontend;
 pub mod isa;
 pub mod report;
 pub mod resources;
+pub mod router;
 pub mod runtime;
 pub mod sched;
 pub mod service;

@@ -13,17 +13,24 @@
 //!
 //! Network serving: `listen` exposes the same service over the
 //! length-prefixed wire protocol (DESIGN.md §9) on TCP and/or a Unix
-//! socket, and `call` is the matching one-shot client — together they
-//! are the two-terminal walkthrough in the README.
+//! socket, and `call` is the matching client (one-shot or `--count`
+//! bursts, with `--retries`/`--timeout-ms` reusing the router's retry
+//! policy) — together they are the two-terminal walkthrough in the
+//! README. `router` fronts several `listen` backends with health
+//! checks, transparent retry, and graceful drain (DESIGN.md §11).
+//! `listen` and `router` both drain gracefully on SIGTERM: finish
+//! in-flight replies, then exit 0.
 
 use std::process::ExitCode;
 use std::sync::Arc;
-use tmfu_overlay::client::OverlayClient;
+use std::time::{Duration, Instant};
+use tmfu_overlay::client::{Backoff, OverlayClient};
 use tmfu_overlay::exec::BackendKind;
+use tmfu_overlay::router::{retryable, Router, RouterConfig};
 use tmfu_overlay::service::{OverlayService, ServiceError};
 use tmfu_overlay::util::cli::{Command, Matches};
 use tmfu_overlay::util::prng::Rng;
-use tmfu_overlay::wire::server::WireServer;
+use tmfu_overlay::wire::server::{install_sigterm_drain, ServerCtl, WireServer};
 use tmfu_overlay::wire::ListenAddr;
 use tmfu_overlay::{bench_suite, dfg, frontend, report, sched};
 
@@ -93,11 +100,25 @@ fn commands() -> Vec<Command> {
                 "exit after this many connections; single transport only (0 = run forever)",
                 Some("0"),
             ),
-        Command::new("call", "call a kernel on a 'tmfu listen' server")
+        Command::new("call", "call a kernel on a 'tmfu listen' server or a router")
             .positional("kernel", "kernel name (see 'list')")
             .opt("addr", "server address: host:port or unix:<path>", Some("127.0.0.1:7700"))
             .opt("inputs", "comma-separated i32 inputs", Some(""))
+            .opt("count", "submit the call this many times (burst mode)", Some("1"))
+            .opt("retries", "reconnect-and-retry budget on retryable failures", Some("0"))
+            .opt("timeout-ms", "overall deadline across all retries", Some("30000"))
             .flag("metrics", "also fetch and print the server metrics JSON"),
+        Command::new("router", "fault-tolerant front for replicated 'tmfu listen' backends")
+            .opt(
+                "backends",
+                "comma-separated backend addresses (host:port or unix:<path>)",
+                Some("127.0.0.1:7701,127.0.0.1:7702"),
+            )
+            .opt("tcp", "TCP listen address (empty disables)", Some("127.0.0.1:7700"))
+            .opt("socket", "unix socket path (empty disables)", Some(""))
+            .opt("probe-ms", "health-probe period per backend", Some("2000"))
+            .opt("retries", "per-call re-dispatch budget", Some("4"))
+            .opt("timeout-ms", "per-call deadline", Some("30000")),
     ]
 }
 
@@ -223,6 +244,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "serve" => serve(&m)?,
         "listen" => listen(&m)?,
         "call" => call(&m)?,
+        "router" => router(&m)?,
         _ => unreachable!(),
     }
     Ok(())
@@ -273,9 +295,15 @@ fn listen(m: &Matches) -> anyhow::Result<()> {
             .build()?,
     );
     let limit = (max_conns > 0).then_some(max_conns);
+    // One control across every bound transport, plus the SIGTERM hook:
+    // a Drain frame on either listener (or a SIGTERM) drains them
+    // together — in-flight replies finish, then the process exits 0.
+    install_sigterm_drain();
+    let ctl = ServerCtl::new();
     let mut servers = Vec::new();
     for addr in &addrs {
-        let server = WireServer::bind_with_limit(Arc::clone(&service), addr, limit)?;
+        let server =
+            WireServer::bind_with_ctl(Arc::clone(&service), addr, limit, Arc::clone(&ctl))?;
         println!(
             "listening on {} ({} kernels, backend '{backend}', {pipelines} pipeline(s), \
              queue depth {queue_depth})",
@@ -288,14 +316,59 @@ fn listen(m: &Matches) -> anyhow::Result<()> {
     for server in servers {
         server.wait();
     }
-    // Only reachable in --max-conns mode; report what was served.
+    // Reached on --max-conns exhaustion or a graceful drain; report
+    // what was served either way.
     println!("{}", service.metrics().render());
     service.shutdown()?;
     Ok(())
 }
 
-/// `tmfu call`: one-shot wire client — resolve, call, print the output
-/// row (and optionally the server's metrics snapshot).
+/// `tmfu router`: front a fleet of `tmfu listen` backends. Routes each
+/// call to a healthy replica, retries idempotent calls on replica
+/// failure, drains gracefully on SIGTERM or a `Drain` frame.
+fn router(m: &Matches) -> anyhow::Result<()> {
+    let backends: Vec<String> = m
+        .get("backends")
+        .unwrap()
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    anyhow::ensure!(!backends.is_empty(), "--backends needs at least one address");
+    let probe_ms = m.get_usize("probe-ms").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let retries = m.get_usize("retries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let timeout_ms = m.get_usize("timeout-ms").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let addr = match (
+        m.get("socket").filter(|s| !s.is_empty()),
+        m.get("tcp").filter(|s| !s.is_empty()),
+    ) {
+        (Some(path), _) => ListenAddr::Unix(path.into()),
+        (None, Some(tcp)) => ListenAddr::Tcp(tcp.to_string()),
+        (None, None) => anyhow::bail!("nothing to bind: --tcp and --socket are both disabled"),
+    };
+    let n_backends = backends.len();
+    let mut cfg = RouterConfig::new(backends);
+    cfg.probe_interval = Duration::from_millis(probe_ms as u64);
+    cfg.max_retries = retries as u32;
+    cfg.call_deadline = Duration::from_millis(timeout_ms as u64);
+    install_sigterm_drain();
+    let router = Router::start(cfg, &addr)?;
+    println!(
+        "routing {n_backends} backend(s) on {} (probe every {probe_ms} ms, {retries} retries, \
+         {timeout_ms} ms deadline)",
+        router.addr()
+    );
+    println!("call with: tmfu call <kernel> --addr {} --inputs ...", router.addr());
+    router.wait();
+    Ok(())
+}
+
+/// `tmfu call`: wire client — resolve, call (`--count` times), print
+/// the output row (and optionally the server's metrics snapshot). On a
+/// retryable failure it reconnects and retries the unfinished calls,
+/// up to `--retries` times within the `--timeout-ms` deadline — safe
+/// because overlay kernels are pure (re-running a call is idempotent).
 fn call(m: &Matches) -> anyhow::Result<()> {
     let addr = m.get("addr").unwrap();
     let kernel = m.get_pos("kernel").unwrap();
@@ -309,17 +382,94 @@ fn call(m: &Matches) -> anyhow::Result<()> {
                 .map_err(|_| anyhow::anyhow!("--inputs: '{s}' is not an i32"))
         })
         .collect::<anyhow::Result<_>>()?;
-    let client = OverlayClient::connect(addr)?;
-    let remote = client.kernel(kernel)?;
-    let out = remote.call(&inputs)?;
+    let count = m.get_usize("count").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let retries = m.get_usize("retries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let timeout_ms = m.get_usize("timeout-ms").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    anyhow::ensure!(count >= 1, "--count must be at least 1");
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms as u64);
+    // Same retry policy as the router: capped exponential backoff,
+    // only for failures classified retryable, all under one deadline.
+    let mut backoff = Backoff::new(Duration::from_millis(50), Duration::from_secs(2), 1);
+    let mut done = 0usize;
+    let mut attempt = 0usize;
+    let out = loop {
+        match call_round(addr, kernel, &inputs, count - done, deadline) {
+            Ok(row) => break row,
+            Err((ok, e)) => {
+                done += ok;
+                attempt += 1;
+                let out_of_time = Instant::now() >= deadline;
+                if attempt > retries || !retryable(&e) || out_of_time {
+                    if done > 0 {
+                        eprintln!("{done}/{count} calls completed before the failure");
+                    }
+                    return Err(e.into());
+                }
+                eprintln!("attempt {attempt}/{retries} failed retryably ({e}); retrying");
+                let left = deadline.saturating_duration_since(Instant::now());
+                std::thread::sleep(backoff.next_delay().min(left));
+            }
+        }
+    };
     println!(
         "{}",
         out.iter().map(ToString::to_string).collect::<Vec<_>>().join(" ")
     );
+    if count > 1 {
+        eprintln!("{count} calls completed");
+    }
     if m.flag("metrics") {
+        let client = OverlayClient::connect(addr)?;
         println!("{}", client.metrics()?.to_string_pretty());
     }
     Ok(())
+}
+
+/// One `tmfu call` round over a fresh connection: submit `n` copies of
+/// the call, wait them all out under `deadline`. `Ok` with the output
+/// row when every call succeeded; otherwise the number that did
+/// succeed plus the first typed error (the retry loop's classifier
+/// input).
+fn call_round(
+    addr: &str,
+    kernel: &str,
+    inputs: &[i32],
+    n: usize,
+    deadline: Instant,
+) -> Result<Vec<i32>, (usize, ServiceError)> {
+    let client = OverlayClient::connect(addr).map_err(|e| (0, e))?;
+    let remote = client.kernel(kernel).map_err(|e| (0, e))?;
+    let mut first_err: Option<ServiceError> = None;
+    let mut pendings = Vec::with_capacity(n);
+    for _ in 0..n {
+        match remote.submit(inputs) {
+            Ok(p) => pendings.push(p),
+            Err(e) => {
+                first_err = Some(e);
+                break;
+            }
+        }
+    }
+    let mut row: Option<Vec<i32>> = None;
+    let mut ok = 0usize;
+    for mut p in pendings {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match p.wait_timeout(left) {
+            Ok(r) => {
+                ok += 1;
+                row = Some(r);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        None => Ok(row.unwrap_or_default()),
+        Some(e) => Err((ok, e)),
+    }
 }
 
 /// `tmfu serve`: drive the service with a mixed-kernel workload and

@@ -1,0 +1,1066 @@
+//! Fault-tolerant front for a fleet of overlay backends.
+//!
+//! The router speaks the length-prefixed wire protocol on **both**
+//! sides: upstream it accepts connections exactly like
+//! [`WireServer`](crate::wire::server::WireServer) (same handshake,
+//! same frame set, same drain semantics), downstream it holds one
+//! [`OverlayClient`](crate::client::OverlayClient) per backend,
+//! managed by [`replica::Replica`] monitors that probe health and
+//! reconnect with jittered backoff.
+//!
+//! ```text
+//!              upstream (server side)        downstream (client side)
+//!   client ──▶ ┌───────────────────────┐ ──▶ backend A (tmfu listen)
+//!   client ──▶ │  router: table + retry│ ──▶ backend B (tmfu listen)
+//!   client ──▶ └───────────────────────┘ ──▶ backend C (tmfu listen)
+//! ```
+//!
+//! Every upstream `Call`/`CallBatch` becomes a forward entry: it is
+//! dispatched to a healthy replica picked round-robin by the
+//! [`table::RoutingTable`], and on a **retryable** failure (see
+//! [`retryable`]) it is transparently re-dispatched — capped
+//! exponential backoff between attempts, a per-call deadline, and a
+//! bounded attempt budget. Overlay kernels are pure functions of their
+//! inputs, so re-running a call on another replica is safe
+//! (idempotent); deterministic failures (shape mismatch, unknown
+//! kernel) are *not* retried and fail fast with their typed error.
+//!
+//! The ledger invariant the chaos tests assert: every admitted request
+//! settles exactly once — a bit-exact `Reply` or a typed `Error`
+//! before its deadline — so `admitted == completed + failed` on
+//! [`table::RouterMetrics`] once traffic quiesces, even when a backend
+//! is `kill -9`ed mid-burst.
+
+pub mod replica;
+pub mod table;
+
+use crate::client::{Backoff, RemotePending, RemotePendingBatch};
+use crate::coordinator::completion::Wake;
+use crate::exec::FlatBatch;
+use crate::service::ServiceError;
+use crate::util::json::Json;
+use crate::wire::server::{
+    bind_listener, frame_name, malformed, sigterm_drain_requested, unknown_kernel, ServerCtl,
+};
+use crate::wire::{
+    read_frame_patient, write_frame, Frame, ListenAddr, PatientRead, WireError, WireStream,
+    HEALTH_DRAINING, HEALTH_SERVING, WIRE_VERSION_MAX, WIRE_VERSION_MIN,
+};
+use anyhow::{Context, Result};
+use replica::{monitor, Replica, ReplicaTuning};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, BufReader, BufWriter, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+use table::{RouterMetrics, RoutingTable};
+
+/// Everything tunable about a router. `RouterConfig::new(backends)`
+/// gives the production defaults; tests shrink the durations.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Backend addresses (`host:port` or `unix:/path`), one replica
+    /// each.
+    pub backends: Vec<String>,
+    /// Health-probe period per backend while its link is up.
+    pub probe_interval: Duration,
+    /// Per-call deadline: an admitted request settles (reply or typed
+    /// error) within this bound, no matter how many retries it takes.
+    pub call_deadline: Duration,
+    /// Retry budget: re-dispatches allowed after the first attempt.
+    pub max_retries: u32,
+    /// First retry/reconnect backoff delay.
+    pub backoff_base: Duration,
+    /// Retry/reconnect backoff ceiling.
+    pub backoff_cap: Duration,
+    /// TCP connect timeout for each downstream (re)connect.
+    pub connect_timeout: Duration,
+    /// Downstream client read-silence bound.
+    pub read_timeout: Duration,
+}
+
+impl RouterConfig {
+    pub fn new(backends: Vec<String>) -> RouterConfig {
+        RouterConfig {
+            backends,
+            probe_interval: Duration::from_secs(2),
+            call_deadline: Duration::from_secs(30),
+            max_retries: 4,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+
+    fn tuning(&self) -> ReplicaTuning {
+        ReplicaTuning {
+            probe_interval: self.probe_interval,
+            backoff_base: self.backoff_base,
+            backoff_cap: self.backoff_cap,
+            connect_timeout: self.connect_timeout,
+            read_timeout: self.read_timeout,
+        }
+    }
+}
+
+/// Is this failure worth re-dispatching to another replica? Kernels
+/// are pure, so any call may be safely re-run; what this classifies is
+/// whether the failure is *environmental* (a different replica, or the
+/// same one a moment later, may succeed) or *deterministic* (every
+/// replica gives the same answer, so retrying only burns the
+/// deadline). `Backend` errors count only when the wire layer produced
+/// them — an engine-side backend fault is deterministic.
+pub fn retryable(e: &ServiceError) -> bool {
+    match e {
+        ServiceError::Disconnected { .. }
+        | ServiceError::Unavailable { .. }
+        | ServiceError::ShutDown
+        | ServiceError::Rejected { .. } => true,
+        ServiceError::Backend { backend, .. } => backend == "wire",
+        _ => false,
+    }
+}
+
+/// A transport-shaped failure also tells us the *link* it happened on
+/// is suspect — worth a passive `mark_down` so the table stops routing
+/// there before the next health probe. (`Unavailable`/`Rejected` are
+/// retryable but say nothing about the link.)
+fn transport_shaped(e: &ServiceError) -> bool {
+    match e {
+        ServiceError::Disconnected { .. } => true,
+        ServiceError::Backend { backend, .. } => backend == "wire",
+        _ => false,
+    }
+}
+
+/// State shared by every upstream connection of one router.
+struct RouterShared {
+    table: RoutingTable,
+    metrics: RouterMetrics,
+    cfg: RouterConfig,
+    /// The router's own kernel-id namespace. Upstream `Resolve`
+    /// interns the name here and hands back the index; `Call` frames
+    /// index it to get the name back. Downstream dense ids are
+    /// per-backend (registries may differ) and never leak upstream.
+    names: Mutex<Vec<String>>,
+}
+
+impl RouterShared {
+    fn intern(&self, name: &str) -> u32 {
+        let mut names = self.names.lock().unwrap();
+        if let Some(i) = names.iter().position(|n| n == name) {
+            return i as u32;
+        }
+        names.push(name.to_string());
+        (names.len() - 1) as u32
+    }
+
+    fn name_of(&self, rid: u32) -> Option<String> {
+        self.names.lock().unwrap().get(rid as usize).cloned()
+    }
+}
+
+/// A running router: upstream acceptor + per-connection forwarders +
+/// one monitor thread per backend. Lifecycle mirrors
+/// [`WireServer`](crate::wire::server::WireServer): [`Router::wait`]
+/// for the foreground
+/// drain-on-signal mode, [`Router::shutdown`] for tests. Dropping the
+/// value does not stop it.
+pub struct Router {
+    addr: ListenAddr,
+    unix_path: Option<std::path::PathBuf>,
+    stop: Arc<AtomicBool>,
+    ctl: Arc<ServerCtl>,
+    shared: Arc<RouterShared>,
+    acceptor: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    streams: Arc<Mutex<HashMap<u64, WireStream>>>,
+    monitors: Vec<thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Spawn the replica monitors, bind the upstream listener, and
+    /// start accepting. TCP port 0 resolves to an ephemeral port (see
+    /// [`Router::addr`]).
+    pub fn start(cfg: RouterConfig, addr: &ListenAddr) -> Result<Router> {
+        anyhow::ensure!(
+            !cfg.backends.is_empty(),
+            "router needs at least one backend address"
+        );
+        let tuning = cfg.tuning();
+        let replicas: Vec<Arc<Replica>> = cfg
+            .backends
+            .iter()
+            .map(|a| Replica::new(a.clone(), tuning.clone()))
+            .collect();
+        let mut monitors = Vec::with_capacity(replicas.len());
+        for (i, r) in replicas.iter().enumerate() {
+            let r = Arc::clone(r);
+            let handle = thread::Builder::new()
+                .name(format!("router-probe-{i}"))
+                .spawn(move || monitor(&r))
+                .context("spawn replica monitor")?;
+            monitors.push(handle);
+        }
+        let shared = Arc::new(RouterShared {
+            table: RoutingTable::new(replicas),
+            metrics: RouterMetrics::default(),
+            cfg,
+            names: Mutex::new(Vec::new()),
+        });
+        let (listener, resolved, unix_path) = bind_listener(addr)?;
+        let ctl = ServerCtl::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let streams: Arc<Mutex<HashMap<u64, WireStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let acceptor = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let streams = Arc::clone(&streams);
+            let ctl = Arc::clone(&ctl);
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("router-accept".to_string())
+                .spawn(move || {
+                    let mut accepted = 0u64;
+                    loop {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if sigterm_drain_requested() {
+                            ctl.drain();
+                        }
+                        if ctl.is_draining() {
+                            break;
+                        }
+                        let stream = match listener.accept() {
+                            Ok(s) => s,
+                            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                                thread::sleep(Duration::from_millis(5));
+                                continue;
+                            }
+                            // Transient accept failures must not spin.
+                            Err(_) => {
+                                thread::sleep(Duration::from_millis(10));
+                                continue;
+                            }
+                        };
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        accepted += 1;
+                        let conn_id = accepted;
+                        let control = match stream.try_clone() {
+                            Ok(c) => c,
+                            Err(_) => continue,
+                        };
+                        streams.lock().unwrap().insert(conn_id, control);
+                        let conn_shared = Arc::clone(&shared);
+                        let conn_streams = Arc::clone(&streams);
+                        let conn_ctl = Arc::clone(&ctl);
+                        let spawned = thread::Builder::new()
+                            .name(format!("router-conn-{conn_id}"))
+                            .spawn(move || {
+                                forward_connection(conn_shared, stream, conn_ctl);
+                                conn_streams.lock().unwrap().remove(&conn_id);
+                            });
+                        match spawned {
+                            Ok(handle) => {
+                                let mut cs = conns.lock().unwrap();
+                                cs.retain(|h| !h.is_finished());
+                                cs.push(handle);
+                            }
+                            // Thread exhaustion: shed the connection,
+                            // keep the acceptor.
+                            Err(_) => {
+                                if let Some(s) = streams.lock().unwrap().remove(&conn_id) {
+                                    s.shutdown_both();
+                                }
+                                thread::sleep(Duration::from_millis(10));
+                            }
+                        }
+                    }
+                })
+                .context("spawn router acceptor")?
+        };
+        Ok(Router {
+            addr: resolved,
+            unix_path,
+            stop,
+            ctl,
+            shared,
+            acceptor: Some(acceptor),
+            conns,
+            streams,
+            monitors,
+        })
+    }
+
+    /// The resolved upstream listen address.
+    pub fn addr(&self) -> &ListenAddr {
+        &self.addr
+    }
+
+    /// The upstream drain/in-flight control handle.
+    pub fn ctl(&self) -> Arc<ServerCtl> {
+        Arc::clone(&self.ctl)
+    }
+
+    /// The router's request ledger.
+    pub fn metrics(&self) -> &RouterMetrics {
+        &self.shared.metrics
+    }
+
+    /// Ledger + per-backend link state (same JSON `GetMetrics` serves).
+    pub fn metrics_json(&self) -> Json {
+        self.shared.metrics.to_json(&self.shared.table)
+    }
+
+    /// Block until a drain (a `Drain` frame, [`ServerCtl::drain`], or
+    /// SIGTERM) stops the acceptor, then finish in-flight calls and
+    /// tear down. The foreground `tmfu router` mode.
+    pub fn wait(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        if self.ctl.is_draining() {
+            // No new requests; blocked upstream readers wake with EOF
+            // while write halves keep flushing in-flight replies.
+            for s in self.streams.lock().unwrap().values() {
+                s.shutdown_read();
+            }
+        }
+        self.finish(false);
+    }
+
+    /// Stop accepting, close every upstream socket, join everything.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        self.finish(true);
+    }
+
+    fn finish(&mut self, force_close: bool) {
+        if force_close {
+            for s in self.streams.lock().unwrap().values() {
+                s.shutdown_both();
+            }
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in conns {
+            let _ = c.join();
+        }
+        self.streams.lock().unwrap().clear();
+        // Downstream links go down only after the forwarders settle:
+        // a drain wants in-flight calls to *finish*, not fail.
+        for r in self.shared.table.replicas() {
+            r.stop();
+        }
+        for m in std::mem::take(&mut self.monitors) {
+            let _ = m.join();
+        }
+        if let Some(p) = self.unix_path.take() {
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-connection forwarder
+// ---------------------------------------------------------------------
+
+/// The request payload, kept verbatim so a retry can re-dispatch it.
+enum Payload {
+    Row(Vec<i32>),
+    Batch(FlatBatch),
+}
+
+/// The currently outstanding downstream dispatch of an entry.
+enum DownPending {
+    Call(RemotePending),
+    Batch(RemotePendingBatch),
+}
+
+/// One admitted upstream request, alive until it settles (one `Reply`
+/// or one typed `Error` to the upstream peer, always before
+/// `deadline`).
+struct ForwardEntry {
+    name: String,
+    payload: Payload,
+    deadline: Instant,
+    /// Dispatch attempts performed so far (first attempt included).
+    dispatches: u32,
+    backoff: Backoff,
+    pending: Option<DownPending>,
+    /// Where `pending` was dispatched: replica index + link epoch, for
+    /// the passive `mark_down` report on a transport-shaped failure.
+    dispatched: Option<(usize, u64)>,
+    /// Set when admission dispatch failed retryably: the reactor arms
+    /// this retry timer when it absorbs the registration.
+    retry_at: Option<Instant>,
+    /// The most recent failure; reported if the budget runs out.
+    last_error: Option<ServiceError>,
+}
+
+/// State shared by an upstream connection's reader thread, its reactor
+/// thread, and (through the [`Wake`] doorbell handed to every
+/// downstream submit) the client demux threads completing its calls.
+struct FwdShared {
+    m: Mutex<FwdState>,
+    cv: Condvar,
+    /// Router-wide drain/in-flight accounting (mirrors the wire
+    /// server's ledger; `HealthOk` reports it upstream).
+    ctl: Arc<ServerCtl>,
+}
+
+struct FwdState {
+    /// Immediate outbound frames from the reader (handshake, resolve
+    /// and metrics replies, admission errors).
+    outbox: VecDeque<Frame>,
+    /// New admitted entries (upstream request id → entry).
+    submitted: Vec<(u64, ForwardEntry)>,
+    /// Upstream ids whose downstream reply became ready.
+    ready: Vec<u64>,
+    reader_done: bool,
+    dead: bool,
+}
+
+impl FwdShared {
+    fn new(ctl: Arc<ServerCtl>) -> FwdShared {
+        FwdShared {
+            m: Mutex::new(FwdState {
+                outbox: VecDeque::new(),
+                submitted: Vec::new(),
+                ready: Vec::new(),
+                reader_done: false,
+                dead: false,
+            }),
+            cv: Condvar::new(),
+            ctl,
+        }
+    }
+
+    fn push_frame(&self, frame: Frame) {
+        let mut st = self.m.lock().unwrap();
+        st.outbox.push_back(frame);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Hand an admitted entry to the reactor. `false` if the
+    /// connection is already dead — the caller settles the ledger.
+    fn register(&self, id: u64, entry: ForwardEntry) -> bool {
+        let mut st = self.m.lock().unwrap();
+        if st.dead {
+            return false;
+        }
+        self.ctl.inflight_add(1);
+        st.submitted.push((id, entry));
+        drop(st);
+        self.cv.notify_all();
+        true
+    }
+
+    fn finish_reader(&self) {
+        let mut st = self.m.lock().unwrap();
+        st.reader_done = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+impl Wake for FwdShared {
+    /// Downstream doorbell: the reply for upstream request `tag`
+    /// became ready on whichever replica it was dispatched to.
+    fn ring(&self, tag: u64) {
+        let mut st = self.m.lock().unwrap();
+        st.ready.push(tag);
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+fn forward_connection(shared: Arc<RouterShared>, stream: WireStream, ctl: Arc<ServerCtl>) {
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let control = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = stream.set_read_timeout(Some(ctl.read_deadline()));
+    let fwd = Arc::new(FwdShared::new(ctl));
+    let reactor_shared = Arc::clone(&shared);
+    let reactor_fwd = Arc::clone(&fwd);
+    let spawned = thread::Builder::new()
+        .name("router-react".to_string())
+        .spawn(move || forward_reactor(&reactor_shared, &reactor_fwd, write_half));
+    let Ok(reactor) = spawned else {
+        control.shutdown_both();
+        return;
+    };
+    let mut reader = BufReader::new(stream);
+    serve_forward(&shared, &mut reader, &fwd, &control);
+    fwd.finish_reader();
+    let _ = reactor.join();
+    control.shutdown_both();
+}
+
+/// Admit one `Call`/`CallBatch`: count it, dispatch it, and register
+/// the entry with the reactor, which owns it until it settles.
+fn admit(
+    shared: &Arc<RouterShared>,
+    fwd: &Arc<FwdShared>,
+    id: u64,
+    name: String,
+    payload: Payload,
+) {
+    shared.metrics.admit();
+    let now = Instant::now();
+    let mut entry = ForwardEntry {
+        name,
+        payload,
+        deadline: now + shared.cfg.call_deadline,
+        dispatches: 0,
+        // Jitter decorrelates concurrent retries; the id keeps it
+        // deterministic per request.
+        backoff: Backoff::new(
+            shared.cfg.backoff_base,
+            shared.cfg.backoff_cap,
+            id ^ 0x9e37_79b9_7f4a_7c15,
+        ),
+        pending: None,
+        dispatched: None,
+        retry_at: None,
+        last_error: None,
+    };
+    match dispatch(shared, fwd, id, &mut entry) {
+        Ok(()) => {}
+        Err(e) if retryable(&e) => {
+            // Nothing reachable right now; park the entry on a retry
+            // timer instead of failing a burst that raced a restart.
+            entry.last_error = Some(e);
+            entry.retry_at = Some(now + entry.backoff.next_delay());
+            shared.metrics.retry();
+        }
+        Err(e) => {
+            shared.metrics.fail(1);
+            fwd.push_frame(Frame::Error {
+                id,
+                err: WireError::Service(e),
+            });
+            return;
+        }
+    }
+    if !fwd.register(id, entry) {
+        // Upstream connection already torn down; dropping the entry
+        // abandons any downstream slot. Settled as failed so the
+        // ledger still balances.
+        shared.metrics.fail(1);
+    }
+}
+
+/// One dispatch attempt: pick a replica that owns the kernel and
+/// submit. On a transport-shaped submit failure the replica is marked
+/// down before the error propagates.
+fn dispatch(
+    shared: &Arc<RouterShared>,
+    fwd: &Arc<FwdShared>,
+    id: u64,
+    entry: &mut ForwardEntry,
+) -> Result<(), ServiceError> {
+    entry.dispatches += 1;
+    let (kernel, idx, epoch) = shared.table.pick(&entry.name)?;
+    let waker: Arc<dyn Wake> = Arc::clone(fwd) as Arc<dyn Wake>;
+    let submitted = match &entry.payload {
+        Payload::Row(inputs) => kernel
+            .submit_tagged(inputs, (waker, id))
+            .map(DownPending::Call),
+        Payload::Batch(batch) => kernel
+            .submit_batch_tagged(batch, (waker, id))
+            .map(DownPending::Batch),
+    };
+    match submitted {
+        Ok(pending) => {
+            entry.pending = Some(pending);
+            entry.dispatched = Some((idx, epoch));
+            Ok(())
+        }
+        Err(e) => {
+            if transport_shaped(&e) {
+                shared.table.replica(idx).mark_down(epoch);
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Account for admitted entries a dying connection can never answer.
+fn settle_failed(shared: &RouterShared, fwd: &FwdShared, n: usize) {
+    if n > 0 {
+        shared.metrics.fail(n as u64);
+        fwd.ctl.inflight_sub(n as u64);
+    }
+}
+
+/// What a timer/completion decision does to its entry.
+enum Outcome {
+    /// Entry stays in flight (retry armed or dispatch outstanding).
+    Keep,
+    /// Entry settles now with this typed error.
+    Settle(ServiceError),
+}
+
+/// The per-connection forwarding reactor: parks on the doorbell (or
+/// the earliest retry/deadline timer), writes the reader's immediate
+/// frames, polls rung completions, and drives the retry state machine.
+fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: WireStream) {
+    let mut w = BufWriter::new(stream);
+    let mut inflight: HashMap<u64, ForwardEntry> = HashMap::new();
+    // Doorbell tags that arrived before their registration; retried
+    // next wake-up.
+    let mut carry: Vec<u64> = Vec::new();
+    // (fire time, upstream id): per-entry deadline + armed retries.
+    // Linear scans — bounded by the peer's in-flight window.
+    let mut timers: Vec<(Instant, u64)> = Vec::new();
+    loop {
+        let (mut frames, new_inflight, rung) = {
+            let mut st = fwd.m.lock().unwrap();
+            loop {
+                if st.dead {
+                    let orphaned = std::mem::take(&mut st.submitted);
+                    drop(st);
+                    settle_failed(shared, fwd, inflight.len() + orphaned.len());
+                    return;
+                }
+                let now = Instant::now();
+                let next_timer = timers.iter().map(|(t, _)| *t).min();
+                let idle = st.outbox.is_empty() && st.submitted.is_empty() && st.ready.is_empty();
+                if !idle || next_timer.is_some_and(|t| t <= now) {
+                    break;
+                }
+                if st.reader_done && inflight.is_empty() {
+                    return;
+                }
+                st = match next_timer {
+                    None => fwd.cv.wait(st).unwrap(),
+                    Some(t) => {
+                        let dur = t.saturating_duration_since(now);
+                        fwd.cv.wait_timeout(st, dur).unwrap().0
+                    }
+                };
+            }
+            (
+                std::mem::take(&mut st.outbox),
+                std::mem::take(&mut st.submitted),
+                std::mem::take(&mut st.ready),
+            )
+        };
+        for (id, e) in new_inflight {
+            timers.push((e.deadline, id));
+            if let Some(t) = e.retry_at {
+                timers.push((t, id));
+            }
+            inflight.insert(id, e);
+        }
+        let mut write_err = false;
+        // Reader-ordered frames first.
+        for frame in frames.drain(..) {
+            if write_frame(&mut w, &frame).is_err() {
+                write_err = true;
+                break;
+            }
+        }
+        let mut out: Vec<Frame> = Vec::new();
+        // Completions: carried tags first (their registrations may
+        // have just landed), then the freshly rung.
+        let tags: Vec<u64> = carry.drain(..).chain(rung).collect();
+        let now = Instant::now();
+        for tag in tags {
+            if !inflight.contains_key(&tag) {
+                // Rung before registered; the registration's notify
+                // re-wakes us right after it lands.
+                carry.push(tag);
+                continue;
+            }
+            if let Some(frame) = poll_entry(shared, fwd, tag, &mut inflight, &mut timers, now) {
+                out.push(frame);
+            }
+        }
+        // Timers: deadlines and due retries.
+        let now = Instant::now();
+        let mut due: Vec<u64> = timers
+            .iter()
+            .filter(|(t, id)| *t <= now && inflight.contains_key(id))
+            .map(|(_, id)| *id)
+            .collect();
+        timers.retain(|(t, id)| *t > now && inflight.contains_key(id));
+        due.sort_unstable();
+        due.dedup();
+        for id in due {
+            if let Some(frame) = fire_timer(shared, fwd, id, &mut inflight, &mut timers, now) {
+                out.push(frame);
+            }
+        }
+        for frame in out {
+            if write_err {
+                break;
+            }
+            if write_frame(&mut w, &frame).is_err() {
+                write_err = true;
+            }
+        }
+        if !write_err && w.flush().is_err() {
+            write_err = true;
+        }
+        if write_err {
+            // Upstream is unreachable: unblock our reader, mark the
+            // connection dead, settle what remains as failed (dropping
+            // the entries abandons their downstream slots).
+            if let Ok(inner) = w.get_ref().try_clone() {
+                inner.shutdown_both();
+            }
+            let mut st = fwd.m.lock().unwrap();
+            st.dead = true;
+            let orphaned = std::mem::take(&mut st.submitted);
+            drop(st);
+            settle_failed(shared, fwd, inflight.len() + orphaned.len());
+            return;
+        }
+    }
+}
+
+/// Poll a rung entry's outstanding dispatch. `None` keeps it in
+/// flight; `Some(frame)` is its settlement.
+fn poll_entry(
+    shared: &Arc<RouterShared>,
+    fwd: &Arc<FwdShared>,
+    tag: u64,
+    inflight: &mut HashMap<u64, ForwardEntry>,
+    timers: &mut Vec<(Instant, u64)>,
+    now: Instant,
+) -> Option<Frame> {
+    let polled = {
+        let entry = inflight.get_mut(&tag)?;
+        match entry.pending.as_mut() {
+            Some(DownPending::Call(p)) => p
+                .poll()
+                .map(|r| r.map(|row| FlatBatch::from_flat(row.len(), row))),
+            Some(DownPending::Batch(p)) => p.poll(),
+            // A ring from a dispatch this entry already abandoned
+            // (e.g. it settled as Gone just as we retried): stale.
+            None => None,
+        }
+    };
+    match polled? {
+        Ok(batch) => {
+            inflight.remove(&tag);
+            shared.metrics.complete();
+            fwd.ctl.inflight_sub(1);
+            Some(Frame::Reply { id: tag, batch })
+        }
+        Err(e) => {
+            let outcome = {
+                let entry = inflight.get_mut(&tag).expect("entry vanished mid-poll");
+                // Passive health: a transport-shaped failure means the
+                // link it was dispatched on is gone.
+                if transport_shaped(&e) {
+                    if let Some((idx, epoch)) = entry.dispatched.take() {
+                        shared.table.replica(idx).mark_down(epoch);
+                    }
+                }
+                entry.pending = None;
+                entry.dispatched = None;
+                if retryable(&e)
+                    && now < entry.deadline
+                    && entry.dispatches <= shared.cfg.max_retries
+                {
+                    entry.last_error = Some(e);
+                    timers.push((now + entry.backoff.next_delay(), tag));
+                    shared.metrics.retry();
+                    Outcome::Keep
+                } else {
+                    Outcome::Settle(e)
+                }
+            };
+            settle(shared, fwd, tag, inflight, outcome)
+        }
+    }
+}
+
+/// A timer fired for `id`: the deadline passed, or an armed retry is
+/// due.
+fn fire_timer(
+    shared: &Arc<RouterShared>,
+    fwd: &Arc<FwdShared>,
+    id: u64,
+    inflight: &mut HashMap<u64, ForwardEntry>,
+    timers: &mut Vec<(Instant, u64)>,
+    now: Instant,
+) -> Option<Frame> {
+    let outcome = {
+        let entry = inflight.get_mut(&id)?;
+        if now >= entry.deadline {
+            // Past the per-call deadline with the reply still owed:
+            // settle typed. Dropping a still-outstanding pending
+            // abandons its downstream slot.
+            let e = match entry.last_error.take() {
+                Some(e) => e,
+                None => ServiceError::DeadlineExceeded {
+                    kernel: entry.name.clone(),
+                },
+            };
+            Outcome::Settle(e)
+        } else if entry.pending.is_some() {
+            // A retry timer armed before the current dispatch went
+            // out; the deadline timer is still tracked. Spurious.
+            Outcome::Keep
+        } else {
+            // An armed retry is due: re-dispatch.
+            match dispatch(shared, fwd, id, entry) {
+                Ok(()) => Outcome::Keep,
+                Err(e) if retryable(&e) && entry.dispatches <= shared.cfg.max_retries => {
+                    entry.last_error = Some(e);
+                    timers.push((now + entry.backoff.next_delay(), id));
+                    shared.metrics.retry();
+                    Outcome::Keep
+                }
+                Err(e) => Outcome::Settle(e),
+            }
+        }
+    };
+    settle(shared, fwd, id, inflight, outcome)
+}
+
+fn settle(
+    shared: &Arc<RouterShared>,
+    fwd: &Arc<FwdShared>,
+    id: u64,
+    inflight: &mut HashMap<u64, ForwardEntry>,
+    outcome: Outcome,
+) -> Option<Frame> {
+    match outcome {
+        Outcome::Keep => None,
+        Outcome::Settle(e) => {
+            inflight.remove(&id);
+            shared.metrics.fail(1);
+            fwd.ctl.inflight_sub(1);
+            Some(Frame::Error {
+                id,
+                err: WireError::Service(e),
+            })
+        }
+    }
+}
+
+/// Decode-and-dispatch loop for one upstream connection. Mirrors the
+/// wire server's loop — same handshake, same patient reads, same v2
+/// gating — but forwards instead of executing.
+fn serve_forward(
+    shared: &Arc<RouterShared>,
+    reader: &mut BufReader<WireStream>,
+    fwd: &Arc<FwdShared>,
+    control: &WireStream,
+) {
+    let hello = loop {
+        match read_frame_patient(reader) {
+            Ok(PatientRead::Frame(f)) => break f,
+            Ok(PatientRead::Eof) => return,
+            Ok(PatientRead::Idle) => {
+                if fwd.ctl.is_draining() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                fwd.push_frame(malformed(0, &e));
+                return;
+            }
+            Err(_) => return,
+        }
+    };
+    let version = match hello {
+        Frame::Hello { id, min, max } => {
+            let lo = min.max(WIRE_VERSION_MIN);
+            let hi = max.min(WIRE_VERSION_MAX);
+            if lo > hi {
+                fwd.push_frame(Frame::Error {
+                    id,
+                    err: WireError::VersionMismatch {
+                        min: WIRE_VERSION_MIN,
+                        max: WIRE_VERSION_MAX,
+                    },
+                });
+                return;
+            }
+            fwd.push_frame(Frame::HelloOk {
+                id,
+                version: hi,
+                backend: "router".to_string(),
+            });
+            hi
+        }
+        other => {
+            fwd.push_frame(malformed(
+                other.request_id(),
+                &format!("expected Hello, got {}", frame_name(&other)),
+            ));
+            return;
+        }
+    };
+
+    loop {
+        let frame = match read_frame_patient(reader) {
+            Ok(PatientRead::Frame(f)) => f,
+            Ok(PatientRead::Eof) => return,
+            Ok(PatientRead::Idle) => {
+                if fwd.ctl.is_draining() {
+                    return;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                fwd.push_frame(malformed(0, &e));
+                return;
+            }
+            Err(e) if e.kind() == io::ErrorKind::TimedOut => {
+                control.shutdown_both();
+                return;
+            }
+            Err(_) => return,
+        };
+        match frame {
+            Frame::Resolve { id, name } => {
+                // Resolving through the table verifies at least one
+                // healthy replica owns the kernel *now*; the arities
+                // come from that replica's own resolve.
+                let reply = match shared.table.pick(&name) {
+                    Ok((k, _, _)) => Frame::KernelInfo {
+                        id,
+                        kernel: shared.intern(&name),
+                        n_inputs: k.arity() as u16,
+                        n_outputs: k.n_outputs() as u16,
+                    },
+                    Err(e) => Frame::Error {
+                        id,
+                        err: WireError::Service(e),
+                    },
+                };
+                fwd.push_frame(reply);
+            }
+            Frame::Call { id, kernel, inputs } => {
+                let Some(name) = shared.name_of(kernel) else {
+                    fwd.push_frame(unknown_kernel(id, kernel));
+                    continue;
+                };
+                admit(shared, fwd, id, name, Payload::Row(inputs));
+            }
+            Frame::CallBatch { id, kernel, batch } => {
+                let Some(name) = shared.name_of(kernel) else {
+                    fwd.push_frame(unknown_kernel(id, kernel));
+                    continue;
+                };
+                admit(shared, fwd, id, name, Payload::Batch(batch));
+            }
+            Frame::GetMetrics { id } => {
+                let json = shared.metrics.to_json(&shared.table).to_string_compact();
+                fwd.push_frame(Frame::Metrics { id, json });
+            }
+            Frame::Health { id } if version >= 2 => {
+                let status = if fwd.ctl.is_draining() {
+                    HEALTH_DRAINING
+                } else {
+                    HEALTH_SERVING
+                };
+                fwd.push_frame(Frame::HealthOk {
+                    id,
+                    status,
+                    inflight: fwd.ctl.inflight().min(u32::MAX as u64) as u32,
+                });
+            }
+            Frame::Drain { id } if version >= 2 => {
+                fwd.ctl.drain();
+                fwd.push_frame(Frame::HealthOk {
+                    id,
+                    status: HEALTH_DRAINING,
+                    inflight: fwd.ctl.inflight().min(u32::MAX as u64) as u32,
+                });
+                return;
+            }
+            other @ (Frame::Health { .. } | Frame::Drain { .. }) => {
+                fwd.push_frame(malformed(
+                    other.request_id(),
+                    &format!(
+                        "{} requires protocol v2 (negotiated v{version})",
+                        frame_name(&other)
+                    ),
+                ));
+                return;
+            }
+            other => {
+                fwd.push_frame(malformed(
+                    other.request_id(),
+                    &format!("unexpected {} frame from a client", frame_name(&other)),
+                ));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_classification() {
+        let yes = [
+            ServiceError::Disconnected {
+                kernel: "fir".into(),
+            },
+            ServiceError::Unavailable {
+                kernel: "fir".into(),
+            },
+            ServiceError::ShutDown,
+            ServiceError::Backend {
+                backend: "wire".into(),
+                message: "receive failed".into(),
+            },
+        ];
+        for e in &yes {
+            assert!(retryable(e), "{e} should be retryable");
+        }
+        let no = [
+            ServiceError::UnknownKernel("fir".into()),
+            ServiceError::Backend {
+                backend: "sim".into(),
+                message: "engine fault".into(),
+            },
+        ];
+        for e in &no {
+            assert!(!retryable(e), "{e} should not be retryable");
+        }
+        // Transport-shaped is the narrower class.
+        assert!(transport_shaped(&yes[0]));
+        assert!(!transport_shaped(&yes[1]));
+    }
+
+    #[test]
+    fn intern_is_stable_and_dense() {
+        let shared = RouterShared {
+            table: RoutingTable::new(vec![]),
+            metrics: RouterMetrics::default(),
+            cfg: RouterConfig::new(vec!["127.0.0.1:9".into()]),
+            names: Mutex::new(Vec::new()),
+        };
+        assert_eq!(shared.intern("fir"), 0);
+        assert_eq!(shared.intern("poly6"), 1);
+        assert_eq!(shared.intern("fir"), 0);
+        assert_eq!(shared.name_of(1).as_deref(), Some("poly6"));
+        assert_eq!(shared.name_of(2), None);
+    }
+}

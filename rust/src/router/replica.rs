@@ -1,0 +1,309 @@
+//! One managed downstream backend: its live connection (when up), a
+//! resolved-kernel session cache, and the monitor loop that probes
+//! health and reconnects with jittered capped-exponential backoff.
+//!
+//! A replica's link moves between two states:
+//!
+//! * **down** — no connection. The monitor retries
+//!   [`crate::client::OverlayClient::connect`] on a [`Backoff`]
+//!   schedule; every successful connect bumps the link **epoch**.
+//! * **up** — a live [`OverlayClient`] plus the [`RemoteKernel`]
+//!   sessions resolved through it so far. The monitor sends a `Health`
+//!   probe every `probe_interval`; a failed probe (or a `draining`
+//!   report) takes the link down.
+//!
+//! The data path participates in health too (*passive* detection): a
+//! forwarder that sees a transport-shaped failure calls
+//! [`Replica::mark_down`] with the epoch it dispatched under, so the
+//! table reflects a dead backend within one failed call instead of one
+//! probe period. The epoch guard makes stale reports harmless — a
+//! failure observed on epoch N cannot shoot down the epoch N+1 link
+//! the monitor already rebuilt.
+
+use crate::client::{Backoff, ClientBuilder, OverlayClient, RemoteKernel};
+use crate::service::ServiceError;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Timing knobs for a replica's monitor loop (copied out of
+/// `RouterConfig` so this module does not depend on the router's).
+#[derive(Debug, Clone)]
+pub struct ReplicaTuning {
+    /// Health-probe period while the link is up.
+    pub probe_interval: Duration,
+    /// Reconnect backoff: first delay.
+    pub backoff_base: Duration,
+    /// Reconnect backoff: delay ceiling.
+    pub backoff_cap: Duration,
+    /// TCP connect timeout for each (re)connect attempt.
+    pub connect_timeout: Duration,
+    /// Client read-silence bound (see `ClientBuilder::read_timeout`).
+    pub read_timeout: Duration,
+}
+
+/// A live link: the client plus every kernel session resolved so far.
+struct LinkUp {
+    client: Arc<OverlayClient>,
+    kernels: HashMap<String, RemoteKernel>,
+}
+
+struct Link {
+    up: Option<LinkUp>,
+    /// Bumped on every successful (re)connect. Data-path failure
+    /// reports carry the epoch they dispatched under; mismatches are
+    /// ignored.
+    epoch: u64,
+}
+
+/// One managed downstream backend (see module docs).
+pub struct Replica {
+    addr: String,
+    tuning: ReplicaTuning,
+    link: Mutex<Link>,
+    /// Wakes the monitor out of a probe/backoff sleep early (shutdown,
+    /// or a data-path `mark_down` asking for a prompt reconnect).
+    kick: Condvar,
+    stopping: AtomicBool,
+}
+
+impl Replica {
+    pub fn new(addr: String, tuning: ReplicaTuning) -> Arc<Replica> {
+        Arc::new(Replica {
+            addr,
+            tuning,
+            link: Mutex::new(Link { up: None, epoch: 0 }),
+            kick: Condvar::new(),
+            stopping: AtomicBool::new(false),
+        })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.link.lock().unwrap().up.is_some()
+    }
+
+    /// Current link epoch (for metrics; counts successful connects).
+    pub fn epoch(&self) -> u64 {
+        self.link.lock().unwrap().epoch
+    }
+
+    /// Resolve a kernel session on this replica, caching it for the
+    /// link's lifetime. `Disconnected` while the link is down;
+    /// `UnknownKernel` passes through (this backend does not own the
+    /// kernel — the table tries the next one). The resolve roundtrip
+    /// runs outside the link lock; a transport failure during it takes
+    /// the link down.
+    pub fn kernel(&self, name: &str) -> Result<(RemoteKernel, u64), ServiceError> {
+        let (client, epoch) = {
+            let st = self.link.lock().unwrap();
+            match &st.up {
+                Some(up) => {
+                    if let Some(k) = up.kernels.get(name) {
+                        return Ok((k.clone(), st.epoch));
+                    }
+                    (Arc::clone(&up.client), st.epoch)
+                }
+                None => {
+                    return Err(ServiceError::Disconnected {
+                        kernel: name.to_string(),
+                    })
+                }
+            }
+        };
+        match client.kernel(name) {
+            Ok(k) => {
+                let mut st = self.link.lock().unwrap();
+                if st.epoch == epoch {
+                    if let Some(up) = st.up.as_mut() {
+                        up.kernels.insert(name.to_string(), k.clone());
+                    }
+                }
+                Ok((k, epoch))
+            }
+            Err(e @ ServiceError::UnknownKernel(_)) => Err(e),
+            Err(e) => {
+                // Resolution failed for transport-ish reasons: the
+                // link is suspect. Let the monitor rebuild it.
+                self.mark_down(epoch);
+                Err(e)
+            }
+        }
+    }
+
+    /// Data-path health report: a call dispatched under `epoch` failed
+    /// in a transport-shaped way. Ignored if the link was already
+    /// rebuilt (epoch mismatch) or is already down.
+    pub fn mark_down(&self, epoch: u64) {
+        let mut st = self.link.lock().unwrap();
+        if st.epoch != epoch || st.up.is_none() {
+            return;
+        }
+        // Dropping the client closes the socket; its outstanding
+        // pendings settle as Disconnected, which is exactly what
+        // retry-on-another-replica expects.
+        st.up = None;
+        drop(st);
+        // Prompt the monitor: reconnect now, not at the next tick.
+        self.kick.notify_all();
+    }
+
+    /// Stop the monitor loop (idempotent); the link is torn down.
+    pub fn stop(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        self.link.lock().unwrap().up = None;
+        self.kick.notify_all();
+    }
+
+    fn stopping(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst)
+    }
+
+    /// Interruptible sleep: returns early on [`Self::stop`] or
+    /// [`Self::mark_down`].
+    fn doze(&self, d: Duration) {
+        let st = self.link.lock().unwrap();
+        let _ = self.kick.wait_timeout(st, d).unwrap();
+    }
+
+    fn install(&self, client: OverlayClient) {
+        let mut st = self.link.lock().unwrap();
+        st.epoch += 1;
+        st.up = Some(LinkUp {
+            client: Arc::new(client),
+            kernels: HashMap::new(),
+        });
+    }
+
+    /// One monitor step; split out of [`monitor`] for testability.
+    /// Returns the duration to doze before the next step.
+    fn step(&self, backoff: &mut Backoff) -> Duration {
+        let probe = {
+            let st = self.link.lock().unwrap();
+            st.up
+                .as_ref()
+                .map(|up| (Arc::clone(&up.client), st.epoch))
+        };
+        match probe {
+            Some((client, epoch)) => {
+                // v1 backends cannot answer Health; keep the link on
+                // passive detection alone rather than probing it dead.
+                if client.version() >= 2 {
+                    match client.health() {
+                        Ok(report) if !report.draining => {}
+                        // Draining or unreachable: take it out of the
+                        // rotation (a draining backend finishes its
+                        // in-flight work but must get nothing new).
+                        _ => {
+                            self.mark_down(epoch);
+                            return Duration::ZERO;
+                        }
+                    }
+                }
+                backoff.reset();
+                self.tuning.probe_interval
+            }
+            None => {
+                let dial = ClientBuilder::new()
+                    .connect_timeout(Some(self.tuning.connect_timeout))
+                    .read_timeout(Some(self.tuning.read_timeout))
+                    .connect(&self.addr);
+                match dial {
+                    Ok(client) => {
+                        self.install(client);
+                        backoff.reset();
+                        Duration::ZERO
+                    }
+                    Err(_) => backoff.next_delay(),
+                }
+            }
+        }
+    }
+}
+
+/// Seed the reconnect jitter from the address so a fleet of replicas
+/// (and a restarted router) spread their retries deterministically but
+/// differently per backend.
+fn jitter_seed(addr: &str) -> u64 {
+    // FNV-1a, enough to decorrelate a handful of addresses.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in addr.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// The monitor loop body: run on a dedicated thread per replica until
+/// [`Replica::stop`].
+pub fn monitor(replica: &Replica) {
+    let mut backoff = Backoff::new(
+        replica.tuning.backoff_base,
+        replica.tuning.backoff_cap,
+        jitter_seed(&replica.addr),
+    );
+    while !replica.stopping() {
+        let nap = replica.step(&mut backoff);
+        if replica.stopping() {
+            break;
+        }
+        if !nap.is_zero() {
+            replica.doze(nap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tuning() -> ReplicaTuning {
+        ReplicaTuning {
+            probe_interval: Duration::from_millis(50),
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(40),
+            connect_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(500),
+        }
+    }
+
+    #[test]
+    fn down_replica_answers_disconnected_and_backoff_grows() {
+        // Port 9 (discard) on a host nobody binds: connect fails fast
+        // on loopback with ECONNREFUSED.
+        let r = Replica::new("127.0.0.1:9".to_string(), tuning());
+        assert!(!r.is_up());
+        let err = r.kernel("fir").unwrap_err();
+        assert!(matches!(err, ServiceError::Disconnected { .. }));
+        let mut backoff = Backoff::new(
+            Duration::from_millis(5),
+            Duration::from_millis(40),
+            jitter_seed(r.addr()),
+        );
+        // A failed connect step returns a backoff delay, not a probe
+        // interval.
+        let nap = r.step(&mut backoff);
+        assert!(!nap.is_zero());
+        assert!(nap <= Duration::from_millis(40));
+        assert!(!r.is_up());
+    }
+
+    #[test]
+    fn stale_epoch_cannot_down_a_rebuilt_link() {
+        let r = Replica::new("127.0.0.1:9".to_string(), tuning());
+        // No link at all: mark_down of any epoch is a no-op.
+        r.mark_down(0);
+        r.mark_down(7);
+        assert_eq!(r.epoch(), 0);
+        assert!(!r.is_up());
+    }
+
+    #[test]
+    fn jitter_seeds_differ_per_address() {
+        assert_ne!(jitter_seed("127.0.0.1:7701"), jitter_seed("127.0.0.1:7702"));
+    }
+}

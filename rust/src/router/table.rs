@@ -1,0 +1,186 @@
+//! The routing table and the router's metrics ledger.
+//!
+//! [`RoutingTable::pick`] is the one routing decision in the system:
+//! given a kernel name, walk the replicas round-robin from a rotating
+//! cursor and return the first healthy session that owns the kernel.
+//! Replicas that are down answer `Disconnected` and are skipped; a
+//! replica that is up but does not own the kernel answers
+//! `UnknownKernel`. Only when *no* replica is reachable does the
+//! caller get the typed [`ServiceError::Unavailable`] — the
+//! router-level "try again later" signal — while "every reachable
+//! replica disowns it" stays `UnknownKernel`, the request-is-wrong
+//! signal.
+//!
+//! [`RouterMetrics`] keeps the ledger the chaos gate asserts on:
+//! `admitted == completed + failed` once traffic quiesces, with
+//! `retries` counting transparent re-dispatches (a retried call is
+//! still one admitted request).
+
+use super::replica::Replica;
+use crate::client::RemoteKernel;
+use crate::service::ServiceError;
+use crate::util::json::{self, Json};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Round-robin selection over the managed replicas.
+pub struct RoutingTable {
+    replicas: Vec<Arc<Replica>>,
+    cursor: AtomicUsize,
+}
+
+impl RoutingTable {
+    pub fn new(replicas: Vec<Arc<Replica>>) -> RoutingTable {
+        RoutingTable {
+            replicas,
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn replicas(&self) -> &[Arc<Replica>] {
+        &self.replicas
+    }
+
+    pub fn replica(&self, idx: usize) -> &Arc<Replica> {
+        &self.replicas[idx]
+    }
+
+    /// Route one call: the first healthy replica (round-robin from a
+    /// rotating start) that owns `kernel`. Returns the session, the
+    /// replica index, and the link epoch the session belongs to (for
+    /// the data path's `mark_down` reports).
+    pub fn pick(&self, kernel: &str) -> Result<(RemoteKernel, usize, u64), ServiceError> {
+        let n = self.replicas.len();
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let mut saw_unknown = false;
+        for i in 0..n {
+            let idx = (start + i) % n;
+            match self.replicas[idx].kernel(kernel) {
+                Ok((k, epoch)) => return Ok((k, idx, epoch)),
+                Err(ServiceError::UnknownKernel(_)) => saw_unknown = true,
+                // Down, draining, or failed mid-resolve: try the next.
+                Err(_) => {}
+            }
+        }
+        if saw_unknown {
+            Err(ServiceError::UnknownKernel(kernel.to_string()))
+        } else {
+            Err(ServiceError::Unavailable {
+                kernel: kernel.to_string(),
+            })
+        }
+    }
+}
+
+/// The router's request ledger plus retry counter. Updated by the
+/// upstream readers (admitted) and reactors (completed / failed /
+/// retries); exposed as JSON through `GetMetrics` and `Router::
+/// metrics_json`.
+#[derive(Debug, Default)]
+pub struct RouterMetrics {
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    retries: AtomicU64,
+}
+
+impl RouterMetrics {
+    pub fn admit(&self) {
+        self.admitted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn complete(&self) {
+        self.completed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn fail(&self, n: u64) {
+        self.failed.fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub fn retry(&self) {
+        self.retries.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::SeqCst)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::SeqCst)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::SeqCst)
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::SeqCst)
+    }
+
+    /// The ledger plus per-backend link state, as the JSON object
+    /// served for `GetMetrics` on the router's upstream side.
+    pub fn to_json(&self, table: &RoutingTable) -> Json {
+        let backends = table.replicas().iter().map(|r| {
+            json::obj(vec![
+                ("addr", json::s(r.addr())),
+                ("up", Json::Bool(r.is_up())),
+                ("epoch", json::i(r.epoch() as i64)),
+            ])
+        });
+        json::obj(vec![
+            ("role", json::s("router")),
+            ("admitted", json::i(self.admitted() as i64)),
+            ("completed", json::i(self.completed() as i64)),
+            ("failed", json::i(self.failed() as i64)),
+            ("retries", json::i(self.retries() as i64)),
+            ("backends", json::arr(backends)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::replica::ReplicaTuning;
+    use super::*;
+    use std::time::Duration;
+
+    fn tuning() -> ReplicaTuning {
+        ReplicaTuning {
+            probe_interval: Duration::from_millis(50),
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(40),
+            connect_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(500),
+        }
+    }
+
+    #[test]
+    fn all_replicas_down_is_unavailable() {
+        let table = RoutingTable::new(vec![
+            Replica::new("127.0.0.1:9".to_string(), tuning()),
+            Replica::new("127.0.0.1:10".to_string(), tuning()),
+        ]);
+        let err = table.pick("fir").unwrap_err();
+        assert!(
+            matches!(err, ServiceError::Unavailable { ref kernel } if kernel == "fir"),
+            "got {err}"
+        );
+    }
+
+    #[test]
+    fn ledger_counts_and_json_shape() {
+        let m = RouterMetrics::default();
+        m.admit();
+        m.admit();
+        m.complete();
+        m.fail(1);
+        m.retry();
+        assert_eq!(m.admitted(), m.completed() + m.failed());
+        let table = RoutingTable::new(vec![Replica::new("127.0.0.1:9".to_string(), tuning())]);
+        let j = m.to_json(&table);
+        assert_eq!(j.get("admitted").as_i64(), Some(2));
+        assert_eq!(j.get("retries").as_i64(), Some(1));
+        assert_eq!(j.get("backends").as_arr().map(<[Json]>::len), Some(1));
+        assert_eq!(j.get("backends").at(0).get("up").as_bool(), Some(false));
+    }
+}

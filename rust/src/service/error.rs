@@ -41,6 +41,10 @@ pub enum ServiceError {
     /// The worker serving this request disappeared without replying
     /// (worker panic — an engine bug, not a request error).
     Disconnected { kernel: String },
+    /// No healthy replica currently owns this kernel (router-level
+    /// condition: every backend that serves it is dead or draining).
+    /// Retryable — replicas rejoin the routing table on recovery.
+    Unavailable { kernel: String },
     /// The execution substrate failed (PJRT load/execute, cycle
     /// budget...).
     Backend { backend: String, message: String },
@@ -76,6 +80,9 @@ impl fmt::Display for ServiceError {
             }
             ServiceError::Disconnected { kernel } => {
                 write!(f, "kernel '{kernel}': worker dropped without replying")
+            }
+            ServiceError::Unavailable { kernel } => {
+                write!(f, "kernel '{kernel}': no healthy replica available")
             }
             ServiceError::Backend { backend, message } => write!(f, "{backend} backend: {message}"),
         }
@@ -128,6 +135,11 @@ mod tests {
             kernel: "fir".into(),
         };
         assert!(e.to_string().contains("deadline"));
+        let e = ServiceError::Unavailable {
+            kernel: "poly6".into(),
+        };
+        assert!(e.to_string().contains("no healthy replica"));
+        assert!(e.to_string().contains("poly6"));
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Deterministic fault injection for the wire layer (test-only).
+//!
+//! The chaos paths this PR guards — a backend dying mid-burst, a
+//! stalled peer, a corrupted length prefix — are awkward to provoke
+//! with real `kill -9` timing races in unit tests. This module makes
+//! them deterministic: the server consults a [`FaultPlan`] parsed from
+//! `TMFU_FAULT_*` environment variables and injects the failure at an
+//! exact frame count, so a test (or `tools/router_smoke.sh`) can
+//! reproduce "connection dropped after the 3rd request" bit-for-bit.
+//!
+//! Knobs (all optional; unset means no fault):
+//!
+//! * `TMFU_FAULT_DROP_AFTER=<n>` — hard-close the connection after
+//!   reading `n` frames (post-handshake), simulating a process kill or
+//!   network cut mid-conversation.
+//! * `TMFU_FAULT_DELAY_REPLY_MS=<ms>` — sleep before every reply
+//!   write, simulating a slow backend (lets clients exercise read
+//!   timeouts and the router its per-call deadline).
+//! * `TMFU_FAULT_CORRUPT_LEN=<n>` — replace the length prefix of the
+//!   `n`-th reply frame with an over-`MAX_PAYLOAD` value and close,
+//!   simulating stream corruption (the peer must surface a typed
+//!   transport error, never wedge).
+//!
+//! The plan is read once per connection; counters are per-connection,
+//! so every accepted socket observes the same deterministic script.
+//! Production deployments simply leave the variables unset — the
+//! inactive plan is a handful of `None` checks per frame.
+
+use std::time::Duration;
+
+/// Parsed `TMFU_FAULT_*` script. Inactive (all `None`) in production.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Hard-close after this many frames read on the connection.
+    pub drop_after_frames: Option<u64>,
+    /// Sleep this long before each reply write.
+    pub delay_reply: Option<Duration>,
+    /// Corrupt the length prefix of the n-th reply written (1-based).
+    pub corrupt_len_at: Option<u64>,
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+impl FaultPlan {
+    /// Read the fault script from the environment. Unparseable values
+    /// are treated as unset (faults are a test convenience, not an
+    /// interface worth failing startup over).
+    pub fn from_env() -> FaultPlan {
+        FaultPlan {
+            drop_after_frames: env_u64("TMFU_FAULT_DROP_AFTER"),
+            delay_reply: env_u64("TMFU_FAULT_DELAY_REPLY_MS").map(Duration::from_millis),
+            corrupt_len_at: env_u64("TMFU_FAULT_CORRUPT_LEN"),
+        }
+    }
+
+    /// Whether any fault is scripted.
+    pub fn is_active(&self) -> bool {
+        self.drop_after_frames.is_some()
+            || self.delay_reply.is_some()
+            || self.corrupt_len_at.is_some()
+    }
+}
+
+/// Per-connection fault progress: the plan plus read/write counters.
+#[derive(Debug, Default)]
+pub struct FaultState {
+    plan: FaultPlan,
+    frames_read: u64,
+    replies_written: u64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        FaultState {
+            plan,
+            frames_read: 0,
+            replies_written: 0,
+        }
+    }
+
+    /// Record one frame read. Returns `true` when the scripted drop
+    /// point is reached — the caller must hard-close the connection.
+    pub fn frame_read(&mut self) -> bool {
+        self.frames_read += 1;
+        matches!(self.plan.drop_after_frames, Some(n) if self.frames_read > n)
+    }
+
+    /// Sleep out the scripted reply delay (no-op when unset).
+    pub fn before_reply(&self) {
+        if let Some(d) = self.plan.delay_reply {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// Record one reply write. Returns `true` when this exact write
+    /// must carry a corrupted length prefix (after which the caller
+    /// closes the connection).
+    pub fn corrupt_this_reply(&mut self) -> bool {
+        self.replies_written += 1;
+        self.plan.corrupt_len_at == Some(self.replies_written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_plan_injects_nothing() {
+        let plan = FaultPlan::default();
+        assert!(!plan.is_active());
+        let mut st = FaultState::new(plan);
+        for _ in 0..100 {
+            assert!(!st.frame_read());
+            assert!(!st.corrupt_this_reply());
+        }
+        st.before_reply(); // no sleep
+    }
+
+    #[test]
+    fn drop_fires_exactly_after_n_frames() {
+        let mut st = FaultState::new(FaultPlan {
+            drop_after_frames: Some(3),
+            ..FaultPlan::default()
+        });
+        assert!(!st.frame_read());
+        assert!(!st.frame_read());
+        assert!(!st.frame_read());
+        assert!(st.frame_read()); // the 4th read crosses the script
+        assert!(st.frame_read()); // and stays tripped
+    }
+
+    #[test]
+    fn corrupt_fires_on_the_exact_write() {
+        let mut st = FaultState::new(FaultPlan {
+            corrupt_len_at: Some(2),
+            ..FaultPlan::default()
+        });
+        assert!(!st.corrupt_this_reply());
+        assert!(st.corrupt_this_reply());
+        assert!(!st.corrupt_this_reply());
+    }
+}

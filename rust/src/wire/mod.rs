@@ -38,8 +38,14 @@
 //! range of protocol versions it speaks; the server answers `HelloOk`
 //! with the highest version both sides support, or a
 //! [`WireError::VersionMismatch`] error frame (code 100) naming its
-//! own range, then closes. Version 1 is the only version today.
+//! own range, then closes. Version 2 added the liveness opcodes
+//! (`Health`/`HealthOk`/`Drain`) and the `Unavailable` error code (9);
+//! a v1-negotiated connection must not carry them (the server answers
+//! `Malformed` if it does). The codec itself decodes every known
+//! opcode regardless of the negotiated version — gating is the
+//! connection state machine's job, not the byte parser's.
 
+pub mod fault;
 pub mod server;
 
 use crate::exec::FlatBatch;
@@ -51,8 +57,9 @@ use std::io::{self, Read, Write};
 pub const WIRE_MAGIC: [u8; 4] = *b"TMFU";
 /// Lowest protocol version this build speaks.
 pub const WIRE_VERSION_MIN: u16 = 1;
-/// Highest protocol version this build speaks.
-pub const WIRE_VERSION_MAX: u16 = 1;
+/// Highest protocol version this build speaks. v2 added
+/// `Health`/`HealthOk`/`Drain` and error code 9 (`Unavailable`).
+pub const WIRE_VERSION_MAX: u16 = 2;
 /// Hard cap on a frame payload (16 MiB). [`read_frame`] refuses larger
 /// length prefixes before allocating, so a malformed or hostile peer
 /// cannot request an unbounded buffer.
@@ -69,6 +76,16 @@ const OP_REPLY: u8 = 0x07;
 const OP_ERROR: u8 = 0x08;
 const OP_GET_METRICS: u8 = 0x09;
 const OP_METRICS: u8 = 0x0A;
+// v2 liveness opcodes.
+const OP_HEALTH: u8 = 0x0B;
+const OP_HEALTH_OK: u8 = 0x0C;
+const OP_DRAIN: u8 = 0x0D;
+
+/// `HealthOk.status`: accepting new work.
+pub const HEALTH_SERVING: u8 = 0;
+/// `HealthOk.status`: draining — finishing in-flight work, accepting
+/// no new requests; remove this backend from routing tables.
+pub const HEALTH_DRAINING: u8 = 1;
 
 // Error codes (`Error` frame body). 1..=8 round-trip `ServiceError`;
 // 100+ are transport-level conditions with no in-process analogue.
@@ -80,6 +97,7 @@ const EC_SHUT_DOWN: u16 = 5;
 const EC_DEADLINE_EXCEEDED: u16 = 6;
 const EC_DISCONNECTED: u16 = 7;
 const EC_BACKEND: u16 = 8;
+const EC_UNAVAILABLE: u16 = 9;
 const EC_VERSION_MISMATCH: u16 = 100;
 const EC_MALFORMED: u16 = 101;
 
@@ -192,6 +210,15 @@ pub enum Frame {
     GetMetrics { id: u64 },
     /// Server → client: `MetricsSnapshot` JSON text.
     Metrics { id: u64, json: String },
+    /// Client → server (v2): liveness probe.
+    Health { id: u64 },
+    /// Server → client (v2): probe answer — [`HEALTH_SERVING`] or
+    /// [`HEALTH_DRAINING`] plus the current in-flight request count.
+    HealthOk { id: u64, status: u8, inflight: u32 },
+    /// Client → server (v2): begin a graceful drain — stop accepting
+    /// new connections and new work, finish in-flight requests, then
+    /// exit. Acknowledged with a `HealthOk { status: DRAINING }`.
+    Drain { id: u64 },
 }
 
 impl Frame {
@@ -207,7 +234,10 @@ impl Frame {
             | Frame::Reply { id, .. }
             | Frame::Error { id, .. }
             | Frame::GetMetrics { id }
-            | Frame::Metrics { id, .. } => *id,
+            | Frame::Metrics { id, .. }
+            | Frame::Health { id }
+            | Frame::HealthOk { id, .. }
+            | Frame::Drain { id } => *id,
         }
     }
 
@@ -273,6 +303,21 @@ impl Frame {
                 head(&mut out, OP_METRICS, *id);
                 put_string(&mut out, json)?;
             }
+            Frame::Health { id } => {
+                head(&mut out, OP_HEALTH, *id);
+            }
+            Frame::HealthOk {
+                id,
+                status,
+                inflight,
+            } => {
+                head(&mut out, OP_HEALTH_OK, *id);
+                out.push(*status);
+                put_u32(&mut out, *inflight);
+            }
+            Frame::Drain { id } => {
+                head(&mut out, OP_DRAIN, *id);
+            }
         }
         Ok(out)
     }
@@ -336,6 +381,13 @@ impl Frame {
                 id,
                 json: d.string("metrics json")?,
             },
+            OP_HEALTH => Frame::Health { id },
+            OP_HEALTH_OK => Frame::HealthOk {
+                id,
+                status: d.u8("health status")?,
+                inflight: d.u32("health inflight")?,
+            },
+            OP_DRAIN => Frame::Drain { id },
             other => return Err(FrameError::new(format!("unknown opcode 0x{other:02x}"))),
         };
         d.finish()?;
@@ -403,6 +455,10 @@ fn put_error(out: &mut Vec<u8>, err: &WireError) -> Result<(), FrameError> {
                 put_string(out, backend)?;
                 put_string(out, message)?;
             }
+            ServiceError::Unavailable { kernel } => {
+                put_u16(out, EC_UNAVAILABLE);
+                put_string(out, kernel)?;
+            }
         },
         WireError::VersionMismatch { min, max } => {
             put_u16(out, EC_VERSION_MISMATCH);
@@ -447,6 +503,9 @@ impl<'a> Dec<'a> {
             EC_BACKEND => WireError::Service(ServiceError::Backend {
                 backend: self.string("backend")?,
                 message: self.string("message")?,
+            }),
+            EC_UNAVAILABLE => WireError::Service(ServiceError::Unavailable {
+                kernel: self.string("kernel")?,
             }),
             EC_VERSION_MISMATCH => WireError::VersionMismatch {
                 min: self.u16("min version")?,
@@ -659,6 +718,94 @@ pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Frame>> {
         .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
 }
 
+/// Outcome of one [`read_frame_patient`] attempt over a socket with a
+/// read timeout armed.
+#[derive(Debug)]
+pub(crate) enum PatientRead {
+    /// A complete frame arrived.
+    Frame(Frame),
+    /// Clean EOF at a frame boundary.
+    Eof,
+    /// The read timeout elapsed with **zero** bytes of the next frame
+    /// consumed — the peer is merely idle, not stalled. Callers decide
+    /// whether to keep waiting (idle keep-alive is legal) or give up
+    /// (requests are in flight and the socket has gone silent).
+    Idle,
+}
+
+/// Is this the error a timed-out socket read surfaces?
+/// (`SO_RCVTIMEO` reads return `WouldBlock` on Unix, `TimedOut` on
+/// Windows.)
+pub(crate) fn is_timeout(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// [`read_frame`] for sockets with a read timeout: distinguishes an
+/// *idle* peer (timeout at a frame boundary, zero bytes consumed —
+/// returned as [`PatientRead::Idle`] for the caller to judge) from a
+/// peer *stalled mid-frame* (timeout after the frame started — a
+/// `TimedOut` error: the stream can never become frame-aligned again
+/// by waiting, so the connection must be dropped).
+pub(crate) fn read_frame_patient(r: &mut impl Read) -> io::Result<PatientRead> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(PatientRead::Eof),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed inside a frame length prefix",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if is_timeout(&e) && got == 0 => return Ok(PatientRead::Idle),
+            Err(e) if is_timeout(&e) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "peer stalled mid-frame past the read deadline",
+                ))
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len}B exceeds max {MAX_PAYLOAD}B"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        match r.read(&mut payload[filled..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed inside a frame payload",
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "peer stalled mid-frame past the read deadline",
+                ))
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Frame::decode(&payload)
+        .map(PatientRead::Frame)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+}
+
 // ---------------------------------------------------------------------
 // Addresses & streams (shared by server and client)
 // ---------------------------------------------------------------------
@@ -703,9 +850,47 @@ pub(crate) enum WireStream {
 
 impl WireStream {
     pub(crate) fn connect(addr: &ListenAddr) -> io::Result<WireStream> {
+        WireStream::connect_with_timeout(addr, None)
+    }
+
+    /// [`WireStream::connect`] with an optional TCP connect timeout
+    /// (each resolved address gets the full budget; the first success
+    /// wins). Unix-socket connects are local rendezvous — effectively
+    /// instant or refused — so the timeout only gates TCP.
+    pub(crate) fn connect_with_timeout(
+        addr: &ListenAddr,
+        timeout: Option<std::time::Duration>,
+    ) -> io::Result<WireStream> {
         match addr {
             ListenAddr::Tcp(a) => {
-                let s = std::net::TcpStream::connect(a)?;
+                let s = match timeout {
+                    None => std::net::TcpStream::connect(a)?,
+                    Some(t) => {
+                        use std::net::ToSocketAddrs;
+                        let mut last: Option<io::Error> = None;
+                        let mut found = None;
+                        for sa in a.to_socket_addrs()? {
+                            match std::net::TcpStream::connect_timeout(&sa, t) {
+                                Ok(s) => {
+                                    found = Some(s);
+                                    break;
+                                }
+                                Err(e) => last = Some(e),
+                            }
+                        }
+                        match found {
+                            Some(s) => s,
+                            None => {
+                                return Err(last.unwrap_or_else(|| {
+                                    io::Error::new(
+                                        io::ErrorKind::AddrNotAvailable,
+                                        format!("{a}: no addresses resolved"),
+                                    )
+                                }))
+                            }
+                        }
+                    }
+                };
                 // The protocol is request/response; Nagle would add
                 // ~40ms to every small frame.
                 s.set_nodelay(true)?;
@@ -742,6 +927,32 @@ impl WireStream {
             WireStream::Unix(s) => {
                 let _ = s.shutdown(std::net::Shutdown::Both);
             }
+        }
+    }
+
+    /// Shut down the read direction only: the peer can send no more
+    /// requests (readers wake with EOF), but replies already in flight
+    /// still go out through the write half — the graceful-drain shape.
+    pub(crate) fn shutdown_read(&self) {
+        match self {
+            WireStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Read);
+            }
+            #[cfg(unix)]
+            WireStream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Read);
+            }
+        }
+    }
+
+    /// Arm a read timeout (`None` clears it). Timed-out reads surface
+    /// as `WouldBlock`/`TimedOut`, which [`read_frame_patient`] folds
+    /// into its idle-vs-stalled distinction.
+    pub(crate) fn set_read_timeout(&self, d: Option<std::time::Duration>) -> io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            WireStream::Unix(s) => s.set_read_timeout(d),
         }
     }
 }
@@ -876,11 +1087,27 @@ mod tests {
                     message: "unknown opcode 0x7f".into(),
                 },
             },
+            Frame::Error {
+                id: 16,
+                err: WireError::Service(ServiceError::Unavailable { kernel: "fir".into() }),
+            },
             Frame::GetMetrics { id: 9 },
             Frame::Metrics {
                 id: 9,
                 json: "{\"completed\":1}".into(),
             },
+            Frame::Health { id: 14 },
+            Frame::HealthOk {
+                id: 14,
+                status: HEALTH_SERVING,
+                inflight: 3,
+            },
+            Frame::HealthOk {
+                id: 14,
+                status: HEALTH_DRAINING,
+                inflight: 0,
+            },
+            Frame::Drain { id: 15 },
         ]
     }
 
@@ -989,6 +1216,23 @@ mod tests {
                 },
                 "0a09000000000000000f0000007b22636f6d706c65746564223a317d",
             ),
+            (Frame::Health { id: 14 }, "0b0e00000000000000"),
+            (
+                Frame::HealthOk {
+                    id: 14,
+                    status: 0,
+                    inflight: 3,
+                },
+                "0c0e000000000000000003000000",
+            ),
+            (Frame::Drain { id: 15 }, "0d0f00000000000000"),
+            (
+                Frame::Error {
+                    id: 16,
+                    err: WireError::Service(ServiceError::Unavailable { kernel: "fir".into() }),
+                },
+                "081000000000000000090003000000666972",
+            ),
         ];
         for (frame, hex) in golden {
             let hex: String = hex.chars().filter(|c| !c.is_whitespace()).collect();
@@ -1026,7 +1270,7 @@ mod tests {
         type Value = Frame;
         fn generate(&self, rng: &mut Rng) -> Frame {
             let id = rng.next_u64();
-            match rng.index(12) {
+            match rng.index(15) {
                 0 => Frame::Hello {
                     id,
                     min: rng.index(4) as u16,
@@ -1066,8 +1310,15 @@ mod tests {
                     id,
                     json: rand_string(rng, 64),
                 },
+                9 => Frame::Health { id },
+                10 => Frame::HealthOk {
+                    id,
+                    status: rng.index(3) as u8,
+                    inflight: rng.next_u64() as u32,
+                },
+                11 => Frame::Drain { id },
                 _ => {
-                    let err = match rng.index(10) {
+                    let err = match rng.index(11) {
                         0 => WireError::Service(ServiceError::UnknownKernel(rand_string(rng, 16))),
                         1 => WireError::Service(ServiceError::ShapeMismatch {
                             kernel: rand_string(rng, 16),
@@ -1093,7 +1344,10 @@ mod tests {
                             backend: rand_string(rng, 8),
                             message: rand_string(rng, 48),
                         }),
-                        8 => WireError::VersionMismatch {
+                        8 => WireError::Service(ServiceError::Unavailable {
+                            kernel: rand_string(rng, 16),
+                        }),
+                        9 => WireError::VersionMismatch {
                             min: rng.index(4) as u16,
                             max: rng.index(4) as u16,
                         },
@@ -1224,6 +1478,91 @@ mod tests {
         };
         let err = write_frame(&mut Vec::new(), &f).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+    }
+
+    /// A `Read` that serves scripted chunks, yielding a timeout error
+    /// between them (and forever after) — the shape of a socket with
+    /// `SO_RCVTIMEO` armed under a trickling or stalled peer.
+    struct StutterRead {
+        chunks: VecDeque<Vec<u8>>,
+    }
+
+    use std::collections::VecDeque;
+
+    impl Read for StutterRead {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            match self.chunks.pop_front() {
+                Some(c) if c.is_empty() => {
+                    Err(io::Error::new(io::ErrorKind::WouldBlock, "timeout"))
+                }
+                Some(c) => {
+                    let n = c.len().min(buf.len());
+                    buf[..n].copy_from_slice(&c[..n]);
+                    if n < c.len() {
+                        self.chunks.push_front(c[n..].to_vec());
+                    }
+                    Ok(n)
+                }
+                None => Err(io::Error::new(io::ErrorKind::WouldBlock, "timeout")),
+            }
+        }
+    }
+
+    #[test]
+    fn patient_read_distinguishes_idle_from_mid_frame_stall() {
+        let frame = Frame::GetMetrics { id: 7 };
+        let mut encoded = Vec::new();
+        write_frame(&mut encoded, &frame).unwrap();
+
+        // Idle: timeout with zero bytes of the next frame consumed.
+        let mut r = StutterRead {
+            chunks: VecDeque::from([vec![]]),
+        };
+        assert!(matches!(
+            read_frame_patient(&mut r).unwrap(),
+            PatientRead::Idle
+        ));
+
+        // Byte-at-a-time delivery with timeouts *between* frames still
+        // decodes: only a timeout after the frame started is a stall.
+        let mut chunks: VecDeque<Vec<u8>> =
+            encoded.iter().map(|b| vec![*b]).collect();
+        chunks.push_back(vec![]); // trailing idle tick
+        let mut r = StutterRead { chunks };
+        match read_frame_patient(&mut r).unwrap() {
+            PatientRead::Frame(f) => assert_eq!(f, frame),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        assert!(matches!(
+            read_frame_patient(&mut r).unwrap(),
+            PatientRead::Idle
+        ));
+
+        // Stall: two bytes of length prefix, then silence.
+        let mut r = StutterRead {
+            chunks: VecDeque::from([encoded[..2].to_vec()]),
+        };
+        let err = read_frame_patient(&mut r).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+
+        // Stall inside the payload is equally fatal.
+        let mut r = StutterRead {
+            chunks: VecDeque::from([encoded[..6].to_vec()]),
+        };
+        let err = read_frame_patient(&mut r).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+
+        // Clean EOF at a boundary is Eof, not an error.
+        struct Empty;
+        impl Read for Empty {
+            fn read(&mut self, _: &mut [u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+        }
+        assert!(matches!(
+            read_frame_patient(&mut Empty).unwrap(),
+            PatientRead::Eof
+        ));
     }
 
     #[test]

@@ -36,16 +36,164 @@
 //! path and the service, the other connections and the acceptor never
 //! notice.
 
-use super::{read_frame, write_frame, Frame, ListenAddr, WireError, WireStream};
+use super::fault::{FaultPlan, FaultState};
+use super::{
+    read_frame_patient, write_frame, Frame, ListenAddr, PatientRead, WireError, WireStream,
+};
 use crate::coordinator::completion::Wake;
 use crate::service::{KernelHandle, OverlayService, Pending, PendingBatch, ServiceError};
-use crate::wire::{WIRE_VERSION_MAX, WIRE_VERSION_MIN};
+use crate::wire::{HEALTH_DRAINING, HEALTH_SERVING, WIRE_VERSION_MAX, WIRE_VERSION_MIN};
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{self, BufReader, BufWriter, Write};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Duration;
+
+/// Default mid-frame stall deadline: a peer that starts a frame and
+/// then goes silent for this long is dropped (the stream can never
+/// re-align). Overridable via `TMFU_WIRE_READ_DEADLINE_MS` so tests
+/// can provoke the deadline in milliseconds instead of seconds.
+const DEFAULT_READ_DEADLINE: Duration = Duration::from_secs(30);
+
+fn read_deadline_from_env() -> Duration {
+    std::env::var("TMFU_WIRE_READ_DEADLINE_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .filter(|d| !d.is_zero())
+        .unwrap_or(DEFAULT_READ_DEADLINE)
+}
+
+// ---------------------------------------------------------------------
+// Drain control
+// ---------------------------------------------------------------------
+
+/// Shared liveness/drain state for one server (or, in `tmfu listen`,
+/// for *all* of a process's servers — pass one handle to every bind so
+/// a `Drain` frame arriving on any transport drains them all).
+///
+/// Draining means: the acceptor stops accepting, every connection's
+/// read half is shut down (no new requests), in-flight replies still
+/// flush through the write halves, and [`WireServer::wait`] returns so
+/// the process can exit 0.
+#[derive(Debug)]
+pub struct ServerCtl {
+    draining: AtomicBool,
+    inflight: AtomicU64,
+    read_deadline: Mutex<Duration>,
+    fault: Mutex<FaultPlan>,
+}
+
+impl Default for ServerCtl {
+    fn default() -> ServerCtl {
+        ServerCtl {
+            draining: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            read_deadline: Mutex::new(read_deadline_from_env()),
+            fault: Mutex::new(FaultPlan::from_env()),
+        }
+    }
+}
+
+impl ServerCtl {
+    pub fn new() -> Arc<ServerCtl> {
+        Arc::new(ServerCtl::default())
+    }
+
+    /// Override the mid-frame stall deadline (tests provoke it in
+    /// milliseconds). Applies to connections accepted afterwards.
+    pub fn set_read_deadline(&self, d: Duration) {
+        *self.read_deadline.lock().unwrap() = d;
+    }
+
+    pub(crate) fn read_deadline(&self) -> Duration {
+        *self.read_deadline.lock().unwrap()
+    }
+
+    /// Override the fault-injection script for connections accepted
+    /// afterwards. The default comes from the `TMFU_FAULT_*`
+    /// environment (process-global); tests running several servers in
+    /// one process use this to script a fault on exactly one of them.
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        *self.fault.lock().unwrap() = plan;
+    }
+
+    fn fault_plan(&self) -> FaultPlan {
+        self.fault.lock().unwrap().clone()
+    }
+
+    pub(crate) fn inflight_add(&self, n: u64) {
+        self.inflight.fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub(crate) fn inflight_sub(&self, n: u64) {
+        self.inflight.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Request a graceful drain (idempotent).
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Requests admitted to the engine whose replies have not yet been
+    /// written back (across all connections sharing this control).
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+}
+
+// SIGTERM → drain flag. The handler only performs an atomic store
+// (async-signal-safe); the acceptor's poll loop notices within one
+// tick and turns it into a `ServerCtl::drain`. Declared against the
+// already-linked C library — no new dependency.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub(super) static DRAIN: AtomicBool = AtomicBool::new(false);
+
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+
+    extern "C" fn on_sigterm(_sig: i32) {
+        DRAIN.store(true, Ordering::SeqCst);
+    }
+
+    pub(super) fn install() {
+        unsafe {
+            signal(SIGTERM, on_sigterm);
+        }
+    }
+}
+
+/// Install the SIGTERM → graceful-drain handler (no-op off Unix).
+/// Call once from long-running foreground servers (`tmfu listen`,
+/// `tmfu router`); embedders and tests drain via [`ServerCtl::drain`]
+/// instead and never touch process signal state.
+pub fn install_sigterm_drain() {
+    #[cfg(unix)]
+    sig::install();
+}
+
+pub(crate) fn sigterm_drain_requested() -> bool {
+    #[cfg(unix)]
+    {
+        sig::DRAIN.load(Ordering::SeqCst)
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}
 
 /// A bound, accepting wire server. Dropping the value does **not**
 /// stop it — call [`WireServer::shutdown`] (tests, embedders) or
@@ -54,6 +202,7 @@ pub struct WireServer {
     addr: ListenAddr,
     unix_path: Option<std::path::PathBuf>,
     stop: Arc<AtomicBool>,
+    ctl: Arc<ServerCtl>,
     acceptor: Option<thread::JoinHandle<()>>,
     conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
     /// Control clones of live connection sockets, keyed by connection
@@ -62,7 +211,7 @@ pub struct WireServer {
     streams: Arc<Mutex<HashMap<u64, WireStream>>>,
 }
 
-enum Listener {
+pub(crate) enum Listener {
     Tcp(std::net::TcpListener),
     #[cfg(unix)]
     Unix(std::os::unix::net::UnixListener),
@@ -82,7 +231,7 @@ impl Listener {
         }
     }
 
-    fn accept(&self) -> io::Result<WireStream> {
+    pub(crate) fn accept(&self) -> io::Result<WireStream> {
         match self {
             Listener::Tcp(l) => {
                 let (s, _) = l.accept()?;
@@ -98,6 +247,38 @@ impl Listener {
             }
         }
     }
+}
+
+/// Bind a poll-accept listener (shared by [`WireServer`] and the
+/// router's upstream acceptor): resolves ephemeral TCP ports, recreates
+/// stale Unix socket files, and switches the listener to nonblocking.
+/// Returns the listener, the resolved address, and the Unix socket path
+/// to unlink on shutdown (if any).
+pub(crate) fn bind_listener(
+    addr: &ListenAddr,
+) -> Result<(Listener, ListenAddr, Option<std::path::PathBuf>)> {
+    let (listener, resolved, unix_path) = match addr {
+        ListenAddr::Tcp(a) => {
+            let l = std::net::TcpListener::bind(a).with_context(|| format!("bind tcp {a}"))?;
+            let actual = l.local_addr().context("tcp local addr")?;
+            (Listener::Tcp(l), ListenAddr::Tcp(actual.to_string()), None)
+        }
+        #[cfg(unix)]
+        ListenAddr::Unix(p) => {
+            // A crashed previous server leaves the file behind;
+            // rebinding is the expected recovery.
+            let _ = std::fs::remove_file(p);
+            let l = std::os::unix::net::UnixListener::bind(p)
+                .with_context(|| format!("bind unix socket {}", p.display()))?;
+            (Listener::Unix(l), addr.clone(), Some(p.clone()))
+        }
+        #[cfg(not(unix))]
+        ListenAddr::Unix(_) => {
+            anyhow::bail!("unix sockets are not available on this platform")
+        }
+    };
+    listener.set_nonblocking().context("listener nonblocking")?;
+    Ok((listener, resolved, unix_path))
 }
 
 impl WireServer {
@@ -117,42 +298,40 @@ impl WireServer {
         addr: &ListenAddr,
         limit: Option<usize>,
     ) -> Result<WireServer> {
-        let (listener, resolved, unix_path) = match addr {
-            ListenAddr::Tcp(a) => {
-                let l = std::net::TcpListener::bind(a)
-                    .with_context(|| format!("bind tcp {a}"))?;
-                let actual = l.local_addr().context("tcp local addr")?;
-                (Listener::Tcp(l), ListenAddr::Tcp(actual.to_string()), None)
-            }
-            #[cfg(unix)]
-            ListenAddr::Unix(p) => {
-                // A crashed previous server leaves the file behind;
-                // rebinding is the expected recovery.
-                let _ = std::fs::remove_file(p);
-                let l = std::os::unix::net::UnixListener::bind(p)
-                    .with_context(|| format!("bind unix socket {}", p.display()))?;
-                (Listener::Unix(l), addr.clone(), Some(p.clone()))
-            }
-            #[cfg(not(unix))]
-            ListenAddr::Unix(_) => {
-                anyhow::bail!("unix sockets are not available on this platform")
-            }
-        };
-        listener.set_nonblocking().context("listener nonblocking")?;
+        WireServer::bind_with_ctl(service, addr, limit, ServerCtl::new())
+    }
+
+    /// [`WireServer::bind_with_limit`] with a caller-supplied
+    /// [`ServerCtl`]. `tmfu listen` passes one control to every bound
+    /// transport so a `Drain` frame (or SIGTERM) drains them together;
+    /// tests drive drain deterministically through the same handle.
+    pub fn bind_with_ctl(
+        service: Arc<OverlayService>,
+        addr: &ListenAddr,
+        limit: Option<usize>,
+        ctl: Arc<ServerCtl>,
+    ) -> Result<WireServer> {
+        let (listener, resolved, unix_path) = bind_listener(addr)?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-        let streams: Arc<Mutex<HashMap<u64, WireStream>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        let streams: Arc<Mutex<HashMap<u64, WireStream>>> = Arc::new(Mutex::new(HashMap::new()));
         let acceptor = {
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
             let streams = Arc::clone(&streams);
+            let ctl = Arc::clone(&ctl);
             thread::Builder::new()
                 .name("wire-accept".to_string())
                 .spawn(move || {
                     let mut accepted = 0u64;
                     loop {
                         if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if sigterm_drain_requested() {
+                            ctl.drain();
+                        }
+                        if ctl.is_draining() {
                             break;
                         }
                         if let Some(limit) = limit {
@@ -186,10 +365,11 @@ impl WireServer {
                         streams.lock().unwrap().insert(conn_id, control);
                         let service = Arc::clone(&service);
                         let conn_streams = Arc::clone(&streams);
+                        let conn_ctl = Arc::clone(&ctl);
                         let spawned = thread::Builder::new()
                             .name(format!("wire-conn-{conn_id}"))
                             .spawn(move || {
-                                connection(service, stream);
+                                connection(service, stream, conn_ctl);
                                 conn_streams.lock().unwrap().remove(&conn_id);
                             });
                         match spawned {
@@ -221,10 +401,16 @@ impl WireServer {
             addr: resolved,
             unix_path,
             stop,
+            ctl,
             acceptor: Some(acceptor),
             conns,
             streams,
         })
+    }
+
+    /// This server's drain/liveness control handle.
+    pub fn ctl(&self) -> Arc<ServerCtl> {
+        Arc::clone(&self.ctl)
     }
 
     /// The resolved listen address (ephemeral TCP ports filled in) —
@@ -234,12 +420,24 @@ impl WireServer {
     }
 
     /// Block until the acceptor exits on its own (connection limit
-    /// reached), then drain connection threads and clean up. Without a
-    /// limit this blocks until the process dies — the `tmfu listen`
-    /// foreground mode.
+    /// reached, drain requested via [`ServerCtl::drain`], a `Drain`
+    /// frame, or SIGTERM), then drain connection threads and clean up.
+    /// Without a limit or a drain this blocks until the process dies —
+    /// the `tmfu listen` foreground mode.
+    ///
+    /// On a drain, every connection's **read** half is shut down (no
+    /// new requests; blocked readers wake with EOF) while write halves
+    /// keep flushing in-flight replies — then all threads are joined.
+    /// The caller returning normally afterwards is what makes
+    /// SIGTERM-drain exit the process with status 0.
     pub fn wait(mut self) {
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
+        }
+        if self.ctl.is_draining() {
+            for s in self.streams.lock().unwrap().values() {
+                s.shutdown_read();
+            }
         }
         self.finish(false);
     }
@@ -289,6 +487,11 @@ enum InFlight {
 struct ConnShared {
     m: Mutex<ConnState>,
     cv: Condvar,
+    /// Server-wide drain/in-flight accounting. `register` increments
+    /// the in-flight count; the reactor decrements it once the reply
+    /// (or the connection's death) settles the request, keeping
+    /// `ServerCtl::inflight` an exact ledger for `HealthOk`.
+    ctl: Arc<ServerCtl>,
 }
 
 struct ConnState {
@@ -310,7 +513,7 @@ struct ConnState {
 }
 
 impl ConnShared {
-    fn new() -> ConnShared {
+    fn new(ctl: Arc<ServerCtl>) -> ConnShared {
         ConnShared {
             m: Mutex::new(ConnState {
                 outbox: VecDeque::new(),
@@ -320,6 +523,7 @@ impl ConnShared {
                 dead: false,
             }),
             cv: Condvar::new(),
+            ctl,
         }
     }
 
@@ -336,6 +540,14 @@ impl ConnShared {
     /// processed — the reactor's carry list absorbs that race.
     fn register(&self, id: u64, inflight: InFlight) {
         let mut st = self.m.lock().unwrap();
+        if st.dead {
+            // Torn down already: dropping the pending abandons its
+            // slot; the request never enters the in-flight ledger.
+            return;
+        }
+        // Counted under the lock so the reactor's dead-path drain sees
+        // a consistent submitted-vs-counter view.
+        self.ctl.inflight_add(1);
         st.submitted.push((id, inflight));
         drop(st);
         self.cv.notify_all();
@@ -362,7 +574,7 @@ impl Wake for ConnShared {
     }
 }
 
-fn connection(service: Arc<OverlayService>, stream: WireStream) {
+fn connection(service: Arc<OverlayService>, stream: WireStream, ctl: Arc<ServerCtl>) {
     let write_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -371,11 +583,18 @@ fn connection(service: Arc<OverlayService>, stream: WireStream) {
         Ok(s) => s,
         Err(_) => return,
     };
-    let conn = Arc::new(ConnShared::new());
+    // Arm the read deadline: a peer stalled mid-frame past it is
+    // dropped; timeouts at a frame boundary are idle ticks, retried
+    // forever (keep-alive connections are legal). Best-effort — a
+    // socket that refuses the option just blocks as before.
+    let _ = stream.set_read_timeout(Some(ctl.read_deadline()));
+    let fault = ctl.fault_plan();
+    let conn = Arc::new(ConnShared::new(ctl));
     let reactor_conn = Arc::clone(&conn);
+    let reactor_fault = FaultState::new(fault.clone());
     let spawned = thread::Builder::new()
         .name("wire-react".to_string())
-        .spawn(move || reactor_loop(reactor_conn, write_half));
+        .spawn(move || reactor_loop(reactor_conn, write_half, reactor_fault));
     let Ok(reactor) = spawned else {
         // Thread exhaustion: shed the connection rather than panic.
         control.shutdown_both();
@@ -383,7 +602,7 @@ fn connection(service: Arc<OverlayService>, stream: WireStream) {
     };
 
     let mut reader = BufReader::new(stream);
-    serve_connection(&service, &mut reader, &conn);
+    serve_connection(&service, &mut reader, &conn, &control, FaultState::new(fault));
 
     // In-flight replies still get written after the reader is done
     // (the peer may have half-closed); the reactor exits once its
@@ -397,7 +616,7 @@ fn connection(service: Arc<OverlayService>, stream: WireStream) {
 /// reader's immediate frames, and drains completed in-flight replies
 /// straight out of the completion slab. One loop, zero per-call
 /// threads.
-fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream) {
+fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream, mut fault: FaultState) {
     let mut w = BufWriter::new(stream);
     // id → pending reply. Bounded by the peer's in-flight window (and
     // transitively by the service's queue depth).
@@ -410,10 +629,12 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream) {
             let mut st = conn.m.lock().unwrap();
             loop {
                 if st.dead {
+                    let orphaned = std::mem::take(&mut st.submitted);
+                    drop(st);
+                    settle_remaining(&conn, inflight.len() + orphaned.len());
                     return;
                 }
-                let idle =
-                    st.outbox.is_empty() && st.submitted.is_empty() && st.ready.is_empty();
+                let idle = st.outbox.is_empty() && st.submitted.is_empty() && st.ready.is_empty();
                 if !idle {
                     break;
                 }
@@ -456,8 +677,20 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream) {
                 continue;
             };
             let frame = completed_frame(tag, p);
-            if !write_err && write_frame(&mut w, &frame).is_err() {
-                write_err = true;
+            // Either way this request is settled: the reply is written
+            // or dies with the connection.
+            conn.ctl.inflight_sub(1);
+            if !write_err {
+                fault.before_reply();
+                if fault.corrupt_this_reply() {
+                    // Scripted corruption: an over-cap length prefix
+                    // instead of the reply, then tear down.
+                    let _ = w.write_all(&u32::MAX.to_le_bytes());
+                    let _ = w.flush();
+                    write_err = true;
+                } else if write_frame(&mut w, &frame).is_err() {
+                    write_err = true;
+                }
             }
         }
         if !write_err && w.flush().is_err() {
@@ -471,9 +704,22 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream) {
             if let Ok(inner) = w.get_ref().try_clone() {
                 inner.shutdown_both();
             }
-            conn.m.lock().unwrap().dead = true;
+            let mut st = conn.m.lock().unwrap();
+            st.dead = true;
+            let orphaned = std::mem::take(&mut st.submitted);
+            drop(st);
+            settle_remaining(&conn, inflight.len() + orphaned.len());
             return;
         }
+    }
+}
+
+/// Account for in-flight requests a dying connection can never answer:
+/// their replies are lost with the socket, so they leave the ledger
+/// here (the pendings' drop-abandon recycles the slab slots).
+fn settle_remaining(conn: &ConnShared, n: usize) {
+    if n > 0 {
+        conn.ctl.inflight_sub(n as u64);
     }
 }
 
@@ -518,22 +764,35 @@ fn rung_but_not_ready(id: u64) -> Frame {
 }
 
 /// Decode-and-dispatch loop for one connection. Returns when the peer
-/// disconnects or breaks protocol.
+/// disconnects, breaks protocol, stalls past the read deadline, or a
+/// scripted fault drops the line.
 fn serve_connection(
     service: &OverlayService,
     reader: &mut BufReader<WireStream>,
     conn: &Arc<ConnShared>,
+    control: &WireStream,
+    mut fault: FaultState,
 ) {
     // --- handshake -------------------------------------------------
-    let hello = match read_frame(reader) {
-        Ok(Some(f)) => f,
-        Ok(None) => return,
-        Err(e) => {
-            conn.push_frame(malformed(0, &e));
-            return;
+    // The handshake read stays patient through idle ticks too: a
+    // client may open the socket early and greet later.
+    let hello = loop {
+        match read_frame_patient(reader) {
+            Ok(PatientRead::Frame(f)) => break f,
+            Ok(PatientRead::Eof) => return,
+            Ok(PatientRead::Idle) => {
+                if conn.ctl.is_draining() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                conn.push_frame(malformed(0, &e));
+                return;
+            }
+            Err(_) => return,
         }
     };
-    match hello {
+    let version = match hello {
         Frame::Hello { id, min, max } => {
             let lo = min.max(WIRE_VERSION_MIN);
             let hi = max.min(WIRE_VERSION_MAX);
@@ -552,6 +811,7 @@ fn serve_connection(
                 version: hi,
                 backend: service.backend().name().to_string(),
             });
+            hi
         }
         other => {
             conn.push_frame(malformed(
@@ -560,7 +820,7 @@ fn serve_connection(
             ));
             return;
         }
-    }
+    };
 
     // One session handle per registry kernel, resolved once — `Call`
     // frames carry the dense id and index this vector directly.
@@ -568,20 +828,40 @@ fn serve_connection(
 
     // --- request loop ----------------------------------------------
     loop {
-        let frame = match read_frame(reader) {
-            Ok(Some(f)) => f,
-            // Clean disconnect, or mid-frame cut: either way the
-            // conversation is over. In-flight replies drain through
-            // the reactor on their own.
-            Ok(None) => return,
+        let frame = match read_frame_patient(reader) {
+            Ok(PatientRead::Frame(f)) => f,
+            // Clean disconnect: the conversation is over. In-flight
+            // replies drain through the reactor on their own.
+            Ok(PatientRead::Eof) => return,
+            // Idle at a frame boundary is legal (keep-alive); under a
+            // drain no further requests are accepted, so stop reading.
+            Ok(PatientRead::Idle) => {
+                if conn.ctl.is_draining() {
+                    return;
+                }
+                continue;
+            }
             Err(e) if e.kind() == io::ErrorKind::InvalidData => {
                 // Undecodable bytes: tell the peer, then hang up (the
                 // stream is no longer frame-aligned).
                 conn.push_frame(malformed(0, &e));
                 return;
             }
+            Err(e) if e.kind() == io::ErrorKind::TimedOut => {
+                // Stalled mid-frame past the read deadline: the stream
+                // can never re-align. Tear down both halves so the
+                // reactor (and the stalled peer) unblock immediately.
+                control.shutdown_both();
+                return;
+            }
             Err(_) => return,
         };
+        if fault.frame_read() {
+            // Scripted connection drop: simulate a kill -9 — both
+            // halves die, in-flight replies are lost.
+            control.shutdown_both();
+            return;
+        }
         match frame {
             Frame::Resolve { id, name } => {
                 let reply = match service.kernel(&name) {
@@ -635,6 +915,42 @@ fn serve_connection(
                 let json = service.metrics().to_json().to_string_compact();
                 conn.push_frame(Frame::Metrics { id, json });
             }
+            Frame::Health { id } if version >= 2 => {
+                let status = if conn.ctl.is_draining() {
+                    HEALTH_DRAINING
+                } else {
+                    HEALTH_SERVING
+                };
+                conn.push_frame(Frame::HealthOk {
+                    id,
+                    status,
+                    inflight: conn.ctl.inflight().min(u32::MAX as u64) as u32,
+                });
+            }
+            Frame::Drain { id } if version >= 2 => {
+                // Graceful drain: flag the server (the acceptor stops,
+                // `wait()` shuts read halves and joins), acknowledge,
+                // and stop reading further requests on this
+                // connection. In-flight replies still flush.
+                conn.ctl.drain();
+                conn.push_frame(Frame::HealthOk {
+                    id,
+                    status: HEALTH_DRAINING,
+                    inflight: conn.ctl.inflight().min(u32::MAX as u64) as u32,
+                });
+                return;
+            }
+            other @ (Frame::Health { .. } | Frame::Drain { .. }) => {
+                // v2 opcodes on a v1-negotiated connection: breach.
+                conn.push_frame(malformed(
+                    other.request_id(),
+                    &format!(
+                        "{} requires protocol v2 (negotiated v{version})",
+                        frame_name(&other)
+                    ),
+                ));
+                return;
+            }
             other => {
                 // Server-to-client opcodes (or a second Hello) are a
                 // protocol breach: reply typed, then hang up.
@@ -648,7 +964,7 @@ fn serve_connection(
     }
 }
 
-fn malformed(id: u64, msg: &impl ToString) -> Frame {
+pub(crate) fn malformed(id: u64, msg: &impl ToString) -> Frame {
     Frame::Error {
         id,
         err: WireError::Malformed {
@@ -657,14 +973,14 @@ fn malformed(id: u64, msg: &impl ToString) -> Frame {
     }
 }
 
-fn unknown_kernel(id: u64, kernel: u32) -> Frame {
+pub(crate) fn unknown_kernel(id: u64, kernel: u32) -> Frame {
     Frame::Error {
         id,
         err: WireError::Service(ServiceError::UnknownKernel(format!("kernel#{kernel}"))),
     }
 }
 
-fn frame_name(f: &Frame) -> &'static str {
+pub(crate) fn frame_name(f: &Frame) -> &'static str {
     match f {
         Frame::Hello { .. } => "Hello",
         Frame::HelloOk { .. } => "HelloOk",
@@ -676,5 +992,8 @@ fn frame_name(f: &Frame) -> &'static str {
         Frame::Error { .. } => "Error",
         Frame::GetMetrics { .. } => "GetMetrics",
         Frame::Metrics { .. } => "Metrics",
+        Frame::Health { .. } => "Health",
+        Frame::HealthOk { .. } => "HealthOk",
+        Frame::Drain { .. } => "Drain",
     }
 }

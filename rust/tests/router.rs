@@ -1,0 +1,201 @@
+//! Router integration tests: real backends, a real router, and a real
+//! client in one process, talking through OS sockets. The centerpiece
+//! is the chaos gate — one of two replicas "kill -9"ed mid-burst (its
+//! sockets vanish with replies owed, via the scripted fault plan) and
+//! every call must still settle bit-exactly on the survivor, with the
+//! router's ledger balancing to `admitted == completed + failed`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tmfu_overlay::client::OverlayClient;
+use tmfu_overlay::dfg::eval;
+use tmfu_overlay::exec::{BackendKind, FlatBatch};
+use tmfu_overlay::router::{Router, RouterConfig};
+use tmfu_overlay::service::{OverlayService, ServiceError};
+use tmfu_overlay::wire::fault::FaultPlan;
+use tmfu_overlay::wire::server::WireServer;
+use tmfu_overlay::wire::ListenAddr;
+
+fn backend(pipelines: usize) -> (Arc<OverlayService>, WireServer) {
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(BackendKind::Turbo)
+            .pipelines(pipelines)
+            .max_batch(8)
+            .queue_depth(4096)
+            .build()
+            .unwrap(),
+    );
+    let server = WireServer::bind(Arc::clone(&service), &ListenAddr::parse("127.0.0.1:0"))
+        .unwrap();
+    (service, server)
+}
+
+/// Test tuning: fast probes and short backoffs so replica death is
+/// detected and retried within milliseconds, not seconds.
+fn quick_cfg(backends: Vec<String>) -> RouterConfig {
+    let mut cfg = RouterConfig::new(backends);
+    cfg.probe_interval = Duration::from_millis(100);
+    cfg.call_deadline = Duration::from_secs(15);
+    cfg.max_retries = 5;
+    cfg.backoff_base = Duration::from_millis(20);
+    cfg.backoff_cap = Duration::from_millis(200);
+    cfg.connect_timeout = Duration::from_secs(2);
+    cfg.read_timeout = Duration::from_secs(5);
+    cfg
+}
+
+fn start_router(backends: Vec<String>) -> Router {
+    Router::start(quick_cfg(backends), &ListenAddr::parse("127.0.0.1:0")).unwrap()
+}
+
+/// The chaos gate. Two replicas; one is scripted to drop every
+/// connection after 40 frames — the in-process stand-in for `kill -9`
+/// mid-burst (`TMFU_FAULT_DROP_AFTER` scripts the same from the CLI,
+/// but env vars would fault *both* in-process backends). Every call in
+/// a large burst must complete bit-exactly anyway, within the per-call
+/// deadline, with zero hangs and a balanced ledger on both the router
+/// and the surviving backend.
+#[test]
+fn chaos_one_replica_dies_mid_burst_and_every_call_still_settles() {
+    let (service_a, server_a) = backend(2);
+    let (service_b, server_b) = backend(2);
+    server_a.ctl().set_fault_plan(FaultPlan {
+        drop_after_frames: Some(40),
+        ..FaultPlan::default()
+    });
+    let router = start_router(vec![server_a.addr().to_string(), server_b.addr().to_string()]);
+    let client = OverlayClient::connect(&router.addr().to_string()).unwrap();
+    assert_eq!(client.backend(), "router");
+
+    let gradient = client.kernel("gradient").unwrap();
+    let dfg = service_b.registry().get("gradient").unwrap().dfg.clone();
+    const N: usize = 400;
+    let mut jobs = Vec::with_capacity(N);
+    for i in 0..N as i32 {
+        let inputs = vec![i, 5 - i, 2, 7, -i];
+        let want = eval(&dfg, &inputs);
+        jobs.push((gradient.submit(&inputs).unwrap(), want));
+    }
+    // Bounded waits: a wedged call fails the test rather than hanging
+    // the suite.
+    let guard = Instant::now() + Duration::from_secs(60);
+    for (i, (mut p, want)) in jobs.into_iter().enumerate() {
+        let left = guard.saturating_duration_since(Instant::now());
+        let got = p.wait_timeout(left).unwrap_or_else(|e| panic!("call {i}: {e}"));
+        assert_eq!(got, want, "call {i} must be bit-exact");
+    }
+
+    // Ledger: every admitted call settled exactly once, none failed —
+    // the survivor absorbed the retries.
+    let m = router.metrics();
+    assert_eq!(m.admitted(), N as u64);
+    assert_eq!(m.completed(), N as u64);
+    assert_eq!(m.failed(), 0);
+    assert!(m.retries() > 0, "the scripted fault must actually have bitten");
+    assert_eq!(router.ctl().inflight(), 0);
+    // The surviving backend is quiescent: nothing leaked in flight.
+    assert_eq!(server_b.ctl().inflight(), 0);
+
+    drop(client);
+    router.shutdown();
+    server_a.shutdown();
+    server_b.shutdown();
+    service_a.shutdown().unwrap();
+    service_b.shutdown().unwrap();
+}
+
+#[test]
+fn no_reachable_replica_is_typed_unavailable() {
+    // Ports 9/10 on loopback: nobody listens, connects fail fast.
+    let router = start_router(vec!["127.0.0.1:9".to_string(), "127.0.0.1:10".to_string()]);
+    let client = OverlayClient::connect(&router.addr().to_string()).unwrap();
+    let err = client.kernel("gradient").unwrap_err();
+    assert!(
+        matches!(err, ServiceError::Unavailable { ref kernel } if kernel == "gradient"),
+        "expected Unavailable, got {err}"
+    );
+    drop(client);
+    router.shutdown();
+}
+
+#[test]
+fn batches_health_metrics_and_graceful_drain_work_through_the_router() {
+    let (service, server) = backend(2);
+    let router = start_router(vec![server.addr().to_string()]);
+    let client = OverlayClient::connect(&router.addr().to_string()).unwrap();
+
+    let health = client.health().unwrap();
+    assert!(!health.draining);
+
+    // Batches forward atomically and come back row-exact.
+    let poly6 = client.kernel("poly6").unwrap();
+    let compiled = service.registry().get("poly6").unwrap().clone();
+    let mut batch = FlatBatch::new(poly6.arity());
+    for i in 0..17i32 {
+        batch.push_iter((0..poly6.arity()).map(|j| i * 31 + j as i32));
+    }
+    let out = poly6.call_batch(&batch).unwrap();
+    assert_eq!(out.n_rows(), 17);
+    for (i, row) in batch.iter().enumerate() {
+        assert_eq!(out.row(i), &eval(&compiled.dfg, row)[..], "row {i}");
+    }
+
+    // Metrics name the role and the ledger; one CallBatch admitted.
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("role").as_str(), Some("router"));
+    assert_eq!(m.get("admitted").as_i64(), Some(1));
+    assert_eq!(m.get("completed").as_i64(), Some(1));
+    assert_eq!(m.get("backends").at(0).get("up").as_bool(), Some(true));
+
+    // Graceful drain: acknowledged draining, then wait() returns.
+    let report = client.drain().unwrap();
+    assert!(report.draining);
+    router.wait();
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+/// When every replica dies *and stays dead*, calls fail typed — fast,
+/// bounded by the retry budget and deadline — and the ledger accounts
+/// the failure. No hangs, no untyped errors.
+#[test]
+fn calls_fail_typed_and_bounded_when_every_replica_stays_dead() {
+    let (service, server) = backend(1);
+    let mut cfg = quick_cfg(vec![server.addr().to_string()]);
+    cfg.call_deadline = Duration::from_secs(3);
+    cfg.max_retries = 2;
+    let router = Router::start(cfg, &ListenAddr::parse("127.0.0.1:0")).unwrap();
+    let client = OverlayClient::connect(&router.addr().to_string()).unwrap();
+    let gradient = client.kernel("gradient").unwrap();
+    assert_eq!(gradient.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    // The only backend goes away for good.
+    server.shutdown();
+    service.shutdown().unwrap();
+
+    let t0 = Instant::now();
+    let err = gradient.call(&[3, 5, 2, 7, 1]).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(10), "took {:?}", t0.elapsed());
+    assert!(
+        matches!(
+            err,
+            ServiceError::Unavailable { .. }
+                | ServiceError::Disconnected { .. }
+                | ServiceError::ShutDown
+                | ServiceError::DeadlineExceeded { .. }
+        ),
+        "expected a typed environmental error, got {err}"
+    );
+
+    let m = router.metrics();
+    assert_eq!(m.admitted(), 2);
+    assert_eq!(m.completed(), 1);
+    assert_eq!(m.failed(), 1);
+    assert_eq!(router.ctl().inflight(), 0);
+
+    drop(client);
+    router.shutdown();
+}

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use tmfu_overlay::client::OverlayClient;
+use tmfu_overlay::client::{ClientBuilder, OverlayClient};
 use tmfu_overlay::dfg::eval;
 use tmfu_overlay::exec::{BackendKind, FlatBatch};
 use tmfu_overlay::service::{OverlayService, ServiceError};
@@ -40,7 +40,7 @@ fn connect(server: &WireServer) -> OverlayClient {
 fn resolve_call_batch_submit_and_metrics_round_trip() {
     let (service, server) = start(BackendKind::Turbo, 1024);
     let client = connect(&server);
-    assert_eq!(client.version(), 1);
+    assert_eq!(client.version(), 2);
     assert_eq!(client.backend(), "turbo");
 
     // Resolve mirrors OverlayService::kernel: id + arities, once.
@@ -186,7 +186,7 @@ fn version_mismatch_is_refused_with_the_server_range() {
     match read_frame(&mut s).unwrap().unwrap() {
         Frame::Error { id, err } => {
             assert_eq!(id, 7);
-            assert_eq!(err, WireError::VersionMismatch { min: 1, max: 1 });
+            assert_eq!(err, WireError::VersionMismatch { min: 1, max: 2 });
         }
         other => panic!("expected Error frame, got {other:?}"),
     }
@@ -410,6 +410,188 @@ fn in_flight_burst_spawns_no_per_call_threads() {
     drop(client);
     server.shutdown();
     service.shutdown().unwrap();
+}
+
+/// Partial frames are a legal wire state, not an error: a peer may
+/// dribble a frame one byte at a time and the server must reassemble
+/// it exactly (the patient reader's frame-boundary bookkeeping).
+#[test]
+fn byte_at_a_time_frames_are_served_intact() {
+    let (service, server) = start(BackendKind::Turbo, 64);
+    let ListenAddr::Tcp(addr) = server.addr().clone() else {
+        panic!("expected tcp")
+    };
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    // Serialize the whole conversation locally, then dribble it.
+    let gradient_id = service.kernel("gradient").unwrap().id().0;
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &Frame::Hello { id: 0, min: 1, max: 2 }).unwrap();
+    write_frame(
+        &mut buf,
+        &Frame::Call {
+            id: 1,
+            kernel: gradient_id,
+            inputs: vec![3, 5, 2, 7, 1],
+        },
+    )
+    .unwrap();
+    use std::io::Write as _;
+    for b in buf {
+        s.write_all(&[b]).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    assert!(matches!(
+        read_frame(&mut s).unwrap().unwrap(),
+        Frame::HelloOk { .. }
+    ));
+    match read_frame(&mut s).unwrap().unwrap() {
+        Frame::Reply { id, batch } => {
+            assert_eq!(id, 1);
+            assert_eq!(batch.row(0), &[36]);
+        }
+        other => panic!("expected Reply, got {other:?}"),
+    }
+    assert_eq!(server.ctl().inflight(), 0);
+
+    drop(s);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+/// A peer that stalls *mid-frame* past the read deadline can never
+/// re-align the stream; the server must drop it — promptly, with
+/// nothing leaked — rather than wedge the connection thread forever.
+#[test]
+fn mid_frame_stall_past_the_read_deadline_is_dropped_not_wedged() {
+    let (service, server) = start(BackendKind::Turbo, 64);
+    server.ctl().set_read_deadline(Duration::from_millis(150));
+    let ListenAddr::Tcp(addr) = server.addr().clone() else {
+        panic!("expected tcp")
+    };
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 2 }).unwrap();
+    assert!(matches!(
+        read_frame(&mut s).unwrap().unwrap(),
+        Frame::HelloOk { .. }
+    ));
+    // A length prefix promising 10 bytes, one byte of body, then
+    // silence.
+    use std::io::Write as _;
+    s.write_all(&[10, 0, 0, 0, 0x05]).unwrap();
+    s.flush().unwrap();
+    // The server tears both halves down once the deadline passes; our
+    // read unblocks with EOF or a reset long before the guard timeout.
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    use std::io::Read as _;
+    let t0 = Instant::now();
+    let mut buf = [0u8; 16];
+    match s.read(&mut buf) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("expected a hangup, got {n} bytes"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5), "took {:?}", t0.elapsed());
+    // Nothing was admitted, nothing leaked.
+    assert_eq!(server.ctl().inflight(), 0);
+
+    // The server still serves fresh connections afterwards.
+    let client = connect(&server);
+    assert_eq!(client.kernel("gradient").unwrap().call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+/// Graceful drain end to end: `Health` reports serving, a `Drain`
+/// frame (even one followed by trailing garbage) is acknowledged and
+/// stops the server, in-flight calls still complete, `wait()` returns,
+/// and the ledger is balanced.
+#[test]
+fn drain_finishes_in_flight_work_and_survives_trailing_garbage() {
+    let (service, server) = start(BackendKind::Turbo, 1024);
+    let ctl = server.ctl();
+    let client = connect(&server);
+    let gradient = client.kernel("gradient").unwrap();
+    let health = client.health().unwrap();
+    assert!(!health.draining);
+
+    // A call in flight while the drain lands.
+    let pending = gradient.submit(&[3, 5, 2, 7, 1]).unwrap();
+    {
+        let ListenAddr::Tcp(addr) = server.addr().clone() else {
+            panic!("expected tcp")
+        };
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 2 }).unwrap();
+        assert!(matches!(
+            read_frame(&mut s).unwrap().unwrap(),
+            Frame::HelloOk { .. }
+        ));
+        write_frame(&mut s, &Frame::Drain { id: 9 }).unwrap();
+        // Bytes after the drain must never wedge the server: it has
+        // stopped reading this connection.
+        use std::io::Write as _;
+        let _ = s.write_all(b"trailing garbage after the drain");
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::HealthOk { id, status, .. } => {
+                assert_eq!(id, 9);
+                assert_eq!(status, 1, "ack must report draining");
+            }
+            other => panic!("expected HealthOk, got {other:?}"),
+        }
+        // Hangup, not a wedge.
+        assert!(matches!(read_frame(&mut s), Ok(None) | Err(_)));
+    }
+    // The in-flight reply still arrives (drain finishes work, it does
+    // not drop it) ...
+    assert_eq!(pending.wait().unwrap(), vec![36]);
+    // ... and the drained acceptor lets wait() return instead of
+    // serving forever.
+    server.wait();
+    assert_eq!(ctl.inflight(), 0, "admitted == completed + failed");
+
+    drop(client);
+    service.shutdown().unwrap();
+}
+
+/// Satellite regression for the client timeouts: a server that
+/// completes the handshake and then goes silent (never replies, never
+/// closes) must yield a typed `Disconnected` within the configured
+/// read-timeout window — not a 30 s (or forever) hang.
+#[test]
+fn silent_socket_yields_typed_disconnected_not_a_hang() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let hello = read_frame(&mut s).unwrap().unwrap();
+        write_frame(
+            &mut s,
+            &Frame::HelloOk {
+                id: hello.request_id(),
+                version: 2,
+                backend: "fake".to_string(),
+            },
+        )
+        .unwrap();
+        // Return the socket so it stays open (silent) until joined.
+        s
+    });
+    let client = ClientBuilder::new()
+        .read_timeout(Some(Duration::from_millis(120)))
+        .connect(&addr)
+        .unwrap();
+    let t0 = Instant::now();
+    let err = client.kernel("gradient").unwrap_err();
+    assert!(
+        matches!(err, ServiceError::Disconnected { .. }),
+        "expected Disconnected, got {err}"
+    );
+    // Two idle strikes at 120 ms each plus slack — nowhere near 30 s.
+    assert!(t0.elapsed() < Duration::from_secs(5), "took {:?}", t0.elapsed());
+    let _ = fake.join();
 }
 
 #[test]

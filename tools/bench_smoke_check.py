@@ -17,6 +17,13 @@ Hard gates (fail the build):
   * ``turbo_speedup_vs_ref`` must meet its recorded floor (raised to
     20x for the SIMD-lowered interpreter in PR 6), when both numbers
     are present.
+  * ``router_call_overhead_us`` (the extra cost of the `tmfu router`
+    store-and-forward hop over a direct wire call, bench_perf section
+    B7) must stay within 3x of the same run's wire framing overhead —
+    one extra hop should cost about one extra framing pass, so 3x (or
+    a 150us absolute floor, whichever is larger, to absorb fast-mode
+    noise) catches a regression to blocking forwarding or per-call
+    threads.
 
 Soft gate:
   * ``wire_call_overhead_us`` is compared against the committed
@@ -74,6 +81,23 @@ def main() -> None:
         print(f"bench-smoke: turbo speedup {speedup:.1f}x (floor {floor}x)")
 
     fresh_wire = meta.get("wire_call_overhead_us")
+    router = meta.get("router_call_overhead_us")
+    if router is None:
+        fail("router_call_overhead_us missing from the bench JSON (B7 did not run)")
+    if isinstance(fresh_wire, (int, float)) and fresh_wire > 0:
+        bound = max(3.0 * fresh_wire, 150.0)
+        if router > bound:
+            fail(
+                f"router_call_overhead_us = {router:.1f}us vs wire framing overhead "
+                f"{fresh_wire:.1f}us (bound {bound:.1f}us) — the forwarding hop regressed"
+            )
+        print(
+            f"bench-smoke: router_call_overhead_us {router:.1f}us vs wire "
+            f"{fresh_wire:.1f}us (within bound {bound:.1f}us)"
+        )
+    else:
+        print(f"bench-smoke: router_call_overhead_us {router:.1f}us recorded")
+
     baseline_wire = None
     if len(sys.argv) > 2:
         try:

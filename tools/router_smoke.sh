@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Failover smoke for `tmfu router` (DESIGN.md §11): two `tmfu listen`
+# replicas behind one router, a burst of calls through the front, and
+# a `kill -9` of one replica while the burst is running. Every call
+# must still complete (the survivor absorbs the retried work), and
+# both the router and the surviving backend must then drain cleanly
+# on SIGTERM. Run by `make router-smoke` (part of `make verify`).
+set -euo pipefail
+
+BIN=${BIN:-target/release/tmfu}
+TMP=${TMPDIR:-/tmp}
+SA=$(mktemp -u "$TMP/tmfu-router-a-XXXXXX.sock")
+SB=$(mktemp -u "$TMP/tmfu-router-b-XXXXXX.sock")
+SR=$(mktemp -u "$TMP/tmfu-router-front-XXXXXX.sock")
+
+cleanup() {
+    for pid in "${APID:-}" "${BPID:-}" "${RPID:-}"; do
+        [ -n "$pid" ] && kill -9 "$pid" 2>/dev/null || true
+    done
+    rm -f "$SA" "$SB" "$SR"
+}
+trap cleanup EXIT
+
+wait_sock() {
+    for _ in $(seq 1 200); do
+        [ -S "$1" ] && return 0
+        sleep 0.05
+    done
+    echo "router smoke: socket $1 never appeared"
+    exit 1
+}
+
+# Two replicas, then the router fronting both. Short probe period so
+# the death is noticed quickly; the per-call retry budget rides over
+# the window where the routing table still lists the dead replica.
+"$BIN" listen --socket "$SA" --tcp= --backend turbo &
+APID=$!
+"$BIN" listen --socket "$SB" --tcp= --backend turbo &
+BPID=$!
+wait_sock "$SA"
+wait_sock "$SB"
+"$BIN" router --backends "unix:$SA,unix:$SB" --socket "$SR" --tcp= \
+    --probe-ms 100 --retries 6 --timeout-ms 30000 &
+RPID=$!
+wait_sock "$SR"
+
+# The chaos: SIGKILL replica A shortly after the burst starts. Whether
+# the signal lands mid-burst or just after, every call must settle —
+# gradient(3,5,2,7,1) = 36, 400 times over.
+(
+    sleep 0.2
+    kill -9 "$APID"
+) &
+KPID=$!
+OUT=$("$BIN" call gradient --addr "unix:$SR" --inputs 3,5,2,7,1 \
+    --count 400 --retries 6 --timeout-ms 30000 2>&1)
+wait "$KPID"
+APID=""
+echo "$OUT"
+echo "$OUT" | grep -qx "36" \
+    || { echo "router smoke: expected result 36"; exit 1; }
+echo "$OUT" | grep -q "400 calls completed" \
+    || { echo "router smoke: burst did not fully complete"; exit 1; }
+
+# Graceful drain: SIGTERM finishes in-flight work, then exit 0 — for
+# the router first, then the surviving replica.
+kill -TERM "$RPID"
+wait "$RPID" || { echo "router smoke: router did not drain cleanly"; exit 1; }
+RPID=""
+kill -TERM "$BPID"
+wait "$BPID" || { echo "router smoke: backend did not drain cleanly"; exit 1; }
+BPID=""
+echo "router smoke: OK (400-call burst over a kill -9'd replica + SIGTERM drains)"

@@ -27,6 +27,12 @@ OP_REPLY = 0x07
 OP_ERROR = 0x08
 OP_GET_METRICS = 0x09
 OP_METRICS = 0x0A
+OP_HEALTH = 0x0B
+OP_HEALTH_OK = 0x0C
+OP_DRAIN = 0x0D
+
+HEALTH_SERVING = 0
+HEALTH_DRAINING = 1
 
 EC = {
     "unknown_kernel": 1,
@@ -37,6 +43,7 @@ EC = {
     "deadline_exceeded": 6,
     "disconnected": 7,
     "backend": 8,
+    "unavailable": 9,
     "version_mismatch": 100,
     "malformed": 101,
 }
@@ -104,7 +111,13 @@ def enc_reply(rid, arity, rows):
 
 def enc_error(rid, code, *fields):
     body = head(OP_ERROR, rid) + u16(EC[code])
-    if code in ("unknown_kernel", "empty_batch", "deadline_exceeded", "disconnected"):
+    if code in (
+        "unknown_kernel",
+        "empty_batch",
+        "deadline_exceeded",
+        "disconnected",
+        "unavailable",
+    ):
         (kernel,) = fields
         body += string(kernel)
     elif code == "shape_mismatch":
@@ -135,6 +148,18 @@ def enc_metrics(rid, json_text):
     return head(OP_METRICS, rid) + string(json_text)
 
 
+def enc_health(rid):
+    return head(OP_HEALTH, rid)
+
+
+def enc_health_ok(rid, status, inflight):
+    return head(OP_HEALTH_OK, rid) + bytes([status]) + u32(inflight)
+
+
+def enc_drain(rid):
+    return head(OP_DRAIN, rid)
+
+
 # The golden table: (label, payload bytes). Must stay in sync with
 # wire::tests::golden_bytes_match_the_spec — same frames, same order.
 GOLDEN = [
@@ -150,6 +175,10 @@ GOLDEN = [
     ("error_version_mismatch", enc_error(0, "version_mismatch", 1, 1)),
     ("get_metrics", enc_get_metrics(9)),
     ("metrics", enc_metrics(9, '{"completed":1}')),
+    ("health", enc_health(14)),
+    ("health_ok", enc_health_ok(14, HEALTH_SERVING, 3)),
+    ("drain", enc_drain(15)),
+    ("error_unavailable", enc_error(16, "unavailable", "fir")),
 ]
 
 # Hex copies of the vectors embedded in the Rust test. Regenerate with
@@ -167,6 +196,10 @@ EXPECTED_HEX = {
     "error_version_mismatch": "080000000000000000640001000100",
     "get_metrics": "090900000000000000",
     "metrics": "0a09000000000000000f0000007b22636f6d706c65746564223a317d",
+    "health": "0b0e00000000000000",
+    "health_ok": "0c0e000000000000000003000000",
+    "drain": "0d0f00000000000000",
+    "error_unavailable": "081000000000000000090003000000666972",
 }
 
 
@@ -182,6 +215,7 @@ def decode_smoke(payload):
     assert opcode in (
         OP_HELLO, OP_HELLO_OK, OP_RESOLVE, OP_KERNEL_INFO, OP_CALL,
         OP_CALL_BATCH, OP_REPLY, OP_ERROR, OP_GET_METRICS, OP_METRICS,
+        OP_HEALTH, OP_HEALTH_OK, OP_DRAIN,
     ), f"unknown opcode {opcode:#x}"
     (rid,) = struct.unpack_from("<Q", payload, 1)
     return opcode, rid

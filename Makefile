@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify fmt clippy doc wire-smoke router-smoke bench bench-smoke bench-all bench-mirror artifacts dfg check-dfg clean
+.PHONY: build test verify fmt clippy doc lint kernel-verify wire-smoke router-smoke bench bench-smoke bench-all bench-mirror artifacts dfg check-dfg clean
 
 build:
 	$(CARGO) build --release
@@ -33,11 +33,24 @@ wire-smoke: build
 router-smoke: build
 	./tools/router_smoke.sh
 
-# The full gate: formatting, lints, release build, test suite, doc
-# build, wire loopback smoke, router failover smoke, serving-perf
-# smoke (allocation-free submit path AND worker loop + reactor thread
-# ceiling + wire/router overhead regression).
-verify: fmt clippy build test doc wire-smoke router-smoke bench-smoke
+# Textual lint gates for the concurrent runtime (DESIGN.md §12):
+# un-annotated Ordering::Relaxed, poison-cascading .lock().unwrap(),
+# and bare `as` casts in the wire codec. Toolchain-free.
+lint:
+	$(PYTHON) tools/source_lint.py
+
+# Static verifier gate (DESIGN.md §12): every compiled kernel's DFG /
+# schedule / tape / context invariants, plus the committed
+# benchmarks/dfg artifacts re-validated against a fresh compile.
+kernel-verify: build
+	./target/release/tmfu verify --artifacts-dir benchmarks/dfg
+
+# The full gate: formatting, lints (rustc + textual), release build,
+# test suite, static kernel verifier, doc build, wire loopback smoke,
+# router failover smoke, serving-perf smoke (allocation-free submit
+# path AND worker loop + reactor thread ceiling + wire/router overhead
+# regression).
+verify: fmt clippy lint build test kernel-verify doc wire-smoke router-smoke bench-smoke
 
 # Perf trajectory: run the serving-path benchmarks and (re)write the
 # checked-in baseline JSON (packets/s per backend per kernel, sim

@@ -30,19 +30,20 @@
 
 use crate::exec::KernelId;
 use crate::util::stats::Samples;
+use crate::util::sync::LockExt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 /// Per-batch timing facts recorded alongside the counters.
 #[derive(Debug, Clone, Copy)]
-pub struct BatchTiming {
+pub(crate) struct BatchTiming {
     /// Whether serving this batch cost a context switch.
-    pub switched: bool,
+    pub(crate) switched: bool,
     /// Simulated switch time (µs at 300 MHz), 0 when not switched.
-    pub switch_us: f64,
+    pub(crate) switch_us: f64,
     /// Simulated execution time for the batch (µs at 300 MHz).
-    pub exec_us_sim: f64,
+    pub(crate) exec_us_sim: f64,
 }
 
 /// Heavyweight accumulator state, locked once per batch.
@@ -60,7 +61,7 @@ struct Heavy {
 
 /// The engine's shared metrics accumulator.
 #[derive(Debug)]
-pub struct Metrics {
+pub(crate) struct Metrics {
     completed: AtomicU64,
     /// Requests refused by admission control (bounded queues).
     rejected: AtomicU64,
@@ -78,7 +79,7 @@ pub struct Metrics {
 
 impl Metrics {
     /// Sized by the kernel registry (per-kernel traffic is dense).
-    pub fn new(n_kernels: usize) -> Metrics {
+    pub(crate) fn new(n_kernels: usize) -> Metrics {
         Metrics {
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -100,20 +101,27 @@ impl Metrics {
     /// Record one executed batch of `n` requests: counters (atomic),
     /// then one lock for the sample pushes and fabric accounting.
     /// `waits_us` yields the per-request enqueue→reply latency.
-    pub fn record_batch(
+    pub(crate) fn record_batch(
         &self,
         kernel: KernelId,
         n: usize,
         timing: BatchTiming,
         waits_us: impl Iterator<Item = f64>,
     ) {
+        // relaxed-ok: batches/batch_size_sum are rate statistics; no
+        // reader infers cross-thread state from them.
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_size_sum.fetch_add(n as u64, Ordering::Relaxed);
-        self.completed.fetch_add(n as u64, Ordering::Relaxed);
+        // Ledger counter: `completed` participates in the
+        // admitted == completed + failed settlement invariant that
+        // shutdown/drain probes check from other threads, so the bump
+        // publishes (Release) and probes observe (Acquire).
+        self.completed.fetch_add(n as u64, Ordering::Release);
         if timing.switched {
+            // relaxed-ok: reporting statistic only.
             self.context_switches.fetch_add(1, Ordering::Relaxed);
         }
-        let mut h = self.heavy.lock().unwrap();
+        let mut h = self.heavy.lock_unpoisoned();
         h.per_kernel[kernel.index()] += n as u64;
         if timing.switched {
             h.fabric_switch_us += timing.switch_us;
@@ -128,50 +136,59 @@ impl Metrics {
 
     /// Count `n` admission-control rejections (lock-free — this sits
     /// on the submit path).
-    pub fn record_rejected(&self, n: u64) {
-        self.rejected.fetch_add(n, Ordering::Relaxed);
+    pub(crate) fn record_rejected(&self, n: u64) {
+        // Ledger counter (see `completed`): settlement probes read it
+        // cross-thread, so publish with Release.
+        self.rejected.fetch_add(n, Ordering::Release);
     }
 
     /// Count `n` admitted requests that failed in execution. Kept
     /// separate from [`Self::record_batch`] so failed requests appear
     /// in exactly one counter (`admitted == completed + failed`) and
     /// never as a phantom zero-size batch.
-    pub fn record_failed(&self, n: u64) {
-        self.failed.fetch_add(n, Ordering::Relaxed);
+    pub(crate) fn record_failed(&self, n: u64) {
+        // Ledger counter (see `completed`): settlement probes read it
+        // cross-thread, so publish with Release.
+        self.failed.fetch_add(n, Ordering::Release);
     }
 
     /// Count `n` heap allocations observed on a worker's dispatch path
     /// (lock-free; recorded once per batch, usually with `n == 0`).
-    pub fn record_worker_allocs(&self, n: u64) {
+    pub(crate) fn record_worker_allocs(&self, n: u64) {
         if n > 0 {
+            // relaxed-ok: audit statistic, read after workers join.
             self.worker_allocs.fetch_add(n, Ordering::Relaxed);
         }
     }
 
     /// Worker dispatch-path allocations so far (lock-free probe).
-    pub fn worker_allocs(&self) -> u64 {
+    pub(crate) fn worker_allocs(&self) -> u64 {
+        // relaxed-ok: audit statistic, read after workers join.
         self.worker_allocs.load(Ordering::Relaxed)
     }
 
     /// Requests completed so far (lock-free probe).
-    pub fn completed(&self) -> u64 {
-        self.completed.load(Ordering::Relaxed)
+    pub(crate) fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Acquire)
     }
 
     /// Rejections so far (lock-free probe).
-    pub fn rejected(&self) -> u64 {
-        self.rejected.load(Ordering::Relaxed)
+    pub(crate) fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Acquire)
     }
 
     /// Copy everything out. The heavy lock is held only for the
     /// buffer copies — sorting/percentiles happen on the snapshot,
     /// on the caller's thread. `wall` is filled in by the engine.
-    pub fn raw_snapshot(&self) -> RawMetrics {
-        let h = self.heavy.lock().unwrap();
+    pub(crate) fn raw_snapshot(&self) -> RawMetrics {
+        let h = self.heavy.lock_unpoisoned();
         RawMetrics {
-            completed: self.completed.load(Ordering::Relaxed),
-            rejected: self.rejected.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
+            // Ledger trio reads pair with the Release bumps above.
+            completed: self.completed.load(Ordering::Acquire),
+            rejected: self.rejected.load(Ordering::Acquire),
+            failed: self.failed.load(Ordering::Acquire),
+            // relaxed-ok: statistics; the heavy lock above already
+            // fences this snapshot against record_batch.
             batches: self.batches.load(Ordering::Relaxed),
             batch_size_sum: self.batch_size_sum.load(Ordering::Relaxed),
             context_switches: self.context_switches.load(Ordering::Relaxed),
@@ -189,27 +206,27 @@ impl Metrics {
 /// A plain-data copy of the accumulator, detached from every lock.
 /// The service layer turns this into its typed `MetricsSnapshot`.
 #[derive(Debug, Clone)]
-pub struct RawMetrics {
-    pub completed: u64,
-    pub rejected: u64,
-    pub failed: u64,
-    pub batches: u64,
-    pub batch_size_sum: u64,
-    pub context_switches: u64,
+pub(crate) struct RawMetrics {
+    pub(crate) completed: u64,
+    pub(crate) rejected: u64,
+    pub(crate) failed: u64,
+    pub(crate) batches: u64,
+    pub(crate) batch_size_sum: u64,
+    pub(crate) context_switches: u64,
     /// Heap allocations observed on worker dispatch paths (0 in
     /// steady state; see the bench's zero-alloc audit).
-    pub worker_allocs: u64,
-    pub latency_us: Samples,
-    pub queue_wait_us: Samples,
+    pub(crate) worker_allocs: u64,
+    pub(crate) latency_us: Samples,
+    pub(crate) queue_wait_us: Samples,
     /// Completed requests per kernel, dense by [`KernelId`].
-    pub per_kernel: Vec<u64>,
-    pub fabric_busy_us: f64,
-    pub fabric_switch_us: f64,
-    pub wall: Duration,
+    pub(crate) per_kernel: Vec<u64>,
+    pub(crate) fabric_busy_us: f64,
+    pub(crate) fabric_switch_us: f64,
+    pub(crate) wall: Duration,
 }
 
 impl RawMetrics {
-    pub fn mean_batch_size(&self) -> f64 {
+    pub(crate) fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
         } else {

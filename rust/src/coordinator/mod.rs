@@ -59,13 +59,14 @@
 //!   reports *measured* fabric cycles instead of the model). Counters
 //!   are atomics; the sample buffers take one lock per batch.
 
-pub mod completion;
-pub mod metrics;
-pub mod queue;
+pub(crate) mod completion;
+pub(crate) mod metrics;
+pub(crate) mod queue;
 
 use crate::exec::{self, BackendKind, ExecError, ExecReport, FlatBatch, KernelId, KernelRegistry};
 use crate::resources::SYSTEM_CLOCK_MHZ;
 use crate::util::bench::thread_alloc_count;
+use crate::util::sync::LockExt;
 use anyhow::{Context, Result};
 use completion::{CompletionSlab, RowSpan, Ticket, WakeTarget};
 use metrics::{BatchTiming, Metrics, RawMetrics};
@@ -78,7 +79,7 @@ use std::time::Instant;
 
 /// Why a submit was refused at the door (before any queueing).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SubmitRejection {
+pub(crate) enum SubmitRejection {
     /// The engine is shut down (or draining) — no new admissions.
     ShutDown,
     /// The kernel's queue is at its depth limit.
@@ -92,7 +93,7 @@ pub enum SubmitRejection {
 ///
 /// Lock order: `queues` → slab shard → nothing (doorbells ring after
 /// the shard lock is released).
-pub struct Shared {
+pub(crate) struct Shared {
     queues: Mutex<QueueState>,
     cv: Condvar,
     /// The one completion structure every in-flight request shares.
@@ -112,14 +113,14 @@ impl Shared {
     /// the slab ticket the reply arrives under. Allocation-free in
     /// steady state: the slot, its buffers, and the queue entry all
     /// recycle.
-    pub fn submit(
+    pub(crate) fn submit(
         &self,
         id: KernelId,
         inputs: &[i32],
         n_outputs: usize,
         waker: Option<WakeTarget>,
     ) -> Result<Ticket, SubmitRejection> {
-        let mut st = self.queues.lock().unwrap();
+        let mut st = self.queues.lock_unpoisoned();
         if st.shutdown {
             return Err(SubmitRejection::ShutDown);
         }
@@ -154,7 +155,7 @@ impl Shared {
     /// in-place reply buffer) and **one** queue entry — a single
     /// [`RowSpan`] covering every row, which workers peel apart at
     /// their row budget ([`QueueSet::take_batch_into`]).
-    pub fn submit_batch(
+    pub(crate) fn submit_batch(
         &self,
         id: KernelId,
         batch: &FlatBatch,
@@ -162,7 +163,7 @@ impl Shared {
         waker: Option<WakeTarget>,
     ) -> Result<Ticket, SubmitRejection> {
         let n = batch.n_rows();
-        let mut st = self.queues.lock().unwrap();
+        let mut st = self.queues.lock_unpoisoned();
         if st.shutdown {
             return Err(SubmitRejection::ShutDown);
         }
@@ -195,39 +196,39 @@ impl Shared {
     }
 
     /// Whether the engine has stopped admitting requests.
-    pub fn is_shut_down(&self) -> bool {
-        self.queues.lock().unwrap().shutdown
+    pub(crate) fn is_shut_down(&self) -> bool {
+        self.queues.lock_unpoisoned().shutdown
     }
 }
 
 /// Engine construction parameters (filled in by the service builder).
 #[derive(Debug, Clone)]
-pub struct EngineConfig {
+pub(crate) struct EngineConfig {
     /// Execution substrate for every worker.
-    pub backend: BackendKind,
+    pub(crate) backend: BackendKind,
     /// AOT artifacts directory (PJRT backend only).
-    pub artifacts_dir: PathBuf,
+    pub(crate) artifacts_dir: PathBuf,
     /// Fabric workers (overlay pipeline replicas at the serving level).
-    pub workers: usize,
+    pub(crate) workers: usize,
     /// Maximum batch a worker takes per dispatch.
-    pub max_batch: usize,
+    pub(crate) max_batch: usize,
     /// Per-kernel queue bound (admission control).
-    pub queue_depth: usize,
+    pub(crate) queue_depth: usize,
     /// Pipeline replicas inside each sim-backend overlay (Fig. 4).
-    pub sim_replicas: usize,
+    pub(crate) sim_replicas: usize,
     /// FIFO capacity of each simulated pipeline.
-    pub sim_fifo_capacity: usize,
+    pub(crate) sim_fifo_capacity: usize,
     /// Completion-slot buffer watermark (in `i32` words): recycled
     /// slots shrink burst-sized buffers back toward this, so one giant
     /// batch does not pin its peak allocation on the pool forever.
-    pub slab_trim_words: usize,
+    pub(crate) slab_trim_words: usize,
     /// Pre-compiled kernels, shared by every worker.
-    pub registry: Arc<KernelRegistry>,
+    pub(crate) registry: Arc<KernelRegistry>,
 }
 
 /// The serving engine: worker threads + shared queues + the completion
 /// slab behind [`crate::service::OverlayService`].
-pub struct Engine {
+pub(crate) struct Engine {
     shared: Arc<Shared>,
     /// Join handles live behind a mutex so [`Engine::shutdown`] can
     /// take `&self` — which is what lets the service layer shut down
@@ -243,7 +244,7 @@ pub struct Engine {
 
 impl Engine {
     /// Start workers over an already-compiled registry.
-    pub fn start(cfg: EngineConfig) -> Result<Engine> {
+    pub(crate) fn start(cfg: EngineConfig) -> Result<Engine> {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
         anyhow::ensure!(cfg.max_batch >= 1, "need a positive max batch");
         anyhow::ensure!(cfg.queue_depth >= 1, "need a positive queue depth");
@@ -304,27 +305,27 @@ impl Engine {
     }
 
     /// The submit-port state (what `KernelHandle`s hold).
-    pub fn shared(&self) -> &Arc<Shared> {
+    pub(crate) fn shared(&self) -> &Arc<Shared> {
         &self.shared
     }
 
     /// The shared compiled-kernel registry.
-    pub fn registry(&self) -> &Arc<KernelRegistry> {
+    pub(crate) fn registry(&self) -> &Arc<KernelRegistry> {
         &self.registry
     }
 
     /// The execution substrate this engine serves through.
-    pub fn backend(&self) -> BackendKind {
+    pub(crate) fn backend(&self) -> BackendKind {
         self.backend
     }
 
     /// Fabric workers serving this engine.
-    pub fn workers(&self) -> usize {
+    pub(crate) fn workers(&self) -> usize {
         self.n_workers
     }
 
     /// Per-kernel admission bound.
-    pub fn queue_depth(&self) -> usize {
+    pub(crate) fn queue_depth(&self) -> usize {
         self.queue_depth
     }
 
@@ -332,14 +333,14 @@ impl Engine {
     /// lock; percentile sorting happens on the returned value, outside
     /// every engine lock). The service layer builds its typed snapshot
     /// from this.
-    pub fn raw_metrics(&self) -> RawMetrics {
+    pub(crate) fn raw_metrics(&self) -> RawMetrics {
         let mut raw = self.shared.metrics.raw_snapshot();
         raw.wall = self.started.elapsed();
         raw
     }
 
     /// Requests completed so far (lock-free).
-    pub fn completed(&self) -> u64 {
+    pub(crate) fn completed(&self) -> u64 {
         self.shared.metrics.completed()
     }
 
@@ -347,13 +348,13 @@ impl Engine {
     /// requests are completed (replied to) before workers exit.
     /// Takes `&self` and is idempotent: the first caller joins the
     /// workers; later calls find nothing left to join and return.
-    pub fn shutdown(&self) -> Result<()> {
+    pub(crate) fn shutdown(&self) -> Result<()> {
         {
-            let mut st = self.shared.queues.lock().unwrap();
+            let mut st = self.shared.queues.lock_unpoisoned();
             st.shutdown = true;
         }
         self.shared.cv.notify_all();
-        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        let workers = std::mem::take(&mut *self.workers.lock_unpoisoned());
         let mut result = Ok(());
         for w in workers {
             let joined = w
@@ -421,7 +422,7 @@ fn worker_loop(
     let mut report = ExecReport::default();
     loop {
         let taken = {
-            let mut st = shared.queues.lock().unwrap();
+            let mut st = shared.queues.lock_unpoisoned();
             loop {
                 if let Some(k) =
                     st.qs

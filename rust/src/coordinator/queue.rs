@@ -52,7 +52,7 @@ use std::time::Instant;
 /// A queue token that carries one or more contiguous rows and can be
 /// split at a row boundary. Splitting is what lets a worker take a
 /// partial batch while the remainder stays queued for its peers.
-pub trait SpanToken {
+pub(crate) trait SpanToken {
     /// Rows this token carries (always ≥ 1 for queued tokens).
     fn rows(&self) -> usize;
 
@@ -77,27 +77,27 @@ impl SpanToken for u32 {
 /// locates its inputs and completion slot (a reply channel would be an
 /// allocation; a slab span is three words).
 #[derive(Debug, Clone, Copy)]
-pub struct Queued<T> {
-    pub enqueued: Instant,
-    pub token: T,
+pub(crate) struct Queued<T> {
+    pub(crate) enqueued: Instant,
+    pub(crate) token: T,
 }
 
 /// Per-kernel FIFO queues, dense over the kernel registry, each
 /// bounded at `depth` **rows** (entries are spans of ≥ 1 rows).
 #[derive(Debug)]
-pub struct QueueSet<T> {
+pub(crate) struct QueueSet<T> {
     queues: Vec<VecDeque<Queued<T>>>,
     /// Queued rows per kernel (an entry may span many rows).
     rows: Vec<usize>,
     depth: usize,
     /// Total rows queued across every kernel.
-    pub total_queued: usize,
+    pub(crate) total_queued: usize,
 }
 
 impl<T: SpanToken> QueueSet<T> {
     /// One queue per registry kernel, each admitting at most `depth`
     /// waiting rows.
-    pub fn new(n_kernels: usize, depth: usize) -> Self {
+    pub(crate) fn new(n_kernels: usize, depth: usize) -> Self {
         assert!(depth >= 1, "queue depth must be positive");
         Self {
             queues: (0..n_kernels).map(|_| VecDeque::new()).collect(),
@@ -107,12 +107,12 @@ impl<T: SpanToken> QueueSet<T> {
         }
     }
 
-    pub fn n_kernels(&self) -> usize {
+    pub(crate) fn n_kernels(&self) -> usize {
         self.queues.len()
     }
 
     /// Per-kernel admission bound, in rows.
-    pub fn depth(&self) -> usize {
+    pub(crate) fn depth(&self) -> usize {
         self.depth
     }
 
@@ -120,7 +120,7 @@ impl<T: SpanToken> QueueSet<T> {
     /// rows would push the kernel's queue past the depth limit (the
     /// admission-control path). `kernel` must come from the registry
     /// this set was sized for (ingress interns and validates names).
-    pub fn try_push(&mut self, kernel: KernelId, q: Queued<T>) -> Result<(), Queued<T>> {
+    pub(crate) fn try_push(&mut self, kernel: KernelId, q: Queued<T>) -> Result<(), Queued<T>> {
         let n = q.token.rows();
         debug_assert!(n > 0, "zero-row spans are completed at reserve time");
         if self.rows[kernel.index()] + n > self.depth {
@@ -132,12 +132,12 @@ impl<T: SpanToken> QueueSet<T> {
         Ok(())
     }
 
-    pub fn is_empty(&self) -> bool {
+    pub(crate) fn is_empty(&self) -> bool {
         self.total_queued == 0
     }
 
     /// Rows queued for `kernel` (what admission compares to `depth`).
-    pub fn queued_for(&self, kernel: KernelId) -> usize {
+    pub(crate) fn queued_for(&self, kernel: KernelId) -> usize {
         self.rows[kernel.index()]
     }
 
@@ -154,7 +154,7 @@ impl<T: SpanToken> QueueSet<T> {
     /// one oversized batch fans out across every idle worker.
     ///
     /// Returns the chosen kernel, or `None` when nothing is queued.
-    pub fn take_batch_into(
+    pub(crate) fn take_batch_into(
         &mut self,
         current_context: Option<KernelId>,
         max_batch: usize,
@@ -396,6 +396,9 @@ mod tests {
     }
 
     #[test]
+    // Backdates entries with wall-clock Instant arithmetic; the
+    // scheduling policy itself is covered by the clock-free tests.
+    #[cfg_attr(miri, ignore)]
     fn age_bonus_prevents_starvation() {
         let mut qs = QueueSet::new(2, 16);
         let old = Instant::now() - std::time::Duration::from_millis(500);

@@ -266,6 +266,46 @@ impl Tape {
         self.epoch
     }
 
+    /// The flat op stream in issue order (verifier / mutation-harness
+    /// introspection).
+    pub fn ops(&self) -> &[TapeOp] {
+        &self.ops
+    }
+
+    /// Constant preloads as `(slot, value)` pairs.
+    pub fn consts(&self) -> &[(u32, i32)] {
+        &self.consts
+    }
+
+    /// Output slots in declaration order.
+    pub fn outputs(&self) -> &[u32] {
+        &self.outputs
+    }
+
+    /// Assemble a tape directly from its parts, bypassing
+    /// [`Tape::compile`]. The parts are **not** validated — this exists
+    /// for `verify::mutate`, whose whole point is constructing broken
+    /// tapes the static verifier must reject; executing an invalid
+    /// tape panics on its safe slice indexing rather than corrupting
+    /// memory. Gets a fresh epoch so a stale arena never masks the
+    /// mutation.
+    pub fn from_raw_parts(
+        ops: Vec<TapeOp>,
+        consts: Vec<(u32, i32)>,
+        outputs: Vec<u32>,
+        n_inputs: usize,
+        n_slots: usize,
+    ) -> Tape {
+        Tape {
+            ops,
+            consts,
+            outputs,
+            n_inputs,
+            n_slots,
+            epoch: TAPE_EPOCH.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
     /// Bytes of scratch arena one executor lane block needs.
     pub fn scratch_bytes(&self) -> usize {
         self.n_slots * LANES * std::mem::size_of::<i32>()

@@ -1,3 +1,16 @@
+// Static gates (DESIGN.md §12). `unsafe_op_in_unsafe_fn` is a hard
+// error: every unsafe operation must sit in an explicit `unsafe {}`
+// block with its own SAFETY justification, even inside `unsafe fn`.
+// `unreachable_pub` stays at warn here (clippy runs with
+// `-D warnings` in `make verify`, which escalates it in the gate)
+// so an overlooked site cannot break a plain `cargo build`.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(unreachable_pub)]
+// The curated clippy::pedantic subset is scoped where it earns its
+// keep: `wire/mod.rs` carries `#![warn(clippy::cast_possible_truncation)]`
+// (every `as` in the frame codec must be a checked `try_from`/width
+// helper or carry a `cast-ok` annotation), and `tools/source_lint.py`
+// enforces the annotation discipline textually in `make verify`.
 //! # tmfu-overlay
 //!
 //! Full-system reproduction of *"An Area-Efficient FPGA Overlay using DSP
@@ -48,6 +61,14 @@
 //!   idempotent calls with capped backoff on replica failure, and
 //!   drains gracefully, so a `kill -9`ed backend degrades to the
 //!   survivors instead of failing the burst;
+//! * the **static verifier** — per-kernel IR checking over the whole
+//!   compiled pipeline ([`verify`], DESIGN.md §12): DFG
+//!   well-formedness, schedule legality, tape slot safety (proving
+//!   the SIMD interpreter's bounds assumptions) and ISA-context
+//!   consistency, gating `OverlayService::builder()` (typed
+//!   `InvalidKernel` rejection) and the committed artifacts
+//!   (`tmfu verify`), with a mutation harness keeping the pass
+//!   honest;
 //! * **reporting** — regeneration of every table/figure in the paper
 //!   ([`report`], `rust/benches/`).
 
@@ -68,6 +89,7 @@ pub mod sched;
 pub mod service;
 pub mod sim;
 pub mod util;
+pub mod verify;
 pub mod wire;
 
 /// Crate-wide result alias.

@@ -70,6 +70,8 @@ fn commands() -> Vec<Command> {
         Command::new("fig6", "reproduce Fig. 6 (area comparison)"),
         Command::new("ctx-switch", "reproduce the context-switch comparison"),
         Command::new("resources", "reproduce the §III.A resource results"),
+        Command::new("verify", "statically verify compiled kernels + committed artifacts")
+            .opt("artifacts-dir", "DFG+schedule JSON directory", Some("benchmarks/dfg")),
         Command::new("serve", "run the overlay service (any execution backend)")
             .opt(
                 "backend",
@@ -241,12 +243,41 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "fig6" => print!("{}", report::fig6::render()?),
         "ctx-switch" => print!("{}", report::ctx_switch::render()?),
         "resources" => print!("{}", report::resources_report::render()),
+        "verify" => verify_cmd(&m)?,
         "serve" => serve(&m)?,
         "listen" => listen(&m)?,
         "call" => call(&m)?,
         "router" => router(&m)?,
         _ => unreachable!(),
     }
+    Ok(())
+}
+
+/// `tmfu verify`: the static verifier gate (DESIGN.md §12). Checks
+/// every compiled bench-suite kernel (DFG well-formedness, schedule
+/// legality, tape slot safety, ISA-context consistency), then
+/// re-validates the committed DFG+schedule artifacts against a fresh
+/// compile. Exits nonzero on the first violation — `make verify` and
+/// CI run this as a permanent gate.
+fn verify_cmd(m: &Matches) -> anyhow::Result<()> {
+    let reg = tmfu_overlay::exec::KernelRegistry::compile_bench_suite()?;
+    tmfu_overlay::verify::verify_registry(&reg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut n = 0;
+    for k in reg.iter() {
+        println!("ok  kernel    {}", k.name);
+        n += 1;
+    }
+    let dir = m.get("artifacts-dir").unwrap();
+    let path = std::path::Path::new(dir);
+    if !path.is_dir() {
+        anyhow::bail!("verify: artifacts directory '{dir}' not found (run 'tmfu export-dfg')");
+    }
+    let names = tmfu_overlay::verify::verify_artifacts_dir(path)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    for name in &names {
+        println!("ok  artifact  {dir}/{name}.json");
+    }
+    println!("verify: {n} kernels, {} artifacts — all checks passed", names.len());
     Ok(())
 }
 

@@ -43,6 +43,7 @@ use crate::wire::server::{
     bind_listener, frame_name, malformed, sigterm_drain_requested, unknown_kernel, ServerCtl,
 };
 use crate::wire::{
+use crate::util::sync::LockExt;
     read_frame_patient, write_frame, Frame, ListenAddr, PatientRead, WireError, WireStream,
     HEALTH_DRAINING, HEALTH_SERVING, WIRE_VERSION_MAX, WIRE_VERSION_MIN,
 };
@@ -149,7 +150,7 @@ struct RouterShared {
 
 impl RouterShared {
     fn intern(&self, name: &str) -> u32 {
-        let mut names = self.names.lock().unwrap();
+        let mut names = self.names.lock_unpoisoned();
         if let Some(i) = names.iter().position(|n| n == name) {
             return i as u32;
         }
@@ -158,7 +159,7 @@ impl RouterShared {
     }
 
     fn name_of(&self, rid: u32) -> Option<String> {
-        self.names.lock().unwrap().get(rid as usize).cloned()
+        self.names.lock_unpoisoned().get(rid as usize).cloned()
     }
 }
 
@@ -256,7 +257,7 @@ impl Router {
                             Ok(c) => c,
                             Err(_) => continue,
                         };
-                        streams.lock().unwrap().insert(conn_id, control);
+                        streams.lock_unpoisoned().insert(conn_id, control);
                         let conn_shared = Arc::clone(&shared);
                         let conn_streams = Arc::clone(&streams);
                         let conn_ctl = Arc::clone(&ctl);
@@ -264,18 +265,18 @@ impl Router {
                             .name(format!("router-conn-{conn_id}"))
                             .spawn(move || {
                                 forward_connection(conn_shared, stream, conn_ctl);
-                                conn_streams.lock().unwrap().remove(&conn_id);
+                                conn_streams.lock_unpoisoned().remove(&conn_id);
                             });
                         match spawned {
                             Ok(handle) => {
-                                let mut cs = conns.lock().unwrap();
+                                let mut cs = conns.lock_unpoisoned();
                                 cs.retain(|h| !h.is_finished());
                                 cs.push(handle);
                             }
                             // Thread exhaustion: shed the connection,
                             // keep the acceptor.
                             Err(_) => {
-                                if let Some(s) = streams.lock().unwrap().remove(&conn_id) {
+                                if let Some(s) = streams.lock_unpoisoned().remove(&conn_id) {
                                     s.shutdown_both();
                                 }
                                 thread::sleep(Duration::from_millis(10));
@@ -328,7 +329,7 @@ impl Router {
         if self.ctl.is_draining() {
             // No new requests; blocked upstream readers wake with EOF
             // while write halves keep flushing in-flight replies.
-            for s in self.streams.lock().unwrap().values() {
+            for s in self.streams.lock_unpoisoned().values() {
                 s.shutdown_read();
             }
         }
@@ -346,15 +347,15 @@ impl Router {
 
     fn finish(&mut self, force_close: bool) {
         if force_close {
-            for s in self.streams.lock().unwrap().values() {
+            for s in self.streams.lock_unpoisoned().values() {
                 s.shutdown_both();
             }
         }
-        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        let conns = std::mem::take(&mut *self.conns.lock_unpoisoned());
         for c in conns {
             let _ = c.join();
         }
-        self.streams.lock().unwrap().clear();
+        self.streams.lock_unpoisoned().clear();
         // Downstream links go down only after the forwarders settle:
         // a drain wants in-flight calls to *finish*, not fail.
         for r in self.shared.table.replicas() {
@@ -445,7 +446,7 @@ impl FwdShared {
     }
 
     fn push_frame(&self, frame: Frame) {
-        let mut st = self.m.lock().unwrap();
+        let mut st = self.m.lock_unpoisoned();
         st.outbox.push_back(frame);
         drop(st);
         self.cv.notify_all();
@@ -454,7 +455,7 @@ impl FwdShared {
     /// Hand an admitted entry to the reactor. `false` if the
     /// connection is already dead — the caller settles the ledger.
     fn register(&self, id: u64, entry: ForwardEntry) -> bool {
-        let mut st = self.m.lock().unwrap();
+        let mut st = self.m.lock_unpoisoned();
         if st.dead {
             return false;
         }
@@ -466,7 +467,7 @@ impl FwdShared {
     }
 
     fn finish_reader(&self) {
-        let mut st = self.m.lock().unwrap();
+        let mut st = self.m.lock_unpoisoned();
         st.reader_done = true;
         drop(st);
         self.cv.notify_all();
@@ -477,7 +478,7 @@ impl Wake for FwdShared {
     /// Downstream doorbell: the reply for upstream request `tag`
     /// became ready on whichever replica it was dispatched to.
     fn ring(&self, tag: u64) {
-        let mut st = self.m.lock().unwrap();
+        let mut st = self.m.lock_unpoisoned();
         st.ready.push(tag);
         drop(st);
         self.cv.notify_all();
@@ -630,7 +631,7 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
     let mut timers: Vec<(Instant, u64)> = Vec::new();
     loop {
         let (mut frames, new_inflight, rung) = {
-            let mut st = fwd.m.lock().unwrap();
+            let mut st = fwd.m.lock_unpoisoned();
             loop {
                 if st.dead {
                     let orphaned = std::mem::take(&mut st.submitted);
@@ -725,7 +726,7 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
             if let Ok(inner) = w.get_ref().try_clone() {
                 inner.shutdown_both();
             }
-            let mut st = fwd.m.lock().unwrap();
+            let mut st = fwd.m.lock_unpoisoned();
             st.dead = true;
             let orphaned = std::mem::take(&mut st.submitted);
             drop(st);

@@ -22,6 +22,7 @@
 
 use crate::client::{Backoff, ClientBuilder, OverlayClient, RemoteKernel};
 use crate::service::ServiceError;
+use crate::util::sync::LockExt;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -84,12 +85,12 @@ impl Replica {
     }
 
     pub fn is_up(&self) -> bool {
-        self.link.lock().unwrap().up.is_some()
+        self.link.lock_unpoisoned().up.is_some()
     }
 
     /// Current link epoch (for metrics; counts successful connects).
     pub fn epoch(&self) -> u64 {
-        self.link.lock().unwrap().epoch
+        self.link.lock_unpoisoned().epoch
     }
 
     /// Resolve a kernel session on this replica, caching it for the
@@ -100,7 +101,7 @@ impl Replica {
     /// the link down.
     pub fn kernel(&self, name: &str) -> Result<(RemoteKernel, u64), ServiceError> {
         let (client, epoch) = {
-            let st = self.link.lock().unwrap();
+            let st = self.link.lock_unpoisoned();
             match &st.up {
                 Some(up) => {
                     if let Some(k) = up.kernels.get(name) {
@@ -117,7 +118,7 @@ impl Replica {
         };
         match client.kernel(name) {
             Ok(k) => {
-                let mut st = self.link.lock().unwrap();
+                let mut st = self.link.lock_unpoisoned();
                 if st.epoch == epoch {
                     if let Some(up) = st.up.as_mut() {
                         up.kernels.insert(name.to_string(), k.clone());
@@ -139,7 +140,7 @@ impl Replica {
     /// in a transport-shaped way. Ignored if the link was already
     /// rebuilt (epoch mismatch) or is already down.
     pub fn mark_down(&self, epoch: u64) {
-        let mut st = self.link.lock().unwrap();
+        let mut st = self.link.lock_unpoisoned();
         if st.epoch != epoch || st.up.is_none() {
             return;
         }
@@ -155,7 +156,7 @@ impl Replica {
     /// Stop the monitor loop (idempotent); the link is torn down.
     pub fn stop(&self) {
         self.stopping.store(true, Ordering::SeqCst);
-        self.link.lock().unwrap().up = None;
+        self.link.lock_unpoisoned().up = None;
         self.kick.notify_all();
     }
 
@@ -166,12 +167,12 @@ impl Replica {
     /// Interruptible sleep: returns early on [`Self::stop`] or
     /// [`Self::mark_down`].
     fn doze(&self, d: Duration) {
-        let st = self.link.lock().unwrap();
+        let st = self.link.lock_unpoisoned();
         let _ = self.kick.wait_timeout(st, d).unwrap();
     }
 
     fn install(&self, client: OverlayClient) {
-        let mut st = self.link.lock().unwrap();
+        let mut st = self.link.lock_unpoisoned();
         st.epoch += 1;
         st.up = Some(LinkUp {
             client: Arc::new(client),
@@ -183,7 +184,7 @@ impl Replica {
     /// Returns the duration to doze before the next step.
     fn step(&self, backoff: &mut Backoff) -> Duration {
         let probe = {
-            let st = self.link.lock().unwrap();
+            let st = self.link.lock_unpoisoned();
             st.up
                 .as_ref()
                 .map(|up| (Arc::clone(&up.client), st.epoch))

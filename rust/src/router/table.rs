@@ -51,6 +51,8 @@ impl RoutingTable {
     /// the data path's `mark_down` reports).
     pub fn pick(&self, kernel: &str) -> Result<(RemoteKernel, usize, u64), ServiceError> {
         let n = self.replicas.len();
+        // relaxed-ok: rotation cursor; a stale start only shifts the
+        // round-robin origin, never correctness.
         let start = self.cursor.fetch_add(1, Ordering::Relaxed);
         let mut saw_unknown = false;
         for i in 0..n {

@@ -48,6 +48,12 @@ pub enum ServiceError {
     /// The execution substrate failed (PJRT load/execute, cycle
     /// budget...).
     Backend { backend: String, message: String },
+    /// Static verification rejected the kernel at build time
+    /// (`verify`, DESIGN.md §12): the compiled artifact — DFG,
+    /// schedule, tape or context image — violates an invariant and
+    /// was never loaded. Not retryable: the artifact is broken, not
+    /// the service.
+    InvalidKernel { kernel: String, detail: String },
 }
 
 impl fmt::Display for ServiceError {
@@ -85,6 +91,9 @@ impl fmt::Display for ServiceError {
                 write!(f, "kernel '{kernel}': no healthy replica available")
             }
             ServiceError::Backend { backend, message } => write!(f, "{backend} backend: {message}"),
+            ServiceError::InvalidKernel { kernel, detail } => {
+                write!(f, "kernel '{kernel}' failed verification: {detail}")
+            }
         }
     }
 }
@@ -140,6 +149,12 @@ mod tests {
         };
         assert!(e.to_string().contains("no healthy replica"));
         assert!(e.to_string().contains("poly6"));
+        let e = ServiceError::InvalidKernel {
+            kernel: "poly6".into(),
+            detail: "verify(poly6): tape: op 3: dst slot out of range".into(),
+        };
+        assert!(e.to_string().contains("failed verification"));
+        assert!(e.to_string().contains("dst slot out of range"));
     }
 
     #[test]

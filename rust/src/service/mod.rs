@@ -90,6 +90,7 @@ pub struct ServiceBuilder {
     sim_fifo_capacity: usize,
     slab_trim_words: usize,
     kernels: Option<Vec<Dfg>>,
+    kernel_artifacts: Option<PathBuf>,
 }
 
 impl Default for ServiceBuilder {
@@ -104,6 +105,7 @@ impl Default for ServiceBuilder {
             sim_fifo_capacity: 4096,
             slab_trim_words: crate::coordinator::completion::DEFAULT_TRIM_WORDS,
             kernels: None,
+            kernel_artifacts: None,
         }
     }
 }
@@ -171,17 +173,60 @@ impl ServiceBuilder {
         self
     }
 
-    /// Compile the registry, spawn the workers, and wait until every
-    /// backend is ready to serve.
+    /// Serve the kernels committed as DFG+schedule interchange JSON
+    /// under `dir` (the `tmfu export-dfg` format). Every artifact is
+    /// statically verified at `build()` — a corrupted file is a typed
+    /// [`ServiceError::InvalidKernel`], never a loaded kernel.
+    /// Overrides [`ServiceBuilder::kernels`].
+    pub fn kernels_from_artifacts(mut self, dir: impl Into<PathBuf>) -> ServiceBuilder {
+        self.kernel_artifacts = Some(dir.into());
+        self
+    }
+
+    /// Load and statically verify the artifact directory, returning
+    /// the parsed graphs.
+    fn load_artifact_kernels(dir: &std::path::Path) -> Result<Vec<Dfg>, ServiceError> {
+        let invalid = |kernel: String, detail: String| ServiceError::InvalidKernel {
+            kernel,
+            detail,
+        };
+        let names = crate::verify::verify_artifacts_dir(dir)
+            .map_err(|e| invalid(e.kernel.clone(), e.to_string()))?;
+        let mut graphs = Vec::with_capacity(names.len());
+        for name in names {
+            let path = dir.join(format!("{name}.json"));
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| invalid(name.clone(), format!("read {}: {e}", path.display())))?;
+            let doc = crate::util::json::parse(&text)
+                .map_err(|e| invalid(name.clone(), format!("json parse: {e}")))?;
+            let g = crate::dfg::dfg_from_json(doc.get("dfg"))
+                .map_err(|e| invalid(name.clone(), format!("dfg section: {e}")))?;
+            graphs.push(g);
+        }
+        Ok(graphs)
+    }
+
+    /// Compile the registry, statically verify every kernel
+    /// ([`crate::verify`]), spawn the workers, and wait until every
+    /// backend is ready to serve. A kernel that fails verification is
+    /// a typed [`ServiceError::InvalidKernel`] and is never loaded.
     pub fn build(self) -> Result<OverlayService, ServiceError> {
         let backend = self.backend;
-        let registry = match self.kernels {
+        let kernels = match &self.kernel_artifacts {
+            Some(dir) => Some(ServiceBuilder::load_artifact_kernels(dir)?),
+            None => self.kernels,
+        };
+        let registry = match kernels {
             Some(graphs) => KernelRegistry::compile(graphs),
             None => KernelRegistry::compile_bench_suite(),
         }
         .map_err(|e| ServiceError::Backend {
             backend: "compile".to_string(),
             message: format!("{e}"),
+        })?;
+        crate::verify::verify_registry(&registry).map_err(|e| ServiceError::InvalidKernel {
+            kernel: e.kernel.clone(),
+            detail: e.to_string(),
         })?;
         let engine = Engine::start(EngineConfig {
             backend,

@@ -213,12 +213,15 @@ fn count_allocation() {
 unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
         count_allocation();
-        std::alloc::System.alloc(layout)
+        // SAFETY: same contract as the caller's — layout is forwarded
+        // unchanged to the system allocator.
+        unsafe { std::alloc::System.alloc(layout) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: std::alloc::Layout) -> *mut u8 {
         count_allocation();
-        std::alloc::System.alloc_zeroed(layout)
+        // SAFETY: layout forwarded unchanged.
+        unsafe { std::alloc::System.alloc_zeroed(layout) }
     }
 
     unsafe fn realloc(
@@ -228,11 +231,13 @@ unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
         new_size: usize,
     ) -> *mut u8 {
         count_allocation();
-        std::alloc::System.realloc(ptr, layout, new_size)
+        // SAFETY: ptr/layout/new_size forwarded unchanged.
+        unsafe { std::alloc::System.realloc(ptr, layout, new_size) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
-        std::alloc::System.dealloc(ptr, layout)
+        // SAFETY: ptr/layout forwarded unchanged.
+        unsafe { std::alloc::System.dealloc(ptr, layout) }
     }
 }
 

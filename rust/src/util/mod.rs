@@ -10,5 +10,6 @@ pub mod json;
 pub mod prng;
 pub mod quickcheck;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod threadpool;

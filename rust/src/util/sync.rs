@@ -1,0 +1,58 @@
+//! Poison-tolerant locking (DESIGN.md §12, `tools/source_lint.py`).
+//!
+//! `Mutex::lock().unwrap()` turns one panicked thread into a cascade:
+//! every later locker panics on the `PoisonError` even though the
+//! protected data is still structurally valid (every critical section
+//! in this crate either completes its writes or leaves state a reader
+//! can safely observe — counters, maps, wakers; none do multi-step
+//! invariant surgery mid-section). The runtime therefore standardises
+//! on [`LockExt::lock_unpoisoned`], which recovers the guard from a
+//! poisoned mutex and carries on. `tools/source_lint.py` bans the
+//! `.lock().unwrap()` / `.lock().expect(...)` spelling in `wire/`,
+//! `router/` and `coordinator/` so the recovery idiom cannot silently
+//! regress.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Extension trait: acquire a mutex, shrugging off poison.
+pub trait LockExt<T> {
+    /// Like [`Mutex::lock`], but a poisoned mutex (some thread panicked
+    /// while holding the guard) yields the guard anyway instead of
+    /// panicking the caller too.
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn plain_lock_still_works() {
+        let m = Mutex::new(3);
+        *m.lock_unpoisoned() += 4;
+        assert_eq!(*m.lock_unpoisoned(), 7);
+    }
+
+    #[test]
+    fn poisoned_mutex_is_recovered_not_propagated() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        // Poison it: panic while holding the guard on another thread.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // lock_unpoisoned still hands out the (intact) data.
+        let g = m.lock_unpoisoned();
+        assert_eq!(*g, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Structured diagnostics for the static kernel verifier.
+//!
+//! Every check in [`super`] reports failure as a [`VerifyError`]: which
+//! kernel, which analysis pass ([`Check`]), an optional op/stage
+//! provenance, and a human-readable detail. The service layer maps
+//! these onto `ServiceError::InvalidKernel` so a bad artifact is a
+//! typed, client-visible rejection rather than a loaded time bomb.
+
+use std::fmt;
+
+/// Which analysis pass produced a diagnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Check {
+    /// DFG well-formedness: acyclic, arity-consistent, no dangling
+    /// node references.
+    Dfg,
+    /// Schedule legality: stage numbering, def-before-use across
+    /// stages, register-file/instruction-memory bounds, II and
+    /// latency consistency.
+    Schedule,
+    /// Tape safety: slot bounds, write-once coverage, read-only
+    /// inputs/constants, equivalence with a fresh lowering.
+    Tape,
+    /// ISA context consistency: 40-bit context image round-trip and
+    /// op-sequence agreement with the tape.
+    Context,
+    /// Committed-artifact integrity: parse, regeneration equality,
+    /// file-level problems.
+    Artifact,
+}
+
+impl Check {
+    pub fn name(self) -> &'static str {
+        match self {
+            Check::Dfg => "dfg",
+            Check::Schedule => "schedule",
+            Check::Tape => "tape",
+            Check::Context => "context",
+            Check::Artifact => "artifact",
+        }
+    }
+}
+
+impl fmt::Display for Check {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One verifier diagnostic with kernel/op/stage provenance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyError {
+    /// Kernel (or artifact file stem) the diagnostic is about.
+    pub kernel: String,
+    /// Analysis pass that failed.
+    pub check: Check,
+    /// Op index provenance: a tape op index or DFG node id, when the
+    /// failure points at one.
+    pub op: Option<u32>,
+    /// Stage/cycle provenance (1-based stage number), when the
+    /// failure points at one.
+    pub stage: Option<u32>,
+    /// Human-readable description of the violation.
+    pub detail: String,
+}
+
+impl VerifyError {
+    pub fn new(kernel: &str, check: Check, detail: impl Into<String>) -> VerifyError {
+        VerifyError {
+            kernel: kernel.to_string(),
+            check,
+            op: None,
+            stage: None,
+            detail: detail.into(),
+        }
+    }
+
+    /// Attach an op/node index to the diagnostic.
+    pub fn at_op(mut self, op: u32) -> VerifyError {
+        self.op = Some(op);
+        self
+    }
+
+    /// Attach a 1-based stage number to the diagnostic.
+    pub fn at_stage(mut self, stage: u32) -> VerifyError {
+        self.stage = Some(stage);
+        self
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "verify({}): {}", self.kernel, self.check)?;
+        if let Some(stage) = self.stage {
+            write!(f, ": stage {stage}")?;
+        }
+        if let Some(op) = self.op {
+            write!(f, ": op {op}")?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_provenance() {
+        let e = VerifyError::new("poly6", Check::Tape, "dst slot 9 out of range")
+            .at_op(3)
+            .at_stage(2);
+        assert_eq!(
+            e.to_string(),
+            "verify(poly6): tape: stage 2: op 3: dst slot 9 out of range"
+        );
+        let bare = VerifyError::new("poly6", Check::Dfg, "cycle");
+        assert_eq!(bare.to_string(), "verify(poly6): dfg: cycle");
+    }
+
+    #[test]
+    fn check_names_are_stable() {
+        for (c, n) in [
+            (Check::Dfg, "dfg"),
+            (Check::Schedule, "schedule"),
+            (Check::Tape, "tape"),
+            (Check::Context, "context"),
+            (Check::Artifact, "artifact"),
+        ] {
+            assert_eq!(c.name(), n);
+            assert_eq!(c.to_string(), n);
+        }
+    }
+}

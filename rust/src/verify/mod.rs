@@ -1,0 +1,796 @@
+//! Static verification of compiled kernels (DESIGN.md §12).
+//!
+//! The overlay compiles each kernel DFG once — schedule, 40-bit
+//! context image, flat op tape — and then replays the artifact
+//! millions of times. A single bad artifact (a tape slot out of
+//! range, a def-after-use schedule, a context that decodes to a
+//! different op sequence) silently corrupts every subsequent packet.
+//! This module is the static counterpart to the runtime's
+//! differential oracles: it proves, per kernel, that
+//!
+//! * the **DFG** is well-formed ([`check_dfg`]): acyclic, every node
+//!   reference resolved, arity consistent, outputs declared;
+//! * the **schedule** is legal ([`check_schedule`]): 1-based
+//!   contiguous stage numbering within the linear FU array, every
+//!   value defined before use across stages, register-file and
+//!   instruction-memory bounds respected, instructions re-derivable
+//!   from the scheduled ops, and output routing pointing at exactly
+//!   the DFG's output values;
+//! * the **tape** is safe ([`check_tape_against`]): every slot index
+//!   below the arena size, constant and input slots never written,
+//!   every scratch slot covered exactly once, and the whole tape
+//!   equal field-for-field to a fresh lowering of the schedule — so
+//!   the SIMD interpreter's bounds assumptions are proved, not
+//!   assumed, and *any* tape corruption is rejected (zero false
+//!   negatives by construction);
+//! * the **context image** is consistent ([`check_context`]): valid
+//!   under the ISA depth limits, byte round-trip stable, equal to a
+//!   fresh encoding, and executing the same op sequence the tape
+//!   encodes.
+//!
+//! [`verify_kernel`] runs all four; [`verify_registry`] covers a whole
+//! compiled registry (the `OverlayService` builder gate); and
+//! [`verify_artifact_str`] / [`verify_artifacts_dir`] validate the
+//! committed `benchmarks/dfg/*.json` interchange files offline
+//! (`tmfu verify`, CI). Failures are structured [`VerifyError`]s with
+//! kernel/op/stage provenance. [`mutate`] is the adversarial half:
+//! it manufactures corrupted tapes and artifacts the integration
+//! suite feeds back through these checks.
+
+pub mod diag;
+pub mod mutate;
+
+pub use diag::{Check, VerifyError};
+
+use crate::dfg::{self, Dfg, NodeKind};
+use crate::exec::{CompiledKernel, KernelRegistry, Tape};
+use crate::isa::{ContextImage, FuInstr};
+use crate::sched::{program_to_json, Program, Timing};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Instruction-memory depth per FU (32 entries, paper §III).
+const IM_DEPTH: usize = crate::bench_suite::constants::IM_DEPTH;
+/// Register-file depth per FU (32 entries, paper §III).
+const RF_DEPTH: usize = crate::bench_suite::constants::RF_DEPTH;
+/// The context word's FU tag is 5 bits, so a linear array is at most
+/// 32 FUs long — one stage per FU.
+const MAX_FUS: usize = 32;
+
+fn err(kernel: &str, check: Check, detail: impl Into<String>) -> VerifyError {
+    VerifyError::new(kernel, check, detail)
+}
+
+// ---------------------------------------------------------------------
+// DFG well-formedness
+// ---------------------------------------------------------------------
+
+/// DFG well-formedness: delegates to [`Dfg::validate`] (whose
+/// forward-reference rule — every arg id strictly below the node id —
+/// makes the graph acyclic *and* free of dangling references at once)
+/// and re-states the result as a [`VerifyError`].
+pub fn check_dfg(name: &str, g: &Dfg) -> Result<(), VerifyError> {
+    g.validate()
+        .map_err(|e| err(name, Check::Dfg, e.to_string()))?;
+    if g.name != name {
+        return Err(err(
+            name,
+            Check::Dfg,
+            format!("dfg names itself '{}'", g.name),
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Schedule legality
+// ---------------------------------------------------------------------
+
+/// Schedule legality for `p` against its source graph `g`.
+pub fn check_schedule(name: &str, g: &Dfg, p: &Program) -> Result<(), VerifyError> {
+    let serr = |detail: String| err(name, Check::Schedule, detail);
+    if p.kernel != g.name {
+        return Err(serr(format!(
+            "program is for kernel '{}', dfg is '{}'",
+            p.kernel, g.name
+        )));
+    }
+    if p.stages.is_empty() {
+        return Err(serr("program has no stages".to_string()));
+    }
+    if p.stages.len() > MAX_FUS {
+        return Err(serr(format!(
+            "{} stages exceed the {MAX_FUS}-FU linear array",
+            p.stages.len()
+        )));
+    }
+    let n_nodes = g.len() as u32;
+    for (i, st) in p.stages.iter().enumerate() {
+        let stage_no = (i + 1) as u32;
+        let serr = |detail: String| err(name, Check::Schedule, detail).at_stage(stage_no);
+        if st.stage != stage_no {
+            return Err(serr(format!(
+                "stage numbered {} at position {}",
+                st.stage,
+                i + 1
+            )));
+        }
+        // Every node the stage touches must resolve in the DFG with
+        // the right kind.
+        for &id in st.ops.iter().chain(&st.bypasses).chain(&st.arrivals) {
+            if id >= n_nodes {
+                return Err(serr(format!("node {id} outside dfg ({n_nodes} nodes)")).at_op(id));
+            }
+        }
+        for &id in &st.ops {
+            if !g.node(id).is_op() {
+                return Err(serr(format!("scheduled node {id} is not an op")).at_op(id));
+            }
+        }
+        for &(id, value) in &st.consts {
+            if id >= n_nodes {
+                return Err(serr(format!("const node {id} outside dfg")).at_op(id));
+            }
+            match g.node(id).kind {
+                NodeKind::Const { value: v } if v == value => {}
+                NodeKind::Const { value: v } => {
+                    return Err(
+                        serr(format!("const node {id} is {v} in the dfg, {value} here")).at_op(id),
+                    )
+                }
+                _ => return Err(serr(format!("const entry {id} is not a const node")).at_op(id)),
+            }
+        }
+        // Register-file bounds, and every operand the instructions
+        // will read must own a slot.
+        for (&id, &slot) in &st.rf_slot {
+            if (slot as usize) >= RF_DEPTH {
+                return Err(
+                    serr(format!("rf slot {slot} for node {id} exceeds depth {RF_DEPTH}"))
+                        .at_op(id),
+                );
+            }
+        }
+        // Re-derive the instruction stream from the scheduled ops and
+        // bypasses; the committed instrs must match exactly — a route
+        // target pointing anywhere else is a corrupt schedule.
+        let mut want: Vec<FuInstr> = Vec::with_capacity(st.ops.len() + st.bypasses.len());
+        for &id in &st.ops {
+            let node = g.node(id);
+            let op = match node.kind {
+                NodeKind::Op { op } => op,
+                _ => unreachable!("checked above"),
+            };
+            let rs = |arg: u32| -> Result<u8, VerifyError> {
+                st.rf_slot.get(&arg).copied().ok_or_else(|| {
+                    err(
+                        name,
+                        Check::Schedule,
+                        format!("operand {arg} of op {id} has no rf slot"),
+                    )
+                    .at_stage(stage_no)
+                    .at_op(id)
+                })
+            };
+            want.push(FuInstr::Arith {
+                op,
+                rs1: rs(node.args[0])?,
+                rs2: rs(node.args[1])?,
+            });
+        }
+        for &id in &st.bypasses {
+            let rs = st.rf_slot.get(&id).copied().ok_or_else(|| {
+                err(
+                    name,
+                    Check::Schedule,
+                    format!("bypassed node {id} has no rf slot"),
+                )
+                .at_stage(stage_no)
+                .at_op(id)
+            })?;
+            want.push(FuInstr::Bypass { rs });
+        }
+        if want.len() > IM_DEPTH {
+            return Err(serr(format!(
+                "{} instructions exceed IM depth {IM_DEPTH}",
+                want.len()
+            )));
+        }
+        if st.instrs != want {
+            return Err(serr(format!(
+                "instruction stream diverges from the scheduled ops \
+                 ({} committed vs {} derived)",
+                st.instrs.len(),
+                want.len()
+            )));
+        }
+    }
+    // First-stage loads come from the outside world: only input nodes.
+    for &id in &p.stages[0].arrivals {
+        if !g.node(id).is_input() {
+            return Err(err(
+                name,
+                Check::Schedule,
+                format!("stage 1 loads node {id}, which is not a dfg input"),
+            )
+            .at_stage(1)
+            .at_op(id));
+        }
+    }
+    // Def-before-use across stages: each stage's arrivals must be an
+    // ordered, complete relabeling of the previous stage's emissions.
+    p.check_dataflow()
+        .map_err(|e| err(name, Check::Schedule, e.to_string()))?;
+    // Output routing: exactly the DFG's outputs, each exactly once,
+    // each position pointing at the emission that carries its value.
+    let last = p.stages.last().expect("non-empty checked above");
+    let emissions = last.emissions();
+    let outputs = g.outputs();
+    if p.output_order.len() != outputs.len() {
+        return Err(serr(format!(
+            "output_order has {} entries for {} dfg outputs",
+            p.output_order.len(),
+            outputs.len()
+        )));
+    }
+    let mut by_name: BTreeMap<&str, u32> = BTreeMap::new();
+    for &id in &outputs {
+        if let NodeKind::Output { ref name } = g.node(id).kind {
+            by_name.insert(name.as_str(), id);
+        }
+    }
+    let mut seen: Vec<&str> = Vec::new();
+    for (out_name, pos) in &p.output_order {
+        let &id = by_name.get(out_name.as_str()).ok_or_else(|| {
+            serr(format!("output_order names unknown output '{out_name}'"))
+        })?;
+        if seen.contains(&out_name.as_str()) {
+            return Err(serr(format!("output '{out_name}' routed twice")));
+        }
+        seen.push(out_name.as_str());
+        let &src = emissions.get(*pos).ok_or_else(|| {
+            serr(format!(
+                "output '{out_name}' routed to position {pos}, final stage emits {}",
+                emissions.len()
+            ))
+        })?;
+        let want = g.node(id).args[0];
+        if src != want {
+            return Err(serr(format!(
+                "output '{out_name}' routed to node {src}, dfg says node {want}"
+            ))
+            .at_op(id));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Tape safety
+// ---------------------------------------------------------------------
+
+/// Tape safety for an arbitrary tape claimed to implement `(g, p)`.
+///
+/// Two layers: first the internal invariants the SIMD interpreter's
+/// bounds-check elision rests on (every index in range, write-once
+/// coverage, inputs/constants read-only, strictly increasing
+/// destinations); then a field-for-field diff against a *fresh*
+/// lowering of the same schedule. The diff is what makes the pass
+/// complete: any corruption of any tape field differs from the
+/// recompilation and is rejected — the mutation harness
+/// ([`mutate`]) can never construct a misbehaving tape this function
+/// accepts.
+pub fn check_tape_against(
+    name: &str,
+    g: &Dfg,
+    p: &Program,
+    tape: &Tape,
+) -> Result<(), VerifyError> {
+    let terr = |detail: String| err(name, Check::Tape, detail);
+    let n_slots = tape.n_slots();
+    let n_inputs = tape.n_inputs();
+    if tape.ops().is_empty() {
+        return Err(terr("tape has no ops".to_string()));
+    }
+    if n_slots != n_inputs + tape.consts().len() + tape.ops().len() {
+        return Err(terr(format!(
+            "slot arithmetic broken: {n_slots} slots != {n_inputs} inputs \
+             + {} consts + {} ops",
+            tape.consts().len(),
+            tape.ops().len()
+        )));
+    }
+    // Constants: unique slots, above the input block, in range.
+    let mut written = vec![false; n_slots];
+    for &(slot, _) in tape.consts() {
+        let s = slot as usize;
+        if s >= n_slots {
+            return Err(terr(format!("const slot {s} out of range ({n_slots} slots)")));
+        }
+        if s < n_inputs {
+            return Err(terr(format!("const slot {s} inside the input block (0..{n_inputs})")));
+        }
+        if written[s] {
+            return Err(terr(format!("const slot {s} assigned twice")));
+        }
+        written[s] = true;
+    }
+    // Ops: reads below the destination (so already-produced), writes
+    // strictly increasing, never into inputs or constants, each slot
+    // exactly once.
+    let mut last_dst: Option<u32> = None;
+    for (i, op) in tape.ops().iter().enumerate() {
+        let oerr = |detail: String| terr(detail).at_op(i as u32);
+        let (a, b, dst) = (op.a as usize, op.b as usize, op.dst as usize);
+        if dst >= n_slots {
+            return Err(oerr(format!("dst slot {dst} out of range ({n_slots} slots)")));
+        }
+        if a >= n_slots || b >= n_slots {
+            return Err(oerr(format!(
+                "operand slot out of range (a={a}, b={b}, {n_slots} slots)"
+            )));
+        }
+        if op.a >= op.dst || op.b >= op.dst {
+            return Err(oerr(format!(
+                "operand not produced before use (a={a}, b={b}, dst={dst})"
+            )));
+        }
+        if dst < n_inputs {
+            return Err(oerr(format!("op writes input slot {dst} (inputs are read-only)")));
+        }
+        if written[dst] {
+            return Err(oerr(format!("slot {dst} written twice (const or earlier op)")));
+        }
+        if let Some(prev) = last_dst {
+            if op.dst <= prev {
+                return Err(oerr(format!(
+                    "dst slots not strictly increasing ({} after {prev})",
+                    op.dst
+                )));
+            }
+        }
+        last_dst = Some(op.dst);
+        written[dst] = true;
+    }
+    // Coverage: with the counts equal (checked above) and no slot
+    // written twice, every non-input slot is covered exactly once.
+    for (s, w) in written.iter().enumerate().skip(n_inputs) {
+        if !*w {
+            return Err(terr(format!("slot {s} never produced")));
+        }
+    }
+    // Outputs: one per DFG output, all readable.
+    if tape.outputs().len() != g.outputs().len() {
+        return Err(terr(format!(
+            "{} output slots for {} dfg outputs",
+            tape.outputs().len(),
+            g.outputs().len()
+        )));
+    }
+    for (i, &slot) in tape.outputs().iter().enumerate() {
+        if (slot as usize) >= n_slots {
+            return Err(terr(format!(
+                "output {i} reads slot {slot}, out of range ({n_slots} slots)"
+            ))
+            .at_op(i as u32));
+        }
+    }
+    if n_inputs != g.inputs().len() {
+        return Err(terr(format!(
+            "tape gathers {n_inputs} inputs, dfg declares {}",
+            g.inputs().len()
+        )));
+    }
+    // The completeness backstop: recompile the schedule and require
+    // field-for-field equality (the epoch is a generation number, not
+    // semantics, and is deliberately excluded).
+    let fresh = Tape::compile(g, p).map_err(|e| terr(format!("relowering failed: {e}")))?;
+    if tape.ops() != fresh.ops() {
+        return Err(terr("op stream diverges from a fresh lowering".to_string()));
+    }
+    if tape.consts() != fresh.consts() {
+        return Err(terr("constant preloads diverge from a fresh lowering".to_string()));
+    }
+    if tape.outputs() != fresh.outputs() {
+        return Err(terr("output routing diverges from a fresh lowering".to_string()));
+    }
+    if tape.n_inputs() != fresh.n_inputs() || tape.n_slots() != fresh.n_slots() {
+        return Err(terr("slot layout diverges from a fresh lowering".to_string()));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Context consistency
+// ---------------------------------------------------------------------
+
+/// ISA-context consistency: the 40-bit image must satisfy the depth
+/// limits, survive a byte round-trip, equal a fresh encoding of the
+/// schedule, and execute the same op sequence the tape encodes.
+pub fn check_context(
+    name: &str,
+    p: &Program,
+    context: &ContextImage,
+    tape: &Tape,
+) -> Result<(), VerifyError> {
+    let cerr = |detail: String| err(name, Check::Context, detail);
+    context.validate().map_err(|e| cerr(e.to_string()))?;
+    if context.kernel != p.kernel {
+        return Err(cerr(format!(
+            "context is for kernel '{}', program is '{}'",
+            context.kernel, p.kernel
+        )));
+    }
+    let fresh = p
+        .context_image()
+        .map_err(|e| cerr(format!("re-encoding failed: {e}")))?;
+    if context.fus != fresh.fus {
+        return Err(cerr("context image diverges from a fresh encoding".to_string()));
+    }
+    let bytes = context.to_bytes().map_err(|e| cerr(e.to_string()))?;
+    let back = ContextImage::from_bytes(&context.kernel, context.fus.len(), &bytes)
+        .map_err(|e| cerr(format!("byte round-trip failed: {e}")))?;
+    if back.fus != context.fus {
+        return Err(cerr("context image does not round-trip through bytes".to_string()));
+    }
+    // The arithmetic op sequence, FU by FU in daisy-chain order, is
+    // exactly the tape's op stream: two encodings of one schedule.
+    let ctx_ops: Vec<_> = context
+        .fus
+        .iter()
+        .flat_map(|fu| &fu.instrs)
+        .filter_map(|i| match i {
+            FuInstr::Arith { op, .. } => Some(*op),
+            FuInstr::Bypass { .. } => None,
+        })
+        .collect();
+    let tape_ops: Vec<_> = tape.ops().iter().map(|t| t.op).collect();
+    if ctx_ops != tape_ops {
+        return Err(cerr(format!(
+            "context executes {} arith ops, tape encodes {} — sequences diverge",
+            ctx_ops.len(),
+            tape_ops.len()
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Whole-kernel / whole-registry entry points
+// ---------------------------------------------------------------------
+
+/// Run every check on one compiled kernel, including the cached
+/// timing/arity fields the serving layer trusts.
+pub fn verify_kernel(k: &CompiledKernel) -> Result<(), VerifyError> {
+    check_dfg(&k.name, &k.dfg)?;
+    check_schedule(&k.name, &k.dfg, &k.program)?;
+    check_tape_against(&k.name, &k.dfg, &k.program, &k.tape)?;
+    check_context(&k.name, &k.program, &k.context, &k.tape)?;
+    let serr = |check: Check, detail: String| err(&k.name, check, detail);
+    if k.n_inputs != k.dfg.inputs().len() || k.n_outputs != k.dfg.outputs().len() {
+        return Err(serr(
+            Check::Dfg,
+            format!(
+                "cached arity {}→{} disagrees with the dfg ({}→{})",
+                k.n_inputs,
+                k.n_outputs,
+                k.dfg.inputs().len(),
+                k.dfg.outputs().len()
+            ),
+        ));
+    }
+    let t = Timing::of(&k.program);
+    if k.ii != t.ii || k.latency != t.latency() {
+        return Err(serr(
+            Check::Schedule,
+            format!(
+                "cached timing II={} latency={} disagrees with the schedule \
+                 (II={} latency={})",
+                k.ii,
+                k.latency,
+                t.ii,
+                t.latency()
+            ),
+        ));
+    }
+    let words = k
+        .context
+        .load_cycles()
+        .map_err(|e| serr(Check::Context, e.to_string()))?;
+    if k.context_words != words {
+        return Err(serr(
+            Check::Context,
+            format!(
+                "cached context_words {} disagrees with the image ({words})",
+                k.context_words
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Verify every kernel in a compiled registry; first failure wins.
+/// This is the `OverlayService::builder()` gate: a registry that fails
+/// here is never loaded.
+pub fn verify_registry(reg: &KernelRegistry) -> Result<(), VerifyError> {
+    for k in reg.iter() {
+        verify_kernel(k)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Committed-artifact verification (benchmarks/dfg/*.json)
+// ---------------------------------------------------------------------
+
+/// Verify one committed DFG+schedule interchange document (the
+/// `tmfu export-dfg` format). `name` is the artifact's identity —
+/// normally the file stem — and must match the embedded kernel name.
+///
+/// The document's `dfg` section is parsed and recompiled from scratch;
+/// the whole compiled kernel is then [`verify_kernel`]-checked, and
+/// the document must equal, subtree for subtree, a fresh
+/// [`program_to_json`] of that compilation. Regeneration equality is
+/// the artifact-side completeness argument: any structural corruption
+/// of the schedule section differs from the recomputation and is
+/// rejected.
+pub fn verify_artifact_str(name: &str, text: &str) -> Result<(), VerifyError> {
+    let aerr = |detail: String| err(name, Check::Artifact, detail);
+    let doc = json::parse(text).map_err(|e| aerr(format!("json parse: {e}")))?;
+    let dfg_j = doc.get("dfg");
+    if dfg_j.as_obj().is_none() {
+        return Err(aerr("missing 'dfg' section".to_string()));
+    }
+    let g = dfg::dfg_from_json(dfg_j).map_err(|e| aerr(format!("dfg section: {e}")))?;
+    if g.name != name {
+        return Err(aerr(format!("artifact '{name}' holds kernel '{}'", g.name)));
+    }
+    let k = CompiledKernel::compile(g).map_err(|e| aerr(format!("recompile failed: {e}")))?;
+    verify_kernel(&k)?;
+    let fresh = program_to_json(&k.dfg, &k.program);
+    if doc.get("dfg") != fresh.get("dfg") {
+        return Err(aerr("dfg section is not in canonical interchange form".to_string()));
+    }
+    if doc.get("schedule") != fresh.get("schedule") {
+        return Err(aerr(
+            "schedule section diverges from recompiling the dfg section".to_string(),
+        ));
+    }
+    if let Some(obj) = doc.as_obj() {
+        if obj.keys().any(|k| k != "dfg" && k != "schedule") {
+            return Err(aerr("unexpected top-level sections".to_string()));
+        }
+    } else {
+        return Err(aerr("document is not an object".to_string()));
+    }
+    Ok(())
+}
+
+/// A pre-parsed artifact mutant ([`mutate`]) checked without a disk
+/// round-trip.
+pub fn verify_artifact_json(name: &str, doc: &Json) -> Result<(), VerifyError> {
+    verify_artifact_str(name, &doc.to_string_compact())
+}
+
+/// Verify every `*.json` under `dir` (sorted, so failures are
+/// deterministic). Returns the verified kernel names.
+pub fn verify_artifacts_dir(dir: &Path) -> Result<Vec<String>, VerifyError> {
+    let derr = |detail: String| err(&dir.display().to_string(), Check::Artifact, detail);
+    let mut files: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| derr(format!("read dir: {e}")))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(derr("no .json artifacts found".to_string()));
+    }
+    let mut names = Vec::with_capacity(files.len());
+    for path in files {
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("artifact")
+            .to_string();
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| err(&stem, Check::Artifact, format!("read: {e}")))?;
+        verify_artifact_str(&stem, &text)?;
+        names.push(stem);
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::exec::TapeOp;
+
+    fn compiled(name: &str) -> CompiledKernel {
+        CompiledKernel::compile(bench_suite::load(name).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn every_bench_kernel_verifies_clean() {
+        for name in bench_suite::all_names() {
+            let k = compiled(name);
+            verify_kernel(&k).unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn registry_verifies_clean() {
+        let reg = KernelRegistry::compile_bench_suite().unwrap();
+        verify_registry(&reg).unwrap();
+    }
+
+    #[test]
+    fn dfg_check_rejects_mismatched_name() {
+        let g = bench_suite::load("poly6").unwrap();
+        let e = check_dfg("gradient", &g).unwrap_err();
+        assert_eq!(e.check, Check::Dfg);
+    }
+
+    #[test]
+    fn schedule_check_rejects_renumbered_stage() {
+        let k = compiled("gradient");
+        let mut p = k.program.clone();
+        p.stages[1].stage = 7;
+        let e = check_schedule(&k.name, &k.dfg, &p).unwrap_err();
+        assert_eq!(e.check, Check::Schedule);
+        assert_eq!(e.stage, Some(2));
+    }
+
+    #[test]
+    fn schedule_check_rejects_dropped_op() {
+        let k = compiled("poly6");
+        let mut p = k.program.clone();
+        let st = p
+            .stages
+            .iter()
+            .position(|s| !s.ops.is_empty())
+            .expect("some stage has ops");
+        p.stages[st].ops.remove(0);
+        assert!(check_schedule(&k.name, &k.dfg, &p).is_err());
+    }
+
+    #[test]
+    fn schedule_check_rejects_bad_output_route() {
+        let k = compiled("gradient");
+        let mut p = k.program.clone();
+        let last = p.stages.last().unwrap();
+        p.output_order[0].1 = last.emissions().len(); // one past the end
+        let e = check_schedule(&k.name, &k.dfg, &p).unwrap_err();
+        assert_eq!(e.check, Check::Schedule);
+    }
+
+    #[test]
+    fn schedule_check_rejects_swapped_stages() {
+        let k = compiled("poly6");
+        let mut p = k.program.clone();
+        assert!(p.stages.len() >= 2);
+        p.stages.swap(0, 1);
+        assert!(check_schedule(&k.name, &k.dfg, &p).is_err());
+    }
+
+    #[test]
+    fn tape_check_rejects_out_of_range_dst() {
+        let k = compiled("gradient");
+        let mut ops: Vec<TapeOp> = k.tape.ops().to_vec();
+        let last = ops.len() - 1;
+        ops[last].dst = k.tape.n_slots() as u32; // one past the arena
+        let bad = Tape::from_raw_parts(
+            ops,
+            k.tape.consts().to_vec(),
+            k.tape.outputs().to_vec(),
+            k.tape.n_inputs(),
+            k.tape.n_slots(),
+        );
+        let e = check_tape_against(&k.name, &k.dfg, &k.program, &bad).unwrap_err();
+        assert_eq!(e.check, Check::Tape);
+        assert_eq!(e.op, Some(last as u32));
+    }
+
+    #[test]
+    fn tape_check_rejects_write_to_input_and_const_slots() {
+        let k = compiled("poly6");
+        // Write into the input block.
+        let mut ops = k.tape.ops().to_vec();
+        ops[0].dst = 0;
+        ops[0].a = 0;
+        ops[0].b = 0;
+        let bad = Tape::from_raw_parts(
+            ops,
+            k.tape.consts().to_vec(),
+            k.tape.outputs().to_vec(),
+            k.tape.n_inputs(),
+            k.tape.n_slots(),
+        );
+        assert!(check_tape_against(&k.name, &k.dfg, &k.program, &bad).is_err());
+        // Write over a constant slot.
+        let const_slot = k.tape.consts()[0].0;
+        let mut ops = k.tape.ops().to_vec();
+        let idx = ops.iter().position(|o| o.dst > const_slot).unwrap();
+        ops[idx].dst = const_slot;
+        let bad = Tape::from_raw_parts(
+            ops,
+            k.tape.consts().to_vec(),
+            k.tape.outputs().to_vec(),
+            k.tape.n_inputs(),
+            k.tape.n_slots(),
+        );
+        assert!(check_tape_against(&k.name, &k.dfg, &k.program, &bad).is_err());
+    }
+
+    #[test]
+    fn tape_check_rejects_truncated_outputs() {
+        let k = compiled("sgfilter");
+        let mut outputs = k.tape.outputs().to_vec();
+        outputs.pop();
+        let bad = Tape::from_raw_parts(
+            k.tape.ops().to_vec(),
+            k.tape.consts().to_vec(),
+            outputs,
+            k.tape.n_inputs(),
+            k.tape.n_slots(),
+        );
+        assert!(check_tape_against(&k.name, &k.dfg, &k.program, &bad).is_err());
+    }
+
+    #[test]
+    fn tape_check_diff_catches_const_value_drift() {
+        // Internal invariants alone cannot see a constant whose value
+        // changed; the recompile diff must.
+        let k = compiled("chebyshev");
+        let mut consts = k.tape.consts().to_vec();
+        consts[0].1 = consts[0].1.wrapping_add(1);
+        let bad = Tape::from_raw_parts(
+            k.tape.ops().to_vec(),
+            consts,
+            k.tape.outputs().to_vec(),
+            k.tape.n_inputs(),
+            k.tape.n_slots(),
+        );
+        let e = check_tape_against(&k.name, &k.dfg, &k.program, &bad).unwrap_err();
+        assert!(e.detail.contains("fresh lowering"), "{e}");
+    }
+
+    #[test]
+    fn context_check_rejects_op_sequence_drift() {
+        let k = compiled("gradient");
+        let mut ctx = k.context.clone();
+        // Drop the first FU's first instruction: validate() still
+        // passes, but the op sequence no longer matches the tape.
+        ctx.fus[0].instrs.remove(0);
+        let e = check_context(&k.name, &k.program, &ctx, &k.tape).unwrap_err();
+        assert_eq!(e.check, Check::Context);
+    }
+
+    #[test]
+    fn cached_timing_drift_is_rejected() {
+        let mut k = compiled("poly5");
+        k.ii += 1;
+        let e = verify_kernel(&k).unwrap_err();
+        assert_eq!(e.check, Check::Schedule);
+        let mut k = compiled("poly5");
+        k.context_words += 1;
+        let e = verify_kernel(&k).unwrap_err();
+        assert_eq!(e.check, Check::Context);
+    }
+
+    #[test]
+    fn artifact_roundtrip_verifies_and_corruption_is_rejected() {
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let text = program_to_json(&g, &p).to_string_pretty();
+        verify_artifact_str("gradient", &text).unwrap();
+        // Wrong identity.
+        assert!(verify_artifact_str("poly6", &text).is_err());
+        // Structural schedule corruption.
+        let corrupted = text.replacen("\"ii\"", "\"xx\"", 1);
+        assert!(verify_artifact_str("gradient", &corrupted).is_err());
+        // Not JSON at all.
+        assert!(verify_artifact_str("gradient", "{").is_err());
+    }
+}

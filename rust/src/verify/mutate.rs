@@ -1,0 +1,388 @@
+//! Adversarial mutation harness for the static verifier.
+//!
+//! The verifier's job is *completeness*: no corrupted artifact that
+//! misbehaves at runtime may pass. This module manufactures the
+//! corruption — lowered tapes with bumped slots, dropped ops, swapped
+//! issue order, truncated output routes; committed interchange JSON
+//! with the same classes of damage — and the integration suite
+//! (`rust/tests/verify.rs`) cross-checks every mutant against the
+//! ref/turbo differential oracle: anything the oracle shows
+//! misbehaving must be rejected statically.
+//!
+//! Tape mutants are built through [`Tape::from_raw_parts`], which
+//! deliberately skips validation. Every mutation changes at least one
+//! tape field, and `check_tape_against` diffs all fields against a
+//! fresh lowering — so every tape mutant is rejected, a strict
+//! superset of the zero-false-negative requirement.
+//!
+//! Artifact mutants carry a [`must_reject`](ArtifactMutant::must_reject)
+//! flag: structural damage to the `schedule` section must fail
+//! verification, while a *semantically consistent* rewrite of the
+//! `dfg` section (a constant with a different value, recompiled
+//! consistently) legitimately verifies clean — the document then
+//! describes a different, but well-formed, kernel on which the ref and
+//! turbo backends still agree.
+
+use crate::exec::{CompiledKernel, Tape, TapeOp};
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// One corrupted tape plus a description of the damage.
+#[derive(Debug, Clone)]
+pub struct TapeMutant {
+    pub tape: Tape,
+    pub desc: String,
+}
+
+/// One corrupted artifact document.
+#[derive(Debug, Clone)]
+pub struct ArtifactMutant {
+    pub doc: Json,
+    pub desc: String,
+    /// Structural corruption the verifier is required to reject.
+    /// `false` marks semantically-consistent rewrites that may pass.
+    pub must_reject: bool,
+}
+
+/// Number of distinct tape-mutation classes [`tape_mutants`] draws
+/// from (kept public so tests can demand coverage of each).
+pub const TAPE_MUTATION_KINDS: usize = 10;
+
+fn rebuild(
+    k: &CompiledKernel,
+    ops: Vec<TapeOp>,
+    consts: Vec<(u32, i32)>,
+    outputs: Vec<u32>,
+    n_slots: usize,
+) -> Tape {
+    Tape::from_raw_parts(ops, consts, outputs, k.tape.n_inputs(), n_slots)
+}
+
+/// Generate one tape mutant of the given kind, or `None` when the
+/// kernel is too small for that mutation (e.g. a single-op tape has
+/// no pair to swap).
+pub fn tape_mutant(k: &CompiledKernel, kind: usize, rng: &mut Rng) -> Option<TapeMutant> {
+    let t = &k.tape;
+    let ops = t.ops().to_vec();
+    let consts = t.consts().to_vec();
+    let outputs = t.outputs().to_vec();
+    let n_slots = t.n_slots();
+    let (tape, desc) = match kind % TAPE_MUTATION_KINDS {
+        // Slot bumps: nudge one field of one op.
+        0 => {
+            let i = rng.index(ops.len());
+            let mut ops = ops;
+            ops[i].dst += 1;
+            let d = format!("op {i}: dst slot bumped to {}", ops[i].dst);
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+        1 => {
+            let i = rng.index(ops.len());
+            let mut ops = ops;
+            ops[i].a = n_slots as u32; // out-of-range read
+            let d = format!("op {i}: a slot set out of range ({n_slots})");
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+        2 => {
+            let i = rng.index(ops.len());
+            let mut ops = ops;
+            ops[i].b += 1;
+            let d = format!("op {i}: b slot bumped to {}", ops[i].b);
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+        // Dropped op.
+        3 => {
+            if ops.len() < 2 {
+                return None;
+            }
+            let i = rng.index(ops.len());
+            let mut ops = ops;
+            ops.remove(i);
+            let d = format!("op {i} dropped");
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+        // Swapped issue order ("swapped cycles" at tape granularity).
+        4 => {
+            if ops.len() < 2 {
+                return None;
+            }
+            let i = rng.index(ops.len() - 1);
+            let j = i + 1 + rng.index(ops.len() - i - 1);
+            let mut ops = ops;
+            ops.swap(i, j);
+            let d = format!("ops {i} and {j} swapped");
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+        // Truncated output route.
+        5 => {
+            let mut outputs = outputs;
+            outputs.pop();
+            let d = "last output route truncated".to_string();
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+        // Output route bumped (possibly out of range).
+        6 => {
+            let i = rng.index(outputs.len());
+            let mut outputs = outputs;
+            outputs[i] += 1;
+            let d = format!("output {i} route bumped to slot {}", outputs[i]);
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+        // Constant drift (invisible to bounds checks; the recompile
+        // diff must catch it).
+        7 => {
+            if consts.is_empty() {
+                return None;
+            }
+            let i = rng.index(consts.len());
+            let mut consts = consts;
+            consts[i].1 = consts[i].1.wrapping_add(1);
+            let d = format!("const {i} value drifted");
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+        // Arena shrunk under the tape.
+        8 => {
+            let d = format!("n_slots shrunk to {}", n_slots - 1);
+            (rebuild(k, ops, consts, outputs, n_slots - 1), d)
+        }
+        // Opcode swap: structurally identical, semantically different.
+        _ => {
+            let i = rng.index(ops.len());
+            let mut ops = ops;
+            let all = crate::dfg::OpKind::ALL;
+            let cur = all.iter().position(|&o| o == ops[i].op).unwrap_or(0);
+            ops[i].op = all[(cur + 1) % all.len()];
+            let d = format!("op {i} opcode swapped to {}", ops[i].op.name());
+            (rebuild(k, ops, consts, outputs, n_slots), d)
+        }
+    };
+    Some(TapeMutant {
+        tape,
+        desc: format!("{}: {desc}", k.name),
+    })
+}
+
+/// Generate `n` random tape mutants for one compiled kernel, cycling
+/// through every mutation class.
+pub fn tape_mutants(k: &CompiledKernel, rng: &mut Rng, n: usize) -> Vec<TapeMutant> {
+    let mut out = Vec::with_capacity(n);
+    let mut kind = 0;
+    while out.len() < n {
+        if let Some(m) = tape_mutant(k, kind, rng) {
+            out.push(m);
+        }
+        kind += 1;
+        if kind > n * TAPE_MUTATION_KINDS {
+            break; // kernel too small for the remaining classes
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Artifact (interchange JSON) mutants
+// ---------------------------------------------------------------------
+
+fn obj_mut<'a>(v: &'a mut Json, key: &str) -> Option<&'a mut Json> {
+    match v {
+        Json::Obj(m) => m.get_mut(key),
+        _ => None,
+    }
+}
+
+fn arr_mut(v: &mut Json) -> Option<&mut Vec<Json>> {
+    match v {
+        Json::Arr(a) => Some(a),
+        _ => None,
+    }
+}
+
+fn bump_int(v: &mut Json) -> bool {
+    if let Json::Int(i) = v {
+        *i += 1;
+        return true;
+    }
+    false
+}
+
+/// Number of distinct artifact-mutation classes.
+pub const ARTIFACT_MUTATION_KINDS: usize = 10;
+
+/// Generate one artifact mutant of the given kind from a pristine
+/// interchange document, or `None` when inapplicable.
+pub fn artifact_mutant(doc: &Json, kind: usize, rng: &mut Rng) -> Option<ArtifactMutant> {
+    let mut m = doc.clone();
+    let n_stages = doc.get("schedule").get("stages").as_arr()?.len();
+    let stage = rng.index(n_stages);
+    let (desc, must_reject) = match kind % ARTIFACT_MUTATION_KINDS {
+        0 => {
+            bump_int(obj_mut(obj_mut(&mut m, "schedule")?, "ii")?).then_some(())?;
+            ("schedule.ii bumped".to_string(), true)
+        }
+        1 => {
+            bump_int(obj_mut(obj_mut(&mut m, "schedule")?, "latency")?).then_some(())?;
+            ("schedule.latency bumped".to_string(), true)
+        }
+        2 => {
+            bump_int(obj_mut(obj_mut(&mut m, "schedule")?, "n_stages")?).then_some(())?;
+            ("schedule.n_stages bumped".to_string(), true)
+        }
+        3 => {
+            let stages = arr_mut(obj_mut(obj_mut(&mut m, "schedule")?, "stages")?)?;
+            let ops = arr_mut(obj_mut(&mut stages[stage], "ops")?)?;
+            if ops.is_empty() {
+                return None;
+            }
+            ops.remove(rng.index(ops.len()));
+            (format!("stage {stage}: op dropped"), true)
+        }
+        4 => {
+            if n_stages < 2 {
+                return None;
+            }
+            let stages = arr_mut(obj_mut(obj_mut(&mut m, "schedule")?, "stages")?)?;
+            let i = rng.index(n_stages - 1);
+            stages.swap(i, i + 1);
+            (format!("stages {i} and {} swapped", i + 1), true)
+        }
+        5 => {
+            let stages = arr_mut(obj_mut(obj_mut(&mut m, "schedule")?, "stages")?)?;
+            let arrivals = arr_mut(obj_mut(&mut stages[stage], "arrivals")?)?;
+            if arrivals.is_empty() {
+                return None;
+            }
+            arrivals.pop();
+            (format!("stage {stage}: arrivals truncated"), true)
+        }
+        6 => {
+            let order = arr_mut(obj_mut(obj_mut(&mut m, "schedule")?, "output_order")?)?;
+            let i = rng.index(order.len());
+            bump_int(obj_mut(&mut order[i], "pos")?).then_some(())?;
+            (format!("output_order[{i}].pos bumped"), true)
+        }
+        7 => {
+            let stages = arr_mut(obj_mut(obj_mut(&mut m, "schedule")?, "stages")?)?;
+            let consts = arr_mut(obj_mut(&mut stages[stage], "consts")?)?;
+            if consts.is_empty() {
+                return None;
+            }
+            let i = rng.index(consts.len());
+            bump_int(obj_mut(&mut consts[i], "value")?).then_some(())?;
+            (format!("stage {stage}: const {i} value bumped"), true)
+        }
+        8 => {
+            // Dangling node reference in the dfg section: point an op
+            // arg past the end of the node list.
+            let nodes = arr_mut(obj_mut(obj_mut(&mut m, "dfg")?, "nodes")?)?;
+            let n_nodes = nodes.len() as i64;
+            let arg0 = nodes
+                .iter_mut()
+                .find_map(|n| obj_mut(n, "args").and_then(arr_mut))?
+                .first_mut()?;
+            *arg0 = Json::Int(n_nodes);
+            ("dfg: op arg pointed past the node list".to_string(), true)
+        }
+        // Semantically-consistent rewrite: a const node's value
+        // changes, the schedule section is regenerated to match by the
+        // caller being *unable* to — so this one mutates dfg+schedule
+        // coherently by bumping the value in both places when present;
+        // if the schedule carries no copy, the verifier still rejects
+        // the stale schedule, so only emit when both sides updated.
+        _ => {
+            let nodes = arr_mut(obj_mut(obj_mut(&mut m, "dfg")?, "nodes")?)?;
+            let mut old_value = None;
+            for n in nodes.iter_mut() {
+                if n.get("kind").as_str() == Some("const") {
+                    if let Some(v) = obj_mut(n, "value") {
+                        if let Json::Int(i) = v {
+                            old_value = Some(*i);
+                            *i += 1;
+                        }
+                        break;
+                    }
+                }
+            }
+            let old = old_value?;
+            // Update every schedule-side copy of that constant so the
+            // document stays self-consistent.
+            let stages = arr_mut(obj_mut(obj_mut(&mut m, "schedule")?, "stages")?)?;
+            for st in stages.iter_mut() {
+                if let Some(consts) = obj_mut(st, "consts").and_then(arr_mut) {
+                    for c in consts.iter_mut() {
+                        if c.get("value").as_i64() == Some(old) {
+                            if let Some(v) = obj_mut(c, "value") {
+                                *v = Json::Int(old + 1);
+                            }
+                        }
+                    }
+                }
+            }
+            (
+                "dfg+schedule: const value rewritten coherently".to_string(),
+                false,
+            )
+        }
+    };
+    Some(ArtifactMutant {
+        doc: m,
+        desc,
+        must_reject,
+    })
+}
+
+/// Generate `n` artifact mutants from a pristine document, cycling
+/// through every mutation class.
+pub fn artifact_mutants(doc: &Json, rng: &mut Rng, n: usize) -> Vec<ArtifactMutant> {
+    let mut out = Vec::with_capacity(n);
+    let mut kind = 0;
+    while out.len() < n {
+        if let Some(m) = artifact_mutant(doc, kind, rng) {
+            out.push(m);
+        }
+        kind += 1;
+        if kind > n * ARTIFACT_MUTATION_KINDS {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::sched::{program_to_json, Program};
+    use crate::verify;
+
+    #[test]
+    fn every_tape_mutant_is_rejected() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for name in bench_suite::all_names() {
+            let k = CompiledKernel::compile(bench_suite::load(name).unwrap()).unwrap();
+            for m in tape_mutants(&k, &mut rng, 2 * TAPE_MUTATION_KINDS) {
+                assert!(
+                    verify::check_tape_against(&k.name, &k.dfg, &k.program, &m.tape).is_err(),
+                    "mutant passed verification: {}",
+                    m.desc
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn structural_artifact_mutants_are_rejected() {
+        let mut rng = Rng::new(0xBADF00D);
+        let g = bench_suite::load("gradient").unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let doc = program_to_json(&g, &p);
+        verify::verify_artifact_json("gradient", &doc).unwrap();
+        let mutants = artifact_mutants(&doc, &mut rng, 2 * ARTIFACT_MUTATION_KINDS);
+        assert!(!mutants.is_empty());
+        for m in mutants {
+            let verdict = verify::verify_artifact_json("gradient", &m.doc);
+            if m.must_reject {
+                assert!(verdict.is_err(), "structural mutant passed: {}", m.desc);
+            }
+        }
+    }
+}

@@ -1,3 +1,11 @@
+// Frame codec discipline (DESIGN.md §12): a truncating `as` cast in
+// the decode path is how a 16 MiB length prefix becomes a 0-byte read.
+// Every width change below goes through `try_from`-backed helpers
+// (`width_u16`/`width_u32`, `Dec::len_u32`/`Dec::len_u64`) or carries
+// a `cast-ok` justification; `tools/source_lint.py` enforces the
+// annotation textually and this module-level pedantic lint enforces
+// it in clippy. Applies to the whole `wire::` subtree.
+#![warn(clippy::cast_possible_truncation)]
 //! Length-prefixed binary wire protocol for the overlay service
 //! (DESIGN.md §9, `docs/PROTOCOL.md`).
 //!
@@ -98,6 +106,7 @@ const EC_DEADLINE_EXCEEDED: u16 = 6;
 const EC_DISCONNECTED: u16 = 7;
 const EC_BACKEND: u16 = 8;
 const EC_UNAVAILABLE: u16 = 9;
+const EC_INVALID_KERNEL: u16 = 10;
 const EC_VERSION_MISMATCH: u16 = 100;
 const EC_MALFORMED: u16 = 101;
 
@@ -359,7 +368,7 @@ impl Frame {
             },
             OP_CALL => {
                 let kernel = d.u32("kernel id")?;
-                let arity = d.u16("call arity")? as usize;
+                let arity = usize::from(d.u16("call arity")?);
                 let inputs = d.words(arity, "call inputs")?;
                 Frame::Call { id, kernel, inputs }
             }
@@ -438,7 +447,9 @@ fn put_error(out: &mut Vec<u8>, err: &WireError) -> Result<(), FrameError> {
             } => {
                 put_u16(out, EC_REJECTED);
                 put_string(out, kernel)?;
+                // cast-ok: usize -> u64 widens on every supported host
                 put_u64(out, *queued as u64);
+                // cast-ok: usize -> u64 widens on every supported host
                 put_u64(out, *limit as u64);
             }
             ServiceError::ShutDown => put_u16(out, EC_SHUT_DOWN),
@@ -458,6 +469,11 @@ fn put_error(out: &mut Vec<u8>, err: &WireError) -> Result<(), FrameError> {
             ServiceError::Unavailable { kernel } => {
                 put_u16(out, EC_UNAVAILABLE);
                 put_string(out, kernel)?;
+            }
+            ServiceError::InvalidKernel { kernel, detail } => {
+                put_u16(out, EC_INVALID_KERNEL);
+                put_string(out, kernel)?;
+                put_string(out, detail)?;
             }
         },
         WireError::VersionMismatch { min, max } => {
@@ -482,16 +498,16 @@ impl<'a> Dec<'a> {
             }
             EC_SHAPE_MISMATCH => WireError::Service(ServiceError::ShapeMismatch {
                 kernel: self.string("kernel")?,
-                expected: self.u32("expected")? as usize,
-                got: self.u32("got")? as usize,
+                expected: self.len_u32("expected")?,
+                got: self.len_u32("got")?,
             }),
             EC_EMPTY_BATCH => WireError::Service(ServiceError::EmptyBatch {
                 kernel: self.string("kernel")?,
             }),
             EC_REJECTED => WireError::Service(ServiceError::Rejected {
                 kernel: self.string("kernel")?,
-                queued: self.u64("queued")? as usize,
-                limit: self.u64("limit")? as usize,
+                queued: self.len_u64("queued")?,
+                limit: self.len_u64("limit")?,
             }),
             EC_SHUT_DOWN => WireError::Service(ServiceError::ShutDown),
             EC_DEADLINE_EXCEEDED => WireError::Service(ServiceError::DeadlineExceeded {
@@ -506,6 +522,10 @@ impl<'a> Dec<'a> {
             }),
             EC_UNAVAILABLE => WireError::Service(ServiceError::Unavailable {
                 kernel: self.string("kernel")?,
+            }),
+            EC_INVALID_KERNEL => WireError::Service(ServiceError::InvalidKernel {
+                kernel: self.string("kernel")?,
+                detail: self.string("detail")?,
             }),
             EC_VERSION_MISMATCH => WireError::VersionMismatch {
                 min: self.u16("min version")?,
@@ -615,8 +635,23 @@ impl<'a> Dec<'a> {
         Ok(u64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
     }
 
+    /// Decode a `u32` length/count into a `usize`, checked rather than
+    /// cast so no port can silently truncate a frame length.
+    fn len_u32(&mut self, what: &str) -> Result<usize, FrameError> {
+        let v = self.u32(what)?;
+        usize::try_from(v).map_err(|_| FrameError::new(format!("{what} {v} exceeds usize")))
+    }
+
+    /// [`Dec::len_u32`] for `u64` counts (queue depths on the error
+    /// path): a value that cannot index on this host is a malformed
+    /// frame, not a wrapped index.
+    fn len_u64(&mut self, what: &str) -> Result<usize, FrameError> {
+        let v = self.u64(what)?;
+        usize::try_from(v).map_err(|_| FrameError::new(format!("{what} {v} exceeds usize")))
+    }
+
     fn string(&mut self, what: &str) -> Result<String, FrameError> {
-        let n = self.u32(what)? as usize;
+        let n = self.len_u32(what)?;
         let raw = self.bytes(n, what)?;
         String::from_utf8(raw.to_vec())
             .map_err(|_| FrameError::new(format!("{what}: invalid UTF-8")))
@@ -636,8 +671,8 @@ impl<'a> Dec<'a> {
     /// Batch body; a zero-arity batch is legal only with zero rows
     /// (`FlatBatch` cannot represent rows of width 0).
     fn batch(&mut self) -> Result<FlatBatch, FrameError> {
-        let arity = self.u16("batch arity")? as usize;
-        let rows = self.u32("batch rows")? as usize;
+        let arity = usize::from(self.u16("batch arity")?);
+        let rows = self.len_u32("batch rows")?;
         if rows == 0 {
             return Ok(FlatBatch::new(arity));
         }
@@ -681,7 +716,9 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
             format!("frame payload {}B exceeds max {MAX_PAYLOAD}B", payload.len()),
         ));
     }
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    let len = u32::try_from(payload.len())
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame length exceeds u32"))?;
+    w.write_all(&len.to_le_bytes())?;
     w.write_all(&payload)
 }
 
@@ -704,7 +741,8 @@ pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Frame>> {
             n => got += n,
         }
     }
-    let len = u32::from_le_bytes(len) as usize;
+    let len = usize::try_from(u32::from_le_bytes(len))
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame length exceeds usize"))?;
     if len > MAX_PAYLOAD {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
@@ -773,7 +811,8 @@ pub(crate) fn read_frame_patient(r: &mut impl Read) -> io::Result<PatientRead> {
             Err(e) => return Err(e),
         }
     }
-    let len = u32::from_le_bytes(len) as usize;
+    let len = usize::try_from(u32::from_le_bytes(len))
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame length exceeds usize"))?;
     if len > MAX_PAYLOAD {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
@@ -986,6 +1025,7 @@ impl Write for WireStream {
 }
 
 #[cfg(test)]
+#[allow(clippy::cast_possible_truncation)] // test-only generators cast freely
 mod tests {
     use super::*;
     use crate::util::prng::Rng;
@@ -1090,6 +1130,13 @@ mod tests {
             Frame::Error {
                 id: 16,
                 err: WireError::Service(ServiceError::Unavailable { kernel: "fir".into() }),
+            },
+            Frame::Error {
+                id: 17,
+                err: WireError::Service(ServiceError::InvalidKernel {
+                    kernel: "poly6".into(),
+                    detail: "tape: dst slot 9 out of range".into(),
+                }),
             },
             Frame::GetMetrics { id: 9 },
             Frame::Metrics {
@@ -1233,6 +1280,17 @@ mod tests {
                 },
                 "081000000000000000090003000000666972",
             ),
+            (
+                Frame::Error {
+                    id: 17,
+                    err: WireError::Service(ServiceError::InvalidKernel {
+                        kernel: "poly6".into(),
+                        detail: "tape: dst slot 9 out of range".into(),
+                    }),
+                },
+                "0811000000000000000a0005000000706f6c79361d000000746170653a2064\
+                 737420736c6f742039206f7574206f662072616e6765",
+            ),
         ];
         for (frame, hex) in golden {
             let hex: String = hex.chars().filter(|c| !c.is_whitespace()).collect();
@@ -1318,7 +1376,7 @@ mod tests {
                 },
                 11 => Frame::Drain { id },
                 _ => {
-                    let err = match rng.index(11) {
+                    let err = match rng.index(12) {
                         0 => WireError::Service(ServiceError::UnknownKernel(rand_string(rng, 16))),
                         1 => WireError::Service(ServiceError::ShapeMismatch {
                             kernel: rand_string(rng, 16),
@@ -1347,7 +1405,11 @@ mod tests {
                         8 => WireError::Service(ServiceError::Unavailable {
                             kernel: rand_string(rng, 16),
                         }),
-                        9 => WireError::VersionMismatch {
+                        9 => WireError::Service(ServiceError::InvalidKernel {
+                            kernel: rand_string(rng, 16),
+                            detail: rand_string(rng, 48),
+                        }),
+                        10 => WireError::VersionMismatch {
                             min: rng.index(4) as u16,
                             max: rng.index(4) as u16,
                         },

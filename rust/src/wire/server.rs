@@ -43,6 +43,7 @@ use super::{
 use crate::coordinator::completion::Wake;
 use crate::service::{KernelHandle, OverlayService, Pending, PendingBatch, ServiceError};
 use crate::wire::{HEALTH_DRAINING, HEALTH_SERVING, WIRE_VERSION_MAX, WIRE_VERSION_MIN};
+use crate::util::sync::LockExt;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{self, BufReader, BufWriter, Write};
@@ -105,11 +106,11 @@ impl ServerCtl {
     /// Override the mid-frame stall deadline (tests provoke it in
     /// milliseconds). Applies to connections accepted afterwards.
     pub fn set_read_deadline(&self, d: Duration) {
-        *self.read_deadline.lock().unwrap() = d;
+        *self.read_deadline.lock_unpoisoned() = d;
     }
 
     pub(crate) fn read_deadline(&self) -> Duration {
-        *self.read_deadline.lock().unwrap()
+        *self.read_deadline.lock_unpoisoned()
     }
 
     /// Override the fault-injection script for connections accepted
@@ -117,11 +118,11 @@ impl ServerCtl {
     /// environment (process-global); tests running several servers in
     /// one process use this to script a fault on exactly one of them.
     pub fn set_fault_plan(&self, plan: FaultPlan) {
-        *self.fault.lock().unwrap() = plan;
+        *self.fault.lock_unpoisoned() = plan;
     }
 
     fn fault_plan(&self) -> FaultPlan {
-        self.fault.lock().unwrap().clone()
+        self.fault.lock_unpoisoned().clone()
     }
 
     pub(crate) fn inflight_add(&self, n: u64) {
@@ -362,7 +363,7 @@ impl WireServer {
                             Ok(c) => c,
                             Err(_) => continue,
                         };
-                        streams.lock().unwrap().insert(conn_id, control);
+                        streams.lock_unpoisoned().insert(conn_id, control);
                         let service = Arc::clone(&service);
                         let conn_streams = Arc::clone(&streams);
                         let conn_ctl = Arc::clone(&ctl);
@@ -370,14 +371,14 @@ impl WireServer {
                             .name(format!("wire-conn-{conn_id}"))
                             .spawn(move || {
                                 connection(service, stream, conn_ctl);
-                                conn_streams.lock().unwrap().remove(&conn_id);
+                                conn_streams.lock_unpoisoned().remove(&conn_id);
                             });
                         match spawned {
                             Ok(handle) => {
                                 // Reap finished connections so a
                                 // long-lived server does not
                                 // accumulate join handles.
-                                let mut cs = conns.lock().unwrap();
+                                let mut cs = conns.lock_unpoisoned();
                                 cs.retain(|h| !h.is_finished());
                                 cs.push(handle);
                             }
@@ -386,7 +387,7 @@ impl WireServer {
                             // acceptor — same policy as the accept
                             // error arm above.
                             Err(_) => {
-                                if let Some(s) = streams.lock().unwrap().remove(&conn_id) {
+                                if let Some(s) = streams.lock_unpoisoned().remove(&conn_id) {
                                     s.shutdown_both();
                                 }
                                 accepted -= 1;
@@ -435,7 +436,7 @@ impl WireServer {
             let _ = a.join();
         }
         if self.ctl.is_draining() {
-            for s in self.streams.lock().unwrap().values() {
+            for s in self.streams.lock_unpoisoned().values() {
                 s.shutdown_read();
             }
         }
@@ -456,15 +457,15 @@ impl WireServer {
 
     fn finish(&mut self, force_close: bool) {
         if force_close {
-            for s in self.streams.lock().unwrap().values() {
+            for s in self.streams.lock_unpoisoned().values() {
                 s.shutdown_both();
             }
         }
-        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        let conns = std::mem::take(&mut *self.conns.lock_unpoisoned());
         for c in conns {
             let _ = c.join();
         }
-        self.streams.lock().unwrap().clear();
+        self.streams.lock_unpoisoned().clear();
         if let Some(p) = self.unix_path.take() {
             let _ = std::fs::remove_file(&p);
         }
@@ -529,7 +530,7 @@ impl ConnShared {
 
     /// Reader-side: queue one immediate frame for the reactor to write.
     fn push_frame(&self, frame: Frame) {
-        let mut st = self.m.lock().unwrap();
+        let mut st = self.m.lock_unpoisoned();
         st.outbox.push_back(frame);
         drop(st);
         self.cv.notify_all();
@@ -539,7 +540,7 @@ impl ConnShared {
     /// may ring the doorbell for this id *before* the registration is
     /// processed — the reactor's carry list absorbs that race.
     fn register(&self, id: u64, inflight: InFlight) {
-        let mut st = self.m.lock().unwrap();
+        let mut st = self.m.lock_unpoisoned();
         if st.dead {
             // Torn down already: dropping the pending abandons its
             // slot; the request never enters the in-flight ledger.
@@ -555,7 +556,7 @@ impl ConnShared {
 
     /// Reader-side: the conversation is over.
     fn finish_reader(&self) {
-        let mut st = self.m.lock().unwrap();
+        let mut st = self.m.lock_unpoisoned();
         st.reader_done = true;
         drop(st);
         self.cv.notify_all();
@@ -567,7 +568,7 @@ impl Wake for ConnShared {
     /// ready. Never called under a slab lock, so taking the
     /// connection lock here is safe.
     fn ring(&self, tag: u64) {
-        let mut st = self.m.lock().unwrap();
+        let mut st = self.m.lock_unpoisoned();
         st.ready.push(tag);
         drop(st);
         self.cv.notify_all();
@@ -626,7 +627,7 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream, mut fault: FaultState
     let mut carry: Vec<u64> = Vec::new();
     loop {
         let (mut frames, new_inflight, rung) = {
-            let mut st = conn.m.lock().unwrap();
+            let mut st = conn.m.lock_unpoisoned();
             loop {
                 if st.dead {
                     let orphaned = std::mem::take(&mut st.submitted);
@@ -704,7 +705,7 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream, mut fault: FaultState
             if let Ok(inner) = w.get_ref().try_clone() {
                 inner.shutdown_both();
             }
-            let mut st = conn.m.lock().unwrap();
+            let mut st = conn.m.lock_unpoisoned();
             st.dead = true;
             let orphaned = std::mem::take(&mut st.submitted);
             drop(st);
@@ -868,8 +869,8 @@ fn serve_connection(
                     Ok(h) => Frame::KernelInfo {
                         id,
                         kernel: h.id().0,
-                        n_inputs: h.arity() as u16,
-                        n_outputs: h.n_outputs() as u16,
+                        n_inputs: u16::try_from(h.arity()).unwrap_or(u16::MAX),
+                        n_outputs: u16::try_from(h.n_outputs()).unwrap_or(u16::MAX),
                     },
                     Err(e) => Frame::Error {
                         id,
@@ -924,7 +925,7 @@ fn serve_connection(
                 conn.push_frame(Frame::HealthOk {
                     id,
                     status,
-                    inflight: conn.ctl.inflight().min(u32::MAX as u64) as u32,
+                    inflight: u32::try_from(conn.ctl.inflight()).unwrap_or(u32::MAX),
                 });
             }
             Frame::Drain { id } if version >= 2 => {
@@ -936,7 +937,7 @@ fn serve_connection(
                 conn.push_frame(Frame::HealthOk {
                     id,
                     status: HEALTH_DRAINING,
-                    inflight: conn.ctl.inflight().min(u32::MAX as u64) as u32,
+                    inflight: u32::try_from(conn.ctl.inflight()).unwrap_or(u32::MAX),
                 });
                 return;
             }

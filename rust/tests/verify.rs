@@ -1,0 +1,228 @@
+//! Integration gates for the static verifier (DESIGN.md §12).
+//!
+//! The contract under test is **zero false negatives**: every corrupted
+//! compiled-kernel form that the runtime differential oracle (mutant
+//! tape vs. the DFG interpreter; ref vs. turbo on mutant artifacts)
+//! shows misbehaving must be rejected statically, before it could ever
+//! be loaded. The mutation corpus comes from `verify::mutate`; the
+//! oracle runs every mutant here and cross-checks the verdicts.
+//!
+//! Also covered: the committed `benchmarks/dfg` artifacts verify clean,
+//! every Table II kernel verifies clean and serves correctly on every
+//! toolchain-free backend, and `OverlayService::builder()` refuses a
+//! corrupted artifact with the typed `ServiceError::InvalidKernel`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use tmfu_overlay::bench_suite;
+use tmfu_overlay::dfg::{dfg_from_json, eval};
+use tmfu_overlay::exec::{BackendKind, CompiledKernel, FlatBatch, Tape, TapeArena};
+use tmfu_overlay::sched::{program_to_json, Program};
+use tmfu_overlay::service::{OverlayService, ServiceError};
+use tmfu_overlay::util::prng::Rng;
+use tmfu_overlay::verify::{self, mutate};
+
+/// Random input packets for one kernel.
+fn cases(arity: usize, rng: &mut Rng, n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|_| (0..arity).map(|_| rng.next_i32() % 1000).collect())
+        .collect()
+}
+
+/// The runtime differential oracle: execute `tape` on `inputs` and
+/// diff against the DFG interpreter. Returns `true` when the tape
+/// *misbehaves* — panics (slot out of range trips a slice bounds
+/// check; the tape interpreter is entirely safe code, so corruption
+/// panics instead of invoking UB) or produces any diverging packet.
+fn misbehaves(k: &CompiledKernel, tape: &Tape, inputs: &[Vec<i32>]) -> bool {
+    let run = catch_unwind(AssertUnwindSafe(|| {
+        let batch = FlatBatch::from_rows(k.n_inputs, inputs);
+        let mut arena = TapeArena::new();
+        let mut out = FlatBatch::new(tape.n_outputs());
+        tape.execute_into(&batch, &mut arena, &mut out);
+        out.to_rows()
+    }));
+    match run {
+        Err(_) => true, // panicked: corrupt by demonstration
+        Ok(rows) => {
+            rows.len() != inputs.len()
+                || inputs
+                    .iter()
+                    .zip(&rows)
+                    .any(|(packet, got)| *got != eval(&k.dfg, packet))
+        }
+    }
+}
+
+/// Zero false negatives over the tape-mutation corpus: every mutant
+/// the oracle shows misbehaving is rejected by `check_tape_against`.
+/// (The verifier is in fact stricter — every mutant differs from a
+/// fresh lowering in at least one field — but the gate asserted here
+/// is exactly the safety contract.)
+#[test]
+fn every_misbehaving_tape_mutant_is_rejected_statically() {
+    let mut rng = Rng::new(0x5EED_CAFE);
+    let mut misbehaving = 0usize;
+    let mut total = 0usize;
+    for name in bench_suite::all_names() {
+        let k = CompiledKernel::compile(bench_suite::load(name).unwrap()).unwrap();
+        let inputs = cases(k.n_inputs, &mut rng, 24);
+        // Sanity: the pristine tape behaves and verifies.
+        assert!(!misbehaves(&k, &k.tape, &inputs), "{name}: pristine tape diverged");
+        verify::check_tape_against(&k.name, &k.dfg, &k.program, &k.tape).unwrap();
+        for m in mutate::tape_mutants(&k, &mut rng, 3 * mutate::TAPE_MUTATION_KINDS) {
+            total += 1;
+            let rejected =
+                verify::check_tape_against(&k.name, &k.dfg, &k.program, &m.tape).is_err();
+            if misbehaves(&k, &m.tape, &inputs) {
+                misbehaving += 1;
+                assert!(
+                    rejected,
+                    "FALSE NEGATIVE: oracle shows mutant misbehaving but the \
+                     verifier passed it — {}",
+                    m.desc
+                );
+            }
+        }
+    }
+    // The corpus must actually exercise the contract.
+    assert!(total >= 100, "mutation corpus too small ({total})");
+    assert!(
+        misbehaving * 2 >= total,
+        "oracle found too few misbehaving mutants ({misbehaving}/{total})"
+    );
+}
+
+/// Artifact-level mutation gate: structural corruption of the
+/// committed interchange form must be rejected; mutants the verifier
+/// accepts (semantically-consistent rewrites) must be genuinely
+/// harmless — the ref and turbo backends still agree on the kernel the
+/// rewritten document describes.
+#[test]
+fn artifact_mutants_rejected_or_provably_harmless() {
+    let mut rng = Rng::new(0xA11FAC75);
+    for name in bench_suite::all_names() {
+        let g = bench_suite::load(name).unwrap();
+        let p = Program::schedule(&g).unwrap();
+        let doc = program_to_json(&g, &p);
+        verify::verify_artifact_json(name, &doc)
+            .unwrap_or_else(|e| panic!("pristine artifact rejected: {e}"));
+        for m in mutate::artifact_mutants(&doc, &mut rng, 2 * mutate::ARTIFACT_MUTATION_KINDS) {
+            let verdict = verify::verify_artifact_json(name, &m.doc);
+            if m.must_reject {
+                assert!(
+                    verdict.is_err(),
+                    "{name}: structural mutant passed verification: {}",
+                    m.desc
+                );
+                continue;
+            }
+            if verdict.is_ok() {
+                // Accepted rewrite: prove it harmless with the
+                // differential oracle on the kernel it now describes.
+                let g2 = dfg_from_json(m.doc.get("dfg")).unwrap();
+                let k2 = CompiledKernel::compile(g2).unwrap();
+                let inputs = cases(k2.n_inputs, &mut rng, 8);
+                assert!(
+                    !misbehaves(&k2, &k2.tape, &inputs),
+                    "{name}: accepted mutant misbehaves at runtime: {}",
+                    m.desc
+                );
+            }
+        }
+    }
+}
+
+/// The committed `benchmarks/dfg` interchange files all verify clean
+/// (the same gate `tmfu verify` and `make verify` enforce).
+#[test]
+fn committed_artifacts_verify_clean() {
+    // Cargo runs integration tests with cwd = the package root (rust/).
+    let dir = std::path::Path::new("../benchmarks/dfg");
+    let names = verify::verify_artifacts_dir(dir).unwrap();
+    assert_eq!(
+        names.len(),
+        bench_suite::all_names().len(),
+        "artifact set out of sync with the bench suite"
+    );
+}
+
+/// Every Table II kernel verifies clean and serves oracle-correct
+/// results on every toolchain-free backend (the builder now runs the
+/// verifier, so `build()` succeeding *is* the verification pass).
+#[test]
+fn every_kernel_verifies_and_serves_on_all_backends() {
+    let mut rng = Rng::new(0xB0A7);
+    for kind in [BackendKind::Ref, BackendKind::Turbo, BackendKind::Sim] {
+        let service = OverlayService::builder()
+            .backend(kind)
+            .pipelines(1)
+            .max_batch(8)
+            .build()
+            .unwrap();
+        for h in service.handles() {
+            let packet: Vec<i32> = (0..h.arity()).map(|_| rng.next_i32() % 100).collect();
+            let got = h.call(&packet).unwrap();
+            let want = eval(&h.compiled().dfg, &packet);
+            assert_eq!(got, want, "{} on {:?}", h.name(), kind);
+        }
+        service.shutdown().unwrap();
+    }
+}
+
+/// `OverlayService::builder()` refuses a corrupted artifact directory
+/// with the typed `InvalidKernel` error — the broken kernel is never
+/// loaded — and accepts the pristine equivalent.
+#[test]
+fn builder_rejects_corrupted_artifact_with_typed_error() {
+    let dir = std::env::temp_dir().join(format!("tmfu-verify-gate-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Pristine artifacts for two kernels.
+    for name in ["gradient", "poly6"] {
+        let g = bench_suite::load(name).unwrap();
+        let p = Program::schedule(&g).unwrap();
+        std::fs::write(
+            dir.join(format!("{name}.json")),
+            program_to_json(&g, &p).to_string_pretty(),
+        )
+        .unwrap();
+    }
+    let service = OverlayService::builder()
+        .backend(BackendKind::Turbo)
+        .pipelines(1)
+        .kernels_from_artifacts(&dir)
+        .build()
+        .unwrap();
+    let g = bench_suite::load("gradient").unwrap();
+    let packet = vec![3, -1, 4, 1, -5];
+    assert_eq!(
+        service.kernel("gradient").unwrap().call(&packet).unwrap(),
+        eval(&g, &packet)
+    );
+    service.shutdown().unwrap();
+
+    // Corrupt one: structural schedule damage (ii bump — kind 0 is
+    // always applicable and always must_reject).
+    let p = Program::schedule(&g).unwrap();
+    let doc = program_to_json(&g, &p);
+    let mut rng = Rng::new(1);
+    let m = mutate::artifact_mutant(&doc, 0, &mut rng).unwrap();
+    assert!(m.must_reject);
+    std::fs::write(dir.join("gradient.json"), m.doc.to_string_pretty()).unwrap();
+
+    let err = OverlayService::builder()
+        .backend(BackendKind::Turbo)
+        .pipelines(1)
+        .kernels_from_artifacts(&dir)
+        .build()
+        .unwrap_err();
+    match err {
+        ServiceError::InvalidKernel { ref kernel, ref detail } => {
+            assert_eq!(kernel, "gradient");
+            assert!(detail.contains("verify"), "detail lacks provenance: {detail}");
+        }
+        other => panic!("expected InvalidKernel, got {other:?}"),
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}

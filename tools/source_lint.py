@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Textual lint gates for the concurrent runtime (DESIGN.md §12).
+
+Rules — scoped to the directories where the invariants actually bite
+(`rust/src/wire/`, `rust/src/router/`, `rust/src/coordinator/`):
+
+1. **relaxed-ok**: every `Ordering::Relaxed` must carry a
+   `relaxed-ok:` annotation (same line, or in the contiguous run of
+   comment/`Relaxed` lines immediately above it) explaining why the
+   weakest ordering is sufficient. Ledger/inflight counters must use
+   Release/Acquire; un-annotated Relaxed is how they silently regress.
+
+2. **no poisoning panics**: `.lock().unwrap()` / `.lock().expect(` are
+   banned — one panicked thread must not cascade through every later
+   locker. Use `crate::util::sync::LockExt::lock_unpoisoned()`.
+
+3. **checked casts in the frame codec**: in `rust/src/wire/mod.rs`
+   (codec proper, up to `mod tests`), bare `as` numeric casts are
+   banned unless annotated `cast-ok:` (same line or the line above).
+   Decode paths must use `try_from`/`usize::from` so a hostile length
+   prefix cannot silently truncate. (`clippy::cast_possible_truncation`
+   warns on the narrowing subset; this rule also covers widening casts
+   so every remaining `as` carries its justification.)
+
+Exit status: 0 clean, 1 with findings (one line each:
+`path:line: rule: message`).
+
+Usage: python3 tools/source_lint.py [--root DIR]
+"""
+
+import argparse
+import os
+import re
+import sys
+
+LINT_DIRS = ("rust/src/wire", "rust/src/router", "rust/src/coordinator")
+
+RELAXED = re.compile(r"Ordering::Relaxed")
+RELAXED_OK = re.compile(r"relaxed-ok:")
+LOCK_UNWRAP = re.compile(r"\.lock\(\)\s*\.\s*(unwrap|expect)\s*\(")
+NUMERIC_CAST = re.compile(
+    r"\bas\s+(u8|u16|u32|u64|u128|usize|i8|i16|i32|i64|i128|isize|f32|f64)\b"
+)
+CAST_OK = re.compile(r"cast-ok:")
+COMMENT = re.compile(r"^\s*//")
+
+
+def relaxed_is_annotated(lines, i):
+    """`lines[i]` contains Ordering::Relaxed. Annotated iff the line
+    itself, or any comment in the contiguous run of comment/Relaxed
+    lines directly above it, says `relaxed-ok:`."""
+    if RELAXED_OK.search(lines[i]):
+        return True
+    j = i - 1
+    while j >= 0 and (COMMENT.match(lines[j]) or RELAXED.search(lines[j])):
+        if RELAXED_OK.search(lines[j]):
+            return True
+        j -= 1
+    return False
+
+
+def cast_is_annotated(lines, i):
+    if CAST_OK.search(lines[i]):
+        return True
+    return i > 0 and CAST_OK.search(lines[i - 1]) is not None
+
+
+def lint_file(path, rel, findings):
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().split("\n")
+
+    codec_end = len(lines)  # rule 3 stops at the test module
+    if rel == "rust/src/wire/mod.rs":
+        for i, line in enumerate(lines):
+            if line.startswith("mod tests {"):
+                codec_end = i
+                break
+
+    for i, line in enumerate(lines):
+        if RELAXED.search(line) and not relaxed_is_annotated(lines, i):
+            findings.append(
+                f"{rel}:{i + 1}: relaxed-ordering: Ordering::Relaxed without a "
+                "`relaxed-ok:` justification (ledger/inflight counters need "
+                "Release/Acquire)"
+            )
+        if LOCK_UNWRAP.search(line):
+            findings.append(
+                f"{rel}:{i + 1}: lock-unwrap: .lock().unwrap()/.expect() "
+                "cascades poison; use util::sync::LockExt::lock_unpoisoned()"
+            )
+        if (
+            rel == "rust/src/wire/mod.rs"
+            and i < codec_end
+            and NUMERIC_CAST.search(line)
+            and not cast_is_annotated(lines, i)
+        ):
+            findings.append(
+                f"{rel}:{i + 1}: bare-cast: `as` numeric cast in the frame "
+                "codec without a `cast-ok:` annotation (use try_from / "
+                "usize::from)"
+            )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=".", help="repository root")
+    args = ap.parse_args()
+
+    findings = []
+    scanned = 0
+    for d in LINT_DIRS:
+        base = os.path.join(args.root, d)
+        if not os.path.isdir(base):
+            print(f"source_lint: missing directory {d}", file=sys.stderr)
+            return 2
+        for dirpath, _, names in os.walk(base):
+            for name in sorted(names):
+                if not name.endswith(".rs"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, args.root).replace(os.sep, "/")
+                lint_file(path, rel, findings)
+                scanned += 1
+
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"source_lint: {len(findings)} finding(s) in {scanned} file(s)")
+        return 1
+    print(f"source_lint: clean ({scanned} files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

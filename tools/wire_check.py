@@ -44,6 +44,7 @@ EC = {
     "disconnected": 7,
     "backend": 8,
     "unavailable": 9,
+    "invalid_kernel": 10,
     "version_mismatch": 100,
     "malformed": 101,
 }
@@ -131,6 +132,9 @@ def enc_error(rid, code, *fields):
     elif code == "backend":
         backend, message = fields
         body += string(backend) + string(message)
+    elif code == "invalid_kernel":
+        kernel, detail = fields
+        body += string(kernel) + string(detail)
     elif code == "version_mismatch":
         lo, hi = fields
         body += u16(lo) + u16(hi)
@@ -179,6 +183,10 @@ GOLDEN = [
     ("health_ok", enc_health_ok(14, HEALTH_SERVING, 3)),
     ("drain", enc_drain(15)),
     ("error_unavailable", enc_error(16, "unavailable", "fir")),
+    (
+        "error_invalid_kernel",
+        enc_error(17, "invalid_kernel", "poly6", "tape: dst slot 9 out of range"),
+    ),
 ]
 
 # Hex copies of the vectors embedded in the Rust test. Regenerate with
@@ -200,6 +208,10 @@ EXPECTED_HEX = {
     "health_ok": "0c0e000000000000000003000000",
     "drain": "0d0f00000000000000",
     "error_unavailable": "081000000000000000090003000000666972",
+    "error_invalid_kernel": (
+        "0811000000000000000a0005000000706f6c79361d000000746170653a2064"
+        "737420736c6f742039206f7574206f662072616e6765"
+    ),
 }
 
 

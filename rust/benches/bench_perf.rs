@@ -15,13 +15,17 @@
 //!        fronting the wire backend — the JSON reports the added
 //!        per-call store-and-forward overhead of the fault-tolerant
 //!        hop
+//!   B8   tenant fairness: a polite tenant's serial calls while a
+//!        greedy tenant floods the same single-worker service — the
+//!        JSON reports the fair tenant's p99 under abuse, which the
+//!        smoke gate bounds against the flooder's own mean
 //!   L2/L1 PJRT batch execution (artifact-gated)
 //!
 //! Run `TMFU_BENCH_FAST=1 cargo bench` for a quick pass. With
 //! `-- --json <path>` the measurements (plus the headline
 //! turbo-vs-ref speedup on poly6 at batch 1024) are written as JSON —
 //! `make bench` uses this to produce the checked-in perf trajectory
-//! baseline (`BENCH_PR7.json`).
+//! baseline (`BENCH_PR9.json`).
 
 use tmfu_overlay::arch::Pipeline;
 use tmfu_overlay::bench_suite;
@@ -477,6 +481,67 @@ fn main() -> anyhow::Result<()> {
         drop(dk);
         drop(direct);
         server.shutdown();
+        service.shutdown()?;
+    }
+
+    section("B8 tenant fairness (fair-tenant p99 under an abusive flood)");
+    {
+        // One worker so the DRR scheduler is the only thing standing
+        // between the polite tenant and the flood; equal weights, so
+        // the isolation measured is round-robin fairness alone.
+        let service = OverlayService::builder()
+            .backend(BackendKind::Turbo)
+            .pipelines(1)
+            .max_batch(4)
+            .queue_depth(1 << 17)
+            .tenant("greedy")
+            .tenant("polite")
+            .build()?;
+        let greedy = service.kernel_for("gradient", "greedy")?;
+        let polite = service.kernel_for("gradient", "polite")?;
+        let inputs = [3, 5, 2, 7, 1];
+        let flood_rows = 256usize;
+        let flood = FlatBatch::from_rows(
+            inputs.len(),
+            &vec![inputs.to_vec(); flood_rows],
+        );
+        // Dump the abuse up front (64 batches, 16k rows), then run the
+        // polite tenant's serial round trips against the backlog.
+        let pending: Vec<_> = (0..64)
+            .map(|_| greedy.submit_batch(&flood))
+            .collect::<Result<_, _>>()?;
+        let m = b.run_with_items("service::call(gradient) fair tenant under flood", 1.0, || {
+            polite.call(black_box(&inputs)).unwrap()
+        });
+        println!("{}   (items = requests)", report.record(m).report_line());
+        for p in pending {
+            p.wait()?;
+        }
+        let snap = service.metrics();
+        let polite_t = snap
+            .per_tenant
+            .iter()
+            .find(|t| t.name == "polite")
+            .expect("polite tenant in snapshot");
+        let greedy_t = snap
+            .per_tenant
+            .iter()
+            .find(|t| t.name == "greedy")
+            .expect("greedy tenant in snapshot");
+        let p99 = polite_t.latency_us.as_ref().map_or(0.0, |l| l.p99);
+        let abusive_mean = greedy_t.latency_us.as_ref().map_or(0.0, |l| l.mean);
+        report.set_meta("fair_tenant_p99_under_abuse_us", json::f(p99));
+        report.set_meta(
+            "fair_tenant_rejections",
+            // cast-ok: a rejection count is bounded far below i64::MAX.
+            json::i(polite_t.rejected as i64),
+        );
+        report.set_meta("abusive_tenant_mean_us", json::f(abusive_mean));
+        println!(
+            "\nfair-tenant p99 under abuse: {p99:.1} us (abusive tenant mean \
+             {abusive_mean:.1} us, fair rejections {})",
+            polite_t.rejected
+        );
         service.shutdown()?;
     }
 

@@ -63,10 +63,11 @@ use crate::service::ServiceError;
 use crate::util::json::{self, Json};
 use crate::util::prng::Rng;
 use crate::wire::{
-    read_frame_patient, write_frame, Frame, ListenAddr, PatientRead, WireStream, HEALTH_DRAINING,
-    WIRE_VERSION_MAX, WIRE_VERSION_MIN,
+    read_frame_patient, write_frame, Frame, ListenAddr, PatientRead, TenantToken, WireStream,
+    HEALTH_DRAINING, WIRE_VERSION_MAX, WIRE_VERSION_MIN,
 };
 use std::io::{BufReader, BufWriter, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -652,12 +653,27 @@ fn reader_loop(shared: Arc<ClientShared>, mut r: BufReader<WireStream>) {
 // Client
 // ---------------------------------------------------------------------
 
+/// Fresh token nonces: wall-clock nanoseconds mixed with a process
+/// counter, so two connects in the same nanosecond (or a clock that
+/// stands still in a sandbox) still never reuse a nonce within this
+/// process. Servers burn nonces per tenant, so uniqueness per
+/// (tenant, secret holder) is what matters.
+fn fresh_nonce() -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0, |d| u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    nanos ^ COUNTER.fetch_add(1, Ordering::Relaxed).rotate_left(17)
+}
+
 /// Connection configuration for [`OverlayClient`]; obtained from
 /// [`OverlayClient::builder`].
 #[derive(Debug, Clone)]
 pub struct ClientBuilder {
     connect_timeout: Option<Duration>,
     read_timeout: Option<Duration>,
+    tenant: Option<String>,
+    secret: Option<Vec<u8>>,
 }
 
 impl Default for ClientBuilder {
@@ -672,7 +688,26 @@ impl ClientBuilder {
         ClientBuilder {
             connect_timeout: Some(Duration::from_secs(30)),
             read_timeout: Some(Duration::from_secs(30)),
+            tenant: None,
+            secret: None,
         }
+    }
+
+    /// Tenant name to authenticate as. Takes effect together with
+    /// [`Self::secret`]: when both are set, the Hello carries a signed
+    /// [`TenantToken`] (wire v2). A name without a secret is sent as
+    /// an unsigned attribution label only when the server runs with
+    /// auth off — auth-required servers refuse it.
+    pub fn tenant(mut self, name: &str) -> ClientBuilder {
+        self.tenant = Some(name.to_string());
+        self
+    }
+
+    /// Shared secret for [`Self::tenant`] (the server holds the same
+    /// bytes in its `--tenants` keyring).
+    pub fn secret(mut self, secret: &[u8]) -> ClientBuilder {
+        self.secret = Some(secret.to_vec());
+        self
     }
 
     /// TCP connect timeout; `None` falls back to the OS default.
@@ -744,7 +779,14 @@ impl OverlayClient {
         read_half
             .set_read_timeout(cfg.read_timeout)
             .map_err(|e| wire_err("set read timeout", e))?;
-        // Synchronous handshake before any concurrency exists.
+        // Synchronous handshake before any concurrency exists. A
+        // configured tenant signs a fresh-nonce token into the Hello;
+        // without a secret the MAC is over empty bytes — a pure
+        // attribution label that only an auth-off server accepts.
+        let token = cfg.tenant.as_deref().map(|name| {
+            let secret: &[u8] = cfg.secret.as_deref().unwrap_or(&[]);
+            TenantToken::sign(name, secret, fresh_nonce())
+        });
         let mut writer = BufWriter::new(stream);
         write_frame(
             &mut writer,
@@ -752,6 +794,7 @@ impl OverlayClient {
                 id: 0,
                 min: WIRE_VERSION_MIN,
                 max: WIRE_VERSION_MAX,
+                token,
             },
         )
         .and_then(|()| writer.flush())

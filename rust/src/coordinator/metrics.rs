@@ -26,8 +26,14 @@
 //! Per-kernel traffic is a dense `Vec<u64>` indexed by
 //! [`KernelId`] — recording a batch bumps one integer instead of
 //! allocating a `String` key for a map (the last per-batch allocation
-//! on the worker's reply path).
+//! on the worker's reply path). Per-tenant accounting follows the
+//! same dense pattern, indexed by [`TenantId`]: each tenant carries
+//! its own admitted/rejected/completed/failed ledger (the fairness
+//! suite asserts `admitted == completed + failed` per tenant after a
+//! drain) plus a latency sample buffer for per-tenant percentiles —
+//! the observable half of the DRR fairness guarantee.
 
+use super::queue::TenantId;
 use crate::exec::KernelId;
 use crate::util::stats::Samples;
 use crate::util::sync::LockExt;
@@ -53,17 +59,43 @@ struct Heavy {
     queue_wait_us: Samples,
     /// Completed requests per kernel, dense by [`KernelId`].
     per_kernel: Vec<u64>,
+    /// Reply latency per tenant, dense by [`TenantId`] — the fairness
+    /// suite's per-tenant p99 comes from here.
+    tenant_latency_us: Vec<Samples>,
     /// Simulated overlay fabric time (µs at 300 MHz), incl. switches.
     fabric_busy_us: f64,
     /// Simulated time spent on context switching only.
     fabric_switch_us: f64,
 }
 
+/// One tenant's admission ledger, all atomics (the submit path and
+/// settlement probes never lock). Invariant after a drain:
+/// `admitted == completed + failed` (rejected requests were never
+/// admitted and appear only in `rejected`).
+#[derive(Debug)]
+struct TenantLedger {
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+}
+
+impl TenantLedger {
+    fn new() -> TenantLedger {
+        TenantLedger {
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        }
+    }
+}
+
 /// The engine's shared metrics accumulator.
 #[derive(Debug)]
 pub(crate) struct Metrics {
     completed: AtomicU64,
-    /// Requests refused by admission control (bounded queues).
+    /// Requests refused by admission control (bounded queues/quotas).
     rejected: AtomicU64,
     /// Admitted requests whose execution failed (replied `Err`).
     failed: AtomicU64,
@@ -74,12 +106,15 @@ pub(crate) struct Metrics {
     /// reply window (excluding this accumulator's own sample pushes).
     /// Zero in steady state — the bench hard-asserts it.
     worker_allocs: AtomicU64,
+    /// Per-tenant ledgers, dense by [`TenantId`].
+    tenants: Vec<TenantLedger>,
     heavy: Mutex<Heavy>,
 }
 
 impl Metrics {
-    /// Sized by the kernel registry (per-kernel traffic is dense).
-    pub(crate) fn new(n_kernels: usize) -> Metrics {
+    /// Sized by the kernel registry and the tenant table (both dense).
+    pub(crate) fn new(n_kernels: usize, n_tenants: usize) -> Metrics {
+        assert!(n_tenants >= 1, "at least the default tenant");
         Metrics {
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -88,10 +123,12 @@ impl Metrics {
             batch_size_sum: AtomicU64::new(0),
             context_switches: AtomicU64::new(0),
             worker_allocs: AtomicU64::new(0),
+            tenants: (0..n_tenants).map(|_| TenantLedger::new()).collect(),
             heavy: Mutex::new(Heavy {
                 latency_us: Samples::new(),
                 queue_wait_us: Samples::new(),
                 per_kernel: vec![0; n_kernels],
+                tenant_latency_us: (0..n_tenants).map(|_| Samples::new()).collect(),
                 fabric_busy_us: 0.0,
                 fabric_switch_us: 0.0,
             }),
@@ -99,11 +136,14 @@ impl Metrics {
     }
 
     /// Record one executed batch of `n` requests: counters (atomic),
-    /// then one lock for the sample pushes and fabric accounting.
-    /// `waits_us` yields the per-request enqueue→reply latency.
+    /// then one lock for the sample pushes and fabric accounting. A
+    /// batch is tenant-affine by construction (it came out of one DRR
+    /// lane), so one [`TenantId`] covers every row. `waits_us` yields
+    /// the per-request enqueue→reply latency.
     pub(crate) fn record_batch(
         &self,
         kernel: KernelId,
+        tenant: TenantId,
         n: usize,
         timing: BatchTiming,
         waits_us: impl Iterator<Item = f64>,
@@ -117,6 +157,10 @@ impl Metrics {
         // shutdown/drain probes check from other threads, so the bump
         // publishes (Release) and probes observe (Acquire).
         self.completed.fetch_add(n as u64, Ordering::Release);
+        // Ledger counter: per-tenant settlement, same contract.
+        self.tenants[tenant.index()]
+            .completed
+            .fetch_add(n as u64, Ordering::Release);
         if timing.switched {
             // relaxed-ok: reporting statistic only.
             self.context_switches.fetch_add(1, Ordering::Relaxed);
@@ -128,28 +172,55 @@ impl Metrics {
             h.fabric_busy_us += timing.switch_us;
         }
         h.fabric_busy_us += timing.exec_us_sim;
+        let Heavy {
+            latency_us,
+            queue_wait_us,
+            tenant_latency_us,
+            ..
+        } = &mut *h;
+        let tenant_latency = &mut tenant_latency_us[tenant.index()];
         for wait in waits_us {
-            h.latency_us.push(wait);
-            h.queue_wait_us.push(wait - timing.exec_us_sim.min(wait));
+            latency_us.push(wait);
+            tenant_latency.push(wait);
+            queue_wait_us.push(wait - timing.exec_us_sim.min(wait));
         }
     }
 
-    /// Count `n` admission-control rejections (lock-free — this sits
-    /// on the submit path).
-    pub(crate) fn record_rejected(&self, n: u64) {
+    /// Count `n` requests admitted past both bounds for `tenant`
+    /// (lock-free — this sits on the submit path). The per-tenant
+    /// ledger's debit side: everything admitted must eventually land
+    /// in `completed` or `failed`.
+    pub(crate) fn record_admitted(&self, tenant: TenantId, n: u64) {
+        // Ledger counter (see `completed`): settlement probes read it
+        // cross-thread, so publish with Release.
+        self.tenants[tenant.index()]
+            .admitted
+            .fetch_add(n, Ordering::Release);
+    }
+
+    /// Count `n` admission-control rejections for `tenant` (lock-free
+    /// — this sits on the submit path).
+    pub(crate) fn record_rejected(&self, tenant: TenantId, n: u64) {
         // Ledger counter (see `completed`): settlement probes read it
         // cross-thread, so publish with Release.
         self.rejected.fetch_add(n, Ordering::Release);
+        self.tenants[tenant.index()]
+            .rejected
+            .fetch_add(n, Ordering::Release);
     }
 
-    /// Count `n` admitted requests that failed in execution. Kept
-    /// separate from [`Self::record_batch`] so failed requests appear
-    /// in exactly one counter (`admitted == completed + failed`) and
-    /// never as a phantom zero-size batch.
-    pub(crate) fn record_failed(&self, n: u64) {
+    /// Count `n` admitted requests of `tenant` that failed in
+    /// execution. Kept separate from [`Self::record_batch`] so failed
+    /// requests appear in exactly one counter
+    /// (`admitted == completed + failed`) and never as a phantom
+    /// zero-size batch.
+    pub(crate) fn record_failed(&self, tenant: TenantId, n: u64) {
         // Ledger counter (see `completed`): settlement probes read it
         // cross-thread, so publish with Release.
         self.failed.fetch_add(n, Ordering::Release);
+        self.tenants[tenant.index()]
+            .failed
+            .fetch_add(n, Ordering::Release);
     }
 
     /// Count `n` heap allocations observed on a worker's dispatch path
@@ -196,11 +267,35 @@ impl Metrics {
             latency_us: h.latency_us.clone(),
             queue_wait_us: h.queue_wait_us.clone(),
             per_kernel: h.per_kernel.clone(),
+            per_tenant: self
+                .tenants
+                .iter()
+                .zip(h.tenant_latency_us.iter())
+                .map(|(t, lat)| RawTenant {
+                    // Ledger reads pair with the Release bumps above.
+                    admitted: t.admitted.load(Ordering::Acquire),
+                    rejected: t.rejected.load(Ordering::Acquire),
+                    completed: t.completed.load(Ordering::Acquire),
+                    failed: t.failed.load(Ordering::Acquire),
+                    latency_us: lat.clone(),
+                })
+                .collect(),
             fabric_busy_us: h.fabric_busy_us,
             fabric_switch_us: h.fabric_switch_us,
             wall: Duration::ZERO,
         }
     }
+}
+
+/// One tenant's detached ledger + latency samples, dense by
+/// [`TenantId`] alongside the service layer's tenant-name table.
+#[derive(Debug, Clone)]
+pub(crate) struct RawTenant {
+    pub(crate) admitted: u64,
+    pub(crate) rejected: u64,
+    pub(crate) completed: u64,
+    pub(crate) failed: u64,
+    pub(crate) latency_us: Samples,
 }
 
 /// A plain-data copy of the accumulator, detached from every lock.
@@ -220,6 +315,8 @@ pub(crate) struct RawMetrics {
     pub(crate) queue_wait_us: Samples,
     /// Completed requests per kernel, dense by [`KernelId`].
     pub(crate) per_kernel: Vec<u64>,
+    /// Per-tenant ledgers + latency, dense by [`TenantId`].
+    pub(crate) per_tenant: Vec<RawTenant>,
     pub(crate) fabric_busy_us: f64,
     pub(crate) fabric_switch_us: f64,
     pub(crate) wall: Duration,
@@ -239,6 +336,9 @@ impl RawMetrics {
 mod tests {
     use super::*;
 
+    const T0: TenantId = TenantId(0);
+    const T1: TenantId = TenantId(1);
+
     fn timing(switched: bool, switch_us: f64, exec_us_sim: f64) -> BatchTiming {
         BatchTiming {
             switched,
@@ -249,9 +349,9 @@ mod tests {
 
     #[test]
     fn records_batches() {
-        let m = Metrics::new(2);
-        m.record_batch(KernelId(0), 4, timing(true, 0.27, 1.0), std::iter::empty());
-        m.record_batch(KernelId(0), 2, timing(false, 0.0, 0.5), std::iter::empty());
+        let m = Metrics::new(2, 1);
+        m.record_batch(KernelId(0), T0, 4, timing(true, 0.27, 1.0), std::iter::empty());
+        m.record_batch(KernelId(0), T0, 2, timing(false, 0.0, 0.5), std::iter::empty());
         let raw = m.raw_snapshot();
         assert_eq!(raw.completed, 6);
         assert_eq!(raw.batches, 2);
@@ -263,10 +363,10 @@ mod tests {
 
     #[test]
     fn records_rejections_and_failures() {
-        let m = Metrics::new(1);
-        m.record_rejected(1);
-        m.record_rejected(3);
-        m.record_failed(2);
+        let m = Metrics::new(1, 1);
+        m.record_rejected(T0, 1);
+        m.record_rejected(T0, 3);
+        m.record_failed(T0, 2);
         let raw = m.raw_snapshot();
         assert_eq!(raw.rejected, 4);
         assert_eq!(m.rejected(), 4);
@@ -278,8 +378,41 @@ mod tests {
     }
 
     #[test]
+    fn tenant_ledgers_are_independent_and_balance() {
+        let m = Metrics::new(1, 2);
+        // T0: 6 admitted → 4 completed + 2 failed; 3 rejected at the
+        // door. T1: 2 admitted → 2 completed, nothing else.
+        m.record_admitted(T0, 6);
+        m.record_rejected(T0, 3);
+        m.record_batch(KernelId(0), T0, 4, timing(false, 0.0, 1.0), [8.0; 4].into_iter());
+        m.record_failed(T0, 2);
+        m.record_admitted(T1, 2);
+        m.record_batch(KernelId(0), T1, 2, timing(false, 0.0, 1.0), [3.0; 2].into_iter());
+        let raw = m.raw_snapshot();
+        let t0 = &raw.per_tenant[0];
+        assert_eq!(
+            (t0.admitted, t0.rejected, t0.completed, t0.failed),
+            (6, 3, 4, 2)
+        );
+        assert_eq!(t0.admitted, t0.completed + t0.failed);
+        let t1 = &raw.per_tenant[1];
+        assert_eq!(
+            (t1.admitted, t1.rejected, t1.completed, t1.failed),
+            (2, 0, 2, 0)
+        );
+        // Per-tenant latency buffers are separate from the global one.
+        assert_eq!(raw.latency_us.len(), 6);
+        assert_eq!(raw.per_tenant[0].latency_us.len(), 4);
+        assert_eq!(raw.per_tenant[1].latency_us.len(), 2);
+        // Global counters are the sums.
+        assert_eq!(raw.completed, 6);
+        assert_eq!(raw.rejected, 3);
+        assert_eq!(raw.failed, 2);
+    }
+
+    #[test]
     fn worker_alloc_audit_accumulates() {
-        let m = Metrics::new(1);
+        let m = Metrics::new(1, 1);
         m.record_worker_allocs(0);
         assert_eq!(m.worker_allocs(), 0);
         m.record_worker_allocs(3);
@@ -290,11 +423,12 @@ mod tests {
 
     #[test]
     fn waits_feed_both_distributions() {
-        let m = Metrics::new(1);
+        let m = Metrics::new(1, 1);
         // exec 3.0us: a 10us wait spent 7us queued; a 2us wait (reply
         // beat the model) clamps to 0 queue time, never negative.
         m.record_batch(
             KernelId(0),
+            T0,
             2,
             timing(true, 0.2, 3.0),
             [10.0, 2.0].into_iter(),
@@ -310,13 +444,13 @@ mod tests {
 
     #[test]
     fn snapshot_is_detached_from_the_accumulator() {
-        let m = Metrics::new(1);
-        m.record_batch(KernelId(0), 1, timing(false, 0.0, 1.0), [5.0].into_iter());
+        let m = Metrics::new(1, 1);
+        m.record_batch(KernelId(0), T0, 1, timing(false, 0.0, 1.0), [5.0].into_iter());
         let mut snap = m.raw_snapshot();
         // Sorting the snapshot (what percentile computation does)
         // must not disturb the live accumulator.
         let _ = snap.latency_us.summarize();
-        m.record_batch(KernelId(0), 1, timing(false, 0.0, 1.0), [1.0].into_iter());
+        m.record_batch(KernelId(0), T0, 1, timing(false, 0.0, 1.0), [1.0].into_iter());
         let raw2 = m.raw_snapshot();
         assert_eq!(raw2.completed, 2);
         assert_eq!(raw2.latency_us.len(), 2);

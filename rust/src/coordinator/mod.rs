@@ -71,19 +71,51 @@ use anyhow::{Context, Result};
 use completion::{CompletionSlab, RowSpan, Ticket, WakeTarget};
 use metrics::{BatchTiming, Metrics, RawMetrics};
 use queue::{Queued, QueueSet};
+pub(crate) use queue::TenantId;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Instant;
 
-/// Why a submit was refused at the door (before any queueing).
+/// Why a submit was refused at the door (before any queueing). A
+/// `Full` rejection reports whichever bound tripped — the submitting
+/// tenant's quota or the kernel's global depth; the service layer
+/// attributes the tenant (its `KernelHandle` knows which lane it
+/// submitted on).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum SubmitRejection {
     /// The engine is shut down (or draining) — no new admissions.
     ShutDown,
-    /// The kernel's queue is at its depth limit.
+    /// The tenant's quota or the kernel's queue is at its limit.
     Full { queued: usize, limit: usize },
+}
+
+/// One tenant's admission policy, index-aligned with the dense
+/// [`TenantId`] table (entry 0 is the default tenant). Filled in by
+/// the service builder from `tenant_weight` / `tenant_quota` knobs or
+/// a `tmfu listen --tenants` file.
+#[derive(Debug, Clone)]
+pub(crate) struct TenantSpec {
+    pub(crate) name: String,
+    /// DRR scheduling weight (≥ 1): rows served per round relative to
+    /// other saturated tenants.
+    pub(crate) weight: u32,
+    /// Admission quota in rows across every kernel (≥ 1).
+    pub(crate) quota: usize,
+}
+
+impl TenantSpec {
+    /// The catch-all lane: weight 1, quota unbounded (only the global
+    /// per-kernel depth binds) — single-tenant engines behave exactly
+    /// as before tenancy existed.
+    pub(crate) fn default_tenant() -> TenantSpec {
+        TenantSpec {
+            name: "default".to_string(),
+            weight: 1,
+            quota: usize::MAX,
+        }
+    }
 }
 
 /// State shared between the submit ports, the workers and the engine
@@ -112,9 +144,12 @@ impl Shared {
     /// that kernel's output arity and shapes the reply slot). Returns
     /// the slab ticket the reply arrives under. Allocation-free in
     /// steady state: the slot, its buffers, and the queue entry all
-    /// recycle.
+    /// recycle. Admission checks the tenant's quota first, then the
+    /// kernel's global depth — the rejection reports whichever bound
+    /// tripped.
     pub(crate) fn submit(
         &self,
+        tenant: TenantId,
         id: KernelId,
         inputs: &[i32],
         n_outputs: usize,
@@ -124,11 +159,9 @@ impl Shared {
         if st.shutdown {
             return Err(SubmitRejection::ShutDown);
         }
-        if st.qs.queued_for(id) >= st.qs.depth() {
-            let queued = st.qs.queued_for(id);
-            let limit = st.qs.depth();
+        if let Err((queued, limit)) = admit(&st.qs, tenant, id, 1) {
             drop(st);
-            self.metrics.record_rejected(1);
+            self.metrics.record_rejected(tenant, 1);
             return Err(SubmitRejection::Full { queued, limit });
         }
         let ticket = self.slab.reserve(inputs, n_outputs, waker);
@@ -140,10 +173,11 @@ impl Shared {
                 len: 1,
             },
         };
-        if st.qs.try_push(id, entry).is_err() {
+        if st.qs.try_push_for(tenant, id, entry).is_err() {
             unreachable!("admission capacity checked above");
         }
         drop(st);
+        self.metrics.record_admitted(tenant, 1);
         self.cv.notify_one();
         Ok(ticket)
     }
@@ -157,6 +191,7 @@ impl Shared {
     /// their row budget ([`QueueSet::take_batch_into`]).
     pub(crate) fn submit_batch(
         &self,
+        tenant: TenantId,
         id: KernelId,
         batch: &FlatBatch,
         n_outputs: usize,
@@ -167,11 +202,9 @@ impl Shared {
         if st.shutdown {
             return Err(SubmitRejection::ShutDown);
         }
-        let queued = st.qs.queued_for(id);
-        let limit = st.qs.depth();
-        if queued + n > limit {
+        if let Err((queued, limit)) = admit(&st.qs, tenant, id, n) {
             drop(st);
-            self.metrics.record_rejected(n as u64);
+            self.metrics.record_rejected(tenant, n as u64);
             return Err(SubmitRejection::Full { queued, limit });
         }
         let ticket = self.slab.reserve_batch(batch, n_outputs, waker);
@@ -186,11 +219,12 @@ impl Shared {
                     len: n as u32,
                 },
             };
-            if st.qs.try_push(id, entry).is_err() {
+            if st.qs.try_push_for(tenant, id, entry).is_err() {
                 unreachable!("batch admission capacity checked above");
             }
         }
         drop(st);
+        self.metrics.record_admitted(tenant, n as u64);
         self.cv.notify_all();
         Ok(ticket)
     }
@@ -199,6 +233,30 @@ impl Shared {
     pub(crate) fn is_shut_down(&self) -> bool {
         self.queues.lock_unpoisoned().shutdown
     }
+}
+
+/// Check both admission bounds for `n` rows without mutating anything:
+/// the tenant's quota first (its private share), then the kernel's
+/// global depth. Returns the `(queued, limit)` pair of whichever bound
+/// tripped, so the typed rejection reports the number the caller can
+/// act on.
+fn admit(
+    qs: &QueueSet<RowSpan>,
+    tenant: TenantId,
+    id: KernelId,
+    n: usize,
+) -> Result<(), (usize, usize)> {
+    let tenant_queued = qs.tenant_queued(tenant);
+    let quota = qs.tenant_quota(tenant);
+    if tenant_queued.saturating_add(n) > quota {
+        return Err((tenant_queued, quota));
+    }
+    let queued = qs.queued_for(id);
+    let depth = qs.depth();
+    if queued + n > depth {
+        return Err((queued, depth));
+    }
+    Ok(())
 }
 
 /// Engine construction parameters (filled in by the service builder).
@@ -212,8 +270,12 @@ pub(crate) struct EngineConfig {
     pub(crate) workers: usize,
     /// Maximum batch a worker takes per dispatch.
     pub(crate) max_batch: usize,
-    /// Per-kernel queue bound (admission control).
+    /// Per-kernel queue bound (admission control, global across
+    /// tenants).
     pub(crate) queue_depth: usize,
+    /// Tenant table, index-aligned with [`TenantId`]; entry 0 is the
+    /// default (anonymous) tenant. Never empty.
+    pub(crate) tenants: Vec<TenantSpec>,
     /// Pipeline replicas inside each sim-backend overlay (Fig. 4).
     pub(crate) sim_replicas: usize,
     /// FIFO capacity of each simulated pipeline.
@@ -248,6 +310,10 @@ impl Engine {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
         anyhow::ensure!(cfg.max_batch >= 1, "need a positive max batch");
         anyhow::ensure!(cfg.queue_depth >= 1, "need a positive queue depth");
+        anyhow::ensure!(
+            !cfg.tenants.is_empty(),
+            "need at least the default tenant"
+        );
         // Fail fast when an artifact-backed substrate cannot possibly
         // start (workers would all error after an expensive spawn).
         if cfg.backend.needs_artifacts() {
@@ -258,9 +324,10 @@ impl Engine {
             );
         }
         let registry = Arc::clone(&cfg.registry);
+        let lanes: Vec<(u32, usize)> = cfg.tenants.iter().map(|t| (t.weight, t.quota)).collect();
         let shared = Arc::new(Shared {
             queues: Mutex::new(QueueState {
-                qs: QueueSet::new(registry.len(), cfg.queue_depth),
+                qs: QueueSet::with_tenants(registry.len(), cfg.queue_depth, &lanes),
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -270,7 +337,7 @@ impl Engine {
                 (cfg.workers * 2).clamp(4, 64),
                 cfg.slab_trim_words,
             ),
-            metrics: Metrics::new(registry.len()),
+            metrics: Metrics::new(registry.len(), cfg.tenants.len()),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut workers = Vec::new();
@@ -436,7 +503,7 @@ fn worker_loop(
                 st = shared.cv.wait(st).unwrap();
             }
         };
-        let Some(batch_kernel) = taken else {
+        let Some((batch_kernel, batch_tenant)) = taken else {
             return Ok(());
         };
         // Zero-allocation audit, bracket 1 of 2: take → metrics
@@ -451,7 +518,9 @@ fn worker_loop(
             // this registry); kept as a structured reply so a future
             // ingress path cannot hang callers.
             let err = ExecError::UnknownKernel(batch_kernel.to_string());
-            shared.metrics.record_failed(spans.iter().map(|s| s.len as u64).sum());
+            shared
+                .metrics
+                .record_failed(batch_tenant, spans.iter().map(|s| s.len as u64).sum());
             shared.slab.complete_spans_err(&spans, &err);
             items.clear();
             continue;
@@ -474,7 +543,7 @@ fn worker_loop(
             };
             shared
                 .metrics
-                .record_failed(bad.iter().map(|s| s.len as u64).sum());
+                .record_failed(batch_tenant, bad.iter().map(|s| s.len as u64).sum());
             shared.slab.complete_spans_err(&bad, &err);
             items.retain(|it| !bad.contains(&it.token));
             spans.retain(|s| !bad.contains(s));
@@ -491,7 +560,7 @@ fn worker_loop(
         let model_cycles = match exec::fabric_exec_cycles(kernel, n) {
             Ok(c) => c,
             Err(e) => {
-                shared.metrics.record_failed(n as u64);
+                shared.metrics.record_failed(batch_tenant, n as u64);
                 shared.slab.complete_spans_err(&spans, &e);
                 items.clear();
                 continue;
@@ -530,7 +599,7 @@ fn worker_loop(
                                 kernel.n_outputs
                             ),
                         };
-                        shared.metrics.record_failed(n as u64);
+                        shared.metrics.record_failed(batch_tenant, n as u64);
                         shared.slab.complete_spans_err(&spans, &e);
                         replied = true;
                         return;
@@ -564,6 +633,7 @@ fn worker_loop(
                     let bracket1 = thread_alloc_count() - allocs_at_take;
                     shared.metrics.record_batch(
                         batch_kernel,
+                        batch_tenant,
                         n,
                         BatchTiming {
                             switched,
@@ -589,7 +659,7 @@ fn worker_loop(
                     // mean_batch_size). No switch is claimed either:
                     // the backend may have failed before any context
                     // load happened.
-                    shared.metrics.record_failed(n as u64);
+                    shared.metrics.record_failed(batch_tenant, n as u64);
                     shared.slab.complete_spans_err(&spans, &e);
                     replied = true;
                 }
@@ -601,7 +671,7 @@ fn worker_loop(
                     backend: "engine",
                     message: "worker panicked while executing the batch".to_string(),
                 };
-                shared.metrics.record_failed(n as u64);
+                shared.metrics.record_failed(batch_tenant, n as u64);
                 shared.slab.complete_spans_err(&spans, &err);
             }
             std::panic::resume_unwind(payload);
@@ -623,6 +693,7 @@ mod tests {
             workers,
             max_batch,
             queue_depth: 1024,
+            tenants: vec![TenantSpec::default_tenant()],
             sim_replicas: 1,
             sim_fifo_capacity: 4096,
             slab_trim_words: completion::DEFAULT_TRIM_WORDS,
@@ -637,7 +708,7 @@ mod tests {
         let id = eng.registry().id_of("gradient").unwrap();
         let mut tickets = Vec::new();
         for i in 0..20i32 {
-            tickets.push(eng.shared().submit(id, &[3, 5, 2, 7, i], 1, None).unwrap());
+            tickets.push(eng.shared().submit(TenantId::DEFAULT, id, &[3, 5, 2, 7, i], 1, None).unwrap());
         }
         // Drain semantics: shutdown must answer everything already
         // admitted even if nothing has been collected yet.
@@ -665,7 +736,7 @@ mod tests {
         let id = eng.registry().id_of("gradient").unwrap();
         let rows: Vec<Vec<i32>> = (0..131i32).map(|i| vec![3, 5, 2, 7, i]).collect();
         let batch = FlatBatch::from_rows(5, &rows);
-        let t = eng.shared().submit_batch(id, &batch, 1, None).unwrap();
+        let t = eng.shared().submit_batch(TenantId::DEFAULT, id, &batch, 1, None).unwrap();
         let mut out = FlatBatch::default();
         eng.shared()
             .slab
@@ -693,12 +764,12 @@ mod tests {
         eng.shutdown().unwrap();
         assert!(shared.is_shut_down());
         assert_eq!(
-            shared.submit(id, &[0; 5], 1, None).unwrap_err(),
+            shared.submit(TenantId::DEFAULT, id, &[0; 5], 1, None).unwrap_err(),
             SubmitRejection::ShutDown
         );
         let batch = FlatBatch::from_rows(5, &[vec![0; 5]]);
         assert_eq!(
-            shared.submit_batch(id, &batch, 1, None).unwrap_err(),
+            shared.submit_batch(TenantId::DEFAULT, id, &batch, 1, None).unwrap_err(),
             SubmitRejection::ShutDown
         );
     }
@@ -712,6 +783,7 @@ mod tests {
             workers: 1,
             max_batch: 4,
             queue_depth: 2,
+            tenants: vec![TenantSpec::default_tenant()],
             sim_replicas: 1,
             sim_fifo_capacity: 4096,
             slab_trim_words: completion::DEFAULT_TRIM_WORDS,
@@ -723,7 +795,7 @@ mod tests {
         // deterministically Full regardless of worker progress.
         let rows: Vec<Vec<i32>> = (0..3).map(|_| vec![0; 5]).collect();
         let batch = FlatBatch::from_rows(5, &rows);
-        match eng.shared().submit_batch(id, &batch, 1, None) {
+        match eng.shared().submit_batch(TenantId::DEFAULT, id, &batch, 1, None) {
             Err(SubmitRejection::Full { limit, .. }) => assert_eq!(limit, 2),
             other => panic!("expected Full, got {other:?}"),
         }
@@ -744,6 +816,7 @@ mod tests {
             workers: 1,
             max_batch: 4,
             queue_depth: 16,
+            tenants: vec![TenantSpec::default_tenant()],
             sim_replicas: 1,
             sim_fifo_capacity: 4096,
             slab_trim_words: completion::DEFAULT_TRIM_WORDS,

@@ -1,16 +1,14 @@
 //! Request queues + batching policy (pure logic, tested without PJRT).
 //!
-//! The dispatcher maintains one FIFO queue per kernel context, indexed
-//! by dense [`KernelId`] — names are interned once at ingress, so a
-//! push moves a `u32` and a small `Copy` token, never a `String`, and
-//! batch selection is a linear scan over a fixed-size vector instead
-//! of a `BTreeMap` walk. (The previous map-keyed design also leaked:
-//! an empty per-kernel queue stayed resident forever once its name had
-//! been seen, growing without bound as contexts churned. The dense
-//! layout is bounded by the registry size by construction; each
-//! queue's ring buffer keeps its high-water capacity — bounded by
-//! `depth` entries of a few words each — for the engine's life, and
-//! is freed when the engine drops.)
+//! The dispatcher maintains one FIFO queue per kernel context *per
+//! tenant lane*, indexed by dense [`KernelId`] and [`TenantId`] — names
+//! are interned once at ingress, so a push moves a `u32` and a small
+//! `Copy` token, never a `String`. (The original map-keyed design also
+//! leaked: an empty per-kernel queue stayed resident forever once its
+//! name had been seen. The dense layout is bounded by registry size ×
+//! tenant count by construction; each queue's ring buffer keeps its
+//! high-water capacity — bounded by `depth` entries of a few words each
+//! — for the engine's life, and is freed when the engine drops.)
 //!
 //! Since the completion-slab refactor (DESIGN.md §10) a queue entry is
 //! a [`Queued`] — an enqueue timestamp plus an opaque token (a slab
@@ -24,30 +22,65 @@
 //! Tokens are **spans** ([`SpanToken`]): one entry can carry many
 //! contiguous rows of a single slab slot, so a whole-batch submit
 //! enqueues *one* entry regardless of row count. Accounting (`depth`,
-//! [`QueueSet::queued_for`], `total_queued`) is therefore in **rows**,
-//! not entries, and [`QueueSet::take_batch_into`] splits an oversized
-//! front span at the row budget: the taken head rides out with this
-//! worker while the remainder stays at the queue front for the next
-//! idle worker — this is how one 64k-row batch fans out across the
-//! whole worker pool and recombines in the slab by row index.
+//! quotas, [`QueueSet::queued_for`], `total_queued`) is therefore in
+//! **rows**, not entries, and [`QueueSet::take_batch_into`] splits an
+//! oversized front span at the row budget: the taken head rides out
+//! with this worker while the remainder stays at the queue front for
+//! the next idle worker — this is how one 64k-row batch fans out across
+//! the whole worker pool and recombines in the slab by row index.
 //!
-//! Queues are **bounded**: every queue carries the same `depth` limit
-//! (in rows) and [`QueueSet::try_push`] refuses to grow past it,
-//! handing the request back to the caller. This is the mechanical half
-//! of the service layer's admission control — a client that outruns
-//! the fabric gets an explicit `Rejected` reply instead of unbounded
-//! memory growth and unbounded latency.
+//! ## Multi-tenant admission and fairness (DESIGN.md §13)
 //!
-//! Workers (overlay pipelines) pick batches with **context affinity**:
-//! a worker holding kernel K's context prefers K's queue — switching
-//! contexts is cheap on this overlay (sub-µs, the paper's headline)
-//! but never free, and affinity also models the BRAM-resident data
-//! staging of Fig. 4. When the worker's context has no work it steals
-//! the deepest queue in rows (weighted by age to prevent starvation).
+//! Every push is attributed to a **tenant lane**. Admission enforces
+//! two bounds and both are checked before anything is mutated: the
+//! tenant's row **quota** (its private share of queue memory) and the
+//! original per-kernel **depth** (the global bound, preserved so the
+//! fabric's backlog stays bounded no matter how many tenants exist).
+//! A request refused by either bound is handed back to the caller —
+//! the service layer turns that into a typed `Rejected { tenant, … }`.
+//!
+//! Batch selection runs **weighted deficit round-robin over lanes**,
+//! layered on the per-kernel steal-score policy *within* the chosen
+//! lane. Lanes with queued work sit in a ring; the front lane's deficit
+//! is replenished to `weight × max_batch` rows when it reaches the
+//! head, each take spends deficit row-for-row, and a lane that
+//! exhausts its deficit rotates to the back. A saturating tenant
+//! therefore gets exactly its weighted share of takes while light
+//! tenants' rows never wait behind more than one round of heavier
+//! lanes — a greedy tenant cannot starve a polite one.
+//!
+//! The pick is **O(active tenants + non-empty kernels in the chosen
+//! lane)**: empty lanes leave the ring eagerly, and each lane keeps a
+//! dense list of its non-empty kernels so the steal-score scan (rows +
+//! age bonus, unchanged from the single-tenant design) never iterates
+//! the whole registry. This is the hoisted accounting that replaced
+//! the old full-registry rebuild on every `take_batch_into`.
+//!
+//! Workers (overlay pipelines) still pick with **context affinity**
+//! inside the chosen lane: a worker holding kernel K's context prefers
+//! K's queue — switching contexts is cheap on this overlay (sub-µs,
+//! the paper's headline) but never free, and affinity also models the
+//! BRAM-resident data staging of Fig. 4. Affinity never overrides the
+//! lane choice: fairness ranks above context reuse.
 
 use crate::exec::KernelId;
 use std::collections::VecDeque;
 use std::time::Instant;
+
+/// Dense tenant index, interned by the service layer alongside kernel
+/// names. Index 0 is always the default tenant (anonymous/loopback
+/// traffic when auth is off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct TenantId(pub u32);
+
+impl TenantId {
+    /// The catch-all lane for unauthenticated traffic.
+    pub(crate) const DEFAULT: TenantId = TenantId(0);
+
+    pub(crate) fn index(self) -> usize {
+        self.0 as usize
+    }
+}
 
 /// A queue token that carries one or more contiguous rows and can be
 /// split at a row boundary. Splitting is what lets a worker take a
@@ -82,25 +115,78 @@ pub(crate) struct Queued<T> {
     pub(crate) token: T,
 }
 
-/// Per-kernel FIFO queues, dense over the kernel registry, each
-/// bounded at `depth` **rows** (entries are spans of ≥ 1 rows).
+/// One tenant's private slice of the queue set: per-kernel FIFOs, row
+/// accounting, its DRR weight/deficit, and its admission quota.
+#[derive(Debug)]
+struct Lane<T> {
+    queues: Vec<VecDeque<Queued<T>>>,
+    /// Queued rows per kernel within this lane.
+    kernel_rows: Vec<usize>,
+    /// Dense, unordered list of kernels with queued entries — the
+    /// steal-score scan walks this instead of the whole registry.
+    nonempty: Vec<u32>,
+    /// Total rows queued in this lane.
+    queued: usize,
+    weight: u64,
+    quota: usize,
+    /// Remaining DRR row budget while this lane sits at the ring head.
+    deficit: u64,
+    in_ring: bool,
+}
+
+impl<T> Lane<T> {
+    fn new(n_kernels: usize, weight: u64, quota: usize) -> Self {
+        Lane {
+            queues: (0..n_kernels).map(|_| VecDeque::new()).collect(),
+            kernel_rows: vec![0; n_kernels],
+            nonempty: Vec::new(),
+            queued: 0,
+            weight,
+            quota,
+            deficit: 0,
+            in_ring: false,
+        }
+    }
+}
+
+/// Per-kernel, per-tenant FIFO queues, dense over the kernel registry
+/// and the tenant table. Each kernel is bounded globally at `depth`
+/// **rows** and each tenant lane at its own quota.
 #[derive(Debug)]
 pub(crate) struct QueueSet<T> {
-    queues: Vec<VecDeque<Queued<T>>>,
-    /// Queued rows per kernel (an entry may span many rows).
+    lanes: Vec<Lane<T>>,
+    /// DRR ring of lane indices with queued work, served front-first.
+    ring: VecDeque<u32>,
+    /// Queued rows per kernel across every lane (the global bound).
     rows: Vec<usize>,
     depth: usize,
-    /// Total rows queued across every kernel.
+    /// Total rows queued across every kernel and lane.
     pub(crate) total_queued: usize,
 }
 
 impl<T: SpanToken> QueueSet<T> {
-    /// One queue per registry kernel, each admitting at most `depth`
-    /// waiting rows.
+    /// Single-tenant set: one default lane with an unbounded quota,
+    /// so only the global per-kernel depth binds — byte-for-byte the
+    /// pre-tenant admission behavior.
     pub(crate) fn new(n_kernels: usize, depth: usize) -> Self {
+        Self::with_tenants(n_kernels, depth, &[(1, usize::MAX)])
+    }
+
+    /// One lane per `(weight, quota)` tenant entry, index-aligned with
+    /// the service layer's tenant table (entry 0 is the default lane).
+    pub(crate) fn with_tenants(n_kernels: usize, depth: usize, tenants: &[(u32, usize)]) -> Self {
         assert!(depth >= 1, "queue depth must be positive");
+        assert!(!tenants.is_empty(), "at least the default tenant");
+        for &(weight, quota) in tenants {
+            assert!(weight >= 1, "tenant weight must be positive");
+            assert!(quota >= 1, "tenant quota must be positive");
+        }
         Self {
-            queues: (0..n_kernels).map(|_| VecDeque::new()).collect(),
+            lanes: tenants
+                .iter()
+                .map(|&(weight, quota)| Lane::new(n_kernels, u64::from(weight), quota))
+                .collect(),
+            ring: VecDeque::new(),
             rows: vec![0; n_kernels],
             depth,
             total_queued: 0,
@@ -108,25 +194,60 @@ impl<T: SpanToken> QueueSet<T> {
     }
 
     pub(crate) fn n_kernels(&self) -> usize {
-        self.queues.len()
+        self.rows.len()
     }
 
-    /// Per-kernel admission bound, in rows.
+    /// Per-kernel admission bound, in rows (global across tenants).
     pub(crate) fn depth(&self) -> usize {
         self.depth
     }
 
-    /// Enqueue one request span, or hand it back when admitting its
-    /// rows would push the kernel's queue past the depth limit (the
-    /// admission-control path). `kernel` must come from the registry
-    /// this set was sized for (ingress interns and validates names).
+    /// Rows queued by `tenant` across every kernel (what quota
+    /// admission compares to [`QueueSet::tenant_quota`]).
+    pub(crate) fn tenant_queued(&self, tenant: TenantId) -> usize {
+        self.lanes[tenant.index()].queued
+    }
+
+    /// `tenant`'s admission quota, in rows.
+    pub(crate) fn tenant_quota(&self, tenant: TenantId) -> usize {
+        self.lanes[tenant.index()].quota
+    }
+
+    /// Default-lane push — the single-tenant API, kept for the policy
+    /// tests and any caller that predates tenancy.
+    #[cfg(test)]
     pub(crate) fn try_push(&mut self, kernel: KernelId, q: Queued<T>) -> Result<(), Queued<T>> {
+        self.try_push_for(TenantId::DEFAULT, kernel, q)
+    }
+
+    /// Enqueue one request span for `tenant`, or hand it back when
+    /// admitting its rows would breach either the tenant's quota or
+    /// the kernel's global depth (the admission-control path). Both
+    /// bounds are checked before any state changes, so a refused push
+    /// is a true no-op. `kernel` and `tenant` must come from the
+    /// registry/table this set was sized for.
+    pub(crate) fn try_push_for(
+        &mut self,
+        tenant: TenantId,
+        kernel: KernelId,
+        q: Queued<T>,
+    ) -> Result<(), Queued<T>> {
         let n = q.token.rows();
         debug_assert!(n > 0, "zero-row spans are completed at reserve time");
-        if self.rows[kernel.index()] + n > self.depth {
+        let lane = &mut self.lanes[tenant.index()];
+        if lane.queued + n > lane.quota || self.rows[kernel.index()] + n > self.depth {
             return Err(q);
         }
-        self.queues[kernel.index()].push_back(q);
+        if lane.kernel_rows[kernel.index()] == 0 {
+            lane.nonempty.push(kernel.0);
+        }
+        lane.queues[kernel.index()].push_back(q);
+        lane.kernel_rows[kernel.index()] += n;
+        lane.queued += n;
+        if !lane.in_ring {
+            lane.in_ring = true;
+            self.ring.push_back(tenant.0);
+        }
         self.rows[kernel.index()] += n;
         self.total_queued += n;
         Ok(())
@@ -136,14 +257,20 @@ impl<T: SpanToken> QueueSet<T> {
         self.total_queued == 0
     }
 
-    /// Rows queued for `kernel` (what admission compares to `depth`).
+    /// Rows queued for `kernel` across every tenant (what global
+    /// admission compares to `depth`).
     pub(crate) fn queued_for(&self, kernel: KernelId) -> usize {
         self.rows[kernel.index()]
     }
 
-    /// Batching policy: prefer the worker's current context if it has
-    /// work; otherwise the queue with the highest (rows + age bonus)
-    /// score. Takes up to `max_batch` **rows** FIFO into `out`
+    /// Batching policy, two levels. **Lane**: weighted deficit
+    /// round-robin — the ring's front lane is served until its deficit
+    /// (replenished to `weight × max_batch` rows on arrival at the
+    /// head) runs dry, then rotates to the back; lanes that empty
+    /// leave the ring. **Kernel within the lane**: prefer the worker's
+    /// current context if it has work there; otherwise the lane's
+    /// non-empty kernel with the highest (rows + age bonus) score.
+    /// Takes up to `min(max_batch, deficit)` **rows** FIFO into `out`
     /// (cleared first), which the worker reuses across batches —
     /// dispatch performs no per-batch allocation in steady state.
     ///
@@ -153,57 +280,97 @@ impl<T: SpanToken> QueueSet<T> {
     /// iteration of this one) picks up where this take stopped, and
     /// one oversized batch fans out across every idle worker.
     ///
-    /// Returns the chosen kernel, or `None` when nothing is queued.
+    /// Returns the chosen kernel and the tenant whose lane it came
+    /// from, or `None` when nothing is queued.
     pub(crate) fn take_batch_into(
         &mut self,
         current_context: Option<KernelId>,
         max_batch: usize,
         now: Instant,
         out: &mut Vec<Queued<T>>,
-    ) -> Option<KernelId> {
+    ) -> Option<(KernelId, TenantId)> {
         out.clear();
         if self.is_empty() {
             return None;
         }
+        // Empty lanes leave the ring eagerly on take, so the front is
+        // always serviceable; the loop is defensive, not load-bearing.
+        let lane_idx = loop {
+            let li = *self.ring.front()? as usize;
+            if self.lanes[li].queued > 0 {
+                break li;
+            }
+            self.ring.pop_front();
+            self.lanes[li].in_ring = false;
+        };
+        let lane = &mut self.lanes[lane_idx];
+        if lane.deficit == 0 {
+            lane.deficit = lane.weight * max_batch as u64;
+        }
+        // cast-ok: deficit starts ≤ weight×max_batch and only shrinks,
+        // so min(max_batch as u64, deficit) fits back in usize.
+        let budget = (max_batch as u64).min(lane.deficit) as usize;
+
         let kernel = match current_context {
-            Some(k) if self.queued_for(k) > 0 => k,
+            Some(k) if lane.kernel_rows[k.index()] > 0 => k,
             _ => {
                 let score = |i: usize| {
                     let age_ms = now
-                        .duration_since(self.queues[i].front().unwrap().enqueued)
+                        .duration_since(lane.queues[i].front().unwrap().enqueued)
                         .as_secs_f64()
                         * 1e3;
-                    self.rows[i] as f64 + age_ms * 0.1
+                    lane.kernel_rows[i] as f64 + age_ms * 0.1
                 };
-                (0..self.queues.len())
-                    .filter(|&i| !self.queues[i].is_empty())
+                lane.nonempty
+                    .iter()
                     // total_cmp: scores are finite here, but a NaN-safe
                     // total order costs nothing and cannot panic.
-                    .max_by(|&a, &b| score(a).total_cmp(&score(b)))
-                    .map(|i| KernelId(i as u32))?
+                    .max_by(|&&a, &&b| score(a as usize).total_cmp(&score(b as usize)))
+                    .map(|&i| KernelId(i))?
             }
         };
-        let q = &mut self.queues[kernel.index()];
+        let q = &mut lane.queues[kernel.index()];
         let mut taken = 0usize;
-        while taken < max_batch {
+        while taken < budget {
             let Some(front) = q.front_mut() else { break };
             let span_rows = front.token.rows();
             debug_assert!(span_rows > 0, "zero-row span in queue");
-            if span_rows <= max_batch - taken {
+            if span_rows <= budget - taken {
                 taken += span_rows;
                 out.push(q.pop_front().unwrap());
             } else {
                 let head = Queued {
                     enqueued: front.enqueued,
-                    token: front.token.take_front(max_batch - taken),
+                    token: front.token.take_front(budget - taken),
                 };
-                taken = max_batch;
+                taken = budget;
                 out.push(head);
             }
         }
+        lane.kernel_rows[kernel.index()] -= taken;
+        if lane.kernel_rows[kernel.index()] == 0 {
+            let pos = lane
+                .nonempty
+                .iter()
+                .position(|&i| i == kernel.0)
+                .expect("drained kernel is tracked as non-empty");
+            lane.nonempty.swap_remove(pos);
+        }
+        lane.queued -= taken;
+        lane.deficit -= taken as u64;
+        if lane.queued == 0 {
+            lane.in_ring = false;
+            lane.deficit = 0;
+            self.ring.pop_front();
+        } else if lane.deficit == 0 {
+            let front = self.ring.pop_front().expect("served lane was at front");
+            self.ring.push_back(front);
+        }
         self.rows[kernel.index()] -= taken;
         self.total_queued -= taken;
-        Some(kernel)
+        // cast-ok: lane indices come from the ring, which only holds
+        // indices of the lanes vec (sized from a u32-indexed table).
+        Some((kernel, TenantId(lane_idx as u32)))
     }
 }
 
@@ -228,7 +395,7 @@ mod tests {
         max: usize,
     ) -> Option<(KernelId, Vec<Queued<T>>)> {
         let mut out = Vec::new();
-        let k = qs.take_batch_into(ctx, max, Instant::now(), &mut out)?;
+        let (k, _tenant) = qs.take_batch_into(ctx, max, Instant::now(), &mut out)?;
         Some((k, out))
     }
 
@@ -438,5 +605,148 @@ mod tests {
         // The set stays usable afterwards.
         qs.try_push(B, pend(1)).unwrap();
         assert_eq!(qs.queued_for(B), 1);
+    }
+
+    // ── Tenant lanes: quotas + weighted deficit round-robin ─────────
+
+    const T0: TenantId = TenantId(0);
+    const T1: TenantId = TenantId(1);
+
+    #[test]
+    fn drr_pick_order_is_pinned_for_a_known_table() {
+        // Weight 2 vs weight 1, one kernel, 24 vs 12 queued rows,
+        // max_batch 4. DRR must serve the heavy lane two full batches
+        // per round and the light lane one: 0,0,1, 0,0,1, 0,0,1 —
+        // deterministic, no clocks involved, both lanes drain dry on
+        // the same round.
+        let mut qs: QueueSet<u32> = QueueSet::with_tenants(1, 64, &[(2, 64), (1, 64)]);
+        for i in 0..12 {
+            qs.try_push_for(T0, A, pend(i)).unwrap();
+            qs.try_push_for(T0, A, pend(50 + i)).unwrap();
+            qs.try_push_for(T1, A, pend(100 + i)).unwrap();
+        }
+        let mut order = Vec::new();
+        let mut out = Vec::new();
+        while let Some((_k, tenant)) = qs.take_batch_into(None, 4, Instant::now(), &mut out) {
+            assert_eq!(out.len(), 4, "every take drains a full batch here");
+            order.push(tenant.0);
+        }
+        assert_eq!(order, vec![0, 0, 1, 0, 0, 1, 0, 0, 1]);
+        assert!(qs.is_empty());
+    }
+
+    #[test]
+    fn weighted_lanes_drain_proportionally_under_saturation() {
+        // Both lanes saturated: after any whole number of DRR rounds
+        // the heavy lane has drained twice the rows of the light one.
+        let mut qs: QueueSet<u32> = QueueSet::with_tenants(1, 1024, &[(2, 512), (1, 512)]);
+        for i in 0..300 {
+            qs.try_push_for(T0, A, pend(i)).unwrap();
+            qs.try_push_for(T1, A, pend(1000 + i)).unwrap();
+        }
+        let mut drained = [0usize; 2];
+        let mut out = Vec::new();
+        for _ in 0..9 {
+            let (_k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+            drained[t.index()] += out.len();
+        }
+        // 9 takes = 3 whole rounds of (heavy, heavy, light).
+        assert_eq!(drained[0], 48);
+        assert_eq!(drained[1], 24);
+    }
+
+    #[test]
+    fn tenant_quota_rejects_without_touching_other_lanes() {
+        let mut qs: QueueSet<u32> = QueueSet::with_tenants(1, 16, &[(1, 16), (1, 2)]);
+        qs.try_push_for(T1, A, pend(1)).unwrap();
+        qs.try_push_for(T1, A, pend(2)).unwrap();
+        // T1's quota (2 rows) is full: handed back, nothing mutated.
+        let back = qs.try_push_for(T1, A, pend(3)).unwrap_err();
+        assert_eq!(back.token, 3);
+        assert_eq!(qs.tenant_queued(T1), 2);
+        assert_eq!(qs.tenant_quota(T1), 2);
+        // The default lane still admits against the global depth.
+        for i in 0..14 {
+            qs.try_push_for(T0, A, pend(10 + i)).unwrap();
+        }
+        assert_eq!(qs.queued_for(A), 16);
+    }
+
+    #[test]
+    fn global_depth_holds_across_lanes() {
+        // Per-kernel depth is global: two tenants with roomy quotas
+        // still cannot queue more than `depth` rows for one kernel.
+        let mut qs: QueueSet<u32> = QueueSet::with_tenants(1, 8, &[(1, 8), (1, 8)]);
+        for i in 0..5 {
+            qs.try_push_for(T0, A, pend(i)).unwrap();
+        }
+        for i in 0..3 {
+            qs.try_push_for(T1, A, pend(10 + i)).unwrap();
+        }
+        let back = qs.try_push_for(T1, A, pend(99)).unwrap_err();
+        assert_eq!(back.token, 99);
+        assert_eq!(qs.queued_for(A), 8);
+        assert_eq!(qs.tenant_queued(T1), 3);
+    }
+
+    #[test]
+    fn light_lane_is_never_starved_by_a_flooding_one() {
+        // A greedy lane with 500 queued rows and a polite lane with 4:
+        // the polite lane's rows surface within two DRR rounds, not
+        // after the flood drains.
+        let mut qs: QueueSet<u32> = QueueSet::with_tenants(1, 1024, &[(1, 1000), (1, 16)]);
+        for i in 0..500 {
+            qs.try_push_for(T0, A, pend(i)).unwrap();
+        }
+        for i in 0..4 {
+            qs.try_push_for(T1, A, pend(9000 + i)).unwrap();
+        }
+        let mut out = Vec::new();
+        let mut takes_until_polite = 0;
+        loop {
+            let (_k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+            takes_until_polite += 1;
+            if t == T1 {
+                break;
+            }
+        }
+        assert!(
+            takes_until_polite <= 2,
+            "polite lane waited {takes_until_polite} takes behind the flood"
+        );
+    }
+
+    #[test]
+    fn lane_deficit_carries_across_partial_takes() {
+        // A lane whose chosen kernel runs dry mid-budget keeps the
+        // ring head and spends its remaining deficit on its other
+        // kernel before rotating — the deficit is per lane, not per
+        // take.
+        let mut qs: QueueSet<u32> = QueueSet::with_tenants(2, 64, &[(1, 64), (1, 64)]);
+        for i in 0..3 {
+            qs.try_push_for(T0, A, pend(i)).unwrap();
+        }
+        for i in 0..8 {
+            qs.try_push_for(T0, B, pend(10 + i)).unwrap();
+        }
+        qs.try_push_for(T1, A, pend(99)).unwrap();
+        let mut out = Vec::new();
+        // Affinity steers the first take to kernel A, which runs dry
+        // at 3 of the 8-row deficit: the lane keeps the ring head.
+        let (k, t) = qs.take_batch_into(Some(A), 8, Instant::now(), &mut out).unwrap();
+        assert_eq!((k, t), (A, T0));
+        assert_eq!(out.len(), 3);
+        // Remaining deficit (5) caps the next take from the same lane.
+        let (k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+        assert_eq!((k, t), (B, T0));
+        assert_eq!(out.len(), 5);
+        // Deficit spent: the lane rotated behind T1.
+        let (k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+        assert_eq!((k, t), (A, T1));
+        assert_eq!(out.len(), 1);
+        let (k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+        assert_eq!((k, t), (B, T0));
+        assert_eq!(out.len(), 3);
+        assert!(qs.is_empty());
     }
 }

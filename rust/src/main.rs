@@ -24,12 +24,13 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use tmfu_overlay::client::{Backoff, OverlayClient};
+use tmfu_overlay::client::{Backoff, ClientBuilder, OverlayClient};
 use tmfu_overlay::exec::BackendKind;
 use tmfu_overlay::router::{retryable, Router, RouterConfig};
 use tmfu_overlay::service::{OverlayService, ServiceError};
 use tmfu_overlay::util::cli::{Command, Matches};
 use tmfu_overlay::util::prng::Rng;
+use tmfu_overlay::wire::auth::TenantKeyring;
 use tmfu_overlay::wire::server::{install_sigterm_drain, ServerCtl, WireServer};
 use tmfu_overlay::wire::ListenAddr;
 use tmfu_overlay::{bench_suite, dfg, frontend, report, sched};
@@ -101,6 +102,12 @@ fn commands() -> Vec<Command> {
                 "max-conns",
                 "exit after this many connections; single transport only (0 = run forever)",
                 Some("0"),
+            )
+            .opt(
+                "tenants",
+                "tenant keyring file (name:secret[:weight[:quota]] per line); \
+                 requires signed Hellos when set",
+                None,
             ),
         Command::new("call", "call a kernel on a 'tmfu listen' server or a router")
             .positional("kernel", "kernel name (see 'list')")
@@ -109,6 +116,8 @@ fn commands() -> Vec<Command> {
             .opt("count", "submit the call this many times (burst mode)", Some("1"))
             .opt("retries", "reconnect-and-retry budget on retryable failures", Some("0"))
             .opt("timeout-ms", "overall deadline across all retries", Some("30000"))
+            .opt("tenant", "tenant name to authenticate as", None)
+            .opt("secret", "shared secret for --tenant (signs the Hello)", None)
             .flag("metrics", "also fetch and print the server metrics JSON"),
         Command::new("router", "fault-tolerant front for replicated 'tmfu listen' backends")
             .opt(
@@ -120,7 +129,9 @@ fn commands() -> Vec<Command> {
             .opt("socket", "unix socket path (empty disables)", Some(""))
             .opt("probe-ms", "health-probe period per backend", Some("2000"))
             .opt("retries", "per-call re-dispatch budget", Some("4"))
-            .opt("timeout-ms", "per-call deadline", Some("30000")),
+            .opt("timeout-ms", "per-call deadline", Some("30000"))
+            .opt("tenant", "tenant to authenticate as on downstream backends", None)
+            .opt("secret", "shared secret for --tenant", None),
     ]
 }
 
@@ -316,21 +327,45 @@ fn listen(m: &Matches) -> anyhow::Result<()> {
         "--max-conns needs exactly one transport (disable the other with --tcp= or --socket=)"
     );
 
-    let service = Arc::new(
-        OverlayService::builder()
-            .backend(backend)
-            .artifacts_dir(m.get("artifacts").unwrap().to_string())
-            .pipelines(pipelines)
-            .max_batch(batch)
-            .queue_depth(queue_depth)
-            .build()?,
-    );
+    // A keyring file switches the server to auth-required mode: every
+    // connection must present a Hello signed by one of these tenants,
+    // and each tenant gets its own DRR lane (weight) and admission
+    // quota straight from the file.
+    let keyring = match m.get("tenants") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--tenants {path}: {e}"))?;
+            Some(Arc::new(
+                TenantKeyring::parse(&text).map_err(|e| anyhow::anyhow!("--tenants {path}: {e}"))?,
+            ))
+        }
+        None => None,
+    };
+    let mut builder = OverlayService::builder()
+        .backend(backend)
+        .artifacts_dir(m.get("artifacts").unwrap().to_string())
+        .pipelines(pipelines)
+        .max_batch(batch)
+        .queue_depth(queue_depth);
+    if let Some(keyring) = &keyring {
+        for entry in keyring.entries() {
+            builder = builder
+                .tenant_weight(&entry.name, entry.weight)
+                .tenant_quota(&entry.name, entry.quota);
+        }
+    }
+    let service = Arc::new(builder.build()?);
     let limit = (max_conns > 0).then_some(max_conns);
     // One control across every bound transport, plus the SIGTERM hook:
     // a Drain frame on either listener (or a SIGTERM) drains them
     // together — in-flight replies finish, then the process exits 0.
     install_sigterm_drain();
     let ctl = ServerCtl::new();
+    if let Some(keyring) = keyring {
+        let n = keyring.entries().len();
+        ctl.set_auth(keyring);
+        println!("tenant auth required ({n} tenant(s) in the keyring)");
+    }
     let mut servers = Vec::new();
     for addr in &addrs {
         let server =
@@ -383,6 +418,8 @@ fn router(m: &Matches) -> anyhow::Result<()> {
     cfg.probe_interval = Duration::from_millis(probe_ms as u64);
     cfg.max_retries = retries as u32;
     cfg.call_deadline = Duration::from_millis(timeout_ms as u64);
+    cfg.tenant = m.get("tenant").map(String::from);
+    cfg.secret = m.get("secret").map(|s| s.as_bytes().to_vec());
     install_sigterm_drain();
     let router = Router::start(cfg, &addr)?;
     println!(
@@ -417,6 +454,17 @@ fn call(m: &Matches) -> anyhow::Result<()> {
     let retries = m.get_usize("retries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let timeout_ms = m.get_usize("timeout-ms").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     anyhow::ensure!(count >= 1, "--count must be at least 1");
+    let mut builder = OverlayClient::builder();
+    if let Some(tenant) = m.get("tenant") {
+        builder = builder.tenant(tenant);
+    }
+    if let Some(secret) = m.get("secret") {
+        anyhow::ensure!(
+            m.get("tenant").is_some(),
+            "--secret needs --tenant (who is this secret for?)"
+        );
+        builder = builder.secret(secret.as_bytes());
+    }
     let deadline = Instant::now() + Duration::from_millis(timeout_ms as u64);
     // Same retry policy as the router: capped exponential backoff,
     // only for failures classified retryable, all under one deadline.
@@ -424,7 +472,7 @@ fn call(m: &Matches) -> anyhow::Result<()> {
     let mut done = 0usize;
     let mut attempt = 0usize;
     let out = loop {
-        match call_round(addr, kernel, &inputs, count - done, deadline) {
+        match call_round(&builder, addr, kernel, &inputs, count - done, deadline) {
             Ok(row) => break row,
             Err((ok, e)) => {
                 done += ok;
@@ -450,7 +498,7 @@ fn call(m: &Matches) -> anyhow::Result<()> {
         eprintln!("{count} calls completed");
     }
     if m.flag("metrics") {
-        let client = OverlayClient::connect(addr)?;
+        let client = builder.connect(addr)?;
         println!("{}", client.metrics()?.to_string_pretty());
     }
     Ok(())
@@ -462,13 +510,14 @@ fn call(m: &Matches) -> anyhow::Result<()> {
 /// succeed plus the first typed error (the retry loop's classifier
 /// input).
 fn call_round(
+    builder: &ClientBuilder,
     addr: &str,
     kernel: &str,
     inputs: &[i32],
     n: usize,
     deadline: Instant,
 ) -> Result<Vec<i32>, (usize, ServiceError)> {
-    let client = OverlayClient::connect(addr).map_err(|e| (0, e))?;
+    let client = builder.connect(addr).map_err(|e| (0, e))?;
     let remote = client.kernel(kernel).map_err(|e| (0, e))?;
     let mut first_err: Option<ServiceError> = None;
     let mut pendings = Vec::with_capacity(n);

@@ -42,8 +42,8 @@ use crate::util::json::Json;
 use crate::wire::server::{
     bind_listener, frame_name, malformed, sigterm_drain_requested, unknown_kernel, ServerCtl,
 };
-use crate::wire::{
 use crate::util::sync::LockExt;
+use crate::wire::{
     read_frame_patient, write_frame, Frame, ListenAddr, PatientRead, WireError, WireStream,
     HEALTH_DRAINING, HEALTH_SERVING, WIRE_VERSION_MAX, WIRE_VERSION_MIN,
 };
@@ -79,6 +79,14 @@ pub struct RouterConfig {
     pub connect_timeout: Duration,
     /// Downstream client read-silence bound.
     pub read_timeout: Duration,
+    /// Tenant the router authenticates *as* on every downstream
+    /// connection (auth-required backends). Upstream tokens are
+    /// attribution labels only — each downstream Hello needs a fresh
+    /// nonce, so the router signs with its own credentials rather
+    /// than replaying a client's.
+    pub tenant: Option<String>,
+    /// Shared secret for [`Self::tenant`].
+    pub secret: Option<Vec<u8>>,
 }
 
 impl RouterConfig {
@@ -92,6 +100,8 @@ impl RouterConfig {
             backoff_cap: Duration::from_secs(2),
             connect_timeout: Duration::from_secs(5),
             read_timeout: Duration::from_secs(30),
+            tenant: None,
+            secret: None,
         }
     }
 
@@ -102,6 +112,8 @@ impl RouterConfig {
             backoff_cap: self.backoff_cap,
             connect_timeout: self.connect_timeout,
             read_timeout: self.read_timeout,
+            tenant: self.tenant.clone(),
+            secret: self.secret.clone(),
         }
     }
 }
@@ -391,6 +403,9 @@ enum DownPending {
 /// `deadline`).
 struct ForwardEntry {
     name: String,
+    /// Attribution label from the upstream Hello token ("default" for
+    /// anonymous connections); keys the per-tenant inflight gauge.
+    tenant: Arc<str>,
     payload: Payload,
     deadline: Instant,
     /// Dispatch attempts performed so far (first attempt included).
@@ -519,12 +534,15 @@ fn admit(
     fwd: &Arc<FwdShared>,
     id: u64,
     name: String,
+    tenant: Arc<str>,
     payload: Payload,
 ) {
     shared.metrics.admit();
+    shared.metrics.tenant_admit(&tenant);
     let now = Instant::now();
     let mut entry = ForwardEntry {
         name,
+        tenant,
         payload,
         deadline: now + shared.cfg.call_deadline,
         dispatches: 0,
@@ -551,6 +569,7 @@ fn admit(
         }
         Err(e) => {
             shared.metrics.fail(1);
+            shared.metrics.tenant_settle(&entry.tenant);
             fwd.push_frame(Frame::Error {
                 id,
                 err: WireError::Service(e),
@@ -558,11 +577,13 @@ fn admit(
             return;
         }
     }
+    let tenant = Arc::clone(&entry.tenant);
     if !fwd.register(id, entry) {
         // Upstream connection already torn down; dropping the entry
         // abandons any downstream slot. Settled as failed so the
         // ledger still balances.
         shared.metrics.fail(1);
+        shared.metrics.tenant_settle(&tenant);
     }
 }
 
@@ -602,10 +623,19 @@ fn dispatch(
 }
 
 /// Account for admitted entries a dying connection can never answer.
-fn settle_failed(shared: &RouterShared, fwd: &FwdShared, n: usize) {
+fn settle_failed<'a>(
+    shared: &RouterShared,
+    fwd: &FwdShared,
+    entries: impl Iterator<Item = &'a ForwardEntry>,
+) {
+    let mut n = 0u64;
+    for e in entries {
+        n += 1;
+        shared.metrics.tenant_settle(&e.tenant);
+    }
     if n > 0 {
-        shared.metrics.fail(n as u64);
-        fwd.ctl.inflight_sub(n as u64);
+        shared.metrics.fail(n);
+        fwd.ctl.inflight_sub(n);
     }
 }
 
@@ -636,7 +666,11 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
                 if st.dead {
                     let orphaned = std::mem::take(&mut st.submitted);
                     drop(st);
-                    settle_failed(shared, fwd, inflight.len() + orphaned.len());
+                    settle_failed(
+                        shared,
+                        fwd,
+                        inflight.values().chain(orphaned.iter().map(|(_, e)| e)),
+                    );
                     return;
                 }
                 let now = Instant::now();
@@ -730,7 +764,11 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
             st.dead = true;
             let orphaned = std::mem::take(&mut st.submitted);
             drop(st);
-            settle_failed(shared, fwd, inflight.len() + orphaned.len());
+            settle_failed(
+                shared,
+                fwd,
+                inflight.values().chain(orphaned.iter().map(|(_, e)| e)),
+            );
             return;
         }
     }
@@ -760,8 +798,9 @@ fn poll_entry(
     };
     match polled? {
         Ok(batch) => {
-            inflight.remove(&tag);
+            let entry = inflight.remove(&tag).expect("entry vanished mid-poll");
             shared.metrics.complete();
+            shared.metrics.tenant_settle(&entry.tenant);
             fwd.ctl.inflight_sub(1);
             Some(Frame::Reply { id: tag, batch })
         }
@@ -848,7 +887,9 @@ fn settle(
     match outcome {
         Outcome::Keep => None,
         Outcome::Settle(e) => {
-            inflight.remove(&id);
+            if let Some(entry) = inflight.remove(&id) {
+                shared.metrics.tenant_settle(&entry.tenant);
+            }
             shared.metrics.fail(1);
             fwd.ctl.inflight_sub(1);
             Some(Frame::Error {
@@ -884,8 +925,13 @@ fn serve_forward(
             Err(_) => return,
         }
     };
-    let version = match hello {
-        Frame::Hello { id, min, max } => {
+    let (version, tenant) = match hello {
+        Frame::Hello {
+            id,
+            min,
+            max,
+            token,
+        } => {
             let lo = min.max(WIRE_VERSION_MIN);
             let hi = max.min(WIRE_VERSION_MAX);
             if lo > hi {
@@ -903,7 +949,17 @@ fn serve_forward(
                 version: hi,
                 backend: "router".to_string(),
             });
-            hi
+            // The router holds no keyring: an upstream token is an
+            // *attribution* label for the per-tenant inflight gauge.
+            // Authentication happens downstream, where the router
+            // signs with its own configured credentials (a token's
+            // nonce is single-use, so a client token cannot be
+            // replayed toward the backends anyway).
+            let tenant: Arc<str> = match token {
+                Some(t) => Arc::from(t.tenant.as_str()),
+                None => Arc::from("default"),
+            };
+            (hi, tenant)
         }
         other => {
             fwd.push_frame(malformed(
@@ -958,14 +1014,14 @@ fn serve_forward(
                     fwd.push_frame(unknown_kernel(id, kernel));
                     continue;
                 };
-                admit(shared, fwd, id, name, Payload::Row(inputs));
+                admit(shared, fwd, id, name, Arc::clone(&tenant), Payload::Row(inputs));
             }
             Frame::CallBatch { id, kernel, batch } => {
                 let Some(name) = shared.name_of(kernel) else {
                     fwd.push_frame(unknown_kernel(id, kernel));
                     continue;
                 };
-                admit(shared, fwd, id, name, Payload::Batch(batch));
+                admit(shared, fwd, id, name, Arc::clone(&tenant), Payload::Batch(batch));
             }
             Frame::GetMetrics { id } => {
                 let json = shared.metrics.to_json(&shared.table).to_string_compact();

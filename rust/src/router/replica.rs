@@ -42,6 +42,12 @@ pub struct ReplicaTuning {
     pub connect_timeout: Duration,
     /// Client read-silence bound (see `ClientBuilder::read_timeout`).
     pub read_timeout: Duration,
+    /// Tenant the router authenticates as on this downstream link
+    /// (each reconnect signs a fresh-nonce token). `None` dials
+    /// anonymously — fine against auth-off backends.
+    pub tenant: Option<String>,
+    /// Shared secret for `tenant`.
+    pub secret: Option<Vec<u8>>,
 }
 
 /// A live link: the client plus every kernel session resolved so far.
@@ -209,10 +215,16 @@ impl Replica {
                 self.tuning.probe_interval
             }
             None => {
-                let dial = ClientBuilder::new()
+                let mut builder = ClientBuilder::new()
                     .connect_timeout(Some(self.tuning.connect_timeout))
-                    .read_timeout(Some(self.tuning.read_timeout))
-                    .connect(&self.addr);
+                    .read_timeout(Some(self.tuning.read_timeout));
+                if let Some(tenant) = &self.tuning.tenant {
+                    builder = builder.tenant(tenant);
+                }
+                if let Some(secret) = &self.tuning.secret {
+                    builder = builder.secret(secret);
+                }
+                let dial = builder.connect(&self.addr);
                 match dial {
                     Ok(client) => {
                         self.install(client);
@@ -269,6 +281,8 @@ mod tests {
             backoff_cap: Duration::from_millis(40),
             connect_timeout: Duration::from_millis(200),
             read_timeout: Duration::from_millis(500),
+            tenant: None,
+            secret: None,
         }
     }
 

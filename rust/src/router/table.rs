@@ -20,8 +20,10 @@ use super::replica::Replica;
 use crate::client::RemoteKernel;
 use crate::service::ServiceError;
 use crate::util::json::{self, Json};
+use crate::util::sync::LockExt;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Round-robin selection over the managed replicas.
 pub struct RoutingTable {
@@ -84,11 +86,44 @@ pub struct RouterMetrics {
     completed: AtomicU64,
     failed: AtomicU64,
     retries: AtomicU64,
+    /// Requests currently in flight per tenant label (from the
+    /// upstream Hello token; anonymous connections count under
+    /// "default"). A BTreeMap so the JSON keys come out sorted.
+    tenant_inflight: Mutex<BTreeMap<String, u64>>,
 }
 
 impl RouterMetrics {
     pub fn admit(&self) {
         self.admitted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// One request admitted for `tenant`: bump its inflight gauge.
+    pub fn tenant_admit(&self, tenant: &str) {
+        let mut map = self.tenant_inflight.lock_unpoisoned();
+        match map.get_mut(tenant) {
+            Some(n) => *n += 1,
+            None => {
+                map.insert(tenant.to_string(), 1);
+            }
+        }
+    }
+
+    /// One of `tenant`'s requests settled (reply or typed error):
+    /// drop its inflight gauge. The zero entry stays — "this tenant
+    /// has been seen" is useful in the metrics JSON.
+    pub fn tenant_settle(&self, tenant: &str) {
+        if let Some(n) = self.tenant_inflight.lock_unpoisoned().get_mut(tenant) {
+            *n = n.saturating_sub(1);
+        }
+    }
+
+    /// Current inflight count for `tenant` (0 if never seen).
+    pub fn tenant_inflight(&self, tenant: &str) -> u64 {
+        self.tenant_inflight
+            .lock_unpoisoned()
+            .get(tenant)
+            .copied()
+            .unwrap_or(0)
     }
 
     pub fn complete(&self) {
@@ -129,12 +164,22 @@ impl RouterMetrics {
                 ("epoch", json::i(r.epoch() as i64)),
             ])
         });
+        let tenants: std::collections::BTreeMap<String, Json> = self
+            .tenant_inflight
+            .lock_unpoisoned()
+            .iter()
+            .map(|(name, n)| {
+                // cast-ok: an inflight gauge is bounded far below i64::MAX.
+                (name.clone(), json::i(*n as i64))
+            })
+            .collect();
         json::obj(vec![
             ("role", json::s("router")),
             ("admitted", json::i(self.admitted() as i64)),
             ("completed", json::i(self.completed() as i64)),
             ("failed", json::i(self.failed() as i64)),
             ("retries", json::i(self.retries() as i64)),
+            ("tenants", Json::Obj(tenants)),
             ("backends", json::arr(backends)),
         ])
     }
@@ -153,6 +198,8 @@ mod tests {
             backoff_cap: Duration::from_millis(40),
             connect_timeout: Duration::from_millis(200),
             read_timeout: Duration::from_millis(500),
+            tenant: None,
+            secret: None,
         }
     }
 
@@ -184,5 +231,27 @@ mod tests {
         assert_eq!(j.get("retries").as_i64(), Some(1));
         assert_eq!(j.get("backends").as_arr().map(<[Json]>::len), Some(1));
         assert_eq!(j.get("backends").at(0).get("up").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn tenant_inflight_gauge_tracks_admits_and_settles() {
+        let m = RouterMetrics::default();
+        assert_eq!(m.tenant_inflight("acme"), 0);
+        m.tenant_admit("acme");
+        m.tenant_admit("acme");
+        m.tenant_admit("default");
+        assert_eq!(m.tenant_inflight("acme"), 2);
+        m.tenant_settle("acme");
+        assert_eq!(m.tenant_inflight("acme"), 1);
+        // Settling an unknown tenant (or below zero) never underflows.
+        m.tenant_settle("nonesuch");
+        m.tenant_settle("default");
+        m.tenant_settle("default");
+        assert_eq!(m.tenant_inflight("default"), 0);
+        let table = RoutingTable::new(vec![Replica::new("127.0.0.1:9".to_string(), tuning())]);
+        let j = m.to_json(&table);
+        assert_eq!(j.get("tenants").get("acme").as_i64(), Some(1));
+        // A settled tenant stays visible at zero.
+        assert_eq!(j.get("tenants").get("default").as_i64(), Some(0));
     }
 }

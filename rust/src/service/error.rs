@@ -24,11 +24,14 @@ pub enum ServiceError {
     },
     /// A zero-row batch was handed to `call_batch`.
     EmptyBatch { kernel: String },
-    /// Admission control rejected the request: the kernel's queue is at
-    /// its configured depth limit. Back off and retry — the service
-    /// sheds load here instead of growing queues without bound.
+    /// Admission control rejected the request: the submitting tenant's
+    /// quota or the kernel's configured depth limit is full (`queued`
+    /// and `limit` describe whichever bound tripped). Back off and
+    /// retry — the service sheds load here instead of growing queues
+    /// without bound.
     Rejected {
         kernel: String,
+        tenant: String,
         queued: usize,
         limit: usize,
     },
@@ -74,11 +77,13 @@ impl fmt::Display for ServiceError {
             // queued >= limit.
             ServiceError::Rejected {
                 kernel,
+                tenant,
                 queued,
                 limit,
             } => write!(
                 f,
-                "kernel '{kernel}': admission rejected ({queued} queued, depth limit {limit})"
+                "kernel '{kernel}': admission rejected for tenant '{tenant}' \
+                 ({queued} queued, limit {limit})"
             ),
             ServiceError::ShutDown => write!(f, "service shut down"),
             ServiceError::DeadlineExceeded { kernel } => {
@@ -134,6 +139,7 @@ mod tests {
     fn displays_are_specific() {
         let e = ServiceError::Rejected {
             kernel: "poly6".into(),
+            tenant: "default".into(),
             queued: 8,
             limit: 8,
         };

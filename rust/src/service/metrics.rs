@@ -31,6 +31,20 @@ fn summary_json(s: &LatencySummary) -> Json {
     ])
 }
 
+/// One tenant's slice of the snapshot: the admission ledger (after a
+/// drain, `admitted == completed + failed`) plus that tenant's own
+/// end-to-end latency percentiles — the observable half of the
+/// weighted-fairness guarantee.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMetrics {
+    pub name: String,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub latency_us: Option<LatencySummary>,
+}
+
 /// A point-in-time view of everything the service has done.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
@@ -72,6 +86,12 @@ pub struct MetricsSnapshot {
     /// Completed requests per kernel, name-sorted (kernels with no
     /// traffic are omitted, as before the dense-counter refactor).
     pub per_kernel: Vec<(String, u64)>,
+    /// Per-tenant ledgers + latency, in [`TenantId`]
+    /// (lane) order; tenants with no traffic are omitted like idle
+    /// kernels.
+    ///
+    /// [`TenantId`]: crate::coordinator::TenantId
+    pub per_tenant: Vec<TenantMetrics>,
 }
 
 impl MetricsSnapshot {
@@ -83,6 +103,7 @@ impl MetricsSnapshot {
     pub(crate) fn collect(
         mut raw: RawMetrics,
         names: &[&str],
+        tenants: &[&str],
         backend: &str,
         workers: usize,
         queue_depth: usize,
@@ -95,6 +116,19 @@ impl MetricsSnapshot {
             .map(|(name, &count)| (name.to_string(), count))
             .collect();
         per_kernel.sort_by(|a, b| a.0.cmp(&b.0));
+        let per_tenant: Vec<TenantMetrics> = tenants
+            .iter()
+            .zip(raw.per_tenant.iter_mut())
+            .filter(|(_, t)| t.admitted + t.rejected > 0)
+            .map(|(name, t)| TenantMetrics {
+                name: name.to_string(),
+                admitted: t.admitted,
+                rejected: t.rejected,
+                completed: t.completed,
+                failed: t.failed,
+                latency_us: t.latency_us.summarize(),
+            })
+            .collect();
         MetricsSnapshot {
             backend: backend.to_string(),
             workers,
@@ -113,6 +147,7 @@ impl MetricsSnapshot {
             latency_us: raw.latency_us.summarize(),
             queue_wait_us: raw.queue_wait_us.summarize(),
             per_kernel,
+            per_tenant,
         }
     }
 
@@ -148,6 +183,29 @@ impl MetricsSnapshot {
                     self.per_kernel
                         .iter()
                         .map(|(k, v)| (k.as_str(), json::i(*v as i64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "per_tenant",
+                json::obj(
+                    self.per_tenant
+                        .iter()
+                        .map(|t| {
+                            (
+                                t.name.as_str(),
+                                json::obj(vec![
+                                    ("admitted", json::i(t.admitted as i64)),
+                                    ("rejected", json::i(t.rejected as i64)),
+                                    ("completed", json::i(t.completed as i64)),
+                                    ("failed", json::i(t.failed as i64)),
+                                    (
+                                        "latency_us",
+                                        t.latency_us.as_ref().map_or(Json::Null, summary_json),
+                                    ),
+                                ]),
+                            )
+                        })
                         .collect(),
                 ),
             ),
@@ -206,6 +264,16 @@ impl MetricsSnapshot {
                 .join(" "),
         );
         s.push('\n');
+        for t in &self.per_tenant {
+            s.push_str(&format!(
+                "tenant {:<14} admitted={} completed={} failed={} rejected={}",
+                t.name, t.admitted, t.completed, t.failed, t.rejected
+            ));
+            if let Some(l) = &t.latency_us {
+                s.push_str(&format!(" p99={:.1}us", l.p99));
+            }
+            s.push('\n');
+        }
         s
     }
 }
@@ -214,15 +282,20 @@ impl MetricsSnapshot {
 mod tests {
     use super::*;
     use crate::coordinator::metrics::{BatchTiming, Metrics};
+    use crate::coordinator::TenantId;
     use crate::exec::KernelId;
     use std::time::Duration;
 
     const NAMES: [&str; 2] = ["gradient", "poly6"];
+    const TENANTS: [&str; 1] = ["default"];
+    const T0: TenantId = TenantId(0);
 
     fn sample_raw() -> RawMetrics {
-        let m = Metrics::new(2);
+        let m = Metrics::new(2, 1);
+        m.record_admitted(T0, 13);
         m.record_batch(
             KernelId(0),
+            T0,
             8,
             BatchTiming {
                 switched: true,
@@ -233,6 +306,7 @@ mod tests {
         );
         m.record_batch(
             KernelId(1),
+            T0,
             4,
             BatchTiming {
                 switched: true,
@@ -241,8 +315,8 @@ mod tests {
             },
             [120.0, 80.0].into_iter(),
         );
-        m.record_rejected(2);
-        m.record_failed(1);
+        m.record_rejected(T0, 2);
+        m.record_failed(T0, 1);
         let mut raw = m.raw_snapshot();
         raw.wall = Duration::from_millis(100);
         raw
@@ -250,7 +324,7 @@ mod tests {
 
     #[test]
     fn collects_typed_fields() {
-        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, "sim", 2, 64);
+        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, &TENANTS, "sim", 2, 64);
         assert_eq!(snap.backend, "sim");
         assert_eq!(snap.workers, 2);
         assert_eq!(snap.queue_depth, 64);
@@ -270,18 +344,31 @@ mod tests {
             snap.per_kernel,
             vec![("gradient".to_string(), 8), ("poly6".to_string(), 4)]
         );
+        // The tenant ledger rides along: one active tenant, with the
+        // admitted/completed/failed/rejected counters it recorded.
+        assert_eq!(snap.per_tenant.len(), 1);
+        let t = &snap.per_tenant[0];
+        assert_eq!(t.name, "default");
+        assert_eq!(t.admitted, 13);
+        assert_eq!(t.completed, 12);
+        assert_eq!(t.failed, 1);
+        assert_eq!(t.rejected, 2);
+        let lat = t.latency_us.as_ref().unwrap();
+        assert_eq!(lat.n, 2);
+        assert!((lat.max - 120.0).abs() < 1e-9);
     }
 
     #[test]
     fn empty_service_snapshot_is_well_formed() {
-        let raw = Metrics::new(2).raw_snapshot();
-        let snap = MetricsSnapshot::collect(raw, &NAMES, "turbo", 1, 16);
+        let raw = Metrics::new(2, 1).raw_snapshot();
+        let snap = MetricsSnapshot::collect(raw, &NAMES, &TENANTS, "turbo", 1, 16);
         assert_eq!(snap.completed, 0);
         assert_eq!(snap.latency_us, None);
         assert_eq!(snap.queue_wait_us, None);
         assert_eq!(snap.failed, 0);
-        // Idle kernels are omitted, not rendered as zeros.
+        // Idle kernels and tenants are omitted, not rendered as zeros.
         assert!(snap.per_kernel.is_empty());
+        assert!(snap.per_tenant.is_empty());
         let s = snap.render();
         assert!(s.contains("requests completed:   0"));
         // Rejection/failure lines only appear when they happened.
@@ -291,7 +378,7 @@ mod tests {
 
     #[test]
     fn renders_report_lines() {
-        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, "sim", 2, 64);
+        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, &TENANTS, "sim", 2, 64);
         let s = snap.render();
         assert!(s.contains("requests completed:   12"));
         assert!(s.contains("admission rejected:   2"));
@@ -299,11 +386,13 @@ mod tests {
         assert!(s.contains("context switches:     2"));
         assert!(s.contains("gradient=8"));
         assert!(s.contains("request latency:"));
+        assert!(s.contains("tenant default"));
+        assert!(s.contains("admitted=13"));
     }
 
     #[test]
     fn json_round_trips_through_the_parser() {
-        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, "sim", 2, 64);
+        let snap = MetricsSnapshot::collect(sample_raw(), &NAMES, &TENANTS, "sim", 2, 64);
         let j = snap.to_json();
         let parsed = json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed, j);
@@ -313,9 +402,13 @@ mod tests {
         assert_eq!(parsed.get("backend").as_str(), Some("sim"));
         assert_eq!(parsed.get("per_kernel").get("gradient").as_i64(), Some(8));
         assert_eq!(parsed.get("latency_us").get("n").as_i64(), Some(2));
+        let t = parsed.get("per_tenant").get("default");
+        assert_eq!(t.get("admitted").as_i64(), Some(13));
+        assert_eq!(t.get("rejected").as_i64(), Some(2));
+        assert_eq!(t.get("latency_us").get("n").as_i64(), Some(2));
         // Empty distributions serialize as null, not a bogus summary.
-        let empty = Metrics::new(2).raw_snapshot();
-        let j = MetricsSnapshot::collect(empty, &NAMES, "ref", 1, 8).to_json();
+        let empty = Metrics::new(2, 1).raw_snapshot();
+        let j = MetricsSnapshot::collect(empty, &NAMES, &TENANTS, "ref", 1, 8).to_json();
         assert_eq!(*j.get("latency_us"), Json::Null);
     }
 }

@@ -62,10 +62,10 @@ pub mod error;
 mod metrics;
 
 pub use error::ServiceError;
-pub use metrics::{LatencySummary, MetricsSnapshot};
+pub use metrics::{LatencySummary, MetricsSnapshot, TenantMetrics};
 
 use crate::coordinator::completion::{Ticket, WakeTarget};
-use crate::coordinator::{Engine, EngineConfig, Shared, SubmitRejection};
+use crate::coordinator::{Engine, EngineConfig, Shared, SubmitRejection, TenantId, TenantSpec};
 use crate::dfg::Dfg;
 use crate::exec::{BackendKind, CompiledKernel, FlatBatch, KernelId, KernelRegistry};
 use std::fmt;
@@ -91,6 +91,7 @@ pub struct ServiceBuilder {
     slab_trim_words: usize,
     kernels: Option<Vec<Dfg>>,
     kernel_artifacts: Option<PathBuf>,
+    tenants: Vec<TenantSpec>,
 }
 
 impl Default for ServiceBuilder {
@@ -106,6 +107,7 @@ impl Default for ServiceBuilder {
             slab_trim_words: crate::coordinator::completion::DEFAULT_TRIM_WORDS,
             kernels: None,
             kernel_artifacts: None,
+            tenants: vec![TenantSpec::default_tenant()],
         }
     }
 }
@@ -163,6 +165,49 @@ impl ServiceBuilder {
     /// the pool; buffers under the watermark are never touched.
     pub fn slab_trim_words(mut self, words: usize) -> ServiceBuilder {
         self.slab_trim_words = words;
+        self
+    }
+
+    /// Find-or-append the named tenant's spec (entry 0 is always the
+    /// default tenant; new tenants get weight 1 and unlimited quota
+    /// until overridden).
+    fn tenant_mut(&mut self, name: &str) -> &mut TenantSpec {
+        if let Some(i) = self.tenants.iter().position(|t| t.name == name) {
+            return &mut self.tenants[i];
+        }
+        self.tenants.push(TenantSpec {
+            name: name.to_string(),
+            weight: 1,
+            quota: usize::MAX,
+        });
+        self.tenants.last_mut().expect("just pushed")
+    }
+
+    /// Declare a tenant lane (idempotent). Requests carrying an
+    /// unknown tenant name — or none — fall back to the built-in
+    /// `default` lane (weight 1, unlimited quota), so a service with
+    /// no declared tenants behaves exactly as before multi-tenancy.
+    pub fn tenant(mut self, name: &str) -> ServiceBuilder {
+        self.tenant_mut(name);
+        self
+    }
+
+    /// Deficit-round-robin weight for one tenant's lane (declaring it
+    /// if needed): under contention a weight-2 tenant drains about
+    /// twice the rows of a weight-1 tenant. Must be >= 1.
+    pub fn tenant_weight(mut self, name: &str, weight: u32) -> ServiceBuilder {
+        assert!(weight >= 1, "tenant weight must be >= 1");
+        self.tenant_mut(name).weight = weight;
+        self
+    }
+
+    /// Admission quota for one tenant (declaring it if needed): the
+    /// most rows the tenant may have queued across all kernels;
+    /// excess submissions answer [`ServiceError::Rejected`] with the
+    /// tenant named. Must be >= 1.
+    pub fn tenant_quota(mut self, name: &str, quota: usize) -> ServiceBuilder {
+        assert!(quota >= 1, "tenant quota must be >= 1");
+        self.tenant_mut(name).quota = quota;
         self
     }
 
@@ -228,6 +273,12 @@ impl ServiceBuilder {
             kernel: e.kernel.clone(),
             detail: e.to_string(),
         })?;
+        let tenant_names: Arc<Vec<Arc<str>>> = Arc::new(
+            self.tenants
+                .iter()
+                .map(|t| Arc::from(t.name.as_str()))
+                .collect(),
+        );
         let engine = Engine::start(EngineConfig {
             backend,
             artifacts_dir: self.artifacts_dir,
@@ -238,12 +289,16 @@ impl ServiceBuilder {
             sim_fifo_capacity: self.sim_fifo_capacity,
             slab_trim_words: self.slab_trim_words,
             registry: Arc::new(registry),
+            tenants: self.tenants,
         })
         .map_err(|e| ServiceError::Backend {
             backend: backend.name().to_string(),
             message: format!("{e}"),
         })?;
-        Ok(OverlayService { engine })
+        Ok(OverlayService {
+            engine,
+            tenant_names,
+        })
     }
 }
 
@@ -257,6 +312,9 @@ impl ServiceBuilder {
 /// [`OverlayService::kernel`].
 pub struct OverlayService {
     engine: Engine,
+    /// Tenant-lane names, index-aligned with [`TenantId`] (entry 0 is
+    /// the default lane).
+    tenant_names: Arc<Vec<Arc<str>>>,
 }
 
 impl OverlayService {
@@ -269,6 +327,18 @@ impl OverlayService {
     /// [`KernelId`] and arity are bound here, once — calls through the
     /// handle never touch strings again.
     pub fn kernel(&self, name: &str) -> Result<KernelHandle, ServiceError> {
+        self.kernel_as(name, TenantId::DEFAULT)
+    }
+
+    /// [`Self::kernel`], with the handle bound to the named tenant's
+    /// lane: its submissions draw on that tenant's quota and weight
+    /// and its rejections/latencies land in that tenant's ledger. An
+    /// unknown tenant name falls back to the default lane.
+    pub fn kernel_for(&self, name: &str, tenant: &str) -> Result<KernelHandle, ServiceError> {
+        self.kernel_as(name, self.tenant_id(tenant))
+    }
+
+    fn kernel_as(&self, name: &str, tenant: TenantId) -> Result<KernelHandle, ServiceError> {
         let registry = self.engine.registry();
         let id = registry
             .id_of(name)
@@ -278,7 +348,24 @@ impl OverlayService {
             shared: Arc::clone(self.engine.shared()),
             kernel,
             id,
+            tenant,
+            tenant_name: Arc::clone(&self.tenant_names[tenant.index()]),
         })
+    }
+
+    /// Resolve a tenant name to its lane id; unknown names use the
+    /// default lane (entry 0).
+    fn tenant_id(&self, name: &str) -> TenantId {
+        self.tenant_names
+            .iter()
+            .position(|t| &**t == name)
+            // cast-ok: lane count is bounded far below u32::MAX
+            .map_or(TenantId::DEFAULT, |i| TenantId(i as u32))
+    }
+
+    /// The configured tenant-lane names, in [`TenantId`] order.
+    pub fn tenant_names(&self) -> Vec<&str> {
+        self.tenant_names.iter().map(|t| &**t).collect()
     }
 
     /// One handle per registry kernel, in [`KernelId`] order. Each is
@@ -290,6 +377,23 @@ impl OverlayService {
             .names()
             .iter()
             .map(|name| self.kernel(name).expect("registry name resolves"))
+            .collect()
+    }
+
+    /// [`Self::handles`] bound to the named tenant's lane (unknown
+    /// names fall back to the default lane) — the wire server builds
+    /// a connection's handle vector with this after resolving the
+    /// Hello's tenant.
+    pub fn handles_for(&self, tenant: &str) -> Vec<KernelHandle> {
+        let tenant = self.tenant_id(tenant);
+        self.engine
+            .registry()
+            .names()
+            .iter()
+            .map(|name| {
+                self.kernel_as(name, tenant)
+                    .expect("registry name resolves")
+            })
             .collect()
     }
 
@@ -326,6 +430,7 @@ impl OverlayService {
         MetricsSnapshot::collect(
             raw,
             &self.engine.registry().names(),
+            &self.tenant_names(),
             self.engine.backend().name(),
             self.engine.workers(),
             self.engine.queue_depth(),
@@ -362,6 +467,8 @@ pub struct KernelHandle {
     shared: Arc<Shared>,
     kernel: Arc<CompiledKernel>,
     id: KernelId,
+    tenant: TenantId,
+    tenant_name: Arc<str>,
 }
 
 impl fmt::Debug for KernelHandle {
@@ -395,11 +502,17 @@ impl KernelHandle {
         &self.kernel
     }
 
+    /// The tenant lane this handle submits on.
+    pub fn tenant_name(&self) -> &str {
+        &self.tenant_name
+    }
+
     fn rejection(&self, r: SubmitRejection) -> ServiceError {
         match r {
             SubmitRejection::ShutDown => ServiceError::ShutDown,
             SubmitRejection::Full { queued, limit } => ServiceError::Rejected {
                 kernel: self.kernel.name.clone(),
+                tenant: self.tenant_name.to_string(),
                 queued,
                 limit,
             },
@@ -444,7 +557,7 @@ impl KernelHandle {
         self.check_arity(inputs.len())?;
         let ticket = self
             .shared
-            .submit(self.id, inputs, self.kernel.n_outputs, waker)
+            .submit(self.tenant, self.id, inputs, self.kernel.n_outputs, waker)
             .map_err(|r| self.rejection(r))?;
         Ok(Pending {
             shared: Arc::clone(&self.shared),
@@ -498,7 +611,7 @@ impl KernelHandle {
         self.check_arity(batch.arity())?;
         let ticket = self
             .shared
-            .submit_batch(self.id, batch, self.kernel.n_outputs, waker)
+            .submit_batch(self.tenant, self.id, batch, self.kernel.n_outputs, waker)
             .map_err(|r| self.rejection(r))?;
         Ok(PendingBatch {
             shared: Arc::clone(&self.shared),
@@ -1044,6 +1157,39 @@ mod tests {
         }
         assert_eq!(svc.metrics().rejected, 3);
         assert_eq!(svc.completed(), 0);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tenant_quota_rejects_with_the_tenant_named() {
+        let svc = OverlayService::builder()
+            .backend(BackendKind::Ref)
+            .pipelines(1)
+            .queue_depth(64)
+            .tenant_weight("greedy", 2)
+            .tenant_quota("greedy", 2)
+            .build()
+            .unwrap();
+        assert_eq!(svc.tenant_names(), vec!["default", "greedy"]);
+        let h = svc.kernel_for("gradient", "greedy").unwrap();
+        assert_eq!(h.tenant_name(), "greedy");
+        // A batch wider than greedy's whole quota is deterministically
+        // rejected, and the error names the tenant, not just the
+        // kernel.
+        let rows: Vec<Vec<i32>> = (0..3).map(|i| vec![i; 5]).collect();
+        let batch = FlatBatch::from_rows(5, &rows);
+        match h.call_batch(&batch).unwrap_err() {
+            ServiceError::Rejected { tenant, limit, .. } => {
+                assert_eq!(tenant, "greedy");
+                assert_eq!(limit, 2);
+            }
+            other => panic!("expected Rejected, got {other}"),
+        }
+        // Other lanes are not bound by greedy's quota; unknown tenant
+        // names fall back to the default lane.
+        let d = svc.kernel_for("gradient", "nonesuch").unwrap();
+        assert_eq!(d.tenant_name(), "default");
+        assert_eq!(d.call_batch(&batch).unwrap().n_rows(), 3);
         svc.shutdown().unwrap();
     }
 

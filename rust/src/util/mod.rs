@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod bits;
 pub mod cli;
+pub mod hmac;
 pub mod json;
 pub mod prng;
 pub mod quickcheck;

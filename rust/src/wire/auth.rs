@@ -1,0 +1,227 @@
+//! Tenant keyring: shared-secret authentication for the wire
+//! handshake.
+//!
+//! `tmfu listen --tenants <file>` loads one secret per tenant; from
+//! then on every Hello must carry a [`TenantToken`] signed with one of
+//! those secrets (see `docs/PROTOCOL.md`, "Tenant authentication").
+//! Verification happens once per connection, before the `HelloOk`, and
+//! a failure is a typed `Unauthorized` error followed by hangup — the
+//! server never panics and the next connection is unaffected.
+//!
+//! The keyring also carries each tenant's scheduling parameters
+//! (weight, quota) so the listener can build the service's tenant
+//! lanes from the same file: entry order here is lane order there.
+
+use super::TenantToken;
+use crate::util::sync::LockExt;
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+/// One configured tenant: identity, shared secret, and the scheduling
+/// parameters its queue lane is built with.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantEntry {
+    pub name: String,
+    pub secret: Vec<u8>,
+    /// Deficit-round-robin weight (relative drain share), >= 1.
+    pub weight: u32,
+    /// Admission quota: max queued rows across all kernels, >= 1.
+    pub quota: usize,
+}
+
+/// The server-side keyring: configured tenants plus a replay cache of
+/// `(tenant, nonce)` pairs already accepted. A nonce is burned on
+/// first successful verification, so replaying a sniffed token on a
+/// new connection fails even though the signature is valid. The cache
+/// grows by one entry per authenticated connection; at overlay scale
+/// (thousands of connections) that is bounded and cheap.
+#[derive(Debug)]
+pub struct TenantKeyring {
+    entries: Vec<TenantEntry>,
+    index: HashMap<String, usize>,
+    seen: Mutex<HashSet<(String, u64)>>,
+}
+
+impl TenantKeyring {
+    /// Build from explicit entries. Fails on an empty list or a
+    /// duplicated tenant name.
+    pub fn new(entries: Vec<TenantEntry>) -> Result<TenantKeyring, String> {
+        if entries.is_empty() {
+            return Err("tenant keyring is empty".to_string());
+        }
+        let mut index = HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            if e.name.is_empty() {
+                return Err("tenant name is empty".to_string());
+            }
+            if index.insert(e.name.clone(), i).is_some() {
+                return Err(format!("duplicate tenant '{}'", e.name));
+            }
+        }
+        Ok(TenantKeyring {
+            entries,
+            index,
+            seen: Mutex::new(HashSet::new()),
+        })
+    }
+
+    /// Parse a tenants file: one `name:secret[:weight[:quota]]` per
+    /// line, `#` comments and blank lines ignored. Weight and quota
+    /// default to 1 and unlimited.
+    pub fn parse(text: &str) -> Result<TenantKeyring, String> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split(':');
+            let name = parts.next().unwrap_or("").trim();
+            let secret = parts.next().map(str::trim);
+            let err = |what: &str| format!("tenants file line {}: {what}", lineno + 1);
+            let secret = match secret {
+                Some(s) if !s.is_empty() => s,
+                _ => return Err(err("expected name:secret[:weight[:quota]]")),
+            };
+            if name.is_empty() {
+                return Err(err("tenant name is empty"));
+            }
+            let weight = match parts.next() {
+                None => 1,
+                Some(w) => match w.trim().parse::<u32>() {
+                    Ok(w) if w >= 1 => w,
+                    _ => return Err(err("weight must be an integer >= 1")),
+                },
+            };
+            let quota = match parts.next() {
+                None => usize::MAX,
+                Some(q) => match q.trim().parse::<usize>() {
+                    Ok(q) if q >= 1 => q,
+                    _ => return Err(err("quota must be an integer >= 1")),
+                },
+            };
+            if parts.next().is_some() {
+                return Err(err("too many fields"));
+            }
+            entries.push(TenantEntry {
+                name: name.to_string(),
+                secret: secret.as_bytes().to_vec(),
+                weight,
+                quota,
+            });
+        }
+        TenantKeyring::new(entries)
+    }
+
+    /// The configured tenants, in file/lane order.
+    pub fn entries(&self) -> &[TenantEntry] {
+        &self.entries
+    }
+
+    /// Verify one token: the tenant must be configured, the MAC must
+    /// validate under its secret, and the `(tenant, nonce)` pair must
+    /// be fresh. On success the nonce is burned and the matching entry
+    /// returned; on failure the message is what the `Unauthorized`
+    /// wire error carries.
+    pub fn verify(&self, token: &TenantToken) -> Result<&TenantEntry, String> {
+        let Some(&i) = self.index.get(&token.tenant) else {
+            return Err(format!("unknown tenant '{}'", token.tenant));
+        };
+        let entry = &self.entries[i];
+        if !token.verify(&entry.secret) {
+            return Err("bad tenant signature".to_string());
+        }
+        let mut seen = self.seen.lock_unpoisoned();
+        if !seen.insert((token.tenant.clone(), token.nonce)) {
+            return Err("replayed tenant nonce".to_string());
+        }
+        Ok(entry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring() -> TenantKeyring {
+        TenantKeyring::parse("acme:opensesame:2:64\npolite:hunter2\n").unwrap()
+    }
+
+    #[test]
+    fn parse_reads_fields_and_defaults() {
+        let ring = TenantKeyring::parse(
+            "# comment\n\nacme:opensesame:2:64\n  polite : hunter2 \n",
+        )
+        .unwrap();
+        let e = ring.entries();
+        assert_eq!(e.len(), 2);
+        assert_eq!(e[0].name, "acme");
+        assert_eq!(e[0].secret, b"opensesame");
+        assert_eq!(e[0].weight, 2);
+        assert_eq!(e[0].quota, 64);
+        assert_eq!(e[1].name, "polite");
+        assert_eq!(e[1].weight, 1);
+        assert_eq!(e[1].quota, usize::MAX);
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines() {
+        for (text, needle) in [
+            ("acme", "name:secret"),
+            ("acme:", "name:secret"),
+            (":opensesame", "name is empty"),
+            ("acme:s:zero", "weight"),
+            ("acme:s:0", "weight"),
+            ("acme:s:1:0", "quota"),
+            ("acme:s:1:2:3", "too many"),
+            ("", "empty"),
+            ("acme:a\nacme:b", "duplicate"),
+        ] {
+            let err = TenantKeyring::parse(text).unwrap_err();
+            assert!(err.contains(needle), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn verify_accepts_a_fresh_signed_token() {
+        let ring = ring();
+        let t = TenantToken::sign("acme", b"opensesame", 1);
+        let e = ring.verify(&t).unwrap();
+        assert_eq!(e.name, "acme");
+        assert_eq!(e.weight, 2);
+    }
+
+    #[test]
+    fn verify_names_each_failure() {
+        let ring = ring();
+        let err = ring
+            .verify(&TenantToken::sign("nonesuch", b"x", 1))
+            .unwrap_err();
+        assert!(err.contains("unknown tenant"), "{err}");
+        let err = ring
+            .verify(&TenantToken::sign("acme", b"wrong-secret", 1))
+            .unwrap_err();
+        assert_eq!(err, "bad tenant signature");
+    }
+
+    #[test]
+    fn verify_burns_nonces_per_tenant() {
+        let ring = ring();
+        let t = TenantToken::sign("acme", b"opensesame", 7);
+        ring.verify(&t).unwrap();
+        // Replaying the same token (even on a "new connection" — the
+        // cache is server-wide) is refused.
+        assert_eq!(ring.verify(&t).unwrap_err(), "replayed tenant nonce");
+        // A fresh nonce from the same tenant is fine.
+        ring.verify(&TenantToken::sign("acme", b"opensesame", 8))
+            .unwrap();
+        // Another tenant may use the same nonce value.
+        ring.verify(&TenantToken::sign("polite", b"hunter2", 7))
+            .unwrap();
+        // A failed MAC does not burn the nonce.
+        let bad = TenantToken::sign("acme", b"wrong", 9);
+        ring.verify(&bad).unwrap_err();
+        ring.verify(&TenantToken::sign("acme", b"opensesame", 9))
+            .unwrap();
+    }
+}

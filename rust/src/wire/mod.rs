@@ -53,6 +53,7 @@
 //! opcode regardless of the negotiated version — gating is the
 //! connection state machine's job, not the byte parser's.
 
+pub mod auth;
 pub mod fault;
 pub mod server;
 
@@ -109,6 +110,49 @@ const EC_UNAVAILABLE: u16 = 9;
 const EC_INVALID_KERNEL: u16 = 10;
 const EC_VERSION_MISMATCH: u16 = 100;
 const EC_MALFORMED: u16 = 101;
+const EC_UNAUTHORIZED: u16 = 102;
+
+/// Length of the HMAC-SHA256 tag carried by a [`TenantToken`].
+pub const TOKEN_MAC_LEN: usize = 32;
+
+/// Optional tenant credential carried as a `Hello` suffix:
+/// `tenant:string nonce:u64 mac[32]` where
+/// `mac = HMAC-SHA256(secret, tenant_bytes || nonce_le8)`. The nonce
+/// is fresh per connection; an auth-required server remembers seen
+/// `(tenant, nonce)` pairs and refuses replays. Absent on anonymous
+/// Hellos — the v1 encoding is byte-identical to before tokens
+/// existed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantToken {
+    pub tenant: String,
+    pub nonce: u64,
+    pub mac: [u8; TOKEN_MAC_LEN],
+}
+
+impl TenantToken {
+    /// Sign `tenant` with `secret` for one connection attempt.
+    pub fn sign(tenant: &str, secret: &[u8], nonce: u64) -> TenantToken {
+        TenantToken {
+            tenant: tenant.to_string(),
+            nonce,
+            mac: crate::util::hmac::hmac_sha256(secret, &Self::message(tenant, nonce)),
+        }
+    }
+
+    /// Whether `secret` produces this token's MAC (constant-time).
+    pub fn verify(&self, secret: &[u8]) -> bool {
+        let expect = crate::util::hmac::hmac_sha256(secret, &Self::message(&self.tenant, self.nonce));
+        crate::util::hmac::mac_eq(&self.mac, &expect)
+    }
+
+    /// The signed message: tenant bytes then the nonce, little-endian.
+    fn message(tenant: &str, nonce: u64) -> Vec<u8> {
+        let mut m = Vec::with_capacity(tenant.len() + 8);
+        m.extend_from_slice(tenant.as_bytes());
+        m.extend_from_slice(&nonce.to_le_bytes());
+        m
+    }
+}
 
 /// Codec failure: a frame that cannot be encoded (out-of-range field)
 /// or decoded (truncated, trailing bytes, unknown opcode/code).
@@ -143,6 +187,10 @@ pub enum WireError {
     /// The peer sent bytes that do not parse as a legal frame (or an
     /// opcode illegal in the current connection state).
     Malformed { message: String },
+    /// An auth-required server refused the Hello: missing, unknown,
+    /// mis-signed, or replayed tenant token. The server names the
+    /// reason and closes the connection.
+    Unauthorized { message: String },
 }
 
 impl WireError {
@@ -160,6 +208,10 @@ impl WireError {
                 backend: "wire".to_string(),
                 message: format!("malformed frame: {message}"),
             },
+            WireError::Unauthorized { message } => ServiceError::Backend {
+                backend: "auth".to_string(),
+                message: format!("unauthorized: {message}"),
+            },
         }
     }
 }
@@ -172,6 +224,7 @@ impl fmt::Display for WireError {
                 write!(f, "protocol version mismatch (peer speaks v{min}..=v{max})")
             }
             WireError::Malformed { message } => write!(f, "malformed frame: {message}"),
+            WireError::Unauthorized { message } => write!(f, "unauthorized: {message}"),
         }
     }
 }
@@ -181,8 +234,15 @@ impl fmt::Display for WireError {
 /// handshake frames use id 0 by convention.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Frame {
-    /// Client → server greeting: magic + supported version range.
-    Hello { id: u64, min: u16, max: u16 },
+    /// Client → server greeting: magic + supported version range,
+    /// optionally followed by a [`TenantToken`] suffix (v2 feature; an
+    /// anonymous Hello omits it and stays byte-identical to v1).
+    Hello {
+        id: u64,
+        min: u16,
+        max: u16,
+        token: Option<TenantToken>,
+    },
     /// Server → client: negotiated version + backend name banner.
     HelloOk {
         id: u64,
@@ -256,11 +316,21 @@ impl Frame {
     pub fn encode(&self) -> Result<Vec<u8>, FrameError> {
         let mut out = Vec::with_capacity(self.encoded_hint());
         match self {
-            Frame::Hello { id, min, max } => {
+            Frame::Hello {
+                id,
+                min,
+                max,
+                token,
+            } => {
                 head(&mut out, OP_HELLO, *id);
                 out.extend_from_slice(&WIRE_MAGIC);
                 put_u16(&mut out, *min);
                 put_u16(&mut out, *max);
+                if let Some(t) = token {
+                    put_string(&mut out, &t.tenant)?;
+                    put_u64(&mut out, t.nonce);
+                    out.extend_from_slice(&t.mac);
+                }
             }
             Frame::HelloOk {
                 id,
@@ -349,7 +419,24 @@ impl Frame {
                 }
                 let min = d.u16("hello min version")?;
                 let max = d.u16("hello max version")?;
-                Frame::Hello { id, min, max }
+                // An anonymous Hello ends here; any remaining bytes
+                // must be a complete tenant token suffix.
+                let token = if d.remaining() > 0 {
+                    let tenant = d.string("token tenant")?;
+                    let nonce = d.u64("token nonce")?;
+                    let mac_bytes = d.bytes(TOKEN_MAC_LEN, "token mac")?;
+                    let mut mac = [0u8; TOKEN_MAC_LEN];
+                    mac.copy_from_slice(mac_bytes);
+                    Some(TenantToken { tenant, nonce, mac })
+                } else {
+                    None
+                };
+                Frame::Hello {
+                    id,
+                    min,
+                    max,
+                    token,
+                }
             }
             OP_HELLO_OK => Frame::HelloOk {
                 id,
@@ -442,11 +529,13 @@ fn put_error(out: &mut Vec<u8>, err: &WireError) -> Result<(), FrameError> {
             }
             ServiceError::Rejected {
                 kernel,
+                tenant,
                 queued,
                 limit,
             } => {
                 put_u16(out, EC_REJECTED);
                 put_string(out, kernel)?;
+                put_string(out, tenant)?;
                 // cast-ok: usize -> u64 widens on every supported host
                 put_u64(out, *queued as u64);
                 // cast-ok: usize -> u64 widens on every supported host
@@ -485,6 +574,10 @@ fn put_error(out: &mut Vec<u8>, err: &WireError) -> Result<(), FrameError> {
             put_u16(out, EC_MALFORMED);
             put_string(out, message)?;
         }
+        WireError::Unauthorized { message } => {
+            put_u16(out, EC_UNAUTHORIZED);
+            put_string(out, message)?;
+        }
     }
     Ok(())
 }
@@ -506,6 +599,7 @@ impl<'a> Dec<'a> {
             }),
             EC_REJECTED => WireError::Service(ServiceError::Rejected {
                 kernel: self.string("kernel")?,
+                tenant: self.string("tenant")?,
                 queued: self.len_u64("queued")?,
                 limit: self.len_u64("limit")?,
             }),
@@ -532,6 +626,9 @@ impl<'a> Dec<'a> {
                 max: self.u16("max version")?,
             },
             EC_MALFORMED => WireError::Malformed {
+                message: self.string("message")?,
+            },
+            EC_UNAUTHORIZED => WireError::Unauthorized {
                 message: self.string("message")?,
             },
             other => return Err(FrameError::new(format!("unknown error code {other}"))),
@@ -686,6 +783,12 @@ impl<'a> Dec<'a> {
             .ok_or_else(|| FrameError::new("batch size overflows".to_string()))?;
         let data = self.words(words, "batch words")?;
         Ok(FlatBatch::from_flat(arity, data))
+    }
+
+    /// Bytes not yet consumed — used to probe for optional suffixes
+    /// (the Hello tenant token) before `finish` enforces exhaustion.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     fn finish(&self) -> Result<(), FrameError> {
@@ -1038,7 +1141,18 @@ mod tests {
     /// Every variant, exercised for encode→decode identity.
     fn sample_frames() -> Vec<Frame> {
         vec![
-            Frame::Hello { id: 0, min: 1, max: 1 },
+            Frame::Hello {
+                id: 0,
+                min: 1,
+                max: 1,
+                token: None,
+            },
+            Frame::Hello {
+                id: 0,
+                min: 1,
+                max: 2,
+                token: Some(TenantToken::sign("acme", b"opensesame", 7)),
+            },
             Frame::HelloOk {
                 id: 0,
                 version: 1,
@@ -1078,6 +1192,7 @@ mod tests {
                 id: 4,
                 err: WireError::Service(ServiceError::Rejected {
                     kernel: "poly6".into(),
+                    tenant: "acme".into(),
                     queued: 7,
                     limit: 8,
                 }),
@@ -1125,6 +1240,12 @@ mod tests {
                 id: 13,
                 err: WireError::Malformed {
                     message: "unknown opcode 0x7f".into(),
+                },
+            },
+            Frame::Error {
+                id: 18,
+                err: WireError::Unauthorized {
+                    message: "bad tenant signature".into(),
                 },
             },
             Frame::Error {
@@ -1176,8 +1297,26 @@ mod tests {
     fn golden_bytes_match_the_spec() {
         let golden: &[(Frame, &str)] = &[
             (
-                Frame::Hello { id: 0, min: 1, max: 1 },
+                Frame::Hello {
+                    id: 0,
+                    min: 1,
+                    max: 1,
+                    token: None,
+                },
                 "010000000000000000544d465501000100",
+            ),
+            // Signed Hello: secret "opensesame", tenant "acme", nonce 7
+            // (MAC cross-checked against python3 hmac/hashlib).
+            (
+                Frame::Hello {
+                    id: 0,
+                    min: 1,
+                    max: 2,
+                    token: Some(TenantToken::sign("acme", b"opensesame", 7)),
+                },
+                "010000000000000000544d4655010002000400000061636d6507000000000000\
+                 00e81184456412c22759ad970d88d386486a8e7c8a168201be77ac6423f813ac\
+                 ed",
             ),
             (
                 Frame::HelloOk {
@@ -1241,12 +1380,23 @@ mod tests {
                     id: 4,
                     err: WireError::Service(ServiceError::Rejected {
                         kernel: "poly6".into(),
+                        tenant: "acme".into(),
                         queued: 7,
                         limit: 8,
                     }),
                 },
-                "080400000000000000040005000000706f6c79360700000000000000\
-                 0800000000000000",
+                "080400000000000000040005000000706f6c79360400000061636d6507000000\
+                 0000000008 00000000000000",
+            ),
+            (
+                Frame::Error {
+                    id: 18,
+                    err: WireError::Unauthorized {
+                        message: "bad tenant signature".into(),
+                    },
+                },
+                "0812000000000000006600140000006261642074656e616e74207369676e6174\
+                 757265",
             ),
             (
                 Frame::Error {
@@ -1329,10 +1479,15 @@ mod tests {
         fn generate(&self, rng: &mut Rng) -> Frame {
             let id = rng.next_u64();
             match rng.index(15) {
+                // Anonymous only: a signed Hello truncated back to the
+                // anonymous length decodes fine, which would break the
+                // every-strict-prefix-fails truncation property. The
+                // tokened encoding gets its own generator below.
                 0 => Frame::Hello {
                     id,
                     min: rng.index(4) as u16,
                     max: rng.index(4) as u16,
+                    token: None,
                 },
                 1 => Frame::HelloOk {
                     id,
@@ -1376,7 +1531,7 @@ mod tests {
                 },
                 11 => Frame::Drain { id },
                 _ => {
-                    let err = match rng.index(12) {
+                    let err = match rng.index(13) {
                         0 => WireError::Service(ServiceError::UnknownKernel(rand_string(rng, 16))),
                         1 => WireError::Service(ServiceError::ShapeMismatch {
                             kernel: rand_string(rng, 16),
@@ -1388,6 +1543,7 @@ mod tests {
                         }),
                         3 => WireError::Service(ServiceError::Rejected {
                             kernel: rand_string(rng, 16),
+                            tenant: rand_string(rng, 16),
                             queued: rng.index(1 << 20),
                             limit: rng.index(1 << 20),
                         }),
@@ -1412,6 +1568,9 @@ mod tests {
                         10 => WireError::VersionMismatch {
                             min: rng.index(4) as u16,
                             max: rng.index(4) as u16,
+                        },
+                        11 => WireError::Unauthorized {
+                            message: rand_string(rng, 32),
                         },
                         _ => WireError::Malformed {
                             message: rand_string(rng, 32),
@@ -1450,6 +1609,74 @@ mod tests {
         });
     }
 
+    /// Random *signed* Hellos, kept out of [`GenFrame`] because the
+    /// token is an optional suffix: truncating one back to the
+    /// anonymous length legally decodes. This test pins that benign
+    /// cut explicitly and requires every other strict prefix to fail.
+    struct GenTokenHello;
+
+    impl Gen for GenTokenHello {
+        type Value = Frame;
+        fn generate(&self, rng: &mut Rng) -> Frame {
+            let secret: Vec<u8> = (0..1 + rng.index(24)).map(|_| rng.next_u64() as u8).collect();
+            Frame::Hello {
+                id: rng.next_u64(),
+                min: rng.index(4) as u16,
+                max: rng.index(4) as u16,
+                token: Some(TenantToken::sign(
+                    &rand_string(rng, 16),
+                    &secret,
+                    rng.next_u64(),
+                )),
+            }
+        }
+    }
+
+    #[test]
+    fn prop_signed_hellos_round_trip_and_truncate_cleanly() {
+        // The anonymous Hello body ends after opcode(1) + id(8) +
+        // magic(4) + min(2) + max(2) = 17 bytes; a signed Hello cut
+        // there decodes as its anonymous counterpart.
+        const ANON_LEN: usize = 17;
+        check(200, GenTokenHello, "wire-token-hello", |f| {
+            let bytes = f.encode().map_err(|e| e.to_string())?;
+            let back = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+            prop_assert(&back == f, "decode(encode(f)) != f")?;
+            for cut in 0..bytes.len() {
+                let got = Frame::decode(&bytes[..cut]);
+                if cut == ANON_LEN {
+                    match got {
+                        Ok(Frame::Hello { token: None, .. }) => {}
+                        other => {
+                            return Err(format!(
+                                "anonymous-length cut should decode tokenless, got {other:?}"
+                            ))
+                        }
+                    }
+                } else if got.is_ok() {
+                    return Err(format!("prefix of {cut}/{} bytes decoded", bytes.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tenant_token_verify_detects_tampering() {
+        let t = TenantToken::sign("acme", b"opensesame", 42);
+        assert!(t.verify(b"opensesame"));
+        assert!(!t.verify(b"wrong-secret"));
+        let mut bad_mac = t.clone();
+        bad_mac.mac[0] ^= 1;
+        assert!(!bad_mac.verify(b"opensesame"));
+        let mut bad_nonce = t.clone();
+        bad_nonce.nonce += 1;
+        assert!(!bad_nonce.verify(b"opensesame"));
+        let mut bad_tenant = t;
+        bad_tenant.tenant = "acmf".into();
+        assert!(!bad_tenant.verify(b"opensesame"));
+    }
+
     #[test]
     fn decode_rejects_garbage() {
         assert!(Frame::decode(&[]).is_err());
@@ -1460,7 +1687,14 @@ mod tests {
         let err = Frame::decode(&buf).unwrap_err();
         assert!(err.msg.contains("unknown opcode"), "{err}");
         // Bad hello magic.
-        let mut hello = Frame::Hello { id: 0, min: 1, max: 1 }.encode().unwrap();
+        let mut hello = Frame::Hello {
+            id: 0,
+            min: 1,
+            max: 1,
+            token: None,
+        }
+        .encode()
+        .unwrap();
         hello[9] = b'X';
         assert!(Frame::decode(&hello).unwrap_err().msg.contains("magic"));
         // String length pointing past the payload.
@@ -1654,6 +1888,17 @@ mod tests {
         }
         .into_service_error();
         assert!(matches!(e, ServiceError::Backend { .. }));
+        let e = WireError::Unauthorized {
+            message: "unknown tenant 'acme'".into(),
+        }
+        .into_service_error();
+        match e {
+            ServiceError::Backend { backend, message } => {
+                assert_eq!(backend, "auth");
+                assert!(message.contains("unknown tenant"), "{message}");
+            }
+            other => panic!("expected Backend, got {other}"),
+        }
     }
 
     #[test]

@@ -36,6 +36,7 @@
 //! path and the service, the other connections and the acceptor never
 //! notice.
 
+use super::auth::TenantKeyring;
 use super::fault::{FaultPlan, FaultState};
 use super::{
     read_frame_patient, write_frame, Frame, ListenAddr, PatientRead, WireError, WireStream,
@@ -85,6 +86,7 @@ pub struct ServerCtl {
     inflight: AtomicU64,
     read_deadline: Mutex<Duration>,
     fault: Mutex<FaultPlan>,
+    auth: Mutex<Option<Arc<TenantKeyring>>>,
 }
 
 impl Default for ServerCtl {
@@ -94,6 +96,7 @@ impl Default for ServerCtl {
             inflight: AtomicU64::new(0),
             read_deadline: Mutex::new(read_deadline_from_env()),
             fault: Mutex::new(FaultPlan::from_env()),
+            auth: Mutex::new(None),
         }
     }
 }
@@ -123,6 +126,20 @@ impl ServerCtl {
 
     fn fault_plan(&self) -> FaultPlan {
         self.fault.lock_unpoisoned().clone()
+    }
+
+    /// Require tenant authentication: every Hello on connections
+    /// accepted afterwards must carry a token that verifies against
+    /// this keyring (missing/unknown/mis-signed/replayed ⇒ a typed
+    /// `Unauthorized` error, then hangup). With no keyring set (the
+    /// default) anonymous Hellos are accepted and any token present is
+    /// used as an unverified attribution label.
+    pub fn set_auth(&self, keyring: Arc<TenantKeyring>) {
+        *self.auth.lock_unpoisoned() = Some(keyring);
+    }
+
+    fn auth(&self) -> Option<Arc<TenantKeyring>> {
+        self.auth.lock_unpoisoned().clone()
     }
 
     pub(crate) fn inflight_add(&self, n: u64) {
@@ -793,8 +810,13 @@ fn serve_connection(
             Err(_) => return,
         }
     };
-    let version = match hello {
-        Frame::Hello { id, min, max } => {
+    let (version, tenant) = match hello {
+        Frame::Hello {
+            id,
+            min,
+            max,
+            token,
+        } => {
             let lo = min.max(WIRE_VERSION_MIN);
             let hi = max.min(WIRE_VERSION_MAX);
             if lo > hi {
@@ -807,12 +829,52 @@ fn serve_connection(
                 });
                 return;
             }
+            // Tenant resolution happens once per connection, before
+            // the HelloOk: an auth-required server refuses every
+            // unauthenticated Hello with a typed error and hangs up,
+            // leaving the service (and the next connection) untouched.
+            let tenant: Option<String> = match (conn.ctl.auth(), token) {
+                (Some(keyring), Some(tok)) => {
+                    if hi < 2 {
+                        conn.push_frame(Frame::Error {
+                            id,
+                            err: WireError::Unauthorized {
+                                message: "tenant tokens require protocol v2".to_string(),
+                            },
+                        });
+                        return;
+                    }
+                    match keyring.verify(&tok) {
+                        Ok(entry) => Some(entry.name.clone()),
+                        Err(message) => {
+                            conn.push_frame(Frame::Error {
+                                id,
+                                err: WireError::Unauthorized { message },
+                            });
+                            return;
+                        }
+                    }
+                }
+                (Some(_), None) => {
+                    conn.push_frame(Frame::Error {
+                        id,
+                        err: WireError::Unauthorized {
+                            message: "server requires a tenant token".to_string(),
+                        },
+                    });
+                    return;
+                }
+                // Auth off: a token is an unverified attribution
+                // label (unknown names fall back to the default lane).
+                (None, Some(tok)) => Some(tok.tenant),
+                (None, None) => None,
+            };
             conn.push_frame(Frame::HelloOk {
                 id,
                 version: hi,
                 backend: service.backend().name().to_string(),
             });
-            hi
+            (hi, tenant)
         }
         other => {
             conn.push_frame(malformed(
@@ -824,8 +886,12 @@ fn serve_connection(
     };
 
     // One session handle per registry kernel, resolved once — `Call`
-    // frames carry the dense id and index this vector directly.
-    let handles: Vec<KernelHandle> = service.handles();
+    // frames carry the dense id and index this vector directly. The
+    // handles are bound to the connection's tenant lane.
+    let handles: Vec<KernelHandle> = match tenant.as_deref() {
+        Some(name) => service.handles_for(name),
+        None => service.handles(),
+    };
 
     // --- request loop ----------------------------------------------
     loop {

@@ -1,0 +1,275 @@
+//! Tenant-authentication negative paths (DESIGN.md §13, PROTOCOL.md
+//! "Tenant authentication"): every malformed, unsigned, or replayed
+//! Hello against an auth-required server must yield one documented
+//! typed error followed by a hangup — never a panic, never a wedge —
+//! and the server must stay healthy for the next connection.
+//!
+//! The raw-socket cases handcraft Hello frames with `write_frame` (or
+//! splice bytes directly for the truncation case) because the real
+//! client never produces these: it signs fresh nonces and never
+//! truncates. The positive path — a correctly signed client against
+//! the same server — runs last over the same listener to prove the
+//! rejections left nothing poisoned.
+
+use std::io::Write as _;
+use std::sync::Arc;
+use tmfu_overlay::client::OverlayClient;
+use tmfu_overlay::exec::BackendKind;
+use tmfu_overlay::service::{OverlayService, ServiceError};
+use tmfu_overlay::wire::auth::TenantKeyring;
+use tmfu_overlay::wire::server::{ServerCtl, WireServer};
+use tmfu_overlay::wire::{read_frame, write_frame, Frame, ListenAddr, TenantToken, WireError};
+
+const SECRET: &[u8] = b"opensesame";
+
+/// An auth-required server: two tenants in the keyring, each with its
+/// own service lane.
+fn start_auth_server() -> (Arc<OverlayService>, WireServer, String) {
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(BackendKind::Turbo)
+            .pipelines(2)
+            .max_batch(8)
+            .queue_depth(256)
+            .tenant("acme")
+            .tenant("rival")
+            .build()
+            .unwrap(),
+    );
+    let keyring =
+        TenantKeyring::parse("acme:opensesame\nrival:hunter2").expect("keyring parses");
+    let ctl = ServerCtl::new();
+    ctl.set_auth(Arc::new(keyring));
+    let server = WireServer::bind_with_ctl(
+        Arc::clone(&service),
+        &ListenAddr::parse("127.0.0.1:0"),
+        None,
+        ctl,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    (service, server, addr)
+}
+
+/// Send one handcrafted Hello and expect a typed Unauthorized error
+/// whose message contains `want`, followed by a hangup.
+fn expect_unauthorized(addr: &str, hello: &Frame, want: &str) {
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write_frame(&mut s, hello).unwrap();
+    match read_frame(&mut s).unwrap().unwrap() {
+        Frame::Error { err, .. } => match err {
+            WireError::Unauthorized { message } => {
+                assert!(
+                    message.contains(want),
+                    "expected message containing '{want}', got '{message}'"
+                );
+            }
+            other => panic!("expected Unauthorized, got {other:?}"),
+        },
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    // Hangup, not a wedge: the stream ends after the refusal.
+    assert!(matches!(read_frame(&mut s), Ok(None) | Err(_)));
+}
+
+fn signed_hello(tenant: &str, secret: &[u8], nonce: u64) -> Frame {
+    Frame::Hello {
+        id: 0,
+        min: 1,
+        max: 2,
+        token: Some(TenantToken::sign(tenant, secret, nonce)),
+    }
+}
+
+#[test]
+fn every_bad_hello_is_refused_typed_and_the_server_survives() {
+    let (service, server, addr) = start_auth_server();
+
+    // 1. Bad signature: right tenant, wrong secret.
+    expect_unauthorized(
+        &addr,
+        &signed_hello("acme", b"wrong-secret", 1),
+        "bad tenant signature",
+    );
+
+    // 2. Unknown tenant: a name the keyring has never heard of.
+    expect_unauthorized(
+        &addr,
+        &signed_hello("nonesuch", SECRET, 2),
+        "unknown tenant 'nonesuch'",
+    );
+
+    // 3. Anonymous Hello against an auth-required server.
+    expect_unauthorized(
+        &addr,
+        &Frame::Hello {
+            id: 0,
+            min: 1,
+            max: 2,
+            token: None,
+        },
+        "requires a tenant token",
+    );
+
+    // 4. v1-only client presenting a token: tokens are a v2 feature,
+    // and the negotiated version here can only be 1.
+    expect_unauthorized(
+        &addr,
+        &Frame::Hello {
+            id: 0,
+            min: 1,
+            max: 1,
+            token: Some(TenantToken::sign("acme", SECRET, 3)),
+        },
+        "require protocol v2",
+    );
+
+    // 5. A plain v1 client (no token at all) is refused the same way
+    // an anonymous v2 client is: the server demands a token.
+    expect_unauthorized(
+        &addr,
+        &Frame::Hello {
+            id: 0,
+            min: 1,
+            max: 1,
+            token: None,
+        },
+        "requires a tenant token",
+    );
+
+    // 6. Replay: the same signed Hello bytes on a second connection.
+    // The first use succeeds; the second is refused by the burned
+    // nonce even though the signature itself is valid.
+    let replayed = signed_hello("acme", SECRET, 77);
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &replayed).unwrap();
+        assert!(matches!(
+            read_frame(&mut s).unwrap().unwrap(),
+            Frame::HelloOk { version: 2, .. }
+        ));
+    }
+    expect_unauthorized(&addr, &replayed, "replayed tenant nonce");
+
+    // 7. Truncated token: a signed Hello with the tail of its MAC cut
+    // off (length prefix adjusted to match, so this is a well-framed
+    // message whose *body* is short). The codec refuses it as
+    // malformed and the server hangs up.
+    {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &signed_hello("acme", SECRET, 99)).unwrap();
+        let body = &buf[4..buf.len() - 5]; // drop the last 5 MAC bytes
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        // cast-ok: a Hello body is far below u32::MAX bytes.
+        s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        s.write_all(body).unwrap();
+        s.flush().unwrap();
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::Error { err, .. } => {
+                assert!(
+                    matches!(err, WireError::Malformed { .. }),
+                    "expected Malformed, got {err:?}"
+                );
+            }
+            other => panic!("expected Error frame, got {other:?}"),
+        }
+        assert!(matches!(read_frame(&mut s), Ok(None) | Err(_)));
+    }
+
+    // After all that abuse: a correctly signed client connects, calls,
+    // and sees its own tenant attributed in the metrics. Nothing about
+    // the refused connections leaked into the service.
+    let client = OverlayClient::builder()
+        .tenant("acme")
+        .secret(SECRET)
+        .connect(&addr)
+        .unwrap();
+    assert_eq!(client.version(), 2);
+    let gradient = client.kernel("gradient").unwrap();
+    assert_eq!(gradient.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("per_tenant").get("acme").get("completed").as_i64(), Some(1));
+    // The abuse never admitted anything: no rejections, no failures.
+    assert_eq!(m.get("rejected").as_i64(), Some(0));
+    assert_eq!(m.get("failed").as_i64(), Some(0));
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn wrong_tenant_secret_surfaces_as_a_typed_client_error() {
+    let (service, server, addr) = start_auth_server();
+    // The real client with bad credentials gets the same typed error a
+    // linked-in caller would: Backend { backend: "auth", .. }.
+    let err = OverlayClient::builder()
+        .tenant("acme")
+        .secret(b"guessed-wrong")
+        .connect(&addr)
+        .unwrap_err();
+    match err {
+        ServiceError::Backend { backend, message } => {
+            assert_eq!(backend, "auth");
+            assert!(message.contains("bad tenant signature"), "{message}");
+        }
+        other => panic!("expected auth backend error, got {other}"),
+    }
+    // A tenant name with no secret at all signs over empty bytes —
+    // also refused, also typed.
+    let err = OverlayClient::builder()
+        .tenant("acme")
+        .connect(&addr)
+        .unwrap_err();
+    assert!(matches!(err, ServiceError::Backend { ref backend, .. } if backend == "auth"));
+    // And the server still serves honest tenants afterwards.
+    let client = OverlayClient::builder()
+        .tenant("rival")
+        .secret(b"hunter2")
+        .connect(&addr)
+        .unwrap();
+    assert_eq!(client.kernel("gradient").unwrap().call(&[1, 1, 1, 1, 1]).unwrap().len(), 1);
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn auth_off_accepts_tokens_as_attribution_and_anonymous_hellos() {
+    // No keyring: anonymous and token-bearing clients both work; the
+    // token's tenant name is attribution only (unknown names fall back
+    // to the default lane, so traffic still lands in the ledger).
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(BackendKind::Turbo)
+            .pipelines(1)
+            .max_batch(8)
+            .queue_depth(64)
+            .build()
+            .unwrap(),
+    );
+    let server =
+        WireServer::bind(Arc::clone(&service), &ListenAddr::parse("127.0.0.1:0")).unwrap();
+    let addr = server.addr().to_string();
+
+    let anon = OverlayClient::connect(&addr).unwrap();
+    assert_eq!(anon.kernel("gradient").unwrap().call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    let labeled = OverlayClient::builder()
+        .tenant("acme")
+        .secret(SECRET)
+        .connect(&addr)
+        .unwrap();
+    assert_eq!(
+        labeled.kernel("gradient").unwrap().call(&[3, 5, 2, 7, 1]).unwrap(),
+        vec![36]
+    );
+    // Both calls landed on the default lane (the only one configured).
+    let m = labeled.metrics().unwrap();
+    assert_eq!(m.get("per_tenant").get("default").get("completed").as_i64(), Some(2));
+
+    drop(anon);
+    drop(labeled);
+    server.shutdown();
+    service.shutdown().unwrap();
+}

@@ -182,7 +182,7 @@ fn version_mismatch_is_refused_with_the_server_range() {
     };
     // Handcrafted handshake from a client that only speaks v9.
     let mut s = std::net::TcpStream::connect(&addr).unwrap();
-    write_frame(&mut s, &Frame::Hello { id: 7, min: 9, max: 9 }).unwrap();
+    write_frame(&mut s, &Frame::Hello { id: 7, min: 9, max: 9, token: None }).unwrap();
     match read_frame(&mut s).unwrap().unwrap() {
         Frame::Error { id, err } => {
             assert_eq!(id, 7);
@@ -245,7 +245,7 @@ fn malformed_frames_get_typed_errors_and_a_hangup() {
     // A server-side opcode after a valid handshake is a breach too.
     {
         let mut s = std::net::TcpStream::connect(&addr).unwrap();
-        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 1 }).unwrap();
+        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 1, token: None }).unwrap();
         assert!(matches!(
             read_frame(&mut s).unwrap().unwrap(),
             Frame::HelloOk { .. }
@@ -289,7 +289,7 @@ fn mid_call_disconnect_leaves_the_server_healthy() {
     };
     {
         let mut s = std::net::TcpStream::connect(&addr).unwrap();
-        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 1 }).unwrap();
+        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 1, token: None }).unwrap();
         assert!(matches!(
             read_frame(&mut s).unwrap().unwrap(),
             Frame::HelloOk { .. }
@@ -426,7 +426,7 @@ fn byte_at_a_time_frames_are_served_intact() {
     // Serialize the whole conversation locally, then dribble it.
     let gradient_id = service.kernel("gradient").unwrap().id().0;
     let mut buf = Vec::new();
-    write_frame(&mut buf, &Frame::Hello { id: 0, min: 1, max: 2 }).unwrap();
+    write_frame(&mut buf, &Frame::Hello { id: 0, min: 1, max: 2, token: None }).unwrap();
     write_frame(
         &mut buf,
         &Frame::Call {
@@ -471,7 +471,7 @@ fn mid_frame_stall_past_the_read_deadline_is_dropped_not_wedged() {
         panic!("expected tcp")
     };
     let mut s = std::net::TcpStream::connect(&addr).unwrap();
-    write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 2 }).unwrap();
+    write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 2, token: None }).unwrap();
     assert!(matches!(
         read_frame(&mut s).unwrap().unwrap(),
         Frame::HelloOk { .. }
@@ -524,7 +524,7 @@ fn drain_finishes_in_flight_work_and_survives_trailing_garbage() {
             panic!("expected tcp")
         };
         let mut s = std::net::TcpStream::connect(&addr).unwrap();
-        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 2 }).unwrap();
+        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 2, token: None }).unwrap();
         assert!(matches!(
             read_frame(&mut s).unwrap().unwrap(),
             Frame::HelloOk { .. }

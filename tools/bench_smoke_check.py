@@ -24,6 +24,14 @@ Hard gates (fail the build):
     a 150us absolute floor, whichever is larger, to absorb fast-mode
     noise) catches a regression to blocking forwarding or per-call
     threads.
+  * ``fair_tenant_p99_under_abuse_us`` (bench_perf section B8): the
+    polite tenant's p99 while a greedy tenant floods the service must
+    stay under half the flooder's own mean latency (or a 500us
+    absolute floor, whichever is larger) — under FIFO the polite p99
+    would *exceed* the flooder's mean, so this catches any regression
+    of the weighted DRR scheduler. ``fair_tenant_rejections`` must be
+    exactly 0: fairness must come from scheduling, never from shedding
+    the well-behaved tenant's load.
 
 Soft gate:
   * ``wire_call_overhead_us`` is compared against the committed
@@ -97,6 +105,30 @@ def main() -> None:
         )
     else:
         print(f"bench-smoke: router_call_overhead_us {router:.1f}us recorded")
+
+    fair_p99 = meta.get("fair_tenant_p99_under_abuse_us")
+    if fair_p99 is None:
+        fail("fair_tenant_p99_under_abuse_us missing from the bench JSON (B8 did not run)")
+    fair_rejections = meta.get("fair_tenant_rejections", 0)
+    if fair_rejections != 0:
+        fail(
+            f"fair_tenant_rejections = {fair_rejections} — the fair tenant was "
+            "load-shed instead of scheduled"
+        )
+    abusive_mean = meta.get("abusive_tenant_mean_us")
+    if isinstance(abusive_mean, (int, float)) and abusive_mean > 0:
+        bound = max(0.5 * abusive_mean, 500.0)
+        if fair_p99 > bound:
+            fail(
+                f"fair_tenant_p99_under_abuse_us = {fair_p99:.1f}us vs abusive mean "
+                f"{abusive_mean:.1f}us (bound {bound:.1f}us) — DRR isolation regressed"
+            )
+        print(
+            f"bench-smoke: fair-tenant p99 {fair_p99:.1f}us vs abusive mean "
+            f"{abusive_mean:.1f}us (within bound {bound:.1f}us, 0 rejections)"
+        )
+    else:
+        print(f"bench-smoke: fair-tenant p99 {fair_p99:.1f}us recorded (0 rejections)")
 
     baseline_wire = None
     if len(sys.argv) > 2:

@@ -12,10 +12,17 @@ Usage:
   python3 tools/wire_check.py --emit     # print the golden table (hex)
 """
 
+import hashlib
+import hmac as hmac_mod
+import random
 import struct
 import sys
 
 MAGIC = b"TMFU"
+
+TOKEN_MAC_LEN = 32
+# An anonymous Hello body: head (9) + magic (4) + min/max (4).
+ANON_HELLO_LEN = 17
 
 OP_HELLO = 0x01
 OP_HELLO_OK = 0x02
@@ -47,6 +54,7 @@ EC = {
     "invalid_kernel": 10,
     "version_mismatch": 100,
     "malformed": 101,
+    "unauthorized": 102,
 }
 
 
@@ -82,8 +90,39 @@ def batch(arity, rows):
     return u16(arity) + u32(len(rows)) + words(flat)
 
 
-def enc_hello(rid, lo, hi):
-    return head(OP_HELLO, rid) + MAGIC + u16(lo) + u16(hi)
+def token_mac(tenant, secret, nonce):
+    """HMAC-SHA256 over tenant bytes || nonce (LE), per PROTOCOL.md."""
+    msg = tenant.encode("utf-8") + u64(nonce)
+    return hmac_mod.new(secret, msg, hashlib.sha256).digest()
+
+
+def enc_hello(rid, lo, hi, token=None):
+    """token: optional (tenant, secret, nonce) triple — the v2 tenant
+    suffix. Anonymous Hellos simply omit it."""
+    body = head(OP_HELLO, rid) + MAGIC + u16(lo) + u16(hi)
+    if token is not None:
+        tenant, secret, nonce = token
+        body += string(tenant) + u64(nonce) + token_mac(tenant, secret, nonce)
+    return body
+
+
+def dec_hello(body):
+    """Mirror decoder for Hello: returns (rid, lo, hi, tenant, nonce,
+    mac) with the token fields None for an anonymous Hello. Raises on
+    anything the Rust codec would refuse as Malformed."""
+    assert body[0] == OP_HELLO
+    (rid,) = struct.unpack_from("<Q", body, 1)
+    assert body[9:13] == MAGIC, "bad magic"
+    lo, hi = struct.unpack_from("<HH", body, 13)
+    if len(body) == ANON_HELLO_LEN:
+        return rid, lo, hi, None, None, None
+    (tlen,) = struct.unpack_from("<I", body, 17)
+    tenant = body[21 : 21 + tlen].decode("utf-8")
+    assert len(body) >= 21 + tlen + 8 + TOKEN_MAC_LEN, "truncated token"
+    (nonce,) = struct.unpack_from("<Q", body, 21 + tlen)
+    mac = body[29 + tlen : 29 + tlen + TOKEN_MAC_LEN]
+    assert len(body) == 29 + tlen + TOKEN_MAC_LEN, "trailing bytes"
+    return rid, lo, hi, tenant, nonce, mac
 
 
 def enc_hello_ok(rid, version, backend):
@@ -125,8 +164,8 @@ def enc_error(rid, code, *fields):
         kernel, expected, got = fields
         body += string(kernel) + u32(expected) + u32(got)
     elif code == "rejected":
-        kernel, queued, limit = fields
-        body += string(kernel) + u64(queued) + u64(limit)
+        kernel, tenant, queued, limit = fields
+        body += string(kernel) + string(tenant) + u64(queued) + u64(limit)
     elif code == "shut_down":
         assert not fields
     elif code == "backend":
@@ -139,6 +178,9 @@ def enc_error(rid, code, *fields):
         lo, hi = fields
         body += u16(lo) + u16(hi)
     elif code == "malformed":
+        (message,) = fields
+        body += string(message)
+    elif code == "unauthorized":
         (message,) = fields
         body += string(message)
     return body
@@ -168,6 +210,7 @@ def enc_drain(rid):
 # wire::tests::golden_bytes_match_the_spec — same frames, same order.
 GOLDEN = [
     ("hello", enc_hello(0, 1, 1)),
+    ("hello_signed", enc_hello(0, 1, 2, ("acme", b"opensesame", 7))),
     ("hello_ok", enc_hello_ok(0, 1, "turbo")),
     ("resolve", enc_resolve(1, "gradient")),
     ("kernel_info", enc_kernel_info(1, 3, 5, 1)),
@@ -175,7 +218,8 @@ GOLDEN = [
     ("call_batch", enc_call_batch(3, 0, 2, [[1, -2], [3, -4], [5, -6]])),
     ("reply", enc_reply(3, 1, [[36], [-7], [12]])),
     ("call_batch_zero_rows", enc_call_batch(7, 2, 5, [])),
-    ("error_rejected", enc_error(4, "rejected", "poly6", 7, 8)),
+    ("error_rejected", enc_error(4, "rejected", "poly6", "acme", 7, 8)),
+    ("error_unauthorized", enc_error(18, "unauthorized", "bad tenant signature")),
     ("error_version_mismatch", enc_error(0, "version_mismatch", 1, 1)),
     ("get_metrics", enc_get_metrics(9)),
     ("metrics", enc_metrics(9, '{"completed":1}')),
@@ -193,6 +237,10 @@ GOLDEN = [
 # --emit after an intentional (versioned!) format change.
 EXPECTED_HEX = {
     "hello": "010000000000000000544d465501000100",
+    "hello_signed": (
+        "010000000000000000544d4655010002000400000061636d650700000000000000"
+        "e81184456412c22759ad970d88d386486a8e7c8a168201be77ac6423f813aced"
+    ),
     "hello_ok": "020000000000000000010005000000747572626f",
     "resolve": "030100000000000000080000006772616469656e74",
     "kernel_info": "0401000000000000000300000005000100",
@@ -200,7 +248,13 @@ EXPECTED_HEX = {
     "call_batch": "0603000000000000000000000002000300000001000000feffffff03000000fcffffff05000000faffffff",
     "reply": "07030000000000000001000300000024000000f9ffffff0c000000",
     "call_batch_zero_rows": "06070000000000000002000000050000000000",
-    "error_rejected": "080400000000000000040005000000706f6c793607000000000000000800000000000000",
+    "error_rejected": (
+        "080400000000000000040005000000706f6c79360400000061636d65"
+        "07000000000000000800000000000000"
+    ),
+    "error_unauthorized": (
+        "0812000000000000006600140000006261642074656e616e74207369676e6174757265"
+    ),
     "error_version_mismatch": "080000000000000000640001000100",
     "get_metrics": "090900000000000000",
     "metrics": "0a09000000000000000f0000007b22636f6d706c65746564223a317d",
@@ -233,6 +287,40 @@ def decode_smoke(payload):
     return opcode, rid
 
 
+def hello_round_trip_property(rounds=256):
+    """Random tenant Hellos survive an encode → decode round trip, and
+    the one benign truncation (cutting the whole token suffix, leaving
+    exactly the 17 anonymous-Hello bytes) decodes anonymous — every
+    other cut inside the token is refused. Mirrors the Rust property
+    `prop_signed_hellos_round_trip_and_truncate_cleanly`."""
+    rng = random.Random(0x7E4A17)
+    names = ["a", "acme", "tenant-7", "ütf8-ok", "x" * 40]
+    for _ in range(rounds):
+        tenant = rng.choice(names)
+        secret = bytes(rng.randrange(256) for _ in range(rng.randrange(1, 33)))
+        nonce = rng.randrange(1 << 64)
+        lo, hi = 1, rng.choice([1, 2])
+        body = enc_hello(3, lo, hi, (tenant, secret, nonce))
+        rid, dlo, dhi, dtenant, dnonce, dmac = dec_hello(body)
+        assert (rid, dlo, dhi) == (3, lo, hi)
+        assert dtenant == tenant and dnonce == nonce
+        assert dmac == token_mac(tenant, secret, nonce)
+        # The only cut that decodes at all is the anonymous prefix.
+        anon = dec_hello(body[:ANON_HELLO_LEN])
+        assert anon[3:] == (None, None, None)
+        cut = rng.randrange(ANON_HELLO_LEN + 1, len(body))
+        try:
+            dec_hello(body[:cut])
+        except AssertionError:
+            pass
+        except (struct.error, UnicodeDecodeError, IndexError):
+            pass
+        else:
+            raise SystemExit(
+                f"truncated token accepted at cut {cut} of {len(body)}"
+            )
+
+
 def main():
     if "--emit" in sys.argv[1:]:
         for label, payload in GOLDEN:
@@ -253,7 +341,11 @@ def main():
     if failures:
         print(f"wire mirror: {failures} golden vector(s) diverged")
         return 1
-    print(f"wire mirror: all {len(GOLDEN)} golden vectors match the spec")
+    hello_round_trip_property()
+    print(
+        f"wire mirror: all {len(GOLDEN)} golden vectors match the spec "
+        "(+ tenant-hello round-trip property)"
+    )
     return 0
 
 

@@ -56,23 +56,26 @@ verify: fmt clippy lint build test kernel-verify doc wire-smoke router-smoke ben
 # checked-in baseline JSON (packets/s per backend per kernel, sim
 # cycles/s, SIMD-turbo-vs-ref headline ratio, in-flight scaling, the
 # zero-allocation submit AND worker-loop audits + the wire and router
-# per-call overheads). Cargo runs bench binaries with cwd = the
+# per-call overheads, the tenant-fairness p99, and the deadline-shed /
+# cancel-reclaim pair). Cargo runs bench binaries with cwd = the
 # package root (rust/), hence the ../ on the path.
 bench:
-	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR9.json
+	$(CARGO) bench --bench bench_perf -- --json ../BENCH_PR10.json
 
 # Fast serving-perf gate for `make verify`/CI: run bench_perf in fast
 # mode and assert the hard invariants — submit_allocs_per_call == 0,
 # worker_allocs_per_batch == 0, the reactor thread ceiling, the raised
 # turbo floor, the router forwarding overhead staying within 3x of
 # the wire framing overhead, the fair-tenant p99 bound with zero
-# fair-tenant rejections, and (when the committed baseline carries
-# a measured number) that the wire per-call overhead did not regress.
-# bench_perf itself hard-asserts the alloc audits; the checker
-# re-asserts from the JSON so a silent bench edit cannot un-gate them.
+# fair-tenant rejections, the overload-shed p99 bound against the
+# no-shed backlog wait with the cancel-reclaim ceiling, and (when the
+# committed baseline carries a measured number) that the wire per-call
+# overhead did not regress. bench_perf itself hard-asserts the alloc
+# audits; the checker re-asserts from the JSON so a silent bench edit
+# cannot un-gate them.
 bench-smoke: build
 	TMFU_BENCH_FAST=1 $(CARGO) bench --bench bench_perf -- --json ../BENCH_SMOKE.json
-	$(PYTHON) tools/bench_smoke_check.py BENCH_SMOKE.json BENCH_PR9.json
+	$(PYTHON) tools/bench_smoke_check.py BENCH_SMOKE.json BENCH_PR10.json
 
 # Every bench target (paper tables/figures + perf).
 bench-all:

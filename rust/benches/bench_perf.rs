@@ -19,13 +19,17 @@
 //!        greedy tenant floods the same single-worker service — the
 //!        JSON reports the fair tenant's p99 under abuse, which the
 //!        smoke gate bounds against the flooder's own mean
+//!   B9   deadline shedding: the p99 latency of a typed refusal under
+//!        a 64k-row overload vs the unbudgeted backlog wait, plus the
+//!        per-call cost of reclaiming a cancelled call's slot — the
+//!        smoke gate bounds the shed p99 against the no-shed baseline
 //!   L2/L1 PJRT batch execution (artifact-gated)
 //!
 //! Run `TMFU_BENCH_FAST=1 cargo bench` for a quick pass. With
 //! `-- --json <path>` the measurements (plus the headline
 //! turbo-vs-ref speedup on poly6 at batch 1024) are written as JSON —
 //! `make bench` uses this to produce the checked-in perf trajectory
-//! baseline (`BENCH_PR9.json`).
+//! baseline (`BENCH_PR10.json`).
 
 use tmfu_overlay::arch::Pipeline;
 use tmfu_overlay::bench_suite;
@@ -541,6 +545,95 @@ fn main() -> anyhow::Result<()> {
             "\nfair-tenant p99 under abuse: {p99:.1} us (abusive tenant mean \
              {abusive_mean:.1} us, fair rejections {})",
             polite_t.rejected
+        );
+        service.shutdown()?;
+    }
+
+    section("B9 deadline shed under overload + cancel slot reclaim");
+    {
+        use std::time::{Duration, Instant};
+        // One worker, tiny dispatch quantum: the queue is the story.
+        let service = OverlayService::builder()
+            .backend(BackendKind::Turbo)
+            .pipelines(1)
+            .max_batch(4)
+            .queue_depth(1 << 17)
+            .build()?;
+        let h = service.kernel("gradient")?;
+        let inputs = [3, 5, 2, 7, 1];
+        // Prime the per-kernel service-rate EWMA so the admission
+        // feasibility check has a sample to refuse with.
+        h.call(&inputs)?;
+        let flood_rows = 256usize;
+        let flood = FlatBatch::from_rows(inputs.len(), &vec![inputs.to_vec(); flood_rows]);
+        let dump = |n: usize| {
+            (0..n).map(|_| h.submit_batch(&flood)).collect::<Result<Vec<_>, _>>()
+        };
+
+        // No-shed baseline: an unbudgeted call queued behind a 16k-row
+        // overload pays for the whole backlog before its own row runs.
+        let pending = dump(64)?;
+        let t0 = Instant::now();
+        h.call(&inputs)?;
+        let no_shed_us = t0.elapsed().as_secs_f64() * 1e6;
+        for p in pending {
+            p.wait()?;
+        }
+
+        // Shed path: the same call under a 100 us budget against a 64k-row
+        // backlog is refused typed — at admission (feasibility: queued rows
+        // x service-rate EWMA already exceed the budget) or by the bounded
+        // wait — without its row ever executing. The refusal latency is
+        // what an overloaded caller actually experiences.
+        let shed_calls = 256usize;
+        let pending = dump(256)?;
+        let mut lat_us = Vec::with_capacity(shed_calls);
+        for _ in 0..shed_calls {
+            let t = Instant::now();
+            let r = h.call_with_deadline(&inputs, Duration::from_micros(100));
+            lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+            assert!(
+                matches!(r, Err(tmfu_overlay::service::ServiceError::DeadlineExceeded { .. })),
+                "a 100 us budget against a 64k-row single-worker backlog must be \
+                 shed typed, got {r:?}"
+            );
+        }
+        lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let shed_p99_us = lat_us[(lat_us.len() * 99) / 100 - 1];
+
+        // Cancel reclaim: withdrawing a queued call releases its slab
+        // slot and purges its rows synchronously; measure the per-call
+        // cost of that reclaim while the flood still occupies the queue.
+        let cancels = 256usize;
+        let mut victims = Vec::with_capacity(cancels);
+        for _ in 0..cancels {
+            victims.push(h.submit(&inputs)?);
+        }
+        let t0 = Instant::now();
+        for mut v in victims {
+            v.cancel();
+        }
+        let cancel_reclaim_us = t0.elapsed().as_secs_f64() * 1e6 / cancels as f64;
+        for p in pending {
+            p.wait()?;
+        }
+
+        let snap = service.metrics();
+        assert_eq!(
+            snap.admitted(),
+            snap.completed + snap.failed + snap.cancelled,
+            "B9 ledger out of balance after shed + cancel churn"
+        );
+        report.set_meta("no_shed_overload_wait_us", json::f(no_shed_us));
+        report.set_meta("shed_under_overload_p99_us", json::f(shed_p99_us));
+        report.set_meta("cancel_reclaim_us", json::f(cancel_reclaim_us));
+        println!(
+            "overload shed: typed refusal p99 {shed_p99_us:.1} us vs {no_shed_us:.0} us \
+             unbudgeted backlog wait; cancel reclaim {cancel_reclaim_us:.2} us/call \
+             (cancelled {}, expired-in-queue {}, shed-at-admission {})",
+            snap.cancelled,
+            snap.expired_in_queue,
+            snap.shed_at_admission
         );
         service.shutdown()?;
     }

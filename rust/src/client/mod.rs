@@ -419,8 +419,23 @@ impl ReplyTicket {
     /// A send failed before anything reached the socket: cancel the
     /// reservation outright.
     fn cancel(&self, shared: &ClientShared) {
-        let mut s = self.slot.m.lock().unwrap();
+        let s = self.slot.m.lock().unwrap();
         if s.generation != self.generation || !matches!(s.phase, Phase::Waiting) {
+            return;
+        }
+        drop(s);
+        shared.demux.release(&self.slot, self.idx);
+    }
+
+    /// A `Cancel` frame was sent for this request: the server writes
+    /// no reply for a cancelled id, so the slot is recycled
+    /// immediately regardless of phase. A reply that raced the cancel
+    /// onto the wire arrives with a stale generation and is dropped
+    /// by the reader's `complete` — it can never land in the slot's
+    /// next life.
+    fn discard(&self, shared: &ClientShared) {
+        let s = self.slot.m.lock().unwrap();
+        if s.generation != self.generation {
             return;
         }
         drop(s);
@@ -438,6 +453,9 @@ struct ClientShared {
     writer: Mutex<BufWriter<WireStream>>,
     control: WireStream,
     demux: Demux,
+    /// Negotiated protocol version — gates the v2 extensions
+    /// (deadlines on Call frames, Cancel on drop).
+    version: u16,
     /// A connection-fatal error frame (e.g. `Malformed` with no
     /// correlatable id) reported just before the server hung up;
     /// used to explain the drain to every waiter.
@@ -508,6 +526,23 @@ impl ClientShared {
             });
         }
         Ok(ticket)
+    }
+
+    /// Fire-and-forget `Cancel` for an in-flight request id. The
+    /// server never replies to a Cancel, so there is nothing to wait
+    /// for; a write failure gets the same frame-alignment treatment
+    /// as [`Self::send_with`] (a partial frame poisons the stream).
+    fn send_cancel(&self, id: u64) {
+        let wrote = {
+            let mut w = self.writer.lock().unwrap();
+            write_frame(&mut *w, &Frame::Cancel { id }).and_then(|()| w.flush())
+        };
+        if let Err(e) = wrote {
+            if e.kind() != std::io::ErrorKind::InvalidInput {
+                self.demux.close();
+                self.control.shutdown_both();
+            }
+        }
     }
 
     /// Send + block for the one reply a request expects.
@@ -836,6 +871,7 @@ impl OverlayClient {
             writer: Mutex::new(writer),
             control,
             demux: Demux::new(),
+            version,
             fatal: Mutex::new(None),
         });
         let reader_shared = Arc::clone(&shared);
@@ -1010,30 +1046,56 @@ impl RemoteKernel {
     /// Non-blocking submit: the request is on the wire when this
     /// returns; the reply arrives on the [`RemotePending`].
     pub fn submit(&self, inputs: &[i32]) -> Result<RemotePending, ServiceError> {
-        self.submit_with(inputs, None)
+        self.submit_with(inputs, None, None)
+    }
+
+    /// [`Self::submit`] carrying a deadline budget on the wire
+    /// (wire v2): the server sheds the request at admission when the
+    /// estimated queue wait already exceeds `budget`, and evicts the
+    /// row unexecuted if the budget lapses while it is still queued —
+    /// either way the caller gets the typed
+    /// [`ServiceError::DeadlineExceeded`].
+    pub fn submit_with_deadline(
+        &self,
+        inputs: &[i32],
+        budget: Duration,
+    ) -> Result<RemotePending, ServiceError> {
+        self.require_v2("call deadline")?;
+        self.submit_with(inputs, Some(budget_us(budget)), None)
     }
 
     /// [`Self::submit`] with a completion doorbell: `target` is rung
     /// when the reply settles (or the connection dies), so a reactor
     /// can multiplex many remote calls on one wake source.
-    /// Crate-internal: the router's forwarding loop is the consumer.
+    /// Crate-internal: the router's forwarding loop is the consumer
+    /// (which is also why the deadline travels as raw microseconds —
+    /// the router forwards the *remaining* budget from the frame).
     pub(crate) fn submit_tagged(
         &self,
         inputs: &[i32],
+        deadline_us: Option<u64>,
         target: WakeTarget,
     ) -> Result<RemotePending, ServiceError> {
-        self.submit_with(inputs, Some(target))
+        self.submit_with(inputs, deadline_us, Some(target))
     }
 
     fn submit_with(
         &self,
         inputs: &[i32],
+        deadline_us: Option<u64>,
         waker: Option<WakeTarget>,
     ) -> Result<RemotePending, ServiceError> {
+        // A v1 peer cannot decode the deadline suffix: strip it
+        // rather than breach the negotiated protocol (the public
+        // deadline APIs refuse v1 outright before reaching here; the
+        // router's forwarder relies on this downgrade and keeps
+        // enforcing the budget with its own timer).
+        let deadline_us = deadline_us.filter(|_| self.shared.version >= 2);
         let ticket = self.shared.send_with(&self.name, waker, |id| Frame::Call {
             id,
             kernel: self.kernel,
             inputs: inputs.to_vec(),
+            deadline_us,
         })?;
         Ok(RemotePending {
             ticket,
@@ -1048,11 +1110,42 @@ impl RemoteKernel {
         self.submit(inputs)?.wait()
     }
 
+    /// Deadline-bounded blocking call (wire v2): the budget rides the
+    /// Call frame (server-side shed/expiry) *and* bounds the local
+    /// wait. A local timeout cancels the request on the server —
+    /// queued rows purge, the reply slot frees — so a missed deadline
+    /// leaves nothing behind on either side.
+    pub fn call_with_deadline(
+        &self,
+        inputs: &[i32],
+        budget: Duration,
+    ) -> Result<Vec<i32>, ServiceError> {
+        let mut p = self.submit_with_deadline(inputs, budget)?;
+        match p.wait_timeout(budget) {
+            Err(e @ ServiceError::DeadlineExceeded { .. }) => {
+                p.cancel();
+                Err(e)
+            }
+            other => other,
+        }
+    }
+
     /// Non-blocking batch submit: rows travel as one contiguous
     /// buffer, are admitted atomically server-side, and come back in
     /// row order on the [`RemotePendingBatch`].
     pub fn submit_batch(&self, batch: &FlatBatch) -> Result<RemotePendingBatch, ServiceError> {
-        self.submit_batch_with(batch, None)
+        self.submit_batch_with(batch, None, None)
+    }
+
+    /// Batch twin of [`Self::submit_with_deadline`] (wire v2): one
+    /// budget covers the whole batch.
+    pub fn submit_batch_with_deadline(
+        &self,
+        batch: &FlatBatch,
+        budget: Duration,
+    ) -> Result<RemotePendingBatch, ServiceError> {
+        self.require_v2("call deadline")?;
+        self.submit_batch_with(batch, Some(budget_us(budget)), None)
     }
 
     /// Batch twin of [`Self::submit_tagged`] (crate-internal, for the
@@ -1060,20 +1153,25 @@ impl RemoteKernel {
     pub(crate) fn submit_batch_tagged(
         &self,
         batch: &FlatBatch,
+        deadline_us: Option<u64>,
         target: WakeTarget,
     ) -> Result<RemotePendingBatch, ServiceError> {
-        self.submit_batch_with(batch, Some(target))
+        self.submit_batch_with(batch, deadline_us, Some(target))
     }
 
     fn submit_batch_with(
         &self,
         batch: &FlatBatch,
+        deadline_us: Option<u64>,
         waker: Option<WakeTarget>,
     ) -> Result<RemotePendingBatch, ServiceError> {
+        // Same v1 downgrade as `submit_with`.
+        let deadline_us = deadline_us.filter(|_| self.shared.version >= 2);
         let ticket = self.shared.send_with(&self.name, waker, |id| Frame::CallBatch {
             id,
             kernel: self.kernel,
             batch: batch.clone(),
+            deadline_us,
         })?;
         Ok(RemotePendingBatch {
             ticket,
@@ -1087,6 +1185,44 @@ impl RemoteKernel {
     pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
         self.submit_batch(batch)?.wait()
     }
+
+    /// Deadline-bounded blocking batch call (wire v2): same contract
+    /// as [`Self::call_with_deadline`], one budget for the batch.
+    pub fn call_batch_with_deadline(
+        &self,
+        batch: &FlatBatch,
+        budget: Duration,
+    ) -> Result<FlatBatch, ServiceError> {
+        let mut p = self.submit_batch_with_deadline(batch, budget)?;
+        match p.wait_timeout(budget) {
+            Err(e @ ServiceError::DeadlineExceeded { .. }) => {
+                p.cancel();
+                Err(e)
+            }
+            other => other,
+        }
+    }
+
+    fn require_v2(&self, what: &str) -> Result<(), ServiceError> {
+        if self.shared.version >= 2 {
+            Ok(())
+        } else {
+            Err(ServiceError::Backend {
+                backend: "wire".to_string(),
+                message: format!(
+                    "{what} requires protocol v2 (server negotiated v{})",
+                    self.shared.version
+                ),
+            })
+        }
+    }
+}
+
+/// Clamp a deadline budget to the wire's u64 microseconds.
+fn budget_us(budget: Duration) -> u64 {
+    // cast-ok: saturating — a budget past u64::MAX microseconds
+    // (584 thousand years) clamps to "effectively unbounded".
+    u64::try_from(budget.as_micros()).unwrap_or(u64::MAX)
 }
 
 // ---------------------------------------------------------------------
@@ -1173,13 +1309,33 @@ impl RemotePending {
     pub fn wait_deadline(&mut self, deadline: Instant) -> Result<Vec<i32>, ServiceError> {
         self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
     }
+
+    /// Give up on this request. On a v2 connection a `Cancel` frame
+    /// tells the server to purge the queued rows and free its reply
+    /// slot (fire-and-forget — an already-completed id is a no-op
+    /// there), and the local slot recycles immediately. On v1 the
+    /// request is merely abandoned locally. Idempotent; also what
+    /// dropping an uncollected pending does.
+    pub fn cancel(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        if self.shared.version >= 2 {
+            self.shared.send_cancel(self.ticket.request_id());
+            self.ticket.discard(&self.shared);
+        } else {
+            self.ticket.abandon(&self.shared);
+        }
+    }
 }
 
 impl Drop for RemotePending {
     fn drop(&mut self) {
-        if !self.done {
-            self.ticket.abandon(&self.shared);
-        }
+        // Dropping without collecting used to leak the server-side
+        // slab slot until the reply happened to arrive; now the drop
+        // cancels, so the server frees the slot promptly.
+        self.cancel();
     }
 }
 
@@ -1251,13 +1407,28 @@ impl RemotePendingBatch {
             }),
         }
     }
+
+    /// Give up on this batch (same contract as
+    /// [`RemotePending::cancel`]): v2 sends `Cancel` — queued rows
+    /// purge server-side, both reply slots free — v1 abandons
+    /// locally. Idempotent; also the drop path.
+    pub fn cancel(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        if self.shared.version >= 2 {
+            self.shared.send_cancel(self.ticket.request_id());
+            self.ticket.discard(&self.shared);
+        } else {
+            self.ticket.abandon(&self.shared);
+        }
+    }
 }
 
 impl Drop for RemotePendingBatch {
     fn drop(&mut self) {
-        if !self.done {
-            self.ticket.abandon(&self.shared);
-        }
+        self.cancel();
     }
 }
 

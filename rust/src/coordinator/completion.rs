@@ -626,6 +626,42 @@ impl CompletionSlab {
         }
     }
 
+    /// Cancel a reservation whose still-queued rows have already been
+    /// evicted from the engine queues: `queued_rows_removed` of the
+    /// slot's outstanding rows will never see a worker write, so they
+    /// are discounted here. Rows a worker already holds (gathered but
+    /// not yet completed) finish normally into the abandoned slot,
+    /// and the last of them frees it. A Ready slot frees immediately
+    /// (the result is discarded); a stale ticket is a no-op. Returns
+    /// whether the ticket was live.
+    pub(crate) fn cancel(&self, t: Ticket, queued_rows_removed: u32) -> bool {
+        let shard = self.shard_of(t.slot);
+        let mut st = shard.m.lock_unpoisoned();
+        let local = self.local_index(t.slot);
+        {
+            let slot = &mut st.slots[local];
+            if slot.generation != t.generation {
+                return false;
+            }
+            if slot.state == SlotState::Pending {
+                debug_assert!(
+                    slot.remaining >= queued_rows_removed,
+                    "cancel removes more rows than remain"
+                );
+                slot.remaining = slot.remaining.saturating_sub(queued_rows_removed);
+                slot.abandoned = true;
+                slot.waker = None;
+                if slot.remaining > 0 {
+                    // A worker still owns some rows; the last completion
+                    // frees the abandoned slot.
+                    return true;
+                }
+            }
+        }
+        Self::free_slot(&mut st, local);
+        true
+    }
+
     /// Safety net for engine teardown: any slot still pending after
     /// the workers have been joined can never complete normally (a
     /// worker died mid-batch). Fail them all with `err` so no waiter
@@ -820,6 +856,31 @@ mod tests {
         // Double-abandon (stale by then) is harmless.
         slab.abandon(t);
         assert_eq!(slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn cancel_frees_queued_rows_immediately_and_defers_to_workers() {
+        let slab = CompletionSlab::new(1);
+        // Fully queued: cancelling all three rows frees on the spot.
+        let b = FlatBatch::from_rows(1, &[vec![1], vec![2], vec![3]]);
+        let t = slab.reserve_batch(&b, 1, None);
+        assert!(slab.cancel(t, 3));
+        assert_eq!(slab.live_slots(), 0);
+        // Partially executing: two rows evicted from the queue, one
+        // already in a worker's hands — the slot stays live (abandoned)
+        // until that row completes.
+        let t = slab.reserve_batch(&b, 1, None);
+        assert!(slab.cancel(t, 2));
+        assert_eq!(slab.live_slots(), 1, "worker still owns a row");
+        complete_one(&slab, t, 0, vec![9]);
+        assert_eq!(slab.live_slots(), 0);
+        // Ready: frees immediately, result discarded.
+        let t = slab.reserve(&[5], 1, None);
+        complete_one(&slab, t, 0, vec![10]);
+        assert!(slab.cancel(t, 0));
+        assert_eq!(slab.live_slots(), 0);
+        // Stale ticket: a no-op that reports dead.
+        assert!(!slab.cancel(t, 0));
     }
 
     #[test]

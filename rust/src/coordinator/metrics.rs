@@ -41,6 +41,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// EWMA weight on the previous estimate when folding in a new
+/// service-rate sample (new = old·α + sample·(1−α)).
+const SERVICE_RATE_ALPHA: f64 = 0.8;
+
 /// Per-batch timing facts recorded alongside the counters.
 #[derive(Debug, Clone, Copy)]
 pub(crate) struct BatchTiming {
@@ -70,14 +74,29 @@ struct Heavy {
 
 /// One tenant's admission ledger, all atomics (the submit path and
 /// settlement probes never lock). Invariant after a drain:
-/// `admitted == completed + failed` (rejected requests were never
-/// admitted and appear only in `rejected`).
+/// `admitted == completed + failed + cancelled` (rejected and shed
+/// requests were never admitted and appear only in their own
+/// counters). `expired_in_queue` is a *view* onto `failed` — rows
+/// whose deadline lapsed before a worker took them are failed typed
+/// `DeadlineExceeded` and additionally counted here.
 #[derive(Debug)]
 struct TenantLedger {
     admitted: AtomicU64,
     rejected: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    /// Queued rows removed by an explicit `Cancel` before any worker
+    /// took them (rows already mid-execution settle as `completed`
+    /// into an abandoned slot instead).
+    cancelled: AtomicU64,
+    /// Subset of `failed`: rows that expired waiting in the queue and
+    /// never reached a backend.
+    expired_in_queue: AtomicU64,
+    /// Requests refused at admission because the estimated queue wait
+    /// already exceeded their deadline budget (never admitted; a
+    /// sibling of `rejected`, kept separate so capacity rejections and
+    /// deadline sheds stay distinguishable).
+    shed_at_admission: AtomicU64,
 }
 
 impl TenantLedger {
@@ -87,6 +106,9 @@ impl TenantLedger {
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            expired_in_queue: AtomicU64::new(0),
+            shed_at_admission: AtomicU64::new(0),
         }
     }
 }
@@ -106,8 +128,21 @@ pub(crate) struct Metrics {
     /// reply window (excluding this accumulator's own sample pushes).
     /// Zero in steady state — the bench hard-asserts it.
     worker_allocs: AtomicU64,
+    /// Queued rows removed by explicit `Cancel` (ledger term: see
+    /// [`TenantLedger`]).
+    cancelled: AtomicU64,
+    /// Rows failed `DeadlineExceeded` at take time, subset of `failed`.
+    expired_in_queue: AtomicU64,
+    /// Requests shed at admission for an infeasible deadline budget.
+    shed_at_admission: AtomicU64,
     /// Per-tenant ledgers, dense by [`TenantId`].
     tenants: Vec<TenantLedger>,
+    /// Per-kernel service-rate EWMA (µs of wall time per row, f64
+    /// bits), dense by [`KernelId`]. 0-bits means "no sample yet" —
+    /// admission feasibility skips the check rather than shedding on a
+    /// guess. Updated racily (load/blend/store) by workers; the
+    /// estimate tolerates a lost sample.
+    service_rate_us: Vec<AtomicU64>,
     heavy: Mutex<Heavy>,
 }
 
@@ -123,7 +158,11 @@ impl Metrics {
             batch_size_sum: AtomicU64::new(0),
             context_switches: AtomicU64::new(0),
             worker_allocs: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            expired_in_queue: AtomicU64::new(0),
+            shed_at_admission: AtomicU64::new(0),
             tenants: (0..n_tenants).map(|_| TenantLedger::new()).collect(),
+            service_rate_us: (0..n_kernels).map(|_| AtomicU64::new(0)).collect(),
             heavy: Mutex::new(Heavy {
                 latency_us: Samples::new(),
                 queue_wait_us: Samples::new(),
@@ -223,6 +262,67 @@ impl Metrics {
             .fetch_add(n, Ordering::Release);
     }
 
+    /// Count `n` queued rows of `tenant` removed by an explicit
+    /// `Cancel` before execution. Third settlement term:
+    /// `admitted == completed + failed + cancelled`.
+    pub(crate) fn record_cancelled(&self, tenant: TenantId, n: u64) {
+        // Ledger counter (see `completed`): settlement probes read it
+        // cross-thread, so publish with Release.
+        self.cancelled.fetch_add(n, Ordering::Release);
+        self.tenants[tenant.index()]
+            .cancelled
+            .fetch_add(n, Ordering::Release);
+    }
+
+    /// Count `n` rows of `tenant` whose deadline lapsed in the queue.
+    /// Callers pair this with [`Self::record_failed`] — expiry *is* a
+    /// failure; this counter just names the cause.
+    pub(crate) fn record_expired(&self, tenant: TenantId, n: u64) {
+        // Ledger counter (see `completed`): settlement probes read it
+        // cross-thread, so publish with Release.
+        self.expired_in_queue.fetch_add(n, Ordering::Release);
+        self.tenants[tenant.index()]
+            .expired_in_queue
+            .fetch_add(n, Ordering::Release);
+    }
+
+    /// Count `n` requests of `tenant` shed at admission because their
+    /// deadline budget could not cover the estimated queue wait.
+    pub(crate) fn record_shed(&self, tenant: TenantId, n: u64) {
+        // Ledger counter (see `completed`): settlement probes read it
+        // cross-thread, so publish with Release.
+        self.shed_at_admission.fetch_add(n, Ordering::Release);
+        self.tenants[tenant.index()]
+            .shed_at_admission
+            .fetch_add(n, Ordering::Release);
+    }
+
+    /// Fold one measured service-rate sample (wall µs per row) for
+    /// `kernel` into the EWMA the admission feasibility check reads.
+    pub(crate) fn record_service_rate(&self, kernel: KernelId, us_per_row: f64) {
+        if !us_per_row.is_finite() || us_per_row <= 0.0 {
+            return;
+        }
+        let cell = &self.service_rate_us[kernel.index()];
+        // relaxed-ok: advisory estimate; a torn/lost blend only skews
+        // the shed heuristic, never a ledger.
+        let old = f64::from_bits(cell.load(Ordering::Relaxed));
+        let new = if old == 0.0 {
+            us_per_row
+        } else {
+            old * SERVICE_RATE_ALPHA + us_per_row * (1.0 - SERVICE_RATE_ALPHA)
+        };
+        // relaxed-ok: advisory estimate, see above.
+        cell.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current service-rate estimate for `kernel` (wall µs per row),
+    /// 0.0 until the first executed batch provides a sample.
+    pub(crate) fn service_rate_us(&self, kernel: KernelId) -> f64 {
+        // relaxed-ok: advisory estimate (see `record_service_rate`).
+        f64::from_bits(self.service_rate_us[kernel.index()].load(Ordering::Relaxed))
+    }
+
     /// Count `n` heap allocations observed on a worker's dispatch path
     /// (lock-free; recorded once per batch, usually with `n == 0`).
     pub(crate) fn record_worker_allocs(&self, n: u64) {
@@ -258,6 +358,9 @@ impl Metrics {
             completed: self.completed.load(Ordering::Acquire),
             rejected: self.rejected.load(Ordering::Acquire),
             failed: self.failed.load(Ordering::Acquire),
+            cancelled: self.cancelled.load(Ordering::Acquire),
+            expired_in_queue: self.expired_in_queue.load(Ordering::Acquire),
+            shed_at_admission: self.shed_at_admission.load(Ordering::Acquire),
             // relaxed-ok: statistics; the heavy lock above already
             // fences this snapshot against record_batch.
             batches: self.batches.load(Ordering::Relaxed),
@@ -277,6 +380,9 @@ impl Metrics {
                     rejected: t.rejected.load(Ordering::Acquire),
                     completed: t.completed.load(Ordering::Acquire),
                     failed: t.failed.load(Ordering::Acquire),
+                    cancelled: t.cancelled.load(Ordering::Acquire),
+                    expired_in_queue: t.expired_in_queue.load(Ordering::Acquire),
+                    shed_at_admission: t.shed_at_admission.load(Ordering::Acquire),
                     latency_us: lat.clone(),
                 })
                 .collect(),
@@ -295,6 +401,9 @@ pub(crate) struct RawTenant {
     pub(crate) rejected: u64,
     pub(crate) completed: u64,
     pub(crate) failed: u64,
+    pub(crate) cancelled: u64,
+    pub(crate) expired_in_queue: u64,
+    pub(crate) shed_at_admission: u64,
     pub(crate) latency_us: Samples,
 }
 
@@ -305,6 +414,12 @@ pub(crate) struct RawMetrics {
     pub(crate) completed: u64,
     pub(crate) rejected: u64,
     pub(crate) failed: u64,
+    /// Queued rows removed by explicit `Cancel` before execution.
+    pub(crate) cancelled: u64,
+    /// Subset of `failed`: rows expired in the queue, never executed.
+    pub(crate) expired_in_queue: u64,
+    /// Requests shed at admission (infeasible deadline, never admitted).
+    pub(crate) shed_at_admission: u64,
     pub(crate) batches: u64,
     pub(crate) batch_size_sum: u64,
     pub(crate) context_switches: u64,
@@ -408,6 +523,51 @@ mod tests {
         assert_eq!(raw.completed, 6);
         assert_eq!(raw.rejected, 3);
         assert_eq!(raw.failed, 2);
+    }
+
+    #[test]
+    fn deadline_counters_extend_the_ledger() {
+        let m = Metrics::new(1, 2);
+        // T0: 10 admitted → 5 completed + 3 failed (2 of them queue
+        // expiries) + 2 cancelled; 4 shed at the door.
+        m.record_admitted(T0, 10);
+        m.record_batch(KernelId(0), T0, 5, timing(false, 0.0, 1.0), std::iter::empty());
+        m.record_failed(T0, 3);
+        m.record_expired(T0, 2);
+        m.record_cancelled(T0, 2);
+        m.record_shed(T0, 4);
+        let raw = m.raw_snapshot();
+        let t0 = &raw.per_tenant[0];
+        assert_eq!(t0.admitted, t0.completed + t0.failed + t0.cancelled);
+        assert_eq!(
+            (t0.cancelled, t0.expired_in_queue, t0.shed_at_admission),
+            (2, 2, 4)
+        );
+        assert!(t0.expired_in_queue <= t0.failed);
+        // Globals mirror the per-tenant sums; T1 stays untouched.
+        assert_eq!(
+            (raw.cancelled, raw.expired_in_queue, raw.shed_at_admission),
+            (2, 2, 4)
+        );
+        let t1 = &raw.per_tenant[1];
+        assert_eq!((t1.cancelled, t1.shed_at_admission), (0, 0));
+    }
+
+    #[test]
+    fn service_rate_ewma_blends_and_ignores_junk() {
+        let m = Metrics::new(2, 1);
+        let k = KernelId(0);
+        assert_eq!(m.service_rate_us(k), 0.0);
+        m.record_service_rate(k, 10.0); // first sample adopted whole
+        assert!((m.service_rate_us(k) - 10.0).abs() < 1e-9);
+        m.record_service_rate(k, 20.0); // 10·0.8 + 20·0.2 = 12
+        assert!((m.service_rate_us(k) - 12.0).abs() < 1e-9);
+        m.record_service_rate(k, f64::NAN);
+        m.record_service_rate(k, -5.0);
+        m.record_service_rate(k, 0.0);
+        assert!((m.service_rate_us(k) - 12.0).abs() < 1e-9);
+        // Kernels are independent.
+        assert_eq!(m.service_rate_us(KernelId(1)), 0.0);
     }
 
     #[test]

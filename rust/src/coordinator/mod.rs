@@ -76,7 +76,7 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Why a submit was refused at the door (before any queueing). A
 /// `Full` rejection reports whichever bound tripped — the submitting
@@ -89,6 +89,12 @@ pub(crate) enum SubmitRejection {
     ShutDown,
     /// The tenant's quota or the kernel's queue is at its limit.
     Full { queued: usize, limit: usize },
+    /// The request carried a deadline budget the queue can no longer
+    /// honor: estimated wait (per-kernel service-rate EWMA × queued
+    /// rows ÷ workers) already exceeds the remaining budget, so the
+    /// request is shed at the door instead of queueing doomed work.
+    /// The service layer reports this as `DeadlineExceeded`.
+    Infeasible,
 }
 
 /// One tenant's admission policy, index-aligned with the dense
@@ -131,6 +137,9 @@ pub(crate) struct Shared {
     /// The one completion structure every in-flight request shares.
     pub(crate) slab: CompletionSlab,
     pub(crate) metrics: Metrics,
+    /// Worker count, for the admission feasibility estimate (queued
+    /// work drains `workers`-wide).
+    workers: usize,
 }
 
 struct QueueState {
@@ -153,6 +162,7 @@ impl Shared {
         id: KernelId,
         inputs: &[i32],
         n_outputs: usize,
+        deadline: Option<Instant>,
         waker: Option<WakeTarget>,
     ) -> Result<Ticket, SubmitRejection> {
         let mut st = self.queues.lock_unpoisoned();
@@ -164,9 +174,15 @@ impl Shared {
             self.metrics.record_rejected(tenant, 1);
             return Err(SubmitRejection::Full { queued, limit });
         }
+        if self.deadline_infeasible(&st.qs, id, deadline) {
+            drop(st);
+            self.metrics.record_shed(tenant, 1);
+            return Err(SubmitRejection::Infeasible);
+        }
         let ticket = self.slab.reserve(inputs, n_outputs, waker);
         let entry = Queued {
             enqueued: Instant::now(),
+            deadline,
             token: RowSpan {
                 ticket,
                 row: 0,
@@ -195,6 +211,7 @@ impl Shared {
         id: KernelId,
         batch: &FlatBatch,
         n_outputs: usize,
+        deadline: Option<Instant>,
         waker: Option<WakeTarget>,
     ) -> Result<Ticket, SubmitRejection> {
         let n = batch.n_rows();
@@ -207,12 +224,18 @@ impl Shared {
             self.metrics.record_rejected(tenant, n as u64);
             return Err(SubmitRejection::Full { queued, limit });
         }
+        if self.deadline_infeasible(&st.qs, id, deadline) {
+            drop(st);
+            self.metrics.record_shed(tenant, n as u64);
+            return Err(SubmitRejection::Infeasible);
+        }
         let ticket = self.slab.reserve_batch(batch, n_outputs, waker);
         // A zero-row batch is born Ready in the slab and never queues
         // (the service layer refuses empty batches before this point).
         if n > 0 {
             let entry = Queued {
                 enqueued: Instant::now(),
+                deadline,
                 token: RowSpan {
                     ticket,
                     row: 0,
@@ -229,10 +252,63 @@ impl Shared {
         Ok(ticket)
     }
 
+    /// Whether `deadline` is already hopeless given the current queue
+    /// for `id` (see [`SubmitRejection::Infeasible`]). Conservative on
+    /// cold start: with no service-rate sample yet the check always
+    /// passes — lazy expiry at take time is the backstop.
+    fn deadline_infeasible(
+        &self,
+        qs: &QueueSet<RowSpan>,
+        id: KernelId,
+        deadline: Option<Instant>,
+    ) -> bool {
+        let Some(d) = deadline else { return false };
+        let rate = self.metrics.service_rate_us(id);
+        if rate <= 0.0 {
+            return false;
+        }
+        let budget = d.saturating_duration_since(Instant::now());
+        infeasible(qs.queued_for(id), rate, self.workers, budget)
+    }
+
+    /// Cancel every still-queued row of `ticket` and release (or mark
+    /// abandoned) its completion slot. Rows a worker already took keep
+    /// executing and settle as `completed` into the abandoned slot —
+    /// only the purged rows move to the `cancelled` ledger term, which
+    /// is what keeps `admitted == completed + failed + cancelled`
+    /// exact. Returns the number of rows removed from the queue.
+    /// Idempotent: a stale ticket (already settled and collected, or
+    /// already cancelled) is a no-op.
+    pub(crate) fn cancel(&self, tenant: TenantId, ticket: Ticket) -> usize {
+        let removed = {
+            let mut st = self.queues.lock_unpoisoned();
+            st.qs.purge(|span| span.ticket == ticket)
+        };
+        // cast-ok: `removed` is bounded by the per-kernel queue depth,
+        // far below u32::MAX.
+        let live = self.slab.cancel(ticket, removed as u32);
+        if live && removed > 0 {
+            self.metrics.record_cancelled(tenant, removed as u64);
+        }
+        removed
+    }
+
     /// Whether the engine has stopped admitting requests.
     pub(crate) fn is_shut_down(&self) -> bool {
         self.queues.lock_unpoisoned().shutdown
     }
+}
+
+/// The admission feasibility estimate, pure for unit testing: can a
+/// request whose remaining budget is `budget` plausibly clear
+/// `queued_rows` rows of backlog when each row costs `rate_us_per_row`
+/// µs of wall time and the backlog drains `workers`-wide? Estimates
+/// optimistically (perfect worker parallelism, no switch cost) so a
+/// shed only fires when the budget is hopeless even under the rosiest
+/// model — a false shed is worse than a late expiry.
+fn infeasible(queued_rows: usize, rate_us_per_row: f64, workers: usize, budget: Duration) -> bool {
+    let est_wait_us = queued_rows as f64 * rate_us_per_row / workers.max(1) as f64;
+    est_wait_us > budget.as_secs_f64() * 1e6
 }
 
 /// Check both admission bounds for `n` rows without mutating anything:
@@ -338,6 +414,7 @@ impl Engine {
                 cfg.slab_trim_words,
             ),
             metrics: Metrics::new(registry.len(), cfg.tenants.len()),
+            workers: cfg.workers,
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut workers = Vec::new();
@@ -483,6 +560,7 @@ fn worker_loop(
     // nothing per batch — audited below with a thread-local
     // allocation counter and published through the metrics.
     let mut items: Vec<Queued<RowSpan>> = Vec::new();
+    let mut expired: Vec<Queued<RowSpan>> = Vec::new();
     let mut spans: Vec<RowSpan> = Vec::new();
     let mut bad: Vec<RowSpan> = Vec::new();
     let mut inputs = FlatBatch::default();
@@ -491,10 +569,13 @@ fn worker_loop(
         let taken = {
             let mut st = shared.queues.lock_unpoisoned();
             loop {
-                if let Some(k) =
-                    st.qs
-                        .take_batch_into(context, max_batch, Instant::now(), &mut items)
-                {
+                if let Some(k) = st.qs.take_batch_into(
+                    context,
+                    max_batch,
+                    Instant::now(),
+                    &mut items,
+                    &mut expired,
+                ) {
                     break Some(k);
                 }
                 if st.shutdown {
@@ -506,6 +587,33 @@ fn worker_loop(
         let Some((batch_kernel, batch_tenant)) = taken else {
             return Ok(());
         };
+        // Lazy expiry (before the zero-alloc bracket opens — the typed
+        // error below allocates, and expiry is an exceptional path):
+        // rows whose deadline lapsed while queued are failed
+        // `DeadlineExceeded` right here and **never reach the
+        // backend** — the overload acceptance test pins that via
+        // backend execute counters. They land in `failed` (plus the
+        // `expired_in_queue` cause counter), keeping the ledger exact.
+        if !expired.is_empty() {
+            let kernel_name = registry
+                .kernel(batch_kernel)
+                .map_or("?", |k| k.name.as_str());
+            let err = ExecError::DeadlineExceeded {
+                kernel: kernel_name.to_string(),
+            };
+            spans.clear();
+            spans.extend(expired.iter().map(|it| it.token));
+            let rows: u64 = spans.iter().map(|s| s.len as u64).sum();
+            shared.metrics.record_failed(batch_tenant, rows);
+            shared.metrics.record_expired(batch_tenant, rows);
+            shared.slab.complete_spans_err(&spans, &err);
+            expired.clear();
+            if items.is_empty() {
+                // The whole take had expired — nothing to execute, and
+                // `fabric_exec_cycles` refuses empty batches anyway.
+                continue;
+            }
+        }
         // Zero-allocation audit, bracket 1 of 2: take → metrics
         // record. (`record_batch` itself is excluded — its sample
         // buffers are unbounded by design; everything else on the
@@ -576,6 +684,7 @@ fn worker_loop(
         // still dies; the next `shutdown` reports it, as before).
         let mut replied = false;
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let exec_started = Instant::now();
             let result = backend.execute_into(kernel, &inputs, &mut report);
             let now = Instant::now();
             match result {
@@ -645,6 +754,13 @@ fn worker_loop(
                             (0..it.token.len).map(move |_| wait)
                         }),
                     );
+                    // Feed the admission feasibility estimate one
+                    // measured wall-µs-per-row sample (atomic blend,
+                    // allocation-free — safe inside the audit window).
+                    shared.metrics.record_service_rate(
+                        batch_kernel,
+                        now.duration_since(exec_started).as_secs_f64() * 1e6 / n as f64,
+                    );
                     // Bracket 2: reply writes (bulk, in place).
                     let allocs_at_reply = thread_alloc_count();
                     shared.slab.complete_spans_ok(&spans, &report.outputs);
@@ -708,7 +824,7 @@ mod tests {
         let id = eng.registry().id_of("gradient").unwrap();
         let mut tickets = Vec::new();
         for i in 0..20i32 {
-            tickets.push(eng.shared().submit(TenantId::DEFAULT, id, &[3, 5, 2, 7, i], 1, None).unwrap());
+            tickets.push(eng.shared().submit(TenantId::DEFAULT, id, &[3, 5, 2, 7, i], 1, None, None).unwrap());
         }
         // Drain semantics: shutdown must answer everything already
         // admitted even if nothing has been collected yet.
@@ -736,7 +852,7 @@ mod tests {
         let id = eng.registry().id_of("gradient").unwrap();
         let rows: Vec<Vec<i32>> = (0..131i32).map(|i| vec![3, 5, 2, 7, i]).collect();
         let batch = FlatBatch::from_rows(5, &rows);
-        let t = eng.shared().submit_batch(TenantId::DEFAULT, id, &batch, 1, None).unwrap();
+        let t = eng.shared().submit_batch(TenantId::DEFAULT, id, &batch, 1, None, None).unwrap();
         let mut out = FlatBatch::default();
         eng.shared()
             .slab
@@ -764,12 +880,12 @@ mod tests {
         eng.shutdown().unwrap();
         assert!(shared.is_shut_down());
         assert_eq!(
-            shared.submit(TenantId::DEFAULT, id, &[0; 5], 1, None).unwrap_err(),
+            shared.submit(TenantId::DEFAULT, id, &[0; 5], 1, None, None).unwrap_err(),
             SubmitRejection::ShutDown
         );
         let batch = FlatBatch::from_rows(5, &[vec![0; 5]]);
         assert_eq!(
-            shared.submit_batch(TenantId::DEFAULT, id, &batch, 1, None).unwrap_err(),
+            shared.submit_batch(TenantId::DEFAULT, id, &batch, 1, None, None).unwrap_err(),
             SubmitRejection::ShutDown
         );
     }
@@ -795,7 +911,7 @@ mod tests {
         // deterministically Full regardless of worker progress.
         let rows: Vec<Vec<i32>> = (0..3).map(|_| vec![0; 5]).collect();
         let batch = FlatBatch::from_rows(5, &rows);
-        match eng.shared().submit_batch(TenantId::DEFAULT, id, &batch, 1, None) {
+        match eng.shared().submit_batch(TenantId::DEFAULT, id, &batch, 1, None, None) {
             Err(SubmitRejection::Full { limit, .. }) => assert_eq!(limit, 2),
             other => panic!("expected Full, got {other:?}"),
         }
@@ -805,6 +921,151 @@ mod tests {
         assert_eq!(eng.completed(), 0);
         assert_eq!(eng.shared().slab.live_slots(), 0);
         eng.shutdown().unwrap();
+    }
+
+    #[test]
+    fn infeasibility_estimate_math() {
+        // 1000 queued rows at 100 µs/row over 4 workers ⇒ 25 ms of
+        // estimated wait: a 20 ms budget is hopeless, 30 ms is not.
+        assert!(infeasible(1000, 100.0, 4, Duration::from_millis(20)));
+        assert!(!infeasible(1000, 100.0, 4, Duration::from_millis(30)));
+        // An empty queue is always feasible, even with zero budget.
+        assert!(!infeasible(0, 100.0, 4, Duration::ZERO));
+        // Degenerate worker count clamps to 1 instead of dividing by 0.
+        assert!(infeasible(10, 100.0, 0, Duration::from_micros(500)));
+    }
+
+    #[test]
+    fn expired_rows_fail_typed_without_executing() {
+        let eng = engine(BackendKind::Turbo, 1, 8);
+        let id = eng.registry().id_of("gradient").unwrap();
+        // Deadlines already lapsed at submit time: admission lets them
+        // through (no service-rate sample yet, so feasibility is
+        // skipped) and lazy expiry evicts them at take time.
+        let past = Instant::now();
+        let mut tickets = Vec::new();
+        for i in 0..8i32 {
+            tickets.push(
+                eng.shared()
+                    .submit(TenantId::DEFAULT, id, &[3, 5, 2, 7, i], 1, Some(past), None)
+                    .unwrap(),
+            );
+        }
+        let mut out = Vec::new();
+        for t in tickets {
+            let err = eng
+                .shared()
+                .slab
+                .wait_row(t, None, &mut out)
+                .expect("no wait deadline")
+                .unwrap_err();
+            assert!(matches!(err, ExecError::DeadlineExceeded { .. }), "{err}");
+        }
+        eng.shutdown().unwrap();
+        let raw = eng.raw_metrics();
+        let t0 = &raw.per_tenant[0];
+        assert_eq!(t0.admitted, 8);
+        assert_eq!(t0.failed, 8);
+        assert_eq!(t0.expired_in_queue, 8);
+        assert_eq!(t0.admitted, t0.completed + t0.failed + t0.cancelled);
+        // Nothing executed: zero batches is the backend-side proof
+        // that expired rows never reached it.
+        assert_eq!(raw.batches, 0);
+        assert_eq!(raw.completed, 0);
+        assert_eq!(eng.shared().slab.live_slots(), 0);
+    }
+
+    #[test]
+    fn cancel_purges_queued_rows_and_frees_the_slot() {
+        // Keep the single worker busy on a long batch so follow-up
+        // requests reliably sit queued when the cancel lands. If the
+        // worker wins the race anyway, the cancel degrades to an
+        // abandon (rows settle as completed into a freed slot) — the
+        // ledger must balance either way.
+        let eng = engine(BackendKind::Sim, 1, 8);
+        let id = eng.registry().id_of("gradient").unwrap();
+        let rows: Vec<Vec<i32>> = (0..2048i32).map(|i| vec![3, 5, 2, 7, i]).collect();
+        let big = FlatBatch::from_rows(5, &rows);
+        let big_t = eng
+            .shared()
+            .submit_batch(TenantId::DEFAULT, id, &big, 1, None, None)
+            .unwrap();
+        let mut cancelled = 0u64;
+        for i in 0..8i32 {
+            let t = eng
+                .shared()
+                .submit(TenantId::DEFAULT, id, &[0, 0, 0, 0, i], 1, None, None)
+                .unwrap();
+            cancelled += eng.shared().cancel(TenantId::DEFAULT, t) as u64;
+        }
+        // The cancelled ticket is dead — nobody collects it. The big
+        // batch still completes in full.
+        let mut out = FlatBatch::default();
+        eng.shared()
+            .slab
+            .wait_batch(big_t, None, &mut out)
+            .expect("no wait deadline")
+            .unwrap();
+        assert_eq!(out.n_rows(), 2048);
+        eng.shutdown().unwrap();
+        let raw = eng.raw_metrics();
+        let t0 = &raw.per_tenant[0];
+        assert_eq!(t0.cancelled, cancelled);
+        assert_eq!(t0.admitted, 2048 + 8);
+        assert_eq!(t0.admitted, t0.completed + t0.failed + t0.cancelled);
+        // Occupancy: cancelled slots were freed on the spot, raced
+        // ones were freed by their last completion (abandon), and the
+        // collected batch recycled normally.
+        assert_eq!(eng.shared().slab.live_slots(), 0);
+        // A second cancel of an already-dead ticket is a no-op.
+        assert!(cancelled > 0, "expected at least one queued cancel");
+    }
+
+    #[test]
+    fn infeasible_deadline_is_shed_at_the_door() {
+        let eng = engine(BackendKind::Sim, 1, 8);
+        let id = eng.registry().id_of("gradient").unwrap();
+        // Pretend history says each row costs ~1 s of service: any
+        // backlog at all makes a 1 ms budget hopeless.
+        eng.shared().metrics.record_service_rate(id, 1e6);
+        let rows: Vec<Vec<i32>> = (0..4096i32).map(|i| vec![3, 5, 2, 7, i]).collect();
+        let big = FlatBatch::from_rows(5, &rows);
+        let big_t = eng
+            .shared()
+            .submit_batch(TenantId::DEFAULT, id, &big, 1, None, None)
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_millis(1);
+        let r = eng
+            .shared()
+            .submit(TenantId::DEFAULT, id, &[0; 5], 1, Some(deadline), None);
+        assert_eq!(r.unwrap_err(), SubmitRejection::Infeasible);
+        // A deadline-free request sails past the feasibility check.
+        let ok_t = eng
+            .shared()
+            .submit(TenantId::DEFAULT, id, &[0; 5], 1, None, None)
+            .unwrap();
+        let mut out = FlatBatch::default();
+        eng.shared()
+            .slab
+            .wait_batch(big_t, None, &mut out)
+            .expect("no wait deadline")
+            .unwrap();
+        let mut row = Vec::new();
+        eng.shared()
+            .slab
+            .wait_row(ok_t, None, &mut row)
+            .expect("no wait deadline")
+            .unwrap();
+        eng.shutdown().unwrap();
+        let raw = eng.raw_metrics();
+        let t0 = &raw.per_tenant[0];
+        assert_eq!(t0.shed_at_admission, 1);
+        assert_eq!(raw.shed_at_admission, 1);
+        // Shed requests were never admitted: the ledger balances
+        // without them, and no slab slot was reserved.
+        assert_eq!(t0.admitted, 4096 + 1);
+        assert_eq!(t0.admitted, t0.completed + t0.failed + t0.cancelled);
+        assert_eq!(eng.shared().slab.live_slots(), 0);
     }
 
     #[test]

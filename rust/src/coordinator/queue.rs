@@ -106,12 +106,17 @@ impl SpanToken for u32 {
     }
 }
 
-/// One queued request span: when it arrived, and the token that
-/// locates its inputs and completion slot (a reply channel would be an
-/// allocation; a slab span is three words).
+/// One queued request span: when it arrived, an optional absolute
+/// deadline, and the token that locates its inputs and completion slot
+/// (a reply channel would be an allocation; a slab span is three
+/// words).
 #[derive(Debug, Clone, Copy)]
 pub(crate) struct Queued<T> {
     pub(crate) enqueued: Instant,
+    /// Absolute budget boundary: a span still queued past it is
+    /// **expired** at take time (handed to the caller to fail typed)
+    /// instead of executed — stale work never reaches a backend.
+    pub(crate) deadline: Option<Instant>,
     pub(crate) token: T,
 }
 
@@ -280,6 +285,13 @@ impl<T: SpanToken> QueueSet<T> {
     /// iteration of this one) picks up where this take stopped, and
     /// one oversized batch fans out across every idle worker.
     ///
+    /// **Lazy expiry**: a front span whose deadline has passed by
+    /// `now` is popped whole into `expired` (cleared first) instead of
+    /// `out` — it spends no deficit and no batch budget, and the
+    /// caller fails it typed without executing. A take may therefore
+    /// return `Some` with an empty `out` when everything it
+    /// encountered was stale.
+    ///
     /// Returns the chosen kernel and the tenant whose lane it came
     /// from, or `None` when nothing is queued.
     pub(crate) fn take_batch_into(
@@ -288,8 +300,10 @@ impl<T: SpanToken> QueueSet<T> {
         max_batch: usize,
         now: Instant,
         out: &mut Vec<Queued<T>>,
+        expired: &mut Vec<Queued<T>>,
     ) -> Option<(KernelId, TenantId)> {
         out.clear();
+        expired.clear();
         if self.is_empty() {
             return None;
         }
@@ -331,8 +345,16 @@ impl<T: SpanToken> QueueSet<T> {
         };
         let q = &mut lane.queues[kernel.index()];
         let mut taken = 0usize;
+        let mut stale = 0usize;
         while taken < budget {
             let Some(front) = q.front_mut() else { break };
+            // Lazy expiry: a dead span leaves whole (its deadline
+            // covers every row) and costs no deficit.
+            if front.deadline.map_or(false, |d| d <= now) {
+                stale += front.token.rows();
+                expired.push(q.pop_front().unwrap());
+                continue;
+            }
             let span_rows = front.token.rows();
             debug_assert!(span_rows > 0, "zero-row span in queue");
             if span_rows <= budget - taken {
@@ -341,13 +363,15 @@ impl<T: SpanToken> QueueSet<T> {
             } else {
                 let head = Queued {
                     enqueued: front.enqueued,
+                    deadline: front.deadline,
                     token: front.token.take_front(budget - taken),
                 };
                 taken = budget;
                 out.push(head);
             }
         }
-        lane.kernel_rows[kernel.index()] -= taken;
+        let removed = taken + stale;
+        lane.kernel_rows[kernel.index()] -= removed;
         if lane.kernel_rows[kernel.index()] == 0 {
             let pos = lane
                 .nonempty
@@ -356,7 +380,7 @@ impl<T: SpanToken> QueueSet<T> {
                 .expect("drained kernel is tracked as non-empty");
             lane.nonempty.swap_remove(pos);
         }
-        lane.queued -= taken;
+        lane.queued -= removed;
         lane.deficit -= taken as u64;
         if lane.queued == 0 {
             lane.in_ring = false;
@@ -366,11 +390,54 @@ impl<T: SpanToken> QueueSet<T> {
             let front = self.ring.pop_front().expect("served lane was at front");
             self.ring.push_back(front);
         }
-        self.rows[kernel.index()] -= taken;
-        self.total_queued -= taken;
+        self.rows[kernel.index()] -= removed;
+        self.total_queued -= removed;
         // cast-ok: lane indices come from the ring, which only holds
         // indices of the lanes vec (sized from a u32-indexed table).
         Some((kernel, TenantId(lane_idx as u32)))
+    }
+
+    /// Remove every queued span matching `pred` — the cancellation
+    /// path: a `Cancel` evicts a request's still-queued rows so they
+    /// never reach a backend. Accounting (lane rows, quotas, kernel
+    /// depths, `total_queued`) is fixed up in place; a lane emptied
+    /// here stays in the DRR ring and is popped defensively at the
+    /// next take. Returns rows removed.
+    pub(crate) fn purge(&mut self, mut pred: impl FnMut(&T) -> bool) -> usize {
+        let mut removed = 0usize;
+        for lane in &mut self.lanes {
+            for ki in 0..lane.queues.len() {
+                if lane.kernel_rows[ki] == 0 {
+                    continue;
+                }
+                let mut rows_gone = 0usize;
+                lane.queues[ki].retain(|e| {
+                    if pred(&e.token) {
+                        rows_gone += e.token.rows();
+                        false
+                    } else {
+                        true
+                    }
+                });
+                if rows_gone == 0 {
+                    continue;
+                }
+                lane.kernel_rows[ki] -= rows_gone;
+                if lane.kernel_rows[ki] == 0 {
+                    let pos = lane
+                        .nonempty
+                        .iter()
+                        .position(|&i| i as usize == ki)
+                        .expect("purged kernel is tracked as non-empty");
+                    lane.nonempty.swap_remove(pos);
+                }
+                lane.queued -= rows_gone;
+                self.rows[ki] -= rows_gone;
+                self.total_queued -= rows_gone;
+                removed += rows_gone;
+            }
+        }
+        removed
     }
 }
 
@@ -385,6 +452,7 @@ mod tests {
     fn pend(token: u32) -> Queued<u32> {
         Queued {
             enqueued: Instant::now(),
+            deadline: None,
             token,
         }
     }
@@ -395,7 +463,9 @@ mod tests {
         max: usize,
     ) -> Option<(KernelId, Vec<Queued<T>>)> {
         let mut out = Vec::new();
-        let (k, _tenant) = qs.take_batch_into(ctx, max, Instant::now(), &mut out)?;
+        let mut expired = Vec::new();
+        let (k, _tenant) = qs.take_batch_into(ctx, max, Instant::now(), &mut out, &mut expired)?;
+        assert!(expired.is_empty(), "deadline-free spans never expire");
         Some((k, out))
     }
 
@@ -428,6 +498,16 @@ mod tests {
     fn span(id: u32, row: u32, len: u32) -> Queued<Span> {
         Queued {
             enqueued: Instant::now(),
+            deadline: None,
+            token: Span { id, row, len },
+        }
+    }
+
+    /// A span whose deadline already passed when it was enqueued.
+    fn dead_span(id: u32, row: u32, len: u32) -> Queued<Span> {
+        Queued {
+            enqueued: Instant::now(),
+            deadline: Some(Instant::now()),
             token: Span { id, row, len },
         }
     }
@@ -478,13 +558,14 @@ mod tests {
             qs.try_push(A, pend(i)).unwrap();
         }
         let mut out = Vec::new();
-        qs.take_batch_into(None, 4, Instant::now(), &mut out).unwrap();
+        let mut exp = Vec::new();
+        qs.take_batch_into(None, 4, Instant::now(), &mut out, &mut exp).unwrap();
         assert_eq!(out.len(), 4);
         assert_eq!(out[0].token, 0);
         assert_eq!(out[3].token, 3);
         assert_eq!(qs.queued_for(A), 6);
         // The same buffer serves the next batch: cleared, not leaked.
-        qs.take_batch_into(None, 4, Instant::now(), &mut out).unwrap();
+        qs.take_batch_into(None, 4, Instant::now(), &mut out, &mut exp).unwrap();
         assert_eq!(out.len(), 4);
         assert_eq!(out[0].token, 4);
     }
@@ -573,6 +654,7 @@ mod tests {
             A, // starved
             Queued {
                 enqueued: old,
+                deadline: None,
                 token: 0u32,
             },
         )
@@ -596,8 +678,9 @@ mod tests {
         }
         qs.try_push(B, pend(999)).unwrap();
         let mut out = Vec::new();
+        let mut exp = Vec::new();
         let mut drained = 0;
-        while let Some(_k) = qs.take_batch_into(None, 64, Instant::now(), &mut out) {
+        while let Some(_k) = qs.take_batch_into(None, 64, Instant::now(), &mut out, &mut exp) {
             drained += out.len();
         }
         assert_eq!(drained, 513);
@@ -627,7 +710,8 @@ mod tests {
         }
         let mut order = Vec::new();
         let mut out = Vec::new();
-        while let Some((_k, tenant)) = qs.take_batch_into(None, 4, Instant::now(), &mut out) {
+        let mut exp = Vec::new();
+        while let Some((_k, tenant)) = qs.take_batch_into(None, 4, Instant::now(), &mut out, &mut exp) {
             assert_eq!(out.len(), 4, "every take drains a full batch here");
             order.push(tenant.0);
         }
@@ -646,8 +730,11 @@ mod tests {
         }
         let mut drained = [0usize; 2];
         let mut out = Vec::new();
+        let mut exp = Vec::new();
         for _ in 0..9 {
-            let (_k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+            let (_k, t) = qs
+                .take_batch_into(None, 8, Instant::now(), &mut out, &mut exp)
+                .unwrap();
             drained[t.index()] += out.len();
         }
         // 9 takes = 3 whole rounds of (heavy, heavy, light).
@@ -702,9 +789,12 @@ mod tests {
             qs.try_push_for(T1, A, pend(9000 + i)).unwrap();
         }
         let mut out = Vec::new();
+        let mut exp = Vec::new();
         let mut takes_until_polite = 0;
         loop {
-            let (_k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+            let (_k, t) = qs
+                .take_batch_into(None, 8, Instant::now(), &mut out, &mut exp)
+                .unwrap();
             takes_until_polite += 1;
             if t == T1 {
                 break;
@@ -731,22 +821,160 @@ mod tests {
         }
         qs.try_push_for(T1, A, pend(99)).unwrap();
         let mut out = Vec::new();
+        let mut exp = Vec::new();
         // Affinity steers the first take to kernel A, which runs dry
         // at 3 of the 8-row deficit: the lane keeps the ring head.
-        let (k, t) = qs.take_batch_into(Some(A), 8, Instant::now(), &mut out).unwrap();
+        let (k, t) = qs
+            .take_batch_into(Some(A), 8, Instant::now(), &mut out, &mut exp)
+            .unwrap();
         assert_eq!((k, t), (A, T0));
         assert_eq!(out.len(), 3);
         // Remaining deficit (5) caps the next take from the same lane.
-        let (k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+        let (k, t) = qs
+            .take_batch_into(None, 8, Instant::now(), &mut out, &mut exp)
+            .unwrap();
         assert_eq!((k, t), (B, T0));
         assert_eq!(out.len(), 5);
         // Deficit spent: the lane rotated behind T1.
-        let (k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+        let (k, t) = qs
+            .take_batch_into(None, 8, Instant::now(), &mut out, &mut exp)
+            .unwrap();
         assert_eq!((k, t), (A, T1));
         assert_eq!(out.len(), 1);
-        let (k, t) = qs.take_batch_into(None, 8, Instant::now(), &mut out).unwrap();
+        let (k, t) = qs
+            .take_batch_into(None, 8, Instant::now(), &mut out, &mut exp)
+            .unwrap();
         assert_eq!((k, t), (B, T0));
         assert_eq!(out.len(), 3);
+        assert!(qs.is_empty());
+    }
+
+    // ── Lazy expiry + cancellation purge ────────────────────────────
+
+    #[test]
+    fn expired_spans_surface_at_take_without_spending_budget() {
+        let mut qs = QueueSet::new(1, 64);
+        qs.try_push(A, dead_span(1, 0, 3)).unwrap();
+        qs.try_push(A, span(2, 0, 4)).unwrap();
+        qs.try_push(A, dead_span(3, 0, 2)).unwrap();
+        qs.try_push(A, span(4, 0, 4)).unwrap();
+        assert_eq!(qs.queued_for(A), 13);
+        let mut out = Vec::new();
+        let mut exp = Vec::new();
+        // Budget 8: both dead spans pop into `expired` for free, both
+        // live spans fill the batch.
+        let (k, _) = qs
+            .take_batch_into(None, 8, Instant::now(), &mut out, &mut exp)
+            .unwrap();
+        assert_eq!(k, A);
+        assert_eq!(
+            out.iter().map(|q| q.token.id).collect::<Vec<_>>(),
+            vec![2, 4]
+        );
+        assert_eq!(
+            exp.iter().map(|q| q.token.id).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        // Expired rows left the accounting too: nothing queued.
+        assert!(qs.is_empty());
+        assert_eq!(qs.queued_for(A), 0);
+    }
+
+    #[test]
+    fn all_expired_take_returns_some_with_empty_out() {
+        let mut qs = QueueSet::new(1, 64);
+        qs.try_push(A, dead_span(1, 0, 5)).unwrap();
+        qs.try_push(A, dead_span(2, 0, 5)).unwrap();
+        let mut out = Vec::new();
+        let mut exp = Vec::new();
+        let got = qs.take_batch_into(None, 4, Instant::now(), &mut out, &mut exp);
+        assert_eq!(got, Some((A, TenantId::DEFAULT)));
+        assert!(out.is_empty(), "nothing executable was taken");
+        assert_eq!(exp.len(), 2);
+        assert!(qs.is_empty());
+        // The set stays serviceable afterwards.
+        qs.try_push(A, span(3, 0, 1)).unwrap();
+        let (k, items) = take(&mut qs, None, 4).unwrap();
+        assert_eq!(k, A);
+        assert_eq!(items.len(), 1);
+    }
+
+    #[test]
+    fn future_deadlines_do_not_expire() {
+        let mut qs = QueueSet::new(1, 64);
+        qs.try_push(
+            A,
+            Queued {
+                enqueued: Instant::now(),
+                deadline: Some(Instant::now() + std::time::Duration::from_secs(60)),
+                token: Span { id: 1, row: 0, len: 2 },
+            },
+        )
+        .unwrap();
+        let (k, items) = take(&mut qs, None, 8).unwrap();
+        assert_eq!(k, A);
+        assert_eq!(items.len(), 1);
+        // A split head inherits the deadline of its parent span.
+        qs.try_push(
+            A,
+            Queued {
+                enqueued: Instant::now(),
+                deadline: Some(Instant::now() + std::time::Duration::from_secs(60)),
+                token: Span { id: 2, row: 0, len: 6 },
+            },
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        let mut exp = Vec::new();
+        qs.take_batch_into(None, 4, Instant::now(), &mut out, &mut exp)
+            .unwrap();
+        assert!(out[0].deadline.is_some(), "split head keeps the deadline");
+        assert!(exp.is_empty());
+    }
+
+    #[test]
+    fn purge_removes_matching_spans_with_full_accounting() {
+        let mut qs: QueueSet<Span> = QueueSet::with_tenants(2, 64, &[(1, 64), (1, 64)]);
+        qs.try_push_for(T0, A, span(1, 0, 3)).unwrap();
+        qs.try_push_for(T0, B, span(1, 3, 2)).unwrap();
+        qs.try_push_for(T0, A, span(2, 0, 4)).unwrap();
+        qs.try_push_for(T1, A, span(3, 0, 5)).unwrap();
+        assert_eq!(qs.total_queued, 14);
+        // Cancel request 1: both its spans leave, everything else stays.
+        let removed = qs.purge(|t| t.id == 1);
+        assert_eq!(removed, 5);
+        assert_eq!(qs.total_queued, 9);
+        assert_eq!(qs.queued_for(A), 9);
+        assert_eq!(qs.queued_for(B), 0);
+        assert_eq!(qs.tenant_queued(T0), 4);
+        assert_eq!(qs.tenant_queued(T1), 5);
+        // Purging a token nobody holds is a no-op.
+        assert_eq!(qs.purge(|t| t.id == 77), 0);
+        // The survivors still drain normally through the DRR ring
+        // (including the lane/kernel purge emptied).
+        let mut drained = 0;
+        while let Some((_k, items)) = take(&mut qs, None, 64) {
+            drained += items.iter().map(|q| q.token.rows()).sum::<usize>();
+        }
+        assert_eq!(drained, 9);
+        assert!(qs.is_empty());
+    }
+
+    #[test]
+    fn purge_that_empties_a_lane_leaves_the_ring_serviceable() {
+        let mut qs: QueueSet<Span> = QueueSet::with_tenants(1, 64, &[(1, 64), (1, 64)]);
+        qs.try_push_for(T0, A, span(1, 0, 4)).unwrap();
+        qs.try_push_for(T1, A, span(2, 0, 4)).unwrap();
+        // Empty T0's lane entirely; its stale ring slot must not wedge
+        // or misattribute the next take.
+        assert_eq!(qs.purge(|t| t.id == 1), 4);
+        let mut out = Vec::new();
+        let mut exp = Vec::new();
+        let (k, t) = qs
+            .take_batch_into(None, 8, Instant::now(), &mut out, &mut exp)
+            .unwrap();
+        assert_eq!((k, t), (A, T1));
+        assert_eq!(out.len(), 1);
         assert!(qs.is_empty());
     }
 }

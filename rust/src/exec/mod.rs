@@ -227,6 +227,10 @@ pub enum ExecError {
         backend: &'static str,
         message: String,
     },
+    /// The request's deadline budget was exhausted while it waited in
+    /// the queue — the rows were evicted without ever executing
+    /// (lazy expiry; see `coordinator::queue`).
+    DeadlineExceeded { kernel: String },
 }
 
 impl fmt::Display for ExecError {
@@ -245,6 +249,9 @@ impl fmt::Display for ExecError {
                 write!(f, "kernel '{kernel}': batch of {got} exceeds backend max {max}")
             }
             ExecError::Backend { backend, message } => write!(f, "{backend} backend: {message}"),
+            ExecError::DeadlineExceeded { kernel } => {
+                write!(f, "kernel '{kernel}': deadline exceeded while queued")
+            }
         }
     }
 }

@@ -35,13 +35,22 @@ use tmfu_overlay::wire::server::{install_sigterm_drain, ServerCtl, WireServer};
 use tmfu_overlay::wire::ListenAddr;
 use tmfu_overlay::{bench_suite, dfg, frontend, report, sched};
 
+/// Exit code for a typed [`ServiceError::DeadlineExceeded`]: scripts
+/// driving `tmfu call --deadline-ms` can tell "the budget lapsed"
+/// (retry with a bigger budget, or accept the shed) apart from every
+/// other failure without parsing stderr.
+const EXIT_DEADLINE: u8 = 3;
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match run(&args) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("{e}");
-            ExitCode::FAILURE
+            match e.downcast_ref::<ServiceError>() {
+                Some(ServiceError::DeadlineExceeded { .. }) => ExitCode::from(EXIT_DEADLINE),
+                _ => ExitCode::FAILURE,
+            }
         }
     }
 }
@@ -116,6 +125,18 @@ fn commands() -> Vec<Command> {
             .opt("count", "submit the call this many times (burst mode)", Some("1"))
             .opt("retries", "reconnect-and-retry budget on retryable failures", Some("0"))
             .opt("timeout-ms", "overall deadline across all retries", Some("30000"))
+            .opt(
+                "deadline-ms",
+                "per-call deadline budget carried on the wire (v2; 0 = none): the server \
+                 sheds or expires the call instead of executing it late",
+                Some("0"),
+            )
+            .opt(
+                "cancel-after-ms",
+                "submit, wait this many ms, then cancel instead of collecting the reply \
+                 (exercises the Cancel opcode; exits 0)",
+                None,
+            )
             .opt("tenant", "tenant name to authenticate as", None)
             .opt("secret", "shared secret for --tenant (signs the Hello)", None)
             .flag("metrics", "also fetch and print the server metrics JSON"),
@@ -453,6 +474,12 @@ fn call(m: &Matches) -> anyhow::Result<()> {
     let count = m.get_usize("count").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let retries = m.get_usize("retries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let timeout_ms = m.get_usize("timeout-ms").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let deadline_ms = m.get_usize("deadline-ms").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let budget = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64));
+    let cancel_after = m
+        .get_usize("cancel-after-ms")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .map(|ms| Duration::from_millis(ms as u64));
     anyhow::ensure!(count >= 1, "--count must be at least 1");
     let mut builder = OverlayClient::builder();
     if let Some(tenant) = m.get("tenant") {
@@ -465,6 +492,26 @@ fn call(m: &Matches) -> anyhow::Result<()> {
         );
         builder = builder.secret(secret.as_bytes());
     }
+    // Cancel mode: submit, linger, then withdraw the calls with the
+    // wire `Cancel` opcode instead of collecting replies. The server
+    // purges queued rows and frees the reply slots; nothing leaks.
+    if let Some(linger) = cancel_after {
+        let client = builder.connect(addr)?;
+        let remote = client.kernel(kernel)?;
+        let mut pendings = Vec::with_capacity(count);
+        for _ in 0..count {
+            match budget {
+                Some(b) => pendings.push(remote.submit_with_deadline(&inputs, b)?),
+                None => pendings.push(remote.submit(&inputs)?),
+            }
+        }
+        std::thread::sleep(linger);
+        for p in &mut pendings {
+            p.cancel();
+        }
+        eprintln!("cancelled {count} call(s) after {} ms", linger.as_millis());
+        return Ok(());
+    }
     let deadline = Instant::now() + Duration::from_millis(timeout_ms as u64);
     // Same retry policy as the router: capped exponential backoff,
     // only for failures classified retryable, all under one deadline.
@@ -472,7 +519,7 @@ fn call(m: &Matches) -> anyhow::Result<()> {
     let mut done = 0usize;
     let mut attempt = 0usize;
     let out = loop {
-        match call_round(&builder, addr, kernel, &inputs, count - done, deadline) {
+        match call_round(&builder, addr, kernel, &inputs, count - done, budget, deadline) {
             Ok(row) => break row,
             Err((ok, e)) => {
                 done += ok;
@@ -505,7 +552,8 @@ fn call(m: &Matches) -> anyhow::Result<()> {
 }
 
 /// One `tmfu call` round over a fresh connection: submit `n` copies of
-/// the call, wait them all out under `deadline`. `Ok` with the output
+/// the call (each carrying `budget` on the wire when `--deadline-ms`
+/// is set), wait them all out under `deadline`. `Ok` with the output
 /// row when every call succeeded; otherwise the number that did
 /// succeed plus the first typed error (the retry loop's classifier
 /// input).
@@ -515,6 +563,7 @@ fn call_round(
     kernel: &str,
     inputs: &[i32],
     n: usize,
+    budget: Option<Duration>,
     deadline: Instant,
 ) -> Result<Vec<i32>, (usize, ServiceError)> {
     let client = builder.connect(addr).map_err(|e| (0, e))?;
@@ -522,7 +571,11 @@ fn call_round(
     let mut first_err: Option<ServiceError> = None;
     let mut pendings = Vec::with_capacity(n);
     for _ in 0..n {
-        match remote.submit(inputs) {
+        let submitted = match budget {
+            Some(b) => remote.submit_with_deadline(inputs, b),
+            None => remote.submit(inputs),
+        };
+        match submitted {
             Ok(p) => pendings.push(p),
             Err(e) => {
                 first_err = Some(e);

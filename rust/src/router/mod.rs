@@ -26,10 +26,20 @@
 //! kernel) are *not* retried and fail fast with their typed error.
 //!
 //! The ledger invariant the chaos tests assert: every admitted request
-//! settles exactly once — a bit-exact `Reply` or a typed `Error`
-//! before its deadline — so `admitted == completed + failed` on
-//! [`table::RouterMetrics`] once traffic quiesces, even when a backend
-//! is `kill -9`ed mid-burst.
+//! settles exactly once — a bit-exact `Reply`, a typed `Error`, or an
+//! upstream `Cancel` withdrawal — so `admitted == completed + failed +
+//! cancelled` on [`table::RouterMetrics`] once traffic quiesces, even
+//! when a backend is `kill -9`ed mid-burst.
+//!
+//! Deadlines propagate end to end: a v2 `Call` carrying `deadline_us`
+//! caps the per-call deadline at `min(budget, call_deadline)`, every
+//! downstream dispatch forwards the *remaining* budget (decremented by
+//! the time already burned at this hop), and a retry is only armed
+//! when the remaining budget can still cover the fastest replica's
+//! reply-latency EWMA — otherwise the call settles typed immediately
+//! instead of burning the budget on a dispatch doomed to expire. An
+//! upstream `Cancel` cancels the downstream dispatch in turn, so the
+//! withdrawal reaches the backend's queue.
 
 pub mod replica;
 pub mod table;
@@ -40,7 +50,8 @@ use crate::exec::FlatBatch;
 use crate::service::ServiceError;
 use crate::util::json::Json;
 use crate::wire::server::{
-    bind_listener, frame_name, malformed, sigterm_drain_requested, unknown_kernel, ServerCtl,
+    bind_listener, deadline_requires_v2, frame_name, malformed, sigterm_drain_requested,
+    unknown_kernel, ServerCtl,
 };
 use crate::util::sync::LockExt;
 use crate::wire::{
@@ -49,7 +60,7 @@ use crate::wire::{
 };
 use anyhow::{Context, Result};
 use replica::{monitor, Replica, ReplicaTuning};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -408,13 +419,21 @@ struct ForwardEntry {
     tenant: Arc<str>,
     payload: Payload,
     deadline: Instant,
+    /// The upstream Call carried a `deadline_us` budget: forward the
+    /// remaining budget on every downstream dispatch. (The router's
+    /// own `call_deadline` is never forwarded — it bounds retries
+    /// locally without imposing wire deadlines on v1 backends.)
+    budgeted: bool,
     /// Dispatch attempts performed so far (first attempt included).
     dispatches: u32,
     backoff: Backoff,
     pending: Option<DownPending>,
     /// Where `pending` was dispatched: replica index + link epoch, for
-    /// the passive `mark_down` report on a transport-shaped failure.
+    /// the passive `mark_down` report on a transport-shaped failure
+    /// (and the latency-EWMA credit on success).
     dispatched: Option<(usize, u64)>,
+    /// When `pending` went out; the reply latency sample on success.
+    dispatched_at: Option<Instant>,
     /// Set when admission dispatch failed retryably: the reactor arms
     /// this retry timer when it absorbs the registration.
     retry_at: Option<Instant>,
@@ -439,6 +458,9 @@ struct FwdState {
     outbox: VecDeque<Frame>,
     /// New admitted entries (upstream request id → entry).
     submitted: Vec<(u64, ForwardEntry)>,
+    /// Upstream ids withdrawn by a `Cancel` frame; the reactor settles
+    /// them (cancelling the downstream dispatch) without a reply.
+    cancels: Vec<u64>,
     /// Upstream ids whose downstream reply became ready.
     ready: Vec<u64>,
     reader_done: bool,
@@ -451,6 +473,7 @@ impl FwdShared {
             m: Mutex::new(FwdState {
                 outbox: VecDeque::new(),
                 submitted: Vec::new(),
+                cancels: Vec::new(),
                 ready: Vec::new(),
                 reader_done: false,
                 dead: false,
@@ -479,6 +502,15 @@ impl FwdShared {
         drop(st);
         self.cv.notify_all();
         true
+    }
+
+    /// The upstream peer cancelled this request id (fire-and-forget —
+    /// no reply frame results, whether or not the id was in flight).
+    fn push_cancel(&self, id: u64) {
+        let mut st = self.m.lock_unpoisoned();
+        st.cancels.push(id);
+        drop(st);
+        self.cv.notify_all();
     }
 
     fn finish_reader(&self) {
@@ -536,15 +568,23 @@ fn admit(
     name: String,
     tenant: Arc<str>,
     payload: Payload,
+    deadline_us: Option<u64>,
 ) {
     shared.metrics.admit();
     shared.metrics.tenant_admit(&tenant);
     let now = Instant::now();
+    // A client budget tightens (never loosens) the router's own
+    // per-call bound; the remaining budget is re-derived from this
+    // deadline at every dispatch, so each hop sees it decremented by
+    // the time already burned here.
+    let budget = deadline_us.map(Duration::from_micros);
+    let deadline = now + budget.map_or(shared.cfg.call_deadline, |b| b.min(shared.cfg.call_deadline));
     let mut entry = ForwardEntry {
         name,
         tenant,
         payload,
-        deadline: now + shared.cfg.call_deadline,
+        deadline,
+        budgeted: budget.is_some(),
         dispatches: 0,
         // Jitter decorrelates concurrent retries; the id keeps it
         // deterministic per request.
@@ -555,6 +595,7 @@ fn admit(
         ),
         pending: None,
         dispatched: None,
+        dispatched_at: None,
         retry_at: None,
         last_error: None,
     };
@@ -599,18 +640,29 @@ fn dispatch(
     entry.dispatches += 1;
     let (kernel, idx, epoch) = shared.table.pick(&entry.name)?;
     let waker: Arc<dyn Wake> = Arc::clone(fwd) as Arc<dyn Wake>;
+    let now = Instant::now();
+    // Budget decrement per hop: what rides the downstream frame is
+    // what is left of the client's budget *now*, not what it started
+    // with. (The client connection strips it for v1 backends.)
+    let forward_us = entry.budgeted.then(|| {
+        let remaining = entry.deadline.saturating_duration_since(now);
+        // cast-ok: saturating — a remaining budget past u64::MAX
+        // microseconds clamps to "effectively unbounded".
+        u64::try_from(remaining.as_micros()).unwrap_or(u64::MAX)
+    });
     let submitted = match &entry.payload {
         Payload::Row(inputs) => kernel
-            .submit_tagged(inputs, (waker, id))
+            .submit_tagged(inputs, forward_us, (waker, id))
             .map(DownPending::Call),
         Payload::Batch(batch) => kernel
-            .submit_batch_tagged(batch, (waker, id))
+            .submit_batch_tagged(batch, forward_us, (waker, id))
             .map(DownPending::Batch),
     };
     match submitted {
         Ok(pending) => {
             entry.pending = Some(pending);
             entry.dispatched = Some((idx, epoch));
+            entry.dispatched_at = Some(now);
             Ok(())
         }
         Err(e) => {
@@ -656,11 +708,16 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
     // Doorbell tags that arrived before their registration; retried
     // next wake-up.
     let mut carry: Vec<u64> = Vec::new();
+    // Ids cancelled after their downstream reply was already ready:
+    // the doorbell rang, but the result was consumed by the cancel —
+    // drop the stale ring when it surfaces. Bounded: each entry is
+    // drained by exactly one ring.
+    let mut stale_rings: HashSet<u64> = HashSet::new();
     // (fire time, upstream id): per-entry deadline + armed retries.
     // Linear scans — bounded by the peer's in-flight window.
     let mut timers: Vec<(Instant, u64)> = Vec::new();
     loop {
-        let (mut frames, new_inflight, rung) = {
+        let (mut frames, new_inflight, cancels, rung) = {
             let mut st = fwd.m.lock_unpoisoned();
             loop {
                 if st.dead {
@@ -675,7 +732,10 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
                 }
                 let now = Instant::now();
                 let next_timer = timers.iter().map(|(t, _)| *t).min();
-                let idle = st.outbox.is_empty() && st.submitted.is_empty() && st.ready.is_empty();
+                let idle = st.outbox.is_empty()
+                    && st.submitted.is_empty()
+                    && st.cancels.is_empty()
+                    && st.ready.is_empty();
                 if !idle || next_timer.is_some_and(|t| t <= now) {
                     break;
                 }
@@ -693,6 +753,7 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
             (
                 std::mem::take(&mut st.outbox),
                 std::mem::take(&mut st.submitted),
+                std::mem::take(&mut st.cancels),
                 std::mem::take(&mut st.ready),
             )
         };
@@ -702,6 +763,29 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
                 timers.push((t, id));
             }
             inflight.insert(id, e);
+        }
+        // Upstream cancellations: settle without a reply. Dropping
+        // the entry's still-outstanding downstream pending sends a
+        // `Cancel` to the replica in turn (v2), so the withdrawal
+        // propagates all the way to the backend's queue; a reply that
+        // was already ready is consumed here and its ring dropped
+        // when it surfaces.
+        for id in cancels {
+            let Some(mut entry) = inflight.remove(&id) else {
+                // Already settled (or never admitted): a no-op.
+                continue;
+            };
+            let ready = match entry.pending.as_mut() {
+                Some(DownPending::Call(p)) => p.poll().is_some(),
+                Some(DownPending::Batch(p)) => p.poll().is_some(),
+                None => false,
+            };
+            if ready {
+                stale_rings.insert(id);
+            }
+            shared.metrics.cancel();
+            shared.metrics.tenant_settle(&entry.tenant);
+            fwd.ctl.inflight_sub(1);
         }
         let mut write_err = false;
         // Reader-ordered frames first.
@@ -717,6 +801,11 @@ fn forward_reactor(shared: &Arc<RouterShared>, fwd: &Arc<FwdShared>, stream: Wir
         let tags: Vec<u64> = carry.drain(..).chain(rung).collect();
         let now = Instant::now();
         for tag in tags {
+            if stale_rings.remove(&tag) {
+                // The reply behind this ring was consumed by a
+                // cancel; the request is already settled.
+                continue;
+            }
             if !inflight.contains_key(&tag) {
                 // Rung before registered; the registration's notify
                 // re-wakes us right after it lands.
@@ -799,6 +888,14 @@ fn poll_entry(
     match polled? {
         Ok(batch) => {
             let entry = inflight.remove(&tag).expect("entry vanished mid-poll");
+            // Credit the replica's latency EWMA — the retry gate's
+            // estimate of what one more dispatch would cost.
+            if let (Some((idx, _)), Some(at)) = (entry.dispatched, entry.dispatched_at) {
+                shared
+                    .table
+                    .replica(idx)
+                    .record_latency(now.saturating_duration_since(at).as_secs_f64() * 1e6);
+            }
             shared.metrics.complete();
             shared.metrics.tenant_settle(&entry.tenant);
             fwd.ctl.inflight_sub(1);
@@ -816,9 +913,11 @@ fn poll_entry(
                 }
                 entry.pending = None;
                 entry.dispatched = None;
+                entry.dispatched_at = None;
                 if retryable(&e)
                     && now < entry.deadline
                     && entry.dispatches <= shared.cfg.max_retries
+                    && budget_covers_retry(shared, entry, now)
                 {
                     entry.last_error = Some(e);
                     timers.push((now + entry.backoff.next_delay(), tag));
@@ -831,6 +930,20 @@ fn poll_entry(
             settle(shared, fwd, tag, inflight, outcome)
         }
     }
+}
+
+/// Can the remaining deadline budget plausibly cover one more
+/// dispatch? The cheapest estimate available is the fastest up
+/// replica's reply-latency EWMA; with no sample yet the gate stays
+/// open (optimistic, like the engine's admission feasibility check —
+/// a false refusal is worse than a late expiry).
+fn budget_covers_retry(shared: &RouterShared, entry: &ForwardEntry, now: Instant) -> bool {
+    let best_us = shared.table.min_latency_us();
+    if best_us <= 0.0 {
+        return true;
+    }
+    let remaining = entry.deadline.saturating_duration_since(now);
+    remaining.as_secs_f64() * 1e6 > best_us
 }
 
 /// A timer fired for `id`: the deadline passed, or an armed retry is
@@ -861,16 +974,25 @@ fn fire_timer(
             // out; the deadline timer is still tracked. Spurious.
             Outcome::Keep
         } else {
-            // An armed retry is due: re-dispatch.
-            match dispatch(shared, fwd, id, entry) {
-                Ok(()) => Outcome::Keep,
-                Err(e) if retryable(&e) && entry.dispatches <= shared.cfg.max_retries => {
-                    entry.last_error = Some(e);
-                    timers.push((now + entry.backoff.next_delay(), id));
-                    shared.metrics.retry();
-                    Outcome::Keep
+            // An armed retry is due: re-dispatch — unless the budget
+            // left cannot cover even the fastest replica, in which
+            // case settle with the failure that armed the retry.
+            if !budget_covers_retry(shared, entry, now) {
+                let e = entry.last_error.take().unwrap_or(ServiceError::DeadlineExceeded {
+                    kernel: entry.name.clone(),
+                });
+                Outcome::Settle(e)
+            } else {
+                match dispatch(shared, fwd, id, entry) {
+                    Ok(()) => Outcome::Keep,
+                    Err(e) if retryable(&e) && entry.dispatches <= shared.cfg.max_retries => {
+                        entry.last_error = Some(e);
+                        timers.push((now + entry.backoff.next_delay(), id));
+                        shared.metrics.retry();
+                        Outcome::Keep
+                    }
+                    Err(e) => Outcome::Settle(e),
                 }
-                Err(e) => Outcome::Settle(e),
             }
         }
     };
@@ -1009,19 +1131,56 @@ fn serve_forward(
                 };
                 fwd.push_frame(reply);
             }
-            Frame::Call { id, kernel, inputs } => {
+            Frame::Call {
+                id,
+                kernel,
+                inputs,
+                deadline_us,
+            } => {
+                if deadline_us.is_some() && version < 2 {
+                    fwd.push_frame(deadline_requires_v2(id, version));
+                    return;
+                }
                 let Some(name) = shared.name_of(kernel) else {
                     fwd.push_frame(unknown_kernel(id, kernel));
                     continue;
                 };
-                admit(shared, fwd, id, name, Arc::clone(&tenant), Payload::Row(inputs));
+                admit(
+                    shared,
+                    fwd,
+                    id,
+                    name,
+                    Arc::clone(&tenant),
+                    Payload::Row(inputs),
+                    deadline_us,
+                );
             }
-            Frame::CallBatch { id, kernel, batch } => {
+            Frame::CallBatch {
+                id,
+                kernel,
+                batch,
+                deadline_us,
+            } => {
+                if deadline_us.is_some() && version < 2 {
+                    fwd.push_frame(deadline_requires_v2(id, version));
+                    return;
+                }
                 let Some(name) = shared.name_of(kernel) else {
                     fwd.push_frame(unknown_kernel(id, kernel));
                     continue;
                 };
-                admit(shared, fwd, id, name, Arc::clone(&tenant), Payload::Batch(batch));
+                admit(
+                    shared,
+                    fwd,
+                    id,
+                    name,
+                    Arc::clone(&tenant),
+                    Payload::Batch(batch),
+                    deadline_us,
+                );
+            }
+            Frame::Cancel { id } if version >= 2 => {
+                fwd.push_cancel(id);
             }
             Frame::GetMetrics { id } => {
                 let json = shared.metrics.to_json(&shared.table).to_string_compact();
@@ -1048,7 +1207,7 @@ fn serve_forward(
                 });
                 return;
             }
-            other @ (Frame::Health { .. } | Frame::Drain { .. }) => {
+            other @ (Frame::Health { .. } | Frame::Drain { .. } | Frame::Cancel { .. }) => {
                 fwd.push_frame(malformed(
                     other.request_id(),
                     &format!(

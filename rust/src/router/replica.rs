@@ -24,9 +24,13 @@ use crate::client::{Backoff, ClientBuilder, OverlayClient, RemoteKernel};
 use crate::service::ServiceError;
 use crate::util::sync::LockExt;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+/// EWMA weight on the old reply-latency value (matches the engine's
+/// per-kernel service-rate estimator): `new = old*0.8 + sample*0.2`.
+const LATENCY_ALPHA: f64 = 0.8;
 
 /// Timing knobs for a replica's monitor loop (copied out of
 /// `RouterConfig` so this module does not depend on the router's).
@@ -73,6 +77,11 @@ pub struct Replica {
     /// or a data-path `mark_down` asking for a prompt reconnect).
     kick: Condvar,
     stopping: AtomicBool,
+    /// Reply-latency EWMA in microseconds (f64 bits; 0.0 = no sample
+    /// yet), fed by the forwarders on every successful reply. The
+    /// router's retry gate reads it to decide whether a remaining
+    /// deadline budget can still cover one more dispatch.
+    latency_us: AtomicU64,
 }
 
 impl Replica {
@@ -83,6 +92,7 @@ impl Replica {
             link: Mutex::new(Link { up: None, epoch: 0 }),
             kick: Condvar::new(),
             stopping: AtomicBool::new(false),
+            latency_us: AtomicU64::new(0.0f64.to_bits()),
         })
     }
 
@@ -140,6 +150,32 @@ impl Replica {
                 Err(e)
             }
         }
+    }
+
+    /// Fold one observed reply latency (microseconds) into the EWMA.
+    /// Junk samples (non-finite or non-positive) are ignored; the
+    /// first real sample is adopted whole. The load/blend/store is
+    /// racy by design — a lost update skews the estimate by one
+    /// sample, and the estimate is advisory.
+    pub fn record_latency(&self, us: f64) {
+        if !us.is_finite() || us <= 0.0 {
+            return;
+        }
+        // relaxed-ok: advisory estimator, see above.
+        let old = f64::from_bits(self.latency_us.load(Ordering::Relaxed));
+        let new = if old == 0.0 {
+            us
+        } else {
+            old * LATENCY_ALPHA + us * (1.0 - LATENCY_ALPHA)
+        };
+        // relaxed-ok: advisory estimator, see above.
+        self.latency_us.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current reply-latency EWMA in microseconds (0.0 = no sample).
+    pub fn latency_us(&self) -> f64 {
+        // relaxed-ok: advisory estimator.
+        f64::from_bits(self.latency_us.load(Ordering::Relaxed))
     }
 
     /// Data-path health report: a call dispatched under `epoch` failed
@@ -320,5 +356,19 @@ mod tests {
     #[test]
     fn jitter_seeds_differ_per_address() {
         assert_ne!(jitter_seed("127.0.0.1:7701"), jitter_seed("127.0.0.1:7702"));
+    }
+
+    #[test]
+    fn latency_ewma_blends_and_ignores_junk() {
+        let r = Replica::new("127.0.0.1:9".to_string(), tuning());
+        assert_eq!(r.latency_us(), 0.0, "no sample yet");
+        r.record_latency(10.0);
+        assert_eq!(r.latency_us(), 10.0, "first sample adopted whole");
+        r.record_latency(20.0);
+        assert!((r.latency_us() - 12.0).abs() < 1e-9, "0.8*10 + 0.2*20");
+        r.record_latency(f64::NAN);
+        r.record_latency(-5.0);
+        r.record_latency(0.0);
+        assert!((r.latency_us() - 12.0).abs() < 1e-9, "junk ignored");
     }
 }

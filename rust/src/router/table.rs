@@ -12,9 +12,11 @@
 //! signal.
 //!
 //! [`RouterMetrics`] keeps the ledger the chaos gate asserts on:
-//! `admitted == completed + failed` once traffic quiesces, with
-//! `retries` counting transparent re-dispatches (a retried call is
-//! still one admitted request).
+//! `admitted == completed + failed + cancelled` once traffic
+//! quiesces, with `retries` counting transparent re-dispatches (a
+//! retried call is still one admitted request) and `cancelled`
+//! counting requests the upstream peer withdrew with a `Cancel`
+//! frame before they settled.
 
 use super::replica::Replica;
 use crate::client::RemoteKernel;
@@ -74,6 +76,19 @@ impl RoutingTable {
             })
         }
     }
+
+    /// The fastest up replica's reply-latency EWMA, in microseconds;
+    /// `0.0` when no up replica has a sample yet. The retry gate uses
+    /// this as the cheapest plausible cost of one more dispatch: a
+    /// remaining deadline budget below it means the retry is doomed.
+    pub fn min_latency_us(&self) -> f64 {
+        self.replicas
+            .iter()
+            .filter(|r| r.is_up())
+            .map(|r| r.latency_us())
+            .filter(|&l| l > 0.0)
+            .fold(0.0f64, |best, l| if best == 0.0 { l } else { best.min(l) })
+    }
 }
 
 /// The router's request ledger plus retry counter. Updated by the
@@ -85,6 +100,7 @@ pub struct RouterMetrics {
     admitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    cancelled: AtomicU64,
     retries: AtomicU64,
     /// Requests currently in flight per tenant label (from the
     /// upstream Hello token; anonymous connections count under
@@ -134,6 +150,12 @@ impl RouterMetrics {
         self.failed.fetch_add(n, Ordering::SeqCst);
     }
 
+    /// One admitted request withdrawn by an upstream `Cancel` before
+    /// it settled (the third term of the ledger invariant).
+    pub fn cancel(&self) {
+        self.cancelled.fetch_add(1, Ordering::SeqCst);
+    }
+
     pub fn retry(&self) {
         self.retries.fetch_add(1, Ordering::SeqCst);
     }
@@ -148,6 +170,10 @@ impl RouterMetrics {
 
     pub fn failed(&self) -> u64 {
         self.failed.load(Ordering::SeqCst)
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::SeqCst)
     }
 
     pub fn retries(&self) -> u64 {
@@ -178,6 +204,7 @@ impl RouterMetrics {
             ("admitted", json::i(self.admitted() as i64)),
             ("completed", json::i(self.completed() as i64)),
             ("failed", json::i(self.failed() as i64)),
+            ("cancelled", json::i(self.cancelled() as i64)),
             ("retries", json::i(self.retries() as i64)),
             ("tenants", Json::Obj(tenants)),
             ("backends", json::arr(backends)),
@@ -221,13 +248,16 @@ mod tests {
         let m = RouterMetrics::default();
         m.admit();
         m.admit();
+        m.admit();
         m.complete();
         m.fail(1);
+        m.cancel();
         m.retry();
-        assert_eq!(m.admitted(), m.completed() + m.failed());
+        assert_eq!(m.admitted(), m.completed() + m.failed() + m.cancelled());
         let table = RoutingTable::new(vec![Replica::new("127.0.0.1:9".to_string(), tuning())]);
         let j = m.to_json(&table);
-        assert_eq!(j.get("admitted").as_i64(), Some(2));
+        assert_eq!(j.get("admitted").as_i64(), Some(3));
+        assert_eq!(j.get("cancelled").as_i64(), Some(1));
         assert_eq!(j.get("retries").as_i64(), Some(1));
         assert_eq!(j.get("backends").as_arr().map(<[Json]>::len), Some(1));
         assert_eq!(j.get("backends").at(0).get("up").as_bool(), Some(false));

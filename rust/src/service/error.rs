@@ -38,8 +38,13 @@ pub enum ServiceError {
     /// The service has shut down (or is draining) and accepts no new
     /// requests.
     ShutDown,
-    /// A [`super::Pending`] wait hit its deadline before the reply
-    /// arrived; the request itself stays in flight.
+    /// The request's deadline budget was exhausted: a [`super::Pending`]
+    /// wait timed out before the reply arrived, the rows expired in the
+    /// queue before any worker took them (lazy expiry), or admission
+    /// shed the request outright because the estimated queue wait
+    /// already exceeded the budget. Only in the wait-timeout case does
+    /// the request itself stay in flight — expired and shed requests
+    /// never reach a backend.
     DeadlineExceeded { kernel: String },
     /// The worker serving this request disappeared without replying
     /// (worker panic — an engine bug, not a request error).
@@ -127,6 +132,7 @@ impl From<ExecError> for ServiceError {
                 backend: backend.to_string(),
                 message,
             },
+            ExecError::DeadlineExceeded { kernel } => ServiceError::DeadlineExceeded { kernel },
         }
     }
 }
@@ -195,6 +201,17 @@ mod tests {
         assert_eq!(
             e,
             ServiceError::EmptyBatch {
+                kernel: "fir".into()
+            }
+        );
+        // Queue expiry arrives typed, not as a stringly backend error.
+        let e: ServiceError = ExecError::DeadlineExceeded {
+            kernel: "fir".into(),
+        }
+        .into();
+        assert_eq!(
+            e,
+            ServiceError::DeadlineExceeded {
                 kernel: "fir".into()
             }
         );

@@ -42,6 +42,16 @@ pub struct TenantMetrics {
     pub rejected: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Queued rows removed by explicit `Cancel` before execution —
+    /// the third settlement term:
+    /// `admitted == completed + failed + cancelled`.
+    pub cancelled: u64,
+    /// Subset of `failed`: rows whose deadline lapsed in the queue
+    /// (evicted unexecuted by lazy expiry).
+    pub expired_in_queue: u64,
+    /// Requests shed at admission because the estimated queue wait
+    /// already exceeded their deadline budget (never admitted).
+    pub shed_at_admission: u64,
     pub latency_us: Option<LatencySummary>,
 }
 
@@ -59,8 +69,17 @@ pub struct MetricsSnapshot {
     /// Requests refused by admission control.
     pub rejected: u64,
     /// Admitted requests whose execution failed (replied `Err` —
-    /// backend failure). `admitted == completed + failed`.
+    /// backend failure, or queue expiry).
+    /// `admitted == completed + failed + cancelled`.
     pub failed: u64,
+    /// Queued rows removed by explicit `Cancel` before execution.
+    pub cancelled: u64,
+    /// Subset of `failed`: rows whose deadline lapsed waiting in the
+    /// queue — evicted by lazy expiry, never executed.
+    pub expired_in_queue: u64,
+    /// Requests shed at admission for an infeasible deadline budget
+    /// (never admitted; a sibling of `rejected`).
+    pub shed_at_admission: u64,
     /// Batches dispatched to workers.
     pub batches: u64,
     pub mean_batch_size: f64,
@@ -119,13 +138,16 @@ impl MetricsSnapshot {
         let per_tenant: Vec<TenantMetrics> = tenants
             .iter()
             .zip(raw.per_tenant.iter_mut())
-            .filter(|(_, t)| t.admitted + t.rejected > 0)
+            .filter(|(_, t)| t.admitted + t.rejected + t.shed_at_admission > 0)
             .map(|(name, t)| TenantMetrics {
                 name: name.to_string(),
                 admitted: t.admitted,
                 rejected: t.rejected,
                 completed: t.completed,
                 failed: t.failed,
+                cancelled: t.cancelled,
+                expired_in_queue: t.expired_in_queue,
+                shed_at_admission: t.shed_at_admission,
                 latency_us: t.latency_us.summarize(),
             })
             .collect();
@@ -136,6 +158,9 @@ impl MetricsSnapshot {
             completed: raw.completed,
             rejected: raw.rejected,
             failed: raw.failed,
+            cancelled: raw.cancelled,
+            expired_in_queue: raw.expired_in_queue,
+            shed_at_admission: raw.shed_at_admission,
             batches: raw.batches,
             mean_batch_size: raw.mean_batch_size(),
             context_switches: raw.context_switches,
@@ -151,6 +176,16 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Total rows admitted across every tenant lane. With the ledger
+    /// settled (post-drain), `admitted() == completed + failed +
+    /// cancelled` — the extended settlement invariant the deadline
+    /// tests assert at every layer.
+    pub fn admitted(&self) -> u64 {
+        // Idle tenants are omitted from `per_tenant`, but an omitted
+        // tenant admitted nothing, so the sum is exact.
+        self.per_tenant.iter().map(|t| t.admitted).sum()
+    }
+
     /// Machine-readable form (stable field names; `tmfu serve
     /// --metrics-json`, CI assertions, `tools/`).
     pub fn to_json(&self) -> Json {
@@ -161,6 +196,9 @@ impl MetricsSnapshot {
             ("completed", json::i(self.completed as i64)),
             ("rejected", json::i(self.rejected as i64)),
             ("failed", json::i(self.failed as i64)),
+            ("cancelled", json::i(self.cancelled as i64)),
+            ("expired_in_queue", json::i(self.expired_in_queue as i64)),
+            ("shed_at_admission", json::i(self.shed_at_admission as i64)),
             ("batches", json::i(self.batches as i64)),
             ("mean_batch_size", json::f(self.mean_batch_size)),
             ("context_switches", json::i(self.context_switches as i64)),
@@ -199,6 +237,15 @@ impl MetricsSnapshot {
                                     ("rejected", json::i(t.rejected as i64)),
                                     ("completed", json::i(t.completed as i64)),
                                     ("failed", json::i(t.failed as i64)),
+                                    ("cancelled", json::i(t.cancelled as i64)),
+                                    (
+                                        "expired_in_queue",
+                                        json::i(t.expired_in_queue as i64),
+                                    ),
+                                    (
+                                        "shed_at_admission",
+                                        json::i(t.shed_at_admission as i64),
+                                    ),
                                     (
                                         "latency_us",
                                         t.latency_us.as_ref().map_or(Json::Null, summary_json),
@@ -235,6 +282,24 @@ impl MetricsSnapshot {
                 self.failed
             ));
         }
+        if self.cancelled > 0 {
+            s.push_str(&format!(
+                "cancelled in queue:   {} (removed unexecuted by Cancel)\n",
+                self.cancelled
+            ));
+        }
+        if self.expired_in_queue > 0 {
+            s.push_str(&format!(
+                "expired in queue:     {} (deadline lapsed, evicted unexecuted)\n",
+                self.expired_in_queue
+            ));
+        }
+        if self.shed_at_admission > 0 {
+            s.push_str(&format!(
+                "shed at admission:    {} (deadline infeasible, never admitted)\n",
+                self.shed_at_admission
+            ));
+        }
         s.push_str(&format!(
             "batches:              {} (mean size {:.1})\n",
             self.batches, self.mean_batch_size
@@ -266,9 +331,15 @@ impl MetricsSnapshot {
         s.push('\n');
         for t in &self.per_tenant {
             s.push_str(&format!(
-                "tenant {:<14} admitted={} completed={} failed={} rejected={}",
-                t.name, t.admitted, t.completed, t.failed, t.rejected
+                "tenant {:<14} admitted={} completed={} failed={} cancelled={} rejected={}",
+                t.name, t.admitted, t.completed, t.failed, t.cancelled, t.rejected
             ));
+            if t.expired_in_queue > 0 {
+                s.push_str(&format!(" expired={}", t.expired_in_queue));
+            }
+            if t.shed_at_admission > 0 {
+                s.push_str(&format!(" shed={}", t.shed_at_admission));
+            }
             if let Some(l) = &t.latency_us {
                 s.push_str(&format!(" p99={:.1}us", l.p99));
             }
@@ -292,7 +363,10 @@ mod tests {
 
     fn sample_raw() -> RawMetrics {
         let m = Metrics::new(2, 1);
-        m.record_admitted(T0, 13);
+        // 14 admitted = 12 completed + 1 failed + 1 cancelled, with
+        // the failure being a queue expiry; 2 rejected + 3 shed never
+        // entered the ledger.
+        m.record_admitted(T0, 14);
         m.record_batch(
             KernelId(0),
             T0,
@@ -317,6 +391,9 @@ mod tests {
         );
         m.record_rejected(T0, 2);
         m.record_failed(T0, 1);
+        m.record_cancelled(T0, 1);
+        m.record_expired(T0, 1);
+        m.record_shed(T0, 3);
         let mut raw = m.raw_snapshot();
         raw.wall = Duration::from_millis(100);
         raw
@@ -344,15 +421,24 @@ mod tests {
             snap.per_kernel,
             vec![("gradient".to_string(), 8), ("poly6".to_string(), 4)]
         );
+        // The new deadline counters surface globally and the extended
+        // settlement invariant holds on the snapshot itself.
+        assert_eq!(snap.cancelled, 1);
+        assert_eq!(snap.expired_in_queue, 1);
+        assert_eq!(snap.shed_at_admission, 3);
+        assert_eq!(snap.admitted(), snap.completed + snap.failed + snap.cancelled);
         // The tenant ledger rides along: one active tenant, with the
         // admitted/completed/failed/rejected counters it recorded.
         assert_eq!(snap.per_tenant.len(), 1);
         let t = &snap.per_tenant[0];
         assert_eq!(t.name, "default");
-        assert_eq!(t.admitted, 13);
+        assert_eq!(t.admitted, 14);
         assert_eq!(t.completed, 12);
         assert_eq!(t.failed, 1);
         assert_eq!(t.rejected, 2);
+        assert_eq!(t.cancelled, 1);
+        assert_eq!(t.expired_in_queue, 1);
+        assert_eq!(t.shed_at_admission, 3);
         let lat = t.latency_us.as_ref().unwrap();
         assert_eq!(lat.n, 2);
         assert!((lat.max - 120.0).abs() < 1e-9);
@@ -387,7 +473,14 @@ mod tests {
         assert!(s.contains("gradient=8"));
         assert!(s.contains("request latency:"));
         assert!(s.contains("tenant default"));
-        assert!(s.contains("admitted=13"));
+        assert!(s.contains("admitted=14"));
+        // Deadline lines render only when the counters are non-zero.
+        assert!(s.contains("cancelled in queue:   1"));
+        assert!(s.contains("expired in queue:     1"));
+        assert!(s.contains("shed at admission:    3"));
+        assert!(s.contains("cancelled=1"));
+        assert!(s.contains(" expired=1"));
+        assert!(s.contains(" shed=3"));
     }
 
     #[test]
@@ -402,9 +495,15 @@ mod tests {
         assert_eq!(parsed.get("backend").as_str(), Some("sim"));
         assert_eq!(parsed.get("per_kernel").get("gradient").as_i64(), Some(8));
         assert_eq!(parsed.get("latency_us").get("n").as_i64(), Some(2));
+        assert_eq!(parsed.get("cancelled").as_i64(), Some(1));
+        assert_eq!(parsed.get("expired_in_queue").as_i64(), Some(1));
+        assert_eq!(parsed.get("shed_at_admission").as_i64(), Some(3));
         let t = parsed.get("per_tenant").get("default");
-        assert_eq!(t.get("admitted").as_i64(), Some(13));
+        assert_eq!(t.get("admitted").as_i64(), Some(14));
         assert_eq!(t.get("rejected").as_i64(), Some(2));
+        assert_eq!(t.get("cancelled").as_i64(), Some(1));
+        assert_eq!(t.get("expired_in_queue").as_i64(), Some(1));
+        assert_eq!(t.get("shed_at_admission").as_i64(), Some(3));
         assert_eq!(t.get("latency_us").get("n").as_i64(), Some(2));
         // Empty distributions serialize as null, not a bogus summary.
         let empty = Metrics::new(2, 1).raw_snapshot();

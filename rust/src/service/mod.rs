@@ -418,6 +418,15 @@ impl OverlayService {
         self.engine.completed()
     }
 
+    /// Completion-slab occupancy: slots currently reserved for
+    /// admitted requests whose reply has not been collected or
+    /// reclaimed yet. Returns to 0 when every caller has collected,
+    /// cancelled, or dropped its pending reply — the leak probe the
+    /// wire-path drop-storm regression test watches.
+    pub fn live_slots(&self) -> usize {
+        self.engine.shared().slab.live_slots()
+    }
+
     /// A typed point-in-time metrics snapshot (render it with
     /// [`MetricsSnapshot::render`], serialize with
     /// [`MetricsSnapshot::to_json`]). The raw sample buffers are
@@ -516,6 +525,11 @@ impl KernelHandle {
                 queued,
                 limit,
             },
+            // Shed at admission: the queue wait alone would blow the
+            // deadline budget, so the request was never admitted.
+            SubmitRejection::Infeasible => ServiceError::DeadlineExceeded {
+                kernel: self.kernel.name.clone(),
+            },
         }
     }
 
@@ -534,7 +548,21 @@ impl KernelHandle {
     /// reserves one completion-slab slot, and returns its [`Pending`]
     /// ticket. Zero heap allocations in steady state.
     pub fn submit(&self, inputs: &[i32]) -> Result<Pending, ServiceError> {
-        self.submit_inner(inputs, None)
+        self.submit_inner(inputs, None, None)
+    }
+
+    /// [`Self::submit`] carrying a deadline budget: the request is
+    /// shed at admission if the estimated queue wait already exceeds
+    /// `budget` (typed [`ServiceError::DeadlineExceeded`], never
+    /// queued), and evicted unexecuted if the budget lapses while it
+    /// waits in the queue (lazy expiry — the reply is the same typed
+    /// error). The budget is relative: it starts counting now.
+    pub fn submit_with_deadline(
+        &self,
+        inputs: &[i32],
+        budget: Duration,
+    ) -> Result<Pending, ServiceError> {
+        self.submit_inner(inputs, Some(budget), None)
     }
 
     /// [`Self::submit`] with a completion doorbell: `waker` is rung
@@ -544,25 +572,38 @@ impl KernelHandle {
     pub(crate) fn submit_tagged(
         &self,
         inputs: &[i32],
+        deadline: Option<Duration>,
         waker: WakeTarget,
     ) -> Result<Pending, ServiceError> {
-        self.submit_inner(inputs, Some(waker))
+        self.submit_inner(inputs, deadline, Some(waker))
     }
 
     fn submit_inner(
         &self,
         inputs: &[i32],
+        deadline: Option<Duration>,
         waker: Option<WakeTarget>,
     ) -> Result<Pending, ServiceError> {
         self.check_arity(inputs.len())?;
+        // An unrepresentable budget (absurdly far future) waits
+        // unbounded instead of panicking on Instant overflow.
+        let deadline = deadline.and_then(|d| Instant::now().checked_add(d));
         let ticket = self
             .shared
-            .submit(self.tenant, self.id, inputs, self.kernel.n_outputs, waker)
+            .submit(
+                self.tenant,
+                self.id,
+                inputs,
+                self.kernel.n_outputs,
+                deadline,
+                waker,
+            )
             .map_err(|r| self.rejection(r))?;
         Ok(Pending {
             shared: Arc::clone(&self.shared),
             ticket,
             kernel: Arc::clone(&self.kernel),
+            tenant: self.tenant,
             done: false,
         })
     }
@@ -570,6 +611,26 @@ impl KernelHandle {
     /// Blocking call: submit one request and wait for its reply.
     pub fn call(&self, inputs: &[i32]) -> Result<Vec<i32>, ServiceError> {
         self.submit(inputs)?.wait()
+    }
+
+    /// Blocking call under a deadline budget: shed/expiry semantics of
+    /// [`Self::submit_with_deadline`], plus the wait itself is bounded
+    /// by the same budget. On timeout the request is **cancelled** —
+    /// still-queued rows never execute and the slot is reclaimed — so
+    /// a deadline miss leaves nothing behind.
+    pub fn call_with_deadline(
+        &self,
+        inputs: &[i32],
+        budget: Duration,
+    ) -> Result<Vec<i32>, ServiceError> {
+        let mut p = self.submit_with_deadline(inputs, budget)?;
+        match p.wait_timeout(budget) {
+            Err(e @ ServiceError::DeadlineExceeded { .. }) => {
+                p.cancel();
+                Err(e)
+            }
+            other => other,
+        }
     }
 
     /// Blocking call writing the reply row into a caller-owned buffer
@@ -585,7 +646,19 @@ impl KernelHandle {
     /// are written in place by the workers, possibly out of order and
     /// by different workers, and come back assembled in row order.
     pub fn submit_batch(&self, batch: &FlatBatch) -> Result<PendingBatch, ServiceError> {
-        self.submit_batch_inner(batch, None)
+        self.submit_batch_inner(batch, None, None)
+    }
+
+    /// [`Self::submit_batch`] carrying a deadline budget (shed at
+    /// admission / lazy queue expiry — see
+    /// [`Self::submit_with_deadline`]; the budget covers the whole
+    /// batch).
+    pub fn submit_batch_with_deadline(
+        &self,
+        batch: &FlatBatch,
+        budget: Duration,
+    ) -> Result<PendingBatch, ServiceError> {
+        self.submit_batch_inner(batch, Some(budget), None)
     }
 
     /// [`Self::submit_batch`] with a completion doorbell (see
@@ -593,14 +666,16 @@ impl KernelHandle {
     pub(crate) fn submit_batch_tagged(
         &self,
         batch: &FlatBatch,
+        deadline: Option<Duration>,
         waker: WakeTarget,
     ) -> Result<PendingBatch, ServiceError> {
-        self.submit_batch_inner(batch, Some(waker))
+        self.submit_batch_inner(batch, deadline, Some(waker))
     }
 
     fn submit_batch_inner(
         &self,
         batch: &FlatBatch,
+        deadline: Option<Duration>,
         waker: Option<WakeTarget>,
     ) -> Result<PendingBatch, ServiceError> {
         if batch.is_empty() {
@@ -609,14 +684,23 @@ impl KernelHandle {
             });
         }
         self.check_arity(batch.arity())?;
+        let deadline = deadline.and_then(|d| Instant::now().checked_add(d));
         let ticket = self
             .shared
-            .submit_batch(self.tenant, self.id, batch, self.kernel.n_outputs, waker)
+            .submit_batch(
+                self.tenant,
+                self.id,
+                batch,
+                self.kernel.n_outputs,
+                deadline,
+                waker,
+            )
             .map_err(|r| self.rejection(r))?;
         Ok(PendingBatch {
             shared: Arc::clone(&self.shared),
             ticket,
             kernel: Arc::clone(&self.kernel),
+            tenant: self.tenant,
             rows: batch.n_rows(),
             done: false,
         })
@@ -625,6 +709,24 @@ impl KernelHandle {
     /// Blocking batch call: [`Self::submit_batch`] + wait.
     pub fn call_batch(&self, batch: &FlatBatch) -> Result<FlatBatch, ServiceError> {
         self.submit_batch(batch)?.wait()
+    }
+
+    /// Blocking batch call under a deadline budget: on timeout the
+    /// batch is cancelled — rows no worker has taken yet never execute
+    /// — and the typed [`ServiceError::DeadlineExceeded`] is returned.
+    pub fn call_batch_with_deadline(
+        &self,
+        batch: &FlatBatch,
+        budget: Duration,
+    ) -> Result<FlatBatch, ServiceError> {
+        let mut p = self.submit_batch_with_deadline(batch, budget)?;
+        match p.wait_timeout(budget) {
+            Err(e @ ServiceError::DeadlineExceeded { .. }) => {
+                p.cancel();
+                Err(e)
+            }
+            other => other,
+        }
     }
 
     /// Blocking batch call writing the reply rows into a caller-owned
@@ -654,6 +756,7 @@ pub struct Pending {
     shared: Arc<Shared>,
     ticket: Ticket,
     kernel: Arc<CompiledKernel>,
+    tenant: TenantId,
     done: bool,
 }
 
@@ -746,6 +849,19 @@ impl Pending {
     pub fn wait_deadline(&mut self, deadline: Instant) -> Result<Vec<i32>, ServiceError> {
         self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
     }
+
+    /// Cancel the request: rows still waiting in the queue are removed
+    /// and **never execute** (they move to the `cancelled` ledger
+    /// term), rows a worker already took finish into the reclaimed
+    /// slot, and either way the slot is released without a collect.
+    /// Idempotent, and a no-op after the reply was taken. After
+    /// cancelling, the reply can no longer be collected.
+    pub fn cancel(&mut self) {
+        if !self.done {
+            self.done = true;
+            self.shared.cancel(self.tenant, self.ticket);
+        }
+    }
 }
 
 impl Drop for Pending {
@@ -767,6 +883,7 @@ pub struct PendingBatch {
     shared: Arc<Shared>,
     ticket: Ticket,
     kernel: Arc<CompiledKernel>,
+    tenant: TenantId,
     rows: usize,
     done: bool,
 }
@@ -850,6 +967,16 @@ impl PendingBatch {
             None => Err(ServiceError::DeadlineExceeded {
                 kernel: self.kernel.name.clone(),
             }),
+        }
+    }
+
+    /// Cancel the batch (see [`Pending::cancel`]): rows no worker has
+    /// taken yet are removed unexecuted, in-flight rows finish into
+    /// the reclaimed slot, and the slot is released without a collect.
+    pub fn cancel(&mut self) {
+        if !self.done {
+            self.done = true;
+            self.shared.cancel(self.tenant, self.ticket);
         }
     }
 }
@@ -1191,6 +1318,65 @@ mod tests {
         assert_eq!(d.tenant_name(), "default");
         assert_eq!(d.call_batch(&batch).unwrap().n_rows(), 3);
         svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn call_with_deadline_misses_are_typed_and_reclaim_the_slot() {
+        let svc = service(BackendKind::Sim, 1, 8);
+        let h = svc.kernel("gradient").unwrap();
+        // Saturate the single worker so a zero-budget call cannot win.
+        let rows: Vec<Vec<i32>> = (0..1024).map(|i| vec![3, 5, 2, 7, i]).collect();
+        let big = FlatBatch::from_rows(5, &rows);
+        let pending_big = h.submit_batch(&big).unwrap();
+        let err = h.call_with_deadline(&[0; 5], Duration::ZERO).unwrap_err();
+        assert!(
+            matches!(err, ServiceError::DeadlineExceeded { ref kernel } if kernel == "gradient"),
+            "{err}"
+        );
+        // The miss cancelled itself: once the big batch is collected,
+        // no slot lingers from the deadlined call.
+        assert_eq!(pending_big.wait().unwrap().n_rows(), 1024);
+        assert_eq!(svc.live_slots(), 0);
+        // The ledger balances with the new cancelled term (the missed
+        // call was either purged from the queue → cancelled, or raced
+        // into a worker → completed into the abandoned slot).
+        svc.shutdown().unwrap();
+        let snap = svc.metrics();
+        assert_eq!(
+            snap.admitted(),
+            snap.completed + snap.failed + snap.cancelled
+        );
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn explicit_cancel_is_idempotent_and_frees_the_slot() {
+        let svc = service(BackendKind::Sim, 1, 8);
+        let h = svc.kernel("gradient").unwrap();
+        let rows: Vec<Vec<i32>> = (0..512).map(|i| vec![3, 5, 2, 7, i]).collect();
+        let big = FlatBatch::from_rows(5, &rows);
+        let pending_big = h.submit_batch(&big).unwrap();
+        let mut p = h.submit(&[0; 5]).unwrap();
+        p.cancel();
+        p.cancel(); // second cancel is a no-op
+        // After cancel the reply is gone for good.
+        assert!(matches!(
+            p.poll(),
+            Some(Err(ServiceError::Disconnected { .. }))
+        ));
+        let mut pb = h
+            .submit_batch(&FlatBatch::from_rows(5, &[vec![0; 5], vec![1; 5]]))
+            .unwrap();
+        pb.cancel();
+        pb.cancel();
+        assert_eq!(pending_big.wait().unwrap().n_rows(), 512);
+        assert_eq!(svc.live_slots(), 0);
+        svc.shutdown().unwrap();
+        let snap = svc.metrics();
+        assert_eq!(
+            snap.admitted(),
+            snap.completed + snap.failed + snap.cancelled
+        );
     }
 
     #[test]

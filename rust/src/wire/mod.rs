@@ -47,11 +47,13 @@
 //! with the highest version both sides support, or a
 //! [`WireError::VersionMismatch`] error frame (code 100) naming its
 //! own range, then closes. Version 2 added the liveness opcodes
-//! (`Health`/`HealthOk`/`Drain`) and the `Unavailable` error code (9);
-//! a v1-negotiated connection must not carry them (the server answers
-//! `Malformed` if it does). The codec itself decodes every known
-//! opcode regardless of the negotiated version — gating is the
-//! connection state machine's job, not the byte parser's.
+//! (`Health`/`HealthOk`/`Drain`), the `Unavailable` error code (9),
+//! the `Cancel` opcode (0x0E), and the optional `deadline_us` suffix
+//! on `Call`/`CallBatch`; a v1-negotiated connection must not carry
+//! them (the server answers `Malformed` if it does). The codec itself
+//! decodes every known opcode regardless of the negotiated version —
+//! gating is the connection state machine's job, not the byte
+//! parser's.
 
 pub mod auth;
 pub mod fault;
@@ -89,6 +91,8 @@ const OP_METRICS: u8 = 0x0A;
 const OP_HEALTH: u8 = 0x0B;
 const OP_HEALTH_OK: u8 = 0x0C;
 const OP_DRAIN: u8 = 0x0D;
+// v2 cancellation opcode.
+const OP_CANCEL: u8 = 0x0E;
 
 /// `HealthOk.status`: accepting new work.
 pub const HEALTH_SERVING: u8 = 0;
@@ -259,16 +263,23 @@ pub enum Frame {
         n_outputs: u16,
     },
     /// Client → server: one blocking-call request (one input row).
+    /// `deadline_us` is an optional relative budget in microseconds
+    /// (v2 suffix; a deadline-free Call stays byte-identical to v1) —
+    /// the server sheds or expires the request rather than execute it
+    /// after the budget runs out.
     Call {
         id: u64,
         kernel: u32,
         inputs: Vec<i32>,
+        deadline_us: Option<u64>,
     },
-    /// Client → server: an atomically-admitted batch (row-major).
+    /// Client → server: an atomically-admitted batch (row-major), with
+    /// the same optional `deadline_us` suffix as `Call`.
     CallBatch {
         id: u64,
         kernel: u32,
         batch: FlatBatch,
+        deadline_us: Option<u64>,
     },
     /// Server → client: output rows for a `Call` (1 row) or
     /// `CallBatch` (input row count, in order).
@@ -288,6 +299,12 @@ pub enum Frame {
     /// new connections and new work, finish in-flight requests, then
     /// exit. Acknowledged with a `HealthOk { status: DRAINING }`.
     Drain { id: u64 },
+    /// Client → server (v2): abandon the in-flight request with this
+    /// `id` — still-queued rows are evicted before they reach a
+    /// backend and the completion-slab slot is released. Fire and
+    /// forget: the server sends no reply for the cancelled id (a
+    /// concurrent completion may still race one out).
+    Cancel { id: u64 },
 }
 
 impl Frame {
@@ -306,7 +323,8 @@ impl Frame {
             | Frame::Metrics { id, .. }
             | Frame::Health { id }
             | Frame::HealthOk { id, .. }
-            | Frame::Drain { id } => *id,
+            | Frame::Drain { id }
+            | Frame::Cancel { id } => *id,
         }
     }
 
@@ -356,16 +374,32 @@ impl Frame {
                 put_u16(&mut out, *n_inputs);
                 put_u16(&mut out, *n_outputs);
             }
-            Frame::Call { id, kernel, inputs } => {
+            Frame::Call {
+                id,
+                kernel,
+                inputs,
+                deadline_us,
+            } => {
                 head(&mut out, OP_CALL, *id);
                 put_u32(&mut out, *kernel);
                 put_u16(&mut out, width_u16(inputs.len(), "call arity")?);
                 put_words(&mut out, inputs);
+                if let Some(d) = deadline_us {
+                    put_u64(&mut out, *d);
+                }
             }
-            Frame::CallBatch { id, kernel, batch } => {
+            Frame::CallBatch {
+                id,
+                kernel,
+                batch,
+                deadline_us,
+            } => {
                 head(&mut out, OP_CALL_BATCH, *id);
                 put_u32(&mut out, *kernel);
                 put_batch(&mut out, batch)?;
+                if let Some(d) = deadline_us {
+                    put_u64(&mut out, *d);
+                }
             }
             Frame::Reply { id, batch } => {
                 head(&mut out, OP_REPLY, *id);
@@ -396,6 +430,9 @@ impl Frame {
             }
             Frame::Drain { id } => {
                 head(&mut out, OP_DRAIN, *id);
+            }
+            Frame::Cancel { id } => {
+                head(&mut out, OP_CANCEL, *id);
             }
         }
         Ok(out)
@@ -457,12 +494,34 @@ impl Frame {
                 let kernel = d.u32("kernel id")?;
                 let arity = usize::from(d.u16("call arity")?);
                 let inputs = d.words(arity, "call inputs")?;
-                Frame::Call { id, kernel, inputs }
+                // A deadline-free Call ends here; any remaining bytes
+                // must be a complete deadline suffix.
+                let deadline_us = if d.remaining() > 0 {
+                    Some(d.u64("call deadline")?)
+                } else {
+                    None
+                };
+                Frame::Call {
+                    id,
+                    kernel,
+                    inputs,
+                    deadline_us,
+                }
             }
             OP_CALL_BATCH => {
                 let kernel = d.u32("kernel id")?;
                 let batch = d.batch()?;
-                Frame::CallBatch { id, kernel, batch }
+                let deadline_us = if d.remaining() > 0 {
+                    Some(d.u64("batch deadline")?)
+                } else {
+                    None
+                };
+                Frame::CallBatch {
+                    id,
+                    kernel,
+                    batch,
+                    deadline_us,
+                }
             }
             OP_REPLY => Frame::Reply {
                 id,
@@ -484,6 +543,7 @@ impl Frame {
                 inflight: d.u32("health inflight")?,
             },
             OP_DRAIN => Frame::Drain { id },
+            OP_CANCEL => Frame::Cancel { id },
             other => return Err(FrameError::new(format!("unknown opcode 0x{other:02x}"))),
         };
         d.finish()?;
@@ -493,8 +553,8 @@ impl Frame {
     /// Capacity hint so batch encodes reserve once.
     fn encoded_hint(&self) -> usize {
         9 + match self {
-            Frame::Call { inputs, .. } => 6 + 4 * inputs.len(),
-            Frame::CallBatch { batch, .. } => 10 + 4 * batch.data().len(),
+            Frame::Call { inputs, .. } => 14 + 4 * inputs.len(),
+            Frame::CallBatch { batch, .. } => 18 + 4 * batch.data().len(),
             Frame::Reply { batch, .. } => 6 + 4 * batch.data().len(),
             Frame::Metrics { json, .. } => 4 + json.len(),
             _ => 32,
@@ -1172,11 +1232,25 @@ mod tests {
                 id: 2,
                 kernel: 3,
                 inputs: vec![3, 5, 2, 7, -1],
+                deadline_us: None,
+            },
+            Frame::Call {
+                id: 20,
+                kernel: 3,
+                inputs: vec![3, 5, 2, 7, -1],
+                deadline_us: Some(250_000),
             },
             Frame::CallBatch {
                 id: 3,
                 kernel: 0,
                 batch: batch(2, &[vec![1, -2], vec![3, -4], vec![5, -6]]),
+                deadline_us: None,
+            },
+            Frame::CallBatch {
+                id: 21,
+                kernel: 0,
+                batch: batch(2, &[vec![1, -2], vec![3, -4]]),
+                deadline_us: Some(1_000_000),
             },
             Frame::Reply {
                 id: 3,
@@ -1187,6 +1261,7 @@ mod tests {
                 id: 7,
                 kernel: 2,
                 batch: FlatBatch::new(5),
+                deadline_us: None,
             },
             Frame::Error {
                 id: 4,
@@ -1276,6 +1351,7 @@ mod tests {
                 inflight: 0,
             },
             Frame::Drain { id: 15 },
+            Frame::Cancel { id: 22 },
         ]
     }
 
@@ -1347,18 +1423,43 @@ mod tests {
                     id: 2,
                     kernel: 3,
                     inputs: vec![3, 5, 2, 7, -1],
+                    deadline_us: None,
                 },
                 "0502000000000000000300000005000300000005000000020000000700\
                  0000ffffffff",
+            ),
+            // Deadline-carrying Call: the base encoding plus an 8-byte
+            // deadline_us suffix (250_000 µs).
+            (
+                Frame::Call {
+                    id: 20,
+                    kernel: 3,
+                    inputs: vec![3, 5, 2, 7, -1],
+                    deadline_us: Some(250_000),
+                },
+                "0514000000000000000300000005000300000005000000020000000700\
+                 0000ffffffff90d0030000000000",
             ),
             (
                 Frame::CallBatch {
                     id: 3,
                     kernel: 0,
                     batch: batch(2, &[vec![1, -2], vec![3, -4], vec![5, -6]]),
+                    deadline_us: None,
                 },
                 "060300000000000000000000000200030000000100\
                  0000feffffff03000000fcffffff05000000faffffff",
+            ),
+            // Deadline-carrying CallBatch (1_000_000 µs suffix).
+            (
+                Frame::CallBatch {
+                    id: 21,
+                    kernel: 0,
+                    batch: batch(2, &[vec![1, -2], vec![3, -4]]),
+                    deadline_us: Some(1_000_000),
+                },
+                "0615000000000000000000000002000200000001000000feffffff0300\
+                 0000fcffffff40420f0000000000",
             ),
             (
                 Frame::Reply {
@@ -1372,6 +1473,7 @@ mod tests {
                     id: 7,
                     kernel: 2,
                     batch: FlatBatch::new(5),
+                    deadline_us: None,
                 },
                 "060700000000000000020000000500000000 00",
             ),
@@ -1423,6 +1525,7 @@ mod tests {
                 "0c0e000000000000000003000000",
             ),
             (Frame::Drain { id: 15 }, "0d0f00000000000000"),
+            (Frame::Cancel { id: 22 }, "0e1600000000000000"),
             (
                 Frame::Error {
                     id: 16,
@@ -1478,7 +1581,7 @@ mod tests {
         type Value = Frame;
         fn generate(&self, rng: &mut Rng) -> Frame {
             let id = rng.next_u64();
-            match rng.index(15) {
+            match rng.index(16) {
                 // Anonymous only: a signed Hello truncated back to the
                 // anonymous length decodes fine, which would break the
                 // every-strict-prefix-fails truncation property. The
@@ -1504,15 +1607,22 @@ mod tests {
                     n_inputs: rng.index(40) as u16,
                     n_outputs: rng.index(40) as u16,
                 },
+                // Deadline-free only: like the tokened Hello, a
+                // deadline-carrying Call truncated back to its base
+                // length decodes fine, which would break the
+                // every-strict-prefix-fails truncation property. The
+                // deadline suffix gets its own generator below.
                 4 => Frame::Call {
                     id,
                     kernel: rng.next_u64() as u32,
                     inputs: (0..rng.index(12)).map(|_| rng.next_i32()).collect(),
+                    deadline_us: None,
                 },
                 5 => Frame::CallBatch {
                     id,
                     kernel: rng.next_u64() as u32,
                     batch: rand_batch(rng),
+                    deadline_us: None,
                 },
                 6 => Frame::Reply {
                     id,
@@ -1530,6 +1640,7 @@ mod tests {
                     inflight: rng.next_u64() as u32,
                 },
                 11 => Frame::Drain { id },
+                12 => Frame::Cancel { id },
                 _ => {
                     let err = match rng.index(13) {
                         0 => WireError::Service(ServiceError::UnknownKernel(rand_string(rng, 16))),
@@ -1661,6 +1772,70 @@ mod tests {
         });
     }
 
+    /// Random *deadline-carrying* Calls and CallBatches, kept out of
+    /// [`GenFrame`] for the same reason as the tokened Hello: the
+    /// deadline is an optional suffix, so truncating one back to its
+    /// base length legally decodes (as the deadline-free frame). This
+    /// test pins that one benign cut and requires every other strict
+    /// prefix to fail.
+    struct GenDeadlineCall;
+
+    impl Gen for GenDeadlineCall {
+        type Value = Frame;
+        fn generate(&self, rng: &mut Rng) -> Frame {
+            let id = rng.next_u64();
+            let deadline_us = Some(rng.next_u64());
+            if rng.index(2) == 0 {
+                Frame::Call {
+                    id,
+                    kernel: rng.next_u64() as u32,
+                    inputs: (0..rng.index(12)).map(|_| rng.next_i32()).collect(),
+                    deadline_us,
+                }
+            } else {
+                Frame::CallBatch {
+                    id,
+                    kernel: rng.next_u64() as u32,
+                    batch: rand_batch(rng),
+                    deadline_us,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_deadline_calls_round_trip_and_truncate_cleanly() {
+        check(200, GenDeadlineCall, "wire-deadline-call", |f| {
+            let bytes = f.encode().map_err(|e| e.to_string())?;
+            let back = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+            prop_assert(&back == f, "decode(encode(f)) != f")?;
+            // The base frame ends 8 bytes before the end; a cut there
+            // decodes as the deadline-free counterpart.
+            let base_len = bytes.len() - 8;
+            for cut in 0..bytes.len() {
+                let got = Frame::decode(&bytes[..cut]);
+                if cut == base_len {
+                    match got {
+                        Ok(Frame::Call {
+                            deadline_us: None, ..
+                        })
+                        | Ok(Frame::CallBatch {
+                            deadline_us: None, ..
+                        }) => {}
+                        other => {
+                            return Err(format!(
+                                "base-length cut should decode deadline-free, got {other:?}"
+                            ))
+                        }
+                    }
+                } else if got.is_ok() {
+                    return Err(format!("prefix of {cut}/{} bytes decoded", bytes.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn tenant_token_verify_detects_tampering() {
         let t = TenantToken::sign("acme", b"opensesame", 42);
@@ -1758,6 +1933,7 @@ mod tests {
             id: 1,
             kernel: 0,
             batch,
+            deadline_us: None,
         };
         let mut buf = Vec::new();
         write_frame(&mut buf, &f).unwrap();
@@ -1771,6 +1947,7 @@ mod tests {
             id: 1,
             kernel: 0,
             batch,
+            deadline_us: None,
         };
         let err = write_frame(&mut Vec::new(), &f).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
@@ -1867,6 +2044,7 @@ mod tests {
             id: 1,
             kernel: 0,
             inputs: vec![0; u16::MAX as usize + 1],
+            deadline_us: None,
         };
         assert!(f.encode().unwrap_err().msg.contains("arity"));
     }

@@ -46,7 +46,7 @@ use crate::service::{KernelHandle, OverlayService, Pending, PendingBatch, Servic
 use crate::wire::{HEALTH_DRAINING, HEALTH_SERVING, WIRE_VERSION_MAX, WIRE_VERSION_MIN};
 use crate::util::sync::LockExt;
 use anyhow::{Context, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -521,6 +521,10 @@ struct ConnState {
     /// New in-flight registrations (request id → pending reply),
     /// handed to the reactor, which owns the id map.
     submitted: Vec<(u64, InFlight)>,
+    /// Request ids the client cancelled (v2 `Cancel` frames). The
+    /// reactor settles them against its in-flight map — no reply
+    /// frame is ever written for a cancelled id.
+    cancels: Vec<u64>,
     /// Request ids whose slab slot became ready (rung by workers).
     ready: Vec<u64>,
     /// The reader exited (peer hung up or broke protocol). The
@@ -536,6 +540,7 @@ impl ConnShared {
             m: Mutex::new(ConnState {
                 outbox: VecDeque::new(),
                 submitted: Vec::new(),
+                cancels: Vec::new(),
                 ready: Vec::new(),
                 reader_done: false,
                 dead: false,
@@ -567,6 +572,16 @@ impl ConnShared {
         // a consistent submitted-vs-counter view.
         self.ctl.inflight_add(1);
         st.submitted.push((id, inflight));
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Reader-side: the client cancelled this request id. The reactor
+    /// (which owns the in-flight map) performs the actual
+    /// cancellation; an unknown or already-settled id is a no-op.
+    fn push_cancel(&self, id: u64) {
+        let mut st = self.m.lock_unpoisoned();
+        st.cancels.push(id);
         drop(st);
         self.cv.notify_all();
     }
@@ -642,8 +657,13 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream, mut fault: FaultState
     // Doorbell tags that arrived before their registration (the
     // ring-vs-register race); retried next wake-up.
     let mut carry: Vec<u64> = Vec::new();
+    // Ids cancelled after their result was already ready: the doorbell
+    // rang (or is about to surface via `carry`), but the result was
+    // consumed by the cancel — drop the stale ring when it arrives.
+    // Bounded: every entry is drained by exactly one ring.
+    let mut stale_rings: HashSet<u64> = HashSet::new();
     loop {
-        let (mut frames, new_inflight, rung) = {
+        let (mut frames, new_inflight, cancels, rung) = {
             let mut st = conn.m.lock_unpoisoned();
             loop {
                 if st.dead {
@@ -652,7 +672,10 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream, mut fault: FaultState
                     settle_remaining(&conn, inflight.len() + orphaned.len());
                     return;
                 }
-                let idle = st.outbox.is_empty() && st.submitted.is_empty() && st.ready.is_empty();
+                let idle = st.outbox.is_empty()
+                    && st.submitted.is_empty()
+                    && st.cancels.is_empty()
+                    && st.ready.is_empty();
                 if !idle {
                     break;
                 }
@@ -669,11 +692,46 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream, mut fault: FaultState
             (
                 std::mem::take(&mut st.outbox),
                 std::mem::take(&mut st.submitted),
+                std::mem::take(&mut st.cancels),
                 std::mem::take(&mut st.ready),
             )
         };
         for (id, p) in new_inflight {
             inflight.insert(id, p);
+        }
+        // Client cancellations settle without a reply. The reader
+        // registers a Call before it can read the matching Cancel and
+        // both hand-offs ride the same lock, so the registration is
+        // always merged by the time its cancel is processed here. A
+        // not-yet-ready request cancels engine-side (queued rows
+        // purge, the slot abandons, its doorbell never rings); an
+        // already-ready one has rung, so consume the result and
+        // remember the id to drop the stale ring.
+        for id in cancels {
+            let Some(p) = inflight.remove(&id) else {
+                // Already replied (or never submitted): nothing to do.
+                continue;
+            };
+            let ready = match p {
+                InFlight::Call(mut p) => {
+                    let ready = p.poll().is_some();
+                    if !ready {
+                        p.cancel();
+                    }
+                    ready
+                }
+                InFlight::Batch(mut p) => {
+                    let ready = p.poll().is_some();
+                    if !ready {
+                        p.cancel();
+                    }
+                    ready
+                }
+            };
+            if ready {
+                stale_rings.insert(id);
+            }
+            conn.ctl.inflight_sub(1);
         }
         let mut write_err = false;
         // Reader-ordered frames first (a reply can never overtake the
@@ -688,6 +746,11 @@ fn reactor_loop(conn: Arc<ConnShared>, stream: WireStream, mut fault: FaultState
         // have landed, then the freshly rung ones.
         let tags: Vec<u64> = carry.drain(..).chain(rung).collect();
         for tag in tags {
+            if stale_rings.remove(&tag) {
+                // The result behind this ring was consumed by a
+                // cancel; the request is already settled.
+                continue;
+            }
             let Some(p) = inflight.remove(&tag) else {
                 // Rung before registered: the registration's notify
                 // re-wakes us right after it lands.
@@ -945,7 +1008,19 @@ fn serve_connection(
                 };
                 conn.push_frame(reply);
             }
-            Frame::Call { id, kernel, inputs } => {
+            Frame::Call {
+                id,
+                kernel,
+                inputs,
+                deadline_us,
+            } => {
+                if deadline_us.is_some() && version < 2 {
+                    // The deadline suffix is a v2 extension; a v1 peer
+                    // sending one is not frame-aligned the way it
+                    // thinks it is. Breach, not best-effort.
+                    conn.push_frame(deadline_requires_v2(id, version));
+                    return;
+                }
                 let Some(h) = handles.get(kernel as usize) else {
                     conn.push_frame(unknown_kernel(id, kernel));
                     continue;
@@ -954,7 +1029,8 @@ fn serve_connection(
                 // reader thread; the reply waits in the slab until the
                 // doorbell rings the reactor — no thread per call.
                 let waker: Arc<dyn Wake> = Arc::clone(conn);
-                match h.submit_tagged(&inputs, (waker, id)) {
+                let deadline = deadline_us.map(Duration::from_micros);
+                match h.submit_tagged(&inputs, deadline, (waker, id)) {
                     Ok(pending) => conn.register(id, InFlight::Call(pending)),
                     Err(e) => conn.push_frame(Frame::Error {
                         id,
@@ -962,7 +1038,16 @@ fn serve_connection(
                     }),
                 }
             }
-            Frame::CallBatch { id, kernel, batch } => {
+            Frame::CallBatch {
+                id,
+                kernel,
+                batch,
+                deadline_us,
+            } => {
+                if deadline_us.is_some() && version < 2 {
+                    conn.push_frame(deadline_requires_v2(id, version));
+                    return;
+                }
                 let Some(h) = handles.get(kernel as usize) else {
                     conn.push_frame(unknown_kernel(id, kernel));
                     continue;
@@ -970,13 +1055,22 @@ fn serve_connection(
                 // The whole batch is one slab reservation; its
                 // doorbell rings when the last row lands.
                 let waker: Arc<dyn Wake> = Arc::clone(conn);
-                match h.submit_batch_tagged(&batch, (waker, id)) {
+                let deadline = deadline_us.map(Duration::from_micros);
+                match h.submit_batch_tagged(&batch, deadline, (waker, id)) {
                     Ok(pending) => conn.register(id, InFlight::Batch(pending)),
                     Err(e) => conn.push_frame(Frame::Error {
                         id,
                         err: WireError::Service(e),
                     }),
                 }
+            }
+            Frame::Cancel { id } if version >= 2 => {
+                // Fire-and-forget: no reply frame is ever written for
+                // a Cancel, whether or not the id was still in flight.
+                // The reactor owns the in-flight map, so the actual
+                // settlement (queued-row purge, slab-slot release)
+                // happens there.
+                conn.push_cancel(id);
             }
             Frame::GetMetrics { id } => {
                 let json = service.metrics().to_json().to_string_compact();
@@ -1007,7 +1101,7 @@ fn serve_connection(
                 });
                 return;
             }
-            other @ (Frame::Health { .. } | Frame::Drain { .. }) => {
+            other @ (Frame::Health { .. } | Frame::Drain { .. } | Frame::Cancel { .. }) => {
                 // v2 opcodes on a v1-negotiated connection: breach.
                 conn.push_frame(malformed(
                     other.request_id(),
@@ -1040,6 +1134,13 @@ pub(crate) fn malformed(id: u64, msg: &impl ToString) -> Frame {
     }
 }
 
+pub(crate) fn deadline_requires_v2(id: u64, version: u16) -> Frame {
+    malformed(
+        id,
+        &format!("deadline_us requires protocol v2 (negotiated v{version})"),
+    )
+}
+
 pub(crate) fn unknown_kernel(id: u64, kernel: u32) -> Frame {
     Frame::Error {
         id,
@@ -1062,5 +1163,6 @@ pub(crate) fn frame_name(f: &Frame) -> &'static str {
         Frame::Health { .. } => "Health",
         Frame::HealthOk { .. } => "HealthOk",
         Frame::Drain { .. } => "Drain",
+        Frame::Cancel { .. } => "Cancel",
     }
 }

@@ -1,0 +1,401 @@
+//! Deadline & cancellation acceptance suite (DESIGN.md §14): the
+//! end-to-end budget thread from client to queue. Pins the PR's
+//! acceptance surface:
+//!
+//! - **Overload with mixed deadlines**: under a 16384-row overload
+//!   where half the traffic carries a short budget, every expired row
+//!   is evicted *unexecuted* — proven with the backend-side execute
+//!   counters (`per_kernel` rows + `batches`), not just the reply
+//!   type — and the extended settlement invariant
+//!   `admitted == completed + failed + cancelled` holds.
+//! - **Admission shedding**: once a service-rate sample exists, a
+//!   budget the backlog has already made hopeless is refused at the
+//!   door (typed `DeadlineExceeded`, `shed_at_admission`), never
+//!   queued.
+//! - **Wire cancellation**: a cancelled remote call frees the server's
+//!   slab slot (polled via `OverlayService::live_slots`), and a
+//!   drop-storm of abandoned `RemotePending`s leaves zero residual
+//!   occupancy — the regression test for the old drop-without-collect
+//!   slot leak on the wire path.
+//! - **v1 gating**: `deadline_us` suffixes and `Cancel` frames on a
+//!   v1-negotiated connection are protocol breaches (typed error,
+//!   hangup), never silently misread.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tmfu_overlay::client::OverlayClient;
+use tmfu_overlay::dfg::eval;
+use tmfu_overlay::exec::{BackendKind, FlatBatch};
+use tmfu_overlay::service::{MetricsSnapshot, OverlayService, ServiceError};
+use tmfu_overlay::wire::server::WireServer;
+use tmfu_overlay::wire::{read_frame, write_frame, Frame, ListenAddr, WireError};
+
+/// The extended settlement invariant every layer must keep.
+fn assert_ledger(snap: &MetricsSnapshot, ctx: &str) {
+    assert_eq!(
+        snap.admitted(),
+        snap.completed + snap.failed + snap.cancelled,
+        "{ctx}: ledger out of balance: admitted={} completed={} failed={} cancelled={}",
+        snap.admitted(),
+        snap.completed,
+        snap.failed,
+        snap.cancelled
+    );
+}
+
+/// Rows the backends actually executed, from the per-kernel counters
+/// (`record_batch` only ever counts rows a worker ran).
+fn executed_rows(snap: &MetricsSnapshot) -> u64 {
+    snap.per_kernel.iter().map(|(_, n)| n).sum()
+}
+
+fn service_with(backend: BackendKind, queue_depth: usize) -> OverlayService {
+    // One pipeline with a tiny worker row budget: the queue drains
+    // through thousands of dispatch rounds, so a backlog persists long
+    // enough for short budgets to lapse deterministically (the same
+    // idiom as the fairness suite's contention window).
+    OverlayService::builder()
+        .backend(backend)
+        .pipelines(1)
+        .max_batch(4)
+        .queue_depth(queue_depth)
+        .build()
+        .unwrap()
+}
+
+fn slow_service(queue_depth: usize) -> OverlayService {
+    service_with(BackendKind::Turbo, queue_depth)
+}
+
+/// The tentpole acceptance test: 16384 rows of overload on one
+/// pipeline, the second half carrying a 100 µs budget that the first
+/// half's backlog has already doomed. Every unbudgeted row completes
+/// oracle-exact; every budgeted row is shed or expires; the backend
+/// execute counters prove the expired rows never ran.
+#[test]
+fn overloaded_short_deadline_rows_never_reach_a_backend() {
+    let service = slow_service(32768);
+    let h = service.kernel("gradient").unwrap();
+    let dfg = &service.registry().get("gradient").unwrap().dfg;
+
+    const BATCHES: usize = 32;
+    const ROWS: usize = 256;
+    let mk_batch = |salt: i32| {
+        let mut b = FlatBatch::new(5);
+        for i in 0..ROWS as i32 {
+            b.push(&[3, 5 - salt, 2, 7, i + salt]);
+        }
+        b
+    };
+
+    // Phase 1: 8192 unbudgeted rows — the backlog.
+    let mut slow = Vec::new();
+    for k in 0..BATCHES {
+        let b = mk_batch(k as i32);
+        slow.push((h.submit_batch(&b).unwrap(), b));
+    }
+    // Phase 2: 8192 rows with a 100 µs budget, queued strictly behind
+    // phase 1 (same tenant lane + kernel ⇒ FIFO). The backlog needs
+    // thousands of dispatch rounds; the budget cannot survive it.
+    let budget = Duration::from_micros(100);
+    let mut doomed = Vec::new();
+    let mut shed_rows = 0u64;
+    for k in 0..BATCHES {
+        let b = mk_batch(-(k as i32));
+        match h.submit_batch_with_deadline(&b, budget) {
+            Ok(p) => doomed.push(p),
+            // Shed at admission: typed, and never admitted. (Needs a
+            // service-rate sample, so early submits may still queue.)
+            Err(ServiceError::DeadlineExceeded { .. }) => shed_rows += ROWS as u64,
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+
+    // Every unbudgeted batch completes, oracle-exact.
+    for (p, inputs) in slow {
+        let out = p.wait().unwrap();
+        assert_eq!(out.n_rows(), ROWS);
+        for (i, row) in inputs.iter().enumerate() {
+            assert_eq!(out.row(i), &eval(dfg, row)[..], "row {i}");
+        }
+    }
+    // Every budgeted batch that was admitted expires typed.
+    let mut expired_rows = 0u64;
+    for mut p in doomed {
+        match p.wait_timeout(Duration::from_secs(60)) {
+            Err(ServiceError::DeadlineExceeded { .. }) => expired_rows += ROWS as u64,
+            Ok(_) => panic!("a 100us-budget batch outlived an 8192-row backlog"),
+            Err(other) => panic!("unexpected wait error: {other}"),
+        }
+    }
+    assert_eq!(shed_rows + expired_rows, (BATCHES * ROWS) as u64);
+
+    let snap = service.metrics();
+    assert_ledger(&snap, "overload");
+    assert_eq!(snap.completed, (BATCHES * ROWS) as u64);
+    assert_eq!(snap.failed, expired_rows);
+    assert_eq!(snap.expired_in_queue, expired_rows);
+    assert_eq!(snap.shed_at_admission, shed_rows);
+    assert_eq!(snap.cancelled, 0);
+    // The backend-side proof: exactly the unbudgeted rows executed.
+    // Expired and shed rows never produced an execute.
+    assert_eq!(executed_rows(&snap), (BATCHES * ROWS) as u64);
+    service.shutdown().unwrap();
+}
+
+/// Once a service-rate sample exists, an obviously hopeless budget is
+/// refused at admission — typed, counted as `shed_at_admission`, and
+/// the request is never queued (the queue depth never moves).
+#[test]
+fn infeasible_budget_is_shed_at_admission() {
+    let service = slow_service(65536);
+    let h = service.kernel("gradient").unwrap();
+
+    // Prime the per-kernel service-rate EWMA (feasibility is
+    // deliberately open until the first sample lands).
+    assert_eq!(h.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    // An 8192-row backlog on one pipeline: thousands of rounds deep.
+    let mut backlog = FlatBatch::new(5);
+    for i in 0..8192i32 {
+        backlog.push(&[3, 5, 2, 7, i]);
+    }
+    let big = h.submit_batch(&backlog).unwrap();
+
+    // 1 µs against that backlog is hopeless under any rate estimate.
+    let err = h
+        .submit_with_deadline(&[3, 5, 2, 7, 1], Duration::from_micros(1))
+        .unwrap_err();
+    assert!(
+        matches!(err, ServiceError::DeadlineExceeded { ref kernel } if kernel == "gradient"),
+        "expected a typed shed, got {err}"
+    );
+
+    big.wait().unwrap();
+    let snap = service.metrics();
+    assert_ledger(&snap, "shed");
+    assert!(snap.shed_at_admission >= 1, "shed never counted");
+    // Shed requests are never admitted: the ledger only holds the
+    // warmup call and the backlog rows.
+    assert_eq!(snap.admitted(), 1 + 8192);
+    assert_eq!(snap.expired_in_queue, 0);
+    service.shutdown().unwrap();
+}
+
+fn start_wire(queue_depth: usize) -> (Arc<OverlayService>, WireServer) {
+    // The cycle-accurate sim is the slowest backend: its backlogs
+    // outlive a client→server cancel round-trip by orders of
+    // magnitude, which keeps the occupancy assertions race-free.
+    let service = Arc::new(service_with(BackendKind::Sim, queue_depth));
+    let server =
+        WireServer::bind(Arc::clone(&service), &ListenAddr::parse("127.0.0.1:0")).unwrap();
+    (service, server)
+}
+
+/// Poll a slab/inflight gauge until it reaches `want` (cancellation is
+/// asynchronous on the wire: the frame travels, the reactor settles).
+fn await_gauge(what: &str, want: usize, read: impl Fn() -> usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let got = read();
+        if got == want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{what} stuck at {got}, wanted {want}"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// An explicitly cancelled remote call releases the server's slab slot
+/// and purges its queued row — observed from the server side, not
+/// inferred from the client.
+#[test]
+fn remote_cancel_frees_the_server_slab_slot() {
+    let (service, server) = start_wire(32768);
+    let client = OverlayClient::connect(&server.addr().to_string()).unwrap();
+    let gradient = client.kernel("gradient").unwrap();
+
+    // Pin the single worker down with a 16384-row batch (slot 1): at
+    // 4 rows per dispatch round that is 4096 lock round-trips of
+    // cycle-accurate simulation — far longer than the cancel exchange.
+    let mut backlog = FlatBatch::new(5);
+    for i in 0..16384i32 {
+        backlog.push(&[3, 5, 2, 7, i]);
+    }
+    let big = gradient.submit_batch(&backlog).unwrap();
+
+    // Eight queued singles behind it: occupancy climbs to 9.
+    let mut victims = Vec::new();
+    for i in 0..8i32 {
+        victims.push(gradient.submit(&[0, 0, 0, 0, i]).unwrap());
+    }
+    await_gauge("live_slots", 9, || service.live_slots());
+
+    // Cancel them all; the server must return to the big batch alone.
+    for p in &mut victims {
+        p.cancel();
+    }
+    await_gauge("live_slots after cancel", 1, || service.live_slots());
+
+    let out = big.wait().unwrap();
+    assert_eq!(out.n_rows(), 16384);
+    await_gauge("inflight", 0, || server.ctl().inflight());
+    let snap = service.metrics();
+    assert_ledger(&snap, "remote cancel");
+    // The worker never got near the queued singles (it was thousands
+    // of rounds deep in the backlog), so all eight count as cancelled.
+    assert_eq!(snap.cancelled, 8);
+    assert_eq!(executed_rows(&snap), 16384);
+
+    drop(victims);
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+/// Regression: dropping a `RemotePending` without collecting it used
+/// to strand the server-side slot until the connection died. Now the
+/// drop sends `Cancel`; a storm of 64 drops leaves zero residual slab
+/// occupancy while the connection stays alive and usable.
+#[test]
+fn drop_storm_leaves_no_residual_occupancy() {
+    let (service, server) = start_wire(16384);
+    let client = OverlayClient::connect(&server.addr().to_string()).unwrap();
+    let gradient = client.kernel("gradient").unwrap();
+
+    let mut backlog = FlatBatch::new(5);
+    for i in 0..2048i32 {
+        backlog.push(&[3, 5, 2, 7, i]);
+    }
+    let big = gradient.submit_batch(&backlog).unwrap();
+
+    for i in 0..64i32 {
+        let p = gradient.submit(&[1, 1, 1, 1, i]).unwrap();
+        drop(p); // fire-and-forget abandon: must not leak the slot
+    }
+    await_gauge("live_slots after drop storm", 1, || service.live_slots());
+
+    // The connection survived the storm and still serves.
+    assert_eq!(big.wait().unwrap().n_rows(), 2048);
+    assert_eq!(gradient.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+    await_gauge("live_slots drained", 0, || service.live_slots());
+    assert_ledger(&service.metrics(), "drop storm");
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+/// The client's deadline budget rides the Call frame: behind a
+/// backlog it expires (or sheds) server-side, arrives as the typed
+/// error, and `call_with_deadline`'s cancel-on-timeout reclaims the
+/// slot — the deadline miss leaves nothing behind on the server.
+#[test]
+fn deadline_budget_rides_the_wire_and_misses_clean() {
+    let (service, server) = start_wire(16384);
+    let client = OverlayClient::connect(&server.addr().to_string()).unwrap();
+    let gradient = client.kernel("gradient").unwrap();
+
+    let mut backlog = FlatBatch::new(5);
+    for i in 0..8192i32 {
+        backlog.push(&[3, 5, 2, 7, i]);
+    }
+    let big = gradient.submit_batch(&backlog).unwrap();
+    await_gauge("live_slots", 1, || service.live_slots());
+
+    let err = gradient
+        .call_with_deadline(&[3, 5, 2, 7, 1], Duration::from_millis(2))
+        .unwrap_err();
+    assert!(
+        matches!(err, ServiceError::DeadlineExceeded { ref kernel } if kernel == "gradient"),
+        "expected DeadlineExceeded over the wire, got {err}"
+    );
+    // Whichever path lost the race (queue expiry, admission shed, or
+    // local timeout + Cancel), the slot must be reclaimed.
+    await_gauge("live_slots after miss", 1, || service.live_slots());
+
+    assert_eq!(big.wait().unwrap().n_rows(), 8192);
+    let snap = service.metrics();
+    assert_ledger(&snap, "wire deadline");
+    assert!(
+        snap.expired_in_queue + snap.shed_at_admission + snap.cancelled >= 1,
+        "the missed deadline must be visible in a cause counter"
+    );
+    // An unbudgeted call on the same session still works afterwards.
+    assert_eq!(gradient.call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}
+
+/// v1 gating, straight off a raw socket: a `deadline_us` suffix or a
+/// `Cancel` frame on a v1-negotiated connection is a typed protocol
+/// breach followed by hangup — never silently misread.
+#[test]
+fn v1_connections_refuse_deadlines_and_cancel() {
+    let (service, server) = start_wire(64);
+    let ListenAddr::Tcp(addr) = server.addr().clone() else {
+        panic!("expected tcp")
+    };
+    let gradient_id = service.kernel("gradient").unwrap().id().0;
+
+    // Case 1: Call + deadline_us on v1.
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 1, token: None }).unwrap();
+        assert!(matches!(
+            read_frame(&mut s).unwrap().unwrap(),
+            Frame::HelloOk { version: 1, .. }
+        ));
+        write_frame(
+            &mut s,
+            &Frame::Call {
+                id: 1,
+                kernel: gradient_id,
+                inputs: vec![3, 5, 2, 7, 1],
+                deadline_us: Some(5_000),
+            },
+        )
+        .unwrap();
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::Error { id, err: WireError::Malformed { message } } => {
+                assert_eq!(id, 1);
+                assert!(message.contains("deadline_us requires protocol v2"), "{message}");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        // Breach ⇒ hangup.
+        assert!(matches!(read_frame(&mut s), Ok(None) | Err(_)));
+    }
+
+    // Case 2: Cancel on v1.
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &Frame::Hello { id: 0, min: 1, max: 1, token: None }).unwrap();
+        assert!(matches!(
+            read_frame(&mut s).unwrap().unwrap(),
+            Frame::HelloOk { version: 1, .. }
+        ));
+        write_frame(&mut s, &Frame::Cancel { id: 7 }).unwrap();
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::Error { id, err: WireError::Malformed { message } } => {
+                assert_eq!(id, 7);
+                assert!(message.contains("Cancel requires protocol v2"), "{message}");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        assert!(matches!(read_frame(&mut s), Ok(None) | Err(_)));
+    }
+
+    // The server survives both breaches and still serves v2 clients.
+    let client = OverlayClient::connect(&server.addr().to_string()).unwrap();
+    assert_eq!(client.kernel("gradient").unwrap().call(&[3, 5, 2, 7, 1]).unwrap(), vec![36]);
+
+    drop(client);
+    server.shutdown();
+    service.shutdown().unwrap();
+}

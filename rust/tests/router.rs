@@ -49,6 +49,16 @@ fn start_router(backends: Vec<String>) -> Router {
     Router::start(quick_cfg(backends), &ListenAddr::parse("127.0.0.1:0")).unwrap()
 }
 
+/// Like [`start_router`] but with a `call_deadline` far beyond the
+/// test guard: the cycle-accurate sim backends used by the deadline
+/// and cancel tests legitimately hold calls for tens of seconds, and
+/// the router's own per-call bound must not race the assertions.
+fn start_patient_router(backends: Vec<String>) -> Router {
+    let mut cfg = quick_cfg(backends);
+    cfg.call_deadline = Duration::from_secs(300);
+    Router::start(cfg, &ListenAddr::parse("127.0.0.1:0")).unwrap()
+}
+
 /// The chaos gate. Two replicas; one is scripted to drop every
 /// connection after 40 frames — the in-process stand-in for `kill -9`
 /// mid-burst (`TMFU_FAULT_DROP_AFTER` scripts the same from the CLI,
@@ -103,6 +113,194 @@ fn chaos_one_replica_dies_mid_burst_and_every_call_still_settles() {
     server_b.shutdown();
     service_a.shutdown().unwrap();
     service_b.shutdown().unwrap();
+}
+
+/// The PR 10 chaos gate: a cancel storm *and* a replica death in the
+/// same burst. Two slow (cycle-accurate sim) replicas are each pinned
+/// by a 6144-row batch; 120 singles queue behind them and half are
+/// withdrawn with `Cancel` while replica A is scripted to drop every
+/// connection after 60 frames. Every surviving call must settle
+/// bit-exact, and the ledger must balance **with the cancelled term**
+/// at every level: router (`admitted == completed + failed +
+/// cancelled`) and both backend services.
+#[test]
+fn chaos_cancel_storm_with_replica_death_keeps_every_ledger_balanced() {
+    // Sim + a tiny worker row budget: the backlog outlives the whole
+    // cancel exchange, so a cancelled single is still queued when the
+    // withdrawal lands (deterministically `cancelled`, not raced).
+    let sim_backend = || {
+        let service = Arc::new(
+            OverlayService::builder()
+                .backend(BackendKind::Sim)
+                .pipelines(1)
+                .max_batch(4)
+                // Deep enough for the survivor to absorb the dead
+                // replica's retried pin batch on top of its own.
+                .queue_depth(16384)
+                .build()
+                .unwrap(),
+        );
+        let server = WireServer::bind(Arc::clone(&service), &ListenAddr::parse("127.0.0.1:0"))
+            .unwrap();
+        (service, server)
+    };
+    let (service_a, server_a) = sim_backend();
+    let (service_b, server_b) = sim_backend();
+    server_a.ctl().set_fault_plan(FaultPlan {
+        drop_after_frames: Some(60),
+        ..FaultPlan::default()
+    });
+    let router =
+        start_patient_router(vec![server_a.addr().to_string(), server_b.addr().to_string()]);
+    let client = OverlayClient::connect(&router.addr().to_string()).unwrap();
+    let gradient = client.kernel("gradient").unwrap();
+    let dfg = service_b.registry().get("gradient").unwrap().dfg.clone();
+
+    // Pin both replicas (round-robin spreads the two batches).
+    let mut pins = Vec::new();
+    for salt in 0..2i32 {
+        let mut batch = FlatBatch::new(5);
+        for i in 0..6144i32 {
+            batch.push(&[3, 5 - salt, 2, 7, i]);
+        }
+        pins.push((gradient.submit_batch(&batch).unwrap(), batch));
+    }
+
+    // The burst: 120 singles, every other one withdrawn immediately.
+    const N: usize = 120;
+    let mut keep = Vec::new();
+    let mut victims = Vec::new();
+    for i in 0..N as i32 {
+        let inputs = vec![i, 5 - i, 2, 7, -i];
+        let p = gradient.submit(&inputs).unwrap();
+        if i % 2 == 0 {
+            keep.push((p, eval(&dfg, &inputs)));
+        } else {
+            victims.push(p);
+        }
+    }
+    // Let the forward reactor relay the burst downstream before the
+    // storm: a victim cancelled *after* dispatch exercises the full
+    // wire path (router entry drop -> downstream Cancel -> backend
+    // queue removal), not just the cheap pre-dispatch drop.
+    std::thread::sleep(Duration::from_millis(100));
+    for p in &mut victims {
+        p.cancel();
+    }
+
+    // Every kept call settles bit-exact despite the replica death.
+    let guard = Instant::now() + Duration::from_secs(180);
+    for (i, (mut p, want)) in keep.into_iter().enumerate() {
+        let left = guard.saturating_duration_since(Instant::now());
+        let got = p.wait_timeout(left).unwrap_or_else(|e| panic!("kept call {i}: {e}"));
+        assert_eq!(got, want, "kept call {i} must be bit-exact");
+    }
+    for (i, (p, batch)) in pins.into_iter().enumerate() {
+        let out = p.wait().unwrap_or_else(|e| panic!("pin batch {i}: {e}"));
+        assert_eq!(out.n_rows(), batch.n_rows());
+        for (r, row) in batch.iter().enumerate() {
+            assert_eq!(out.row(r), &eval(&dfg, row)[..], "pin {i} row {r}");
+        }
+    }
+
+    // Router ledger: the cancelled term balances it exactly.
+    let m = router.metrics();
+    assert_eq!(m.admitted(), (N + 2) as u64);
+    assert_eq!(m.cancelled(), (N / 2) as u64);
+    assert_eq!(m.completed(), (N / 2 + 2) as u64);
+    assert_eq!(m.failed(), 0);
+    assert_eq!(m.admitted(), m.completed() + m.failed() + m.cancelled());
+    assert_eq!(router.ctl().inflight(), 0);
+
+    // Both backend ledgers balance with their own cancelled terms
+    // (the withdrawal propagated downstream as a wire Cancel). Spans
+    // abandoned by the faulted connection drain asynchronously — their
+    // slots recycle via drop-abandon while the worker still executes
+    // the rows — so poll until the books close instead of snapshotting.
+    for (name, service) in [("a", &service_a), ("b", &service_b)] {
+        let ledger_guard = Instant::now() + Duration::from_secs(90);
+        loop {
+            let snap = service.metrics();
+            if snap.admitted() == snap.completed + snap.failed + snap.cancelled {
+                break;
+            }
+            assert!(
+                Instant::now() < ledger_guard,
+                "backend {name} ledger never balanced: admitted={} completed={} failed={} \
+                 cancelled={}",
+                snap.admitted(),
+                snap.completed,
+                snap.failed,
+                snap.cancelled
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let down_cancelled: u64 =
+        [&service_a, &service_b].iter().map(|s| s.metrics().cancelled).sum();
+    assert!(
+        down_cancelled > 0,
+        "at least some withdrawals must reach a backend queue as wire Cancels"
+    );
+
+    drop(victims);
+    drop(client);
+    router.shutdown();
+    server_a.shutdown();
+    server_b.shutdown();
+    service_a.shutdown().unwrap();
+    service_b.shutdown().unwrap();
+}
+
+/// Deadline propagation through the router: a client budget rides the
+/// upstream Call frame, the router enforces `min(budget,
+/// call_deadline)`, and a miss comes back as the typed
+/// `DeadlineExceeded` — counted as `failed` in the router's ledger
+/// (it is not retryable, so no retry burns the dead budget).
+#[test]
+fn client_deadline_propagates_through_the_router_and_fails_typed() {
+    let service = Arc::new(
+        OverlayService::builder()
+            .backend(BackendKind::Sim)
+            .pipelines(1)
+            .max_batch(4)
+            .queue_depth(16384)
+            .build()
+            .unwrap(),
+    );
+    let server = WireServer::bind(Arc::clone(&service), &ListenAddr::parse("127.0.0.1:0"))
+        .unwrap();
+    let router = start_patient_router(vec![server.addr().to_string()]);
+    let client = OverlayClient::connect(&router.addr().to_string()).unwrap();
+    let gradient = client.kernel("gradient").unwrap();
+
+    // A backlog the 5 ms budget cannot survive.
+    let mut backlog = FlatBatch::new(5);
+    for i in 0..8192i32 {
+        backlog.push(&[3, 5, 2, 7, i]);
+    }
+    let pin = gradient.submit_batch(&backlog).unwrap();
+
+    let err = gradient
+        .call_with_deadline(&[3, 5, 2, 7, 1], Duration::from_millis(5))
+        .unwrap_err();
+    assert!(
+        matches!(err, ServiceError::DeadlineExceeded { .. }),
+        "expected DeadlineExceeded through the router, got {err}"
+    );
+
+    assert_eq!(pin.wait().unwrap().n_rows(), 8192);
+    let m = router.metrics();
+    assert_eq!(m.admitted(), m.completed() + m.failed() + m.cancelled());
+    assert!(
+        m.failed() + m.cancelled() >= 1,
+        "the missed deadline must settle in the router ledger"
+    );
+
+    drop(client);
+    router.shutdown();
+    server.shutdown();
+    service.shutdown().unwrap();
 }
 
 #[test]

@@ -301,6 +301,7 @@ fn mid_call_disconnect_leaves_the_server_healthy() {
                 id: 1,
                 kernel: gradient_id,
                 inputs: vec![3, 5, 2, 7, 1],
+                deadline_us: None,
             },
         )
         .unwrap();
@@ -433,6 +434,7 @@ fn byte_at_a_time_frames_are_served_intact() {
             id: 1,
             kernel: gradient_id,
             inputs: vec![3, 5, 2, 7, 1],
+            deadline_us: None,
         },
     )
     .unwrap();

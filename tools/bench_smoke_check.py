@@ -33,6 +33,18 @@ Hard gates (fail the build):
     exactly 0: fairness must come from scheduling, never from shedding
     the well-behaved tenant's load.
 
+  * ``shed_under_overload_p99_us`` (bench_perf section B9): the p99
+    latency of a *typed deadline refusal* under a 64k-row single-worker
+    overload must stay under half the same run's unbudgeted backlog
+    wait (``no_shed_overload_wait_us``), with a 1000us absolute floor
+    for fast-mode noise. Shedding exists so an overloaded caller hears
+    "no" in microseconds instead of queueing for the full backlog — if
+    the refusal costs anything like the wait it replaces, admission
+    feasibility or lazy expiry regressed to executing doomed work.
+    ``cancel_reclaim_us`` must also be recorded and stay under 1000us
+    per call: withdrawing a queued request is a synchronous slab-slot
+    release plus a queue purge, never a drain of the backlog.
+
 Soft gate:
   * ``wire_call_overhead_us`` is compared against the committed
     baseline JSON when that file carries a *measured* number (cargo
@@ -129,6 +141,34 @@ def main() -> None:
         )
     else:
         print(f"bench-smoke: fair-tenant p99 {fair_p99:.1f}us recorded (0 rejections)")
+
+    shed_p99 = meta.get("shed_under_overload_p99_us")
+    if shed_p99 is None:
+        fail("shed_under_overload_p99_us missing from the bench JSON (B9 did not run)")
+    no_shed = meta.get("no_shed_overload_wait_us")
+    if isinstance(no_shed, (int, float)) and no_shed > 0:
+        bound = max(0.5 * no_shed, 1000.0)
+        if shed_p99 > bound:
+            fail(
+                f"shed_under_overload_p99_us = {shed_p99:.1f}us vs no-shed backlog wait "
+                f"{no_shed:.1f}us (bound {bound:.1f}us) — deadline shedding regressed to "
+                "waiting out the overload"
+            )
+        print(
+            f"bench-smoke: overload shed p99 {shed_p99:.1f}us vs no-shed wait "
+            f"{no_shed:.1f}us (within bound {bound:.1f}us)"
+        )
+    else:
+        print(f"bench-smoke: overload shed p99 {shed_p99:.1f}us recorded")
+    reclaim = meta.get("cancel_reclaim_us")
+    if reclaim is None:
+        fail("cancel_reclaim_us missing from the bench JSON (B9 cancel audit did not run)")
+    if reclaim > 1000.0:
+        fail(
+            f"cancel_reclaim_us = {reclaim:.1f}us per call — slot reclaim must be a "
+            "synchronous release, not a backlog drain"
+        )
+    print(f"bench-smoke: cancel reclaim {reclaim:.2f}us per call (bound 1000us)")
 
     baseline_wire = None
     if len(sys.argv) > 2:

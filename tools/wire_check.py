@@ -37,6 +37,7 @@ OP_METRICS = 0x0A
 OP_HEALTH = 0x0B
 OP_HEALTH_OK = 0x0C
 OP_DRAIN = 0x0D
+OP_CANCEL = 0x0E
 
 HEALTH_SERVING = 0
 HEALTH_DRAINING = 1
@@ -137,12 +138,41 @@ def enc_kernel_info(rid, kernel, n_in, n_out):
     return head(OP_KERNEL_INFO, rid) + u32(kernel) + u16(n_in) + u16(n_out)
 
 
-def enc_call(rid, kernel, inputs):
-    return head(OP_CALL, rid) + u32(kernel) + u16(len(inputs)) + words(inputs)
+def enc_call(rid, kernel, inputs, deadline_us=None):
+    """deadline_us: optional relative budget (v2 trailing suffix) — a
+    deadline-free Call stays byte-identical to v1."""
+    body = head(OP_CALL, rid) + u32(kernel) + u16(len(inputs)) + words(inputs)
+    if deadline_us is not None:
+        body += u64(deadline_us)
+    return body
 
 
-def enc_call_batch(rid, kernel, arity, rows):
-    return head(OP_CALL_BATCH, rid) + u32(kernel) + batch(arity, rows)
+def dec_call(body):
+    """Mirror decoder for Call: returns (rid, kernel, inputs,
+    deadline_us) with deadline_us None when the optional suffix is
+    absent. A partial suffix (any cut strictly inside the 8 bytes) is
+    refused, exactly like the Rust codec's Malformed."""
+    assert body[0] == OP_CALL
+    (rid,) = struct.unpack_from("<Q", body, 1)
+    (kernel,) = struct.unpack_from("<I", body, 9)
+    (arity,) = struct.unpack_from("<H", body, 13)
+    end = 15 + 4 * arity
+    assert len(body) >= end, "truncated inputs"
+    inputs = [
+        struct.unpack_from("<i", body, 15 + 4 * i)[0] for i in range(arity)
+    ]
+    if len(body) == end:
+        return rid, kernel, inputs, None
+    assert len(body) == end + 8, "partial deadline suffix"
+    (deadline_us,) = struct.unpack_from("<Q", body, end)
+    return rid, kernel, inputs, deadline_us
+
+
+def enc_call_batch(rid, kernel, arity, rows, deadline_us=None):
+    body = head(OP_CALL_BATCH, rid) + u32(kernel) + batch(arity, rows)
+    if deadline_us is not None:
+        body += u64(deadline_us)
+    return body
 
 
 def enc_reply(rid, arity, rows):
@@ -206,6 +236,10 @@ def enc_drain(rid):
     return head(OP_DRAIN, rid)
 
 
+def enc_cancel(rid):
+    return head(OP_CANCEL, rid)
+
+
 # The golden table: (label, payload bytes). Must stay in sync with
 # wire::tests::golden_bytes_match_the_spec — same frames, same order.
 GOLDEN = [
@@ -215,7 +249,9 @@ GOLDEN = [
     ("resolve", enc_resolve(1, "gradient")),
     ("kernel_info", enc_kernel_info(1, 3, 5, 1)),
     ("call", enc_call(2, 3, [3, 5, 2, 7, -1])),
+    ("call_deadline", enc_call(20, 3, [3, 5, 2, 7, -1], 250_000)),
     ("call_batch", enc_call_batch(3, 0, 2, [[1, -2], [3, -4], [5, -6]])),
+    ("call_batch_deadline", enc_call_batch(21, 0, 2, [[1, -2], [3, -4]], 1_000_000)),
     ("reply", enc_reply(3, 1, [[36], [-7], [12]])),
     ("call_batch_zero_rows", enc_call_batch(7, 2, 5, [])),
     ("error_rejected", enc_error(4, "rejected", "poly6", "acme", 7, 8)),
@@ -226,6 +262,7 @@ GOLDEN = [
     ("health", enc_health(14)),
     ("health_ok", enc_health_ok(14, HEALTH_SERVING, 3)),
     ("drain", enc_drain(15)),
+    ("cancel", enc_cancel(22)),
     ("error_unavailable", enc_error(16, "unavailable", "fir")),
     (
         "error_invalid_kernel",
@@ -245,7 +282,15 @@ EXPECTED_HEX = {
     "resolve": "030100000000000000080000006772616469656e74",
     "kernel_info": "0401000000000000000300000005000100",
     "call": "05020000000000000003000000050003000000050000000200000007000000ffffffff",
+    "call_deadline": (
+        "05140000000000000003000000050003000000050000000200000007000000"
+        "ffffffff90d0030000000000"
+    ),
     "call_batch": "0603000000000000000000000002000300000001000000feffffff03000000fcffffff05000000faffffff",
+    "call_batch_deadline": (
+        "0615000000000000000000000002000200000001000000feffffff03000000"
+        "fcffffff40420f0000000000"
+    ),
     "reply": "07030000000000000001000300000024000000f9ffffff0c000000",
     "call_batch_zero_rows": "06070000000000000002000000050000000000",
     "error_rejected": (
@@ -261,6 +306,7 @@ EXPECTED_HEX = {
     "health": "0b0e00000000000000",
     "health_ok": "0c0e000000000000000003000000",
     "drain": "0d0f00000000000000",
+    "cancel": "0e1600000000000000",
     "error_unavailable": "081000000000000000090003000000666972",
     "error_invalid_kernel": (
         "0811000000000000000a0005000000706f6c79361d000000746170653a2064"
@@ -281,7 +327,7 @@ def decode_smoke(payload):
     assert opcode in (
         OP_HELLO, OP_HELLO_OK, OP_RESOLVE, OP_KERNEL_INFO, OP_CALL,
         OP_CALL_BATCH, OP_REPLY, OP_ERROR, OP_GET_METRICS, OP_METRICS,
-        OP_HEALTH, OP_HEALTH_OK, OP_DRAIN,
+        OP_HEALTH, OP_HEALTH_OK, OP_DRAIN, OP_CANCEL,
     ), f"unknown opcode {opcode:#x}"
     (rid,) = struct.unpack_from("<Q", payload, 1)
     return opcode, rid
@@ -321,6 +367,36 @@ def hello_round_trip_property(rounds=256):
             )
 
 
+def deadline_call_round_trip_property(rounds=256):
+    """Random deadline-carrying Calls survive an encode -> decode round
+    trip; cutting the frame back to its base length legally decodes as
+    the deadline-free Call (the suffix is optional), while every cut
+    strictly inside the 8-byte suffix is refused. Mirrors the Rust
+    property `prop_deadline_calls_round_trip_and_truncate_cleanly`."""
+    rng = random.Random(0x0E06)
+    for _ in range(rounds):
+        arity = rng.randrange(0, 9)
+        inputs = [rng.randrange(-(1 << 31), 1 << 31) for _ in range(arity)]
+        rid = rng.randrange(1 << 64)
+        kernel = rng.randrange(1 << 32)
+        deadline = rng.randrange(1 << 64)
+        body = enc_call(rid, kernel, inputs, deadline)
+        assert dec_call(body) == (rid, kernel, inputs, deadline)
+        base = len(body) - 8
+        assert dec_call(body[:base]) == (rid, kernel, inputs, None), (
+            "base-length cut must decode deadline-free"
+        )
+        cut = rng.randrange(base + 1, len(body))
+        try:
+            dec_call(body[:cut])
+        except (AssertionError, struct.error):
+            pass
+        else:
+            raise SystemExit(
+                f"partial deadline suffix accepted at cut {cut} of {len(body)}"
+            )
+
+
 def main():
     if "--emit" in sys.argv[1:]:
         for label, payload in GOLDEN:
@@ -342,9 +418,10 @@ def main():
         print(f"wire mirror: {failures} golden vector(s) diverged")
         return 1
     hello_round_trip_property()
+    deadline_call_round_trip_property()
     print(
         f"wire mirror: all {len(GOLDEN)} golden vectors match the spec "
-        "(+ tenant-hello round-trip property)"
+        "(+ tenant-hello and deadline-call round-trip properties)"
     )
     return 0
 
